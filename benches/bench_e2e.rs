@@ -1,0 +1,64 @@
+//! End-to-end engine benches: whole frame-append and decode steps per
+//! policy on the runnable model — the serving-loop numbers behind Fig 8
+//! and the §Perf log in EXPERIMENTS.md.
+
+use std::path::Path;
+
+use neuron_chunking::benchlib::{black_box, header, Bencher};
+use neuron_chunking::coordinator::{Engine, EngineConfig, Policy};
+use neuron_chunking::sparsify::ChunkSelectConfig;
+use neuron_chunking::storage::DeviceProfile;
+use neuron_chunking::workload::FrameTrace;
+
+fn main() {
+    header("e2e engine (frame append / decode per policy, tiny model)");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let sat_kb = DeviceProfile::nano().saturation_bytes(0.99) as f64 / 1024.0;
+    let mut b = Bencher::new(std::time::Duration::from_millis(600), 8);
+
+    for (label, policy, sparsity) in [
+        ("dense", Policy::Dense, 0.0),
+        ("topk s=0.5", Policy::TopK, 0.5),
+        (
+            "chunking s=0.5",
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, sat_kb),
+            },
+            0.5,
+        ),
+    ] {
+        let mut engine =
+            Engine::new(EngineConfig::new("tiny", policy, sparsity), &dir).unwrap();
+        engine.warmup().unwrap();
+        let spec = engine.spec().clone();
+        let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
+        let frame = trace.frame(0);
+        engine.append_frame(0, &frame).unwrap(); // warm
+        b.bench(&format!("append_frame tiny [{label}]"), || {
+            black_box(engine.append_frame(0, &frame).unwrap());
+        });
+        let token = vec![0.1f32; spec.d];
+        b.bench(&format!("decode_step  tiny [{label}]"), || {
+            black_box(engine.decode_step(0, &token).unwrap());
+        });
+    }
+
+    // Experiment-harness point cost (what figure sweeps pay per point).
+    use neuron_chunking::experiments::{IoPolicy, PaperRig, RigConfig};
+    use neuron_chunking::model::ModelSpec;
+    use neuron_chunking::workload::DatasetSpec;
+    let rig = PaperRig::new(
+        ModelSpec::llava_7b(),
+        DeviceProfile::nano(),
+        RigConfig {
+            calib_samples: 8,
+            tokens_per_frame: 0,
+            seed: 1,
+        },
+    )
+    .unwrap();
+    let ds = DatasetSpec::tempcompass();
+    b.bench("paper-rig run_point llava-7b (3 frames)", || {
+        black_box(rig.run_point(&IoPolicy::Chunking, 0.4, &ds, 3).unwrap());
+    });
+}

@@ -1,0 +1,58 @@
+//! Latency-model benches: the per-selection costs inside the 2 ms budget
+//! (contiguity extraction, table lookups, estimates) and profiling sweeps.
+
+use neuron_chunking::benchlib::{black_box, header, Bencher};
+use neuron_chunking::latency::{chunks_from_mask, ContiguityDistribution};
+use neuron_chunking::rng::Rng;
+use neuron_chunking::storage::{DeviceProfile, ProfileConfig, Profiler, SimulatedSsd};
+
+fn main() {
+    header("latency model (T[s] lookups + contiguity machinery)");
+    let mut b = Bencher::default();
+    let profile = DeviceProfile::agx();
+    let dev = SimulatedSsd::timing_only(profile.clone(), 1 << 40, 1);
+    let table = Profiler::new(
+        &dev,
+        ProfileConfig::coarse(profile.saturation_bytes(0.99), 7168),
+    )
+    .build_table()
+    .unwrap();
+
+    let mut rng = Rng::new(7);
+    let mask: Vec<bool> = (0..18944).map(|_| rng.bool(0.55)).collect();
+    b.bench("chunks_from_mask: 18944 rows", || {
+        black_box(chunks_from_mask(&mask));
+    });
+
+    let chunks = chunks_from_mask(&mask);
+    b.bench(
+        &format!("estimate_chunks: {} chunks", chunks.len()),
+        || {
+            black_box(table.estimate_chunks(&chunks));
+        },
+    );
+
+    b.bench("estimate_mask: 18944 rows end-to-end", || {
+        black_box(table.estimate_mask(&mask));
+    });
+
+    let dist = ContiguityDistribution::from_mask(&mask);
+    b.bench("distribution stats (mean/mode/cdf)", || {
+        black_box((dist.mean_chunk(), dist.mode_chunk(), dist.row_cdf()));
+    });
+
+    b.bench("latency_rows single lookup", || {
+        black_box(table.latency_rows(black_box(37)));
+    });
+
+    // Full Appendix-D profile sweep (coarse) — the offline cost.
+    b.bench("profiler: full coarse sweep (nano)", || {
+        let p = DeviceProfile::nano();
+        let d = SimulatedSsd::timing_only(p.clone(), 1 << 40, 3);
+        black_box(
+            Profiler::new(&d, ProfileConfig::coarse(p.saturation_bytes(0.99), 1024))
+                .build_table()
+                .unwrap(),
+        );
+    });
+}

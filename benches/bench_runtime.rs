@@ -1,0 +1,99 @@
+//! XLA runtime benches: per-artifact execution cost (the compute column
+//! of Fig 8) across budget buckets, plus compile-time accounting.
+
+use std::path::Path;
+
+use neuron_chunking::benchlib::{black_box, header, Bencher};
+use neuron_chunking::rng::Rng;
+use neuron_chunking::runtime::{Tensor, XlaRuntime};
+
+fn main() {
+    header("runtime (AOT XLA execution per stage/bucket)");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = XlaRuntime::open(&dir).expect("run `make artifacts` first");
+    let m = rt.manifest.model("small").unwrap().clone();
+    let mut rng = Rng::new(1);
+    let mut randt = |dims: Vec<usize>| {
+        let n = dims.iter().product();
+        Tensor::new(dims, (0..n).map(|_| rng.normal() as f32 * 0.2).collect())
+    };
+
+    let mut b = Bencher::default();
+
+    // Compile cost (first-touch) for one artifact.
+    let t0 = std::time::Instant::now();
+    let name = format!("projres_small_r{}", m.d_buckets[0]);
+    let a = randt(vec![m.t, m.d_buckets[0]]);
+    let w = randt(vec![m.d_buckets[0], m.d]);
+    let res = randt(vec![m.t, m.d]);
+    rt.execute(&name, &[a.clone(), w.clone(), res.clone()]).unwrap();
+    println!("first-touch compile+run of {name}: {:?}", t0.elapsed());
+
+    for &r in &[m.d_buckets[0], *m.d_buckets.last().unwrap()] {
+        let name = format!("projres_small_r{r}");
+        let a = randt(vec![m.t, r]);
+        let w = randt(vec![r, m.d]);
+        let res = randt(vec![m.t, m.d]);
+        b.bench(&format!("projres small r={r}"), || {
+            black_box(rt.execute(&name, &[a.clone(), w.clone(), res.clone()]).unwrap());
+        });
+    }
+
+    for &r in &[m.d_buckets[0], *m.d_buckets.last().unwrap()] {
+        let name = format!("gateup_small_r{r}");
+        let xs = randt(vec![m.t, r]);
+        let wg = randt(vec![r, m.h]);
+        let wu = randt(vec![r, m.h]);
+        b.bench(&format!("gateup  small r={r}"), || {
+            black_box(rt.execute(&name, &[xs.clone(), wg.clone(), wu.clone()]).unwrap());
+        });
+    }
+
+    let r = m.d_buckets[1];
+    let name = format!("qkv_append_small_r{r}");
+    let xs = randt(vec![m.t, r]);
+    let wq = randt(vec![r, m.d]);
+    let wk = randt(vec![r, m.d]);
+    let wv = randt(vec![r, m.d]);
+    let kc = Tensor::zeros(vec![m.c, m.d]);
+    let vc = Tensor::zeros(vec![m.c, m.d]);
+    let mask = Tensor::zeros(vec![m.c]);
+    b.bench(&format!("qkv_append small r={r} (attn incl.)"), || {
+        black_box(
+            rt.execute(
+                &name,
+                &[
+                    xs.clone(),
+                    wq.clone(),
+                    wk.clone(),
+                    wv.clone(),
+                    kc.clone(),
+                    vc.clone(),
+                    mask.clone(),
+                ],
+            )
+            .unwrap(),
+        );
+    });
+
+    let name = format!("qkv_decode_small_r{r}");
+    let xs1 = randt(vec![1, r]);
+    b.bench(&format!("qkv_decode small r={r}"), || {
+        black_box(
+            rt.execute(
+                &name,
+                &[
+                    xs1.clone(),
+                    wq.clone(),
+                    wk.clone(),
+                    wv.clone(),
+                    kc.clone(),
+                    vc.clone(),
+                    mask.clone(),
+                ],
+            )
+            .unwrap(),
+        );
+    });
+    println!("\ncached executables: {}", rt.cached());
+}

@@ -1,0 +1,58 @@
+//! Selection-algorithm benches: Algorithm 1 vs baselines across the
+//! paper's matrix shapes (Appendix H Table 2), enforcing the 2 ms
+//! per-matrix runtime gate (Fig 13). Run via `cargo bench`.
+
+use neuron_chunking::benchlib::{black_box, header, Bencher};
+use neuron_chunking::rng::Rng;
+use neuron_chunking::sparsify::{
+    tuning, Bundling, ChunkSelect, ChunkSelectConfig, Selector, TopK,
+};
+use neuron_chunking::storage::{DeviceProfile, ProfileConfig, Profiler, SimulatedSsd};
+
+fn main() {
+    header("selection (Algorithm 1 vs baselines, paper shapes)");
+    let profile = DeviceProfile::nano();
+    let sat = profile.saturation_bytes(0.99);
+    let probe = SimulatedSsd::timing_only(profile.clone(), 1 << 40, 1);
+    let table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024))
+        .build_table()
+        .unwrap();
+
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(2024);
+    let mut gate_violations = 0;
+    // The shapes dominating runtime (largest) + a small one, at the
+    // paper's chosen hyperparameters for nano.
+    for (rows, cols) in [(18944usize, 3584usize), (3584, 18944), (3584, 3584), (896, 4864)] {
+        let row_bytes = cols * 2;
+        let t = table.with_row_bytes(row_bytes);
+        let importance: Vec<f32> = (0..rows).map(|_| rng.f32()).collect();
+        let budget = (rows as f64 * 0.9) as usize; // sparsity 0.1 worst case
+        let cfg = tuning::paper_config_for(rows, cols, "nano", sat as f64 / 1024.0)
+            .unwrap_or_else(|| ChunkSelectConfig::new(8.0, 8.0, sat as f64 / 1024.0));
+
+        let cs = ChunkSelect::new(cfg);
+        let r = b.bench(&format!("chunk_select {rows}x{cols} (paper cfg)"), || {
+            black_box(cs.select(&importance, budget, &t));
+        });
+        if r.median.as_secs_f64() * 1e3 > tuning::RUNTIME_GATE_MS {
+            gate_violations += 1;
+        }
+
+        b.bench(&format!("topk         {rows}x{cols}"), || {
+            black_box(TopK.select(&importance, budget, &t));
+        });
+        b.bench(&format!("bundling(2)  {rows}x{cols}"), || {
+            black_box(Bundling::new(2).select(&importance, budget, &t));
+        });
+        // Candidate generation alone (the pre-sort stage).
+        b.bench(&format!("candidates   {rows}x{cols}"), || {
+            black_box(cs.candidates(&importance, &t));
+        });
+    }
+    println!(
+        "\n2 ms gate (Fig 13): {} violations across paper-configured shapes",
+        gate_violations
+    );
+    assert_eq!(gate_violations, 0, "selection exceeded the paper's 2 ms gate");
+}

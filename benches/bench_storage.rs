@@ -1,0 +1,58 @@
+//! Storage-simulator benches: model evaluation cost for the access
+//! patterns behind Fig 3/4 (the simulator itself must be cheap enough to
+//! run figure sweeps), plus real-file thread-pool reads.
+
+use neuron_chunking::benchlib::{black_box, header, Bencher};
+use neuron_chunking::storage::{
+    DeviceProfile, Extent, FlashDevice, RealFileDevice, SimulatedSsd,
+};
+
+fn main() {
+    header("storage (simulator service-time model + real-file pool)");
+    let mut b = Bencher::default();
+    let dev = SimulatedSsd::timing_only(DeviceProfile::nano(), 1 << 40, 1);
+
+    let scattered: Vec<Extent> = (0..4096)
+        .map(|i| Extent::new(i as u64 * 16384, 7168))
+        .collect();
+    b.bench("sim service_time: 4096 scattered rows", || {
+        black_box(dev.model_service_seconds(&scattered, 1.0));
+    });
+
+    let chunked: Vec<Extent> = (0..96)
+        .map(|i| Extent::new(i as u64 * (1 << 20), 348 * 1024))
+        .collect();
+    b.bench("sim service_time: 96 saturating chunks", || {
+        black_box(dev.model_service_seconds(&chunked, 1.0));
+    });
+
+    let mixed: Vec<Extent> = (0..2048)
+        .map(|i| Extent::new(i as u64 * 65536, 4096 + (i % 13) * 4096))
+        .collect();
+    b.bench("sim service_time: 2048 mixed sizes (entropy path)", || {
+        black_box(dev.model_service_seconds(&mixed, 1.0));
+    });
+
+    // Image-backed reads (the engine's weight-load path).
+    let image = vec![0u8; 16 << 20];
+    let imgdev = SimulatedSsd::with_image(DeviceProfile::nano(), image, 2);
+    let extents: Vec<Extent> = (0..128)
+        .map(|i| Extent::new(i as u64 * 65536, 3072))
+        .collect();
+    let mut out = vec![0u8; 128 * 3072];
+    b.bench("sim read_batch: 128 x 3 KB rows into buffer", || {
+        black_box(imgdev.read_batch(&extents, &mut out).unwrap());
+    });
+
+    // Real-file thread pool (page-cache-warm: upper bound on throughput).
+    let path = std::env::temp_dir().join(format!("nc_bench_{}.img", std::process::id()));
+    std::fs::write(&path, vec![7u8; 8 << 20]).unwrap();
+    let real = RealFileDevice::open(&path, 6, false).unwrap();
+    let extents: Vec<Extent> = (0..256)
+        .map(|i| Extent::new(i as u64 * 16384, 8192))
+        .collect();
+    b.bench("real pread pool: 256 x 8 KB (warm cache)", || {
+        black_box(real.service_time(&extents).unwrap());
+    });
+    std::fs::remove_file(path).ok();
+}

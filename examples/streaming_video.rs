@@ -1,0 +1,84 @@
+//! Streaming-video scenario: the paper's motivating workload (§1).
+//!
+//! A video stream is appended frame-by-frame into a flash-offloaded VLM
+//! (paper-scale matrix shapes, I/O simulated on the calibrated Jetson
+//! profiles). We compare the per-frame I/O latency of conventional top-k
+//! sparsification against neuron chunking at the same effective sparsity,
+//! and check both against the frame budget of a 1 FPS stream.
+//!
+//! Run: `cargo run --release --example streaming_video [nano|agx]`
+
+use neuron_chunking::experiments::{IoPolicy, PaperRig, RigConfig};
+use neuron_chunking::model::ModelSpec;
+use neuron_chunking::report::{fmt_secs, Table};
+use neuron_chunking::stats;
+use neuron_chunking::storage::DeviceProfile;
+use neuron_chunking::workload::{AccuracyModel, DatasetSpec};
+
+fn main() -> anyhow::Result<()> {
+    let device = std::env::args().nth(1).unwrap_or_else(|| "nano".into());
+    let profile = DeviceProfile::by_name(&device)
+        .ok_or_else(|| anyhow::anyhow!("unknown device {device}"))?;
+    let model = ModelSpec::llava_7b();
+    println!(
+        "streaming into {} on {} ({} of weights on flash)…",
+        model.name,
+        profile.name,
+        format!("{:.1} GB", model.total_bytes() as f64 / 1e9),
+    );
+    let rig = PaperRig::new(
+        model,
+        profile,
+        RigConfig {
+            calib_samples: 16,
+            tokens_per_frame: 0,
+            seed: 7,
+        },
+    )?;
+    let dataset = DatasetSpec::tempcompass();
+    let acc_model = AccuracyModel::new(dataset.clone());
+    let sparsity = 0.5;
+    let budgets = rig.budgets(sparsity);
+    let scale = rig.spec.layers as f64 / rig.layers.len() as f64;
+
+    let frames = 12u64;
+    let mut t = Table::new(
+        &format!("per-frame I/O at sparsity {sparsity} (proxy accuracy in parens)"),
+        &["frame", "top-k", "chunking", "speedup"],
+    );
+    let mut speedups = Vec::new();
+    for f in 0..frames {
+        let mut io = [0.0f64; 2];
+        let mut kept = [0.0f64; 2];
+        let mut total = [0.0f64; 2];
+        for (i, policy) in [IoPolicy::TopK, IoPolicy::Chunking].iter().enumerate() {
+            for ls in &rig.layers {
+                let r = rig.frame_layer_io(policy, ls.layer, 500 + f, &budgets)?;
+                io[i] += r.io_seconds * scale;
+                kept[i] += r.kept;
+                total[i] += r.total;
+            }
+        }
+        speedups.push(io[0] / io[1]);
+        t.row(vec![
+            format!("{f}"),
+            format!(
+                "{} ({:.3})",
+                fmt_secs(io[0]),
+                acc_model.score(kept[0] / total[0])
+            ),
+            format!(
+                "{} ({:.3})",
+                fmt_secs(io[1]),
+                acc_model.score(kept[1] / total[1])
+            ),
+            format!("{:.2}x", io[0] / io[1]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "median I/O speedup {:.2}x at the same effective sparsity.",
+        stats::median(&speedups)
+    );
+    Ok(())
+}

@@ -1,0 +1,130 @@
+"""AOT lowering: jax stage functions -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--models tiny,small]
+
+Emits one `<name>.hlo.txt` per artifact plus `manifest.json` describing
+input/output shapes, consumed by rust/src/runtime/.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS, artifact_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, regardless of output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec) -> str:
+    args = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in spec["args"]]
+    return to_hlo_text(jax.jit(spec["fn"]).lower(*args))
+
+
+def build(out_dir: str, model_names, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "models": {}, "artifacts": []}
+    for mname in model_names:
+        dims = MODELS[mname]
+        manifest["models"][mname] = dict(
+            d=dims.d,
+            h=dims.h,
+            nh=dims.nh,
+            t=dims.t,
+            c=dims.c,
+            layers=dims.layers,
+            d_buckets=dims.d_buckets,
+            h_buckets=dims.h_buckets,
+        )
+        for spec in artifact_specs(dims):
+            fname = f"{spec['name']}.hlo.txt"
+            text = lower_spec(spec)
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                dict(
+                    name=spec["name"],
+                    file=fname,
+                    kind=spec["kind"],
+                    model=spec["model"],
+                    r=spec["r"],
+                    t=spec["t"],
+                    inputs=[list(a.shape) for a in spec["args"]],
+                    outputs=spec["outputs"],
+                    sha256=hashlib.sha256(text.encode()).hexdigest()[:16],
+                )
+            )
+            if verbose:
+                print(f"  {fname}  ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # Flat TSV mirror for the Rust runtime (offline env has no JSON crate).
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for mname, md in manifest["models"].items():
+            f.write(
+                "model\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n".format(
+                    mname,
+                    md["d"],
+                    md["h"],
+                    md["nh"],
+                    md["t"],
+                    md["c"],
+                    md["layers"],
+                    ",".join(str(b) for b in md["d_buckets"]),
+                    ",".join(str(b) for b in md["h_buckets"]),
+                )
+            )
+        for a in manifest["artifacts"]:
+            shapes = ";".join(
+                ",".join(str(d) for d in s) if s else "scalar"
+                for s in a["inputs"]
+            )
+            f.write(
+                "artifact\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n".format(
+                    a["name"],
+                    a["file"],
+                    a["kind"],
+                    a["model"],
+                    a["r"],
+                    a["t"],
+                    a["outputs"],
+                    shapes,
+                )
+            )
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--models",
+        default="tiny,small",
+        help="comma-separated model names (tiny,small,base)",
+    )
+    a = p.parse_args()
+    build(a.out_dir, [m for m in a.models.split(",") if m])
+
+
+if __name__ == "__main__":
+    main()

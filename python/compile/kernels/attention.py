@@ -1,0 +1,63 @@
+"""Multi-head attention Pallas kernel (per-head grid).
+
+Computes softmax(q k^T / sqrt(hd) + mask) v for T query tokens over S
+key/value slots. The KV-cache mask arrives as a float vector (1.0 = valid
+slot); invalid slots get a large negative additive bias.
+
+Grid iterates over heads; each step stages one head's [T, hd] queries and
+[S, hd] keys/values into VMEM. T and S are small in the frame-append/decode
+stages (<= a few hundred), so a whole head fits comfortably in VMEM and the
+softmax runs unblocked.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale):
+    q = q_ref[0]  # [T, hd]
+    k = k_ref[0]  # [S, hd]
+    v = v_ref[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + (1.0 - mask_ref[...])[None, :] * NEG_INF
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_heads",))
+def mha_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array,
+    num_heads: int,
+):
+    """q: [T, nh*hd]; k, v: [S, nh*hd]; mask: [S] -> [T, nh*hd]."""
+    t, d = q.shape
+    s = k.shape[0]
+    assert d % num_heads == 0
+    hd = d // num_heads
+    qh = q.reshape(t, num_heads, hd).transpose(1, 0, 2)  # [nh, T, hd]
+    kh = k.reshape(s, num_heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(s, num_heads, hd).transpose(1, 0, 2)
+    out = pl.pallas_call(
+        functools.partial(_mha_kernel, scale=1.0 / (hd**0.5)),
+        grid=(num_heads,),
+        in_specs=[
+            pl.BlockSpec((1, t, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((s,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, t, hd), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_heads, t, hd), jnp.float32),
+        interpret=True,
+    )(qh, kh, vh, mask)
+    return out.transpose(1, 0, 2).reshape(t, d)

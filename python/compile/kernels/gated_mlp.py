@@ -1,0 +1,66 @@
+"""Fused SwiGLU gate/up Pallas kernel over gathered neuron rows.
+
+act = silu(xs @ wg) * (xs @ wu)
+
+Both contractions share the same gathered activation tile, so fusing them
+halves the activation traffic versus two separate matmuls. Gate and up
+partials accumulate in VMEM scratch across the k-grid; the SwiGLU epilogue
+runs once on the final grid step.
+
+Zero-padded rows (budget-bucket padding) are exact: a zero row contributes
+zero to both partial sums, and silu/multiply happen only after the full
+reduction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .sparse_matmul import _pick_k_tile
+
+
+def _fused_gateup_kernel(xs_ref, wg_ref, wu_ref, o_ref, g_acc, u_acc):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    xs = xs_ref[...]
+    g_acc[...] += jnp.dot(xs, wg_ref[...], preferred_element_type=jnp.float32)
+    u_acc[...] += jnp.dot(xs, wu_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(0) == pl.num_programs(0) - 1)
+    def _epilogue():
+        g = g_acc[...]
+        o_ref[...] = (g * jax.nn.sigmoid(g)) * u_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile",))
+def fused_gateup(
+    xs: jax.Array, wg: jax.Array, wu: jax.Array, k_tile: int | None = None
+):
+    """act = silu(xs@wg) * (xs@wu). xs: [T, R]; wg, wu: [R, H] -> [T, H]."""
+    t, r = xs.shape
+    rg, h = wg.shape
+    assert wg.shape == wu.shape and r == rg
+    kt = k_tile or _pick_k_tile(r)
+    assert r % kt == 0
+    return pl.pallas_call(
+        _fused_gateup_kernel,
+        grid=(r // kt,),
+        in_specs=[
+            pl.BlockSpec((t, kt), lambda i: (0, i)),
+            pl.BlockSpec((kt, h), lambda i: (i, 0)),
+            pl.BlockSpec((kt, h), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, h), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((t, h), jnp.float32),
+            pltpu.VMEM((t, h), jnp.float32),
+        ],
+        interpret=True,
+    )(xs, wg, wu)

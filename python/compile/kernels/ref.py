@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float addition
+order) counterpart here. `python/tests/` asserts allclose between the two
+across shape/dtype sweeps; this is the core correctness signal for the
+compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9  # large-negative mask value (not -inf: keeps softmax finite)
+
+
+def gathered_matmul(xs: jax.Array, w: jax.Array) -> jax.Array:
+    """y = xs @ w, where xs is [T, R] gathered activations and w is [R, N]
+    gathered weight rows. Plain matmul; the gather happened upstream (in the
+    Rust coordinator, after chunk selection)."""
+    return jnp.dot(xs, w, preferred_element_type=jnp.float32)
+
+
+def fused_gateup(xs: jax.Array, wg: jax.Array, wu: jax.Array) -> jax.Array:
+    """SwiGLU gate/up over gathered rows: act = silu(xs@wg) * (xs@wu).
+
+    xs: [T, R]; wg, wu: [R, H]; returns [T, H].
+    Zero-padded rows of xs/wg/wu contribute exactly zero, so budget-bucket
+    padding is lossless.
+    """
+    gate = jnp.dot(xs, wg, preferred_element_type=jnp.float32)
+    up = jnp.dot(xs, wu, preferred_element_type=jnp.float32)
+    return jax.nn.silu(gate) * up
+
+
+def mha_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array, num_heads: int
+) -> jax.Array:
+    """Multi-head attention of T query tokens over S key/value slots.
+
+    q: [T, nh*hd]; k, v: [S, nh*hd]; mask: [S] with 1.0 = valid slot.
+    Returns [T, nh*hd]. Masked slots receive NEG_INF pre-softmax.
+    """
+    t, d = q.shape
+    s = k.shape[0]
+    hd = d // num_heads
+    qh = q.reshape(t, num_heads, hd).transpose(1, 0, 2)  # [nh, T, hd]
+    kh = k.reshape(s, num_heads, hd).transpose(1, 0, 2)  # [nh, S, hd]
+    vh = v.reshape(s, num_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) / jnp.sqrt(jnp.float32(hd))
+    scores = scores + (1.0 - mask)[None, None, :] * NEG_INF
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", probs, vh)  # [nh, T, hd]
+    return out.transpose(1, 0, 2).reshape(t, d)
+
+
+def proj_residual(a_sel: jax.Array, w: jax.Array, res: jax.Array) -> jax.Array:
+    """Output projection over gathered rows plus residual: res + a_sel @ w."""
+    return res + jnp.dot(a_sel, w, preferred_element_type=jnp.float32)
+
+
+def rmsnorm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Scale-free RMSNorm (matches the Rust-side host implementation)."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps)
+
+
+def qkv_attn_append(
+    xs: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    kc: jax.Array,
+    vc: jax.Array,
+    mask: jax.Array,
+    num_heads: int,
+):
+    """Reference for the fused qkv+attention append stage.
+
+    xs: [T, R] gathered (post-norm) activations; wq/wk/wv: [R, d] gathered
+    rows; kc/vc: [C, d] KV cache; mask: [C]. Frame tokens attend over all
+    valid cache slots plus the whole current frame (non-causal within the
+    frame, matching vision-token semantics).
+    Returns (attn_out [T, d], k_new [T, d], v_new [T, d]).
+    """
+    q = gathered_matmul(xs, wq)
+    k = gathered_matmul(xs, wk)
+    v = gathered_matmul(xs, wv)
+    keys = jnp.concatenate([kc, k], axis=0)
+    vals = jnp.concatenate([vc, v], axis=0)
+    full_mask = jnp.concatenate([mask, jnp.ones((xs.shape[0],), mask.dtype)])
+    attn = mha_attention(q, keys, vals, full_mask, num_heads)
+    return attn, k, v

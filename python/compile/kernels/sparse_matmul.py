@@ -1,0 +1,67 @@
+"""Pallas gathered-matmul kernel — the compute half of neuron chunking.
+
+The Rust coordinator selects neuron chunks, reads their weight rows from
+flash, and hands this kernel a *gathered* pair (xs [T, R], w [R, N]) where
+R is the selection budget bucket. The kernel computes y = xs @ w by tiling
+the contraction (R) dimension.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): each grid step stages one
+[T, kt] activation tile and one [kt, N] weight tile into VMEM via BlockSpec
+and accumulates a [T, N] f32 partial on the MXU. The contiguous chunk reads
+the paper performs from flash become contiguous HBM->VMEM tiles here.
+
+Runs under interpret=True so the lowered HLO executes on the CPU PJRT
+client (real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot
+run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_k_tile(r: int, max_tile: int = 128) -> int:
+    """Largest power-of-two tile <= max_tile that divides the contraction
+    dim. Budget buckets are multiples of 16, so this is >= 16 in practice."""
+    kt = 1
+    t = 1
+    while t <= max_tile and r % t == 0:
+        kt = t
+        t *= 2
+    return kt
+
+
+def _gathered_matmul_kernel(xs_ref, w_ref, o_ref):
+    """Grid: (R // kt,). Accumulates partial products into the revisited
+    output block (constant index map), the standard Pallas k-loop pattern."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        xs_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k_tile",))
+def gathered_matmul(xs: jax.Array, w: jax.Array, k_tile: int | None = None):
+    """y = xs @ w over gathered rows. xs: [T, R]; w: [R, N] -> [T, N]."""
+    t, r = xs.shape
+    r2, n = w.shape
+    assert r == r2, f"contraction mismatch {r} vs {r2}"
+    kt = k_tile or _pick_k_tile(r)
+    assert r % kt == 0
+    return pl.pallas_call(
+        _gathered_matmul_kernel,
+        grid=(r // kt,),
+        in_specs=[
+            pl.BlockSpec((t, kt), lambda i: (0, i)),
+            pl.BlockSpec((kt, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(xs, w)

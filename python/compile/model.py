@@ -1,0 +1,161 @@
+"""L2: the VLM transformer-block compute graph, staged for flash-in-the-loop
+serving.
+
+The Rust coordinator sparsifies *each weight matrix by its own input
+activation* (predictor-free, following the paper / TEAL). Between matrices
+it must observe intermediate activations to score + chunk-select + load the
+next matrix's rows from flash. A transformer block therefore lowers to
+three executables, invoked per layer with freshly loaded (gathered) rows:
+
+  1. qkv_attn  : xs[T,R], wq/wk/wv[R,d], kv-cache -> (attn[T,d], k, v)
+  2. proj_res  : a_sel[T,R], w[R,N], res[T,N] -> x'[T,N]   (o-proj & down-proj)
+  3. gateup    : xs[T,R], wg[R,H], wu[R,H] -> act[T,H]     (SwiGLU)
+
+R is a budget bucket: Rust rounds its chunk-selection budget up to the
+nearest compiled bucket and zero-pads, which is numerically exact (zero
+rows contribute nothing to any contraction).
+
+RMSNorm and activation scoring run host-side in Rust — they are O(T*d)
+vector ops the coordinator needs the values of anyway.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.attention import mha_attention
+from .kernels.gated_mlp import fused_gateup
+from .kernels.sparse_matmul import gathered_matmul
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    """Dimensions of a runnable (small, real) model variant."""
+
+    name: str
+    d: int  # hidden size
+    h: int  # MLP intermediate size
+    nh: int  # attention heads
+    t: int  # tokens per frame
+    c: int  # KV-cache capacity (slots)
+    layers: int
+    # Budget-bucket fractions over an input dim, rounded to multiples of 16.
+    fractions: tuple = (1.0, 0.75, 0.5, 0.375, 0.25)
+
+    def buckets(self, n: int) -> list:
+        out = []
+        for f in self.fractions:
+            r = max(16, int(round(n * f / 16)) * 16)
+            r = min(r, n)
+            if r not in out:
+                out.append(r)
+        return out
+
+    @property
+    def d_buckets(self):
+        return self.buckets(self.d)
+
+    @property
+    def h_buckets(self):
+        return self.buckets(self.h)
+
+
+TINY = ModelDims(name="tiny", d=64, h=192, nh=4, t=8, c=32, layers=2)
+SMALL = ModelDims(name="small", d=256, h=768, nh=4, t=16, c=128, layers=4)
+BASE = ModelDims(name="base", d=512, h=1536, nh=8, t=32, c=256, layers=8)
+
+MODELS = {m.name: m for m in (TINY, SMALL, BASE)}
+
+
+def make_qkv_attn(dims: ModelDims, t: int):
+    """Fused QKV projection + attention over cache+frame. t=1 for decode."""
+
+    def qkv_attn(xs, wq, wk, wv, kc, vc, mask):
+        q = gathered_matmul(xs, wq)
+        k = gathered_matmul(xs, wk)
+        v = gathered_matmul(xs, wv)
+        keys = jnp.concatenate([kc, k], axis=0)
+        vals = jnp.concatenate([vc, v], axis=0)
+        full_mask = jnp.concatenate([mask, jnp.ones((t,), mask.dtype)])
+        attn = mha_attention(q, keys, vals, full_mask, dims.nh)
+        return attn, k, v
+
+    return qkv_attn
+
+
+def proj_residual(a_sel, w, res):
+    """Gathered output projection + residual add (o-proj and down-proj)."""
+    return (res + gathered_matmul(a_sel, w),)
+
+
+def gateup(xs, wg, wu):
+    """Gathered SwiGLU gate/up."""
+    return (fused_gateup(xs, wg, wu),)
+
+
+def artifact_specs(dims: ModelDims):
+    """Enumerate every (name, fn, example-arg-specs) artifact for a model.
+
+    Returns a list of dicts consumed by aot.py and mirrored into
+    artifacts/manifest.json for the Rust runtime.
+    """
+    f32 = jnp.float32
+    specs = []
+
+    def shape(*s):
+        return jnp.zeros(s, f32)  # only shapes matter; zeros keep it cheap
+
+    for r in dims.d_buckets:
+        for t, stage in ((dims.t, "append"), (1, "decode")):
+            specs.append(
+                dict(
+                    name=f"qkv_{stage}_{dims.name}_r{r}",
+                    kind=f"qkv_{stage}",
+                    model=dims.name,
+                    r=r,
+                    t=t,
+                    fn=make_qkv_attn(dims, t),
+                    args=[
+                        shape(t, r),  # xs
+                        shape(r, dims.d),  # wq
+                        shape(r, dims.d),  # wk
+                        shape(r, dims.d),  # wv
+                        shape(dims.c, dims.d),  # kc
+                        shape(dims.c, dims.d),  # vc
+                        shape(dims.c),  # mask
+                    ],
+                    outputs=3,
+                )
+            )
+        for t, stage in ((dims.t, "gateup"), (1, "gateup_dec")):
+            specs.append(
+                dict(
+                    name=f"{stage}_{dims.name}_r{r}",
+                    kind=stage,
+                    model=dims.name,
+                    r=r,
+                    t=t,
+                    fn=gateup,
+                    args=[shape(t, r), shape(r, dims.h), shape(r, dims.h)],
+                    outputs=1,
+                )
+            )
+    # proj_residual: o-proj uses d-buckets (input = attn out, dim d);
+    # down-proj uses h-buckets (input = MLP activation, dim h). Output is
+    # always d. Compile the union of buckets, for frame-T and decode (t=1).
+    proj_buckets = sorted(set(dims.d_buckets) | set(dims.h_buckets))
+    for r in proj_buckets:
+        for t, stage in ((dims.t, "projres"), (1, "projres_dec")):
+            specs.append(
+                dict(
+                    name=f"{stage}_{dims.name}_r{r}",
+                    kind=stage,
+                    model=dims.name,
+                    r=r,
+                    t=t,
+                    fn=proj_residual,
+                    args=[shape(t, r), shape(r, dims.d), shape(t, dims.d)],
+                    outputs=1,
+                )
+            )
+    return specs

@@ -1,0 +1,79 @@
+"""AOT pipeline tests: lowering produces parseable HLO text with the right
+entry signature, and the manifest is consistent with the model specs."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tiny_build(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, ["tiny"], verbose=False)
+    return out, manifest
+
+
+def test_manifest_counts(tiny_build):
+    out, manifest = tiny_build
+    dims = model.TINY
+    n_qkv = 2 * len(dims.d_buckets)
+    n_gateup = 2 * len(dims.d_buckets)
+    n_proj = 2 * len(set(dims.d_buckets) | set(dims.h_buckets))
+    assert len(manifest["artifacts"]) == n_qkv + n_gateup + n_proj
+    # + manifest.json + manifest.tsv
+    assert len(os.listdir(out)) == len(manifest["artifacts"]) + 2
+
+
+def test_manifest_matches_files(tiny_build):
+    out, manifest = tiny_build
+    disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert disk == manifest
+    for art in manifest["artifacts"]:
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path), art["file"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), art["file"]
+        assert "ENTRY" in text
+
+
+def test_entry_layout_matches_manifest_shapes(tiny_build):
+    out, manifest = tiny_build
+    for art in manifest["artifacts"][:8]:
+        text = open(os.path.join(out, art["file"])).read()
+        m = re.search(r"entry_computation_layout=\{\((.*?)\)->", text)
+        assert m, art["file"]
+        params = re.findall(r"f32\[([\d,]*)\]", m.group(1))
+        got = [
+            [int(x) for x in p.split(",")] if p else [] for p in params
+        ]
+        assert got == art["inputs"], art["name"]
+
+
+def test_hlo_deterministic(tmp_path):
+    """Same spec lowers to byte-identical HLO (stable sha in manifest)."""
+    dims = model.TINY
+    spec = model.artifact_specs(dims)[0]
+    a = aot.lower_spec(spec)
+    b = aot.lower_spec(spec)
+    assert a == b
+
+
+def test_output_tuple_arity(tiny_build):
+    out, manifest = tiny_build
+    for art in manifest["artifacts"]:
+        text = open(os.path.join(out, art["file"])).read()
+        m = re.search(r"->\((.*?)\)\}", text)
+        assert m, art["name"]
+        arity = len(re.findall(r"f32\[", m.group(1)))
+        assert arity == art["outputs"], art["name"]
+
+
+def test_models_in_manifest(tiny_build):
+    _, manifest = tiny_build
+    assert manifest["models"]["tiny"]["d"] == model.TINY.d
+    assert manifest["models"]["tiny"]["layers"] == model.TINY.layers
+    assert manifest["models"]["tiny"]["d_buckets"] == model.TINY.d_buckets

@@ -1,0 +1,242 @@
+"""Kernel-vs-oracle correctness: the core signal for the compile path.
+
+Each Pallas kernel (interpret=True) is checked against its pure-jnp
+reference in ref.py, both on fixed cases and hypothesis-driven shape/value
+sweeps.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import mha_attention
+from compile.kernels.gated_mlp import fused_gateup
+from compile.kernels.sparse_matmul import gathered_matmul, _pick_k_tile
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape, scale=1.0):
+    return jnp.asarray(
+        RNG.standard_normal(shape).astype(np.float32) * scale
+    )
+
+
+# ---------------------------------------------------------------- tiling
+
+
+@pytest.mark.parametrize(
+    "r,expect",
+    [(16, 16), (48, 16), (64, 64), (128, 128), (192, 64), (768, 128), (1, 1), (6, 2)],
+)
+def test_pick_k_tile(r, expect):
+    kt = _pick_k_tile(r)
+    assert kt == expect
+    assert r % kt == 0
+
+
+def test_pick_k_tile_always_divides():
+    for r in range(1, 512):
+        assert r % _pick_k_tile(r) == 0
+
+
+# -------------------------------------------------------- gathered matmul
+
+
+@pytest.mark.parametrize("t", [1, 8, 16])
+@pytest.mark.parametrize("r", [16, 48, 192, 256])
+@pytest.mark.parametrize("n", [64, 192])
+def test_gathered_matmul_matches_ref(t, r, n):
+    xs, w = randf(t, r), randf(r, n)
+    np.testing.assert_allclose(
+        gathered_matmul(xs, w), ref.gathered_matmul(xs, w), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_gathered_matmul_zero_row_padding_exact():
+    """Budget-bucket padding: appended zero rows change nothing."""
+    t, r, n, pad = 4, 32, 64, 16
+    xs, w = randf(t, r), randf(r, n)
+    xs_p = jnp.concatenate([xs, jnp.zeros((t, pad), jnp.float32)], axis=1)
+    w_p = jnp.concatenate([w, jnp.zeros((pad, n), jnp.float32)], axis=0)
+    np.testing.assert_allclose(
+        gathered_matmul(xs_p, w_p), gathered_matmul(xs, w), atol=1e-5
+    )
+
+
+def test_gathered_matmul_identity():
+    xs = randf(8, 64)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(gathered_matmul(xs, eye), xs, atol=1e-5)
+
+
+def test_gathered_matmul_explicit_k_tile():
+    xs, w = randf(4, 96), randf(96, 32)
+    for kt in (16, 32, 48, 96):
+        np.testing.assert_allclose(
+            gathered_matmul(xs, w, k_tile=kt),
+            ref.gathered_matmul(xs, w),
+            atol=1e-4,
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 12),
+    rk=st.integers(1, 12),
+    n=st.integers(1, 48),
+    scale=st.floats(0.01, 10.0),
+)
+def test_gathered_matmul_hypothesis(t, rk, n, scale):
+    r = rk * 16
+    rng = np.random.default_rng(t * 1000 + rk * 100 + n)
+    xs = jnp.asarray(rng.standard_normal((t, r)).astype(np.float32) * scale)
+    w = jnp.asarray(rng.standard_normal((r, n)).astype(np.float32))
+    np.testing.assert_allclose(
+        gathered_matmul(xs, w), ref.gathered_matmul(xs, w), atol=1e-3, rtol=1e-3
+    )
+
+
+# ------------------------------------------------------------ fused gateup
+
+
+@pytest.mark.parametrize("t", [1, 8])
+@pytest.mark.parametrize("r", [16, 48, 64])
+@pytest.mark.parametrize("h", [48, 192])
+def test_fused_gateup_matches_ref(t, r, h):
+    xs, wg, wu = randf(t, r), randf(r, h), randf(r, h)
+    np.testing.assert_allclose(
+        fused_gateup(xs, wg, wu), ref.fused_gateup(xs, wg, wu), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_fused_gateup_zero_padding_exact():
+    t, r, h, pad = 4, 32, 96, 32
+    xs, wg, wu = randf(t, r), randf(r, h), randf(r, h)
+    xs_p = jnp.concatenate([xs, jnp.zeros((t, pad), jnp.float32)], axis=1)
+    wg_p = jnp.concatenate([wg, jnp.zeros((pad, h), jnp.float32)], axis=0)
+    wu_p = jnp.concatenate([wu, jnp.zeros((pad, h), jnp.float32)], axis=0)
+    np.testing.assert_allclose(
+        fused_gateup(xs_p, wg_p, wu_p), fused_gateup(xs, wg, wu), atol=1e-5
+    )
+
+
+def test_fused_gateup_silu_negative_gate():
+    """silu keeps negative-gate contributions small but nonzero."""
+    xs = jnp.ones((1, 16), jnp.float32)
+    wg = -jnp.ones((16, 8), jnp.float32)  # gate = -16
+    wu = jnp.ones((16, 8), jnp.float32)  # up = 16
+    out = np.asarray(fused_gateup(xs, wg, wu))
+    expected = (-16.0 / (1.0 + np.exp(16.0))) * 16.0
+    np.testing.assert_allclose(out, expected, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(1, 8), rk=st.integers(1, 8), h=st.integers(1, 64))
+def test_fused_gateup_hypothesis(t, rk, h):
+    r = rk * 16
+    rng = np.random.default_rng(t * 997 + rk * 31 + h)
+    xs = jnp.asarray(rng.standard_normal((t, r)).astype(np.float32))
+    wg = jnp.asarray(rng.standard_normal((r, h)).astype(np.float32) * 0.5)
+    wu = jnp.asarray(rng.standard_normal((r, h)).astype(np.float32) * 0.5)
+    np.testing.assert_allclose(
+        fused_gateup(xs, wg, wu), ref.fused_gateup(xs, wg, wu), atol=1e-3, rtol=1e-3
+    )
+
+
+# --------------------------------------------------------------- attention
+
+
+@pytest.mark.parametrize("t", [1, 8])
+@pytest.mark.parametrize("s", [8, 40])
+@pytest.mark.parametrize("nh", [1, 4])
+def test_mha_matches_ref(t, s, nh):
+    d = 16 * nh
+    q, k, v = randf(t, d), randf(s, d), randf(s, d)
+    mask = jnp.asarray((RNG.random(s) > 0.3).astype(np.float32))
+    np.testing.assert_allclose(
+        mha_attention(q, k, v, mask, nh),
+        ref.mha_attention(q, k, v, mask, nh),
+        atol=1e-4,
+        rtol=1e-4,
+    )
+
+
+def test_mha_all_valid_mask_uniform_values():
+    """With identical values on every slot, output must equal that value."""
+    t, s, nh, d = 2, 10, 2, 32
+    q, k = randf(t, d), randf(s, d)
+    v = jnp.ones((s, d), jnp.float32) * 3.5
+    mask = jnp.ones((s,), jnp.float32)
+    np.testing.assert_allclose(
+        mha_attention(q, k, v, mask, nh), 3.5, rtol=1e-5
+    )
+
+
+def test_mha_masked_slots_ignored():
+    """Garbage in masked slots must not leak into the output."""
+    t, s, nh, d = 2, 12, 2, 32
+    q, k, v = randf(t, d), randf(s, d), randf(s, d)
+    mask = jnp.asarray(([1.0] * 6) + ([0.0] * 6), jnp.float32)
+    out1 = mha_attention(q, k, v, mask, nh)
+    k2 = k.at[6:].set(1e3)
+    v2 = v.at[6:].set(-1e3)
+    out2 = mha_attention(q, k2, v2, mask, nh)
+    np.testing.assert_allclose(out1, out2, atol=1e-3)
+
+
+def test_mha_probs_convexity():
+    """Output lies inside the convex hull of valid value rows."""
+    t, s, nh, d = 4, 16, 4, 64
+    q, k, v = randf(t, d), randf(s, d), randf(s, d)
+    mask = jnp.ones((s,), jnp.float32)
+    out = np.asarray(mha_attention(q, k, v, mask, nh))
+    vh = np.asarray(v).reshape(s, nh, d // nh)
+    for h in range(nh):
+        lo, hi = vh[:, h].min(axis=0), vh[:, h].max(axis=0)
+        oh = out.reshape(t, nh, d // nh)[:, h]
+        assert (oh >= lo - 1e-4).all() and (oh <= hi + 1e-4).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 6),
+    s=st.integers(2, 24),
+    nh=st.sampled_from([1, 2, 4]),
+    valid=st.integers(1, 24),
+)
+def test_mha_hypothesis(t, s, nh, valid):
+    d = 8 * nh
+    rng = np.random.default_rng(t * 7919 + s * 131 + nh)
+    q = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((s, d)).astype(np.float32))
+    mask = np.zeros(s, np.float32)
+    mask[: min(valid, s)] = 1.0
+    mask = jnp.asarray(mask)
+    np.testing.assert_allclose(
+        mha_attention(q, k, v, mask, nh),
+        ref.mha_attention(q, k, v, mask, nh),
+        atol=1e-3,
+        rtol=1e-3,
+    )
+
+
+# ----------------------------------------------------------------- rmsnorm
+
+
+def test_rmsnorm_unit_rms():
+    x = randf(6, 64, scale=5.0)
+    out = np.asarray(ref.rmsnorm(x))
+    rms = np.sqrt((out**2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rmsnorm_scale_invariant_direction():
+    x = randf(2, 32)
+    a = np.asarray(ref.rmsnorm(x))
+    b = np.asarray(ref.rmsnorm(x * 100.0))
+    np.testing.assert_allclose(a, b, atol=1e-4)

@@ -1,0 +1,182 @@
+"""L2 stage-function tests: shapes, composition against a dense block, and
+the sparsification contract (gathered rows == masked-input computation)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def randf(rng, *shape, scale=0.3):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+def dense_block_ref(x, wq, wk, wv, wo, wg, wu, wd, kc, vc, mask, nh):
+    """Full (unsparsified) transformer block, the accuracy gold standard."""
+    hn = ref.rmsnorm(x)
+    attn, k, v = ref.qkv_attn_append(hn, wq, wk, wv, kc, vc, mask, nh)
+    x1 = x + np.asarray(ref.gathered_matmul(attn, wo))
+    h2 = ref.rmsnorm(x1)
+    act = ref.fused_gateup(h2, wg, wu)
+    y = x1 + np.asarray(ref.gathered_matmul(act, wd))
+    return np.asarray(y), np.asarray(k), np.asarray(v)
+
+
+class TestModelDims:
+    def test_buckets_multiple_of_16(self):
+        for m in model.MODELS.values():
+            for b in m.d_buckets + m.h_buckets:
+                assert b % 16 == 0
+                assert 16 <= b
+
+    def test_buckets_descending_unique(self):
+        for m in model.MODELS.values():
+            for bs in (m.d_buckets, m.h_buckets):
+                assert bs == sorted(set(bs), reverse=True)
+
+    def test_full_bucket_present(self):
+        for m in model.MODELS.values():
+            assert m.d_buckets[0] == m.d
+            assert m.h_buckets[0] == m.h
+
+    def test_head_divides_hidden(self):
+        for m in model.MODELS.values():
+            assert m.d % m.nh == 0
+
+
+class TestArtifactSpecs:
+    @pytest.mark.parametrize("name", ["tiny", "small"])
+    def test_spec_inventory(self, name):
+        dims = model.MODELS[name]
+        specs = model.artifact_specs(dims)
+        kinds = {}
+        for s in specs:
+            kinds.setdefault(s["kind"], []).append(s["r"])
+        # qkv/gateup per d-bucket; projres per union bucket.
+        assert sorted(kinds["qkv_append"], reverse=True) == dims.d_buckets
+        assert sorted(kinds["qkv_decode"], reverse=True) == dims.d_buckets
+        assert sorted(kinds["gateup"], reverse=True) == dims.d_buckets
+        union = sorted(set(dims.d_buckets) | set(dims.h_buckets))
+        assert sorted(kinds["projres"]) == union
+        assert sorted(kinds["projres_dec"]) == union
+
+    def test_spec_names_unique(self):
+        for dims in (model.TINY, model.SMALL):
+            names = [s["name"] for s in model.artifact_specs(dims)]
+            assert len(names) == len(set(names))
+
+    def test_spec_arg_shapes_consistent(self):
+        dims = model.TINY
+        for s in model.artifact_specs(dims):
+            if s["kind"].startswith("qkv"):
+                t, r = s["args"][0].shape
+                assert r == s["r"] and t == s["t"]
+                assert s["args"][1].shape == (r, dims.d)
+                assert s["args"][4].shape == (dims.c, dims.d)
+
+
+class TestStageFunctions:
+    def test_qkv_attn_matches_ref(self):
+        dims = model.TINY
+        rng = np.random.default_rng(7)
+        r = dims.d
+        xs = randf(rng, dims.t, r)
+        wq, wk, wv = (randf(rng, r, dims.d) for _ in range(3))
+        kc, vc = randf(rng, dims.c, dims.d), randf(rng, dims.c, dims.d)
+        mask = jnp.zeros((dims.c,), jnp.float32).at[:10].set(1.0)
+        fn = model.make_qkv_attn(dims, dims.t)
+        attn, k, v = fn(xs, wq, wk, wv, kc, vc, mask)
+        ra, rk_, rv = ref.qkv_attn_append(xs, wq, wk, wv, kc, vc, mask, dims.nh)
+        np.testing.assert_allclose(attn, ra, atol=1e-4)
+        np.testing.assert_allclose(k, rk_, atol=1e-4)
+        np.testing.assert_allclose(v, rv, atol=1e-4)
+
+    def test_proj_residual_matches_ref(self):
+        rng = np.random.default_rng(8)
+        a, w, res = randf(rng, 8, 48), randf(rng, 48, 64), randf(rng, 8, 64)
+        (out,) = model.proj_residual(a, w, res)
+        np.testing.assert_allclose(
+            out, ref.proj_residual(a, w, res), atol=1e-4
+        )
+
+    def test_gateup_matches_ref(self):
+        rng = np.random.default_rng(9)
+        xs, wg, wu = randf(rng, 8, 32), randf(rng, 32, 96), randf(rng, 32, 96)
+        (out,) = model.gateup(xs, wg, wu)
+        np.testing.assert_allclose(out, ref.fused_gateup(xs, wg, wu), atol=1e-4)
+
+
+class TestSparsificationContract:
+    """Gathered-row computation must equal masked-input computation — the
+    invariant the whole Rust gather pipeline relies on."""
+
+    def test_gather_equals_mask_matmul(self):
+        rng = np.random.default_rng(10)
+        n, out_d, t = 64, 32, 4
+        a = randf(rng, t, n)
+        w = randf(rng, n, out_d)
+        sel = np.sort(rng.choice(n, size=24, replace=False))
+        dense_masked = np.asarray(a).copy()
+        keep = np.zeros(n, bool)
+        keep[sel] = True
+        dense_masked[:, ~keep] = 0.0
+        y_mask = dense_masked @ np.asarray(w)
+        y_gather = np.asarray(
+            ref.gathered_matmul(
+                jnp.asarray(np.asarray(a)[:, sel]), jnp.asarray(np.asarray(w)[sel])
+            )
+        )
+        np.testing.assert_allclose(y_gather, y_mask, atol=1e-4)
+
+    def test_full_budget_block_equals_dense(self):
+        """Composing the three stages at full budget reproduces the dense
+        block bit-for-bit (up to float tolerance)."""
+        dims = model.TINY
+        rng = np.random.default_rng(11)
+        x = randf(rng, dims.t, dims.d, scale=0.5)
+        wq, wk, wv, wo = (randf(rng, dims.d, dims.d) for _ in range(4))
+        wg, wu = randf(rng, dims.d, dims.h), randf(rng, dims.d, dims.h)
+        wd = randf(rng, dims.h, dims.d)
+        kc = randf(rng, dims.c, dims.d)
+        vc = randf(rng, dims.c, dims.d)
+        mask = jnp.zeros((dims.c,), jnp.float32).at[:5].set(1.0)
+
+        # staged pipeline at full budget (identity gather)
+        hn = ref.rmsnorm(x)
+        attn, k, v = model.make_qkv_attn(dims, dims.t)(
+            hn, wq, wk, wv, kc, vc, mask
+        )
+        (x1,) = model.proj_residual(attn, wo, x)
+        h2 = ref.rmsnorm(x1)
+        (act,) = model.gateup(h2, wg, wu)
+        (y,) = model.proj_residual(act, wd, x1)
+
+        gy, gk, gv = dense_block_ref(
+            x, wq, wk, wv, wo, wg, wu, wd, kc, vc, mask, dims.nh
+        )
+        np.testing.assert_allclose(np.asarray(y), gy, atol=1e-3, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(k), gk, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(v), gv, atol=1e-4)
+
+    def test_sparsified_block_bounded_error(self):
+        """Dropping the lowest-|a| rows produces small, bounded output error
+        (sanity for the accuracy-proxy methodology)."""
+        dims = model.TINY
+        rng = np.random.default_rng(12)
+        t, n, out_d = dims.t, dims.d, dims.d
+        a = randf(rng, t, n, scale=1.0)
+        w = randf(rng, n, out_d, scale=0.2)
+        imp = np.abs(np.asarray(a)).mean(axis=0)
+        order = np.argsort(-imp)
+        dense = np.asarray(a) @ np.asarray(w)
+        prev_err = None
+        for keep in (n, 3 * n // 4, n // 2):
+            sel = np.sort(order[:keep])
+            y = np.asarray(a)[:, sel] @ np.asarray(w)[sel]
+            err = np.abs(y - dense).mean()
+            if prev_err is not None:
+                assert err >= prev_err - 1e-5  # error grows as budget shrinks
+            prev_err = err
+        assert prev_err < np.abs(dense).mean()  # still far from garbage

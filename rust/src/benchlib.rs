@@ -1,0 +1,158 @@
+//! Minimal criterion-style micro-benchmark harness (criterion itself is
+//! unavailable offline). Auto-calibrates iteration counts, reports
+//! median/mean/std, and supports labelled groups. Used by every target in
+//! `benches/` (all declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub std_dev: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<56} {:>12}  (mean {:>12}, sd {:>10}, n={})",
+            self.name,
+            crate::report::fmt_secs(self.median.as_secs_f64()),
+            crate::report::fmt_secs(self.mean.as_secs_f64()),
+            crate::report::fmt_secs(self.std_dev.as_secs_f64()),
+            self.iters
+        );
+    }
+}
+
+/// Benchmark runner with target measurement time.
+pub struct Bencher {
+    /// Target total measurement duration per benchmark.
+    pub target: Duration,
+    /// Number of timed batches (samples) the target is split into.
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(400), 20)
+    }
+}
+
+impl Bencher {
+    pub fn new(target: Duration, samples: usize) -> Self {
+        Self {
+            target,
+            samples,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick preset for CI-ish runs.
+    pub fn quick() -> Self {
+        Self::new(Duration::from_millis(120), 8)
+    }
+
+    /// Time `f`, auto-calibrating the per-sample iteration count.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibration: how many iters fit in target/samples?
+        let mut iters_per_sample = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let el = t0.elapsed();
+            if el >= self.target / (self.samples as u32) || iters_per_sample > 1 << 30 {
+                break;
+            }
+            let scale = (self.target.as_secs_f64() / self.samples as f64
+                / el.as_secs_f64().max(1e-9))
+            .clamp(1.5, 100.0);
+            iters_per_sample = ((iters_per_sample as f64) * scale).ceil() as u64;
+        }
+        // Measurement.
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let median = crate::stats::median(&per_iter);
+        let mean = crate::stats::mean(&per_iter);
+        let sd = crate::stats::std_dev(&per_iter);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: iters_per_sample * self.samples as u64,
+            median: Duration::from_secs_f64(median),
+            mean: Duration::from_secs_f64(mean),
+            std_dev: Duration::from_secs_f64(sd),
+        };
+        res.print();
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard header printed by each bench binary.
+pub fn header(target: &str) {
+    println!("\n### bench: {target}");
+    println!(
+        "{:<56} {:>12}  {:>34}",
+        "benchmark", "median/iter", "detail"
+    );
+    println!("{}", "-".repeat(108));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new(Duration::from_millis(30), 4);
+        let mut acc = 0u64;
+        let r = b
+            .bench("noop-ish", || {
+                acc = acc.wrapping_add(black_box(1));
+            })
+            .clone();
+        assert!(r.iters > 100); // cheap op must auto-scale iters
+        assert!(r.median < Duration::from_micros(10));
+    }
+
+    #[test]
+    fn respects_relative_cost() {
+        let mut b = Bencher::new(Duration::from_millis(40), 4);
+        // xor-multiply fold has no closed form LLVM can substitute.
+        let work = |n: u64| {
+            black_box(
+                (0..black_box(n)).fold(0u64, |a, i| a ^ i.wrapping_mul(0x9E3779B9)),
+            )
+        };
+        let cheap = b.bench("cheap", || {
+            work(10);
+        })
+        .median;
+        let pricey = b.bench("pricey", || {
+            work(10_000);
+        })
+        .median;
+        assert!(pricey > cheap * 5);
+    }
+}

@@ -1,0 +1,121 @@
+//! `repro-figures` — regenerate every table and figure of the paper.
+//!
+//! Usage:
+//!   repro-figures [--quick|--full] [--out DIR] <target>...
+//!   targets: fig2 fig3 fig4a fig4b fig5 fig6 fig7 fig8 fig9 fig10 fig11
+//!            fig12 fig13 fig16 table1 table2 table3 appn devices all
+//!
+//! Each target prints its tables and writes `reports/<target>_<n>.csv`.
+
+use std::path::PathBuf;
+
+use neuron_chunking::experiments as exp;
+use neuron_chunking::report::Table;
+use neuron_chunking::storage::DeviceProfile;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut quality = exp::Quality::full();
+    let mut out_dir = PathBuf::from(".");
+    let mut targets: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => quality = exp::Quality::quick(),
+            "--full" => quality = exp::Quality::full(),
+            "--out" => {
+                i += 1;
+                out_dir = PathBuf::from(&args[i]);
+            }
+            "-h" | "--help" => {
+                print_help();
+                return;
+            }
+            t => targets.push(t.to_string()),
+        }
+        i += 1;
+    }
+    if targets.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    if targets.iter().any(|t| t == "all") {
+        targets = ALL.iter().map(|s| s.to_string()).collect();
+    }
+    let artifact_dir = std::env::var("NC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+
+    let mut failures = 0;
+    for target in &targets {
+        let t0 = std::time::Instant::now();
+        eprintln!("--- running {target} ---");
+        let result: anyhow::Result<Vec<Table>> = match target.as_str() {
+            "fig2" => exp::fig2(quality),
+            "fig3" => exp::fig3(quality),
+            "fig4a" => exp::fig4a(quality),
+            "fig4b" => exp::fig4b(quality),
+            "fig5" => exp::fig5(quality),
+            "fig6" => exp::fig6(DeviceProfile::nano(), quality),
+            "fig6real" => exp::fig6_real(&artifact_dir, quality),
+            "fig7" | "fig14" => exp::fig6(DeviceProfile::agx(), quality),
+            "fig8" => exp::fig8(&artifact_dir, quality),
+            "fig9" => exp::fig9(quality),
+            "fig10" | "fig15" => exp::fig10(quality),
+            "fig11" => exp::fig11(quality),
+            "fig12" => exp::fig12(quality),
+            "fig13" => exp::fig13(quality),
+            "fig16" => exp::fig16(quality),
+            "table1" => exp::table1(quality),
+            "table2" => exp::table2(quality),
+            "table3" => exp::table3(quality),
+            "appn" => exp::appn(quality),
+            "iouring" => exp::disc_iouring(quality),
+            "devices" => exp::devices(quality),
+            other => {
+                eprintln!("unknown target: {other}");
+                failures += 1;
+                continue;
+            }
+        };
+        match result {
+            Ok(tables) => {
+                for (i, t) in tables.iter().enumerate() {
+                    println!("{}", t.render());
+                    let name = if tables.len() == 1 {
+                        target.clone()
+                    } else {
+                        format!("{target}_{i}")
+                    };
+                    match t.write_csv(&out_dir, &name) {
+                        Ok(p) => eprintln!("  wrote {}", p.display()),
+                        Err(e) => eprintln!("  csv write failed: {e}"),
+                    }
+                }
+                eprintln!("--- {target} done in {:.1}s ---\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                eprintln!("{target} FAILED: {e:#}");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}
+
+const ALL: &[&str] = &[
+    "devices", "fig2", "fig3", "fig4a", "fig4b", "fig5", "fig6", "fig6real", "fig7",
+    "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig16", "table1", "table2",
+    "table3", "appn", "iouring",
+];
+
+fn print_help() {
+    eprintln!(
+        "repro-figures — regenerate the paper's tables and figures\n\
+         usage: repro-figures [--quick|--full] [--out DIR] <target>...\n\
+         targets: {} all",
+        ALL.join(" ")
+    );
+}

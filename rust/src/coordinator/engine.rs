@@ -1,0 +1,849 @@
+//! The per-matrix sparsification pipeline (§3) over real XLA execution.
+//!
+//! For every weight matrix, per frame:
+//!   score input activation → (apply offline-reorder permutation) →
+//!   chunk-select under the latency model → read selected rows from flash
+//!   → gather activations → zero-pad to the compiled budget bucket →
+//!   execute the AOT artifact.
+//!
+//! A transformer block runs as four such stages (qkv+attention, o-proj,
+//! gate/up, down-proj), matching the paper's "once per weight matrix,
+//! ~200 times per frame" runtime structure. K/V reuse Q's mask and Up
+//! reuses Gate's (they share input activations — Appendix A).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy, StageTimer};
+use crate::latency::{Chunk, LatencyTable};
+use crate::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+use crate::reorder::HotColdReorder;
+use crate::runtime::{Manifest, ModelMeta, Tensor, XlaRuntime};
+use crate::sparsify::{SelectionMask, Selector};
+use crate::storage::{DeviceProfile, ProfileConfig, Profiler, SimulatedSsd};
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Runnable model name ("tiny" | "small" | "base").
+    pub model: String,
+    /// Device profile for the simulated flash.
+    pub profile: DeviceProfile,
+    /// Selection policy.
+    pub policy: Policy,
+    /// Effective sparsity in [0, 1): fraction of rows *dropped* per matrix.
+    pub sparsity: f64,
+    /// Concurrent streams (each gets its own KV caches).
+    pub streams: usize,
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    pub fn new(model: &str, policy: Policy, sparsity: f64) -> Self {
+        Self {
+            model: model.to_string(),
+            profile: DeviceProfile::nano(),
+            policy,
+            sparsity,
+            streams: 1,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-call stage accounting (one frame append or decode step).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageStats {
+    /// Flash service time (virtual for simulated devices).
+    pub io: Duration,
+    /// XLA execution wall time.
+    pub compute: Duration,
+    /// Selection-algorithm wall time.
+    pub select: Duration,
+    /// Host gather/pad/norm wall time.
+    pub host: Duration,
+    pub bytes_loaded: u64,
+    /// Retained / total importance this call (accuracy proxy).
+    pub importance_kept: f64,
+    pub importance_total: f64,
+}
+
+impl StageStats {
+    pub fn end_to_end(&self) -> Duration {
+        self.io + self.compute + self.select + self.host
+    }
+
+    pub fn retained_fraction(&self) -> f64 {
+        if self.importance_total <= 0.0 {
+            1.0
+        } else {
+            self.importance_kept / self.importance_total
+        }
+    }
+
+    /// Merge another call's stats (used by aggregating drivers).
+    pub fn absorb(&mut self, other: &StageStats) {
+        self.io += other.io;
+        self.compute += other.compute;
+        self.select += other.select;
+        self.host += other.host;
+        self.bytes_loaded += other.bytes_loaded;
+        self.importance_kept += other.importance_kept;
+        self.importance_total += other.importance_total;
+    }
+}
+
+/// The serving engine.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    runtime: XlaRuntime,
+    meta: ModelMeta,
+    spec: ModelSpec,
+    store: WeightStore,
+    device: SimulatedSsd,
+    /// Byte-keyed latency table (re-keyed per matrix row size on use).
+    table: LatencyTable,
+    selector: Option<Box<dyn Selector>>,
+    /// KV caches: [stream][layer].
+    kvs: Vec<Vec<KvCache>>,
+    /// Optional hot-neuron cache (§5 memory-budget extension).
+    neuron_cache: Option<HotNeuronCache>,
+    pub metrics: Metrics,
+}
+
+impl Engine {
+    /// Build an engine, generating + "flashing" the model weights.
+    pub fn new(cfg: EngineConfig, artifact_dir: &Path) -> Result<Self> {
+        let runtime = XlaRuntime::open(artifact_dir)?;
+        let meta = runtime
+            .manifest
+            .model(&cfg.model)
+            .with_context(|| format!("model {} not in manifest", cfg.model))?
+            .clone();
+        let spec = ModelSpec::by_name(&cfg.model)
+            .with_context(|| format!("unknown model {}", cfg.model))?;
+        anyhow::ensure!(spec.runnable, "engine needs a runnable model");
+        anyhow::ensure!(
+            spec.d == meta.d && spec.h == meta.h && spec.layers == meta.layers,
+            "rust spec / python manifest dimension mismatch"
+        );
+        let store = WeightStore::new(spec.clone(), false, cfg.seed);
+        let device =
+            SimulatedSsd::with_image(cfg.profile.clone(), store.build_image(), cfg.seed ^ 0xD1CE);
+
+        // Profile T[s] against an unbounded twin of the device (the
+        // analytical model is capacity-independent).
+        let probe = SimulatedSsd::timing_only(cfg.profile.clone(), 1 << 40, cfg.seed ^ 0xBEEF);
+        let sat = cfg.profile.saturation_bytes(0.99);
+        let table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024)).build_table()?;
+
+        let selector = cfg.policy.selector();
+        let kvs = (0..cfg.streams.max(1))
+            .map(|_| {
+                (0..spec.layers)
+                    .map(|_| KvCache::new(spec.cache_slots, spec.d))
+                    .collect()
+            })
+            .collect();
+        Ok(Self {
+            cfg,
+            runtime,
+            meta,
+            spec,
+            store,
+            device,
+            table,
+            selector,
+            kvs,
+            neuron_cache: None,
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    pub fn latency_table(&self) -> &LatencyTable {
+        &self.table
+    }
+
+    /// Pre-compile all artifacts (avoids first-request compile stalls).
+    pub fn warmup(&self) -> Result<usize> {
+        self.runtime.warmup(&self.cfg.model)
+    }
+
+    /// Run `frames` dense calibration passes, build hot–cold permutations
+    /// per scored matrix, bake them into the flash layout, and clear KV
+    /// state. Call before serving (offline step in the paper).
+    pub fn calibrate_and_reorder(&mut self, frames: &[Vec<f32>]) -> Result<()> {
+        // Collect importance samples with a dense temporary pass.
+        let mut samples: HashMap<(usize, MatrixKind), Vec<Vec<f32>>> = HashMap::new();
+        for f in frames {
+            let collected = self.forward_collect(0, f)?;
+            for (key, imp) in collected {
+                samples.entry(key).or_default().push(imp);
+            }
+        }
+        // Build + install permutations, then rebuild the flash image.
+        for layer in 0..self.spec.layers {
+            for kind in MatrixKind::SCORED {
+                let rows = self.spec.shape_of(kind).rows;
+                if let Some(s) = samples.get(&(layer, kind)) {
+                    let perm = HotColdReorder.build(s, rows);
+                    for member in MatrixKind::ALL {
+                        if member.mask_source() == kind {
+                            self.store
+                                .set_permutation(MatrixId::new(layer, member), perm.clone());
+                        }
+                    }
+                }
+            }
+        }
+        self.device = SimulatedSsd::with_image(
+            self.cfg.profile.clone(),
+            self.store.build_image(),
+            self.cfg.seed ^ 0xD1CE,
+        );
+        self.reset_streams();
+        Ok(())
+    }
+
+    /// Install a hot-neuron cache built from calibration frequencies.
+    pub fn set_neuron_cache(&mut self, cache: HotNeuronCache) {
+        self.neuron_cache = Some(cache);
+    }
+
+    pub fn reset_streams(&mut self) {
+        for stream in &mut self.kvs {
+            for kv in stream {
+                kv.clear();
+            }
+        }
+    }
+
+    /// Dense forward that records per-(layer, scored-kind) importance —
+    /// the calibration pass. Does not touch KV caches.
+    fn forward_collect(
+        &self,
+        _stream: usize,
+        frame: &[f32],
+    ) -> Result<Vec<((usize, MatrixKind), Vec<f32>)>> {
+        let t = self.meta.t;
+        let d = self.meta.d;
+        anyhow::ensure!(frame.len() == t * d, "frame must be [T, d]");
+        let mut out = Vec::new();
+        let mut x = frame.to_vec();
+        let empty_k = KvCache::new(self.spec.cache_slots, d);
+        for layer in 0..self.spec.layers {
+            let hn = rmsnorm(&x, t, d);
+            out.push(((layer, MatrixKind::Q), col_importance(&hn, t, d)));
+            // Dense stage executions (full buckets, identity gather).
+            let (attn, _k, _v) = self.exec_qkv(layer, &hn, t, &empty_k, &full_mask(d))?;
+            out.push(((layer, MatrixKind::O), col_importance(&attn, t, d)));
+            let x1 = self.exec_projres(layer, MatrixKind::O, &attn, t, &x, &full_mask(d))?;
+            let hn2 = rmsnorm(&x1, t, d);
+            out.push(((layer, MatrixKind::Gate), col_importance(&hn2, t, d)));
+            let act = self.exec_gateup(layer, &hn2, t, &full_mask(d))?;
+            let h = self.meta.h;
+            out.push(((layer, MatrixKind::Down), col_importance(&act, t, h)));
+            x = self.exec_projres(layer, MatrixKind::Down, &act, t, &x1, &full_mask(h))?;
+        }
+        Ok(out)
+    }
+
+    /// Append one frame of token embeddings (`[T, d]` row-major) on a
+    /// stream; returns the output hidden states and stage stats.
+    pub fn append_frame(&mut self, stream: usize, frame: &[f32]) -> Result<(Vec<f32>, StageStats)> {
+        let t = self.meta.t;
+        anyhow::ensure!(
+            frame.len() == t * self.meta.d,
+            "frame must be [T={}, d={}]",
+            t,
+            self.meta.d
+        );
+        self.forward(stream, frame, t)
+    }
+
+    /// Decode one token (`[1, d]` embedding) on a stream.
+    pub fn decode_step(&mut self, stream: usize, token: &[f32]) -> Result<(Vec<f32>, StageStats)> {
+        anyhow::ensure!(token.len() == self.meta.d, "token must be [d]");
+        anyhow::ensure!(
+            !self.kvs[stream].iter().all(|kv| kv.is_empty()),
+            "decode requires a non-empty KV cache (append a frame first)"
+        );
+        self.forward(stream, token, 1)
+    }
+
+    fn forward(&mut self, stream: usize, input: &[f32], t: usize) -> Result<(Vec<f32>, StageStats)> {
+        anyhow::ensure!(stream < self.kvs.len(), "bad stream {stream}");
+        let d = self.meta.d;
+        let h = self.meta.h;
+        let mut stats = StageStats::default();
+        let mut x = input.to_vec();
+        for layer in 0..self.spec.layers {
+            // --- qkv + attention ---
+            let timer = StageTimer::start();
+            let hn = rmsnorm(&x, t, d);
+            let imp = col_importance(&hn, t, d);
+            stats.host += timer.stop(&mut self.metrics, "host");
+            let sel = self.select(layer, MatrixKind::Q, &imp, &mut stats);
+            let (attn, k, v) = {
+                let (xs, weights, bucket, _io) =
+                    self.load_group(layer, MatrixKind::Q, &hn, t, &sel, &mut stats)?;
+                let timer = StageTimer::start();
+                let kv = &self.kvs[stream][layer];
+                let (kc, vc, mask) = kv.tensors();
+                let name = self.artifact("qkv", t, bucket);
+                let out = self.runtime.execute(
+                    &name,
+                    &[
+                        Tensor::new(vec![t, bucket], xs),
+                        Tensor::new(vec![bucket, d], weights[0].clone()),
+                        Tensor::new(vec![bucket, d], weights[1].clone()),
+                        Tensor::new(vec![bucket, d], weights[2].clone()),
+                        kc,
+                        vc,
+                        mask,
+                    ],
+                )?;
+                stats.compute += timer.stop(&mut self.metrics, "compute");
+                (out[0].data.clone(), out[1].data.clone(), out[2].data.clone())
+            };
+            self.kvs[stream][layer].append(&k, &v);
+
+            // --- o projection + residual ---
+            let timer = StageTimer::start();
+            let imp = col_importance(&attn, t, d);
+            stats.host += timer.stop(&mut self.metrics, "host");
+            let sel = self.select(layer, MatrixKind::O, &imp, &mut stats);
+            let x1 = self.run_projres(layer, MatrixKind::O, &attn, t, &x, &sel, &mut stats)?;
+
+            // --- gate/up (SwiGLU) ---
+            let timer = StageTimer::start();
+            let hn2 = rmsnorm(&x1, t, d);
+            let imp = col_importance(&hn2, t, d);
+            stats.host += timer.stop(&mut self.metrics, "host");
+            let sel = self.select(layer, MatrixKind::Gate, &imp, &mut stats);
+            let act = {
+                let (xs, weights, bucket, _io) =
+                    self.load_group(layer, MatrixKind::Gate, &hn2, t, &sel, &mut stats)?;
+                let timer = StageTimer::start();
+                let name = self.artifact("gateup", t, bucket);
+                let out = self.runtime.execute(
+                    &name,
+                    &[
+                        Tensor::new(vec![t, bucket], xs),
+                        Tensor::new(vec![bucket, h], weights[0].clone()),
+                        Tensor::new(vec![bucket, h], weights[1].clone()),
+                    ],
+                )?;
+                stats.compute += timer.stop(&mut self.metrics, "compute");
+                out[0].data.clone()
+            };
+
+            // --- down projection + residual ---
+            let timer = StageTimer::start();
+            let imp = col_importance(&act, t, h);
+            stats.host += timer.stop(&mut self.metrics, "host");
+            let sel = self.select(layer, MatrixKind::Down, &imp, &mut stats);
+            x = self.run_projres(layer, MatrixKind::Down, &act, t, &x1, &sel, &mut stats)?;
+        }
+        self.metrics.add_bytes("io", stats.bytes_loaded);
+        Ok((x, stats))
+    }
+
+    /// Run the selection policy for one scored matrix.
+    fn select(
+        &mut self,
+        layer: usize,
+        kind: MatrixKind,
+        importance_logical: &[f32],
+        stats: &mut StageStats,
+    ) -> SelectionMask {
+        let rows = importance_logical.len();
+        let timer = StageTimer::start();
+        // Move importance into physical (reordered) row space.
+        let id = MatrixId::new(layer, kind);
+        let mut imp: Vec<f32> = match self.store.permutation(id) {
+            Some(p) => p.apply(importance_logical),
+            None => importance_logical.to_vec(),
+        };
+        let total: f64 = imp.iter().map(|&v| v as f64).sum();
+        // Cached rows are free: zero their importance pre-selection (§5).
+        if let Some(cache) = &self.neuron_cache {
+            cache.zero_cached(id, &mut imp);
+        }
+        let budget = ((1.0 - self.cfg.sparsity) * rows as f64).round() as usize;
+        let sel = match &self.selector {
+            None => SelectionMask::full(rows),
+            Some(s) => {
+                let row_bytes = self.spec.row_bytes(kind);
+                let table = self.table.with_row_bytes(row_bytes);
+                s.select(&imp, budget, &table)
+            }
+        };
+        stats.select += timer.stop(&mut self.metrics, "select");
+        stats.importance_total += total;
+        stats.importance_kept += sel.captured_importance(&imp);
+        if let Some(cache) = &self.neuron_cache {
+            stats.importance_kept += cache.cached_importance(id, importance_logical, self.store.permutation(id));
+        }
+        sel
+    }
+
+    /// Load all matrices of the selection group led by `kind`, gather the
+    /// activations, pad to the compiled bucket. Returns (xs, per-member
+    /// weights, bucket, io-time).
+    fn load_group(
+        &mut self,
+        layer: usize,
+        kind: MatrixKind,
+        acts: &[f32],
+        t: usize,
+        sel: &SelectionMask,
+        stats: &mut StageStats,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>, usize, Duration)> {
+        let members: Vec<MatrixKind> = MatrixKind::ALL
+            .into_iter()
+            .filter(|m| m.mask_source() == kind)
+            .collect();
+        let in_rows = self.spec.shape_of(kind).rows;
+
+        // Union of selected + cached rows (sorted, physical space).
+        let id0 = MatrixId::new(layer, kind);
+        let mut phys_rows: Vec<usize> = sel.indices();
+        let mut flash_chunks: Vec<Chunk> = sel.chunks.clone();
+        if let Some(cache) = &self.neuron_cache {
+            let cached = cache.cached_rows(id0);
+            if !cached.is_empty() {
+                let selset: Vec<bool> = {
+                    let mut v = vec![false; in_rows];
+                    for &r in &phys_rows {
+                        v[r] = true;
+                    }
+                    v
+                };
+                for &r in cached {
+                    if !selset[r] {
+                        phys_rows.push(r);
+                    }
+                }
+                phys_rows.sort_unstable();
+                // Flash reads exclude cached rows.
+                flash_chunks = sel
+                    .chunks
+                    .iter()
+                    .flat_map(|c| cache.subtract_cached(id0, *c))
+                    .collect();
+            }
+        }
+
+        let buckets = if kind == MatrixKind::Down {
+            &self.meta.h_buckets
+        } else {
+            &self.meta.d_buckets
+        };
+        let bucket = ModelMeta::bucket_for(buckets, phys_rows.len());
+
+        // Gather activations: xs[:, j] = acts[:, logical(phys_rows[j])].
+        let timer = StageTimer::start();
+        let perm = self.store.permutation(id0);
+        let mut xs = vec![0.0f32; t * bucket];
+        for (j, &p) in phys_rows.iter().enumerate() {
+            let logical = perm.map(|pm| pm.old_of(p)).unwrap_or(p);
+            for ti in 0..t {
+                xs[ti * bucket + j] = acts[ti * in_rows + logical];
+            }
+        }
+        stats.host += timer.stop(&mut self.metrics, "host");
+
+        // Load each member matrix: flash for selected, RAM for cached.
+        let mut weights = Vec::with_capacity(members.len());
+        let mut io_total = Duration::ZERO;
+        for m in &members {
+            let id = MatrixId::new(layer, *m);
+            let cols = self.spec.shape_of(*m).cols;
+            let (flash_rows, io) = self.store.read_rows(&self.device, id, &flash_chunks)?;
+            io_total += io;
+            let flash_bytes: u64 = flash_chunks
+                .iter()
+                .map(|c| (c.len * self.store.layout.row_bytes(id)) as u64)
+                .sum();
+            stats.bytes_loaded += flash_bytes;
+
+            let timer = StageTimer::start();
+            let mut w = vec![0.0f32; bucket * cols];
+            // Merge scan: both `phys_rows` and the flash chunk rows are
+            // ascending, so one forward pass pairs them without a hash
+            // map (§Perf: the per-matrix HashMap was measurable on the
+            // gather path).
+            let mut flash_iter = flash_chunks
+                .iter()
+                .flat_map(|c| c.start..c.end())
+                .enumerate()
+                .peekable();
+            for (j, &p) in phys_rows.iter().enumerate() {
+                while matches!(flash_iter.peek(), Some(&(_, r)) if r < p) {
+                    flash_iter.next();
+                }
+                if let Some(&(fpos, r)) = flash_iter.peek() {
+                    if r == p {
+                        w[j * cols..(j + 1) * cols]
+                            .copy_from_slice(&flash_rows[fpos * cols..(fpos + 1) * cols]);
+                        flash_iter.next();
+                        continue;
+                    }
+                }
+                if let Some(cache) = &self.neuron_cache {
+                    if let Some(row) = cache.row_data(id, p) {
+                        w[j * cols..(j + 1) * cols].copy_from_slice(row);
+                    }
+                }
+            }
+            stats.host += timer.stop(&mut self.metrics, "host");
+            weights.push(w);
+        }
+        stats.io += io_total;
+        self.metrics.add("io", io_total);
+        Ok((xs, weights, bucket, io_total))
+    }
+
+    fn run_projres(
+        &mut self,
+        layer: usize,
+        kind: MatrixKind,
+        acts: &[f32],
+        t: usize,
+        residual: &[f32],
+        sel: &SelectionMask,
+        stats: &mut StageStats,
+    ) -> Result<Vec<f32>> {
+        let d = self.meta.d;
+        let (xs, weights, bucket, _io) = self.load_group(layer, kind, acts, t, sel, stats)?;
+        let timer = StageTimer::start();
+        let name = self.artifact("projres", t, bucket);
+        let out = self.runtime.execute(
+            &name,
+            &[
+                Tensor::new(vec![t, bucket], xs),
+                Tensor::new(vec![bucket, d], weights[0].clone()),
+                Tensor::new(vec![t, d], residual.to_vec()),
+            ],
+        )?;
+        stats.compute += timer.stop(&mut self.metrics, "compute");
+        Ok(out[0].data.clone())
+    }
+
+    /// Dense helpers used by the calibration pass.
+    fn exec_qkv(
+        &self,
+        layer: usize,
+        hn: &[f32],
+        t: usize,
+        kv: &KvCache,
+        sel: &SelectionMask,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let d = self.meta.d;
+        let load = |m: MatrixKind| -> Result<Vec<f32>> {
+            let id = MatrixId::new(layer, m);
+            let (rows, _) = self.store.read_rows(&self.device, id, &sel.chunks)?;
+            Ok(rows)
+        };
+        let (kc, vc, mask) = kv.tensors();
+        let name = self.artifact("qkv", t, d);
+        let out = self.runtime.execute(
+            &name,
+            &[
+                Tensor::new(vec![t, d], hn.to_vec()),
+                Tensor::new(vec![d, d], load(MatrixKind::Q)?),
+                Tensor::new(vec![d, d], load(MatrixKind::K)?),
+                Tensor::new(vec![d, d], load(MatrixKind::V)?),
+                kc,
+                vc,
+                mask,
+            ],
+        )?;
+        Ok((out[0].data.clone(), out[1].data.clone(), out[2].data.clone()))
+    }
+
+    fn exec_gateup(&self, layer: usize, hn: &[f32], t: usize, sel: &SelectionMask) -> Result<Vec<f32>> {
+        let d = self.meta.d;
+        let h = self.meta.h;
+        let gate = self
+            .store
+            .read_rows(&self.device, MatrixId::new(layer, MatrixKind::Gate), &sel.chunks)?
+            .0;
+        let up = self
+            .store
+            .read_rows(&self.device, MatrixId::new(layer, MatrixKind::Up), &sel.chunks)?
+            .0;
+        let name = self.artifact("gateup", t, d);
+        let out = self.runtime.execute(
+            &name,
+            &[
+                Tensor::new(vec![t, d], hn.to_vec()),
+                Tensor::new(vec![d, h], gate),
+                Tensor::new(vec![d, h], up),
+            ],
+        )?;
+        Ok(out[0].data.clone())
+    }
+
+    fn exec_projres(
+        &self,
+        layer: usize,
+        kind: MatrixKind,
+        acts: &[f32],
+        t: usize,
+        residual: &[f32],
+        sel: &SelectionMask,
+    ) -> Result<Vec<f32>> {
+        let d = self.meta.d;
+        let rows = self.spec.shape_of(kind).rows;
+        let w = self
+            .store
+            .read_rows(&self.device, MatrixId::new(layer, kind), &sel.chunks)?
+            .0;
+        let name = self.artifact("projres", t, rows);
+        let out = self.runtime.execute(
+            &name,
+            &[
+                Tensor::new(vec![t, rows], acts.to_vec()),
+                Tensor::new(vec![rows, d], w),
+                Tensor::new(vec![t, d], residual.to_vec()),
+            ],
+        )?;
+        Ok(out[0].data.clone())
+    }
+
+    fn artifact(&self, base: &str, t: usize, bucket: usize) -> String {
+        let kind = match (base, t) {
+            ("qkv", 1) => "qkv_decode".to_string(),
+            ("qkv", _) => "qkv_append".to_string(),
+            (b, 1) => format!("{b}_dec"),
+            (b, _) => b.to_string(),
+        };
+        Manifest::artifact_name(&kind, &self.cfg.model, bucket)
+    }
+}
+
+/// Scale-free RMSNorm over each of `t` rows of width `d` (host-side; the
+/// coordinator needs the values for scoring anyway).
+pub fn rmsnorm(x: &[f32], t: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; t * d];
+    for ti in 0..t {
+        let row = &x[ti * d..(ti + 1) * d];
+        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for (o, &v) in out[ti * d..(ti + 1) * d].iter_mut().zip(row) {
+            *o = (v as f64 * inv) as f32;
+        }
+    }
+    out
+}
+
+/// Mean |activation| per column over `t` tokens (§B.2's multi-token
+/// importance).
+pub fn col_importance(x: &[f32], t: usize, d: usize) -> Vec<f32> {
+    let mut imp = vec![0.0f32; d];
+    for ti in 0..t {
+        for j in 0..d {
+            imp[j] += x[ti * d + j].abs();
+        }
+    }
+    let inv = 1.0 / t as f32;
+    imp.iter_mut().for_each(|v| *v *= inv);
+    imp
+}
+
+fn full_mask(n: usize) -> SelectionMask {
+    SelectionMask::full(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Policy;
+    use crate::sparsify::ChunkSelectConfig;
+    use crate::workload::FrameTrace;
+
+    fn artifact_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn frame(spec: &ModelSpec, idx: usize) -> Vec<f32> {
+        FrameTrace::new(spec.d, spec.tokens_per_frame, 8, 7).frame(idx)
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let x: Vec<f32> = (0..128).map(|i| (i as f32 - 64.0) * 0.3).collect();
+        let out = rmsnorm(&x, 2, 64);
+        for ti in 0..2 {
+            let ms: f64 = out[ti * 64..(ti + 1) * 64]
+                .iter()
+                .map(|&v| (v as f64).powi(2))
+                .sum::<f64>()
+                / 64.0;
+            assert!((ms - 1.0).abs() < 1e-3, "rms {ms}");
+        }
+    }
+
+    #[test]
+    fn col_importance_means_abs() {
+        let x = vec![1.0f32, -2.0, 3.0, -4.0]; // t=2, d=2
+        let imp = col_importance(&x, 2, 2);
+        assert_eq!(imp, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn dense_engine_runs_and_is_deterministic() {
+        let cfg = EngineConfig::new("tiny", Policy::Dense, 0.0);
+        let mut e1 = Engine::new(cfg.clone(), &artifact_dir()).unwrap();
+        let mut e2 = Engine::new(cfg, &artifact_dir()).unwrap();
+        let f = frame(e1.spec(), 0);
+        let (y1, s1) = e1.append_frame(0, &f).unwrap();
+        let (y2, _) = e2.append_frame(0, &f).unwrap();
+        assert_eq!(y1, y2);
+        assert!(s1.io > Duration::ZERO);
+        assert!(s1.compute > Duration::ZERO);
+        assert_eq!(s1.bytes_loaded, e1.spec().total_bytes());
+        assert!((s1.retained_fraction() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparsified_output_close_to_dense() {
+        let dir = artifact_dir();
+        let f;
+        let dense_out;
+        {
+            let mut dense = Engine::new(EngineConfig::new("tiny", Policy::Dense, 0.0), &dir).unwrap();
+            f = frame(dense.spec(), 1);
+            dense_out = dense.append_frame(0, &f).unwrap().0;
+        }
+        let mut sparse = Engine::new(
+            EngineConfig::new("tiny", Policy::TopK, 0.25),
+            &dir,
+        )
+        .unwrap();
+        let (sparse_out, stats) = sparse.append_frame(0, &f).unwrap();
+        assert!(stats.bytes_loaded < sparse.spec().total_bytes());
+        assert!(stats.retained_fraction() < 1.0);
+        assert!(stats.retained_fraction() > 0.6);
+        // Output error bounded relative to signal.
+        let err: f64 = dense_out
+            .iter()
+            .zip(&sparse_out)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let norm: f64 = dense_out.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(err / norm < 0.5, "rel err {}", err / norm);
+    }
+
+    #[test]
+    fn chunking_loads_fewer_chunks_than_topk() {
+        let dir = artifact_dir();
+        let mk = |policy| {
+            let mut cfg = EngineConfig::new("tiny", policy, 0.4);
+            cfg.seed = 9;
+            Engine::new(cfg, &dir).unwrap()
+        };
+        let mut topk = mk(Policy::TopK);
+        let mut chunk = mk(Policy::Chunking {
+            config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+        });
+        let f = frame(topk.spec(), 2);
+        let (_, st) = topk.append_frame(0, &f).unwrap();
+        let (_, sc) = chunk.append_frame(0, &f).unwrap();
+        assert!(
+            sc.io <= st.io,
+            "chunking io {:?} should not exceed topk {:?}",
+            sc.io,
+            st.io
+        );
+    }
+
+    #[test]
+    fn decode_after_append() {
+        let mut e = Engine::new(EngineConfig::new("tiny", Policy::TopK, 0.3), &artifact_dir()).unwrap();
+        let f = frame(e.spec(), 0);
+        e.append_frame(0, &f).unwrap();
+        let token = vec![0.1f32; e.spec().d];
+        let (y, stats) = e.decode_step(0, &token).unwrap();
+        assert_eq!(y.len(), e.spec().d);
+        assert!(stats.io > Duration::ZERO);
+    }
+
+    #[test]
+    fn decode_without_append_rejected() {
+        let mut e = Engine::new(EngineConfig::new("tiny", Policy::Dense, 0.0), &artifact_dir()).unwrap();
+        let token = vec![0.1f32; e.spec().d];
+        assert!(e.decode_step(0, &token).is_err());
+    }
+
+    #[test]
+    fn streams_are_isolated() {
+        let mut cfg = EngineConfig::new("tiny", Policy::Dense, 0.0);
+        cfg.streams = 2;
+        let mut e = Engine::new(cfg, &artifact_dir()).unwrap();
+        let f0 = frame(e.spec(), 0);
+        let f1 = frame(e.spec(), 5);
+        // Stream 1 state must not affect stream 0's output.
+        let y_a = e.append_frame(0, &f0).unwrap().0;
+        e.reset_streams();
+        e.append_frame(1, &f1).unwrap();
+        let y_b = e.append_frame(0, &f0).unwrap().0;
+        assert_eq!(y_a, y_b);
+    }
+
+    #[test]
+    fn reorder_preserves_dense_output() {
+        let dir = artifact_dir();
+        let cfg = EngineConfig::new("tiny", Policy::Dense, 0.0);
+        let mut plain = Engine::new(cfg.clone(), &dir).unwrap();
+        let mut reordered = Engine::new(cfg, &dir).unwrap();
+        let calib: Vec<Vec<f32>> = (0..3).map(|i| frame(plain.spec(), i)).collect();
+        reordered.calibrate_and_reorder(&calib).unwrap();
+        let f = frame(plain.spec(), 6);
+        let (a, _) = plain.append_frame(0, &f).unwrap();
+        let (b, _) = reordered.append_frame(0, &f).unwrap();
+        // Dense compute is permutation-invariant: outputs must match to
+        // float tolerance (summation order changes).
+        let max_err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "reorder changed dense output by {max_err}");
+    }
+
+    #[test]
+    fn reorder_improves_topk_contiguity_bytes() {
+        // With reordering, top-k selections form fewer/larger chunks, so
+        // simulated io time should not get worse.
+        let dir = artifact_dir();
+        let cfg = EngineConfig::new("tiny", Policy::TopK, 0.4);
+        let mut plain = Engine::new(cfg.clone(), &dir).unwrap();
+        let mut reordered = Engine::new(cfg, &dir).unwrap();
+        let calib: Vec<Vec<f32>> = (0..4).map(|i| frame(plain.spec(), i)).collect();
+        reordered.calibrate_and_reorder(&calib).unwrap();
+        let f = frame(plain.spec(), 7);
+        let (_, sp) = plain.append_frame(0, &f).unwrap();
+        let (_, sr) = reordered.append_frame(0, &f).unwrap();
+        assert!(
+            sr.io.as_secs_f64() <= sp.io.as_secs_f64() * 1.05,
+            "reordered io {:?} vs plain {:?}",
+            sr.io,
+            sp.io
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Per-stream KV cache: fixed-capacity ring over C slots, exported as the
+//! flat `[C, d]` tensors + validity mask the XLA artifacts expect.
+//! Attention is permutation-invariant over slots, so ring overwrites need
+//! no compaction.
+
+use crate::runtime::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    capacity: usize,
+    dim: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    mask: Vec<f32>,
+    cursor: usize,
+    filled: usize,
+    /// Total tokens ever appended (including overwritten).
+    appended: u64,
+}
+
+impl KvCache {
+    pub fn new(capacity: usize, dim: usize) -> Self {
+        Self {
+            capacity,
+            dim,
+            k: vec![0.0; capacity * dim],
+            v: vec![0.0; capacity * dim],
+            mask: vec![0.0; capacity],
+            cursor: 0,
+            filled: 0,
+            appended: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn appended(&self) -> u64 {
+        self.appended
+    }
+
+    /// Append `t` tokens of K/V (row-major [t, dim]); overwrites oldest
+    /// slots when full.
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), v.len());
+        assert_eq!(k.len() % self.dim, 0);
+        let t = k.len() / self.dim;
+        for i in 0..t {
+            let slot = self.cursor;
+            self.k[slot * self.dim..(slot + 1) * self.dim]
+                .copy_from_slice(&k[i * self.dim..(i + 1) * self.dim]);
+            self.v[slot * self.dim..(slot + 1) * self.dim]
+                .copy_from_slice(&v[i * self.dim..(i + 1) * self.dim]);
+            self.mask[slot] = 1.0;
+            self.cursor = (self.cursor + 1) % self.capacity;
+            self.filled = (self.filled + 1).min(self.capacity);
+            self.appended += 1;
+        }
+    }
+
+    /// Export as (k, v, mask) tensors for the XLA artifacts.
+    pub fn tensors(&self) -> (Tensor, Tensor, Tensor) {
+        (
+            Tensor::new(vec![self.capacity, self.dim], self.k.clone()),
+            Tensor::new(vec![self.capacity, self.dim], self.v.clone()),
+            Tensor::new(vec![self.capacity], self.mask.clone()),
+        )
+    }
+
+    pub fn clear(&mut self) {
+        self.k.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.mask.iter_mut().for_each(|x| *x = 0.0);
+        self.cursor = 0;
+        self.filled = 0;
+        self.appended = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_mask() {
+        let mut kv = KvCache::new(4, 2);
+        assert!(kv.is_empty());
+        kv.append(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(kv.len(), 2);
+        let (k, _v, m) = kv.tensors();
+        assert_eq!(&k.data[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.data, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut kv = KvCache::new(2, 1);
+        kv.append(&[1.0], &[10.0]);
+        kv.append(&[2.0], &[20.0]);
+        kv.append(&[3.0], &[30.0]); // overwrites slot 0
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.appended(), 3);
+        let (k, v, m) = kv.tensors();
+        assert_eq!(k.data, vec![3.0, 2.0]);
+        assert_eq!(v.data, vec![30.0, 20.0]);
+        assert_eq!(m.data, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn multi_token_append_wraps() {
+        let mut kv = KvCache::new(3, 1);
+        kv.append(&[1.0, 2.0, 3.0, 4.0], &[0.0; 4]);
+        let (k, _, m) = kv.tensors();
+        // 4 appends into 3 slots: slot0 overwritten by token 3 (value 4).
+        assert_eq!(k.data, vec![4.0, 2.0, 3.0]);
+        assert_eq!(m.data, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut kv = KvCache::new(2, 2);
+        kv.append(&[1.0, 1.0], &[1.0, 1.0]);
+        kv.clear();
+        assert!(kv.is_empty());
+        assert_eq!(kv.tensors().2.data, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Per-stage metrics: the latency-breakdown accounting behind Fig 8.
+//!
+//! I/O time is *virtual* when the flash device is simulated (the device
+//! returns modeled service time) and wall-clock against real files;
+//! compute/select/gather times are always wall-clock. The engine sums
+//! them into an end-to-end latency the same way the paper's breakdown
+//! does.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulated counters per named stage.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+    bytes: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, stage: &str, d: Duration) {
+        *self.totals.entry(stage.to_string()).or_default() += d;
+        *self.counts.entry(stage.to_string()).or_default() += 1;
+    }
+
+    pub fn add_bytes(&mut self, stage: &str, n: u64) {
+        *self.bytes.entry(stage.to_string()).or_default() += n;
+    }
+
+    pub fn total(&self, stage: &str) -> Duration {
+        self.totals.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, stage: &str) -> u64 {
+        self.counts.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn bytes(&self, stage: &str) -> u64 {
+        self.bytes.get(stage).copied().unwrap_or_default()
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.totals.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Merge another metrics block into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.bytes {
+            *self.bytes.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.totals.clear();
+        self.counts.clear();
+        self.bytes.clear();
+    }
+
+    /// Sum of all stage durations (end-to-end latency proxy).
+    pub fn grand_total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+}
+
+/// RAII-less explicit stage timer (wall clock).
+pub struct StageTimer {
+    start: Instant,
+}
+
+impl StageTimer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn stop(self, metrics: &mut Metrics, stage: &str) -> Duration {
+        let d = self.start.elapsed();
+        metrics.add(stage, d);
+        d
+    }
+}
+
+impl Default for StageTimer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut m = Metrics::new();
+        m.add("io", Duration::from_millis(5));
+        m.add("io", Duration::from_millis(7));
+        m.add("compute", Duration::from_millis(3));
+        assert_eq!(m.total("io"), Duration::from_millis(12));
+        assert_eq!(m.count("io"), 2);
+        assert_eq!(m.grand_total(), Duration::from_millis(15));
+        assert_eq!(m.total("nope"), Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Metrics::new();
+        a.add("x", Duration::from_secs(1));
+        a.add_bytes("x", 100);
+        let mut b = Metrics::new();
+        b.add("x", Duration::from_secs(2));
+        b.add("y", Duration::from_secs(3));
+        b.add_bytes("x", 50);
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_secs(3));
+        assert_eq!(a.total("y"), Duration::from_secs(3));
+        assert_eq!(a.bytes("x"), 150);
+    }
+
+    #[test]
+    fn timer_measures() {
+        let mut m = Metrics::new();
+        let t = StageTimer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let d = t.stop(&mut m, "sleep");
+        assert!(d >= Duration::from_millis(2));
+        assert_eq!(m.count("sleep"), 1);
+    }
+}

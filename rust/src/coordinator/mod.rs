@@ -1,0 +1,80 @@
+//! The L3 serving coordinator.
+//!
+//! [`Engine`] drives the per-matrix sparsification pipeline of §3 against
+//! the AOT-compiled XLA artifacts: score activations → (permute) → select
+//! chunks → read rows from flash → gather/pad to a budget bucket →
+//! execute. [`Scheduler`] runs multi-stream frame-append/decode traffic
+//! over one engine with priority batching. [`KvCache`] manages per-stream
+//! attention state. [`HotNeuronCache`] implements the §5 memory-budget
+//! extension (cached rows get zero importance and skip flash).
+
+mod engine;
+mod kv;
+mod metrics;
+mod neuron_cache;
+mod scheduler;
+
+pub use engine::{Engine, EngineConfig, StageStats};
+pub use kv::KvCache;
+pub use metrics::{Metrics, StageTimer};
+pub use neuron_cache::HotNeuronCache;
+pub use scheduler::{Completion, Request, RequestKind, Scheduler, SchedulerConfig};
+
+use crate::sparsify::{Bundling, ChunkSelect, ChunkSelectConfig, Selector, Threshold, TopK};
+
+/// Which selection policy the engine runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    /// No sparsification: every row is loaded from flash (offloaded dense).
+    Dense,
+    /// Magnitude top-k baseline.
+    TopK,
+    /// CATS-style calibrated threshold.
+    Threshold { threshold: f32 },
+    /// The paper's utility-guided chunk selection.
+    Chunking { config: ChunkSelectConfig },
+    /// LLM-in-a-Flash bundling baseline.
+    Bundling { bundle_rows: usize },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Dense => "dense",
+            Policy::TopK => "topk",
+            Policy::Threshold { .. } => "threshold",
+            Policy::Chunking { .. } => "chunking",
+            Policy::Bundling { .. } => "bundling",
+        }
+    }
+
+    /// Instantiate the selector (None for Dense).
+    pub fn selector(&self) -> Option<Box<dyn Selector>> {
+        match self {
+            Policy::Dense => None,
+            Policy::TopK => Some(Box::new(TopK)),
+            Policy::Threshold { threshold } => Some(Box::new(Threshold::new(*threshold))),
+            Policy::Chunking { config } => Some(Box::new(ChunkSelect::new(*config))),
+            Policy::Bundling { bundle_rows } => Some(Box::new(Bundling::new(*bundle_rows))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_selectors() {
+        assert!(Policy::Dense.selector().is_none());
+        assert_eq!(Policy::TopK.selector().unwrap().name(), "topk");
+        let c = Policy::Chunking {
+            config: ChunkSelectConfig::new(8.0, 8.0, 236.0),
+        };
+        assert_eq!(c.selector().unwrap().name(), "chunk_select");
+        assert_eq!(
+            Policy::Bundling { bundle_rows: 2 }.selector().unwrap().name(),
+            "bundling"
+        );
+    }
+}

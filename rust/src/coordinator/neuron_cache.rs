@@ -1,0 +1,269 @@
+//! Hot-neuron caching under a memory budget (§5 "Leveraging Additional
+//! Memory Budget for Caching").
+//!
+//! The cache pins the most frequently activated rows of each matrix in
+//! RAM. Integration with selection is exactly the paper's: cached rows
+//! are assigned zero importance before chunk selection (they cost nothing
+//! to "load"), flash reads subtract cached rows from selected chunks, and
+//! the compute gather serves them from memory.
+
+use std::collections::HashMap;
+
+use crate::latency::Chunk;
+use crate::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+use crate::reorder::Permutation;
+
+#[derive(Default)]
+pub struct HotNeuronCache {
+    /// Cached physical row indices per matrix (sorted).
+    rows: HashMap<MatrixId, Vec<usize>>,
+    /// Fast membership per matrix.
+    member: HashMap<MatrixId, Vec<bool>>,
+    /// Row weight data (runnable models only).
+    data: HashMap<(MatrixId, usize), Vec<f32>>,
+    bytes: u64,
+}
+
+impl HotNeuronCache {
+    /// Build by caching the top-`fraction` most frequent rows of every
+    /// scored group, up to `budget_bytes`. `freqs` maps scored-matrix id →
+    /// per-physical-row activation frequency. Weight data is materialized
+    /// from the store for runnable models.
+    pub fn build(
+        store: &WeightStore,
+        freqs: &HashMap<MatrixId, Vec<f64>>,
+        fraction: f64,
+        budget_bytes: u64,
+        materialize: bool,
+    ) -> Self {
+        let mut cache = Self::default();
+        let spec: &ModelSpec = &store.spec;
+        'outer: for layer in 0..spec.layers {
+            for scored in MatrixKind::SCORED {
+                let sid = MatrixId::new(layer, scored);
+                let Some(freq) = freqs.get(&sid) else { continue };
+                let rows = spec.shape_of(scored).rows;
+                let take = ((rows as f64) * fraction) as usize;
+                let mut order: Vec<usize> = (0..rows).collect();
+                order.sort_by(|&a, &b| freq[b].partial_cmp(&freq[a]).unwrap());
+                let mut chosen: Vec<usize> = order[..take.min(rows)].to_vec();
+                chosen.sort_unstable();
+                // Apply to every member sharing this selection mask.
+                for member in MatrixKind::ALL {
+                    if member.mask_source() != scored {
+                        continue;
+                    }
+                    let id = MatrixId::new(layer, member);
+                    let row_bytes = store.layout.row_bytes(id) as u64;
+                    if cache.bytes + row_bytes * chosen.len() as u64 > budget_bytes {
+                        break 'outer;
+                    }
+                    cache.bytes += row_bytes * chosen.len() as u64;
+                    let mut mask = vec![false; rows];
+                    for &r in &chosen {
+                        mask[r] = true;
+                    }
+                    if materialize {
+                        let cols = spec.shape_of(member).cols;
+                        let logical = store.logical_matrix(id);
+                        for &r in &chosen {
+                            let l = store
+                                .permutation(id)
+                                .map(|p| p.old_of(r))
+                                .unwrap_or(r);
+                            cache
+                                .data
+                                .insert((id, r), logical[l * cols..(l + 1) * cols].to_vec());
+                        }
+                    }
+                    cache.member.insert(id, mask);
+                    cache.rows.insert(id, chosen.clone());
+                }
+            }
+        }
+        cache
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn cached_rows(&self, id: MatrixId) -> &[usize] {
+        self.rows.get(&id).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn is_cached(&self, id: MatrixId, row: usize) -> bool {
+        self.member.get(&id).map(|m| m[row]).unwrap_or(false)
+    }
+
+    /// Zero the importance of cached rows (pre-selection step).
+    pub fn zero_cached(&self, id: MatrixId, importance: &mut [f32]) {
+        if let Some(m) = self.member.get(&id) {
+            for (v, &c) in importance.iter_mut().zip(m) {
+                if c {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Importance captured "for free" by the cache (physical row space
+    /// mapped back through the permutation).
+    pub fn cached_importance(
+        &self,
+        id: MatrixId,
+        importance_logical: &[f32],
+        perm: Option<&Permutation>,
+    ) -> f64 {
+        self.cached_rows(id)
+            .iter()
+            .map(|&p| {
+                let l = perm.map(|pm| pm.old_of(p)).unwrap_or(p);
+                importance_logical[l] as f64
+            })
+            .sum()
+    }
+
+    /// Split a selected chunk into the sub-chunks that still need flash
+    /// reads (cached rows removed).
+    pub fn subtract_cached(&self, id: MatrixId, chunk: Chunk) -> Vec<Chunk> {
+        let Some(mask) = self.member.get(&id) else {
+            return vec![chunk];
+        };
+        let mut out = Vec::new();
+        let mut start = None;
+        for r in chunk.start..chunk.end() {
+            if mask[r] {
+                if let Some(s) = start.take() {
+                    out.push(Chunk::new(s, r - s));
+                }
+            } else if start.is_none() {
+                start = Some(r);
+            }
+        }
+        if let Some(s) = start {
+            out.push(Chunk::new(s, chunk.end() - s));
+        }
+        out
+    }
+
+    pub fn row_data(&self, id: MatrixId, row: usize) -> Option<&[f32]> {
+        self.data.get(&(id, row)).map(|v| v.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    fn store() -> WeightStore {
+        WeightStore::new(ModelSpec::tiny(), false, 5)
+    }
+
+    fn freqs_for(store: &WeightStore) -> HashMap<MatrixId, Vec<f64>> {
+        let mut f = HashMap::new();
+        for layer in 0..store.spec.layers {
+            for kind in MatrixKind::SCORED {
+                let rows = store.spec.shape_of(kind).rows;
+                f.insert(
+                    MatrixId::new(layer, kind),
+                    (0..rows).map(|i| (i % 7) as f64 / 7.0).collect(),
+                );
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn builds_within_budget() {
+        let s = store();
+        let f = freqs_for(&s);
+        let cache = HotNeuronCache::build(&s, &f, 0.25, 1 << 20, false);
+        assert!(cache.bytes() <= 1 << 20);
+        assert!(cache.bytes() > 0);
+    }
+
+    #[test]
+    fn caches_highest_frequency_rows() {
+        let s = store();
+        let f = freqs_for(&s);
+        let cache = HotNeuronCache::build(&s, &f, 0.25, u64::MAX, false);
+        let id = MatrixId::new(0, MatrixKind::Q);
+        let rows = cache.cached_rows(id);
+        assert!(!rows.is_empty());
+        // Rows with freq 6/7 (i % 7 == 6) must be cached first.
+        let freq = &f[&id];
+        let min_cached = rows.iter().map(|&r| freq[r]).fold(1.0f64, f64::min);
+        let max_uncached = (0..s.spec.d)
+            .filter(|&r| !cache.is_cached(id, r))
+            .map(|r| freq[r])
+            .fold(0.0f64, f64::max);
+        assert!(min_cached >= max_uncached);
+    }
+
+    #[test]
+    fn members_share_mask() {
+        let s = store();
+        let f = freqs_for(&s);
+        let cache = HotNeuronCache::build(&s, &f, 0.25, u64::MAX, false);
+        let q = cache.cached_rows(MatrixId::new(0, MatrixKind::Q)).to_vec();
+        let k = cache.cached_rows(MatrixId::new(0, MatrixKind::K)).to_vec();
+        assert_eq!(q, k);
+    }
+
+    #[test]
+    fn zero_cached_zeroes_only_cached() {
+        let s = store();
+        let f = freqs_for(&s);
+        let cache = HotNeuronCache::build(&s, &f, 0.25, u64::MAX, false);
+        let id = MatrixId::new(0, MatrixKind::Q);
+        let mut imp = vec![1.0f32; s.spec.d];
+        cache.zero_cached(id, &mut imp);
+        for (r, &v) in imp.iter().enumerate() {
+            assert_eq!(v == 0.0, cache.is_cached(id, r));
+        }
+    }
+
+    #[test]
+    fn subtract_cached_splits_chunks() {
+        let s = store();
+        let f = freqs_for(&s);
+        let cache = HotNeuronCache::build(&s, &f, 0.25, u64::MAX, false);
+        let id = MatrixId::new(0, MatrixKind::Q);
+        let pieces = cache.subtract_cached(id, Chunk::new(0, s.spec.d));
+        // No piece contains a cached row; union covers all uncached rows.
+        let mut covered = vec![false; s.spec.d];
+        for p in &pieces {
+            for r in p.start..p.end() {
+                assert!(!cache.is_cached(id, r), "cached row {r} in flash piece");
+                covered[r] = true;
+            }
+        }
+        for r in 0..s.spec.d {
+            assert_eq!(covered[r], !cache.is_cached(id, r));
+        }
+    }
+
+    #[test]
+    fn materialized_rows_match_store() {
+        let s = store();
+        let f = freqs_for(&s);
+        let cache = HotNeuronCache::build(&s, &f, 0.2, u64::MAX, true);
+        let id = MatrixId::new(1, MatrixKind::Down);
+        let cols = s.spec.shape_of(MatrixKind::Down).cols;
+        let logical = s.logical_matrix(id);
+        for &r in cache.cached_rows(id) {
+            let data = cache.row_data(id, r).unwrap();
+            assert_eq!(data, &logical[r * cols..(r + 1) * cols]);
+        }
+    }
+
+    #[test]
+    fn zero_budget_caches_nothing() {
+        let s = store();
+        let f = freqs_for(&s);
+        let cache = HotNeuronCache::build(&s, &f, 0.25, 0, false);
+        assert_eq!(cache.bytes(), 0);
+    }
+}

@@ -1,0 +1,343 @@
+//! Request scheduler: multi-stream frame-append/decode traffic over one
+//! engine (one flash device = one execution lane, the edge reality).
+//!
+//! Decode steps are latency-critical (a user is waiting on tokens) and
+//! preempt queued frame appends — the standard serving-priority split.
+//! The engine is constructed *inside* the worker thread (PJRT handles are
+//! not `Send`); callers talk through channels.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Engine, StageStats};
+
+/// What a request asks the engine to do.
+#[derive(Clone, Debug)]
+pub enum RequestKind {
+    /// Append a frame of token embeddings ([T, d] row-major).
+    AppendFrame(Vec<f32>),
+    /// Decode one token from its embedding ([d]).
+    Decode(Vec<f32>),
+}
+
+impl RequestKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestKind::AppendFrame(_) => "append",
+            RequestKind::Decode(_) => "decode",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub stream: usize,
+    pub kind: RequestKind,
+}
+
+/// Completed request: output hidden states + accounting.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub stream: usize,
+    pub kind: &'static str,
+    pub output: Result<Vec<f32>, String>,
+    pub stats: StageStats,
+    /// Time spent queued before execution started.
+    pub queue_wait: Duration,
+    /// Execution wall time (includes virtual-I/O accounting only in
+    /// `stats`, not here).
+    pub exec_wall: Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Maximum queued requests before `submit` returns an error
+    /// (backpressure).
+    pub max_queue: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { max_queue: 256 }
+    }
+}
+
+struct Job {
+    request: Request,
+    enqueued: Instant,
+    done: Sender<Completion>,
+}
+
+#[derive(Default)]
+struct Queues {
+    decode: VecDeque<Job>,
+    append: VecDeque<Job>,
+    stopping: bool,
+}
+
+impl Queues {
+    fn len(&self) -> usize {
+        self.decode.len() + self.append.len()
+    }
+}
+
+struct Shared {
+    queues: Mutex<Queues>,
+    cv: Condvar,
+}
+
+/// Thread-backed scheduler around an [`Engine`].
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    cfg: SchedulerConfig,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn the worker; `make_engine` runs on the worker thread (PJRT
+    /// state is thread-confined).
+    pub fn spawn<F>(cfg: SchedulerConfig, make_engine: F) -> Self
+    where
+        F: FnOnce() -> Engine + Send + 'static,
+    {
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(Queues::default()),
+            cv: Condvar::new(),
+        });
+        let worker_shared = shared.clone();
+        let worker = std::thread::spawn(move || {
+            let mut engine = make_engine();
+            loop {
+                let job = {
+                    let mut q = worker_shared.queues.lock().unwrap();
+                    loop {
+                        // Priority: decode before append.
+                        if let Some(j) = q.decode.pop_front() {
+                            break Some(j);
+                        }
+                        if let Some(j) = q.append.pop_front() {
+                            break Some(j);
+                        }
+                        if q.stopping {
+                            break None;
+                        }
+                        q = worker_shared.cv.wait(q).unwrap();
+                    }
+                };
+                let Some(job) = job else { return };
+                let queue_wait = job.enqueued.elapsed();
+                let t0 = Instant::now();
+                let (output, stats) = match &job.request.kind {
+                    RequestKind::AppendFrame(f) => match engine.append_frame(job.request.stream, f)
+                    {
+                        Ok((y, s)) => (Ok(y), s),
+                        Err(e) => (Err(e.to_string()), StageStats::default()),
+                    },
+                    RequestKind::Decode(tok) => match engine.decode_step(job.request.stream, tok) {
+                        Ok((y, s)) => (Ok(y), s),
+                        Err(e) => (Err(e.to_string()), StageStats::default()),
+                    },
+                };
+                let _ = job.done.send(Completion {
+                    stream: job.request.stream,
+                    kind: job.request.kind.name(),
+                    output,
+                    stats,
+                    queue_wait,
+                    exec_wall: t0.elapsed(),
+                });
+            }
+        });
+        Self {
+            shared,
+            cfg,
+            worker: Some(worker),
+        }
+    }
+
+    /// Enqueue a request; returns the completion receiver, or an error if
+    /// the queue is full (backpressure) or stopping.
+    pub fn submit(&self, request: Request) -> anyhow::Result<Receiver<Completion>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut q = self.shared.queues.lock().unwrap();
+            anyhow::ensure!(!q.stopping, "scheduler is stopping");
+            anyhow::ensure!(
+                q.len() < self.cfg.max_queue,
+                "queue full ({} requests)",
+                self.cfg.max_queue
+            );
+            let job = Job {
+                request,
+                enqueued: Instant::now(),
+                done: tx,
+            };
+            match &job.request.kind {
+                RequestKind::Decode(_) => q.decode.push_back(job),
+                RequestKind::AppendFrame(_) => q.append.push_back(job),
+            }
+        }
+        self.shared.cv.notify_one();
+        Ok(rx)
+    }
+
+    pub fn queued(&self) -> usize {
+        self.shared.queues.lock().unwrap().len()
+    }
+
+    /// Drain queued work and stop the worker.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+
+    fn stop_inner(&self) {
+        self.shared.queues.lock().unwrap().stopping = true;
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.stop_inner();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, Policy};
+
+    fn artifact_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn spawn_tiny(streams: usize) -> Scheduler {
+        Scheduler::spawn(SchedulerConfig::default(), move || {
+            let mut cfg = EngineConfig::new("tiny", Policy::TopK, 0.3);
+            cfg.streams = streams;
+            Engine::new(cfg, &artifact_dir()).unwrap()
+        })
+    }
+
+    fn tiny_frame() -> Vec<f32> {
+        crate::workload::FrameTrace::new(64, 8, 4, 3).frame(0)
+    }
+
+    #[test]
+    fn processes_append_and_decode() {
+        let s = spawn_tiny(1);
+        let rx = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::AppendFrame(tiny_frame()),
+            })
+            .unwrap();
+        let c = rx.recv().unwrap();
+        assert_eq!(c.kind, "append");
+        let y = c.output.unwrap();
+        assert_eq!(y.len(), 8 * 64);
+        let rx = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::Decode(vec![0.1; 64]),
+            })
+            .unwrap();
+        let c = rx.recv().unwrap();
+        assert!(c.output.is_ok());
+        assert!(c.stats.io > Duration::ZERO);
+        s.shutdown();
+    }
+
+    #[test]
+    fn decode_preempts_queued_appends() {
+        let s = spawn_tiny(2);
+        // Prime stream 0 so decode is legal (decode preempts *everything*,
+        // including a not-yet-started priming append, so wait for it).
+        let first = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::AppendFrame(tiny_frame()),
+            })
+            .unwrap();
+        first.recv().unwrap().output.unwrap();
+        // Queue: several appends on stream 1, then a decode on stream 0.
+        // The worker may already be chewing on the first queued append,
+        // but the decode must jump ahead of the later ones.
+        let append_rxs: Vec<_> = (0..3)
+            .map(|_| {
+                s.submit(Request {
+                    stream: 1,
+                    kind: RequestKind::AppendFrame(tiny_frame()),
+                })
+                .unwrap()
+            })
+            .collect();
+        let decode_rx = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::Decode(vec![0.05; 64]),
+            })
+            .unwrap();
+        let d = decode_rx.recv().unwrap();
+        d.output.clone().unwrap();
+        // The decode must have waited less than the last queued append.
+        let last_append = append_rxs.last().unwrap().recv().unwrap();
+        assert!(
+            d.queue_wait <= last_append.queue_wait,
+            "decode waited {:?}, append {:?}",
+            d.queue_wait,
+            last_append.queue_wait
+        );
+        s.shutdown();
+    }
+
+    #[test]
+    fn backpressure() {
+        let s = Scheduler::spawn(SchedulerConfig { max_queue: 2 }, || {
+            Engine::new(EngineConfig::new("tiny", Policy::Dense, 0.0), &artifact_dir()).unwrap()
+        });
+        // Saturate: worker takes the first, queue holds two more.
+        let mut rxs = Vec::new();
+        let mut rejected = false;
+        for _ in 0..8 {
+            match s.submit(Request {
+                stream: 0,
+                kind: RequestKind::AppendFrame(tiny_frame()),
+            }) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => {
+                    rejected = true;
+                    break;
+                }
+            }
+        }
+        assert!(rejected, "queue should overflow");
+        for rx in rxs {
+            rx.recv().unwrap().output.unwrap();
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn errors_surface_in_completion() {
+        let s = spawn_tiny(1);
+        // Decode without prior append is an engine error, not a crash.
+        let rx = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::Decode(vec![0.0; 64]),
+            })
+            .unwrap();
+        let c = rx.recv().unwrap();
+        assert!(c.output.is_err());
+        s.shutdown();
+    }
+}

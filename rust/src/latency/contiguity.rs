@@ -1,0 +1,233 @@
+//! Contiguity distribution: mask → multiset of maximal-run ("chunk")
+//! sizes. E.g. selecting rows {1,2,4,6,7} yields chunks {1,2},{4},{6,7} —
+//! one chunk of size 1 and two of size 2 (paper §3).
+
+/// A maximal contiguous run of selected rows: rows `start .. start+len`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Chunk {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Chunk {
+    pub fn new(start: usize, len: usize) -> Self {
+        debug_assert!(len > 0);
+        Self { start, len }
+    }
+
+    #[inline]
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    #[inline]
+    pub fn overlaps(&self, other: &Chunk) -> bool {
+        self.start < other.end() && other.start < self.end()
+    }
+}
+
+/// Extract maximal contiguous runs from a boolean selection mask.
+pub fn chunks_from_mask(mask: &[bool]) -> Vec<Chunk> {
+    let mut chunks = Vec::new();
+    let mut i = 0;
+    while i < mask.len() {
+        if mask[i] {
+            let start = i;
+            while i < mask.len() && mask[i] {
+                i += 1;
+            }
+            chunks.push(Chunk::new(start, i - start));
+        } else {
+            i += 1;
+        }
+    }
+    chunks
+}
+
+/// Frequency distribution of chunk sizes — the paper's compact
+/// representation of a flash access pattern.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ContiguityDistribution {
+    /// `counts[s]` = number of chunks of size `s` (index 0 unused).
+    counts: Vec<u64>,
+}
+
+impl ContiguityDistribution {
+    pub fn from_mask(mask: &[bool]) -> Self {
+        Self::from_chunks(&chunks_from_mask(mask))
+    }
+
+    pub fn from_chunks(chunks: &[Chunk]) -> Self {
+        let max = chunks.iter().map(|c| c.len).max().unwrap_or(0);
+        let mut counts = vec![0u64; max + 1];
+        for c in chunks {
+            counts[c.len] += 1;
+        }
+        Self { counts }
+    }
+
+    /// Number of chunks of exactly size `s`.
+    pub fn count(&self, s: usize) -> u64 {
+        self.counts.get(s).copied().unwrap_or(0)
+    }
+
+    /// Total number of chunks.
+    pub fn num_chunks(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Total number of selected rows.
+    pub fn num_rows(&self) -> u64 {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| s as u64 * c)
+            .sum()
+    }
+
+    /// Mean chunk size (rows per chunk); NaN if empty.
+    pub fn mean_chunk(&self) -> f64 {
+        let n = self.num_chunks();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.num_rows() as f64 / n as f64
+    }
+
+    /// Most frequent chunk size (largest on ties); 0 if empty.
+    pub fn mode_chunk(&self) -> usize {
+        self.counts
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, &c)| c > 0)
+            .max_by(|a, b| a.1.cmp(b.1).then(a.0.cmp(&b.0)))
+            .map(|(s, _)| s)
+            .unwrap_or(0)
+    }
+
+    /// Largest observed chunk size.
+    pub fn max_chunk(&self) -> usize {
+        self.counts.len().saturating_sub(1)
+    }
+
+    /// Iterate (size, count) for sizes with nonzero count.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, &c)| c > 0)
+            .map(|(s, &c)| (s, c))
+    }
+
+    /// CDF over *rows* by chunk size: fraction of selected rows living in
+    /// chunks of size <= s (Fig 12's contiguity CDF).
+    pub fn row_cdf(&self) -> Vec<(usize, f64)> {
+        let total = self.num_rows().max(1) as f64;
+        let mut acc = 0u64;
+        self.iter()
+            .map(|(s, c)| {
+                acc += s as u64 * c;
+                (s, acc as f64 / total)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_of(indices: &[usize], n: usize) -> Vec<bool> {
+        let mut m = vec![false; n];
+        for &i in indices {
+            m[i] = true;
+        }
+        m
+    }
+
+    #[test]
+    fn paper_example() {
+        // {1,2,4,6,7} -> chunks {1,2},{4},{6,7}: one size-1, two size-2.
+        let mask = mask_of(&[1, 2, 4, 6, 7], 9);
+        let chunks = chunks_from_mask(&mask);
+        assert_eq!(
+            chunks,
+            vec![Chunk::new(1, 2), Chunk::new(4, 1), Chunk::new(6, 2)]
+        );
+        let d = ContiguityDistribution::from_mask(&mask);
+        assert_eq!(d.count(1), 1);
+        assert_eq!(d.count(2), 2);
+        assert_eq!(d.num_chunks(), 3);
+        assert_eq!(d.num_rows(), 5);
+    }
+
+    #[test]
+    fn empty_mask() {
+        let d = ContiguityDistribution::from_mask(&[false; 10]);
+        assert_eq!(d.num_chunks(), 0);
+        assert_eq!(d.num_rows(), 0);
+        assert!(d.mean_chunk().is_nan());
+        assert_eq!(d.mode_chunk(), 0);
+    }
+
+    #[test]
+    fn full_mask_single_chunk() {
+        let d = ContiguityDistribution::from_mask(&[true; 64]);
+        assert_eq!(d.num_chunks(), 1);
+        assert_eq!(d.count(64), 1);
+        assert_eq!(d.mean_chunk(), 64.0);
+        assert_eq!(d.mode_chunk(), 64);
+    }
+
+    #[test]
+    fn alternating_mask_all_singletons() {
+        let mask: Vec<bool> = (0..20).map(|i| i % 2 == 0).collect();
+        let d = ContiguityDistribution::from_mask(&mask);
+        assert_eq!(d.count(1), 10);
+        assert_eq!(d.mean_chunk(), 1.0);
+    }
+
+    #[test]
+    fn boundary_runs() {
+        let mask = mask_of(&[0, 1, 8, 9], 10);
+        let chunks = chunks_from_mask(&mask);
+        assert_eq!(chunks, vec![Chunk::new(0, 2), Chunk::new(8, 2)]);
+    }
+
+    #[test]
+    fn chunk_overlap_logic() {
+        let a = Chunk::new(0, 4);
+        assert!(a.overlaps(&Chunk::new(3, 2)));
+        assert!(!a.overlaps(&Chunk::new(4, 2)));
+        assert!(a.overlaps(&Chunk::new(0, 1)));
+        assert!(Chunk::new(2, 10).overlaps(&a));
+    }
+
+    #[test]
+    fn mode_prefers_larger_on_tie() {
+        // one chunk of size 1 and one of size 3 -> tie in count; mode
+        // should pick the larger size (matches visualization intent).
+        let mask = mask_of(&[0, 2, 3, 4], 6);
+        let d = ContiguityDistribution::from_mask(&mask);
+        assert_eq!(d.mode_chunk(), 3);
+    }
+
+    #[test]
+    fn row_cdf_monotone_ending_at_one() {
+        let mask = mask_of(&[0, 1, 2, 5, 7, 8], 10);
+        let d = ContiguityDistribution::from_mask(&mask);
+        let cdf = d.row_cdf();
+        assert!(cdf.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distribution_ignores_layout() {
+        // Same chunk sizes at different positions -> identical distribution.
+        let d1 = ContiguityDistribution::from_mask(&mask_of(&[0, 1, 5], 10));
+        let d2 = ContiguityDistribution::from_mask(&mask_of(&[3, 7, 8], 10));
+        assert_eq!(d1, d2);
+    }
+}

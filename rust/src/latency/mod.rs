@@ -1,0 +1,13 @@
+//! The paper's core abstraction: the **contiguity distribution** (§3) and
+//! the **chunk-based latency model** (§3.1).
+//!
+//! A selection mask over neuron rows is reduced to the multiset of its
+//! maximal contiguous run lengths ("chunks"), discarding spatial layout.
+//! Total flash-read latency is then estimated as `Σ T[sᵢ]` where `T[s]` is
+//! an offline-profiled per-chunk-size latency lookup table.
+
+mod contiguity;
+mod table;
+
+pub use contiguity::{chunks_from_mask, Chunk, ContiguityDistribution};
+pub use table::LatencyTable;

@@ -1,0 +1,38 @@
+//! # neuron-chunking
+//!
+//! Production-style reproduction of **"VLM in a flash: I/O-Efficient
+//! Sparsification of Vision-Language Model via Neuron Chunking"**.
+//!
+//! The crate is the Layer-3 (Rust) coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the serving system: flash storage engine +
+//!   simulator, chunk-based latency model, utility-guided chunk selection,
+//!   hot–cold reordering, frame-append/decode scheduler, KV-cache manager,
+//!   and the per-matrix sparsification pipeline. Nothing here ever calls
+//!   Python.
+//! * **L2 (python/compile/model.py)** — the VLM block compute graph in
+//!   JAX, AOT-lowered to HLO text artifacts consumed by [`runtime`].
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (gathered matmul,
+//!   fused SwiGLU gate/up, masked MHA) inside the L2 graph.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a module + bench target.
+
+pub mod benchlib;
+pub mod coordinator;
+pub mod experiments;
+pub mod latency;
+pub mod model;
+pub mod proptest;
+pub mod reorder;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sparsify;
+pub mod stats;
+pub mod storage;
+pub mod workload;
+
+pub use latency::{Chunk, ContiguityDistribution, LatencyTable};
+pub use sparsify::{SelectionMask, Selector};
+pub use storage::{DeviceProfile, FlashDevice, SimulatedSsd};

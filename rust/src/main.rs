@@ -1,0 +1,307 @@
+//! `repro` — the neuron-chunking serving CLI.
+//!
+//! Subcommands:
+//!   serve    — run the runnable engine on a synthetic video stream and
+//!              report per-frame latency/throughput (the serving loop).
+//!   profile  — run the Appendix-D microbenchmark against a device
+//!              profile (or a real file) and dump the T[s] table.
+//!   select   — one-shot chunk selection demo on synthetic importance.
+//!   models   — list known model specs.
+//!
+//! Hand-rolled arg parsing: the offline environment has no clap.
+
+use std::path::PathBuf;
+
+use neuron_chunking::coordinator::{Engine, EngineConfig, Policy};
+use neuron_chunking::report::{fmt_bw, fmt_secs, Table};
+use neuron_chunking::sparsify::ChunkSelectConfig;
+use neuron_chunking::stats;
+use neuron_chunking::storage::{
+    DeviceProfile, Profiler, ProfileConfig, RealFileDevice, SimulatedSsd,
+};
+use neuron_chunking::workload::FrameTrace;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
+        Some("select") => cmd_select(&args[1..]),
+        Some("models") => cmd_models(),
+        _ => {
+            eprintln!(
+                "repro — flash-offloaded VLM serving with neuron chunking\n\
+                 usage:\n\
+                 \x20 repro serve   [--model small] [--policy chunking|topk|dense] \n\
+                 \x20               [--sparsity 0.5] [--device nano|agx] [--frames 8] \n\
+                 \x20               [--decode 4] [--reorder] [--artifacts DIR]\n\
+                 \x20 repro profile [--device nano|agx|macbook] [--file PATH] [--out PATH]\n\
+                 \x20 repro select  [--rows 4096] [--sparsity 0.5] [--device nano]\n\
+                 \x20 repro models"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let model = flag(args, "--model").unwrap_or_else(|| "small".into());
+    let policy_name = flag(args, "--policy").unwrap_or_else(|| "chunking".into());
+    let sparsity: f64 = flag(args, "--sparsity")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    let device = flag(args, "--device").unwrap_or_else(|| "nano".into());
+    let frames: usize = flag(args, "--frames")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let decode_steps: usize = flag(args, "--decode")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let artifacts = PathBuf::from(flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+
+    let profile = match DeviceProfile::by_name(&device) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown device {device}");
+            return 2;
+        }
+    };
+    let sat_kb = profile.saturation_bytes(0.99) as f64 / 1024.0;
+    let policy = match policy_name.as_str() {
+        "dense" => Policy::Dense,
+        "topk" => Policy::TopK,
+        "chunking" => Policy::Chunking {
+            config: ChunkSelectConfig::new(2.0, 2.0, sat_kb),
+        },
+        "bundling" => Policy::Bundling { bundle_rows: 2 },
+        other => {
+            eprintln!("unknown policy {other}");
+            return 2;
+        }
+    };
+
+    let mut cfg = EngineConfig::new(&model, policy, sparsity);
+    cfg.profile = profile;
+    println!(
+        "serving model={model} policy={policy_name} sparsity={sparsity} device={device}"
+    );
+    let mut engine = match Engine::new(cfg, &artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine init failed: {e:#}");
+            return 1;
+        }
+    };
+    let spec = engine.spec().clone();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, frames + 1, 11);
+
+    if has_flag(args, "--reorder") {
+        let calib: Vec<Vec<f32>> = (0..4).map(|i| trace.frame(i)).collect();
+        println!("calibrating hot–cold reorder on 4 frames…");
+        if let Err(e) = engine.calibrate_and_reorder(&calib) {
+            eprintln!("reorder failed: {e:#}");
+            return 1;
+        }
+    }
+
+    println!("compiling {} artifacts…", engine.warmup().unwrap_or(0));
+    // Warmup frame (not measured).
+    if let Err(e) = engine.append_frame(0, &trace.frame(0)) {
+        eprintln!("warmup failed: {e:#}");
+        return 1;
+    }
+
+    let mut t = Table::new(
+        "per-frame serving stats",
+        &["frame", "io", "compute", "select", "host", "e2e", "MB", "retained"],
+    );
+    let mut e2e = Vec::new();
+    for f in 1..=frames {
+        let (_, s) = engine.append_frame(0, &trace.frame(f)).unwrap();
+        e2e.push(s.end_to_end().as_secs_f64());
+        t.row(vec![
+            format!("{f}"),
+            fmt_secs(s.io.as_secs_f64()),
+            fmt_secs(s.compute.as_secs_f64()),
+            fmt_secs(s.select.as_secs_f64()),
+            fmt_secs(s.host.as_secs_f64()),
+            fmt_secs(s.end_to_end().as_secs_f64()),
+            format!("{:.1}", s.bytes_loaded as f64 / 1e6),
+            format!("{:.3}", s.retained_fraction()),
+        ]);
+    }
+    for dstep in 0..decode_steps {
+        let token = vec![0.05f32; spec.d];
+        let (_, s) = engine.decode_step(0, &token).unwrap();
+        t.row(vec![
+            format!("dec{dstep}"),
+            fmt_secs(s.io.as_secs_f64()),
+            fmt_secs(s.compute.as_secs_f64()),
+            fmt_secs(s.select.as_secs_f64()),
+            fmt_secs(s.host.as_secs_f64()),
+            fmt_secs(s.end_to_end().as_secs_f64()),
+            format!("{:.1}", s.bytes_loaded as f64 / 1e6),
+            format!("{:.3}", s.retained_fraction()),
+        ]);
+    }
+    println!("{}", t.render());
+    let med = stats::median(&e2e);
+    println!(
+        "median frame latency {} -> {:.2} frames/s sustainable",
+        fmt_secs(med),
+        1.0 / med
+    );
+    0
+}
+
+fn cmd_profile(args: &[String]) -> i32 {
+    let out = flag(args, "--out");
+    let table = if let Some(path) = flag(args, "--file") {
+        let threads: usize = flag(args, "--threads")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(6);
+        println!("profiling real file {path} with {threads} threads…");
+        let dev = match RealFileDevice::open(std::path::Path::new(&path), threads, false) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("open failed: {e:#}");
+                return 1;
+            }
+        };
+        use neuron_chunking::storage::FlashDevice;
+        let max = (FlashDevice::capacity(&dev) / 256).min(512 * 1024) as usize;
+        Profiler::new(&dev, ProfileConfig::coarse(max.max(4096), 1024)).build_table()
+    } else {
+        let device = flag(args, "--device").unwrap_or_else(|| "nano".into());
+        let profile = match DeviceProfile::by_name(&device) {
+            Some(p) => p,
+            None => {
+                eprintln!("unknown device {device}");
+                return 2;
+            }
+        };
+        println!(
+            "profiling simulated {device} (peak {}, saturation {} KB)…",
+            fmt_bw(profile.peak_bw),
+            profile.saturation_bytes(0.99) / 1024
+        );
+        let dev = SimulatedSsd::timing_only(profile.clone(), 1 << 40, 1);
+        Profiler::new(
+            &dev,
+            ProfileConfig {
+                step_bytes: 4096,
+                max_bytes: profile.saturation_bytes(0.99),
+                ..Default::default()
+            },
+        )
+        .build_table()
+    };
+    let table = match table {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("profiling failed: {e:#}");
+            return 1;
+        }
+    };
+    let mut report = Table::new("T[s] lookup table", &["chunk_kb", "latency", "throughput"]);
+    let mut kb = 4;
+    while kb * 1024 <= table.max_bytes() {
+        let l = table.latency_bytes(kb * 1024);
+        report.row(vec![
+            format!("{kb}"),
+            fmt_secs(l),
+            fmt_bw(kb as f64 * 1024.0 / l),
+        ]);
+        kb *= 2;
+    }
+    println!("{}", report.render());
+    if let Some(path) = out {
+        if let Err(e) = std::fs::write(&path, table.to_text()) {
+            eprintln!("write failed: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_select(args: &[String]) -> i32 {
+    use neuron_chunking::sparsify::{ChunkSelect, Selector, TopK};
+    use neuron_chunking::workload::ActivationGen;
+    let rows: usize = flag(args, "--rows").and_then(|s| s.parse().ok()).unwrap_or(4096);
+    let sparsity: f64 = flag(args, "--sparsity")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+    let device = flag(args, "--device").unwrap_or_else(|| "nano".into());
+    let profile = DeviceProfile::by_name(&device).unwrap_or_else(DeviceProfile::nano);
+    let probe = SimulatedSsd::timing_only(profile.clone(), 1 << 40, 1);
+    let table = Profiler::new(
+        &probe,
+        ProfileConfig::coarse(profile.saturation_bytes(0.99), 1024),
+    )
+    .build_table()
+    .unwrap()
+    .with_row_bytes(2048);
+
+    let imp = ActivationGen::vlm(rows, 196, 0.4, 7).sample(0);
+    let budget = ((1.0 - sparsity) * rows as f64) as usize;
+    let sat_kb = profile.saturation_bytes(0.99) as f64 / 1024.0;
+    let mut t = Table::new(
+        &format!("selection comparison ({rows} rows, sparsity {sparsity}, {device})"),
+        &["policy", "chunks", "mean_chunk", "est_latency", "importance_captured"],
+    );
+    for (name, sel) in [
+        ("topk", Box::new(TopK) as Box<dyn Selector>),
+        (
+            "chunking",
+            Box::new(ChunkSelect::new(ChunkSelectConfig::new(8.0, 8.0, sat_kb))),
+        ),
+    ] {
+        let m = sel.select(&imp, budget, &table);
+        let d = neuron_chunking::latency::ContiguityDistribution::from_chunks(&m.chunks);
+        t.row(vec![
+            name.into(),
+            format!("{}", d.num_chunks()),
+            format!("{:.1}", d.mean_chunk()),
+            fmt_secs(table.estimate_chunks(&m.chunks)),
+            format!("{:.4}", m.captured_importance(&imp)),
+        ]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_models() -> i32 {
+    use neuron_chunking::model::ModelSpec;
+    let mut t = Table::new(
+        "model catalogue",
+        &["name", "d", "h", "kv", "layers", "tokens/frame", "weights", "runnable"],
+    );
+    let mut all = ModelSpec::paper_models();
+    all.extend([ModelSpec::tiny(), ModelSpec::small(), ModelSpec::base()]);
+    for m in all {
+        t.row(vec![
+            m.name.clone(),
+            format!("{}", m.d),
+            format!("{}", m.h),
+            format!("{}", m.kv),
+            format!("{}", m.layers),
+            format!("{}", m.tokens_per_frame),
+            format!("{:.1} GB", m.total_bytes() as f64 / 1e9),
+            format!("{}", m.runnable),
+        ]);
+    }
+    println!("{}", t.render());
+    0
+}

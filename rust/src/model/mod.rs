@@ -1,0 +1,9 @@
+//! Model substrate: specs for the paper's evaluation models (exact matrix
+//! shapes) and runnable small models, plus the flash weight store with its
+//! on-device layout.
+
+mod spec;
+mod weights;
+
+pub use spec::{MatrixKind, MatrixShape, ModelSpec, SelectionGroup};
+pub use weights::{FlashLayout, MatrixId, WeightStore};

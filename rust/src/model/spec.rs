@@ -1,0 +1,351 @@
+//! Model specifications.
+//!
+//! Two families:
+//! * **Paper models** (I/O experiments only — weights never materialize):
+//!   the five VLMs of §4.1 with their exact projection shapes, matching
+//!   Appendix H Table 2 row-by-row. fp16 like the paper.
+//! * **Runnable models** (`tiny`, `small`, `base`): the real transformers
+//!   compiled to HLO artifacts by the Python layer; f32, dims mirrored
+//!   from `python/compile/model.py`.
+
+/// The seven per-layer projection matrices of a (grouped-query) decoder
+/// block. Sparsification selects *input rows*; K/V share the Q selection
+/// and Up shares Gate's, since they consume the same activations (paper
+/// Appendix A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MatrixKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+impl MatrixKind {
+    pub const ALL: [MatrixKind; 7] = [
+        MatrixKind::Q,
+        MatrixKind::K,
+        MatrixKind::V,
+        MatrixKind::O,
+        MatrixKind::Gate,
+        MatrixKind::Up,
+        MatrixKind::Down,
+    ];
+
+    /// The matrices with their own activation scoring + selection run
+    /// (q, o, gate, down — Appendix A; k/v/up reuse a sibling's mask).
+    pub const SCORED: [MatrixKind; 4] = [
+        MatrixKind::Q,
+        MatrixKind::O,
+        MatrixKind::Gate,
+        MatrixKind::Down,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatrixKind::Q => "q",
+            MatrixKind::K => "k",
+            MatrixKind::V => "v",
+            MatrixKind::O => "o",
+            MatrixKind::Gate => "gate",
+            MatrixKind::Up => "up",
+            MatrixKind::Down => "down",
+        }
+    }
+
+    /// Which scored matrix provides this matrix's selection mask.
+    pub fn mask_source(&self) -> MatrixKind {
+        match self {
+            MatrixKind::K | MatrixKind::V => MatrixKind::Q,
+            MatrixKind::Up => MatrixKind::Gate,
+            other => *other,
+        }
+    }
+}
+
+/// Rows × cols of one weight matrix (rows = input/selection dim).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatrixShape {
+    pub kind: MatrixKind,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// A group of matrices loaded under one selection mask.
+#[derive(Clone, Debug)]
+pub struct SelectionGroup {
+    /// The matrix whose input activation is scored.
+    pub scored: MatrixKind,
+    /// All matrices loaded with that mask (includes `scored`).
+    pub members: Vec<MatrixKind>,
+}
+
+/// A model's dimensions and storage parameters.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Hidden size (input dim of q/k/v/gate/up; output of o/down).
+    pub d: usize,
+    /// MLP intermediate size (input dim of down).
+    pub h: usize,
+    /// KV projection width (grouped-query attention).
+    pub kv: usize,
+    /// Attention heads.
+    pub nh: usize,
+    pub layers: usize,
+    /// Visual tokens per frame.
+    pub tokens_per_frame: usize,
+    /// KV-cache capacity in slots (runnable models only).
+    pub cache_slots: usize,
+    /// Bytes per weight element (2 = fp16 paper models, 4 = f32 runnable).
+    pub dtype_bytes: usize,
+    /// Whether HLO artifacts exist for actual execution.
+    pub runnable: bool,
+}
+
+impl ModelSpec {
+    /// LLaVA-OneVision-Qwen2-7B (Qwen2-7B backbone).
+    pub fn llava_7b() -> Self {
+        Self::paper("llava-7b", 3584, 18944, 512, 28, 28, 196)
+    }
+
+    /// LLaVA-OneVision-Qwen2-0.5B (Qwen2-0.5B backbone).
+    pub fn llava_05b() -> Self {
+        Self::paper("llava-0.5b", 896, 4864, 128, 14, 24, 196)
+    }
+
+    /// Llama-3-VILA1.5-8B (Llama-3-8B backbone).
+    pub fn vila_8b() -> Self {
+        Self::paper("vila-8b", 4096, 14336, 1024, 32, 32, 196)
+    }
+
+    /// NVILA-Lite-2B (Qwen2.5-1.5B backbone).
+    pub fn nvila_2b() -> Self {
+        Self::paper("nvila-2b", 1536, 8960, 256, 12, 28, 196)
+    }
+
+    /// LongVA-7B (Qwen2-7B backbone).
+    pub fn longva_7b() -> Self {
+        Self::paper("longva-7b", 3584, 18944, 512, 28, 28, 144)
+    }
+
+    fn paper(
+        name: &str,
+        d: usize,
+        h: usize,
+        kv: usize,
+        nh: usize,
+        layers: usize,
+        tokens: usize,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            d,
+            h,
+            kv,
+            nh,
+            layers,
+            tokens_per_frame: tokens,
+            cache_slots: 0,
+            dtype_bytes: 2,
+            runnable: false,
+        }
+    }
+
+    /// Runnable models — dims must match `python/compile/model.py`.
+    pub fn tiny() -> Self {
+        Self::runnable("tiny", 64, 192, 4, 8, 32, 2)
+    }
+
+    pub fn small() -> Self {
+        Self::runnable("small", 256, 768, 4, 16, 128, 4)
+    }
+
+    pub fn base() -> Self {
+        Self::runnable("base", 512, 1536, 8, 32, 256, 8)
+    }
+
+    fn runnable(name: &str, d: usize, h: usize, nh: usize, t: usize, c: usize, layers: usize) -> Self {
+        Self {
+            name: name.into(),
+            d,
+            h,
+            kv: d, // runnable models use full multi-head attention
+            nh,
+            layers,
+            tokens_per_frame: t,
+            cache_slots: c,
+            dtype_bytes: 4,
+            runnable: true,
+        }
+    }
+
+    /// The five paper evaluation models (§4.1 order).
+    pub fn paper_models() -> Vec<ModelSpec> {
+        vec![
+            Self::llava_7b(),
+            Self::llava_05b(),
+            Self::vila_8b(),
+            Self::nvila_2b(),
+            Self::longva_7b(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name {
+            "llava-7b" => Some(Self::llava_7b()),
+            "llava-0.5b" => Some(Self::llava_05b()),
+            "vila-8b" => Some(Self::vila_8b()),
+            "nvila-2b" => Some(Self::nvila_2b()),
+            "longva-7b" => Some(Self::longva_7b()),
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "base" => Some(Self::base()),
+            _ => None,
+        }
+    }
+
+    /// Per-layer matrix shapes (rows = selection dim).
+    pub fn matrices(&self) -> Vec<MatrixShape> {
+        let m = |kind, rows, cols| MatrixShape { kind, rows, cols };
+        vec![
+            m(MatrixKind::Q, self.d, self.d),
+            m(MatrixKind::K, self.d, self.kv),
+            m(MatrixKind::V, self.d, self.kv),
+            m(MatrixKind::O, self.d, self.d),
+            m(MatrixKind::Gate, self.d, self.h),
+            m(MatrixKind::Up, self.d, self.h),
+            m(MatrixKind::Down, self.h, self.d),
+        ]
+    }
+
+    pub fn shape_of(&self, kind: MatrixKind) -> MatrixShape {
+        self.matrices()
+            .into_iter()
+            .find(|m| m.kind == kind)
+            .unwrap()
+    }
+
+    /// Selection groups: q→{q,k,v}, o→{o}, gate→{gate,up}, down→{down}.
+    pub fn selection_groups(&self) -> Vec<SelectionGroup> {
+        vec![
+            SelectionGroup {
+                scored: MatrixKind::Q,
+                members: vec![MatrixKind::Q, MatrixKind::K, MatrixKind::V],
+            },
+            SelectionGroup {
+                scored: MatrixKind::O,
+                members: vec![MatrixKind::O],
+            },
+            SelectionGroup {
+                scored: MatrixKind::Gate,
+                members: vec![MatrixKind::Gate, MatrixKind::Up],
+            },
+            SelectionGroup {
+                scored: MatrixKind::Down,
+                members: vec![MatrixKind::Down],
+            },
+        ]
+    }
+
+    /// Bytes of one row of `kind` (the flash read unit).
+    pub fn row_bytes(&self, kind: MatrixKind) -> usize {
+        self.shape_of(kind).cols * self.dtype_bytes
+    }
+
+    /// Total backbone weight bytes.
+    pub fn total_bytes(&self) -> u64 {
+        let per_layer: usize = self
+            .matrices()
+            .iter()
+            .map(|m| m.rows * m.cols * self.dtype_bytes)
+            .sum();
+        per_layer as u64 * self.layers as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shapes_match_table2() {
+        // Every (rows, cols) in Appendix H Table 2 must appear in some
+        // paper model's matrix inventory.
+        use crate::sparsify::tuning::paper_table2;
+        let mut all_shapes = std::collections::HashSet::new();
+        for m in ModelSpec::paper_models() {
+            for s in m.matrices() {
+                all_shapes.insert((s.rows, s.cols));
+            }
+        }
+        for e in paper_table2() {
+            assert!(
+                all_shapes.contains(&(e.rows, e.cols)),
+                "Table 2 shape ({}, {}) missing from model inventory",
+                e.rows,
+                e.cols
+            );
+        }
+    }
+
+    #[test]
+    fn llava7b_sizes() {
+        let m = ModelSpec::llava_7b();
+        // Qwen2-7B MLP weights ~128 MB per... Fig 4 reads 128 MB = one
+        // fp16 gate/up matrix (3584*18944*2 = 129.6 MB).
+        assert_eq!(m.row_bytes(MatrixKind::Gate), 18944 * 2);
+        let gate_bytes = 3584 * 18944 * 2;
+        assert!((gate_bytes as f64 - 128e6).abs() < 10e6);
+        // ~7B params total (backbone minus embeddings).
+        let params = m.total_bytes() / 2;
+        assert!((6e9..8e9).contains(&(params as f64)), "params {params}");
+    }
+
+    #[test]
+    fn runnable_dims_match_python_manifest() {
+        // Mirror of python/compile/model.py TINY/SMALL/BASE.
+        let t = ModelSpec::tiny();
+        assert_eq!((t.d, t.h, t.nh, t.tokens_per_frame, t.cache_slots, t.layers), (64, 192, 4, 8, 32, 2));
+        let s = ModelSpec::small();
+        assert_eq!((s.d, s.h, s.nh, s.tokens_per_frame, s.cache_slots, s.layers), (256, 768, 4, 16, 128, 4));
+    }
+
+    #[test]
+    fn mask_sources() {
+        assert_eq!(MatrixKind::K.mask_source(), MatrixKind::Q);
+        assert_eq!(MatrixKind::V.mask_source(), MatrixKind::Q);
+        assert_eq!(MatrixKind::Up.mask_source(), MatrixKind::Gate);
+        assert_eq!(MatrixKind::Down.mask_source(), MatrixKind::Down);
+    }
+
+    #[test]
+    fn selection_groups_cover_all_matrices() {
+        let m = ModelSpec::small();
+        let mut covered: Vec<MatrixKind> = m
+            .selection_groups()
+            .iter()
+            .flat_map(|g| g.members.clone())
+            .collect();
+        covered.sort();
+        covered.dedup();
+        assert_eq!(covered.len(), 7);
+    }
+
+    #[test]
+    fn by_name_round_trip() {
+        for m in ModelSpec::paper_models() {
+            assert_eq!(ModelSpec::by_name(&m.name).unwrap().d, m.d);
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn scored_matrices_are_mask_sources() {
+        for k in MatrixKind::ALL {
+            assert!(MatrixKind::SCORED.contains(&k.mask_source()));
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Flash weight store: on-device layout + chunked row reads.
+//!
+//! Each (layer, matrix) gets a contiguous region; rows are the selection
+//! unit. Chunked selections translate to one extent per chunk — this is
+//! where contiguity in *neuron index space* becomes contiguity in *flash
+//! address space* (after the offline reorder permutation has been baked
+//! into the physical layout).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::latency::Chunk;
+use crate::model::{MatrixKind, ModelSpec};
+use crate::reorder::Permutation;
+use crate::rng::Rng;
+use crate::storage::{Extent, FlashDevice};
+
+/// Identifies one weight matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MatrixId {
+    pub layer: usize,
+    pub kind: MatrixKind,
+}
+
+impl MatrixId {
+    pub fn new(layer: usize, kind: MatrixKind) -> Self {
+        Self { layer, kind }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Region {
+    base: u64,
+    row_bytes: usize,
+    rows: usize,
+}
+
+/// Byte layout of all backbone matrices on the flash device.
+#[derive(Clone, Debug)]
+pub struct FlashLayout {
+    regions: HashMap<MatrixId, Region>,
+    total_bytes: u64,
+    /// Rows aligned up to 4 KiB (for O_DIRECT real-device experiments).
+    pub align_rows: bool,
+}
+
+impl FlashLayout {
+    pub fn build(spec: &ModelSpec, align_rows: bool) -> Self {
+        let mut regions = HashMap::new();
+        let mut at = 0u64;
+        for layer in 0..spec.layers {
+            for m in spec.matrices() {
+                let mut row_bytes = m.cols * spec.dtype_bytes;
+                if align_rows {
+                    row_bytes = row_bytes.div_ceil(4096) * 4096;
+                }
+                regions.insert(
+                    MatrixId::new(layer, m.kind),
+                    Region {
+                        base: at,
+                        row_bytes,
+                        rows: m.rows,
+                    },
+                );
+                at += (row_bytes * m.rows) as u64;
+            }
+        }
+        Self {
+            regions,
+            total_bytes: at,
+            align_rows,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    pub fn row_bytes(&self, id: MatrixId) -> usize {
+        self.regions[&id].row_bytes
+    }
+
+    pub fn rows(&self, id: MatrixId) -> usize {
+        self.regions[&id].rows
+    }
+
+    /// Byte offset of a row.
+    pub fn row_offset(&self, id: MatrixId, row: usize) -> u64 {
+        let r = &self.regions[&id];
+        debug_assert!(row < r.rows);
+        r.base + (row * r.row_bytes) as u64
+    }
+
+    /// One extent per chunk — a chunk of `len` adjacent rows is a single
+    /// contiguous read of `len * row_bytes`.
+    pub fn extents_for_chunks(&self, id: MatrixId, chunks: &[Chunk]) -> Vec<Extent> {
+        let r = &self.regions[&id];
+        chunks
+            .iter()
+            .map(|c| {
+                debug_assert!(c.end() <= r.rows);
+                Extent::new(
+                    r.base + (c.start * r.row_bytes) as u64,
+                    c.len * r.row_bytes,
+                )
+            })
+            .collect()
+    }
+}
+
+/// The weight store: layout + (for runnable models) deterministic weight
+/// generation, offline reorder baking, and gathered-row reads.
+pub struct WeightStore {
+    pub spec: ModelSpec,
+    pub layout: FlashLayout,
+    /// Offline reorder permutation per matrix (identity if absent).
+    perms: HashMap<MatrixId, Permutation>,
+    seed: u64,
+}
+
+impl WeightStore {
+    pub fn new(spec: ModelSpec, align_rows: bool, seed: u64) -> Self {
+        let layout = FlashLayout::build(&spec, align_rows);
+        Self {
+            spec,
+            layout,
+            perms: HashMap::new(),
+            seed,
+        }
+    }
+
+    /// Install an offline reorder permutation for a matrix. Must be set
+    /// *before* `build_image` so the physical layout reflects it.
+    pub fn set_permutation(&mut self, id: MatrixId, perm: Permutation) {
+        assert_eq!(perm.len(), self.layout.rows(id));
+        self.perms.insert(id, perm);
+    }
+
+    pub fn permutation(&self, id: MatrixId) -> Option<&Permutation> {
+        self.perms.get(&id)
+    }
+
+    /// Deterministic f32 weights of one matrix in *logical* (unpermuted)
+    /// row order: scaled normals, scale = 0.3/sqrt(rows) like the L2
+    /// tests.
+    pub fn logical_matrix(&self, id: MatrixId) -> Vec<f32> {
+        let rows = self.layout.rows(id);
+        let cols = self.spec.shape_of(id.kind).cols;
+        let mut rng = Rng::new(
+            self.seed ^ (id.layer as u64) << 32 ^ (id.kind as u64) << 8,
+        );
+        let scale = 0.3 / (rows as f64).sqrt();
+        (0..rows * cols)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect()
+    }
+
+    /// Build the full flash image (runnable models): permuted rows written
+    /// at their physical offsets, f32 little-endian.
+    pub fn build_image(&self) -> Vec<u8> {
+        assert!(self.spec.runnable, "paper models are I/O-only");
+        let mut image = vec![0u8; self.layout.total_bytes() as usize];
+        for layer in 0..self.spec.layers {
+            for m in self.spec.matrices() {
+                let id = MatrixId::new(layer, m.kind);
+                let w = self.logical_matrix(id);
+                let cols = m.cols;
+                let row_bytes = self.layout.row_bytes(id);
+                for phys_row in 0..m.rows {
+                    let logical = match self.perms.get(&id) {
+                        Some(p) => p.old_of(phys_row),
+                        None => phys_row,
+                    };
+                    let src = &w[logical * cols..(logical + 1) * cols];
+                    let dst_off = self.layout.row_offset(id, phys_row) as usize;
+                    let dst = &mut image[dst_off..dst_off + cols * 4];
+                    for (j, &v) in src.iter().enumerate() {
+                        dst[j * 4..j * 4 + 4].copy_from_slice(&v.to_le_bytes());
+                    }
+                    let _ = row_bytes;
+                }
+            }
+        }
+        image
+    }
+
+    /// Read the rows of `chunks` (physical/reordered row space) from the
+    /// device, decode to f32, and return (rows-major gathered weights,
+    /// I/O service time).
+    pub fn read_rows(
+        &self,
+        device: &dyn FlashDevice,
+        id: MatrixId,
+        chunks: &[Chunk],
+    ) -> anyhow::Result<(Vec<f32>, Duration)> {
+        let extents = self.layout.extents_for_chunks(id, chunks);
+        let (bytes, t) = device.read_batch_vec(&extents)?;
+        let cols = self.spec.shape_of(id.kind).cols;
+        let row_bytes = self.layout.row_bytes(id);
+        let n_rows: usize = chunks.iter().map(|c| c.len).sum();
+        let mut out = Vec::with_capacity(n_rows * cols);
+        let mut at = 0usize;
+        for c in chunks {
+            for r in 0..c.len {
+                let row = &bytes[at + r * row_bytes..at + r * row_bytes + cols * 4];
+                for j in 0..cols {
+                    out.push(f32::from_le_bytes(row[j * 4..j * 4 + 4].try_into().unwrap()));
+                }
+            }
+            at += c.len * row_bytes;
+        }
+        Ok((out, t))
+    }
+
+    /// Timing-only chunk read (I/O experiments on paper models).
+    pub fn read_timing(
+        &self,
+        device: &dyn FlashDevice,
+        id: MatrixId,
+        chunks: &[Chunk],
+    ) -> anyhow::Result<Duration> {
+        let extents = self.layout.extents_for_chunks(id, chunks);
+        device.service_time(&extents)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{DeviceProfile, SimulatedSsd};
+
+    #[test]
+    fn layout_regions_disjoint_and_packed() {
+        let spec = ModelSpec::tiny();
+        let layout = FlashLayout::build(&spec, false);
+        let mut spans: Vec<(u64, u64)> = Vec::new();
+        for layer in 0..spec.layers {
+            for m in spec.matrices() {
+                let id = MatrixId::new(layer, m.kind);
+                let base = layout.row_offset(id, 0);
+                let end = base + (layout.rows(id) * layout.row_bytes(id)) as u64;
+                spans.push((base, end));
+            }
+        }
+        spans.sort();
+        for w in spans.windows(2) {
+            assert!(w[0].1 <= w[1].0, "overlap {:?}", w);
+        }
+        assert_eq!(spans.last().unwrap().1, layout.total_bytes());
+    }
+
+    #[test]
+    fn layout_total_matches_spec() {
+        let spec = ModelSpec::small();
+        let layout = FlashLayout::build(&spec, false);
+        assert_eq!(layout.total_bytes(), spec.total_bytes());
+    }
+
+    #[test]
+    fn aligned_layout_pages() {
+        let spec = ModelSpec::tiny();
+        let layout = FlashLayout::build(&spec, true);
+        for layer in 0..spec.layers {
+            for m in spec.matrices() {
+                let id = MatrixId::new(layer, m.kind);
+                assert_eq!(layout.row_bytes(id) % 4096, 0);
+                assert_eq!(layout.row_offset(id, 1) % 4096, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn extents_merge_chunk_rows() {
+        let spec = ModelSpec::tiny();
+        let layout = FlashLayout::build(&spec, false);
+        let id = MatrixId::new(0, MatrixKind::Down);
+        let rb = layout.row_bytes(id);
+        let chunks = [Chunk::new(3, 4), Chunk::new(10, 1)];
+        let ex = layout.extents_for_chunks(id, &chunks);
+        assert_eq!(ex.len(), 2);
+        assert_eq!(ex[0].len, 4 * rb);
+        assert_eq!(ex[0].offset, layout.row_offset(id, 3));
+        assert_eq!(ex[1].len, rb);
+    }
+
+    #[test]
+    fn image_round_trip_unpermuted() {
+        let store = WeightStore::new(ModelSpec::tiny(), false, 42);
+        let image = store.build_image();
+        let dev = SimulatedSsd::with_image(DeviceProfile::nano(), image, 1);
+        let id = MatrixId::new(1, MatrixKind::Gate);
+        let logical = store.logical_matrix(id);
+        let cols = store.spec.shape_of(MatrixKind::Gate).cols;
+        let (rows, _) = store
+            .read_rows(&dev, id, &[Chunk::new(5, 3)])
+            .unwrap();
+        assert_eq!(rows.len(), 3 * cols);
+        assert_eq!(&rows[..cols], &logical[5 * cols..6 * cols]);
+        assert_eq!(&rows[2 * cols..], &logical[7 * cols..8 * cols]);
+    }
+
+    #[test]
+    fn image_round_trip_permuted() {
+        let mut store = WeightStore::new(ModelSpec::tiny(), false, 42);
+        let id = MatrixId::new(0, MatrixKind::Down);
+        let n = store.layout.rows(id);
+        // Reverse permutation: physical row p holds logical row n-1-p.
+        let perm = Permutation::from_fwd((0..n as u32).rev().collect()).unwrap();
+        store.set_permutation(id, perm);
+        let image = store.build_image();
+        let dev = SimulatedSsd::with_image(DeviceProfile::nano(), image, 1);
+        let logical = store.logical_matrix(id);
+        let cols = store.spec.shape_of(MatrixKind::Down).cols;
+        let (rows, _) = store.read_rows(&dev, id, &[Chunk::new(0, 1)]).unwrap();
+        assert_eq!(&rows[..], &logical[(n - 1) * cols..n * cols]);
+    }
+
+    #[test]
+    fn weights_deterministic_per_seed() {
+        let a = WeightStore::new(ModelSpec::tiny(), false, 7);
+        let b = WeightStore::new(ModelSpec::tiny(), false, 7);
+        let c = WeightStore::new(ModelSpec::tiny(), false, 8);
+        let id = MatrixId::new(0, MatrixKind::Q);
+        assert_eq!(a.logical_matrix(id), b.logical_matrix(id));
+        assert_ne!(a.logical_matrix(id), c.logical_matrix(id));
+    }
+
+    #[test]
+    fn matrices_differ_across_layers_and_kinds() {
+        let s = WeightStore::new(ModelSpec::tiny(), false, 7);
+        let a = s.logical_matrix(MatrixId::new(0, MatrixKind::Q));
+        let b = s.logical_matrix(MatrixId::new(1, MatrixKind::Q));
+        let c = s.logical_matrix(MatrixId::new(0, MatrixKind::K));
+        assert_ne!(a, b);
+        assert_ne!(a[..16], c[..16]);
+    }
+
+    #[test]
+    fn timing_read_on_paper_model() {
+        let store = WeightStore::new(ModelSpec::llava_05b(), false, 1);
+        let dev = SimulatedSsd::timing_only(
+            DeviceProfile::nano(),
+            store.layout.total_bytes(),
+            3,
+        );
+        let id = MatrixId::new(10, MatrixKind::Down);
+        let t = store
+            .read_timing(&dev, id, &[Chunk::new(0, 64), Chunk::new(1000, 64)])
+            .unwrap();
+        assert!(t > Duration::ZERO);
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal property-testing harness (the `proptest` crate is unavailable
+//! offline). Runs a property over many deterministic random cases and
+//! reports the failing seed so cases can be replayed exactly.
+//!
+//! ```
+//! use neuron_chunking::proptest::check;
+//! check("sum is commutative", 200, |rng| {
+//!     let (a, b) = (rng.below(100), rng.below(100));
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Run `prop` over `cases` deterministic seeds; panic with the seed and
+/// message on the first failure.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xC0FFEE, prop)
+}
+
+/// Like [`check`] with an explicit base seed (replay a failure by passing
+/// the reported seed with `cases = 1`).
+pub fn check_seeded<F>(name: &str, cases: u64, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random importance vector with mixed structure (uniform,
+/// spiky, clustered, constant) — the adversarial input family for
+/// selection properties.
+pub fn arb_importance(rng: &mut Rng, max_n: usize) -> Vec<f32> {
+    let n = rng.range(1, max_n.max(2));
+    let style = rng.below(4);
+    (0..n)
+        .map(|i| match style {
+            0 => rng.f32(),                                     // uniform
+            1 => rng.f32().powi(6),                             // spiky
+            2 => ((i / 8) % 2) as f32 + 0.01 * rng.f32(),       // clustered
+            _ => 1.0,                                           // constant
+        })
+        .collect()
+}
+
+/// A random (but valid) latency table with positive, non-decreasing
+/// entries.
+pub fn arb_latency_table(rng: &mut Rng) -> crate::latency::LatencyTable {
+    let steps = rng.range(4, 64);
+    let base = 10e-6 * (1.0 + rng.f64() * 20.0);
+    let slope = 0.1e-6 * (1.0 + rng.f64() * 10.0);
+    let entries: Vec<f64> = (1..=steps)
+        .map(|i| base + slope * i as f64 * (1.0 + 0.1 * rng.f64()))
+        .scan(0.0f64, |acc, v| {
+            *acc = acc.max(v);
+            Some(*acc)
+        })
+        .collect();
+    let row_bytes = [256usize, 1024, 4096][rng.below(3)];
+    crate::latency::LatencyTable::new(1024, entries, row_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0u64);
+        check("always ok", 50, |_| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            if rng.below(3) < 2 {
+                Ok(())
+            } else {
+                Err("boom".into())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        // Same base seed -> same generated values.
+        let mut first = Vec::new();
+        check_seeded("gen", 5, 42, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check_seeded("gen", 5, 42, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn arb_importance_valid() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = arb_importance(&mut rng, 256);
+            assert!(!v.is_empty() && v.len() <= 256);
+            assert!(v.iter().all(|x| x.is_finite() && *x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn arb_table_valid() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let t = arb_latency_table(&mut rng);
+            assert!(t.latency_bytes(1024) > 0.0);
+            // Non-decreasing.
+            assert!(t.latency_bytes(4096) <= t.latency_bytes(8192) + 1e-15);
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Ripple-style co-activation reordering (Appendix G comparison).
+//!
+//! Builds a greedy chain: start from the most frequently active neuron,
+//! repeatedly append the unplaced neuron with the highest co-activation
+//! count with the current chain tail. This approximates Ripple's
+//! correlation-aware neuron placement without its link-structure
+//! machinery; Appendix G finds it performs on par with hot–cold
+//! reordering, which is exactly what our Fig 12 bench shows.
+//!
+//! Complexity: O(n²) pairwise counts over a (sub)sampled calibration set —
+//! acceptable offline for the matrix sizes in play; the paper makes the
+//! same offline/runtime split.
+
+use crate::reorder::Permutation;
+
+#[derive(Clone, Copy, Debug)]
+pub struct CoActivationReorder {
+    /// Neurons considered "active" per sample: top `active_frac` fraction.
+    pub active_frac: f64,
+}
+
+impl Default for CoActivationReorder {
+    fn default() -> Self {
+        Self { active_frac: 0.5 }
+    }
+}
+
+impl CoActivationReorder {
+    /// Binary activation matrix (samples × neurons) from importance.
+    fn binarize(&self, samples: &[Vec<f32>], n: usize) -> Vec<Vec<bool>> {
+        let k = ((n as f64 * self.active_frac) as usize).clamp(1, n);
+        samples
+            .iter()
+            .map(|s| {
+                assert_eq!(s.len(), n);
+                let mut idx: Vec<u32> = (0..n as u32).collect();
+                idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                    s[b as usize].partial_cmp(&s[a as usize]).unwrap()
+                });
+                let mut row = vec![false; n];
+                for &i in &idx[..k] {
+                    row[i as usize] = true;
+                }
+                row
+            })
+            .collect()
+    }
+
+    pub fn build(&self, samples: &[Vec<f32>], n: usize) -> Permutation {
+        if n == 0 {
+            return Permutation::identity(0);
+        }
+        let acts = self.binarize(samples, n);
+        // Co-activation counts, packed upper-triangular would halve memory;
+        // n here is a few thousand at most offline, keep it simple.
+        let mut co = vec![0u32; n * n];
+        let mut freq = vec![0u32; n];
+        for row in &acts {
+            let on: Vec<usize> = (0..n).filter(|&i| row[i]).collect();
+            for &i in &on {
+                freq[i] += 1;
+            }
+            for (ai, &i) in on.iter().enumerate() {
+                for &j in &on[ai + 1..] {
+                    co[i * n + j] += 1;
+                    co[j * n + i] += 1;
+                }
+            }
+        }
+        // Greedy chain.
+        let mut placed = vec![false; n];
+        let mut order: Vec<u32> = Vec::with_capacity(n);
+        let start = (0..n).max_by_key(|&i| freq[i]).unwrap();
+        order.push(start as u32);
+        placed[start] = true;
+        for _ in 1..n {
+            let tail = *order.last().unwrap() as usize;
+            let mut best = usize::MAX;
+            let mut best_score = (0u32, 0u32);
+            for j in 0..n {
+                if placed[j] {
+                    continue;
+                }
+                let score = (co[tail * n + j], freq[j]);
+                if best == usize::MAX || score > best_score {
+                    best = j;
+                    best_score = score;
+                }
+            }
+            order.push(best as u32);
+            placed[best] = true;
+        }
+        Permutation::from_fwd(order).expect("chain is a bijection")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Two disjoint co-activating groups; the chain must keep each group
+    /// contiguous.
+    #[test]
+    fn groups_stay_contiguous() {
+        let n = 16;
+        let group_a: Vec<usize> = vec![0, 3, 5, 9, 12, 14];
+        let mut rng = Rng::new(3);
+        let mut samples = Vec::new();
+        for _ in 0..60 {
+            let a_active = rng.bool(0.5);
+            let sample: Vec<f32> = (0..n)
+                .map(|i| {
+                    let in_a = group_a.contains(&i);
+                    if in_a == a_active {
+                        0.8 + 0.2 * rng.f32()
+                    } else {
+                        0.2 * rng.f32()
+                    }
+                })
+                .collect();
+            samples.push(sample);
+        }
+        let perm = CoActivationReorder::default().build(&samples, n);
+        // Positions of group A in the new layout must be contiguous.
+        let mut pos: Vec<usize> = group_a.iter().map(|&i| perm.new_of(i)).collect();
+        pos.sort_unstable();
+        let span = pos.last().unwrap() - pos.first().unwrap() + 1;
+        assert_eq!(span, group_a.len(), "group A scattered: {pos:?}");
+    }
+
+    #[test]
+    fn is_a_valid_permutation() {
+        let mut rng = Rng::new(9);
+        let samples: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..32).map(|_| rng.f32()).collect())
+            .collect();
+        let p = CoActivationReorder::default().build(&samples, 32);
+        assert_eq!(p.len(), 32);
+        let mut seen: Vec<usize> = (0..32).map(|i| p.old_of(i)).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        let p = CoActivationReorder::default().build(&[], 0);
+        assert!(p.is_empty());
+    }
+}

@@ -1,0 +1,148 @@
+//! Row permutations with forward/inverse application, used to rewrite the
+//! weight layout offline and to permute activation vectors at runtime.
+
+/// A permutation over `n` row indices.
+///
+/// Convention: `fwd[new_pos] = old_pos` — position `i` of the reordered
+/// layout holds the original row `fwd[i]`. `apply` moves data from
+/// original order into the new layout; `inv` maps original index → new
+/// position (the runtime activation permutation).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    fwd: Vec<u32>,
+    inv: Vec<u32>,
+}
+
+impl Permutation {
+    pub fn identity(n: usize) -> Self {
+        let fwd: Vec<u32> = (0..n as u32).collect();
+        Self {
+            inv: fwd.clone(),
+            fwd,
+        }
+    }
+
+    /// Build from `fwd[new_pos] = old_pos`; validates bijectivity.
+    pub fn from_fwd(fwd: Vec<u32>) -> anyhow::Result<Self> {
+        let n = fwd.len();
+        let mut inv = vec![u32::MAX; n];
+        for (new_pos, &old) in fwd.iter().enumerate() {
+            anyhow::ensure!((old as usize) < n, "index {old} out of range {n}");
+            anyhow::ensure!(
+                inv[old as usize] == u32::MAX,
+                "duplicate index {old} in permutation"
+            );
+            inv[old as usize] = new_pos as u32;
+        }
+        Ok(Self { fwd, inv })
+    }
+
+    pub fn len(&self) -> usize {
+        self.fwd.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fwd.is_empty()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.fwd.iter().enumerate().all(|(i, &v)| i as u32 == v)
+    }
+
+    /// Original row index stored at reordered position `new_pos`.
+    #[inline]
+    pub fn old_of(&self, new_pos: usize) -> usize {
+        self.fwd[new_pos] as usize
+    }
+
+    /// Reordered position of original row `old_pos`.
+    #[inline]
+    pub fn new_of(&self, old_pos: usize) -> usize {
+        self.inv[old_pos] as usize
+    }
+
+    /// Reorder a slice of per-row values into the new layout:
+    /// `out[new_pos] = data[fwd[new_pos]]`.
+    pub fn apply<T: Copy>(&self, data: &[T]) -> Vec<T> {
+        assert_eq!(data.len(), self.len());
+        self.fwd.iter().map(|&old| data[old as usize]).collect()
+    }
+
+    /// Inverse reorder: `out[old_pos] = data[inv[old_pos]]`.
+    pub fn apply_inv<T: Copy>(&self, data: &[T]) -> Vec<T> {
+        assert_eq!(data.len(), self.len());
+        self.inv.iter().map(|&new| data[new as usize]).collect()
+    }
+
+    /// Reorder fixed-size rows of a flat buffer (weight-matrix rewrite).
+    pub fn apply_rows<T: Copy + Default>(&self, data: &[T], row_width: usize) -> Vec<T> {
+        assert_eq!(data.len(), self.len() * row_width);
+        let mut out = vec![T::default(); data.len()];
+        for (new_pos, &old) in self.fwd.iter().enumerate() {
+            let src = old as usize * row_width;
+            let dst = new_pos * row_width;
+            out[dst..dst + row_width].copy_from_slice(&data[src..src + row_width]);
+        }
+        out
+    }
+
+    /// Compose: apply `self` then `other` (other ∘ self).
+    pub fn then(&self, other: &Permutation) -> Permutation {
+        assert_eq!(self.len(), other.len());
+        let fwd: Vec<u32> = other.fwd.iter().map(|&mid| self.fwd[mid as usize]).collect();
+        Permutation::from_fwd(fwd).expect("composition of bijections")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_round_trip() {
+        let p = Permutation::identity(5);
+        assert!(p.is_identity());
+        let data = [10, 20, 30, 40, 50];
+        assert_eq!(p.apply(&data), data.to_vec());
+        assert_eq!(p.apply_inv(&data), data.to_vec());
+    }
+
+    #[test]
+    fn apply_then_inverse_is_identity() {
+        let p = Permutation::from_fwd(vec![2, 0, 3, 1]).unwrap();
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let reordered = p.apply(&data);
+        assert_eq!(reordered, vec![3.0, 1.0, 4.0, 2.0]);
+        assert_eq!(p.apply_inv(&reordered), data.to_vec());
+    }
+
+    #[test]
+    fn old_new_consistency() {
+        let p = Permutation::from_fwd(vec![3, 1, 0, 2]).unwrap();
+        for new_pos in 0..4 {
+            assert_eq!(p.new_of(p.old_of(new_pos)), new_pos);
+        }
+    }
+
+    #[test]
+    fn rejects_non_bijective() {
+        assert!(Permutation::from_fwd(vec![0, 0, 1]).is_err());
+        assert!(Permutation::from_fwd(vec![0, 5]).is_err());
+    }
+
+    #[test]
+    fn apply_rows_moves_whole_rows() {
+        let p = Permutation::from_fwd(vec![1, 0]).unwrap();
+        let data = [1u8, 2, 3, 10, 20, 30];
+        assert_eq!(p.apply_rows(&data, 3), vec![10, 20, 30, 1, 2, 3]);
+    }
+
+    #[test]
+    fn composition() {
+        let a = Permutation::from_fwd(vec![1, 2, 0]).unwrap(); // rotate
+        let b = Permutation::from_fwd(vec![2, 1, 0]).unwrap(); // reverse
+        let c = a.then(&b);
+        let data = [10, 20, 30];
+        assert_eq!(c.apply(&data), b.apply(&a.apply(&data)));
+    }
+}

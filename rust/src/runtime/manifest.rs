@@ -1,0 +1,209 @@
+//! Parser for `artifacts/manifest.tsv` — the flat mirror of
+//! `manifest.json` emitted by `python/compile/aot.py` (the offline
+//! environment has no JSON crate; TSV keeps the Rust side dependency-free).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Model block dims as compiled (mirror of python ModelDims).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d: usize,
+    pub h: usize,
+    pub nh: usize,
+    pub t: usize,
+    pub c: usize,
+    pub layers: usize,
+    /// Budget buckets over the hidden dim, descending.
+    pub d_buckets: Vec<usize>,
+    /// Budget buckets over the MLP dim, descending.
+    pub h_buckets: Vec<usize>,
+}
+
+impl ModelMeta {
+    /// Smallest compiled bucket >= `rows` for dim buckets `bs` (ascending
+    /// fallback to the largest if `rows` exceeds all buckets).
+    pub fn bucket_for(bs: &[usize], rows: usize) -> usize {
+        bs.iter()
+            .copied()
+            .filter(|&b| b >= rows)
+            .min()
+            .unwrap_or_else(|| bs.iter().copied().max().unwrap())
+    }
+}
+
+/// One compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub model: String,
+    pub r: usize,
+    pub t: usize,
+    pub outputs: usize,
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: HashMap<String, ModelMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+    by_name: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let ctx = || format!("manifest line {}", lineno + 1);
+            match fields[0] {
+                "model" => {
+                    anyhow::ensure!(fields.len() == 10, "{}: bad model row", ctx());
+                    let name = fields[1].to_string();
+                    let parse_list = |s: &str| -> Result<Vec<usize>> {
+                        s.split(',')
+                            .map(|x| x.parse::<usize>().map_err(Into::into))
+                            .collect()
+                    };
+                    m.models.insert(
+                        name.clone(),
+                        ModelMeta {
+                            name,
+                            d: fields[2].parse()?,
+                            h: fields[3].parse()?,
+                            nh: fields[4].parse()?,
+                            t: fields[5].parse()?,
+                            c: fields[6].parse()?,
+                            layers: fields[7].parse()?,
+                            d_buckets: parse_list(fields[8])?,
+                            h_buckets: parse_list(fields[9])?,
+                        },
+                    );
+                }
+                "artifact" => {
+                    anyhow::ensure!(fields.len() == 9, "{}: bad artifact row", ctx());
+                    let inputs: Vec<Vec<usize>> = fields[8]
+                        .split(';')
+                        .map(|shape| {
+                            if shape == "scalar" {
+                                Ok(Vec::new())
+                            } else {
+                                shape
+                                    .split(',')
+                                    .map(|d| d.parse::<usize>().map_err(Into::into))
+                                    .collect::<Result<Vec<usize>>>()
+                            }
+                        })
+                        .collect::<Result<_>>()?;
+                    let art = ArtifactMeta {
+                        name: fields[1].to_string(),
+                        file: fields[2].to_string(),
+                        kind: fields[3].to_string(),
+                        model: fields[4].to_string(),
+                        r: fields[5].parse()?,
+                        t: fields[6].parse()?,
+                        outputs: fields[7].parse()?,
+                        inputs,
+                    };
+                    m.by_name.insert(art.name.clone(), m.artifacts.len());
+                    m.artifacts.push(art);
+                }
+                other => anyhow::bail!("{}: unknown row type {other}", ctx()),
+            }
+        }
+        anyhow::ensure!(!m.artifacts.is_empty(), "manifest has no artifacts");
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.get(name)
+    }
+
+    /// Artifact name for a (kind, model, bucket).
+    pub fn artifact_name(kind: &str, model: &str, r: usize) -> String {
+        format!("{kind}_{model}_r{r}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "model\ttiny\t64\t192\t4\t8\t32\t2\t64,48,32,16\t192,144,96,64,48\nartifact\tqkv_append_tiny_r64\tqkv_append_tiny_r64.hlo.txt\tqkv_append\ttiny\t64\t8\t3\t8,64;64,64;64,64;64,64;32,64;32,64;32\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let model = m.model("tiny").unwrap();
+        assert_eq!(model.d, 64);
+        assert_eq!(model.d_buckets, vec![64, 48, 32, 16]);
+        let a = m.artifact("qkv_append_tiny_r64").unwrap();
+        assert_eq!(a.inputs.len(), 7);
+        assert_eq!(a.inputs[0], vec![8, 64]);
+        assert_eq!(a.inputs[6], vec![32]);
+        assert_eq!(a.outputs, 3);
+    }
+
+    #[test]
+    fn bucket_rounding() {
+        let bs = vec![64, 48, 32, 16];
+        assert_eq!(ModelMeta::bucket_for(&bs, 1), 16);
+        assert_eq!(ModelMeta::bucket_for(&bs, 16), 16);
+        assert_eq!(ModelMeta::bucket_for(&bs, 17), 32);
+        assert_eq!(ModelMeta::bucket_for(&bs, 49), 64);
+        assert_eq!(ModelMeta::bucket_for(&bs, 99), 64); // over max: clamp
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("nonsense\tfoo\n").is_err());
+        assert!(Manifest::parse("").is_err());
+    }
+
+    #[test]
+    fn artifact_name_format() {
+        assert_eq!(
+            Manifest::artifact_name("gateup", "small", 192),
+            "gateup_small_r192"
+        );
+    }
+
+    #[test]
+    fn real_manifest_parses() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.tsv");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.models.contains_key("tiny"));
+            assert!(m.models.contains_key("small"));
+            for a in &m.artifacts {
+                assert!(
+                    Path::new(env!("CARGO_MANIFEST_DIR"))
+                        .join("artifacts")
+                        .join(&a.file)
+                        .exists(),
+                    "missing {}",
+                    a.file
+                );
+            }
+        }
+    }
+}

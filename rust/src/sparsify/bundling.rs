@@ -1,0 +1,144 @@
+//! LLM-in-a-Flash row–column **bundling** baseline (Appendix L, Table 3).
+//!
+//! LLMFlash stores the weights touched by one neuron across projection
+//! matrices adjacently (up-projection column + down-projection row), so a
+//! selected neuron costs one contiguous read of `bundle_rows` rows.
+//! Selection itself stays magnitude top-k over neurons. The result:
+//! bundled reads have fixed, modest contiguity (~2 rows ≈ 74 KB on the
+//! paper's models — about half the saturating chunk size on Jetson), and
+//! neurons scattered by top-k stay scattered. The paper shows this helps
+//! sometimes (LLaVA-0.5B) and hurts elsewhere — pattern-dependent, unlike
+//! explicit contiguity optimization.
+
+use crate::latency::{Chunk, LatencyTable};
+use crate::sparsify::{SelectionMask, Selector};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Bundling {
+    /// Rows fused per neuron bundle (2 = up+down, 3 = q/k/v).
+    pub bundle_rows: usize,
+}
+
+impl Bundling {
+    pub fn new(bundle_rows: usize) -> Self {
+        assert!(bundle_rows >= 1);
+        Self { bundle_rows }
+    }
+}
+
+impl Selector for Bundling {
+    fn name(&self) -> &str {
+        "bundling"
+    }
+
+    /// Interpret the row space as ⌈n/b⌉ bundles of `b` adjacent rows; rank
+    /// bundles by summed importance; take whole bundles until the budget
+    /// is filled.
+    fn select(
+        &self,
+        importance: &[f32],
+        budget: usize,
+        _table: &LatencyTable,
+    ) -> SelectionMask {
+        let n = importance.len();
+        let b = self.bundle_rows;
+        let budget = budget.min(n);
+        if budget == 0 || n == 0 {
+            return SelectionMask::empty(n);
+        }
+        let nb = n.div_ceil(b);
+        let mut scores: Vec<(f64, usize)> = (0..nb)
+            .map(|i| {
+                let lo = i * b;
+                let hi = (lo + b).min(n);
+                let s: f64 = importance[lo..hi].iter().map(|&v| v as f64).sum();
+                (s, i)
+            })
+            .collect();
+        scores.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut mask = vec![false; n];
+        let mut selected = 0usize;
+        for &(_, i) in &scores {
+            let lo = i * b;
+            let hi = (lo + b).min(n);
+            let len = hi - lo;
+            if selected + len > budget {
+                continue;
+            }
+            mask[lo..hi].iter_mut().for_each(|m| *m = true);
+            selected += len;
+            if selected + 1 > budget {
+                break;
+            }
+        }
+        SelectionMask::from_mask(mask)
+    }
+}
+
+/// Contiguity statistics of a bundled selection — helper for Table 3
+/// analysis (bundled chunks have size >= bundle_rows unless merged).
+pub fn min_chunk_rows(chunks: &[Chunk]) -> usize {
+    chunks.iter().map(|c| c.len).min().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> LatencyTable {
+        LatencyTable::new(1024, vec![50e-6, 51e-6, 52e-6, 53e-6], 1024)
+    }
+
+    #[test]
+    fn selects_whole_bundles() {
+        let imp = [9.0f32, 9.0, 0.1, 0.1, 5.0, 5.0, 0.2, 0.2];
+        let sm = Bundling::new(2).select(&imp, 4, &table());
+        assert_eq!(sm.indices(), vec![0, 1, 4, 5]);
+        assert!(min_chunk_rows(&sm.chunks) >= 2);
+    }
+
+    #[test]
+    fn respects_budget_with_whole_bundles_only() {
+        let imp = [1.0f32; 10];
+        let sm = Bundling::new(3).select(&imp, 7, &table());
+        // 3-row bundles: can fit 2 bundles (6 rows) under budget 7... plus
+        // the tail bundle (10 % 3 = 1 row) may fit too -> 7 rows.
+        assert!(sm.rows() <= 7);
+        assert!(sm.rows() >= 6);
+    }
+
+    #[test]
+    fn adjacent_bundles_merge_into_larger_chunks() {
+        let imp = [1.0f32; 8];
+        let sm = Bundling::new(2).select(&imp, 8, &table());
+        assert_eq!(sm.chunks.len(), 1);
+        assert_eq!(sm.chunks[0].len, 8);
+    }
+
+    #[test]
+    fn bundling_dilutes_importance_vs_topk() {
+        use crate::sparsify::TopK;
+        // Scattered high-importance neurons: bundling drags in their
+        // low-importance partners, capturing less importance per row.
+        let mut imp = vec![0.0f32; 64];
+        for i in (0..64).step_by(2) {
+            imp[i] = 1.0;
+        }
+        let t = table();
+        let ours = Bundling::new(2).select(&imp, 16, &t);
+        let topk = TopK.select(&imp, 16, &t);
+        assert!(topk.captured_importance(&imp) > ours.captured_importance(&imp));
+    }
+
+    #[test]
+    fn bundle_one_equals_topk_importance() {
+        use crate::sparsify::TopK;
+        let imp: Vec<f32> = (0..32).map(|i| ((i * 7) % 13) as f32).collect();
+        let t = table();
+        let a = Bundling::new(1).select(&imp, 10, &t);
+        let b = TopK.select(&imp, 10, &t);
+        assert!(
+            (a.captured_importance(&imp) - b.captured_importance(&imp)).abs() < 1e-6
+        );
+    }
+}

@@ -1,0 +1,140 @@
+//! Neuron selection policies.
+//!
+//! * [`TopK`] — the conventional magnitude-based baseline (TEAL/CATS
+//!   style, §B.2): pick the `R` rows with largest |activation|.
+//! * [`Threshold`] — CATS-style fixed-threshold variant.
+//! * [`ChunkSelect`] — the paper's utility-guided chunk selection
+//!   (Algorithm 1): multi-scale candidate windows scored by
+//!   importance-per-latency, greedy non-overlapping selection.
+//! * [`Bundling`] — LLM-in-a-Flash row–column bundling baseline
+//!   (Appendix L / Table 3).
+//! * [`teal::SparsityAllocator`] — profiling-based layerwise sparsity
+//!   levels shared by baseline and ours (§4.1).
+
+mod bundling;
+mod chunk_select;
+pub mod teal;
+mod threshold;
+mod topk;
+pub mod tuning;
+
+pub use bundling::{min_chunk_rows, Bundling};
+pub use chunk_select::{ChunkSelect, ChunkSelectConfig};
+pub use threshold::Threshold;
+pub use topk::TopK;
+
+use crate::latency::{chunks_from_mask, Chunk, LatencyTable};
+
+/// Result of a selection: boolean mask + its maximal chunks.
+#[derive(Clone, Debug)]
+pub struct SelectionMask {
+    pub mask: Vec<bool>,
+    pub chunks: Vec<Chunk>,
+}
+
+impl SelectionMask {
+    pub fn from_mask(mask: Vec<bool>) -> Self {
+        let chunks = chunks_from_mask(&mask);
+        Self { mask, chunks }
+    }
+
+    pub fn empty(n: usize) -> Self {
+        Self {
+            mask: vec![false; n],
+            chunks: Vec::new(),
+        }
+    }
+
+    pub fn full(n: usize) -> Self {
+        Self::from_mask(vec![true; n])
+    }
+
+    /// Number of selected rows.
+    pub fn rows(&self) -> usize {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+
+    /// Selected row indices in ascending order.
+    pub fn indices(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.rows());
+        for c in &self.chunks {
+            out.extend(c.start..c.end());
+        }
+        out
+    }
+
+    /// Total importance captured by the selection.
+    pub fn captured_importance(&self, importance: &[f32]) -> f64 {
+        self.chunks
+            .iter()
+            .map(|c| {
+                importance[c.start..c.end()]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Internal consistency: chunks are sorted, non-overlapping, maximal,
+    /// and agree with the mask. (Used by tests and debug assertions.)
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.chunks == chunks_from_mask(&self.mask),
+            "chunks/mask mismatch"
+        );
+        Ok(())
+    }
+}
+
+/// A neuron-selection policy.
+///
+/// `importance` is the per-row score (mean |activation| over tokens);
+/// `budget` is the maximum number of rows to select (the paper's `R`);
+/// `table` is the device latency model (ignored by latency-blind
+/// baselines).
+pub trait Selector: Send + Sync {
+    fn name(&self) -> &str;
+
+    fn select(
+        &self,
+        importance: &[f32],
+        budget: usize,
+        table: &LatencyTable,
+    ) -> SelectionMask;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_mask_roundtrip() {
+        let mask = vec![true, true, false, true, false];
+        let sm = SelectionMask::from_mask(mask);
+        assert_eq!(sm.rows(), 3);
+        assert_eq!(sm.indices(), vec![0, 1, 3]);
+        sm.validate().unwrap();
+    }
+
+    #[test]
+    fn captured_importance_sums_selected() {
+        let sm = SelectionMask::from_mask(vec![true, false, true]);
+        let imp = [1.0f32, 10.0, 2.5];
+        assert!((sm.captured_importance(&imp) - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_and_full() {
+        assert_eq!(SelectionMask::empty(4).rows(), 0);
+        assert_eq!(SelectionMask::full(4).rows(), 4);
+        assert_eq!(SelectionMask::full(4).chunks.len(), 1);
+    }
+
+    #[test]
+    fn validate_catches_mismatch() {
+        let mut sm = SelectionMask::from_mask(vec![true, false]);
+        sm.chunks = vec![Chunk::new(0, 2)];
+        assert!(sm.validate().is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! TEAL-style profiling-based layerwise sparsity allocation (§4.1).
+//!
+//! Both the baseline and neuron chunking consume per-matrix sparsity
+//! levels determined offline from a calibration set: a shared quantile
+//! threshold on *normalized* importance lets matrices with flatter
+//! distributions keep more rows while spiky ones are cut harder — which
+//! reproduces the paper's observation (Appendix F) that some matrices end
+//! up with very high or very low sparsity at a given effective level.
+
+/// Per-matrix calibration statistics: a sample of importance values.
+#[derive(Clone, Debug)]
+pub struct MatrixCalibration {
+    pub name: String,
+    /// Row count of the matrix (weights per-matrix sparsity -> budget).
+    pub rows: usize,
+    /// Sampled importance values from the calibration set.
+    pub samples: Vec<f32>,
+}
+
+/// Allocates per-matrix sparsity levels for a global effective target.
+#[derive(Clone, Debug)]
+pub struct SparsityAllocator {
+    calibrations: Vec<MatrixCalibration>,
+    /// Per-matrix normalized (mean-1) sorted samples.
+    normalized: Vec<Vec<f32>>,
+}
+
+impl SparsityAllocator {
+    pub fn new(calibrations: Vec<MatrixCalibration>) -> Self {
+        let normalized = calibrations
+            .iter()
+            .map(|c| {
+                let mean = c.samples.iter().map(|&v| v as f64).sum::<f64>()
+                    / c.samples.len().max(1) as f64;
+                let mut v: Vec<f32> = c
+                    .samples
+                    .iter()
+                    .map(|&x| if mean > 0.0 { (x as f64 / mean) as f32 } else { x })
+                    .collect();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v
+            })
+            .collect();
+        Self {
+            calibrations,
+            normalized,
+        }
+    }
+
+    /// Sparsity of matrix `m` under normalized threshold `t`.
+    fn sparsity_at(&self, m: usize, t: f32) -> f64 {
+        let v = &self.normalized[m];
+        if v.is_empty() {
+            return 0.0;
+        }
+        let below = v.partition_point(|&x| x < t);
+        below as f64 / v.len() as f64
+    }
+
+    /// Row-weighted effective sparsity under threshold `t`.
+    fn effective_sparsity(&self, t: f32) -> f64 {
+        let total: usize = self.calibrations.iter().map(|c| c.rows).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.calibrations
+            .iter()
+            .enumerate()
+            .map(|(m, c)| self.sparsity_at(m, t) * c.rows as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+
+    /// Binary-search the shared threshold achieving the target effective
+    /// sparsity; return per-matrix sparsity levels.
+    pub fn allocate(&self, target: f64) -> Vec<f64> {
+        assert!((0.0..=1.0).contains(&target));
+        if self.calibrations.is_empty() {
+            return Vec::new();
+        }
+        let (mut lo, mut hi) = (0.0f32, 1.0f32);
+        // Expand hi until it overshoots.
+        while self.effective_sparsity(hi) < target && hi < 1e9 {
+            hi *= 2.0;
+        }
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if self.effective_sparsity(mid) < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let t = 0.5 * (lo + hi);
+        (0..self.calibrations.len())
+            .map(|m| self.sparsity_at(m, t))
+            .collect()
+    }
+
+    /// Budgets (rows to keep) per matrix for a target effective sparsity.
+    pub fn budgets(&self, target: f64) -> Vec<usize> {
+        self.allocate(target)
+            .iter()
+            .zip(&self.calibrations)
+            .map(|(&s, c)| ((1.0 - s) * c.rows as f64).round() as usize)
+            .collect()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.calibrations.iter().map(|c| c.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn calib(name: &str, rows: usize, sigma: f64, seed: u64) -> MatrixCalibration {
+        let mut rng = Rng::new(seed);
+        MatrixCalibration {
+            name: name.into(),
+            rows,
+            samples: (0..4000)
+                .map(|_| rng.lognormal(0.0, sigma) as f32)
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn hits_effective_target() {
+        let a = SparsityAllocator::new(vec![
+            calib("q", 1024, 0.5, 1),
+            calib("gate", 1024, 1.5, 2),
+            calib("down", 3072, 1.0, 3),
+        ]);
+        for target in [0.2, 0.4, 0.6] {
+            let alloc = a.allocate(target);
+            let total = 1024 + 1024 + 3072;
+            let eff = (alloc[0] * 1024.0 + alloc[1] * 1024.0 + alloc[2] * 3072.0)
+                / total as f64;
+            assert!((eff - target).abs() < 0.02, "target {target} got {eff}");
+        }
+    }
+
+    #[test]
+    fn spiky_matrices_get_more_sparsity() {
+        // Higher-sigma lognormal = spikier distribution = more mass in few
+        // rows = higher sparsity at a shared normalized threshold.
+        let a = SparsityAllocator::new(vec![
+            calib("flat", 1000, 0.3, 7),
+            calib("spiky", 1000, 2.0, 8),
+        ]);
+        let alloc = a.allocate(0.5);
+        assert!(
+            alloc[1] > alloc[0] + 0.1,
+            "spiky {} flat {}",
+            alloc[1],
+            alloc[0]
+        );
+    }
+
+    #[test]
+    fn budgets_complement_sparsity() {
+        let a = SparsityAllocator::new(vec![calib("m", 500, 1.0, 9)]);
+        let s = a.allocate(0.3)[0];
+        let b = a.budgets(0.3)[0];
+        assert_eq!(b, ((1.0 - s) * 500.0).round() as usize);
+    }
+
+    #[test]
+    fn zero_and_full_targets() {
+        let a = SparsityAllocator::new(vec![calib("m", 100, 1.0, 11)]);
+        assert!(a.allocate(0.0)[0] < 0.01);
+        let b = a.budgets(0.0)[0];
+        assert!(b >= 99);
+    }
+
+    #[test]
+    fn monotone_in_target() {
+        let a = SparsityAllocator::new(vec![
+            calib("x", 800, 0.8, 13),
+            calib("y", 800, 1.2, 14),
+        ]);
+        let mut prev = vec![0.0, 0.0];
+        for t in [0.1, 0.3, 0.5, 0.7] {
+            let cur = a.allocate(t);
+            assert!(cur[0] >= prev[0] - 1e-9 && cur[1] >= prev[1] - 1e-9);
+            prev = cur;
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! CATS-style threshold sparsification (§B.2 alternative): keep every row
+//! whose importance exceeds a fixed threshold, capped by the budget.
+
+use crate::latency::LatencyTable;
+use crate::sparsify::{SelectionMask, Selector, TopK};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Threshold {
+    pub threshold: f32,
+}
+
+impl Threshold {
+    pub fn new(threshold: f32) -> Self {
+        Self { threshold }
+    }
+
+    /// Calibrate a threshold achieving `sparsity` on a sample importance
+    /// distribution (the CATS calibration step).
+    pub fn calibrated(samples: &[f32], sparsity: f64) -> Self {
+        assert!((0.0..=1.0).contains(&sparsity));
+        let mut v: Vec<f32> = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cut = ((v.len() as f64) * sparsity) as usize;
+        let threshold = if cut == 0 {
+            f32::NEG_INFINITY
+        } else if cut >= v.len() {
+            f32::INFINITY
+        } else {
+            v[cut]
+        };
+        Self { threshold }
+    }
+}
+
+impl Selector for Threshold {
+    fn name(&self) -> &str {
+        "threshold"
+    }
+
+    fn select(
+        &self,
+        importance: &[f32],
+        budget: usize,
+        table: &LatencyTable,
+    ) -> SelectionMask {
+        let passing = importance.iter().filter(|&&v| v >= self.threshold).count();
+        if passing > budget {
+            // Over budget: fall back to top-k among passing rows (cap).
+            return TopK.select(importance, budget, table);
+        }
+        let mask: Vec<bool> = importance.iter().map(|&v| v >= self.threshold).collect();
+        SelectionMask::from_mask(mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> LatencyTable {
+        LatencyTable::new(1024, vec![50e-6, 51e-6], 1024)
+    }
+
+    #[test]
+    fn keeps_rows_above_threshold() {
+        let imp = [0.1f32, 0.9, 0.5, 0.95];
+        let sm = Threshold::new(0.5).select(&imp, 10, &table());
+        assert_eq!(sm.indices(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn budget_caps_selection() {
+        let imp = [1.0f32; 10];
+        let sm = Threshold::new(0.5).select(&imp, 4, &table());
+        assert_eq!(sm.rows(), 4);
+    }
+
+    #[test]
+    fn calibration_hits_target_sparsity() {
+        let samples: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        let t = Threshold::calibrated(&samples, 0.7);
+        let kept = samples.iter().filter(|&&v| v >= t.threshold).count();
+        assert!((kept as f64 / 1000.0 - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn calibration_extremes() {
+        let samples = [0.5f32; 10];
+        assert_eq!(
+            Threshold::calibrated(&samples, 0.0).threshold,
+            f32::NEG_INFINITY
+        );
+        assert_eq!(Threshold::calibrated(&samples, 1.0).threshold, f32::INFINITY);
+    }
+}

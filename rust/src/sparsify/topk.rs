@@ -1,0 +1,99 @@
+//! Conventional magnitude top-k sparsification — the paper's baseline
+//! (§4.1, following TEAL/CATS/LLM-in-a-Flash): select the `R` rows with
+//! the largest importance, ignoring storage layout entirely.
+
+use crate::latency::LatencyTable;
+use crate::sparsify::{SelectionMask, Selector};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TopK;
+
+impl Selector for TopK {
+    fn name(&self) -> &str {
+        "topk"
+    }
+
+    fn select(
+        &self,
+        importance: &[f32],
+        budget: usize,
+        _table: &LatencyTable,
+    ) -> SelectionMask {
+        let n = importance.len();
+        let k = budget.min(n);
+        if k == 0 {
+            return SelectionMask::empty(n);
+        }
+        if k == n {
+            return SelectionMask::full(n);
+        }
+        // Partial selection: select_nth_unstable on indices (O(n) expected)
+        // keeps the hot path allocation-light.
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            importance[b as usize]
+                .partial_cmp(&importance[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut mask = vec![false; n];
+        for &i in &idx[..k] {
+            mask[i as usize] = true;
+        }
+        SelectionMask::from_mask(mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> LatencyTable {
+        LatencyTable::new(1024, vec![50e-6, 51e-6, 52e-6, 53e-6], 1024)
+    }
+
+    #[test]
+    fn selects_largest() {
+        let imp = [0.1f32, 5.0, 0.2, 4.0, 3.0];
+        let sm = TopK.select(&imp, 3, &table());
+        assert_eq!(sm.indices(), vec![1, 3, 4]);
+    }
+
+    #[test]
+    fn budget_zero_and_full() {
+        let imp = [1.0f32; 8];
+        assert_eq!(TopK.select(&imp, 0, &table()).rows(), 0);
+        assert_eq!(TopK.select(&imp, 8, &table()).rows(), 8);
+        assert_eq!(TopK.select(&imp, 99, &table()).rows(), 8);
+    }
+
+    #[test]
+    fn exact_budget() {
+        let imp: Vec<f32> = (0..100).map(|i| (i as f32 * 37.0) % 11.0).collect();
+        for k in [1usize, 5, 50, 99] {
+            assert_eq!(TopK.select(&imp, k, &table()).rows(), k);
+        }
+    }
+
+    #[test]
+    fn captured_importance_is_maximal() {
+        // No other k-subset captures more importance than top-k.
+        let imp = [3.0f32, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let sm = TopK.select(&imp, 4, &table());
+        let mut sorted = imp.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let best: f64 = sorted[..4].iter().map(|&v| v as f64).sum();
+        assert!((sm.captured_importance(&imp) - best).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scattered_importance_fragments() {
+        // Alternating importance -> top-k picks every other row: worst-case
+        // contiguity (the phenomenon motivating the paper).
+        let imp: Vec<f32> = (0..64)
+            .map(|i| if i % 2 == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let sm = TopK.select(&imp, 32, &table());
+        assert_eq!(sm.chunks.len(), 32);
+        assert!(sm.chunks.iter().all(|c| c.len == 1));
+    }
+}

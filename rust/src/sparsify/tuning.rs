@@ -1,0 +1,251 @@
+//! Hyperparameter selection for chunk selection (Appendix H, Fig 13 +
+//! Table 2).
+//!
+//! The paper sweeps (chunk_sz_start_in_kb, jump_cap_in_kb) per weight-
+//! matrix shape, rejects configurations whose selection runtime exceeds
+//! 2 ms, and picks from the feasible lower-left (fine-grained) region.
+//! [`sweep`] reproduces that procedure against our selector; [`paper_table2`]
+//! records the paper's published picks for the paper-model shapes.
+
+use std::time::Instant;
+
+use crate::latency::LatencyTable;
+use crate::rng::Rng;
+use crate::sparsify::{ChunkSelect, ChunkSelectConfig, Selector};
+
+/// The paper's 2 ms per-matrix runtime gate.
+pub const RUNTIME_GATE_MS: f64 = 2.0;
+
+/// One sweep measurement point.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub start_kb: f64,
+    pub jump_cap_kb: f64,
+    pub runtime_ms: f64,
+    pub feasible: bool,
+}
+
+/// Paper Table 2 entry: chosen hyperparameters per matrix shape/device.
+#[derive(Clone, Copy, Debug)]
+pub struct Table2Entry {
+    pub rows: usize,
+    pub cols: usize,
+    pub agx_chunk_kb: f64,
+    pub agx_jump_kb: f64,
+    pub nano_chunk_kb: f64,
+    pub nano_jump_kb: f64,
+}
+
+/// The paper's published per-shape hyperparameters (Appendix H, Table 2).
+pub fn paper_table2() -> Vec<Table2Entry> {
+    let e = |rows, cols, ac, aj, nc, nj| Table2Entry {
+        rows,
+        cols,
+        agx_chunk_kb: ac,
+        agx_jump_kb: aj,
+        nano_chunk_kb: nc,
+        nano_jump_kb: nj,
+    };
+    vec![
+        e(3584, 3584, 20.0, 20.0, 24.0, 36.0),
+        e(8960, 1536, 16.0, 16.0, 20.0, 20.0),
+        e(896, 4864, 8.0, 8.0, 8.0, 8.0),
+        e(4096, 1024, 12.0, 12.0, 16.0, 16.0),
+        e(3584, 18944, 8.0, 8.0, 8.0, 8.0),
+        e(4096, 4096, 20.0, 20.0, 24.0, 24.0),
+        e(18944, 3584, 32.0, 32.0, 36.0, 36.0),
+        e(1536, 1536, 16.0, 12.0, 16.0, 12.0),
+        e(1536, 256, 8.0, 8.0, 8.0, 8.0),
+        e(896, 128, 8.0, 8.0, 8.0, 8.0),
+        e(14336, 4096, 32.0, 32.0, 40.0, 36.0),
+        e(4864, 896, 12.0, 16.0, 20.0, 16.0),
+        e(3584, 512, 8.0, 12.0, 8.0, 12.0),
+        e(896, 896, 8.0, 8.0, 8.0, 8.0),
+        e(4096, 14336, 8.0, 8.0, 8.0, 8.0),
+        e(1536, 8960, 8.0, 8.0, 8.0, 8.0),
+    ]
+}
+
+/// Lookup the paper's chosen config for a shape on a device, if published.
+pub fn paper_config_for(
+    rows: usize,
+    cols: usize,
+    device: &str,
+    saturation_kb: f64,
+) -> Option<ChunkSelectConfig> {
+    paper_table2()
+        .into_iter()
+        .find(|e| e.rows == rows && e.cols == cols)
+        .map(|e| {
+            let (c, j) = if device == "agx" {
+                (e.agx_chunk_kb, e.agx_jump_kb)
+            } else {
+                (e.nano_chunk_kb, e.nano_jump_kb)
+            };
+            ChunkSelectConfig::new(c, j, saturation_kb)
+        })
+}
+
+/// Measure selection runtime for one configuration on random importance
+/// (valid per Appendix H: >80% of runtime is data-independent sorting).
+pub fn measure_runtime_ms(
+    config: ChunkSelectConfig,
+    rows: usize,
+    row_bytes: usize,
+    table: &LatencyTable,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let table = table.with_row_bytes(row_bytes);
+    let selector = ChunkSelect::new(config);
+    let mut rng = Rng::new(seed);
+    let importance: Vec<f32> = (0..rows).map(|_| rng.f32()).collect();
+    let budget = (rows as f64 * 0.9) as usize; // sparsity 0.1: worst case
+    let mut times = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        let sm = selector.select(&importance, budget, &table);
+        std::hint::black_box(sm.rows());
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    crate::stats::median(&times)
+}
+
+/// Reproduce the Fig 13 sweep for one matrix shape: grid over start size
+/// and jump cap (4 KB increments like the paper), mark 2 ms feasibility.
+pub fn sweep(
+    rows: usize,
+    row_bytes: usize,
+    table: &LatencyTable,
+    saturation_kb: f64,
+    grid_kb: &[f64],
+    trials: usize,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &start in grid_kb {
+        for &jump in grid_kb {
+            let cfg = ChunkSelectConfig::new(start, jump, saturation_kb);
+            let rt = measure_runtime_ms(cfg, rows, row_bytes, table, trials, 7);
+            out.push(SweepPoint {
+                start_kb: start,
+                jump_cap_kb: jump,
+                runtime_ms: rt,
+                feasible: rt <= RUNTIME_GATE_MS,
+            });
+        }
+    }
+    out
+}
+
+/// The paper's two-stage pick: among feasible points, prefer the
+/// lower-left (small start, small jump = widest search coverage), with a
+/// small safety margin from the infeasible boundary.
+pub fn pick_config(points: &[SweepPoint], saturation_kb: f64) -> Option<ChunkSelectConfig> {
+    points
+        .iter()
+        .filter(|p| p.feasible && p.runtime_ms <= 0.8 * RUNTIME_GATE_MS)
+        .min_by(|a, b| {
+            (a.start_kb + a.jump_cap_kb)
+                .partial_cmp(&(b.start_kb + b.jump_cap_kb))
+                .unwrap()
+                .then(a.runtime_ms.partial_cmp(&b.runtime_ms).unwrap())
+        })
+        .map(|p| ChunkSelectConfig::new(p.start_kb, p.jump_cap_kb, saturation_kb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> LatencyTable {
+        let entries = (1..=348).map(|i| (i as f64) * 0.29e-6 + 90e-6).collect();
+        LatencyTable::new(1024, entries, 1024)
+    }
+
+    #[test]
+    fn table2_has_all_16_shapes() {
+        assert_eq!(paper_table2().len(), 16);
+    }
+
+    #[test]
+    fn paper_config_lookup() {
+        let c = paper_config_for(18944, 3584, "agx", 236.0).unwrap();
+        assert_eq!(c.min_kb, 32.0);
+        assert_eq!(c.jump_cap_kb, 32.0);
+        let c = paper_config_for(18944, 3584, "nano", 348.0).unwrap();
+        assert_eq!(c.min_kb, 36.0);
+        assert!(paper_config_for(1, 1, "agx", 236.0).is_none());
+    }
+
+    #[test]
+    fn runtime_measured_positive() {
+        let rt = measure_runtime_ms(
+            ChunkSelectConfig::new(8.0, 8.0, 64.0),
+            2048,
+            1024,
+            &table(),
+            3,
+            1,
+        );
+        assert!(rt > 0.0 && rt < 1000.0);
+    }
+
+    #[test]
+    fn coarser_configs_run_faster() {
+        let t = table();
+        let fine = measure_runtime_ms(
+            ChunkSelectConfig::new(1.0, 1.0, 128.0),
+            8192,
+            1024,
+            &t,
+            3,
+            2,
+        );
+        let coarse = measure_runtime_ms(
+            ChunkSelectConfig::new(32.0, 32.0, 128.0),
+            8192,
+            1024,
+            &t,
+            3,
+            2,
+        );
+        assert!(coarse < fine, "coarse {coarse} fine {fine}");
+    }
+
+    #[test]
+    fn pick_prefers_lower_left_feasible() {
+        let pts = vec![
+            SweepPoint {
+                start_kb: 4.0,
+                jump_cap_kb: 4.0,
+                runtime_ms: 3.0,
+                feasible: false,
+            },
+            SweepPoint {
+                start_kb: 8.0,
+                jump_cap_kb: 8.0,
+                runtime_ms: 1.2,
+                feasible: true,
+            },
+            SweepPoint {
+                start_kb: 16.0,
+                jump_cap_kb: 16.0,
+                runtime_ms: 0.4,
+                feasible: true,
+            },
+        ];
+        let c = pick_config(&pts, 236.0).unwrap();
+        assert_eq!(c.min_kb, 8.0);
+    }
+
+    #[test]
+    fn pick_none_when_all_infeasible() {
+        let pts = vec![SweepPoint {
+            start_kb: 4.0,
+            jump_cap_kb: 4.0,
+            runtime_ms: 5.0,
+            feasible: false,
+        }];
+        assert!(pick_config(&pts, 236.0).is_none());
+    }
+}

@@ -1,0 +1,358 @@
+//! Statistics substrate: summary statistics, percentiles, coefficient of
+//! variation, histograms, and the BCa bootstrap the paper uses for latency
+//! confidence intervals (§4.1: median + 95% CI from a 10 000-sample
+//! bias-corrected-and-accelerated bootstrap).
+
+use crate::rng::Rng;
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation (std/mean) — the smoothness metric of Table 1.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return f64::NAN;
+    }
+    std_dev(xs) / m
+}
+
+/// Percentile via linear interpolation on the sorted copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Standard-normal CDF (Abramowitz–Stegun 7.1.26 via erf approximation).
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation).
+pub fn phi_inv(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "phi_inv domain: {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -phi_inv(1.0 - p)
+    }
+}
+
+fn erf(x: f64) -> f64 {
+    // Abramowitz–Stegun 7.1.26, |err| <= 1.5e-7.
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Result of a bootstrap CI estimate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BootstrapCi {
+    pub estimate: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// BCa bootstrap CI for the median (the paper's latency-reporting method).
+///
+/// `resamples` defaults to the paper's 10 000 in callers; `alpha` = 0.05
+/// gives a 95% interval. Deterministic given the seed.
+pub fn bootstrap_bca_median(
+    xs: &[f64],
+    resamples: usize,
+    alpha: f64,
+    seed: u64,
+) -> BootstrapCi {
+    bootstrap_bca(xs, median, resamples, alpha, seed)
+}
+
+/// Generic BCa bootstrap for any statistic.
+pub fn bootstrap_bca(
+    xs: &[f64],
+    stat: fn(&[f64]) -> f64,
+    resamples: usize,
+    alpha: f64,
+    seed: u64,
+) -> BootstrapCi {
+    assert!(!xs.is_empty());
+    let theta = stat(xs);
+    if xs.len() == 1 {
+        return BootstrapCi {
+            estimate: theta,
+            lo: theta,
+            hi: theta,
+        };
+    }
+    let mut rng = Rng::new(seed);
+    let n = xs.len();
+    let mut boots = Vec::with_capacity(resamples);
+    let mut buf = vec![0.0; n];
+    for _ in 0..resamples {
+        for slot in buf.iter_mut() {
+            *slot = xs[rng.below(n)];
+        }
+        boots.push(stat(&buf));
+    }
+    boots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // Bias correction: fraction of bootstrap stats below the point estimate.
+    let below = boots.iter().filter(|&&b| b < theta).count();
+    let prop = ((below as f64) + 0.5) / (resamples as f64 + 1.0); // smoothed
+    let z0 = phi_inv(prop.clamp(1e-9, 1.0 - 1e-9));
+
+    // Acceleration via jackknife.
+    let mut jack = Vec::with_capacity(n);
+    let mut jbuf = Vec::with_capacity(n - 1);
+    for i in 0..n {
+        jbuf.clear();
+        jbuf.extend(xs.iter().enumerate().filter(|(j, _)| *j != i).map(|(_, v)| *v));
+        jack.push(stat(&jbuf));
+    }
+    let jm = mean(&jack);
+    let num: f64 = jack.iter().map(|j| (jm - j).powi(3)).sum();
+    let den: f64 = jack.iter().map(|j| (jm - j).powi(2)).sum::<f64>().powf(1.5);
+    let a = if den.abs() < 1e-30 { 0.0 } else { num / (6.0 * den) };
+
+    let z_alpha = phi_inv(alpha / 2.0);
+    let z_1alpha = phi_inv(1.0 - alpha / 2.0);
+    let adj = |z: f64| -> f64 {
+        let w = z0 + (z0 + z) / (1.0 - a * (z0 + z));
+        phi(w)
+    };
+    let lo_q = adj(z_alpha).clamp(0.0, 1.0) * 100.0;
+    let hi_q = adj(z_1alpha).clamp(0.0, 1.0) * 100.0;
+    BootstrapCi {
+        estimate: theta,
+        lo: percentile_sorted(&boots, lo_q),
+        hi: percentile_sorted(&boots, hi_q),
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64)
+                as usize;
+            let idx = idx.min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// (bin_center, density) pairs; density integrates to <= 1.
+    pub fn density(&self) -> Vec<(f64, f64)> {
+        let total = self.total().max(1) as f64;
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (self.lo + (i as f64 + 0.5) * w, c as f64 / total / w))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn std_dev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((std_dev(&xs) - 2.138).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cv_scale_invariant() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b: Vec<f64> = a.iter().map(|x| x * 100.0).collect();
+        assert!((cv(&a) - cv(&b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let xs = [10.0, 20.0, 30.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 30.0);
+        assert_eq!(percentile(&xs, 50.0), 20.0);
+    }
+
+    #[test]
+    fn phi_inv_round_trip() {
+        for p in [0.01, 0.025, 0.2, 0.5, 0.8, 0.975, 0.99] {
+            assert!((phi(phi_inv(p)) - p).abs() < 1e-6, "p={p}");
+        }
+    }
+
+    #[test]
+    fn phi_symmetry() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-9);
+        assert!((phi(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bootstrap_covers_median() {
+        let mut rng = Rng::new(100);
+        let xs: Vec<f64> = (0..60).map(|_| rng.normal_ms(50.0, 5.0)).collect();
+        let ci = bootstrap_bca_median(&xs, 2000, 0.05, 7);
+        assert!(ci.lo <= ci.estimate && ci.estimate <= ci.hi);
+        assert!(ci.lo > 40.0 && ci.hi < 60.0, "{ci:?}");
+    }
+
+    #[test]
+    fn bootstrap_deterministic() {
+        let xs: Vec<f64> = (0..40).map(|i| (i as f64).sin() * 10.0 + 50.0).collect();
+        let a = bootstrap_bca_median(&xs, 500, 0.05, 42);
+        let b = bootstrap_bca_median(&xs, 500, 0.05, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bootstrap_single_sample() {
+        let ci = bootstrap_bca_median(&[3.0], 100, 0.05, 1);
+        assert_eq!(ci.lo, 3.0);
+        assert_eq!(ci.hi, 3.0);
+    }
+
+    #[test]
+    fn bootstrap_tight_for_constant_data() {
+        let xs = vec![5.0; 30];
+        let ci = bootstrap_bca_median(&xs, 500, 0.05, 3);
+        assert_eq!(ci.lo, 5.0);
+        assert_eq!(ci.hi, 5.0);
+    }
+
+    #[test]
+    fn histogram_counts_and_density() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(11.0);
+        assert_eq!(h.total(), 12);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert!(h.bins.iter().all(|&b| b == 1));
+        let d = h.density();
+        assert_eq!(d.len(), 10);
+        let integral: f64 = d.iter().map(|(_, y)| y * 1.0).sum();
+        assert!((integral - 10.0 / 12.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,84 @@
+//! Flash storage substrate.
+//!
+//! The paper's entire mechanism rests on one hardware property: flash read
+//! latency is governed by **access contiguity**, not just volume (§2.3,
+//! Fig 3/4). We reproduce that property twice over:
+//!
+//! * [`SimulatedSsd`] — an analytical SSD service-time model with device
+//!   profiles calibrated to the paper's published curves (Jetson Orin
+//!   Nano + SK Hynix P31, Jetson AGX Orin + Samsung 990 Pro). Used by
+//!   every figure/table bench so results are deterministic and
+//!   hardware-independent.
+//! * [`RealFileDevice`] — a thread-pooled `pread` engine over an actual
+//!   file (the paper uses a 6-thread C++ pool with direct I/O), so the
+//!   same experiments can run against real storage.
+//!
+//! [`Profiler`] implements the Appendix-D microbenchmark that builds the
+//! `T[s]` lookup table against either backend.
+
+mod profile;
+mod profiler;
+mod real;
+mod sim;
+
+use std::time::Duration;
+
+pub use profile::DeviceProfile;
+pub use profiler::{ProfileConfig, Profiler};
+pub use real::RealFileDevice;
+pub use sim::SimulatedSsd;
+
+/// One contiguous byte range on the device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Extent {
+    pub offset: u64,
+    pub len: usize,
+}
+
+impl Extent {
+    pub fn new(offset: u64, len: usize) -> Self {
+        Self { offset, len }
+    }
+
+    pub fn end(&self) -> u64 {
+        self.offset + self.len as u64
+    }
+}
+
+/// A flash device that can serve batched extent reads.
+///
+/// `read_batch` returns the bytes (concatenated in request order) plus the
+/// *service time* — simulated virtual time for [`SimulatedSsd`], measured
+/// wall time for [`RealFileDevice`]. Separating data from timing lets the
+/// coordinator account I/O cost precisely in both modes.
+pub trait FlashDevice: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Total addressable bytes.
+    fn capacity(&self) -> u64;
+
+    /// Read all extents into `out` (must equal the summed extent length).
+    fn read_batch(&self, extents: &[Extent], out: &mut [u8]) -> anyhow::Result<Duration>;
+
+    /// Timing-only read (simulators skip the copy; real devices read into
+    /// internal scratch). Used by profiling and I/O-only experiments.
+    fn service_time(&self, extents: &[Extent]) -> anyhow::Result<Duration>;
+
+    /// Convenience: allocate and read.
+    fn read_batch_vec(&self, extents: &[Extent]) -> anyhow::Result<(Vec<u8>, Duration)> {
+        let total: usize = extents.iter().map(|e| e.len).sum();
+        let mut out = vec![0u8; total];
+        let t = self.read_batch(extents, &mut out)?;
+        Ok((out, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extent_end() {
+        assert_eq!(Extent::new(100, 28).end(), 128);
+    }
+}

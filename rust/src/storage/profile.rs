@@ -1,0 +1,207 @@
+//! Device profiles: the handful of parameters that shape an SSD's
+//! throughput-vs-contiguity curve.
+//!
+//! The model is a three-way bottleneck (roofline) over a batch of read
+//! commands. The dominant term is the **internal-parallelism ramp**: a
+//! command of `s` bytes stripes across NAND channels/planes and engages
+//! `1 − exp(−s/chan_ramp)` of peak bandwidth, which reproduces the
+//! overhead-bound → bandwidth-bound transition of Fig 4a with 99% of
+//! peak exactly at the paper's measured saturation points (Appendix D:
+//! 348 KB on Nano, 236 KB on AGX; <100 KB on the MacBook used by
+//! LLM-in-a-Flash, Appendix L). Two further bounds: a host-side IOPS
+//! ceiling (Jetson routes NVMe interrupts to a single core — [8, 42]),
+//! binding only for tiny commands, and a queue/latency bound governing
+//! small request counts (Fig 3's rise-then-stabilize behaviour).
+//!
+//!   throughput(s) = min(peak_bw·(1−e^{−s/ramp}), iops·s, qd·s/(t_cmd+s/bw))
+
+/// Parameters of the analytical SSD service-time model.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Peak sequential read bandwidth, bytes/s.
+    pub peak_bw: f64,
+    /// Per-command fixed overhead (controller + NAND + completion), s.
+    pub cmd_overhead: f64,
+    /// Host-side command completion ceiling, commands/s (single-core
+    /// interrupt routing on Jetson).
+    pub iops_ceiling: f64,
+    /// Effective command concurrency (paper: 6-thread I/O pool).
+    pub queue_depth: usize,
+    /// Lognormal service-time jitter coefficient of variation.
+    pub jitter_cv: f64,
+    /// Pattern-dependent controller penalty for mixed chunk sizes — the
+    /// source of the proportional model-vs-real bias in Fig 5.
+    pub mix_penalty: f64,
+    /// NAND page granularity: reads are rounded up to page multiples.
+    pub page_bytes: usize,
+    /// Internal-parallelism ramp: a single command of `s` bytes engages
+    /// the flash channels/planes as `1 - exp(-s/chan_ramp)` of peak
+    /// bandwidth, putting 99% of peak exactly at `chan_ramp * ln(100)`.
+    pub chan_ramp: f64,
+}
+
+impl DeviceProfile {
+    /// Calibrated constructor: choose the channel ramp so that a command
+    /// reaches 99% of peak bandwidth exactly at `saturate_bytes` (the
+    /// measured knee of Fig 4a / Appendix D). `iops_ceiling` is the
+    /// host-side completion limit and binds only for tiny commands.
+    pub fn calibrated(
+        name: &str,
+        peak_bw: f64,
+        saturate_bytes: f64,
+        cmd_overhead: f64,
+        queue_depth: usize,
+        iops_ceiling: f64,
+    ) -> Self {
+        let chan_ramp = saturate_bytes / 100f64.ln();
+        Self {
+            name: name.to_string(),
+            peak_bw,
+            cmd_overhead,
+            iops_ceiling,
+            queue_depth,
+            jitter_cv: 0.02,
+            mix_penalty: 0.18,
+            page_bytes: 4096,
+            chan_ramp,
+        }
+    }
+
+    /// Jetson Orin Nano + SK Hynix Gold P31 (peak 3500 MB/s, saturation
+    /// ~348 KB — paper §4.1 + Appendix D). IOPS ceiling reflects the
+    /// single-core NVMe interrupt routing on Jetson [8, 42].
+    pub fn nano() -> Self {
+        let mut p = Self::calibrated("nano", 3500e6, 348e3, 30e-6, 6, 60e3);
+        // Lower-end device: controller dynamics amplify tail latency and
+        // weaken the averaging effect (paper §3.1) -> more jitter + mixing.
+        p.jitter_cv = 0.04;
+        p.mix_penalty = 0.25;
+        p
+    }
+
+    /// Jetson AGX Orin + Samsung 990 Pro (peak 7450 MB/s, saturation
+    /// ~236 KB).
+    pub fn agx() -> Self {
+        Self::calibrated("agx", 7450e6, 236e3, 25e-6, 6, 120e3)
+    }
+
+    /// MacBook-class NVMe (LLM-in-a-Flash's testbed): multi-core interrupt
+    /// distribution -> saturates below 100 KB (Appendix L).
+    pub fn macbook() -> Self {
+        Self::calibrated("macbook", 3000e6, 90e3, 20e-6, 8, 250e3)
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "nano" => Some(Self::nano()),
+            "agx" => Some(Self::agx()),
+            "macbook" => Some(Self::macbook()),
+            _ => None,
+        }
+    }
+
+    /// Round a byte count up to the page granularity.
+    pub fn page_round(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.page_bytes) * self.page_bytes
+    }
+
+    /// Fraction of peak bandwidth a single command of `bytes` engages
+    /// (internal channel/plane striping ramp).
+    pub fn parallelism(&self, bytes: usize) -> f64 {
+        1.0 - (-(self.page_round(bytes) as f64) / self.chan_ramp).exp()
+    }
+
+    /// Analytical throughput for uniform chunks of `bytes` at saturating
+    /// request counts (the closed form behind Fig 4a).
+    pub fn uniform_throughput(&self, bytes: usize) -> f64 {
+        let b = self.page_round(bytes) as f64;
+        (self.peak_bw * self.parallelism(bytes))
+            .min(self.iops_ceiling * b)
+            .min(self.peak_bw)
+            * (bytes as f64 / b)
+    }
+
+    /// Saturation point implied by the profile (bytes reaching `frac` of
+    /// peak), by scan.
+    pub fn saturation_bytes(&self, frac: f64) -> usize {
+        let peak = self.peak_bw;
+        let mut s = self.page_bytes;
+        while (self.uniform_throughput(s) as f64) < frac * peak && s < 1 << 24 {
+            s += 1024;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for n in ["nano", "agx", "macbook"] {
+            assert_eq!(DeviceProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(DeviceProfile::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn nano_saturates_near_paper_value() {
+        let p = DeviceProfile::nano();
+        let sat = p.saturation_bytes(0.99);
+        assert!(
+            (300_000..400_000).contains(&sat),
+            "nano saturation {sat} outside paper band (~348 KB)"
+        );
+    }
+
+    #[test]
+    fn agx_saturates_near_paper_value() {
+        let p = DeviceProfile::agx();
+        let sat = p.saturation_bytes(0.99);
+        assert!(
+            (200_000..280_000).contains(&sat),
+            "agx saturation {sat} outside paper band (~236 KB)"
+        );
+    }
+
+    #[test]
+    fn macbook_saturates_below_100kb() {
+        let p = DeviceProfile::macbook();
+        assert!(p.saturation_bytes(0.99) <= 100_000);
+    }
+
+    #[test]
+    fn throughput_monotone_and_capped() {
+        let p = DeviceProfile::agx();
+        let mut prev = 0.0;
+        for kb in (4..=512).step_by(4) {
+            let t = p.uniform_throughput(kb * 1024);
+            assert!(t >= prev * 0.999, "non-monotone at {kb} KB");
+            assert!(t <= p.peak_bw * 1.0001);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn agx_has_wider_absolute_contiguity_gap_than_nano() {
+        // Paper §4.2: AGX shows a wider throughput gap between contiguous
+        // and scattered access. In our calibrated model this holds for the
+        // *absolute* gap (peak − scattered bandwidth); the *relative* gap
+        // is wider on Nano because its saturation point (348 KB) sits
+        // further out than AGX's (236 KB) — see EXPERIMENTS.md discussion.
+        let nano = DeviceProfile::nano();
+        let agx = DeviceProfile::agx();
+        let gap = |p: &DeviceProfile| p.peak_bw - p.uniform_throughput(4096);
+        assert!(gap(&agx) > gap(&nano));
+    }
+
+    #[test]
+    fn page_round() {
+        let p = DeviceProfile::agx();
+        assert_eq!(p.page_round(1), 4096);
+        assert_eq!(p.page_round(4096), 4096);
+        assert_eq!(p.page_round(4097), 8192);
+    }
+}

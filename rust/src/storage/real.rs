@@ -1,0 +1,235 @@
+//! Real-file flash backend: thread-pooled positional reads over an actual
+//! file, mirroring the paper's 6-thread C++ direct-I/O pool.
+//!
+//! Notes for honest measurement:
+//! * We request `POSIX_FADV_DONTNEED` after reads and `POSIX_FADV_RANDOM`
+//!   up front to curb page-cache reuse; true `O_DIRECT` needs aligned
+//!   buffers and is enabled when `direct=true` (offsets/lengths must then
+//!   be 4 KiB-aligned, which the weight-store layout guarantees when
+//!   configured with `align_rows=true`).
+//! * Wall-clock service time is returned; on a developer box with a hot
+//!   page cache the *absolute* numbers are optimistic, but contiguity
+//!   effects (fewer syscalls, kernel readahead) still show.
+
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::storage::{Extent, FlashDevice};
+
+struct Job {
+    extent: Extent,
+    /// Destination offset in the shared output buffer.
+    dst: usize,
+}
+
+/// Thread-pooled positional-read device over a file.
+pub struct RealFileDevice {
+    file: Arc<File>,
+    capacity: u64,
+    threads: usize,
+    name: String,
+    direct: bool,
+}
+
+impl RealFileDevice {
+    pub fn open(path: &std::path::Path, threads: usize, direct: bool) -> anyhow::Result<Self> {
+        use std::os::unix::fs::OpenOptionsExt;
+        let mut opts = std::fs::OpenOptions::new();
+        opts.read(true);
+        if direct {
+            opts.custom_flags(libc::O_DIRECT);
+        }
+        let file = opts.open(path)?;
+        let capacity = file.metadata()?.len();
+        unsafe {
+            libc::posix_fadvise(file.as_raw_fd(), 0, 0, libc::POSIX_FADV_RANDOM);
+        }
+        Ok(Self {
+            file: Arc::new(file),
+            capacity,
+            threads: threads.max(1),
+            name: format!("file:{}", path.display()),
+            direct,
+        })
+    }
+
+    /// Drop this file's pages from the page cache (between trials).
+    pub fn drop_cache(&self) {
+        unsafe {
+            libc::posix_fadvise(self.file.as_raw_fd(), 0, 0, libc::POSIX_FADV_DONTNEED);
+        }
+    }
+
+    fn pread_into(file: &File, extent: Extent, buf: &mut [u8]) -> anyhow::Result<()> {
+        let mut done = 0usize;
+        while done < extent.len {
+            let rc = unsafe {
+                libc::pread(
+                    file.as_raw_fd(),
+                    buf[done..].as_mut_ptr() as *mut libc::c_void,
+                    extent.len - done,
+                    (extent.offset as usize + done) as libc::off_t,
+                )
+            };
+            anyhow::ensure!(rc > 0, "pread failed at {:?}: rc={}", extent, rc);
+            done += rc as usize;
+        }
+        Ok(())
+    }
+
+    fn run_pool(&self, extents: &[Extent], out: &mut [u8]) -> anyhow::Result<Duration> {
+        // Build the job list with destination offsets.
+        let mut jobs = Vec::with_capacity(extents.len());
+        let mut at = 0usize;
+        for &extent in extents {
+            anyhow::ensure!(
+                extent.end() <= self.capacity,
+                "extent {:?} beyond capacity {}",
+                extent,
+                self.capacity
+            );
+            jobs.push(Job { extent, dst: at });
+            at += extent.len;
+        }
+        anyhow::ensure!(out.len() == at, "out buffer {} != {}", out.len(), at);
+
+        let nthreads = self.threads.min(jobs.len()).max(1);
+        let next = AtomicUsize::new(0);
+        let failed = Mutex::new(None::<anyhow::Error>);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let out_len = out.len();
+        let start = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..nthreads {
+                let out_ptr = &out_ptr;
+                let next = &next;
+                let failed = &failed;
+                let jobs = &jobs;
+                scope.spawn(move || {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            return;
+                        }
+                        let job = &jobs[i];
+                        // SAFETY: jobs write to disjoint [dst, dst+len)
+                        // ranges of the output buffer.
+                        let slice = unsafe {
+                            debug_assert!(job.dst + job.extent.len <= out_len);
+                            std::slice::from_raw_parts_mut(
+                                out_ptr.0.add(job.dst),
+                                job.extent.len,
+                            )
+                        };
+                        if let Err(e) = Self::pread_into(&self.file, job.extent, slice) {
+                            *failed.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+        let elapsed = start.elapsed();
+        if let Some(e) = failed.into_inner().unwrap() {
+            return Err(e);
+        }
+        Ok(elapsed)
+    }
+}
+
+/// Raw pointer wrapper that is Send (disjoint-range writes only).
+struct SendPtr(*mut u8);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+// Unused Condvar import guard (thread::scope supersedes a hand-rolled
+// pool; kept minimal).
+#[allow(dead_code)]
+fn _unused(_: &Condvar) {}
+
+impl FlashDevice for RealFileDevice {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    fn read_batch(&self, extents: &[Extent], out: &mut [u8]) -> anyhow::Result<Duration> {
+        anyhow::ensure!(
+            !self.direct || extents.iter().all(|e| e.offset % 4096 == 0 && e.len % 4096 == 0),
+            "O_DIRECT requires 4 KiB-aligned extents"
+        );
+        self.run_pool(extents, out)
+    }
+
+    fn service_time(&self, extents: &[Extent]) -> anyhow::Result<Duration> {
+        let total: usize = extents.iter().map(|e| e.len).sum();
+        let mut scratch = vec![0u8; total];
+        let t = self.read_batch(extents, &mut scratch)?;
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "nc_realdev_test_{}_{}",
+            std::process::id(),
+            bytes.len()
+        ));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn reads_correct_bytes() {
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        let path = tmpfile(&data);
+        let dev = RealFileDevice::open(&path, 4, false).unwrap();
+        let extents = [Extent::new(100, 50), Extent::new(2000, 96), Extent::new(0, 10)];
+        let (bytes, t) = dev.read_batch_vec(&extents).unwrap();
+        assert_eq!(&bytes[..50], &data[100..150]);
+        assert_eq!(&bytes[50..146], &data[2000..2096]);
+        assert_eq!(&bytes[146..], &data[0..10]);
+        assert!(t > Duration::ZERO);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn many_small_extents_parallel() {
+        let data = vec![7u8; 1 << 20];
+        let path = tmpfile(&data);
+        let dev = RealFileDevice::open(&path, 6, false).unwrap();
+        let extents: Vec<Extent> = (0..512).map(|i| Extent::new(i * 2048, 1024)).collect();
+        let (bytes, _) = dev.read_batch_vec(&extents).unwrap();
+        assert_eq!(bytes.len(), 512 * 1024);
+        assert!(bytes.iter().all(|&b| b == 7));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let path = tmpfile(&[0u8; 128]);
+        let dev = RealFileDevice::open(&path, 2, false).unwrap();
+        assert!(dev.service_time(&[Extent::new(100, 100)]).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn capacity_matches_file() {
+        let path = tmpfile(&[1u8; 12345]);
+        let dev = RealFileDevice::open(&path, 2, false).unwrap();
+        assert_eq!(dev.capacity(), 12345);
+        std::fs::remove_file(path).ok();
+    }
+}

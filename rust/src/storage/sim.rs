@@ -1,0 +1,311 @@
+//! Event-level analytical SSD simulator.
+//!
+//! Service time for a batch of read commands is the max of three
+//! bottlenecks (volume, IOPS, queue/latency), lifted by a pattern-mixing
+//! penalty and multiplicative lognormal jitter. The *latency model* of
+//! §3.1 is profiled against this simulator exactly as the paper profiles
+//! its SSDs, so model-vs-"real" validation (Fig 5) is a meaningful
+//! comparison here too: the lookup table is built from isolated
+//! uniform-size batches while real patterns interleave sizes and hit the
+//! mixing penalty + queue interactions the table never saw.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::rng::Rng;
+use crate::storage::{DeviceProfile, Extent, FlashDevice};
+
+/// Deterministic simulated SSD, optionally backed by an in-RAM flash image
+/// so reads return real bytes (the weight store uses this).
+pub struct SimulatedSsd {
+    profile: DeviceProfile,
+    image: Option<Vec<u8>>,
+    capacity: u64,
+    rng: Mutex<Rng>,
+}
+
+impl SimulatedSsd {
+    /// Timing-only device (no backing data) with `capacity` bytes.
+    pub fn timing_only(profile: DeviceProfile, capacity: u64, seed: u64) -> Self {
+        Self {
+            profile,
+            image: None,
+            capacity,
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    /// Device backed by a flash image (reads return its bytes).
+    pub fn with_image(profile: DeviceProfile, image: Vec<u8>, seed: u64) -> Self {
+        let capacity = image.len() as u64;
+        Self {
+            profile,
+            image: Some(image),
+            capacity,
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    pub fn profile(&self) -> &DeviceProfile {
+        &self.profile
+    }
+
+    /// Deterministic service-time model for a command batch.
+    ///
+    /// Returns seconds. Exposed (in addition to the trait methods) for
+    /// analytical tests and the figure benches.
+    pub fn model_service_seconds(&self, extents: &[Extent], jitter: f64) -> f64 {
+        if extents.is_empty() {
+            return 0.0;
+        }
+        let p = &self.profile;
+        let n = extents.len() as f64;
+
+        // Bandwidth bound: each command only engages `parallelism(s)` of
+        // the flash channels, so small commands pay a throughput penalty
+        // even at saturating queue depth (the Fig 4a ramp).
+        let mut bw_time = 0.0f64;
+        let mut cmd_lat = 0.0f64; // summed per-command service latency
+        for e in extents {
+            let b = p.page_round(e.len) as f64;
+            bw_time += b / (p.peak_bw * p.parallelism(e.len));
+            cmd_lat += p.cmd_overhead + b / p.peak_bw;
+        }
+        let iops_time = n / p.iops_ceiling;
+        let effective_qd = (p.queue_depth as f64).min(n);
+        let queue_time = cmd_lat / effective_qd;
+        let base = bw_time.max(iops_time).max(queue_time);
+
+        // Pattern-mixing penalty: interleaved chunk sizes invoke
+        // pattern-dependent controller/queue behaviour (§3.1). Quantified
+        // as normalized entropy over log2 size classes.
+        let mix = size_mix_entropy(extents);
+        base * (1.0 + p.mix_penalty * mix) * jitter
+    }
+
+    fn jitter(&self) -> f64 {
+        let cv = self.profile.jitter_cv;
+        if cv <= 0.0 {
+            return 1.0;
+        }
+        // Lognormal with mean 1: sigma^2 = ln(1+cv^2).
+        let sigma = (1.0 + cv * cv).ln().sqrt();
+        let mu = -0.5 * sigma * sigma;
+        self.rng.lock().unwrap().lognormal(mu, sigma)
+    }
+
+    fn check_extents(&self, extents: &[Extent]) -> anyhow::Result<()> {
+        for e in extents {
+            anyhow::ensure!(
+                e.end() <= self.capacity,
+                "extent {:?} beyond capacity {}",
+                e,
+                self.capacity
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Normalized entropy (0..=1) of the batch's log2 chunk-size classes.
+/// 0 for uniform sizes, →1 for maximally mixed patterns.
+fn size_mix_entropy(extents: &[Extent]) -> f64 {
+    if extents.len() < 2 {
+        return 0.0;
+    }
+    let mut counts = [0u32; 40];
+    for e in extents {
+        let class = (usize::BITS - e.len.max(1).leading_zeros()) as usize;
+        counts[class.min(39)] += 1;
+    }
+    let n = extents.len() as f64;
+    let mut h = 0.0;
+    let mut classes = 0;
+    for &c in &counts {
+        if c > 0 {
+            classes += 1;
+            let p = c as f64 / n;
+            h -= p * p.log2();
+        }
+    }
+    if classes <= 1 {
+        0.0
+    } else {
+        h / (classes as f64).log2()
+    }
+}
+
+impl FlashDevice for SimulatedSsd {
+    fn name(&self) -> &str {
+        &self.profile.name
+    }
+
+    fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    fn read_batch(&self, extents: &[Extent], out: &mut [u8]) -> anyhow::Result<Duration> {
+        self.check_extents(extents)?;
+        let total: usize = extents.iter().map(|e| e.len).sum();
+        anyhow::ensure!(out.len() == total, "out buffer {} != {}", out.len(), total);
+        if let Some(image) = &self.image {
+            let mut at = 0;
+            for e in extents {
+                out[at..at + e.len]
+                    .copy_from_slice(&image[e.offset as usize..e.offset as usize + e.len]);
+                at += e.len;
+            }
+        }
+        let secs = self.model_service_seconds(extents, self.jitter());
+        Ok(Duration::from_secs_f64(secs))
+    }
+
+    fn service_time(&self, extents: &[Extent]) -> anyhow::Result<Duration> {
+        self.check_extents(extents)?;
+        let secs = self.model_service_seconds(extents, self.jitter());
+        Ok(Duration::from_secs_f64(secs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> SimulatedSsd {
+        SimulatedSsd::timing_only(DeviceProfile::agx(), 1 << 32, 42)
+    }
+
+    fn uniform(n: usize, size: usize, stride: u64) -> Vec<Extent> {
+        (0..n)
+            .map(|i| Extent::new(i as u64 * stride, size))
+            .collect()
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        assert_eq!(dev().model_service_seconds(&[], 1.0), 0.0);
+    }
+
+    #[test]
+    fn contiguous_beats_scattered_at_same_volume() {
+        let d = dev();
+        // 128 chunks of 256 KB vs 8192 chunks of 4 KB: same 32 MB volume.
+        let big = uniform(128, 256 * 1024, 1 << 20);
+        let small = uniform(8192, 4096, 1 << 14);
+        let t_big = d.model_service_seconds(&big, 1.0);
+        let t_small = d.model_service_seconds(&small, 1.0);
+        assert!(
+            t_small > 3.0 * t_big,
+            "scattered {t_small} vs contiguous {t_big}"
+        );
+    }
+
+    #[test]
+    fn large_read_hits_peak_bandwidth() {
+        let d = dev();
+        let e = uniform(64, 1 << 20, 1 << 21); // 64 x 1 MB
+        let t = d.model_service_seconds(&e, 1.0);
+        let bw = 64.0 * (1 << 20) as f64 / t;
+        assert!(bw > 0.9 * d.profile().peak_bw, "bw {bw}");
+    }
+
+    #[test]
+    fn small_reads_are_iops_bound() {
+        let d = dev();
+        let e = uniform(10_000, 4096, 8192);
+        let t = d.model_service_seconds(&e, 1.0);
+        let iops = 10_000.0 / t;
+        assert!(
+            iops < d.profile().iops_ceiling * 1.01,
+            "iops {iops} above ceiling"
+        );
+    }
+
+    #[test]
+    fn throughput_saturates_with_request_count() {
+        // Fig 3: throughput stabilizes once request count exceeds a small
+        // threshold.
+        let d = dev();
+        let size = 64 * 1024;
+        let tput = |n: usize| {
+            let e = uniform(n, size, (size * 2) as u64);
+            n as f64 * size as f64 / d.model_service_seconds(&e, 1.0)
+        };
+        let t1 = tput(1);
+        let t64 = tput(64);
+        let t256 = tput(256);
+        assert!(t64 > t1, "concurrency should help");
+        assert!((t256 - t64).abs() / t64 < 0.05, "should be stable: {t64} vs {t256}");
+    }
+
+    #[test]
+    fn mixing_sizes_costs_more_than_uniform() {
+        let d = dev();
+        // 64 x 64 KB uniform vs same volume split into mixed sizes.
+        let uni = uniform(64, 64 * 1024, 1 << 18);
+        let mut mixed = Vec::new();
+        for i in 0..32 {
+            mixed.push(Extent::new(i * (1 << 18), 96 * 1024));
+            mixed.push(Extent::new(i * (1 << 18) + (1 << 17), 32 * 1024));
+        }
+        let t_uni = d.model_service_seconds(&uni, 1.0);
+        let t_mix = d.model_service_seconds(&mixed, 1.0);
+        assert!(t_mix > t_uni, "mixed {t_mix} <= uniform {t_uni}");
+    }
+
+    #[test]
+    fn jitter_is_small_and_mean_one() {
+        let d = dev();
+        let e = uniform(32, 64 * 1024, 1 << 18);
+        let times: Vec<f64> = (0..500)
+            .map(|_| d.service_time(&e).unwrap().as_secs_f64())
+            .collect();
+        let m = crate::stats::mean(&times);
+        let noiseless = d.model_service_seconds(&e, 1.0);
+        assert!((m / noiseless - 1.0).abs() < 0.02);
+        assert!(crate::stats::cv(&times) < 0.05);
+    }
+
+    #[test]
+    fn reads_return_image_bytes() {
+        let image: Vec<u8> = (0..=255u8).cycle().take(1 << 16).collect();
+        let d = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 7);
+        let extents = [Extent::new(10, 4), Extent::new(300, 3)];
+        let (bytes, _) = d.read_batch_vec(&extents).unwrap();
+        assert_eq!(bytes, vec![10, 11, 12, 13, 44, 45, 46]);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let d = SimulatedSsd::timing_only(DeviceProfile::nano(), 1024, 1);
+        assert!(d.service_time(&[Extent::new(1000, 100)]).is_err());
+        assert!(d.service_time(&[Extent::new(0, 1024)]).is_ok());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || SimulatedSsd::timing_only(DeviceProfile::agx(), 1 << 30, 99);
+        let e = uniform(100, 16 * 1024, 1 << 16);
+        let a: Vec<_> = {
+            let d = mk();
+            (0..10).map(|_| d.service_time(&e).unwrap()).collect()
+        };
+        let b: Vec<_> = {
+            let d = mk();
+            (0..10).map(|_| d.service_time(&e).unwrap()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn entropy_zero_for_uniform_sizes() {
+        assert_eq!(size_mix_entropy(&uniform(16, 8192, 16384)), 0.0);
+    }
+
+    #[test]
+    fn entropy_positive_for_mixed() {
+        let mut e = uniform(8, 4096, 1 << 16);
+        e.extend(uniform(8, 128 * 1024, 1 << 20));
+        assert!(size_mix_entropy(&e) > 0.5);
+    }
+}

@@ -1,0 +1,253 @@
+//! Neuron-importance trace generators.
+//!
+//! Structure per neuron `i`:
+//! * a base *activation frequency* `f_i` drawn from a hot/mid/cold
+//!   mixture (Fig 11: many neurons neither always-on nor always-off);
+//! * per sample, neuron `i` is "active" with probability `f_i` (plus an
+//!   input-dependent shared component so co-activation exists);
+//! * active neurons draw lognormal magnitudes. VLM traces average `tokens`
+//!   independent token draws (the §2.2 smoothing mechanism — this is what
+//!   pushes CV down into the 1–4 band); ReLU-LLM traces are single-token
+//!   and hard-zero inactive neurons (CV ≈ 8–12, Table 1's OPT-6.7B).
+
+use crate::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActivationKind {
+    /// Gated-activation VLM in the frame-appending phase (smooth).
+    SmoothVlm,
+    /// ReLU LLM in the decode phase (spiky, hard zeros).
+    SpikyRelu,
+}
+
+/// Deterministic importance-trace generator for one matrix.
+#[derive(Clone, Debug)]
+pub struct ActivationGen {
+    pub kind: ActivationKind,
+    /// Neuron count (matrix rows).
+    pub n: usize,
+    /// Tokens averaged per sample (VLM frame: e.g. 196; decode: 1).
+    pub tokens: usize,
+    /// Per-token lognormal sigma.
+    pub sigma: f64,
+    /// Fractions of hot (f≈1) and cold (f≈0) neurons.
+    pub hot_frac: f64,
+    pub cold_frac: f64,
+    /// Neuron base frequencies (built at construction).
+    freq: Vec<f64>,
+    /// Precomputed activity logits (ln(f/(1-f))) — `sample` is on the
+    /// figure-sweep hot path, so the per-neuron ln() is hoisted here.
+    logit: Vec<f64>,
+    /// Persistent per-neuron magnitude scale (hot neurons boosted, cold
+    /// damped) — what makes hot/cold populations visible through the
+    /// sample noise, as in Fig 11.
+    base: Vec<f64>,
+    seed: u64,
+}
+
+impl ActivationGen {
+    /// Smooth VLM generator calibrated to Table 1's CV band. `layer_pos`
+    /// in [0,1] shifts CV upward toward late layers (Table 1: last layers
+    /// have CV 2.5–4.6 vs ~1.1–1.4 early).
+    ///
+    /// The token-averaged magnitude is sampled *directly* from the
+    /// averaged distribution (CLT on T iid lognormals: CV divides by
+    /// ~sqrt(T)) rather than drawing T per-token values — O(n) per sample
+    /// instead of O(n·T), which matters at paper scale (18944 rows × 196
+    /// tokens). `tokens` therefore only shapes the effective smoothness.
+    pub fn vlm(n: usize, tokens: usize, layer_pos: f64, seed: u64) -> Self {
+        // CV of the *averaged* importance this generator should produce.
+        // Fewer tokens per frame -> less averaging -> higher CV (the
+        // Fig 16 token-density mechanism), anchored at 196 tokens.
+        let target_cv = (0.95 + 1.45 * layer_pos.powi(2)) * (196.0 / tokens.max(1) as f64).sqrt().min(3.0);
+        let sigma = (1.0 + target_cv * target_cv).ln().sqrt();
+        let mut gen = Self {
+            kind: ActivationKind::SmoothVlm,
+            n,
+            tokens,
+            sigma,
+            hot_frac: 0.12,
+            cold_frac: 0.10,
+            freq: Vec::new(),
+            logit: Vec::new(),
+            base: Vec::new(),
+            seed,
+        };
+        gen.build_population();
+        gen
+    }
+
+    /// Spiky ReLU-LLM generator (decode phase, single token, hard zeros).
+    pub fn relu(n: usize, seed: u64) -> Self {
+        let mut gen = Self {
+            kind: ActivationKind::SpikyRelu,
+            n,
+            tokens: 1,
+            sigma: 1.9,
+            hot_frac: 0.03,
+            cold_frac: 0.62,
+            freq: Vec::new(),
+            logit: Vec::new(),
+            base: Vec::new(),
+            seed,
+        };
+        gen.build_population();
+        gen
+    }
+
+    fn build_population(&mut self) {
+        let mut rng = Rng::new(self.seed ^ 0xF00D);
+        // Persistent magnitude scale carries ~70% of the log-variance; the
+        // per-sample noise carries the rest (split below in `sample`).
+        let sigma_b = 0.7 * self.sigma;
+        let mu_b = -0.5 * sigma_b * sigma_b;
+        let mut freq = Vec::with_capacity(self.n);
+        let mut base = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let u = rng.f64();
+            let (f, boost) = if u < self.hot_frac {
+                (0.995 + 0.005 * rng.f64(), 2.5)
+            } else if u < self.hot_frac + self.cold_frac {
+                (0.005 * rng.f64(), 0.4)
+            } else {
+                // Mid population: Beta-like hump via powered uniform.
+                (0.15 + 0.7 * rng.f64().powf(0.8), 1.0)
+            };
+            freq.push(f);
+            base.push(boost * rng.lognormal(mu_b, sigma_b));
+        }
+        self.logit = freq
+            .iter()
+            .map(|&f| {
+                let f = f.clamp(1e-4, 1.0 - 1e-4);
+                (f / (1.0 - f)).ln()
+            })
+            .collect();
+        self.freq = freq;
+        self.base = base;
+    }
+
+    pub fn frequencies(&self) -> &[f64] {
+        &self.freq
+    }
+
+    /// Generate the importance vector for sample `idx` (deterministic).
+    pub fn sample(&self, idx: u64) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ idx.wrapping_mul(0x9E3779B97F4A7C15));
+        // Input-dependent global shift: correlates activity across neurons
+        // within one sample (drives co-activation + input adaptivity).
+        let input_bias = rng.normal() * 0.35;
+        let sigma_n = 0.714 * self.sigma; // sample-noise share of variance
+        let mu = -0.5 * sigma_n * sigma_n; // mean-1 noise
+        let mut out = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            // Effective per-token activity probability for this sample.
+            let p = 1.0 / (1.0 + (-(self.logit[i] + input_bias)).exp());
+            let mut acc = 0.0f64;
+            match self.kind {
+                ActivationKind::SpikyRelu => {
+                    if rng.bool(p) {
+                        acc = self.base[i] * rng.lognormal(mu, sigma_n);
+                    }
+                }
+                ActivationKind::SmoothVlm => {
+                    // Token-averaged gated activations, sampled from the
+                    // averaged distribution directly (see `vlm` docs).
+                    // Inactive tokens still contribute small non-zero
+                    // magnitudes (SwiGLU/GeLU never hard-zero), so the
+                    // activity mix scales the mean, never zeroes it.
+                    let mix = p + (1.0 - p) * 0.04;
+                    acc = mix * self.base[i] * rng.lognormal(mu, sigma_n);
+                }
+            }
+            out.push(acc as f32);
+        }
+        out
+    }
+
+    /// Batch of samples (calibration sets).
+    pub fn samples(&self, count: usize, from: u64) -> Vec<Vec<f32>> {
+        (0..count as u64).map(|i| self.sample(from + i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats;
+
+    fn cv_of(gen: &ActivationGen, samples: usize) -> f64 {
+        let cvs: Vec<f64> = (0..samples as u64)
+            .map(|i| {
+                let s = gen.sample(i);
+                let v: Vec<f64> = s.iter().map(|&x| x as f64).collect();
+                stats::cv(&v)
+            })
+            .collect();
+        stats::mean(&cvs)
+    }
+
+    #[test]
+    fn vlm_cv_in_table1_band() {
+        // Early/mid layers: CV ~1.0–2.0; late layers ~2.5–4.6.
+        let early = cv_of(&ActivationGen::vlm(2048, 196, 0.0, 1), 8);
+        let late = cv_of(&ActivationGen::vlm(2048, 196, 1.0, 2), 8);
+        assert!((0.8..2.2).contains(&early), "early CV {early}");
+        assert!((2.0..5.5).contains(&late), "late CV {late}");
+        assert!(late > early);
+    }
+
+    #[test]
+    fn relu_cv_much_higher() {
+        let relu = cv_of(&ActivationGen::relu(2048, 3), 8);
+        let vlm = cv_of(&ActivationGen::vlm(2048, 196, 0.3, 3), 8);
+        assert!(relu > 4.0, "ReLU CV {relu}");
+        assert!(relu > 2.5 * vlm, "relu {relu} vs vlm {vlm}");
+    }
+
+    #[test]
+    fn relu_has_hard_zeros_vlm_does_not() {
+        let r = ActivationGen::relu(1024, 5).sample(0);
+        let v = ActivationGen::vlm(1024, 64, 0.5, 5).sample(0);
+        let zr = r.iter().filter(|&&x| x == 0.0).count();
+        let zv = v.iter().filter(|&&x| x == 0.0).count();
+        assert!(zr > 300, "ReLU zeros {zr}");
+        assert_eq!(zv, 0, "VLM must not hard-zero");
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = ActivationGen::vlm(256, 16, 0.5, 9);
+        assert_eq!(g.sample(3), g.sample(3));
+        assert_ne!(g.sample(3), g.sample(4));
+    }
+
+    #[test]
+    fn hot_cold_structure_visible_in_frequency() {
+        let g = ActivationGen::vlm(4000, 196, 0.3, 11);
+        let samples = g.samples(30, 0);
+        let freq = crate::reorder::activation_frequency(&samples, 4000);
+        let (hot, cold) = crate::reorder::hot_cold_fractions(&freq);
+        // Fig 11: nontrivial hot and cold populations, plus a large middle.
+        assert!(hot > 0.02, "hot {hot}");
+        assert!(cold > 0.02, "cold {cold}");
+        assert!(hot + cold < 0.7, "middle population missing");
+    }
+
+    #[test]
+    fn input_dependence() {
+        // Different samples select measurably different top-halves
+        // (input-aware sparsification must matter — Fig 9 ablation).
+        let g = ActivationGen::vlm(1024, 196, 0.3, 13);
+        let a = g.sample(0);
+        let b = g.sample(1);
+        let top = |s: &[f32]| {
+            let mut idx: Vec<usize> = (0..s.len()).collect();
+            idx.sort_by(|&x, &y| s[y].partial_cmp(&s[x]).unwrap());
+            idx[..512].iter().copied().collect::<std::collections::HashSet<_>>()
+        };
+        let overlap = top(&a).intersection(&top(&b)).count();
+        assert!(overlap < 490, "overlap {overlap}/512 too high");
+        assert!(overlap > 256, "overlap {overlap}/512 too low (no stable hot set)");
+    }
+}

@@ -1,0 +1,159 @@
+//! Synthetic streaming-video frame traces for the runnable models.
+//!
+//! Frames arrive as `tokens_per_frame` d-dimensional embeddings (what the
+//! vision encoder + projector would emit — the paper keeps the vision
+//! encoder in memory and out of scope). Consecutive frames are temporally
+//! correlated (AR(1) over a scene latent) so KV/activation statistics
+//! drift like real video. `pooling` reduces tokens per frame (Fig 16's
+//! spatial-pooling token-density knob).
+
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct FrameTrace {
+    pub d: usize,
+    pub tokens_per_frame: usize,
+    pub frames: usize,
+    /// Spatial pooling factor (1 = full density; 4 = quarter tokens).
+    pub pooling: usize,
+    /// Temporal correlation of the scene latent (0..1).
+    pub temporal_rho: f64,
+    seed: u64,
+}
+
+impl FrameTrace {
+    pub fn new(d: usize, tokens_per_frame: usize, frames: usize, seed: u64) -> Self {
+        Self {
+            d,
+            tokens_per_frame,
+            frames,
+            pooling: 1,
+            temporal_rho: 0.85,
+            seed,
+        }
+    }
+
+    pub fn with_pooling(mut self, pooling: usize) -> Self {
+        assert!(pooling >= 1);
+        self.pooling = pooling;
+        self
+    }
+
+    /// Effective tokens per frame after pooling.
+    pub fn tokens(&self) -> usize {
+        (self.tokens_per_frame / self.pooling).max(1)
+    }
+
+    /// Frame `f`'s token embeddings, row-major [tokens(), d].
+    ///
+    /// Scene latent evolves as AR(1); tokens are latent + iid detail.
+    /// Pooling averages adjacent unpooled tokens (like spatial pooling),
+    /// which *smooths* embeddings — the mechanism behind Fig 16's accuracy
+    /// drop at low densities.
+    pub fn frame(&self, f: usize) -> Vec<f32> {
+        let mut latent = vec![0.0f64; self.d];
+        let mut rng = Rng::new(self.seed ^ 0xABCD);
+        for v in latent.iter_mut() {
+            *v = rng.normal();
+        }
+        // Roll the latent forward to frame f (deterministic, O(f·d); frame
+        // counts here are tens, not millions).
+        for step in 0..=f {
+            let mut step_rng = Rng::new(self.seed ^ (step as u64 + 1).wrapping_mul(0x5851F42D));
+            let rho = self.temporal_rho;
+            for v in latent.iter_mut() {
+                *v = rho * *v + (1.0 - rho * rho).sqrt() * step_rng.normal();
+            }
+        }
+        let mut tok_rng = Rng::new(self.seed ^ (f as u64).wrapping_mul(0xD1B54A33) ^ 0x7777);
+        let full: Vec<f32> = (0..self.tokens_per_frame)
+            .flat_map(|_| {
+                latent
+                    .iter()
+                    .map(|&l| (0.6 * l + 0.4 * tok_rng.normal()) as f32 * 0.35)
+                    .collect::<Vec<f32>>()
+            })
+            .collect();
+        if self.pooling == 1 {
+            return full;
+        }
+        // Average groups of `pooling` consecutive tokens.
+        let t_out = self.tokens();
+        let mut out = vec![0.0f32; t_out * self.d];
+        for to in 0..t_out {
+            let lo = to * self.pooling;
+            let hi = ((to + 1) * self.pooling).min(self.tokens_per_frame);
+            for j in 0..self.d {
+                let mut acc = 0.0f32;
+                for ti in lo..hi {
+                    acc += full[ti * self.d + j];
+                }
+                out[to * self.d + j] = acc / (hi - lo) as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_shape() {
+        let t = FrameTrace::new(64, 16, 10, 1);
+        assert_eq!(t.frame(0).len(), 16 * 64);
+        let p = FrameTrace::new(64, 16, 10, 1).with_pooling(4);
+        assert_eq!(p.tokens(), 4);
+        assert_eq!(p.frame(0).len(), 4 * 64);
+    }
+
+    #[test]
+    fn deterministic() {
+        let t = FrameTrace::new(32, 8, 5, 9);
+        assert_eq!(t.frame(2), t.frame(2));
+        assert_ne!(t.frame(2), t.frame(3));
+    }
+
+    #[test]
+    fn consecutive_frames_correlated_distant_less() {
+        let t = FrameTrace::new(128, 4, 40, 3);
+        let corr = |a: &[f32], b: &[f32]| {
+            let (ma, mb) = (
+                a.iter().sum::<f32>() / a.len() as f32,
+                b.iter().sum::<f32>() / b.len() as f32,
+            );
+            let mut num = 0.0;
+            let mut da = 0.0;
+            let mut db = 0.0;
+            for i in 0..a.len() {
+                num += (a[i] - ma) * (b[i] - mb);
+                da += (a[i] - ma).powi(2);
+                db += (b[i] - mb).powi(2);
+            }
+            num / (da.sqrt() * db.sqrt())
+        };
+        let f0 = t.frame(0);
+        let f1 = t.frame(1);
+        let f30 = t.frame(30);
+        assert!(corr(&f0, &f1) > corr(&f0, &f30) + 0.1);
+    }
+
+    #[test]
+    fn pooling_reduces_token_variance() {
+        let full = FrameTrace::new(64, 16, 5, 7);
+        let pooled = FrameTrace::new(64, 16, 5, 7).with_pooling(4);
+        let var_of = |frame: &[f32], t: usize, d: usize| {
+            // mean variance across token dimension
+            let mut acc = 0.0f64;
+            for j in 0..d {
+                let col: Vec<f64> = (0..t).map(|i| frame[i * d + j] as f64).collect();
+                acc += crate::stats::variance(&col);
+            }
+            acc / d as f64
+        };
+        let vf = var_of(&full.frame(1), 16, 64);
+        let vp = var_of(&pooled.frame(1), 4, 64);
+        assert!(vp < vf, "pooling should smooth: {vp} vs {vf}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Synthetic workload substrate.
+//!
+//! The paper's inputs we cannot ship (video QA datasets, 7B VLM
+//! activations) are replaced by calibrated generators:
+//!
+//! * [`ActivationGen`] — per-matrix neuron-importance traces with the
+//!   smoothness statistics of Table 1 (VLM CV ≈ 1.1–4.5, ReLU-LLM
+//!   CV ≈ 8–12) and the hot/cold frequency structure of Fig 11.
+//! * [`FrameTrace`] — synthetic streaming-video token embeddings for the
+//!   runnable models (Fig 16's token-density knob included).
+//! * [`DatasetSpec`]/[`AccuracyModel`] — the three evaluation "datasets"
+//!   as named accuracy-proxy curves mapping retained importance to task
+//!   accuracy (the paper itself uses retained importance as the proxy in
+//!   Appendix N).
+
+mod activations;
+mod datasets;
+mod frames;
+
+pub use activations::{ActivationGen, ActivationKind};
+pub use datasets::{AccuracyModel, DatasetSpec};
+pub use frames::FrameTrace;

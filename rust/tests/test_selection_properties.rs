@@ -1,0 +1,248 @@
+//! Property tests on selection policies — the invariants the whole
+//! coordinator relies on, over adversarial random inputs (in-tree
+//! property harness; see `neuron_chunking::proptest`).
+
+use neuron_chunking::latency::{chunks_from_mask, ContiguityDistribution};
+use neuron_chunking::proptest::{arb_importance, arb_latency_table, check};
+use neuron_chunking::sparsify::{
+    Bundling, ChunkSelect, ChunkSelectConfig, Selector, Threshold, TopK,
+};
+
+fn all_selectors(rng: &mut neuron_chunking::rng::Rng) -> Vec<Box<dyn Selector>> {
+    vec![
+        Box::new(TopK),
+        Box::new(Threshold::new(rng.f32())),
+        Box::new(ChunkSelect::new(ChunkSelectConfig::new(
+            1.0 + rng.f64() * 15.0,
+            1.0 + rng.f64() * 15.0,
+            32.0 + rng.f64() * 300.0,
+        ))),
+        Box::new(Bundling::new(rng.range(1, 4))),
+    ]
+}
+
+#[test]
+fn prop_budget_never_exceeded() {
+    check("budget never exceeded", 120, |rng| {
+        let imp = arb_importance(rng, 512);
+        let table = arb_latency_table(rng);
+        let budget = rng.below(imp.len() + 8);
+        for sel in all_selectors(rng) {
+            let m = sel.select(&imp, budget, &table);
+            if m.rows() > budget.min(imp.len()) {
+                return Err(format!(
+                    "{} selected {} > budget {}",
+                    sel.name(),
+                    m.rows(),
+                    budget
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mask_and_chunks_consistent() {
+    check("mask/chunks consistency", 120, |rng| {
+        let imp = arb_importance(rng, 512);
+        let table = arb_latency_table(rng);
+        let budget = rng.below(imp.len() + 1);
+        for sel in all_selectors(rng) {
+            let m = sel.select(&imp, budget, &table);
+            if m.chunks != chunks_from_mask(&m.mask) {
+                return Err(format!("{}: chunks != mask runs", sel.name()));
+            }
+            if m.mask.len() != imp.len() {
+                return Err(format!("{}: mask length mismatch", sel.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunks_sorted_disjoint() {
+    check("chunks sorted and disjoint", 120, |rng| {
+        let imp = arb_importance(rng, 600);
+        let table = arb_latency_table(rng);
+        let budget = rng.below(imp.len() + 1);
+        for sel in all_selectors(rng) {
+            let m = sel.select(&imp, budget, &table);
+            for w in m.chunks.windows(2) {
+                if w[0].end() > w[1].start {
+                    return Err(format!("{}: overlapping/unsorted chunks", sel.name()));
+                }
+            }
+            if m.chunks.iter().any(|c| c.end() > imp.len()) {
+                return Err(format!("{}: chunk out of range", sel.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_importance_dominates_all() {
+    // Top-k is optimal on captured importance at equal row count.
+    check("topk dominance", 80, |rng| {
+        let imp = arb_importance(rng, 400);
+        let table = arb_latency_table(rng);
+        let budget = rng.range(1, imp.len());
+        let topk = TopK.select(&imp, budget, &table);
+        for sel in all_selectors(rng) {
+            let m = sel.select(&imp, budget, &table);
+            // Compare at the row count the other selector achieved.
+            let fair = TopK.select(&imp, m.rows().max(1), &table);
+            if m.captured_importance(&imp) > fair.captured_importance(&imp) + 1e-3 {
+                return Err(format!(
+                    "{} captured more importance than top-k at equal rows",
+                    sel.name()
+                ));
+            }
+        }
+        let _ = topk;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunking_never_worse_estimated_latency_per_row() {
+    // At equal row counts, chunk selection's estimated latency must not
+    // exceed top-k's (it optimizes the latency term top-k ignores).
+    check("chunking latency advantage", 60, |rng| {
+        let imp = arb_importance(rng, 512);
+        if imp.len() < 32 {
+            return Ok(());
+        }
+        let table = arb_latency_table(rng);
+        let budget = rng.range(8, imp.len());
+        let cs = ChunkSelect::new(ChunkSelectConfig::new(2.0, 4.0, 128.0));
+        let ours = cs.select(&imp, budget, &table);
+        let base = TopK.select(&imp, ours.rows().max(1), &table);
+        let ours_lat = table.estimate_chunks(&ours.chunks) / ours.rows().max(1) as f64;
+        let base_lat = table.estimate_chunks(&base.chunks) / base.rows().max(1) as f64;
+        if ours_lat > base_lat * 1.05 {
+            return Err(format!(
+                "chunking per-row latency {ours_lat} > topk {base_lat}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_full_budget_selects_everything() {
+    check("full budget", 60, |rng| {
+        let imp = arb_importance(rng, 256);
+        let table = arb_latency_table(rng);
+        for sel in [
+            Box::new(TopK) as Box<dyn Selector>,
+            Box::new(ChunkSelect::new(ChunkSelectConfig::new(1.0, 2.0, 64.0))),
+        ] {
+            let m = sel.select(&imp, imp.len(), &table);
+            if m.rows() != imp.len() {
+                return Err(format!(
+                    "{} selected {}/{} at full budget",
+                    sel.name(),
+                    m.rows(),
+                    imp.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_latency_model_additivity() {
+    // L(chunks A ∪ B) = L(A) + L(B) for disjoint chunk sets — the §3.1
+    // additive assumption the selector exploits.
+    check("latency additivity", 100, |rng| {
+        let table = arb_latency_table(rng);
+        let n = rng.range(16, 256);
+        let mut mask = vec![false; n];
+        for i in 0..n {
+            mask[i] = rng.bool(0.4);
+        }
+        let chunks = chunks_from_mask(&mask);
+        let total = table.estimate_chunks(&chunks);
+        let split = rng.below(chunks.len().max(1));
+        let sum = table.estimate_chunks(&chunks[..split])
+            + table.estimate_chunks(&chunks[split..]);
+        if (total - sum).abs() > 1e-12 * total.max(1.0) {
+            return Err(format!("non-additive: {total} vs {sum}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_contiguity_distribution_conserves_rows() {
+    check("distribution row conservation", 150, |rng| {
+        let n = rng.range(1, 512);
+        let density = rng.f64();
+        let mask: Vec<bool> = (0..n).map(|_| rng.bool(density)).collect();
+        let d = ContiguityDistribution::from_mask(&mask);
+        let selected = mask.iter().filter(|&&b| b).count() as u64;
+        if d.num_rows() != selected {
+            return Err(format!("{} != {}", d.num_rows(), selected));
+        }
+        let from_iter: u64 = d.iter().map(|(s, c)| s as u64 * c).sum();
+        if from_iter != selected {
+            return Err("iter() row count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reorder_permutation_preserves_importance_multiset() {
+    use neuron_chunking::reorder::HotColdReorder;
+    check("reorder preserves values", 60, |rng| {
+        let n = rng.range(4, 128);
+        let mut samples: Vec<Vec<f32>> = Vec::with_capacity(6);
+        for _ in 0..6 {
+            samples.push((0..n).map(|_| rng.f32()).collect());
+        }
+        let perm = HotColdReorder.build(&samples, n);
+        let imp: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let re = perm.apply(&imp);
+        let mut a = imp.clone();
+        let mut b = re.clone();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        if a != b {
+            return Err("permutation changed the value multiset".into());
+        }
+        // Round trip.
+        if perm.apply_inv(&re) != imp {
+            return Err("apply_inv does not invert apply".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_teal_budgets_within_rows() {
+    use neuron_chunking::sparsify::teal::{MatrixCalibration, SparsityAllocator};
+    check("teal budgets bounded", 40, |rng| {
+        let nm = rng.range(1, 6);
+        let cals: Vec<MatrixCalibration> = (0..nm)
+            .map(|i| MatrixCalibration {
+                name: format!("m{i}"),
+                rows: rng.range(16, 4096),
+                samples: (0..200).map(|_| rng.f32()).collect(),
+            })
+            .collect();
+        let rows: Vec<usize> = cals.iter().map(|c| c.rows).collect();
+        let alloc = SparsityAllocator::new(cals);
+        let target = rng.f64() * 0.9;
+        for (b, r) in alloc.budgets(target).iter().zip(&rows) {
+            if b > r {
+                return Err(format!("budget {b} > rows {r}"));
+            }
+        }
+        Ok(())
+    });
+}
