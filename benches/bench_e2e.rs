@@ -5,7 +5,7 @@
 use std::path::Path;
 
 use neuron_chunking::benchlib::{black_box, header, Bencher};
-use neuron_chunking::coordinator::{Engine, EngineConfig, Policy};
+use neuron_chunking::coordinator::{Engine, Policy};
 use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::storage::DeviceProfile;
 use neuron_chunking::workload::FrameTrace;
@@ -27,20 +27,29 @@ fn main() {
             0.5,
         ),
     ] {
-        let mut engine =
-            Engine::new(EngineConfig::new("tiny", policy, sparsity), &dir).unwrap();
-        engine.warmup().unwrap();
-        let spec = engine.spec().clone();
-        let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
-        let frame = trace.frame(0);
-        engine.append_frame(0, &frame).unwrap(); // warm
-        b.bench(&format!("append_frame tiny [{label}]"), || {
-            black_box(engine.append_frame(0, &frame).unwrap());
-        });
-        let token = vec![0.1f32; spec.d];
-        b.bench(&format!("decode_step  tiny [{label}]"), || {
-            black_box(engine.decode_step(0, &token).unwrap());
-        });
+        for prefetch in [false, true] {
+            let engine = Engine::builder("tiny")
+                .policy(policy.clone())
+                .sparsity(sparsity)
+                .prefetch(prefetch)
+                .artifacts(&dir)
+                .build()
+                .unwrap();
+            engine.warmup().unwrap();
+            let spec = engine.spec();
+            let session = engine.new_session();
+            let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
+            let frame = trace.frame(0);
+            session.append_frame(&frame).unwrap(); // warm
+            let pf = if prefetch { "+pf" } else { "   " };
+            b.bench(&format!("append_frame tiny [{label}]{pf}"), || {
+                black_box(session.append_frame(&frame).unwrap());
+            });
+            let token = vec![0.1f32; spec.d];
+            b.bench(&format!("decode_step  tiny [{label}]{pf}"), || {
+                black_box(session.decode_step(&token).unwrap());
+            });
+        }
     }
 
     // Experiment-harness point cost (what figure sweeps pay per point).

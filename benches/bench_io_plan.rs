@@ -1,0 +1,98 @@
+//! I/O-planner benches: plan-construction throughput on paper-scale
+//! selection masks, plus a fidelity check that planned latency estimates
+//! track `SimulatedSsd::service_time` on both device profiles (the
+//! property that makes planned cost comparable to simulated service
+//! time).
+
+use neuron_chunking::benchlib::{black_box, header, Bencher};
+use neuron_chunking::latency::{chunks_from_mask, Chunk};
+use neuron_chunking::model::{FlashLayout, MatrixId, MatrixKind, ModelSpec};
+use neuron_chunking::plan::{CoalescePolicy, IoPlanner, PlanRequest};
+use neuron_chunking::report::fmt_secs;
+use neuron_chunking::rng::Rng;
+use neuron_chunking::storage::{
+    DeviceProfile, FlashDevice, ProfileConfig, Profiler, SimulatedSsd,
+};
+
+fn main() {
+    header("I/O planner (construction throughput + estimate fidelity)");
+    let spec = ModelSpec::llava_7b();
+    let layout = FlashLayout::build(&spec, false);
+    let planner = IoPlanner::new(CoalescePolicy::contiguous());
+    let mut rng = Rng::new(5);
+
+    // Plan-construction throughput on a full layer's sparse demand
+    // (every matrix at ~50% row sparsity — the worst-case segment count
+    // a serving step produces).
+    let requests: Vec<PlanRequest> = spec
+        .matrices()
+        .iter()
+        .map(|m| {
+            let mask: Vec<bool> = (0..m.rows).map(|_| rng.bool(0.5)).collect();
+            PlanRequest::new(MatrixId::new(0, m.kind), chunks_from_mask(&mask))
+        })
+        .collect();
+    let segs: usize = requests.iter().map(|r| r.chunks.len()).sum();
+    let mut b = Bencher::default();
+    b.bench(
+        &format!("plan 7-matrix layer, {segs} chunks (llava-7b, s=0.5)"),
+        || {
+            black_box(planner.plan(&layout, &requests, None));
+        },
+    );
+    let probe = SimulatedSsd::timing_only(DeviceProfile::nano(), 1 << 40, 9);
+    let sat = DeviceProfile::nano().saturation_bytes(0.99);
+    let nano_table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024))
+        .build_table()
+        .unwrap();
+    b.bench("plan + latency estimate (same demand)", || {
+        black_box(planner.plan(&layout, &requests, Some(&nano_table)));
+    });
+
+    // Estimate fidelity: uniform chunk batches on the 7B down-projection,
+    // planned estimate vs simulated service time, nano and agx.
+    println!("\nestimate fidelity (planned vs simulated service time):");
+    let id = MatrixId::new(0, MatrixKind::Down);
+    let rows = spec.shape_of(MatrixKind::Down).rows;
+    let mut worst: f64 = 1.0;
+    for profile in [DeviceProfile::nano(), DeviceProfile::agx()] {
+        let sat = profile.saturation_bytes(0.99);
+        let probe = SimulatedSsd::timing_only(profile.clone(), 1 << 40, 9);
+        let table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024))
+            .build_table()
+            .unwrap();
+        let dev = SimulatedSsd::timing_only(
+            profile.clone(),
+            layout.total_bytes().max(1 << 33),
+            11,
+        );
+        for &chunk_rows in &[1usize, 4, 16, 48] {
+            let stride = chunk_rows * 2;
+            let chunks: Vec<Chunk> = (0..64)
+                .map(|i| Chunk::new(i * stride, chunk_rows))
+                .filter(|c| c.end() <= rows)
+                .collect();
+            let plan = planner.plan_chunks(&layout, id, &chunks, Some(&table));
+            let measured = dev
+                .service_time(plan.cmds())
+                .unwrap()
+                .as_secs_f64();
+            let ratio = plan.estimated_seconds / measured;
+            worst = worst.max(ratio.max(1.0 / ratio));
+            println!(
+                "  {:>8} x {:>3} rows/chunk: planned {:>10} vs simulated {:>10}  (x{ratio:.2})",
+                profile.name,
+                chunk_rows,
+                fmt_secs(plan.estimated_seconds),
+                fmt_secs(measured),
+            );
+            assert!(
+                (0.5..=2.0).contains(&ratio),
+                "planned estimate diverges from simulated service time: \
+                 {ratio:.2}x on {} at {chunk_rows} rows/chunk",
+                profile.name
+            );
+        }
+    }
+    println!("worst-case divergence: {worst:.2}x (bound: 2.0x)");
+}

@@ -18,7 +18,7 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use neuron_chunking::coordinator::{
-    Engine, EngineConfig, Policy, Request, RequestKind, Scheduler, SchedulerConfig,
+    Engine, Policy, Request, RequestKind, Scheduler, SchedulerConfig,
 };
 use neuron_chunking::report::{fmt_secs, Table};
 use neuron_chunking::sparsify::ChunkSelectConfig;
@@ -50,13 +50,14 @@ fn main() -> anyhow::Result<()> {
         spec.total_bytes() as f64 / 1e6
     );
     let dense_outputs = {
-        let mut cfg = EngineConfig::new("small", Policy::Dense, 0.0);
-        cfg.profile = profile.clone();
-        cfg.streams = 1;
-        let mut eng = Engine::new(cfg, &artifacts)?;
+        let eng = Engine::builder("small")
+            .profile(profile.clone())
+            .artifacts(&artifacts)
+            .build()?;
+        let session = eng.new_session();
         let mut outs = Vec::new();
         for f in 0..frames {
-            outs.push(eng.append_frame(0, &trace.frame(f))?.0);
+            outs.push(session.append_frame(&trace.frame(f))?.0);
         }
         outs
     };
@@ -85,10 +86,13 @@ fn main() -> anyhow::Result<()> {
         let artifacts = artifacts.clone();
         let policy2 = policy.clone();
         let sched = Scheduler::spawn(SchedulerConfig::default(), move || {
-            let mut cfg = EngineConfig::new("small", policy2, sparsity);
-            cfg.profile = profile;
-            cfg.streams = STREAMS;
-            let e = Engine::new(cfg, &artifacts).expect("engine");
+            let e = Engine::builder("small")
+                .policy(policy2)
+                .sparsity(sparsity)
+                .profile(profile)
+                .artifacts(&artifacts)
+                .build()
+                .expect("engine");
             e.warmup().expect("warmup");
             e
         });

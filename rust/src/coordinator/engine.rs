@@ -1,71 +1,67 @@
-//! The per-matrix sparsification pipeline (§3) over real XLA execution.
+//! The per-matrix sparsification pipeline (§3) behind a session-based
+//! serving facade.
 //!
 //! For every weight matrix, per frame:
 //!   score input activation → (apply offline-reorder permutation) →
-//!   chunk-select under the latency model → read selected rows from flash
-//!   → gather activations → zero-pad to the compiled budget bucket →
-//!   execute the AOT artifact.
+//!   chunk-select under the latency model → **plan** the group's flash
+//!   reads ([`crate::plan::IoPlanner`]) → submit one cross-matrix command
+//!   batch ([`crate::storage::FlashDevice::submit`]) → gather activations
+//!   → zero-pad to the compiled budget bucket → execute the stage
+//!   artifact.
 //!
 //! A transformer block runs as four such stages (qkv+attention, o-proj,
-//! gate/up, down-proj), matching the paper's "once per weight matrix,
-//! ~200 times per frame" runtime structure. K/V reuse Q's mask and Up
-//! reuses Gate's (they share input activations — Appendix A).
+//! gate/up, down-proj). K/V reuse Q's mask and Up reuses Gate's (they
+//! share input activations — Appendix A).
+//!
+//! ## Sessions and prefetch
+//!
+//! [`Engine`] is built with [`EngineBuilder`] and serves any number of
+//! independent [`Session`]s (one per stream; each owns its KV caches and
+//! prefetch state). With prefetch enabled (default), the engine
+//! double-buffers I/O against compute: while layer *l*'s stages execute,
+//! it plans and submits layer *l+1*'s whole-layer read using the masks the
+//! session selected on its *previous* call — streaming frames are
+//! temporally correlated, so most of the next selection is already
+//! resident when the layer is reached. Prefetched service time is charged
+//! only beyond the compute it overlapped; rows the prediction missed are
+//! fetched by a small residual plan.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::Path;
-use std::time::Duration;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy, StageTimer};
 use crate::latency::{Chunk, LatencyTable};
-use crate::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+use crate::model::{decode_f32_into, MatrixId, MatrixKind, ModelSpec, WeightStore};
+use crate::plan::{CoalescePolicy, IoPlanner, PlanRequest, PlannedRead, RowCursor};
 use crate::reorder::HotColdReorder;
 use crate::runtime::{Manifest, ModelMeta, Tensor, XlaRuntime};
 use crate::sparsify::{SelectionMask, Selector};
-use crate::storage::{DeviceProfile, ProfileConfig, Profiler, SimulatedSsd};
-
-/// Engine configuration.
-#[derive(Clone, Debug)]
-pub struct EngineConfig {
-    /// Runnable model name ("tiny" | "small" | "base").
-    pub model: String,
-    /// Device profile for the simulated flash.
-    pub profile: DeviceProfile,
-    /// Selection policy.
-    pub policy: Policy,
-    /// Effective sparsity in [0, 1): fraction of rows *dropped* per matrix.
-    pub sparsity: f64,
-    /// Concurrent streams (each gets its own KV caches).
-    pub streams: usize,
-    pub seed: u64,
-}
-
-impl EngineConfig {
-    pub fn new(model: &str, policy: Policy, sparsity: f64) -> Self {
-        Self {
-            model: model.to_string(),
-            profile: DeviceProfile::nano(),
-            policy,
-            sparsity,
-            streams: 1,
-            seed: 42,
-        }
-    }
-}
+use crate::storage::{DeviceProfile, FlashDevice, ProfileConfig, Profiler, SimulatedSsd};
 
 /// Per-call stage accounting (one frame append or decode step).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StageStats {
-    /// Flash service time (virtual for simulated devices).
+    /// Flash service time (virtual for simulated devices), after prefetch
+    /// overlap credit.
     pub io: Duration,
-    /// XLA execution wall time.
+    /// Stage-artifact execution wall time.
     pub compute: Duration,
     /// Selection-algorithm wall time.
     pub select: Duration,
     /// Host gather/pad/norm wall time.
     pub host: Duration,
     pub bytes_loaded: u64,
+    /// Bytes loaded speculatively by the next-layer prefetcher (subset of
+    /// `bytes_loaded`).
+    pub prefetched_bytes: u64,
+    /// Weight rows served from the prefetch buffer instead of a fresh
+    /// flash read.
+    pub prefetch_hits: u64,
     /// Retained / total importance this call (accuracy proxy).
     pub importance_kept: f64,
     pub importance_total: f64,
@@ -91,14 +87,304 @@ impl StageStats {
         self.select += other.select;
         self.host += other.host;
         self.bytes_loaded += other.bytes_loaded;
+        self.prefetched_bytes += other.prefetched_bytes;
+        self.prefetch_hits += other.prefetch_hits;
         self.importance_kept += other.importance_kept;
         self.importance_total += other.importance_total;
     }
 }
 
-/// The serving engine.
+/// Builder for [`Engine`] — the only way to construct one.
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    model: String,
+    profile: DeviceProfile,
+    policy: Policy,
+    sparsity: f64,
+    seed: u64,
+    artifact_dir: PathBuf,
+    prefetch: bool,
+    coalesce: CoalescePolicy,
+}
+
+impl EngineBuilder {
+    /// Start from a runnable model name ("tiny" | "small" | "base") with
+    /// defaults: nano profile, dense policy, prefetch on, contiguous
+    /// coalescing, artifacts in `./artifacts`.
+    pub fn new(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            profile: DeviceProfile::nano(),
+            policy: Policy::Dense,
+            sparsity: 0.0,
+            seed: 42,
+            artifact_dir: PathBuf::from("artifacts"),
+            prefetch: true,
+            coalesce: CoalescePolicy::contiguous(),
+        }
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Fraction of rows *dropped* per matrix, in [0, 1).
+    pub fn sparsity(mut self, sparsity: f64) -> Self {
+        self.sparsity = sparsity;
+        self
+    }
+
+    pub fn profile(mut self, profile: DeviceProfile) -> Self {
+        self.profile = profile;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn artifacts(mut self, dir: &Path) -> Self {
+        self.artifact_dir = dir.to_path_buf();
+        self
+    }
+
+    /// Enable/disable next-layer prefetch (default on).
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Override how plans coalesce chunk extents into device commands.
+    pub fn coalesce(mut self, policy: CoalescePolicy) -> Self {
+        self.coalesce = policy;
+        self
+    }
+
+    /// Build the engine, generating + "flashing" the model weights.
+    pub fn build(self) -> Result<Engine> {
+        let runtime = XlaRuntime::open(&self.artifact_dir)?;
+        let meta = runtime
+            .manifest
+            .model(&self.model)
+            .with_context(|| format!("model {} not in manifest", self.model))?
+            .clone();
+        let spec = ModelSpec::by_name(&self.model)
+            .with_context(|| format!("unknown model {}", self.model))?;
+        anyhow::ensure!(spec.runnable, "engine needs a runnable model");
+        anyhow::ensure!(
+            spec.d == meta.d && spec.h == meta.h && spec.layers == meta.layers,
+            "rust spec / python manifest dimension mismatch"
+        );
+        let store = WeightStore::new(spec.clone(), false, self.seed);
+        let device = SimulatedSsd::with_image(
+            self.profile.clone(),
+            store.build_image(),
+            self.seed ^ 0xD1CE,
+        );
+
+        // Profile T[s] against an unbounded twin of the device (the
+        // analytical model is capacity-independent).
+        let probe = SimulatedSsd::timing_only(self.profile.clone(), 1 << 40, self.seed ^ 0xBEEF);
+        let sat = self.profile.saturation_bytes(0.99);
+        let table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024)).build_table()?;
+
+        let selector = self.policy.selector();
+        let core = EngineCore {
+            model: self.model,
+            profile: self.profile,
+            policy: self.policy,
+            sparsity: self.sparsity,
+            seed: self.seed,
+            prefetch: self.prefetch,
+            runtime,
+            meta,
+            spec,
+            store,
+            device,
+            table,
+            planner: IoPlanner::new(self.coalesce),
+            selector,
+            neuron_cache: None,
+            metrics: Metrics::new(),
+            epoch: 0,
+        };
+        Ok(Engine {
+            core: Rc::new(RefCell::new(core)),
+        })
+    }
+}
+
+/// The serving engine facade. Cheap to clone handles out of via
+/// [`Engine::new_session`]; all sessions share the flash device, weight
+/// store, latency table and planner.
 pub struct Engine {
-    pub cfg: EngineConfig,
+    core: Rc<RefCell<EngineCore>>,
+}
+
+impl Engine {
+    pub fn builder(model: &str) -> EngineBuilder {
+        EngineBuilder::new(model)
+    }
+
+    /// Open an independent serving session (own KV caches, own prefetch
+    /// state). Sessions must not outlive calibration epochs silently —
+    /// they detect re-calibration and reset themselves.
+    pub fn new_session(&self) -> Session {
+        let core = self.core.borrow();
+        let state = SessionState::new(&core.spec, core.epoch);
+        drop(core);
+        Session {
+            core: self.core.clone(),
+            state: RefCell::new(state),
+        }
+    }
+
+    pub fn spec(&self) -> ModelSpec {
+        self.core.borrow().spec.clone()
+    }
+
+    pub fn meta(&self) -> ModelMeta {
+        self.core.borrow().meta.clone()
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.core.borrow().policy.clone()
+    }
+
+    pub fn latency_table(&self) -> LatencyTable {
+        self.core.borrow().table.clone()
+    }
+
+    /// Snapshot of accumulated per-stage metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.core.borrow().metrics.clone()
+    }
+
+    /// Pre-compile all artifacts (avoids first-request compile stalls).
+    pub fn warmup(&self) -> Result<usize> {
+        let core = self.core.borrow();
+        core.runtime.warmup(&core.model)
+    }
+
+    /// Run dense calibration passes, build hot–cold permutations per
+    /// scored matrix, bake them into the flash layout, and invalidate all
+    /// session state. Call before serving (offline step in the paper).
+    pub fn calibrate_and_reorder(&self, frames: &[Vec<f32>]) -> Result<()> {
+        self.core.borrow_mut().calibrate_and_reorder(frames)
+    }
+
+    /// Install a hot-neuron cache built from calibration frequencies.
+    pub fn set_neuron_cache(&self, cache: HotNeuronCache) {
+        self.core.borrow_mut().neuron_cache = Some(cache);
+    }
+}
+
+/// Group index within [`MatrixKind::SCORED`] (Q, O, Gate, Down).
+fn group_index(kind: MatrixKind) -> usize {
+    MatrixKind::SCORED
+        .iter()
+        .position(|&k| k == kind)
+        .expect("scored kind")
+}
+
+/// Per-group flash-chunk demand recorded for next-call prefetch.
+type GroupChunks = [Option<Vec<Chunk>>; 4];
+
+struct SessionState {
+    /// KV caches, one per layer.
+    kvs: Vec<KvCache>,
+    /// Flash chunks each (layer, group) demanded on the previous call —
+    /// the prefetch prediction source.
+    prev_masks: Vec<GroupChunks>,
+    /// Prefetched whole-layer reads for the current call.
+    prefetch: Vec<Option<PlannedRead>>,
+    epoch: u64,
+}
+
+impl SessionState {
+    fn new(spec: &ModelSpec, epoch: u64) -> Self {
+        Self {
+            kvs: (0..spec.layers)
+                .map(|_| KvCache::new(spec.cache_slots, spec.d))
+                .collect(),
+            prev_masks: Vec::new(),
+            prefetch: Vec::new(),
+            epoch,
+        }
+    }
+
+    fn reset(&mut self, epoch: u64) {
+        for kv in &mut self.kvs {
+            kv.clear();
+        }
+        self.prev_masks.clear();
+        self.prefetch.clear();
+        self.epoch = epoch;
+    }
+}
+
+/// One serving stream: owns its KV caches and prefetch state, shares the
+/// engine core.
+pub struct Session {
+    core: Rc<RefCell<EngineCore>>,
+    state: RefCell<SessionState>,
+}
+
+impl Session {
+    /// Append one frame of token embeddings (`[T, d]` row-major); returns
+    /// the output hidden states and stage stats.
+    pub fn append_frame(&self, frame: &[f32]) -> Result<(Vec<f32>, StageStats)> {
+        let mut core = self.core.borrow_mut();
+        let mut state = self.state.borrow_mut();
+        let t = core.meta.t;
+        anyhow::ensure!(
+            frame.len() == t * core.meta.d,
+            "frame must be [T={}, d={}]",
+            t,
+            core.meta.d
+        );
+        core.forward(&mut state, frame, t)
+    }
+
+    /// Decode one token (`[1, d]` embedding).
+    pub fn decode_step(&self, token: &[f32]) -> Result<(Vec<f32>, StageStats)> {
+        let mut core = self.core.borrow_mut();
+        let mut state = self.state.borrow_mut();
+        anyhow::ensure!(token.len() == core.meta.d, "token must be [d]");
+        if state.epoch == core.epoch {
+            anyhow::ensure!(
+                !state.kvs.iter().all(|kv| kv.is_empty()),
+                "decode requires a non-empty KV cache (append a frame first)"
+            );
+        } else {
+            // The engine was re-calibrated since this session last ran;
+            // its KV state is about to be discarded.
+            anyhow::bail!("decode requires a non-empty KV cache (append a frame first)");
+        }
+        core.forward(&mut state, token, 1)
+    }
+
+    /// Clear KV caches and prefetch state.
+    pub fn reset(&self) {
+        let core = self.core.borrow();
+        self.state.borrow_mut().reset(core.epoch);
+    }
+
+    /// Total KV tokens currently cached across layers.
+    pub fn kv_tokens(&self) -> usize {
+        self.state.borrow().kvs.iter().map(|kv| kv.len()).sum()
+    }
+}
+
+struct EngineCore {
+    model: String,
+    profile: DeviceProfile,
+    policy: Policy,
+    sparsity: f64,
+    seed: u64,
+    prefetch: bool,
     runtime: XlaRuntime,
     meta: ModelMeta,
     spec: ModelSpec,
@@ -106,88 +392,22 @@ pub struct Engine {
     device: SimulatedSsd,
     /// Byte-keyed latency table (re-keyed per matrix row size on use).
     table: LatencyTable,
+    planner: IoPlanner,
     selector: Option<Box<dyn Selector>>,
-    /// KV caches: [stream][layer].
-    kvs: Vec<Vec<KvCache>>,
     /// Optional hot-neuron cache (§5 memory-budget extension).
     neuron_cache: Option<HotNeuronCache>,
-    pub metrics: Metrics,
+    metrics: Metrics,
+    /// Bumped whenever the flash image is rebuilt (re-calibration);
+    /// sessions compare and self-reset.
+    epoch: u64,
 }
 
-impl Engine {
-    /// Build an engine, generating + "flashing" the model weights.
-    pub fn new(cfg: EngineConfig, artifact_dir: &Path) -> Result<Self> {
-        let runtime = XlaRuntime::open(artifact_dir)?;
-        let meta = runtime
-            .manifest
-            .model(&cfg.model)
-            .with_context(|| format!("model {} not in manifest", cfg.model))?
-            .clone();
-        let spec = ModelSpec::by_name(&cfg.model)
-            .with_context(|| format!("unknown model {}", cfg.model))?;
-        anyhow::ensure!(spec.runnable, "engine needs a runnable model");
-        anyhow::ensure!(
-            spec.d == meta.d && spec.h == meta.h && spec.layers == meta.layers,
-            "rust spec / python manifest dimension mismatch"
-        );
-        let store = WeightStore::new(spec.clone(), false, cfg.seed);
-        let device =
-            SimulatedSsd::with_image(cfg.profile.clone(), store.build_image(), cfg.seed ^ 0xD1CE);
-
-        // Profile T[s] against an unbounded twin of the device (the
-        // analytical model is capacity-independent).
-        let probe = SimulatedSsd::timing_only(cfg.profile.clone(), 1 << 40, cfg.seed ^ 0xBEEF);
-        let sat = cfg.profile.saturation_bytes(0.99);
-        let table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024)).build_table()?;
-
-        let selector = cfg.policy.selector();
-        let kvs = (0..cfg.streams.max(1))
-            .map(|_| {
-                (0..spec.layers)
-                    .map(|_| KvCache::new(spec.cache_slots, spec.d))
-                    .collect()
-            })
-            .collect();
-        Ok(Self {
-            cfg,
-            runtime,
-            meta,
-            spec,
-            store,
-            device,
-            table,
-            selector,
-            kvs,
-            neuron_cache: None,
-            metrics: Metrics::new(),
-        })
-    }
-
-    pub fn spec(&self) -> &ModelSpec {
-        &self.spec
-    }
-
-    pub fn meta(&self) -> &ModelMeta {
-        &self.meta
-    }
-
-    pub fn latency_table(&self) -> &LatencyTable {
-        &self.table
-    }
-
-    /// Pre-compile all artifacts (avoids first-request compile stalls).
-    pub fn warmup(&self) -> Result<usize> {
-        self.runtime.warmup(&self.cfg.model)
-    }
-
-    /// Run `frames` dense calibration passes, build hot–cold permutations
-    /// per scored matrix, bake them into the flash layout, and clear KV
-    /// state. Call before serving (offline step in the paper).
-    pub fn calibrate_and_reorder(&mut self, frames: &[Vec<f32>]) -> Result<()> {
+impl EngineCore {
+    fn calibrate_and_reorder(&mut self, frames: &[Vec<f32>]) -> Result<()> {
         // Collect importance samples with a dense temporary pass.
         let mut samples: HashMap<(usize, MatrixKind), Vec<Vec<f32>>> = HashMap::new();
         for f in frames {
-            let collected = self.forward_collect(0, f)?;
+            let collected = self.forward_collect(f)?;
             for (key, imp) in collected {
                 samples.entry(key).or_default().push(imp);
             }
@@ -208,34 +428,17 @@ impl Engine {
             }
         }
         self.device = SimulatedSsd::with_image(
-            self.cfg.profile.clone(),
+            self.profile.clone(),
             self.store.build_image(),
-            self.cfg.seed ^ 0xD1CE,
+            self.seed ^ 0xD1CE,
         );
-        self.reset_streams();
+        self.epoch += 1;
         Ok(())
-    }
-
-    /// Install a hot-neuron cache built from calibration frequencies.
-    pub fn set_neuron_cache(&mut self, cache: HotNeuronCache) {
-        self.neuron_cache = Some(cache);
-    }
-
-    pub fn reset_streams(&mut self) {
-        for stream in &mut self.kvs {
-            for kv in stream {
-                kv.clear();
-            }
-        }
     }
 
     /// Dense forward that records per-(layer, scored-kind) importance —
     /// the calibration pass. Does not touch KV caches.
-    fn forward_collect(
-        &self,
-        _stream: usize,
-        frame: &[f32],
-    ) -> Result<Vec<((usize, MatrixKind), Vec<f32>)>> {
+    fn forward_collect(&self, frame: &[f32]) -> Result<Vec<((usize, MatrixKind), Vec<f32>)>> {
         let t = self.meta.t;
         let d = self.meta.d;
         anyhow::ensure!(frame.len() == t * d, "frame must be [T, d]");
@@ -259,36 +462,30 @@ impl Engine {
         Ok(out)
     }
 
-    /// Append one frame of token embeddings (`[T, d]` row-major) on a
-    /// stream; returns the output hidden states and stage stats.
-    pub fn append_frame(&mut self, stream: usize, frame: &[f32]) -> Result<(Vec<f32>, StageStats)> {
-        let t = self.meta.t;
-        anyhow::ensure!(
-            frame.len() == t * self.meta.d,
-            "frame must be [T={}, d={}]",
-            t,
-            self.meta.d
-        );
-        self.forward(stream, frame, t)
-    }
-
-    /// Decode one token (`[1, d]` embedding) on a stream.
-    pub fn decode_step(&mut self, stream: usize, token: &[f32]) -> Result<(Vec<f32>, StageStats)> {
-        anyhow::ensure!(token.len() == self.meta.d, "token must be [d]");
-        anyhow::ensure!(
-            !self.kvs[stream].iter().all(|kv| kv.is_empty()),
-            "decode requires a non-empty KV cache (append a frame first)"
-        );
-        self.forward(stream, token, 1)
-    }
-
-    fn forward(&mut self, stream: usize, input: &[f32], t: usize) -> Result<(Vec<f32>, StageStats)> {
-        anyhow::ensure!(stream < self.kvs.len(), "bad stream {stream}");
+    fn forward(
+        &mut self,
+        state: &mut SessionState,
+        input: &[f32],
+        t: usize,
+    ) -> Result<(Vec<f32>, StageStats)> {
+        if state.epoch != self.epoch {
+            state.reset(self.epoch);
+        }
         let d = self.meta.d;
         let h = self.meta.h;
+        let layers = self.spec.layers;
         let mut stats = StageStats::default();
+        let mut next_masks: Vec<GroupChunks> =
+            vec![[None, None, None, None]; layers];
+        state.prefetch.resize_with(layers, || None);
+
         let mut x = input.to_vec();
-        for layer in 0..self.spec.layers {
+        for layer in 0..layers {
+            let layer_t0 = Instant::now();
+            // Whole-layer prefetch buffer for this layer, if the previous
+            // call's masks were submitted while layer-1 executed.
+            let pre = state.prefetch[layer].take();
+
             // --- qkv + attention ---
             let timer = StageTimer::start();
             let hn = rmsnorm(&x, t, d);
@@ -296,11 +493,18 @@ impl Engine {
             stats.host += timer.stop(&mut self.metrics, "host");
             let sel = self.select(layer, MatrixKind::Q, &imp, &mut stats);
             let (attn, k, v) = {
-                let (xs, weights, bucket, _io) =
-                    self.load_group(layer, MatrixKind::Q, &hn, t, &sel, &mut stats)?;
+                let (xs, weights, bucket, flash) = self.load_group(
+                    layer,
+                    MatrixKind::Q,
+                    &hn,
+                    t,
+                    &sel,
+                    pre.as_ref(),
+                    &mut stats,
+                )?;
+                next_masks[layer][group_index(MatrixKind::Q)] = Some(flash);
                 let timer = StageTimer::start();
-                let kv = &self.kvs[stream][layer];
-                let (kc, vc, mask) = kv.tensors();
+                let (kc, vc, mask) = state.kvs[layer].tensors();
                 let name = self.artifact("qkv", t, bucket);
                 let out = self.runtime.execute(
                     &name,
@@ -317,14 +521,16 @@ impl Engine {
                 stats.compute += timer.stop(&mut self.metrics, "compute");
                 (out[0].data.clone(), out[1].data.clone(), out[2].data.clone())
             };
-            self.kvs[stream][layer].append(&k, &v);
+            state.kvs[layer].append(&k, &v);
 
             // --- o projection + residual ---
             let timer = StageTimer::start();
             let imp = col_importance(&attn, t, d);
             stats.host += timer.stop(&mut self.metrics, "host");
             let sel = self.select(layer, MatrixKind::O, &imp, &mut stats);
-            let x1 = self.run_projres(layer, MatrixKind::O, &attn, t, &x, &sel, &mut stats)?;
+            let (x1, flash) =
+                self.run_projres(layer, MatrixKind::O, &attn, t, &x, &sel, pre.as_ref(), &mut stats)?;
+            next_masks[layer][group_index(MatrixKind::O)] = Some(flash);
 
             // --- gate/up (SwiGLU) ---
             let timer = StageTimer::start();
@@ -333,8 +539,16 @@ impl Engine {
             stats.host += timer.stop(&mut self.metrics, "host");
             let sel = self.select(layer, MatrixKind::Gate, &imp, &mut stats);
             let act = {
-                let (xs, weights, bucket, _io) =
-                    self.load_group(layer, MatrixKind::Gate, &hn2, t, &sel, &mut stats)?;
+                let (xs, weights, bucket, flash) = self.load_group(
+                    layer,
+                    MatrixKind::Gate,
+                    &hn2,
+                    t,
+                    &sel,
+                    pre.as_ref(),
+                    &mut stats,
+                )?;
+                next_masks[layer][group_index(MatrixKind::Gate)] = Some(flash);
                 let timer = StageTimer::start();
                 let name = self.artifact("gateup", t, bucket);
                 let out = self.runtime.execute(
@@ -354,10 +568,81 @@ impl Engine {
             let imp = col_importance(&act, t, h);
             stats.host += timer.stop(&mut self.metrics, "host");
             let sel = self.select(layer, MatrixKind::Down, &imp, &mut stats);
-            x = self.run_projres(layer, MatrixKind::Down, &act, t, &x1, &sel, &mut stats)?;
+            let (xn, flash) = self.run_projres(
+                layer,
+                MatrixKind::Down,
+                &act,
+                t,
+                &x1,
+                &sel,
+                pre.as_ref(),
+                &mut stats,
+            )?;
+            next_masks[layer][group_index(MatrixKind::Down)] = Some(flash);
+            x = xn;
+
+            // --- double-buffered prefetch of layer l+1 ---
+            // Submit the next layer's predicted whole-layer read now; the
+            // service time it cannot hide behind this layer's compute is
+            // what the caller pays.
+            if self.prefetch && layer + 1 < layers {
+                self.prefetch_layer(state, layer + 1, layer_t0.elapsed(), &mut stats)?;
+            }
         }
+        state.prev_masks = next_masks;
         self.metrics.add_bytes("io", stats.bytes_loaded);
         Ok((x, stats))
+    }
+
+    /// Plan + submit the predicted flash demand of `layer` (all four
+    /// selection groups, every member matrix — one cross-matrix command
+    /// batch). `overlap` is the wall-clock compute window the prefetch
+    /// hides behind.
+    fn prefetch_layer(
+        &mut self,
+        state: &mut SessionState,
+        layer: usize,
+        overlap: Duration,
+        stats: &mut StageStats,
+    ) -> Result<()> {
+        let Some(groups) = state.prev_masks.get(layer) else {
+            return Ok(());
+        };
+        let mut requests = Vec::new();
+        for (gi, scored) in MatrixKind::SCORED.into_iter().enumerate() {
+            let Some(chunks) = &groups[gi] else { continue };
+            if chunks.is_empty() {
+                continue;
+            }
+            for member in MatrixKind::ALL {
+                if member.mask_source() == scored {
+                    requests.push(PlanRequest::new(
+                        MatrixId::new(layer, member),
+                        chunks.clone(),
+                    ));
+                }
+            }
+        }
+        if requests.is_empty() {
+            return Ok(());
+        }
+        let plan = self
+            .planner
+            .plan(&self.store.layout, &requests, Some(&self.table));
+        if plan.is_empty() {
+            return Ok(());
+        }
+        let receipt = self.device.submit(&plan)?;
+        let read = PlannedRead { plan, receipt };
+        let service = read.service();
+        let charged = service.saturating_sub(overlap);
+        stats.io += charged;
+        stats.bytes_loaded += read.plan.payload_bytes();
+        stats.prefetched_bytes += read.plan.payload_bytes();
+        self.metrics.add("io", charged);
+        self.metrics.add("prefetch", service);
+        state.prefetch[layer] = Some(read);
+        Ok(())
     }
 
     /// Run the selection policy for one scored matrix.
@@ -381,7 +666,7 @@ impl Engine {
         if let Some(cache) = &self.neuron_cache {
             cache.zero_cached(id, &mut imp);
         }
-        let budget = ((1.0 - self.cfg.sparsity) * rows as f64).round() as usize;
+        let budget = ((1.0 - self.sparsity) * rows as f64).round() as usize;
         let sel = match &self.selector {
             None => SelectionMask::full(rows),
             Some(s) => {
@@ -394,14 +679,19 @@ impl Engine {
         stats.importance_total += total;
         stats.importance_kept += sel.captured_importance(&imp);
         if let Some(cache) = &self.neuron_cache {
-            stats.importance_kept += cache.cached_importance(id, importance_logical, self.store.permutation(id));
+            stats.importance_kept +=
+                cache.cached_importance(id, importance_logical, self.store.permutation(id));
         }
         sel
     }
 
     /// Load all matrices of the selection group led by `kind`, gather the
-    /// activations, pad to the compiled bucket. Returns (xs, per-member
-    /// weights, bucket, io-time).
+    /// activations, pad to the compiled bucket. One planned, cross-matrix
+    /// flash submission serves every member; rows already resident in the
+    /// layer prefetch buffer or the hot-neuron cache are not re-read.
+    ///
+    /// Returns (xs, per-member weights, bucket, flash chunk demand).
+    #[allow(clippy::too_many_arguments)]
     fn load_group(
         &mut self,
         layer: usize,
@@ -409,8 +699,9 @@ impl Engine {
         acts: &[f32],
         t: usize,
         sel: &SelectionMask,
+        prefetched: Option<&PlannedRead>,
         stats: &mut StageStats,
-    ) -> Result<(Vec<f32>, Vec<Vec<f32>>, usize, Duration)> {
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>, usize, Vec<Chunk>)> {
         let members: Vec<MatrixKind> = MatrixKind::ALL
             .into_iter()
             .filter(|m| m.mask_source() == kind)
@@ -465,57 +756,91 @@ impl Engine {
         }
         stats.host += timer.stop(&mut self.metrics, "host");
 
-        // Load each member matrix: flash for selected, RAM for cached.
+        // Rows the prefetch buffer already holds need no fresh read; the
+        // residual demand is planned as one cross-matrix batch. Coverage is
+        // identical across members (the prefetcher requested the same
+        // chunks for each), so the lead member's cursor decides.
+        let residual: Vec<Chunk> = match prefetched {
+            None => flash_chunks.clone(),
+            Some(pre) => {
+                let lead = MatrixId::new(layer, members[0]);
+                let mut cursor = RowCursor::new(pre, lead);
+                let mut out = Vec::new();
+                for c in &flash_chunks {
+                    let mut run: Option<usize> = None;
+                    for r in c.start..c.end() {
+                        if cursor.advance_to(r).is_some() {
+                            if let Some(s) = run.take() {
+                                out.push(Chunk::new(s, r - s));
+                            }
+                        } else if run.is_none() {
+                            run = Some(r);
+                        }
+                    }
+                    if let Some(s) = run {
+                        out.push(Chunk::new(s, c.end() - s));
+                    }
+                }
+                out
+            }
+        };
+
+        // One planned submission for every member's residual rows.
+        let requests: Vec<PlanRequest> = members
+            .iter()
+            .map(|m| PlanRequest::new(MatrixId::new(layer, *m), residual.clone()))
+            .collect();
+        let plan = self
+            .planner
+            .plan(&self.store.layout, &requests, Some(&self.table));
+        let fresh = if plan.is_empty() {
+            None
+        } else {
+            let receipt = self.device.submit(&plan)?;
+            Some(PlannedRead { plan, receipt })
+        };
+        let io_total = fresh.as_ref().map(|f| f.service()).unwrap_or_default();
+        if let Some(f) = &fresh {
+            stats.bytes_loaded += f.plan.payload_bytes();
+        }
+
+        // Assemble per-member weight buckets: fresh read → prefetch buffer
+        // → hot-neuron cache, walking phys_rows in ascending order.
+        let timer = StageTimer::start();
         let mut weights = Vec::with_capacity(members.len());
-        let mut io_total = Duration::ZERO;
         for m in &members {
             let id = MatrixId::new(layer, *m);
             let cols = self.spec.shape_of(*m).cols;
-            let (flash_rows, io) = self.store.read_rows(&self.device, id, &flash_chunks)?;
-            io_total += io;
-            let flash_bytes: u64 = flash_chunks
-                .iter()
-                .map(|c| (c.len * self.store.layout.row_bytes(id)) as u64)
-                .sum();
-            stats.bytes_loaded += flash_bytes;
-
-            let timer = StageTimer::start();
             let mut w = vec![0.0f32; bucket * cols];
-            // Merge scan: both `phys_rows` and the flash chunk rows are
-            // ascending, so one forward pass pairs them without a hash
-            // map (§Perf: the per-matrix HashMap was measurable on the
-            // gather path).
-            let mut flash_iter = flash_chunks
-                .iter()
-                .flat_map(|c| c.start..c.end())
-                .enumerate()
-                .peekable();
+            let mut fresh_cursor = fresh.as_ref().map(|f| RowCursor::new(f, id));
+            let mut pre_cursor = prefetched.map(|p| RowCursor::new(p, id));
             for (j, &p) in phys_rows.iter().enumerate() {
-                while matches!(flash_iter.peek(), Some(&(_, r)) if r < p) {
-                    flash_iter.next();
+                let dst = &mut w[j * cols..(j + 1) * cols];
+                if let Some(bytes) = fresh_cursor.as_mut().and_then(|c| c.advance_to(p)) {
+                    decode_f32_into(bytes, dst);
+                    continue;
                 }
-                if let Some(&(fpos, r)) = flash_iter.peek() {
-                    if r == p {
-                        w[j * cols..(j + 1) * cols]
-                            .copy_from_slice(&flash_rows[fpos * cols..(fpos + 1) * cols]);
-                        flash_iter.next();
-                        continue;
-                    }
+                if let Some(bytes) = pre_cursor.as_mut().and_then(|c| c.advance_to(p)) {
+                    decode_f32_into(bytes, dst);
+                    stats.prefetch_hits += 1;
+                    continue;
                 }
                 if let Some(cache) = &self.neuron_cache {
                     if let Some(row) = cache.row_data(id, p) {
-                        w[j * cols..(j + 1) * cols].copy_from_slice(row);
+                        dst.copy_from_slice(row);
                     }
                 }
             }
-            stats.host += timer.stop(&mut self.metrics, "host");
             weights.push(w);
         }
+        stats.host += timer.stop(&mut self.metrics, "host");
+
         stats.io += io_total;
         self.metrics.add("io", io_total);
-        Ok((xs, weights, bucket, io_total))
+        Ok((xs, weights, bucket, flash_chunks))
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn run_projres(
         &mut self,
         layer: usize,
@@ -524,10 +849,12 @@ impl Engine {
         t: usize,
         residual: &[f32],
         sel: &SelectionMask,
+        prefetched: Option<&PlannedRead>,
         stats: &mut StageStats,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<(Vec<f32>, Vec<Chunk>)> {
         let d = self.meta.d;
-        let (xs, weights, bucket, _io) = self.load_group(layer, kind, acts, t, sel, stats)?;
+        let (xs, weights, bucket, flash) =
+            self.load_group(layer, kind, acts, t, sel, prefetched, stats)?;
         let timer = StageTimer::start();
         let name = self.artifact("projres", t, bucket);
         let out = self.runtime.execute(
@@ -539,10 +866,11 @@ impl Engine {
             ],
         )?;
         stats.compute += timer.stop(&mut self.metrics, "compute");
-        Ok(out[0].data.clone())
+        Ok((out[0].data.clone(), flash))
     }
 
-    /// Dense helpers used by the calibration pass.
+    /// Dense helpers used by the calibration pass. These also flow through
+    /// the planned-submit path (via [`WeightStore::read_rows`]).
     fn exec_qkv(
         &self,
         layer: usize,
@@ -631,7 +959,7 @@ impl Engine {
             (b, 1) => format!("{b}_dec"),
             (b, _) => b.to_string(),
         };
-        Manifest::artifact_name(&kind, &self.cfg.model, bucket)
+        Manifest::artifact_name(&kind, &self.model, bucket)
     }
 }
 
@@ -679,6 +1007,15 @@ mod tests {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    fn build(policy: Policy, sparsity: f64) -> Engine {
+        Engine::builder("tiny")
+            .policy(policy)
+            .sparsity(sparsity)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap()
+    }
+
     fn frame(spec: &ModelSpec, idx: usize) -> Vec<f32> {
         FrameTrace::new(spec.d, spec.tokens_per_frame, 8, 7).frame(idx)
     }
@@ -706,35 +1043,32 @@ mod tests {
 
     #[test]
     fn dense_engine_runs_and_is_deterministic() {
-        let cfg = EngineConfig::new("tiny", Policy::Dense, 0.0);
-        let mut e1 = Engine::new(cfg.clone(), &artifact_dir()).unwrap();
-        let mut e2 = Engine::new(cfg, &artifact_dir()).unwrap();
-        let f = frame(e1.spec(), 0);
-        let (y1, s1) = e1.append_frame(0, &f).unwrap();
-        let (y2, _) = e2.append_frame(0, &f).unwrap();
+        let e1 = build(Policy::Dense, 0.0);
+        let e2 = build(Policy::Dense, 0.0);
+        let spec = e1.spec();
+        let f = frame(&spec, 0);
+        let s1 = e1.new_session();
+        let s2 = e2.new_session();
+        let (y1, st1) = s1.append_frame(&f).unwrap();
+        let (y2, _) = s2.append_frame(&f).unwrap();
         assert_eq!(y1, y2);
-        assert!(s1.io > Duration::ZERO);
-        assert!(s1.compute > Duration::ZERO);
-        assert_eq!(s1.bytes_loaded, e1.spec().total_bytes());
-        assert!((s1.retained_fraction() - 1.0).abs() < 1e-9);
+        assert!(st1.io > Duration::ZERO);
+        assert!(st1.compute > Duration::ZERO);
+        assert_eq!(st1.bytes_loaded, spec.total_bytes());
+        assert!((st1.retained_fraction() - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn sparsified_output_close_to_dense() {
-        let dir = artifact_dir();
         let f;
         let dense_out;
         {
-            let mut dense = Engine::new(EngineConfig::new("tiny", Policy::Dense, 0.0), &dir).unwrap();
-            f = frame(dense.spec(), 1);
-            dense_out = dense.append_frame(0, &f).unwrap().0;
+            let dense = build(Policy::Dense, 0.0);
+            f = frame(&dense.spec(), 1);
+            dense_out = dense.new_session().append_frame(&f).unwrap().0;
         }
-        let mut sparse = Engine::new(
-            EngineConfig::new("tiny", Policy::TopK, 0.25),
-            &dir,
-        )
-        .unwrap();
-        let (sparse_out, stats) = sparse.append_frame(0, &f).unwrap();
+        let sparse = build(Policy::TopK, 0.25);
+        let (sparse_out, stats) = sparse.new_session().append_frame(&f).unwrap();
         assert!(stats.bytes_loaded < sparse.spec().total_bytes());
         assert!(stats.retained_fraction() < 1.0);
         assert!(stats.retained_fraction() > 0.6);
@@ -751,19 +1085,22 @@ mod tests {
 
     #[test]
     fn chunking_loads_fewer_chunks_than_topk() {
-        let dir = artifact_dir();
         let mk = |policy| {
-            let mut cfg = EngineConfig::new("tiny", policy, 0.4);
-            cfg.seed = 9;
-            Engine::new(cfg, &dir).unwrap()
+            Engine::builder("tiny")
+                .policy(policy)
+                .sparsity(0.4)
+                .seed(9)
+                .artifacts(&artifact_dir())
+                .build()
+                .unwrap()
         };
-        let mut topk = mk(Policy::TopK);
-        let mut chunk = mk(Policy::Chunking {
+        let topk = mk(Policy::TopK);
+        let chunk = mk(Policy::Chunking {
             config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
         });
-        let f = frame(topk.spec(), 2);
-        let (_, st) = topk.append_frame(0, &f).unwrap();
-        let (_, sc) = chunk.append_frame(0, &f).unwrap();
+        let f = frame(&topk.spec(), 2);
+        let (_, st) = topk.new_session().append_frame(&f).unwrap();
+        let (_, sc) = chunk.new_session().append_frame(&f).unwrap();
         assert!(
             sc.io <= st.io,
             "chunking io {:?} should not exceed topk {:?}",
@@ -774,48 +1111,98 @@ mod tests {
 
     #[test]
     fn decode_after_append() {
-        let mut e = Engine::new(EngineConfig::new("tiny", Policy::TopK, 0.3), &artifact_dir()).unwrap();
-        let f = frame(e.spec(), 0);
-        e.append_frame(0, &f).unwrap();
+        let e = build(Policy::TopK, 0.3);
+        let s = e.new_session();
+        let f = frame(&e.spec(), 0);
+        s.append_frame(&f).unwrap();
         let token = vec![0.1f32; e.spec().d];
-        let (y, stats) = e.decode_step(0, &token).unwrap();
+        let (y, stats) = s.decode_step(&token).unwrap();
         assert_eq!(y.len(), e.spec().d);
         assert!(stats.io > Duration::ZERO);
     }
 
     #[test]
     fn decode_without_append_rejected() {
-        let mut e = Engine::new(EngineConfig::new("tiny", Policy::Dense, 0.0), &artifact_dir()).unwrap();
+        let e = build(Policy::Dense, 0.0);
+        let s = e.new_session();
         let token = vec![0.1f32; e.spec().d];
-        assert!(e.decode_step(0, &token).is_err());
+        assert!(s.decode_step(&token).is_err());
     }
 
     #[test]
-    fn streams_are_isolated() {
-        let mut cfg = EngineConfig::new("tiny", Policy::Dense, 0.0);
-        cfg.streams = 2;
-        let mut e = Engine::new(cfg, &artifact_dir()).unwrap();
-        let f0 = frame(e.spec(), 0);
-        let f1 = frame(e.spec(), 5);
-        // Stream 1 state must not affect stream 0's output.
-        let y_a = e.append_frame(0, &f0).unwrap().0;
-        e.reset_streams();
-        e.append_frame(1, &f1).unwrap();
-        let y_b = e.append_frame(0, &f0).unwrap().0;
+    fn sessions_are_isolated() {
+        let e = build(Policy::Dense, 0.0);
+        let s0 = e.new_session();
+        let s1 = e.new_session();
+        let f0 = frame(&e.spec(), 0);
+        let f1 = frame(&e.spec(), 5);
+        // Session 1 state must not affect session 0's output.
+        let y_a = s0.append_frame(&f0).unwrap().0;
+        s0.reset();
+        s1.append_frame(&f1).unwrap();
+        let y_b = s0.append_frame(&f0).unwrap().0;
         assert_eq!(y_a, y_b);
+        assert!(s1.kv_tokens() > 0);
+    }
+
+    #[test]
+    fn prefetch_serves_repeat_traffic_cheaper() {
+        // Dense selections are perfectly predictable, so from the second
+        // call on every non-first layer is fully covered by the prefetch
+        // buffer and accounted I/O cannot exceed the cold call's (the
+        // prefetched whole-layer read merges into fewer, larger commands
+        // and earns the compute-overlap credit on top).
+        let e = build(Policy::Dense, 0.0);
+        let s = e.new_session();
+        let f = frame(&e.spec(), 3);
+        let (_, cold) = s.append_frame(&f).unwrap();
+        assert_eq!(cold.prefetch_hits, 0, "first call has nothing prefetched");
+        let (_, warm) = s.append_frame(&f).unwrap();
+        assert!(warm.prefetch_hits > 0, "repeat call should hit the buffer");
+        assert!(
+            warm.io <= cold.io,
+            "prefetched io {:?} vs cold {:?}",
+            warm.io,
+            cold.io
+        );
+        assert!(warm.prefetched_bytes > 0);
+    }
+
+    #[test]
+    fn prefetch_off_matches_outputs() {
+        let on = build(Policy::TopK, 0.4);
+        let off = Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.4)
+            .prefetch(false)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap();
+        let f0 = frame(&on.spec(), 0);
+        let f1 = frame(&on.spec(), 1);
+        let son = on.new_session();
+        let soff = off.new_session();
+        // Prefetch must be a pure timing optimization: outputs identical.
+        assert_eq!(
+            son.append_frame(&f0).unwrap().0,
+            soff.append_frame(&f0).unwrap().0
+        );
+        let (y_on, st_on) = son.append_frame(&f1).unwrap();
+        let (y_off, st_off) = soff.append_frame(&f1).unwrap();
+        assert_eq!(y_on, y_off);
+        assert_eq!(st_off.prefetch_hits, 0);
+        assert!(st_on.prefetch_hits > 0);
     }
 
     #[test]
     fn reorder_preserves_dense_output() {
-        let dir = artifact_dir();
-        let cfg = EngineConfig::new("tiny", Policy::Dense, 0.0);
-        let mut plain = Engine::new(cfg.clone(), &dir).unwrap();
-        let mut reordered = Engine::new(cfg, &dir).unwrap();
-        let calib: Vec<Vec<f32>> = (0..3).map(|i| frame(plain.spec(), i)).collect();
+        let plain = build(Policy::Dense, 0.0);
+        let reordered = build(Policy::Dense, 0.0);
+        let calib: Vec<Vec<f32>> = (0..3).map(|i| frame(&plain.spec(), i)).collect();
         reordered.calibrate_and_reorder(&calib).unwrap();
-        let f = frame(plain.spec(), 6);
-        let (a, _) = plain.append_frame(0, &f).unwrap();
-        let (b, _) = reordered.append_frame(0, &f).unwrap();
+        let f = frame(&plain.spec(), 6);
+        let (a, _) = plain.new_session().append_frame(&f).unwrap();
+        let (b, _) = reordered.new_session().append_frame(&f).unwrap();
         // Dense compute is permutation-invariant: outputs must match to
         // float tolerance (summation order changes).
         let max_err = a
@@ -827,18 +1214,32 @@ mod tests {
     }
 
     #[test]
+    fn stale_session_resets_after_recalibration() {
+        let e = build(Policy::Dense, 0.0);
+        let s = e.new_session();
+        let f = frame(&e.spec(), 0);
+        s.append_frame(&f).unwrap();
+        assert!(s.kv_tokens() > 0);
+        let calib: Vec<Vec<f32>> = (0..2).map(|i| frame(&e.spec(), i)).collect();
+        e.calibrate_and_reorder(&calib).unwrap();
+        // The stale session must refuse decode (its KV died with the old
+        // flash image) and transparently reset on the next append.
+        assert!(s.decode_step(&vec![0.1; e.spec().d]).is_err());
+        s.append_frame(&f).unwrap();
+        assert!(s.kv_tokens() > 0);
+    }
+
+    #[test]
     fn reorder_improves_topk_contiguity_bytes() {
         // With reordering, top-k selections form fewer/larger chunks, so
         // simulated io time should not get worse.
-        let dir = artifact_dir();
-        let cfg = EngineConfig::new("tiny", Policy::TopK, 0.4);
-        let mut plain = Engine::new(cfg.clone(), &dir).unwrap();
-        let mut reordered = Engine::new(cfg, &dir).unwrap();
-        let calib: Vec<Vec<f32>> = (0..4).map(|i| frame(plain.spec(), i)).collect();
+        let plain = build(Policy::TopK, 0.4);
+        let reordered = build(Policy::TopK, 0.4);
+        let calib: Vec<Vec<f32>> = (0..4).map(|i| frame(&plain.spec(), i)).collect();
         reordered.calibrate_and_reorder(&calib).unwrap();
-        let f = frame(plain.spec(), 7);
-        let (_, sp) = plain.append_frame(0, &f).unwrap();
-        let (_, sr) = reordered.append_frame(0, &f).unwrap();
+        let f = frame(&plain.spec(), 7);
+        let (_, sp) = plain.new_session().append_frame(&f).unwrap();
+        let (_, sr) = reordered.new_session().append_frame(&f).unwrap();
         assert!(
             sr.io.as_secs_f64() <= sp.io.as_secs_f64() * 1.05,
             "reordered io {:?} vs plain {:?}",

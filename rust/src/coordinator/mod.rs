@@ -1,12 +1,14 @@
 //! The L3 serving coordinator.
 //!
-//! [`Engine`] drives the per-matrix sparsification pipeline of §3 against
-//! the AOT-compiled XLA artifacts: score activations → (permute) → select
-//! chunks → read rows from flash → gather/pad to a budget bucket →
-//! execute. [`Scheduler`] runs multi-stream frame-append/decode traffic
-//! over one engine with priority batching. [`KvCache`] manages per-stream
-//! attention state. [`HotNeuronCache`] implements the §5 memory-budget
-//! extension (cached rows get zero importance and skip flash).
+//! [`Engine`] (built via [`EngineBuilder`]) drives the per-matrix
+//! sparsification pipeline of §3: score activations → (permute) → select
+//! chunks → plan the group's flash reads → submit one cross-matrix command
+//! batch → gather/pad to a budget bucket → execute. Serving state lives in
+//! per-stream [`Session`] handles (KV caches + next-layer prefetch).
+//! [`Scheduler`] runs multi-stream frame-append/decode traffic over one
+//! engine with priority batching. [`HotNeuronCache`] implements the §5
+//! memory-budget extension (cached rows get zero importance and skip
+//! flash).
 
 mod engine;
 mod kv;
@@ -14,7 +16,7 @@ mod metrics;
 mod neuron_cache;
 mod scheduler;
 
-pub use engine::{Engine, EngineConfig, StageStats};
+pub use engine::{Engine, EngineBuilder, Session, StageStats};
 pub use kv::KvCache;
 pub use metrics::{Metrics, StageTimer};
 pub use neuron_cache::HotNeuronCache;
@@ -58,6 +60,93 @@ impl Policy {
             Policy::Bundling { bundle_rows } => Some(Box::new(Bundling::new(*bundle_rows))),
         }
     }
+
+    /// Re-tune device-dependent knobs for a device's saturation point (KB):
+    /// chunking's largest candidate window is the saturation chunk size.
+    pub fn tuned_for_saturation(self, sat_kb: f64) -> Policy {
+        match self {
+            Policy::Chunking { mut config } => {
+                config.max_kb = sat_kb;
+                Policy::Chunking { config }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Error from parsing a [`Policy`] string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParsePolicyError {
+    input: String,
+    reason: String,
+}
+
+impl std::fmt::Display for ParsePolicyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "invalid policy {:?}: {} (expected dense | topk | threshold[:t] | \
+             chunking[:min_kb,jump_kb,max_kb] | bundling[:rows])",
+            self.input, self.reason
+        )
+    }
+}
+
+impl std::error::Error for ParsePolicyError {}
+
+/// Parse a policy from CLI syntax: a bare name (`dense`, `topk`,
+/// `threshold`, `chunking`, `bundling`) or a name with `:`-separated
+/// parameters (`threshold:0.1`, `chunking:2,2,348`, `bundling:4`).
+impl std::str::FromStr for Policy {
+    type Err = ParsePolicyError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let err = |reason: &str| ParsePolicyError {
+            input: s.to_string(),
+            reason: reason.to_string(),
+        };
+        let (name, args) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        match (name, args) {
+            ("dense", None) => Ok(Policy::Dense),
+            ("topk", None) => Ok(Policy::TopK),
+            ("dense" | "topk", Some(_)) => Err(err("policy takes no parameters")),
+            ("threshold", None) => Ok(Policy::Threshold { threshold: 0.05 }),
+            ("threshold", Some(a)) => a
+                .parse::<f32>()
+                .ok()
+                .filter(|t| t.is_finite() && *t >= 0.0)
+                .map(|threshold| Policy::Threshold { threshold })
+                .ok_or_else(|| err("threshold must be a finite non-negative float")),
+            ("chunking", None) => Ok(Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            }),
+            ("chunking", Some(a)) => {
+                let parts: Vec<&str> = a.split(',').collect();
+                if parts.len() != 3 {
+                    return Err(err("chunking takes min_kb,jump_kb,max_kb"));
+                }
+                let nums: Result<Vec<f64>, _> =
+                    parts.iter().map(|p| p.parse::<f64>()).collect();
+                match nums {
+                    Ok(v) if v.iter().all(|&x| x > 0.0) => Ok(Policy::Chunking {
+                        config: ChunkSelectConfig::new(v[0], v[1], v[2]),
+                    }),
+                    _ => Err(err("chunking parameters must be positive floats")),
+                }
+            }
+            ("bundling", None) => Ok(Policy::Bundling { bundle_rows: 2 }),
+            ("bundling", Some(a)) => a
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n > 0)
+                .map(|bundle_rows| Policy::Bundling { bundle_rows })
+                .ok_or_else(|| err("bundling rows must be a positive integer")),
+            _ => Err(err("unknown policy name")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -75,6 +164,85 @@ mod tests {
         assert_eq!(
             Policy::Bundling { bundle_rows: 2 }.selector().unwrap().name(),
             "bundling"
+        );
+    }
+
+    #[test]
+    fn parses_bare_names() {
+        assert_eq!("dense".parse::<Policy>().unwrap(), Policy::Dense);
+        assert_eq!("topk".parse::<Policy>().unwrap(), Policy::TopK);
+        assert_eq!(
+            "bundling".parse::<Policy>().unwrap(),
+            Policy::Bundling { bundle_rows: 2 }
+        );
+        assert!(matches!(
+            "threshold".parse::<Policy>().unwrap(),
+            Policy::Threshold { .. }
+        ));
+        assert!(matches!(
+            "chunking".parse::<Policy>().unwrap(),
+            Policy::Chunking { .. }
+        ));
+    }
+
+    #[test]
+    fn parses_parameters() {
+        assert_eq!(
+            "threshold:0.125".parse::<Policy>().unwrap(),
+            Policy::Threshold { threshold: 0.125 }
+        );
+        assert_eq!(
+            "bundling:4".parse::<Policy>().unwrap(),
+            Policy::Bundling { bundle_rows: 4 }
+        );
+        assert_eq!(
+            "chunking:4,8,236".parse::<Policy>().unwrap(),
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(4.0, 8.0, 236.0)
+            }
+        );
+    }
+
+    #[test]
+    fn unknown_policy_is_an_error() {
+        for bad in [
+            "nope",
+            "",
+            "dense:1",
+            "topk:3",
+            "threshold:abc",
+            "threshold:nan",
+            "threshold:-0.5",
+            "threshold:inf",
+            "chunking:1,2",
+            "chunking:0,2,3",
+            "bundling:0",
+            "bundling:x",
+        ] {
+            let e = bad.parse::<Policy>();
+            assert!(e.is_err(), "{bad:?} should not parse");
+            let msg = e.unwrap_err().to_string();
+            assert!(msg.contains("invalid policy"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn round_trips_through_name() {
+        for p in ["dense", "topk", "threshold", "chunking", "bundling"] {
+            assert_eq!(p.parse::<Policy>().unwrap().name(), p);
+        }
+    }
+
+    #[test]
+    fn tuning_rewrites_chunking_saturation() {
+        let p = "chunking".parse::<Policy>().unwrap().tuned_for_saturation(236.0);
+        match p {
+            Policy::Chunking { config } => assert_eq!(config.max_kb, 236.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(
+            Policy::TopK.tuned_for_saturation(100.0),
+            Policy::TopK
         );
     }
 }

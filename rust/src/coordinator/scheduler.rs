@@ -3,15 +3,16 @@
 //!
 //! Decode steps are latency-critical (a user is waiting on tokens) and
 //! preempt queued frame appends — the standard serving-priority split.
-//! The engine is constructed *inside* the worker thread (PJRT handles are
-//! not `Send`); callers talk through channels.
+//! The engine is constructed *inside* the worker thread (engine cores are
+//! thread-confined); each stream index lazily gets its own [`Session`],
+//! and callers talk through channels.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Engine, StageStats};
+use crate::coordinator::{Engine, Session, StageStats};
 
 /// What a request asks the engine to do.
 #[derive(Clone, Debug)]
@@ -56,11 +57,17 @@ pub struct SchedulerConfig {
     /// Maximum queued requests before `submit` returns an error
     /// (backpressure).
     pub max_queue: usize,
+    /// Maximum distinct stream indices (sessions are created lazily up to
+    /// this bound; requests beyond it are rejected at submit).
+    pub max_streams: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { max_queue: 256 }
+        Self {
+            max_queue: 256,
+            max_streams: 64,
+        }
     }
 }
 
@@ -96,7 +103,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    /// Spawn the worker; `make_engine` runs on the worker thread (PJRT
+    /// Spawn the worker; `make_engine` runs on the worker thread (engine
     /// state is thread-confined).
     pub fn spawn<F>(cfg: SchedulerConfig, make_engine: F) -> Self
     where
@@ -108,7 +115,8 @@ impl Scheduler {
         });
         let worker_shared = shared.clone();
         let worker = std::thread::spawn(move || {
-            let mut engine = make_engine();
+            let engine = make_engine();
+            let mut sessions: Vec<Session> = Vec::new();
             loop {
                 let job = {
                     let mut q = worker_shared.queues.lock().unwrap();
@@ -128,14 +136,17 @@ impl Scheduler {
                 };
                 let Some(job) = job else { return };
                 let queue_wait = job.enqueued.elapsed();
+                while sessions.len() <= job.request.stream {
+                    sessions.push(engine.new_session());
+                }
+                let session = &sessions[job.request.stream];
                 let t0 = Instant::now();
                 let (output, stats) = match &job.request.kind {
-                    RequestKind::AppendFrame(f) => match engine.append_frame(job.request.stream, f)
-                    {
+                    RequestKind::AppendFrame(f) => match session.append_frame(f) {
                         Ok((y, s)) => (Ok(y), s),
                         Err(e) => (Err(e.to_string()), StageStats::default()),
                     },
-                    RequestKind::Decode(tok) => match engine.decode_step(job.request.stream, tok) {
+                    RequestKind::Decode(tok) => match session.decode_step(tok) {
                         Ok((y, s)) => (Ok(y), s),
                         Err(e) => (Err(e.to_string()), StageStats::default()),
                     },
@@ -158,8 +169,15 @@ impl Scheduler {
     }
 
     /// Enqueue a request; returns the completion receiver, or an error if
-    /// the queue is full (backpressure) or stopping.
+    /// the queue is full (backpressure), the stream index is out of
+    /// bounds, or the scheduler is stopping.
     pub fn submit(&self, request: Request) -> anyhow::Result<Receiver<Completion>> {
+        anyhow::ensure!(
+            request.stream < self.cfg.max_streams,
+            "stream {} beyond max_streams {}",
+            request.stream,
+            self.cfg.max_streams
+        );
         let (tx, rx) = std::sync::mpsc::channel();
         {
             let mut q = self.shared.queues.lock().unwrap();
@@ -213,17 +231,20 @@ impl Drop for Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{EngineConfig, Policy};
+    use crate::coordinator::Policy;
 
     fn artifact_dir() -> std::path::PathBuf {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    fn spawn_tiny(streams: usize) -> Scheduler {
+    fn spawn_tiny() -> Scheduler {
         Scheduler::spawn(SchedulerConfig::default(), move || {
-            let mut cfg = EngineConfig::new("tiny", Policy::TopK, 0.3);
-            cfg.streams = streams;
-            Engine::new(cfg, &artifact_dir()).unwrap()
+            Engine::builder("tiny")
+                .policy(Policy::TopK)
+                .sparsity(0.3)
+                .artifacts(&artifact_dir())
+                .build()
+                .unwrap()
         })
     }
 
@@ -233,7 +254,7 @@ mod tests {
 
     #[test]
     fn processes_append_and_decode() {
-        let s = spawn_tiny(1);
+        let s = spawn_tiny();
         let rx = s
             .submit(Request {
                 stream: 0,
@@ -258,7 +279,7 @@ mod tests {
 
     #[test]
     fn decode_preempts_queued_appends() {
-        let s = spawn_tiny(2);
+        let s = spawn_tiny();
         // Prime stream 0 so decode is legal (decode preempts *everything*,
         // including a not-yet-started priming append, so wait for it).
         let first = s
@@ -301,9 +322,18 @@ mod tests {
 
     #[test]
     fn backpressure() {
-        let s = Scheduler::spawn(SchedulerConfig { max_queue: 2 }, || {
-            Engine::new(EngineConfig::new("tiny", Policy::Dense, 0.0), &artifact_dir()).unwrap()
-        });
+        let s = Scheduler::spawn(
+            SchedulerConfig {
+                max_queue: 2,
+                ..Default::default()
+            },
+            || {
+                Engine::builder("tiny")
+                    .artifacts(&artifact_dir())
+                    .build()
+                    .unwrap()
+            },
+        );
         // Saturate: worker takes the first, queue holds two more.
         let mut rxs = Vec::new();
         let mut rejected = false;
@@ -328,7 +358,7 @@ mod tests {
 
     #[test]
     fn errors_surface_in_completion() {
-        let s = spawn_tiny(1);
+        let s = spawn_tiny();
         // Decode without prior append is an engine error, not a crash.
         let rx = s
             .submit(Request {
@@ -338,6 +368,29 @@ mod tests {
             .unwrap();
         let c = rx.recv().unwrap();
         assert!(c.output.is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn out_of_bounds_stream_rejected() {
+        let s = Scheduler::spawn(
+            SchedulerConfig {
+                max_streams: 2,
+                ..Default::default()
+            },
+            || {
+                Engine::builder("tiny")
+                    .artifacts(&artifact_dir())
+                    .build()
+                    .unwrap()
+            },
+        );
+        assert!(s
+            .submit(Request {
+                stream: 2,
+                kind: RequestKind::AppendFrame(tiny_frame()),
+            })
+            .is_err());
         s.shutdown();
     }
 }

@@ -340,9 +340,11 @@ pub fn fig6(profile: DeviceProfile, q: Quality) -> anyhow::Result<Vec<Table>> {
 // ---------------------------------------------------------------- Fig 8
 
 /// Latency breakdown at ~5% accuracy drop: real engine, dense vs baseline
-/// vs ours (runnable `small` model; compute is real XLA wall time).
+/// vs ours (runnable `small` model; compute is measured stage-executor
+/// wall time — XLA under `--features pjrt`, the host reference executor
+/// in default builds).
 pub fn fig8(artifact_dir: &std::path::Path, q: Quality) -> anyhow::Result<Vec<Table>> {
-    use crate::coordinator::{Engine, EngineConfig, Policy};
+    use crate::coordinator::{Engine, Policy};
     let mut t = Table::new(
         "Fig 8: latency breakdown per frame (runnable 'small' model, nano profile)",
         &["policy", "io_ms", "compute_ms", "select_ms", "host_ms", "e2e_ms", "bytes_mb", "retained"],
@@ -360,10 +362,12 @@ pub fn fig8(artifact_dir: &std::path::Path, q: Quality) -> anyhow::Result<Vec<Ta
         ),
     ];
     for (label, policy, sparsity) in cases {
-        let mut eng = Engine::new(
-            EngineConfig::new("small", policy, sparsity),
-            artifact_dir,
-        )?;
+        let eng = Engine::builder("small")
+            .policy(policy)
+            .sparsity(sparsity)
+            .artifacts(artifact_dir)
+            .build()?;
+        let session = eng.new_session();
         let trace = crate::workload::FrameTrace::new(
             eng.spec().d,
             eng.spec().tokens_per_frame,
@@ -371,7 +375,7 @@ pub fn fig8(artifact_dir: &std::path::Path, q: Quality) -> anyhow::Result<Vec<Ta
             9,
         );
         // Warm one frame (compile), then measure.
-        eng.append_frame(0, &trace.frame(0))?;
+        session.append_frame(&trace.frame(0))?;
         let mut io = Vec::new();
         let mut comp = Vec::new();
         let mut sel = Vec::new();
@@ -379,7 +383,7 @@ pub fn fig8(artifact_dir: &std::path::Path, q: Quality) -> anyhow::Result<Vec<Ta
         let mut bytes = 0u64;
         let mut retained = Vec::new();
         for f in 1..=q.frames {
-            let (_, s) = eng.append_frame(0, &trace.frame(f))?;
+            let (_, s) = session.append_frame(&trace.frame(f))?;
             io.push(s.io.as_secs_f64() * 1e3);
             comp.push(s.compute.as_secs_f64() * 1e3);
             sel.push(s.select.as_secs_f64() * 1e3);
@@ -862,10 +866,11 @@ pub fn appn(q: Quality) -> anyhow::Result<Vec<Table>> {
 // ------------------------------------------------- real-model trade-off
 
 /// Supplementary: the Fig-6 protocol on the *runnable* model with real
-/// XLA compute — quality is measured, not proxied (cosine similarity of
+/// stage compute (XLA under `--features pjrt`, host reference executor by
+/// default) — quality is measured, not proxied (cosine similarity of
 /// output hidden states vs the dense model).
 pub fn fig6_real(artifact_dir: &std::path::Path, q: Quality) -> anyhow::Result<Vec<Table>> {
-    use crate::coordinator::{Engine, EngineConfig, Policy};
+    use crate::coordinator::{Engine, Policy};
     let mut t = Table::new(
         "Fig 6 (real compute): quality vs I/O on the runnable 'small' model (nano)",
         &["policy", "sparsity", "cosine_vs_dense", "io_ms", "e2e_ms"],
@@ -873,9 +878,10 @@ pub fn fig6_real(artifact_dir: &std::path::Path, q: Quality) -> anyhow::Result<V
     let frames = q.frames.min(4);
     let trace = crate::workload::FrameTrace::new(256, 16, frames + 1, 31);
     let dense_outs: Vec<Vec<f32>> = {
-        let mut e = Engine::new(EngineConfig::new("small", Policy::Dense, 0.0), artifact_dir)?;
+        let e = Engine::builder("small").artifacts(artifact_dir).build()?;
+        let session = e.new_session();
         (0..frames)
-            .map(|f| e.append_frame(0, &trace.frame(f)).map(|(y, _)| y))
+            .map(|f| session.append_frame(&trace.frame(f)).map(|(y, _)| y))
             .collect::<anyhow::Result<_>>()?
     };
     let sat_kb = DeviceProfile::nano().saturation_bytes(0.99) as f64 / 1024.0;
@@ -890,15 +896,17 @@ pub fn fig6_real(artifact_dir: &std::path::Path, q: Quality) -> anyhow::Result<V
     ];
     for (label, policy) in cases {
         for sparsity in [0.0, 0.2, 0.4, 0.6] {
-            let mut e = Engine::new(
-                EngineConfig::new("small", policy.clone(), sparsity),
-                artifact_dir,
-            )?;
+            let e = Engine::builder("small")
+                .policy(policy.clone())
+                .sparsity(sparsity)
+                .artifacts(artifact_dir)
+                .build()?;
+            let session = e.new_session();
             let mut cos = Vec::new();
             let mut io = Vec::new();
             let mut e2e = Vec::new();
             for f in 0..frames {
-                let (y, s) = e.append_frame(0, &trace.frame(f))?;
+                let (y, s) = session.append_frame(&trace.frame(f))?;
                 let want = &dense_outs[f];
                 let dot: f64 = y.iter().zip(want).map(|(a, b)| (a * b) as f64).sum();
                 let na: f64 = y.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();

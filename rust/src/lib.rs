@@ -7,9 +7,12 @@
 //!
 //! * **L3 (this crate)** — the serving system: flash storage engine +
 //!   simulator, chunk-based latency model, utility-guided chunk selection,
-//!   hot–cold reordering, frame-append/decode scheduler, KV-cache manager,
+//!   hot–cold reordering, the [`plan`] I/O-planning layer (cross-matrix
+//!   batching, extent merging, page alignment, latency-estimated
+//!   [`ReadPlan`]s), the session-based serving engine with double-buffered
+//!   next-layer prefetch, frame-append/decode scheduler, KV-cache manager,
 //!   and the per-matrix sparsification pipeline. Nothing here ever calls
-//!   Python.
+//!   Python at serving time.
 //! * **L2 (python/compile/model.py)** — the VLM block compute graph in
 //!   JAX, AOT-lowered to HLO text artifacts consumed by [`runtime`].
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (gathered matmul,
@@ -23,6 +26,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod latency;
 pub mod model;
+pub mod plan;
 pub mod proptest;
 pub mod reorder;
 pub mod report;
@@ -34,5 +38,6 @@ pub mod storage;
 pub mod workload;
 
 pub use latency::{Chunk, ContiguityDistribution, LatencyTable};
+pub use plan::{CoalescePolicy, IoPlanner, PlanReceipt, PlanRequest, PlannedRead, ReadPlan};
 pub use sparsify::{SelectionMask, Selector};
 pub use storage::{DeviceProfile, FlashDevice, SimulatedSsd};

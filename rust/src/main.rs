@@ -12,9 +12,8 @@
 
 use std::path::PathBuf;
 
-use neuron_chunking::coordinator::{Engine, EngineConfig, Policy};
+use neuron_chunking::coordinator::{Engine, Policy};
 use neuron_chunking::report::{fmt_bw, fmt_secs, Table};
-use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::stats;
 use neuron_chunking::storage::{
     DeviceProfile, Profiler, ProfileConfig, RealFileDevice, SimulatedSsd,
@@ -32,9 +31,11 @@ fn main() {
             eprintln!(
                 "repro — flash-offloaded VLM serving with neuron chunking\n\
                  usage:\n\
-                 \x20 repro serve   [--model small] [--policy chunking|topk|dense] \n\
-                 \x20               [--sparsity 0.5] [--device nano|agx] [--frames 8] \n\
-                 \x20               [--decode 4] [--reorder] [--artifacts DIR]\n\
+                 \x20 repro serve   [--model small] [--policy POLICY] [--sparsity 0.5]\n\
+                 \x20               [--device nano|agx] [--frames 8] [--decode 4]\n\
+                 \x20               [--reorder] [--no-prefetch] [--artifacts DIR]\n\
+                 \x20               POLICY: dense | topk | threshold[:t] |\n\
+                 \x20                       chunking[:min_kb,jump_kb,max_kb] | bundling[:rows]\n\
                  \x20 repro profile [--device nano|agx|macbook] [--file PATH] [--out PATH]\n\
                  \x20 repro select  [--rows 4096] [--sparsity 0.5] [--device nano]\n\
                  \x20 repro models"
@@ -78,32 +79,34 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     let sat_kb = profile.saturation_bytes(0.99) as f64 / 1024.0;
-    let policy = match policy_name.as_str() {
-        "dense" => Policy::Dense,
-        "topk" => Policy::TopK,
-        "chunking" => Policy::Chunking {
-            config: ChunkSelectConfig::new(2.0, 2.0, sat_kb),
-        },
-        "bundling" => Policy::Bundling { bundle_rows: 2 },
-        other => {
-            eprintln!("unknown policy {other}");
+    // `FromStr for Policy` handles names and `:`-parameters; the chunking
+    // window cap is then re-tuned to this device's saturation point.
+    let policy = match policy_name.parse::<Policy>() {
+        Ok(p) => p.tuned_for_saturation(sat_kb),
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
         }
     };
 
-    let mut cfg = EngineConfig::new(&model, policy, sparsity);
-    cfg.profile = profile;
     println!(
         "serving model={model} policy={policy_name} sparsity={sparsity} device={device}"
     );
-    let mut engine = match Engine::new(cfg, &artifacts) {
+    let engine = match Engine::builder(&model)
+        .policy(policy)
+        .sparsity(sparsity)
+        .profile(profile)
+        .prefetch(!has_flag(args, "--no-prefetch"))
+        .artifacts(&artifacts)
+        .build()
+    {
         Ok(e) => e,
         Err(e) => {
             eprintln!("engine init failed: {e:#}");
             return 1;
         }
     };
-    let spec = engine.spec().clone();
+    let spec = engine.spec();
     let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, frames + 1, 11);
 
     if has_flag(args, "--reorder") {
@@ -116,19 +119,20 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
 
     println!("compiling {} artifacts…", engine.warmup().unwrap_or(0));
+    let session = engine.new_session();
     // Warmup frame (not measured).
-    if let Err(e) = engine.append_frame(0, &trace.frame(0)) {
+    if let Err(e) = session.append_frame(&trace.frame(0)) {
         eprintln!("warmup failed: {e:#}");
         return 1;
     }
 
     let mut t = Table::new(
         "per-frame serving stats",
-        &["frame", "io", "compute", "select", "host", "e2e", "MB", "retained"],
+        &["frame", "io", "compute", "select", "host", "e2e", "MB", "pf_hits", "retained"],
     );
     let mut e2e = Vec::new();
     for f in 1..=frames {
-        let (_, s) = engine.append_frame(0, &trace.frame(f)).unwrap();
+        let (_, s) = session.append_frame(&trace.frame(f)).unwrap();
         e2e.push(s.end_to_end().as_secs_f64());
         t.row(vec![
             format!("{f}"),
@@ -138,12 +142,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             fmt_secs(s.host.as_secs_f64()),
             fmt_secs(s.end_to_end().as_secs_f64()),
             format!("{:.1}", s.bytes_loaded as f64 / 1e6),
+            format!("{}", s.prefetch_hits),
             format!("{:.3}", s.retained_fraction()),
         ]);
     }
     for dstep in 0..decode_steps {
         let token = vec![0.05f32; spec.d];
-        let (_, s) = engine.decode_step(0, &token).unwrap();
+        let (_, s) = session.decode_step(&token).unwrap();
         t.row(vec![
             format!("dec{dstep}"),
             fmt_secs(s.io.as_secs_f64()),
@@ -152,6 +157,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             fmt_secs(s.host.as_secs_f64()),
             fmt_secs(s.end_to_end().as_secs_f64()),
             format!("{:.1}", s.bytes_loaded as f64 / 1e6),
+            format!("{}", s.prefetch_hits),
             format!("{:.3}", s.retained_fraction()),
         ]);
     }

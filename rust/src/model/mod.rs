@@ -7,3 +7,5 @@ mod weights;
 
 pub use spec::{MatrixKind, MatrixShape, ModelSpec, SelectionGroup};
 pub use weights::{FlashLayout, MatrixId, WeightStore};
+
+pub(crate) use weights::decode_f32_into;

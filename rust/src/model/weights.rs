@@ -11,6 +11,7 @@ use std::time::Duration;
 
 use crate::latency::Chunk;
 use crate::model::{MatrixKind, ModelSpec};
+use crate::plan::{CoalescePolicy, IoPlanner, PlannedRead, RowCursor};
 use crate::reorder::Permutation;
 use crate::rng::Rng;
 use crate::storage::{Extent, FlashDevice};
@@ -186,28 +187,30 @@ impl WeightStore {
 
     /// Read the rows of `chunks` (physical/reordered row space) from the
     /// device, decode to f32, and return (rows-major gathered weights,
-    /// I/O service time).
+    /// I/O service time). Routed through the I/O planning layer: the plan
+    /// is built with the contiguous [`CoalescePolicy`] and submitted via
+    /// [`FlashDevice::submit`], so this path and the engine's group reads
+    /// share one device entry point.
     pub fn read_rows(
         &self,
         device: &dyn FlashDevice,
         id: MatrixId,
         chunks: &[Chunk],
     ) -> anyhow::Result<(Vec<f32>, Duration)> {
-        let extents = self.layout.extents_for_chunks(id, chunks);
-        let (bytes, t) = device.read_batch_vec(&extents)?;
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let plan = planner.plan_chunks(&self.layout, id, chunks, None);
+        let receipt = device.submit(&plan)?;
+        let read = PlannedRead { plan, receipt };
+        let t = read.service();
         let cols = self.spec.shape_of(id.kind).cols;
-        let row_bytes = self.layout.row_bytes(id);
         let n_rows: usize = chunks.iter().map(|c| c.len).sum();
         let mut out = Vec::with_capacity(n_rows * cols);
-        let mut at = 0usize;
+        let mut cursor = RowCursor::new(&read, id);
         for c in chunks {
-            for r in 0..c.len {
-                let row = &bytes[at + r * row_bytes..at + r * row_bytes + cols * 4];
-                for j in 0..cols {
-                    out.push(f32::from_le_bytes(row[j * 4..j * 4 + 4].try_into().unwrap()));
-                }
+            for r in c.start..c.end() {
+                let row = cursor.advance_to(r).expect("plan covers requested rows");
+                decode_f32_row(row, cols, &mut out);
             }
-            at += c.len * row_bytes;
         }
         Ok((out, t))
     }
@@ -222,6 +225,22 @@ impl WeightStore {
         let extents = self.layout.extents_for_chunks(id, chunks);
         device.service_time(&extents)
     }
+}
+
+/// Decode little-endian f32 values from `bytes` into `dst` (one value per
+/// `dst` slot; `bytes` may be longer, e.g. page-padded rows).
+pub(crate) fn decode_f32_into(bytes: &[u8], dst: &mut [f32]) {
+    for (j, o) in dst.iter_mut().enumerate() {
+        *o = f32::from_le_bytes(bytes[j * 4..j * 4 + 4].try_into().unwrap());
+    }
+}
+
+/// Decode `cols` little-endian f32 values from the head of `row`,
+/// appending to `out`.
+pub(crate) fn decode_f32_row(row: &[u8], cols: usize, out: &mut Vec<f32>) {
+    let start = out.len();
+    out.resize(start + cols, 0.0);
+    decode_f32_into(row, &mut out[start..]);
 }
 
 #[cfg(test)]

@@ -1,0 +1,565 @@
+//! The I/O planning layer: the seam between *what to load* (selection
+//! masks) and *how it is submitted to the device*.
+//!
+//! The paper's thesis is that sparsification decisions must be coupled to
+//! storage access cost; this module is where the serving side honours the
+//! same coupling. An [`IoPlanner`] consumes per-matrix chunked row demands
+//! ([`PlanRequest`]s) plus the [`FlashLayout`] and emits a device-aware
+//! [`ReadPlan`]:
+//!
+//! * **cross-matrix batching** — all member matrices of a selection group
+//!   (and, with prefetch, a whole layer) land in one plan, so the device
+//!   sees one deep command batch instead of several shallow ones;
+//! * **adjacent-extent merging** — demands that touch contiguous flash
+//!   ranges (e.g. dense reads of back-to-back matrix regions) coalesce
+//!   into single large commands, which engage more internal parallelism;
+//! * **page alignment** — optional rounding of commands to NAND-page /
+//!   `O_DIRECT` boundaries (the payload offsets inside each command are
+//!   tracked, so callers still address exact row bytes);
+//! * **submission batches** — commands are grouped into queue-depth-sized
+//!   batches for backends that bound in-flight commands;
+//! * **estimated latency** — `Σ T[bytes(cmd)]` from the profiled
+//!   [`LatencyTable`], so planned cost is directly comparable to
+//!   [`crate::storage::SimulatedSsd`] service time.
+//!
+//! Devices consume plans through [`crate::storage::FlashDevice::submit`],
+//! whose default implementation shims onto `read_batch`, returning a
+//! [`PlanReceipt`]. A plan+receipt pair ([`PlannedRead`]) supports random
+//! row access, which is what the engine's gather path and the prefetch
+//! buffer are built on.
+
+use std::time::Duration;
+
+use crate::latency::{Chunk, LatencyTable};
+use crate::model::{FlashLayout, MatrixId};
+use crate::storage::{DeviceProfile, Extent};
+
+/// One matrix's chunked row demand (physical/reordered row space).
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub id: MatrixId,
+    pub chunks: Vec<Chunk>,
+}
+
+impl PlanRequest {
+    pub fn new(id: MatrixId, chunks: Vec<Chunk>) -> Self {
+        Self { id, chunks }
+    }
+}
+
+/// How raw per-chunk extents become device commands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoalescePolicy {
+    /// Merge commands whose flash ranges touch or overlap.
+    pub merge_adjacent: bool,
+    /// Round commands to this page size (0 = no alignment). Required for
+    /// `O_DIRECT` backends; payload offsets remain exact.
+    pub page_bytes: usize,
+    /// Commands per submission batch (0 = one batch with everything).
+    pub max_batch: usize,
+}
+
+impl CoalescePolicy {
+    /// Default serving policy: merge aggressively, no alignment padding,
+    /// single deep submission (analytical simulators model queueing
+    /// internally, so splitting only adds fixed costs).
+    pub fn contiguous() -> Self {
+        Self {
+            merge_adjacent: true,
+            page_bytes: 0,
+            max_batch: 0,
+        }
+    }
+
+    /// No transformation: one command per chunk, one batch. Reproduces the
+    /// legacy per-matrix `read_batch` traffic exactly.
+    pub fn passthrough() -> Self {
+        Self {
+            merge_adjacent: false,
+            page_bytes: 0,
+            max_batch: 0,
+        }
+    }
+
+    /// Policy for a direct-I/O real device: page-aligned commands and
+    /// queue-depth-sized submission batches.
+    ///
+    /// Requires a page-aligned [`FlashLayout`] (`align_rows = true`): on
+    /// an unaligned layout the planner clamps the last command to the
+    /// layout end, which can leave it a non-page-multiple length — an
+    /// `O_DIRECT` backend would reject it (as it would every unaligned
+    /// row offset such a layout produces).
+    pub fn direct_io(profile: &DeviceProfile) -> Self {
+        Self {
+            merge_adjacent: true,
+            page_bytes: profile.page_bytes,
+            max_batch: profile.queue_depth.max(1) * 8,
+        }
+    }
+}
+
+impl Default for CoalescePolicy {
+    fn default() -> Self {
+        Self::contiguous()
+    }
+}
+
+/// One payload segment of a plan: where a matrix chunk's bytes live inside
+/// a command's data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanSegment {
+    pub id: MatrixId,
+    pub chunk: Chunk,
+    /// Bytes per row of this matrix (from the layout).
+    pub row_bytes: usize,
+    /// Index into [`ReadPlan::cmds`].
+    pub cmd: usize,
+    /// Byte offset of the chunk's first row inside the command's data.
+    pub offset_in_cmd: usize,
+}
+
+impl PlanSegment {
+    /// Payload bytes of this segment.
+    pub fn len(&self) -> usize {
+        self.chunk.len * self.row_bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunk.len == 0
+    }
+}
+
+/// A device-aware read plan: sorted, disjoint commands plus the payload
+/// segments that map matrix rows into command data.
+#[derive(Clone, Debug, Default)]
+pub struct ReadPlan {
+    cmds: Vec<Extent>,
+    segments: Vec<PlanSegment>,
+    /// `[start, end)` ranges into `cmds`, one per submission batch.
+    batches: Vec<(usize, usize)>,
+    /// `Σ T[bytes(cmd)]` under the planning-time latency table (0 when no
+    /// table was supplied).
+    pub estimated_seconds: f64,
+}
+
+impl ReadPlan {
+    pub fn cmds(&self) -> &[Extent] {
+        &self.cmds
+    }
+
+    pub fn segments(&self) -> &[PlanSegment] {
+        &self.segments
+    }
+
+    pub fn batches(&self) -> &[(usize, usize)] {
+        &self.batches
+    }
+
+    pub fn num_cmds(&self) -> usize {
+        self.cmds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cmds.is_empty()
+    }
+
+    /// Bytes the device will actually transfer (includes alignment
+    /// padding and any inter-segment gap swallowed by merging).
+    pub fn cmd_bytes(&self) -> u64 {
+        self.cmds.iter().map(|e| e.len as u64).sum()
+    }
+
+    /// Bytes of requested payload (selected rows only).
+    pub fn payload_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.len() as u64).sum()
+    }
+
+    /// Structural invariants: commands sorted and disjoint, batches
+    /// partition the command list, every segment inside its command.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for w in self.cmds.windows(2) {
+            anyhow::ensure!(
+                w[0].end() <= w[1].offset,
+                "commands overlap or unsorted: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+        let mut at = 0usize;
+        for &(s, e) in &self.batches {
+            anyhow::ensure!(s == at && e >= s, "batches must partition cmds");
+            at = e;
+        }
+        anyhow::ensure!(
+            at == self.cmds.len(),
+            "batches cover {at} of {} cmds",
+            self.cmds.len()
+        );
+        for seg in &self.segments {
+            anyhow::ensure!(seg.cmd < self.cmds.len(), "segment cmd out of range");
+            let cmd = &self.cmds[seg.cmd];
+            anyhow::ensure!(
+                seg.offset_in_cmd + seg.len() <= cmd.len,
+                "segment {:?} exceeds command {:?}",
+                seg,
+                cmd
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Receipt of a submitted plan: the raw command data plus the device's
+/// (virtual or wall-clock) service time.
+#[derive(Clone, Debug)]
+pub struct PlanReceipt {
+    /// Concatenated command data, in command order.
+    pub bytes: Vec<u8>,
+    /// Total device service time across all submission batches.
+    pub service: Duration,
+    /// Byte offset of each command's data inside `bytes`.
+    pub cmd_offsets: Vec<usize>,
+}
+
+/// A plan together with its receipt: supports exact row addressing, which
+/// the engine's gather path and prefetch buffer build on.
+#[derive(Clone, Debug)]
+pub struct PlannedRead {
+    pub plan: ReadPlan,
+    pub receipt: PlanReceipt,
+}
+
+impl PlannedRead {
+    pub fn service(&self) -> Duration {
+        self.receipt.service
+    }
+
+    /// Raw bytes of one payload segment.
+    pub fn segment_bytes(&self, i: usize) -> &[u8] {
+        let seg = &self.plan.segments[i];
+        let base = self.receipt.cmd_offsets[seg.cmd] + seg.offset_in_cmd;
+        &self.receipt.bytes[base..base + seg.len()]
+    }
+
+    /// Raw bytes of one matrix row, if the plan covered it.
+    pub fn row_data(&self, id: MatrixId, row: usize) -> Option<&[u8]> {
+        for (i, seg) in self.plan.segments.iter().enumerate() {
+            if seg.id == id && seg.chunk.start <= row && row < seg.chunk.end() {
+                let bytes = self.segment_bytes(i);
+                let off = (row - seg.chunk.start) * seg.row_bytes;
+                return Some(&bytes[off..off + seg.row_bytes]);
+            }
+        }
+        None
+    }
+
+    /// Whether the plan covered this row.
+    pub fn covers(&self, id: MatrixId, row: usize) -> bool {
+        self.plan
+            .segments
+            .iter()
+            .any(|s| s.id == id && s.chunk.start <= row && row < s.chunk.end())
+    }
+}
+
+/// Monotone row-wise cursor over one matrix's segments of a
+/// [`PlannedRead`] — the merge-scan partner of an ascending row walk
+/// (rows must be queried in non-decreasing order).
+pub struct RowCursor<'a> {
+    read: &'a PlannedRead,
+    /// Indices of this matrix's segments, sorted by chunk start.
+    segs: Vec<usize>,
+    pos: usize,
+    last_row: usize,
+}
+
+impl<'a> RowCursor<'a> {
+    pub fn new(read: &'a PlannedRead, id: MatrixId) -> Self {
+        let mut segs: Vec<usize> = read
+            .plan
+            .segments
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.id == id)
+            .map(|(i, _)| i)
+            .collect();
+        segs.sort_by_key(|&i| read.plan.segments[i].chunk.start);
+        Self {
+            read,
+            segs,
+            pos: 0,
+            last_row: 0,
+        }
+    }
+
+    /// Bytes of `row` if covered. Ascending queries are O(1) amortized; a
+    /// backward query rewinds the cursor (correct, just slower).
+    pub fn advance_to(&mut self, row: usize) -> Option<&'a [u8]> {
+        if row < self.last_row {
+            self.pos = 0;
+        }
+        self.last_row = row;
+        while self.pos < self.segs.len() {
+            let seg = &self.read.plan.segments[self.segs[self.pos]];
+            if seg.chunk.end() <= row {
+                self.pos += 1;
+                continue;
+            }
+            if seg.chunk.start <= row {
+                let bytes = self.read.segment_bytes(self.segs[self.pos]);
+                let off = (row - seg.chunk.start) * seg.row_bytes;
+                return Some(&bytes[off..off + seg.row_bytes]);
+            }
+            return None;
+        }
+        None
+    }
+}
+
+/// Builds [`ReadPlan`]s from per-matrix chunk demands.
+#[derive(Clone, Debug, Default)]
+pub struct IoPlanner {
+    pub policy: CoalescePolicy,
+}
+
+impl IoPlanner {
+    pub fn new(policy: CoalescePolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Plan a batch of per-matrix demands against a layout. `table` keys
+    /// the latency estimate; pass `None` to skip estimation.
+    pub fn plan(
+        &self,
+        layout: &FlashLayout,
+        requests: &[PlanRequest],
+        table: Option<&LatencyTable>,
+    ) -> ReadPlan {
+        // Raw (offset, len, id, chunk, row_bytes) spans, one per chunk.
+        struct Raw {
+            offset: u64,
+            len: usize,
+            id: MatrixId,
+            chunk: Chunk,
+            row_bytes: usize,
+        }
+        let mut raw: Vec<Raw> = Vec::new();
+        for req in requests {
+            let row_bytes = layout.row_bytes(req.id);
+            for &chunk in &req.chunks {
+                if chunk.len == 0 {
+                    continue;
+                }
+                raw.push(Raw {
+                    offset: layout.row_offset(req.id, chunk.start),
+                    len: chunk.len * row_bytes,
+                    id: req.id,
+                    chunk,
+                    row_bytes,
+                });
+            }
+        }
+        raw.sort_by_key(|r| r.offset);
+
+        let page = self.policy.page_bytes as u64;
+        let total = layout.total_bytes();
+        let align_lo = |o: u64| if page > 0 { o - o % page } else { o };
+        let align_hi = |o: u64| {
+            if page > 0 {
+                (o.div_ceil(page) * page).min(total)
+            } else {
+                o
+            }
+        };
+
+        let mut cmds: Vec<Extent> = Vec::new();
+        let mut segments: Vec<PlanSegment> = Vec::new();
+        for r in &raw {
+            let lo = align_lo(r.offset);
+            let hi = align_hi(r.offset + r.len as u64);
+            let extend = self.policy.merge_adjacent
+                && cmds
+                    .last()
+                    .map(|c| lo <= c.end())
+                    .unwrap_or(false);
+            if extend {
+                let last = cmds.last_mut().unwrap();
+                let new_end = last.end().max(hi);
+                last.len = (new_end - last.offset) as usize;
+            } else {
+                cmds.push(Extent::new(lo, (hi - lo) as usize));
+            }
+            let cmd = cmds.len() - 1;
+            segments.push(PlanSegment {
+                id: r.id,
+                chunk: r.chunk,
+                row_bytes: r.row_bytes,
+                cmd,
+                offset_in_cmd: (r.offset - cmds[cmd].offset) as usize,
+            });
+        }
+
+        let batches = if cmds.is_empty() {
+            Vec::new()
+        } else if self.policy.max_batch == 0 {
+            vec![(0, cmds.len())]
+        } else {
+            let mut b = Vec::new();
+            let mut at = 0;
+            while at < cmds.len() {
+                let end = (at + self.policy.max_batch).min(cmds.len());
+                b.push((at, end));
+                at = end;
+            }
+            b
+        };
+
+        let estimated_seconds = table
+            .map(|t| cmds.iter().map(|c| t.latency_bytes(c.len)).sum())
+            .unwrap_or(0.0);
+
+        ReadPlan {
+            cmds,
+            segments,
+            batches,
+            estimated_seconds,
+        }
+    }
+
+    /// Convenience: plan one matrix's chunks.
+    pub fn plan_chunks(
+        &self,
+        layout: &FlashLayout,
+        id: MatrixId,
+        chunks: &[Chunk],
+        table: Option<&LatencyTable>,
+    ) -> ReadPlan {
+        self.plan(layout, &[PlanRequest::new(id, chunks.to_vec())], table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MatrixKind, ModelSpec};
+
+    fn layout(aligned: bool) -> FlashLayout {
+        FlashLayout::build(&ModelSpec::tiny(), aligned)
+    }
+
+    fn full_requests(spec: &ModelSpec, layer: usize) -> Vec<PlanRequest> {
+        spec.matrices()
+            .iter()
+            .map(|m| {
+                PlanRequest::new(
+                    MatrixId::new(layer, m.kind),
+                    vec![Chunk::new(0, m.rows)],
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dense_layer_merges_into_one_command() {
+        let spec = ModelSpec::tiny();
+        let l = layout(false);
+        let plan = IoPlanner::new(CoalescePolicy::contiguous()).plan(
+            &l,
+            &full_requests(&spec, 0),
+            None,
+        );
+        plan.validate().unwrap();
+        // All seven matrix regions of a layer are packed back-to-back, so
+        // they coalesce into a single large command.
+        assert_eq!(plan.num_cmds(), 1);
+        assert_eq!(plan.segments().len(), 7);
+        assert_eq!(plan.cmd_bytes(), plan.payload_bytes());
+    }
+
+    #[test]
+    fn passthrough_keeps_one_command_per_chunk() {
+        let spec = ModelSpec::tiny();
+        let l = layout(false);
+        let plan = IoPlanner::new(CoalescePolicy::passthrough()).plan(
+            &l,
+            &full_requests(&spec, 1),
+            None,
+        );
+        plan.validate().unwrap();
+        assert_eq!(plan.num_cmds(), 7);
+    }
+
+    #[test]
+    fn sparse_chunks_stay_disjoint_and_sorted() {
+        let l = layout(false);
+        let id = MatrixId::new(0, MatrixKind::Gate);
+        let chunks = vec![Chunk::new(2, 3), Chunk::new(10, 1), Chunk::new(40, 8)];
+        let plan =
+            IoPlanner::new(CoalescePolicy::contiguous()).plan_chunks(&l, id, &chunks, None);
+        plan.validate().unwrap();
+        assert_eq!(plan.num_cmds(), 3);
+        let rb = l.row_bytes(id);
+        assert_eq!(plan.payload_bytes(), (12 * rb) as u64);
+        assert_eq!(plan.cmd_bytes(), (12 * rb) as u64);
+    }
+
+    #[test]
+    fn page_alignment_pads_commands_not_payload() {
+        let l = layout(true); // 4 KiB-aligned rows
+        let id = MatrixId::new(0, MatrixKind::Q);
+        let plan = IoPlanner::new(CoalescePolicy {
+            merge_adjacent: true,
+            page_bytes: 4096,
+            max_batch: 0,
+        })
+        .plan_chunks(&l, id, &[Chunk::new(1, 2)], None);
+        plan.validate().unwrap();
+        for c in plan.cmds() {
+            assert_eq!(c.offset % 4096, 0);
+            assert_eq!(c.len % 4096, 0);
+        }
+        assert_eq!(plan.payload_bytes(), (2 * l.row_bytes(id)) as u64);
+    }
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let l = layout(false);
+        let id = MatrixId::new(0, MatrixKind::Down);
+        let chunks: Vec<Chunk> = (0..10).map(|i| Chunk::new(i * 3, 1)).collect();
+        let plan = IoPlanner::new(CoalescePolicy {
+            merge_adjacent: false,
+            page_bytes: 0,
+            max_batch: 4,
+        })
+        .plan_chunks(&l, id, &chunks, None);
+        plan.validate().unwrap();
+        assert_eq!(plan.batches(), &[(0, 4), (4, 8), (8, 10)]);
+    }
+
+    #[test]
+    fn estimate_sums_table_entries() {
+        let l = layout(false);
+        let id = MatrixId::new(0, MatrixKind::Gate);
+        let entries: Vec<f64> = (1..=64).map(|i| 40e-6 + i as f64 * 1e-6).collect();
+        let table = LatencyTable::new(1024, entries, l.row_bytes(id));
+        let chunks = vec![Chunk::new(0, 2), Chunk::new(8, 4)];
+        let plan = IoPlanner::new(CoalescePolicy::contiguous())
+            .plan_chunks(&l, id, &chunks, Some(&table));
+        let want: f64 = plan
+            .cmds()
+            .iter()
+            .map(|c| table.latency_bytes(c.len))
+            .sum();
+        assert!((plan.estimated_seconds - want).abs() < 1e-15);
+        assert!(plan.estimated_seconds > 0.0);
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let l = layout(false);
+        let plan = IoPlanner::new(CoalescePolicy::contiguous()).plan(&l, &[], None);
+        plan.validate().unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan.cmd_bytes(), 0);
+    }
+}

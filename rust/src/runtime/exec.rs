@@ -1,0 +1,532 @@
+//! Host reference executor: the default runtime backend.
+//!
+//! Implements the exact stage semantics of `python/compile/kernels/ref.py`
+//! in pure Rust, dispatching on the artifact `kind` recorded in the
+//! manifest. f64 accumulation keeps dense outputs permutation-stable (the
+//! engine's reorder tests compare outputs across different summation
+//! orders at 1e-3 tolerance).
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelSpec;
+use crate::runtime::{Manifest, Tensor};
+
+/// Large-negative mask value (not -inf: keeps softmax finite) — mirrors
+/// `ref.py::NEG_INF`.
+const NEG_INF: f64 = -1e9;
+
+/// Reference runtime with the same API as the PJRT backend.
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+    /// Names "compiled" so far (warmup/caching accounting parity with the
+    /// PJRT backend's executable cache).
+    compiled: Mutex<HashSet<String>>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory. If `manifest.tsv` exists it is loaded
+    /// (so a PJRT-built artifact set drives the same shapes); otherwise the
+    /// manifest is synthesized from the runnable model specs.
+    pub fn open(artifact_dir: &Path) -> Result<Self> {
+        let path = artifact_dir.join("manifest.tsv");
+        let manifest = if path.exists() {
+            Manifest::load(&path).with_context(|| format!("loading manifest from {path:?}"))?
+        } else {
+            Manifest::parse(&synthesized_manifest_tsv())?
+        };
+        Ok(Self {
+            manifest,
+            compiled: Mutex::new(HashSet::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        "host-reference".to_string()
+    }
+
+    /// Pre-"compile" every artifact of a model (API parity; the reference
+    /// executor has no real compile step).
+    pub fn warmup(&self, model: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.name.clone())
+            .collect();
+        let mut cache = self.compiled.lock().unwrap();
+        for n in &names {
+            cache.insert(n.clone());
+        }
+        Ok(names.len())
+    }
+
+    /// Number of distinct artifacts executed or warmed so far.
+    pub fn cached(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+
+    /// Execute an artifact with the given inputs; validates shapes against
+    /// the manifest.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("unknown artifact {name}"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            anyhow::ensure!(
+                &t.dims == spec,
+                "{name}: input {i} shape {:?} != manifest {:?}",
+                t.dims,
+                spec
+            );
+        }
+        self.compiled.lock().unwrap().insert(name.to_string());
+        let model = self
+            .manifest
+            .model(&meta.model)
+            .with_context(|| format!("{name}: unknown model {}", meta.model))?;
+        let out = match meta.kind.as_str() {
+            "qkv_append" | "qkv_decode" => {
+                let (xs, wq, wk, wv, kc, vc, mask) = (
+                    &inputs[0], &inputs[1], &inputs[2], &inputs[3], &inputs[4], &inputs[5],
+                    &inputs[6],
+                );
+                let t = xs.dims[0];
+                let d = wq.dims[1];
+                let c = kc.dims[0];
+                let q = matmul(xs, wq);
+                let k = matmul(xs, wk);
+                let v = matmul(xs, wv);
+                // keys/vals = concat(cache, new); mask = concat(mask, 1s).
+                let mut keys = kc.data.clone();
+                keys.extend_from_slice(&k.data);
+                let mut vals = vc.data.clone();
+                vals.extend_from_slice(&v.data);
+                let mut full_mask = mask.data.clone();
+                full_mask.extend(std::iter::repeat(1.0f32).take(t));
+                let attn = mha_attention(&q.data, &keys, &vals, &full_mask, t, c + t, d, model.nh);
+                vec![Tensor::new(vec![t, d], attn), k, v]
+            }
+            "gateup" | "gateup_dec" => {
+                let gate = matmul(&inputs[0], &inputs[1]);
+                let up = matmul(&inputs[0], &inputs[2]);
+                let act: Vec<f32> = gate
+                    .data
+                    .iter()
+                    .zip(&up.data)
+                    .map(|(&g, &u)| (silu(g as f64) * u as f64) as f32)
+                    .collect();
+                vec![Tensor::new(gate.dims, act)]
+            }
+            "projres" | "projres_dec" => {
+                let y = matmul(&inputs[0], &inputs[1]);
+                let res = &inputs[2];
+                let out: Vec<f32> = y.data.iter().zip(&res.data).map(|(&a, &b)| a + b).collect();
+                vec![Tensor::new(res.dims.clone(), out)]
+            }
+            other => anyhow::bail!("{name}: unknown artifact kind {other}"),
+        };
+        anyhow::ensure!(
+            out.len() == meta.outputs,
+            "{name}: produced {} outputs, manifest says {}",
+            out.len(),
+            meta.outputs
+        );
+        Ok(out)
+    }
+}
+
+/// `a[t,r] @ b[r,n]` with f64 accumulation.
+fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (t, r) = (a.dims[0], a.dims[1]);
+    let (rb, n) = (b.dims[0], b.dims[1]);
+    assert_eq!(r, rb, "contraction mismatch {r} vs {rb}");
+    let mut out = vec![0.0f32; t * n];
+    for ti in 0..t {
+        let mut acc = vec![0.0f64; n];
+        let row = &a.data[ti * r..(ti + 1) * r];
+        for (kk, &av) in row.iter().enumerate() {
+            if av == 0.0 {
+                continue; // zero-padded budget rows contribute nothing
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            let av = av as f64;
+            for (j, &bv) in brow.iter().enumerate() {
+                acc[j] += av * bv as f64;
+            }
+        }
+        for (o, &v) in out[ti * n..(ti + 1) * n].iter_mut().zip(&acc) {
+            *o = v as f32;
+        }
+    }
+    Tensor::new(vec![t, n], out)
+}
+
+fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Multi-head attention of `t` query tokens over `s` key/value slots —
+/// mirror of `ref.py::mha_attention` (max-subtracted softmax).
+fn mha_attention(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    mask: &[f32],
+    t: usize,
+    s: usize,
+    d: usize,
+    nh: usize,
+) -> Vec<f32> {
+    assert_eq!(d % nh, 0, "head split {d} % {nh}");
+    let hd = d / nh;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut out = vec![0.0f32; t * d];
+    let mut scores = vec![0.0f64; s];
+    for h in 0..nh {
+        let off = h * hd;
+        for ti in 0..t {
+            let qrow = &q[ti * d + off..ti * d + off + hd];
+            let mut max = f64::MIN;
+            for (j, sc) in scores.iter_mut().enumerate() {
+                let krow = &keys[j * d + off..j * d + off + hd];
+                let dot: f64 = qrow
+                    .iter()
+                    .zip(krow)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                let v = dot * scale + (1.0 - mask[j] as f64) * NEG_INF;
+                *sc = v;
+                max = max.max(v);
+            }
+            let mut denom = 0.0f64;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            }
+            let mut acc = vec![0.0f64; hd];
+            for (j, &p) in scores.iter().enumerate() {
+                let vrow = &vals[j * d + off..j * d + off + hd];
+                let p = p / denom;
+                for (a, &v) in acc.iter_mut().zip(vrow) {
+                    *a += p * v as f64;
+                }
+            }
+            for (e, &v) in acc.iter().enumerate() {
+                out[ti * d + off + e] = v as f32;
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------- manifest synthesis
+
+/// Round half-to-even (Python `round` semantics — the bucket grid depends
+/// on it: `round(192*0.375/16) = round(4.5) = 4`).
+fn round_half_even(x: f64) -> i64 {
+    let floor = x.floor();
+    let frac = x - floor;
+    let f = floor as i64;
+    if frac > 0.5 {
+        f + 1
+    } else if frac < 0.5 {
+        f
+    } else if f % 2 == 0 {
+        f
+    } else {
+        f + 1
+    }
+}
+
+/// Budget buckets over dim `n` — mirror of `python/compile/model.py
+/// ModelDims.buckets`.
+pub fn budget_buckets(n: usize) -> Vec<usize> {
+    let fractions = [1.0, 0.75, 0.5, 0.375, 0.25];
+    let mut out = Vec::new();
+    for f in fractions {
+        let r = (round_half_even(n as f64 * f / 16.0) * 16).max(16) as usize;
+        let r = r.min(n);
+        if !out.contains(&r) {
+            out.push(r);
+        }
+    }
+    out
+}
+
+/// Build the manifest TSV for all runnable models — the same rows
+/// `python/compile/aot.py` writes, minus the (unneeded) HLO files.
+pub fn synthesized_manifest_tsv() -> String {
+    let mut tsv = String::new();
+    for spec in [ModelSpec::tiny(), ModelSpec::small(), ModelSpec::base()] {
+        let (name, d, h, t, c) = (
+            spec.name.clone(),
+            spec.d,
+            spec.h,
+            spec.tokens_per_frame,
+            spec.cache_slots,
+        );
+        let d_buckets = budget_buckets(d);
+        let h_buckets = budget_buckets(h);
+        let list = |b: &[usize]| {
+            b.iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        tsv.push_str(&format!(
+            "model\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+            name,
+            d,
+            h,
+            spec.nh,
+            t,
+            c,
+            spec.layers,
+            list(&d_buckets),
+            list(&h_buckets)
+        ));
+        let shapes = |dims: &[Vec<usize>]| {
+            dims.iter()
+                .map(|s| {
+                    if s.is_empty() {
+                        "scalar".to_string()
+                    } else {
+                        s.iter()
+                            .map(|x| x.to_string())
+                            .collect::<Vec<_>>()
+                            .join(",")
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(";")
+        };
+        let mut artifact =
+            |kind: &str, r: usize, tt: usize, outputs: usize, inputs: &[Vec<usize>]| {
+                let aname = Manifest::artifact_name(kind, &name, r);
+                tsv.push_str(&format!(
+                    "artifact\t{}\t{}.hlo.txt\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                    aname,
+                    aname,
+                    kind,
+                    name,
+                    r,
+                    tt,
+                    outputs,
+                    shapes(inputs)
+                ));
+            };
+        for &r in &d_buckets {
+            for (tt, stage) in [(t, "qkv_append"), (1, "qkv_decode")] {
+                artifact(
+                    stage,
+                    r,
+                    tt,
+                    3,
+                    &[
+                        vec![tt, r],
+                        vec![r, d],
+                        vec![r, d],
+                        vec![r, d],
+                        vec![c, d],
+                        vec![c, d],
+                        vec![c],
+                    ],
+                );
+            }
+            for (tt, stage) in [(t, "gateup"), (1, "gateup_dec")] {
+                artifact(stage, r, tt, 1, &[vec![tt, r], vec![r, h], vec![r, h]]);
+            }
+        }
+        let mut proj: Vec<usize> = d_buckets
+            .iter()
+            .chain(h_buckets.iter())
+            .copied()
+            .collect();
+        proj.sort_unstable();
+        proj.dedup();
+        for &r in &proj {
+            for (tt, stage) in [(t, "projres"), (1, "projres_dec")] {
+                artifact(stage, r, tt, 1, &[vec![tt, r], vec![r, d], vec![tt, d]]);
+            }
+        }
+    }
+    tsv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn rt() -> XlaRuntime {
+        // Any directory without a manifest.tsv falls back to synthesis.
+        XlaRuntime::open(&PathBuf::from("artifacts")).unwrap()
+    }
+
+    #[test]
+    fn buckets_match_python_grid() {
+        // Mirrors ModelDims.buckets incl. the round-half-even tie at
+        // 192 * 0.375 / 16 = 4.5.
+        assert_eq!(budget_buckets(64), vec![64, 48, 32, 16]);
+        assert_eq!(budget_buckets(192), vec![192, 144, 96, 64, 48]);
+        assert_eq!(budget_buckets(256), vec![256, 192, 128, 96, 64]);
+        assert_eq!(budget_buckets(768), vec![768, 576, 384, 288, 192]);
+    }
+
+    #[test]
+    fn opens_and_lists_manifest() {
+        let rt = rt();
+        assert!(rt.manifest.artifacts.len() >= 30);
+        assert!(rt.manifest.model("tiny").is_some());
+        assert!(rt.manifest.model("small").is_some());
+        assert!(rt.manifest.model("base").is_some());
+        assert_eq!(rt.platform(), "host-reference");
+    }
+
+    #[test]
+    fn executes_projres_matches_host_matmul() {
+        let rt = rt();
+        let m = rt.manifest.model("tiny").unwrap().clone();
+        let r = m.d_buckets[0];
+        let name = format!("projres_tiny_r{r}");
+        let t = m.t;
+        let mut rng = crate::rng::Rng::new(3);
+        let a = Tensor::new(
+            vec![t, r],
+            (0..t * r).map(|_| rng.normal() as f32 * 0.3).collect(),
+        );
+        let w = Tensor::new(
+            vec![r, m.d],
+            (0..r * m.d).map(|_| rng.normal() as f32 * 0.3).collect(),
+        );
+        let res = Tensor::new(
+            vec![t, m.d],
+            (0..t * m.d).map(|_| rng.normal() as f32 * 0.3).collect(),
+        );
+        let out = rt
+            .execute(&name, &[a.clone(), w.clone(), res.clone()])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![t, m.d]);
+        for ti in 0..t {
+            for j in 0..m.d {
+                let mut acc = res.data[ti * m.d + j] as f64;
+                for k in 0..r {
+                    acc += a.data[ti * r + k] as f64 * w.data[k * m.d + j] as f64;
+                }
+                let got = out[0].data[ti * m.d + j] as f64;
+                assert!(
+                    (got - acc).abs() < 1e-3,
+                    "mismatch at ({ti},{j}): {got} vs {acc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gateup_matches_silu_formula() {
+        let rt = rt();
+        let m = rt.manifest.model("tiny").unwrap().clone();
+        let r = *m.d_buckets.last().unwrap();
+        let name = format!("gateup_dec_tiny_r{r}");
+        let xs = Tensor::new(vec![1, r], (0..r).map(|i| 0.01 * i as f32).collect());
+        let wg = Tensor::new(vec![r, m.h], vec![0.02; r * m.h]);
+        let wu = Tensor::new(vec![r, m.h], vec![0.03; r * m.h]);
+        let out = rt.execute(&name, &[xs.clone(), wg, wu]).unwrap();
+        let g: f64 = xs.data.iter().map(|&x| x as f64 * 0.02).sum();
+        let u: f64 = xs.data.iter().map(|&x| x as f64 * 0.03).sum();
+        let want = (g / (1.0 + (-g).exp())) * u;
+        assert!(
+            (out[0].data[0] as f64 - want).abs() < 1e-4,
+            "{} vs {want}",
+            out[0].data[0]
+        );
+    }
+
+    #[test]
+    fn masked_cache_slots_are_ignored() {
+        let rt = rt();
+        let m = rt.manifest.model("tiny").unwrap().clone();
+        let r = m.d_buckets[0];
+        let name = format!("qkv_append_tiny_r{r}");
+        let mut rng = crate::rng::Rng::new(7);
+        let xs = Tensor::new(
+            vec![m.t, r],
+            (0..m.t * r).map(|_| rng.normal() as f32 * 0.2).collect(),
+        );
+        let w = |seed: u64| {
+            let mut rng = crate::rng::Rng::new(seed);
+            Tensor::new(
+                vec![r, m.d],
+                (0..r * m.d).map(|_| rng.normal() as f32 * 0.2).collect(),
+            )
+        };
+        let (wq, wk, wv) = (w(1), w(2), w(3));
+        let mask = Tensor::zeros(vec![m.c]);
+        let clean = rt
+            .execute(
+                &name,
+                &[
+                    xs.clone(),
+                    wq.clone(),
+                    wk.clone(),
+                    wv.clone(),
+                    Tensor::zeros(vec![m.c, m.d]),
+                    Tensor::zeros(vec![m.c, m.d]),
+                    mask.clone(),
+                ],
+            )
+            .unwrap();
+        // Garbage in masked cache slots must not change the output.
+        let garbage = Tensor::new(vec![m.c, m.d], vec![7.5; m.c * m.d]);
+        let dirty = rt
+            .execute(
+                &name,
+                &[xs, wq, wk, wv, garbage.clone(), garbage, mask],
+            )
+            .unwrap();
+        for (a, b) in clean[0].data.iter().zip(&dirty[0].data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_wrong_input() {
+        let rt = rt();
+        let m = rt.manifest.model("tiny").unwrap().clone();
+        let r = m.d_buckets[0];
+        let name = format!("projres_tiny_r{r}");
+        let bad = Tensor::zeros(vec![1, 1]);
+        assert!(rt.execute(&name, &[bad.clone(), bad.clone(), bad]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let rt = rt();
+        let m = rt.manifest.model("tiny").unwrap().clone();
+        let r = *m.h_buckets.last().unwrap();
+        let name = format!("projres_tiny_r{r}");
+        let a = Tensor::zeros(vec![m.t, r]);
+        let w = Tensor::zeros(vec![r, m.d]);
+        let res = Tensor::zeros(vec![m.t, m.d]);
+        rt.execute(&name, &[a.clone(), w.clone(), res.clone()]).unwrap();
+        let cached = rt.cached();
+        rt.execute(&name, &[a, w, res]).unwrap();
+        assert_eq!(rt.cached(), cached);
+        assert!(rt.warmup("tiny").unwrap() >= 30);
+        assert!(rt.cached() >= 30);
+    }
+}

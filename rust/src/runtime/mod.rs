@@ -1,19 +1,32 @@
-//! XLA/PJRT runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Stage-graph runtime: executes the L2 compute artifacts the engine
+//! invokes per layer (qkv+attention, SwiGLU gate/up, projection+residual).
 //!
-//! This is the only place the compute graph touches Rust; Python is never
-//! on the request path. Executables are compiled lazily on first use and
-//! cached per (kind, budget-bucket).
+//! Two interchangeable backends behind the same [`XlaRuntime`] API:
+//!
+//! * **Host reference executor** (default) — a pure-Rust implementation of
+//!   the exact semantics of `python/compile/kernels/ref.py`, keyed by the
+//!   artifact *kind* recorded in the manifest. Needs no external crates
+//!   and no compiled artifacts: when `artifacts/manifest.tsv` is absent it
+//!   synthesizes the manifest from the runnable [`crate::model::ModelSpec`]s
+//!   (same budget-bucket rule as `python/compile/model.py`).
+//! * **PJRT/XLA** (`--features pjrt`) — loads the HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the CPU PJRT
+//!   client. Requires the external `xla` crate and a built `artifacts/`
+//!   directory; see `runtime/pjrt.rs`.
+//!
+//! Either way, Python is never on the request path.
 
+mod exec;
 mod manifest;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
 pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{Context, Result};
+#[cfg(not(feature = "pjrt"))]
+pub use exec::XlaRuntime;
+#[cfg(feature = "pjrt")]
+pub use pjrt::XlaRuntime;
 
 /// A 2-D (or 1-D) f32 host tensor exchanged with the runtime.
 #[derive(Clone, Debug, PartialEq)]
@@ -39,140 +52,11 @@ impl Tensor {
     pub fn rows(&self) -> usize {
         self.dims[0]
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Self> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>()?;
-        Ok(Self::new(dims, data))
-    }
-}
-
-/// PJRT CPU runtime with a lazy executable cache.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-    pub manifest: Manifest,
-    execs: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
-
-impl XlaRuntime {
-    /// Open the artifact directory (expects `manifest.tsv` inside).
-    pub fn open(artifact_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(&artifact_dir.join("manifest.tsv"))
-            .with_context(|| format!("loading manifest from {artifact_dir:?}"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            client,
-            artifact_dir: artifact_dir.to_path_buf(),
-            manifest,
-            execs: Mutex::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) an artifact by name.
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.execs.lock().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let meta = self
-            .manifest
-            .artifact(name)
-            .with_context(|| format!("unknown artifact {name}"))?;
-        let path = self.artifact_dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        self.execs
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Pre-compile every artifact of a model (warm start for serving).
-    pub fn warmup(&self, model: &str) -> Result<usize> {
-        let names: Vec<String> = self
-            .manifest
-            .artifacts
-            .iter()
-            .filter(|a| a.model == model)
-            .map(|a| a.name.clone())
-            .collect();
-        for n in &names {
-            self.executable(n)?;
-        }
-        Ok(names.len())
-    }
-
-    /// Number of compiled executables currently cached.
-    pub fn cached(&self) -> usize {
-        self.execs.lock().unwrap().len()
-    }
-
-    /// Execute an artifact with the given inputs; validates shapes against
-    /// the manifest and unwraps the output tuple.
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let meta = self
-            .manifest
-            .artifact(name)
-            .with_context(|| format!("unknown artifact {name}"))?
-            .clone();
-        anyhow::ensure!(
-            inputs.len() == meta.inputs.len(),
-            "{name}: expected {} inputs, got {}",
-            meta.inputs.len(),
-            inputs.len()
-        );
-        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
-            anyhow::ensure!(
-                &t.dims == spec,
-                "{name}: input {i} shape {:?} != manifest {:?}",
-                t.dims,
-                spec
-            );
-        }
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        anyhow::ensure!(
-            parts.len() == meta.outputs,
-            "{name}: got {} outputs, manifest says {}",
-            parts.len(),
-            meta.outputs
-        );
-        parts.iter().map(Tensor::from_literal).collect()
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn artifact_dir() -> PathBuf {
-        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        assert!(
-            p.join("manifest.tsv").exists(),
-            "run `make artifacts` first"
-        );
-        p
-    }
 
     #[test]
     fn tensor_shape_checks() {
@@ -186,77 +70,5 @@ mod tests {
     #[should_panic]
     fn tensor_rejects_bad_len() {
         Tensor::new(vec![2, 3], vec![0.0; 5]);
-    }
-
-    #[test]
-    fn opens_and_lists_manifest() {
-        let rt = XlaRuntime::open(&artifact_dir()).unwrap();
-        assert!(rt.manifest.artifacts.len() >= 30);
-        assert!(rt.manifest.model("tiny").is_some());
-        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
-    }
-
-    #[test]
-    fn executes_projres_matches_host_matmul() {
-        let rt = XlaRuntime::open(&artifact_dir()).unwrap();
-        let m = rt.manifest.model("tiny").unwrap().clone();
-        let r = m.d_buckets[0]; // full bucket
-        let name = format!("projres_tiny_r{r}");
-        let t = m.t;
-        let mut rng = crate::rng::Rng::new(3);
-        let a = Tensor::new(
-            vec![t, r],
-            (0..t * r).map(|_| rng.normal() as f32 * 0.3).collect(),
-        );
-        let w = Tensor::new(
-            vec![r, m.d],
-            (0..r * m.d).map(|_| rng.normal() as f32 * 0.3).collect(),
-        );
-        let res = Tensor::new(
-            vec![t, m.d],
-            (0..t * m.d).map(|_| rng.normal() as f32 * 0.3).collect(),
-        );
-        let out = rt.execute(&name, &[a.clone(), w.clone(), res.clone()]).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].dims, vec![t, m.d]);
-        // Host reference.
-        for ti in 0..t {
-            for j in 0..m.d {
-                let mut acc = res.data[ti * m.d + j] as f64;
-                for k in 0..r {
-                    acc += a.data[ti * r + k] as f64 * w.data[k * m.d + j] as f64;
-                }
-                let got = out[0].data[ti * m.d + j] as f64;
-                assert!(
-                    (got - acc).abs() < 1e-3,
-                    "mismatch at ({ti},{j}): {got} vs {acc}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn shape_validation_rejects_wrong_input() {
-        let rt = XlaRuntime::open(&artifact_dir()).unwrap();
-        let m = rt.manifest.model("tiny").unwrap().clone();
-        let r = m.d_buckets[0];
-        let name = format!("projres_tiny_r{r}");
-        let bad = Tensor::zeros(vec![1, 1]);
-        assert!(rt.execute(&name, &[bad.clone(), bad.clone(), bad]).is_err());
-    }
-
-    #[test]
-    fn executable_cache_reuses() {
-        let rt = XlaRuntime::open(&artifact_dir()).unwrap();
-        let m = rt.manifest.model("tiny").unwrap().clone();
-        let r = *m.h_buckets.last().unwrap();
-        let name = format!("projres_tiny_r{r}");
-        let a = Tensor::zeros(vec![m.t, r]);
-        let w = Tensor::zeros(vec![r, m.d]);
-        let res = Tensor::zeros(vec![m.t, m.d]);
-        rt.execute(&name, &[a.clone(), w.clone(), res.clone()]).unwrap();
-        let cached = rt.cached();
-        rt.execute(&name, &[a, w, res]).unwrap();
-        assert_eq!(rt.cached(), cached);
     }
 }

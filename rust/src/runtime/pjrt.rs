@@ -1,0 +1,133 @@
+//! PJRT/XLA backend (`--features pjrt`): loads the HLO-text artifacts
+//! produced by `python/compile/aot.py` and executes them on the CPU PJRT
+//! client. Executables are compiled lazily on first use and cached per
+//! (kind, budget-bucket).
+//!
+//! Requires the external `xla` crate (not vendored — enable the feature
+//! only in environments with registry access) and a built `artifacts/`
+//! directory containing `manifest.tsv` plus the `.hlo.txt` files.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Manifest, Tensor};
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// PJRT CPU runtime with a lazy executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    pub manifest: Manifest,
+    execs: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (expects `manifest.tsv` inside).
+    pub fn open(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir.join("manifest.tsv"))
+            .with_context(|| format!("loading manifest from {artifact_dir:?}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            artifact_dir: artifact_dir.to_path_buf(),
+            manifest,
+            execs: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.execs.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let path = self.artifact_dir.join(&meta.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.execs
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact of a model (warm start for serving).
+    pub fn warmup(&self, model: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.execs.lock().unwrap().len()
+    }
+
+    /// Execute an artifact with the given inputs; validates shapes against
+    /// the manifest and unwraps the output tuple.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("unknown artifact {name}"))?
+            .clone();
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            anyhow::ensure!(
+                &t.dims == spec,
+                "{name}: input {i} shape {:?} != manifest {:?}",
+                t.dims,
+                spec
+            );
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == meta.outputs,
+            "{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            meta.outputs
+        );
+        parts.iter().map(from_literal).collect()
+    }
+}

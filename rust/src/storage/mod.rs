@@ -23,6 +23,8 @@ mod sim;
 
 use std::time::Duration;
 
+use crate::plan::{PlanReceipt, ReadPlan};
+
 pub use profile::DeviceProfile;
 pub use profiler::{ProfileConfig, Profiler};
 pub use real::RealFileDevice;
@@ -70,6 +72,35 @@ pub trait FlashDevice: Send + Sync {
         let mut out = vec![0u8; total];
         let t = self.read_batch(extents, &mut out)?;
         Ok((out, t))
+    }
+
+    /// Submit a planned read. The default implementation shims each
+    /// submission batch onto [`FlashDevice::read_batch`], so every backend
+    /// (simulated, real-file, profiler probes) supports plans without
+    /// further work; native backends may override to drive deeper queues.
+    fn submit(&self, plan: &ReadPlan) -> anyhow::Result<PlanReceipt> {
+        let cmds = plan.cmds();
+        let total: usize = cmds.iter().map(|e| e.len).sum();
+        let mut bytes = vec![0u8; total];
+        let mut cmd_offsets = Vec::with_capacity(cmds.len());
+        let mut at = 0usize;
+        for e in cmds {
+            cmd_offsets.push(at);
+            at += e.len;
+        }
+        let mut service = Duration::ZERO;
+        let mut cursor = 0usize;
+        for &(s, e) in plan.batches() {
+            let batch = &cmds[s..e];
+            let n: usize = batch.iter().map(|x| x.len).sum();
+            service += self.read_batch(batch, &mut bytes[cursor..cursor + n])?;
+            cursor += n;
+        }
+        Ok(PlanReceipt {
+            bytes,
+            service,
+            cmd_offsets,
+        })
     }
 }
 

@@ -5,7 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
-use neuron_chunking::coordinator::{Engine, EngineConfig, HotNeuronCache, Policy};
+use neuron_chunking::coordinator::{Engine, HotNeuronCache, Policy};
 use neuron_chunking::experiments::{IoPolicy, PaperRig, RigConfig};
 use neuron_chunking::latency::ContiguityDistribution;
 use neuron_chunking::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
@@ -116,23 +116,24 @@ fn agx_profile_is_faster_but_same_winner() {
 #[test]
 fn engine_full_pipeline_with_reorder_and_chunking() {
     let sat_kb = DeviceProfile::nano().saturation_bytes(0.99) as f64 / 1024.0;
-    let mut cfg = EngineConfig::new(
-        "tiny",
-        Policy::Chunking {
+    let engine = Engine::builder("tiny")
+        .policy(Policy::Chunking {
             config: ChunkSelectConfig::new(2.0, 2.0, sat_kb),
-        },
-        0.3,
-    );
-    cfg.seed = 17;
-    let mut engine = Engine::new(cfg, &artifact_dir()).unwrap();
-    let spec = engine.spec().clone();
+        })
+        .sparsity(0.3)
+        .seed(17)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
+    let spec = engine.spec();
     let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 6, 3);
     let calib: Vec<Vec<f32>> = (0..3).map(|i| trace.frame(i)).collect();
     engine.calibrate_and_reorder(&calib).unwrap();
 
+    let session = engine.new_session();
     let mut last_io = None;
     for f in 0..3 {
-        let (out, stats) = engine.append_frame(0, &trace.frame(f)).unwrap();
+        let (out, stats) = session.append_frame(&trace.frame(f)).unwrap();
         assert_eq!(out.len(), spec.tokens_per_frame * spec.d);
         assert!(out.iter().all(|v| v.is_finite()));
         assert!(stats.io.as_nanos() > 0);
@@ -142,7 +143,7 @@ fn engine_full_pipeline_with_reorder_and_chunking() {
     // Decode still works after reordering. Its selection budgets are
     // row-based (independent of token count), so I/O is comparable to a
     // frame append, not smaller.
-    let (out, stats) = engine.decode_step(0, &vec![0.1; spec.d]).unwrap();
+    let (out, stats) = session.decode_step(&vec![0.1; spec.d]).unwrap();
     assert_eq!(out.len(), spec.d);
     assert!(stats.io.as_nanos() > 0);
     assert!(stats.io.as_secs_f64() < last_io.unwrap().as_secs_f64() * 1.5);
@@ -151,15 +152,22 @@ fn engine_full_pipeline_with_reorder_and_chunking() {
 #[test]
 fn engine_neuron_cache_reduces_flash_bytes_keeps_output_close() {
     let dir = artifact_dir();
-    let base_cfg = EngineConfig::new("tiny", Policy::TopK, 0.3);
+    let build = || {
+        Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.3)
+            .artifacts(&dir)
+            .build()
+            .unwrap()
+    };
     let trace = FrameTrace::new(64, 8, 4, 9);
 
     // Baseline: no cache.
-    let mut plain = Engine::new(base_cfg.clone(), &dir).unwrap();
-    let (out_plain, stats_plain) = plain.append_frame(0, &trace.frame(0)).unwrap();
+    let plain = build();
+    let (out_plain, stats_plain) = plain.new_session().append_frame(&trace.frame(0)).unwrap();
 
     // With a hot-neuron cache built from uniform frequencies.
-    let mut cached = Engine::new(base_cfg, &dir).unwrap();
+    let cached = build();
     let store = WeightStore::new(ModelSpec::tiny(), false, 42); // same seed as engine
     let mut freqs = std::collections::HashMap::new();
     for layer in 0..2 {
@@ -174,7 +182,7 @@ fn engine_neuron_cache_reduces_flash_bytes_keeps_output_close() {
     let cache = HotNeuronCache::build(&store, &freqs, 0.25, u64::MAX, true);
     assert!(cache.bytes() > 0);
     cached.set_neuron_cache(cache);
-    let (out_cached, stats_cached) = cached.append_frame(0, &trace.frame(0)).unwrap();
+    let (out_cached, stats_cached) = cached.new_session().append_frame(&trace.frame(0)).unwrap();
 
     // At a fixed row budget the cache does not shrink flash traffic (the
     // budget is spent on uncached rows); its benefit is the extra free
@@ -202,7 +210,12 @@ fn engine_neuron_cache_reduces_flash_bytes_keeps_output_close() {
 #[test]
 fn engine_matches_manifest_bucket_grid() {
     // Every budget the engine can produce maps to a compiled artifact.
-    let e = Engine::new(EngineConfig::new("tiny", Policy::TopK, 0.33), &artifact_dir()).unwrap();
+    let e = Engine::builder("tiny")
+        .policy(Policy::TopK)
+        .sparsity(0.33)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
     let meta = e.meta();
     for rows in 0..=meta.d {
         let b = neuron_chunking::runtime::ModelMeta::bucket_for(&meta.d_buckets, rows);
@@ -220,12 +233,17 @@ fn small_model_sparse_vs_dense_error_budget() {
     let dir = artifact_dir();
     let trace = FrameTrace::new(256, 16, 3, 5);
     let dense_out = {
-        let mut e = Engine::new(EngineConfig::new("small", Policy::Dense, 0.0), &dir).unwrap();
-        e.append_frame(0, &trace.frame(0)).unwrap().0
+        let e = Engine::builder("small").artifacts(&dir).build().unwrap();
+        e.new_session().append_frame(&trace.frame(0)).unwrap().0
     };
     let sparse_out = {
-        let mut e = Engine::new(EngineConfig::new("small", Policy::TopK, 0.3), &dir).unwrap();
-        e.append_frame(0, &trace.frame(0)).unwrap().0
+        let e = Engine::builder("small")
+            .policy(Policy::TopK)
+            .sparsity(0.3)
+            .artifacts(&dir)
+            .build()
+            .unwrap();
+        e.new_session().append_frame(&trace.frame(0)).unwrap().0
     };
     let num: f64 = dense_out
         .iter()

@@ -1,6 +1,10 @@
 //! Property tests on the storage substrate and latency model: physical
-//! sanity of the simulator and the profile→table→estimate pipeline.
+//! sanity of the simulator, the profile→table→estimate pipeline, and the
+//! I/O planning layer (coverage, ordering, alignment).
 
+use neuron_chunking::latency::chunks_from_mask;
+use neuron_chunking::model::{FlashLayout, MatrixId, ModelSpec};
+use neuron_chunking::plan::{CoalescePolicy, IoPlanner, PlanRequest, PlannedRead};
 use neuron_chunking::proptest::check;
 use neuron_chunking::storage::{
     DeviceProfile, Extent, FlashDevice, ProfileConfig, Profiler, SimulatedSsd,
@@ -159,6 +163,161 @@ fn prop_image_reads_roundtrip() {
                 return Err(format!("mismatch at extent {e:?}"));
             }
             at += e.len;
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------ planning layer
+
+/// Random chunk demands for a random subset of one layer's matrices.
+fn arb_requests(
+    rng: &mut neuron_chunking::rng::Rng,
+    spec: &ModelSpec,
+) -> Vec<PlanRequest> {
+    let mut requests = Vec::new();
+    for m in spec.matrices() {
+        if rng.bool(0.4) {
+            continue; // not every matrix participates
+        }
+        let mask: Vec<bool> = (0..m.rows).map(|_| rng.bool(0.3)).collect();
+        let chunks = chunks_from_mask(&mask);
+        if !chunks.is_empty() {
+            requests.push(PlanRequest::new(MatrixId::new(0, m.kind), chunks));
+        }
+    }
+    requests
+}
+
+#[test]
+fn prop_plan_covers_exactly_the_selected_bytes() {
+    // The plan's payload equals the selected rows' bytes, and submitting
+    // it returns exactly the image bytes of every selected row.
+    check("plan covers selected rows", 25, |rng| {
+        let spec = ModelSpec::tiny();
+        let store = neuron_chunking::model::WeightStore::new(spec.clone(), false, 7);
+        let image = store.build_image();
+        let dev = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 3);
+        let requests = arb_requests(rng, &spec);
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let plan = planner.plan(&store.layout, &requests, None);
+        plan.validate().map_err(|e| e.to_string())?;
+        let want_payload: u64 = requests
+            .iter()
+            .map(|r| {
+                let rb = store.layout.row_bytes(r.id) as u64;
+                r.chunks.iter().map(|c| c.len as u64 * rb).sum::<u64>()
+            })
+            .sum();
+        if plan.payload_bytes() != want_payload {
+            return Err(format!(
+                "payload {} != selected bytes {}",
+                plan.payload_bytes(),
+                want_payload
+            ));
+        }
+        let receipt = dev.submit(&plan).map_err(|e| e.to_string())?;
+        let read = PlannedRead { plan, receipt };
+        for r in &requests {
+            let rb = store.layout.row_bytes(r.id);
+            for c in &r.chunks {
+                for row in c.start..c.end() {
+                    let got = read
+                        .row_data(r.id, row)
+                        .ok_or_else(|| format!("row {row} of {:?} uncovered", r.id))?;
+                    let off = store.layout.row_offset(r.id, row) as usize;
+                    if got != &image[off..off + rb] {
+                        return Err(format!("row {row} of {:?} bytes differ", r.id));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_extents_sorted_and_disjoint() {
+    check("plan extents sorted/disjoint", 40, |rng| {
+        let spec = ModelSpec::tiny();
+        let layout = FlashLayout::build(&spec, false);
+        let merge = rng.bool(0.5);
+        let planner = IoPlanner::new(CoalescePolicy {
+            merge_adjacent: merge,
+            page_bytes: 0,
+            max_batch: [0usize, 3, 16][rng.below(3)],
+        });
+        let plan = planner.plan(&layout, &arb_requests(rng, &spec), None);
+        plan.validate().map_err(|e| e.to_string())?;
+        for w in plan.cmds().windows(2) {
+            if w[0].end() > w[1].offset {
+                return Err(format!("overlapping cmds {:?} {:?}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_page_alignment_respected_for_aligned_layouts() {
+    check("plan page alignment", 25, |rng| {
+        let spec = ModelSpec::tiny();
+        let layout = FlashLayout::build(&spec, true); // 4 KiB-aligned rows
+        let planner = IoPlanner::new(CoalescePolicy {
+            merge_adjacent: rng.bool(0.5),
+            page_bytes: 4096,
+            max_batch: 0,
+        });
+        let requests = arb_requests(rng, &spec);
+        let plan = planner.plan(&layout, &requests, None);
+        plan.validate().map_err(|e| e.to_string())?;
+        for c in plan.cmds() {
+            if c.offset % 4096 != 0 || c.len % 4096 != 0 {
+                return Err(format!("unaligned cmd {c:?}"));
+            }
+        }
+        // Alignment may widen commands but never drops payload.
+        let want_payload: u64 = requests
+            .iter()
+            .map(|r| {
+                let rb = layout.row_bytes(r.id) as u64;
+                r.chunks.iter().map(|c| c.len as u64 * rb).sum::<u64>()
+            })
+            .sum();
+        if plan.payload_bytes() != want_payload {
+            return Err("alignment changed payload".into());
+        }
+        if plan.cmd_bytes() < plan.payload_bytes() {
+            return Err("commands smaller than payload".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merged_plan_never_reads_less_than_payload() {
+    // Merging coalesces touching extents; the device traffic can only
+    // grow (gap swallowing), never shrink below the payload.
+    check("merge conserves payload", 40, |rng| {
+        let spec = ModelSpec::tiny();
+        let layout = FlashLayout::build(&spec, false);
+        let requests = arb_requests(rng, &spec);
+        let merged =
+            IoPlanner::new(CoalescePolicy::contiguous()).plan(&layout, &requests, None);
+        let split =
+            IoPlanner::new(CoalescePolicy::passthrough()).plan(&layout, &requests, None);
+        if merged.payload_bytes() != split.payload_bytes() {
+            return Err("policies disagree on payload".into());
+        }
+        if merged.cmd_bytes() < merged.payload_bytes() {
+            return Err("merged cmds below payload".into());
+        }
+        if merged.num_cmds() > split.num_cmds() {
+            return Err(format!(
+                "merging increased command count: {} > {}",
+                merged.num_cmds(),
+                split.num_cmds()
+            ));
         }
         Ok(())
     });

@@ -1,0 +1,72 @@
+//! Minimal stand-in for the `libc` crate (no registry access in the build
+//! environment). Declares only what `storage/real.rs` uses: positional
+//! reads, fadvise hints, and the `O_DIRECT` flag.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_void = std::ffi::c_void;
+pub type size_t = usize;
+pub type ssize_t = isize;
+pub type off_t = i64;
+
+/// `O_DIRECT` is architecture-specific on Linux.
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "x86", target_arch = "riscv64")
+))]
+pub const O_DIRECT: c_int = 0o40000;
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "aarch64", target_arch = "arm", target_arch = "powerpc64")
+))]
+pub const O_DIRECT: c_int = 0o200000;
+#[cfg(not(target_os = "linux"))]
+pub const O_DIRECT: c_int = 0;
+
+pub const POSIX_FADV_RANDOM: c_int = 1;
+pub const POSIX_FADV_DONTNEED: c_int = 4;
+
+extern "C" {
+    pub fn pread(fd: c_int, buf: *mut c_void, count: size_t, offset: off_t) -> ssize_t;
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    pub fn posix_fadvise(fd: c_int, offset: off_t, len: off_t, advice: c_int) -> c_int;
+}
+
+/// Page-cache advice is a best-effort hint; absent the syscall (non-Linux),
+/// it is a no-op.
+#[cfg(not(target_os = "linux"))]
+pub unsafe fn posix_fadvise(_fd: c_int, _offset: off_t, _len: off_t, _advice: c_int) -> c_int {
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn pread_reads_at_offset() {
+        let path = std::env::temp_dir().join(format!("libc_stub_test_{}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(b"hello world").unwrap();
+        drop(f);
+        let f = std::fs::File::open(&path).unwrap();
+        let mut buf = [0u8; 5];
+        let rc = unsafe {
+            pread(
+                f.as_raw_fd(),
+                buf.as_mut_ptr() as *mut c_void,
+                5,
+                6,
+            )
+        };
+        assert_eq!(rc, 5);
+        assert_eq!(&buf, b"world");
+        std::fs::remove_file(path).ok();
+    }
+}
