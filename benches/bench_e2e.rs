@@ -1,73 +1,278 @@
 //! End-to-end engine benches: whole frame-append and decode steps per
 //! policy on the runnable model — the serving-loop numbers behind Fig 8
 //! and the §Perf log in EXPERIMENTS.md.
+//!
+//! Besides the human-readable table, this bench emits a machine-readable
+//! `BENCH_e2e.json` (override the path with `NC_BENCH_JSON`) so the perf
+//! trajectory is tracked across PRs: per policy × prefetch × thread
+//! count, decode/append tokens-per-second plus p50/p99 step latency, and
+//! a multi-stream scaling sweep that drives N concurrent sessions over
+//! the shared `Sync` engine core from N OS threads.
 
 use std::path::Path;
+use std::time::Instant;
 
 use neuron_chunking::benchlib::{black_box, header, Bencher};
 use neuron_chunking::coordinator::{Engine, Policy};
 use neuron_chunking::sparsify::ChunkSelectConfig;
+use neuron_chunking::stats;
 use neuron_chunking::storage::DeviceProfile;
 use neuron_chunking::workload::FrameTrace;
 
+/// One emitted measurement row.
+struct Entry {
+    mode: &'static str,
+    policy: &'static str,
+    prefetch: bool,
+    threads: usize,
+    streams: usize,
+    op: &'static str,
+    tokens_per_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    samples: usize,
+}
+
+impl Entry {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"mode\":\"{}\",\"policy\":\"{}\",\"prefetch\":{},\"threads\":{},\
+             \"streams\":{},\"op\":\"{}\",\"tokens_per_s\":{:.3},\"p50_us\":{:.3},\
+             \"p99_us\":{:.3},\"samples\":{}}}",
+            self.mode,
+            self.policy,
+            self.prefetch,
+            self.threads,
+            self.streams,
+            self.op,
+            self.tokens_per_s,
+            self.p50_us,
+            self.p99_us,
+            self.samples
+        )
+    }
+}
+
+fn percentiles_us(samples: &[f64]) -> (f64, f64) {
+    (
+        stats::percentile(samples, 50.0) * 1e6,
+        stats::percentile(samples, 99.0) * 1e6,
+    )
+}
+
+fn build_engine(policy: &Policy, sparsity: f64, prefetch: bool, threads: usize) -> Engine {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::builder("tiny")
+        .policy(policy.clone())
+        .sparsity(sparsity)
+        .prefetch(prefetch)
+        .exec_threads(threads)
+        .artifacts(&dir)
+        .build()
+        .unwrap();
+    engine.warmup().unwrap();
+    engine
+}
+
+/// Per-step latency samples for one op on a warmed session.
+fn sample_steps<F: FnMut()>(n: usize, mut step: F) -> Vec<f64> {
+    (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            step();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
 fn main() {
     header("e2e engine (frame append / decode per policy, tiny model)");
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let sat_kb = DeviceProfile::nano().saturation_bytes(0.99) as f64 / 1024.0;
     let mut b = Bencher::new(std::time::Duration::from_millis(600), 8);
+    let mut entries: Vec<Entry> = Vec::new();
+    let quick = std::env::var("NC_BENCH_QUICK").is_ok();
+    let decode_samples = if quick { 32 } else { 128 };
+    let append_samples = if quick { 8 } else { 32 };
 
-    for (label, policy, sparsity) in [
+    let policies: [(&'static str, Policy, f64); 3] = [
         ("dense", Policy::Dense, 0.0),
-        ("topk s=0.5", Policy::TopK, 0.5),
+        ("topk", Policy::TopK, 0.5),
         (
-            "chunking s=0.5",
+            "chunking",
             Policy::Chunking {
                 config: ChunkSelectConfig::new(2.0, 2.0, sat_kb),
             },
             0.5,
         ),
-    ] {
+    ];
+
+    // --- single-session sweep: policy × prefetch, exec_threads = 1 ---
+    for (label, policy, sparsity) in &policies {
         for prefetch in [false, true] {
-            let engine = Engine::builder("tiny")
-                .policy(policy.clone())
-                .sparsity(sparsity)
-                .prefetch(prefetch)
-                .artifacts(&dir)
-                .build()
-                .unwrap();
-            engine.warmup().unwrap();
+            let engine = build_engine(policy, *sparsity, prefetch, 1);
             let spec = engine.spec();
             let session = engine.new_session();
             let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
             let frame = trace.frame(0);
-            session.append_frame(&frame).unwrap(); // warm
+            let mut out = Vec::new();
+            session.append_frame_into(&frame, &mut out).unwrap(); // warm
             let pf = if prefetch { "+pf" } else { "   " };
-            b.bench(&format!("append_frame tiny [{label}]{pf}"), || {
-                black_box(session.append_frame(&frame).unwrap());
+            b.bench(&format!("append_frame tiny [{label} s={sparsity}]{pf}"), || {
+                black_box(session.append_frame_into(&frame, &mut out).unwrap());
             });
             let token = vec![0.1f32; spec.d];
-            b.bench(&format!("decode_step  tiny [{label}]{pf}"), || {
-                black_box(session.decode_step(&token).unwrap());
+            session.decode_step_into(&token, &mut out).unwrap(); // warm
+            b.bench(&format!("decode_step  tiny [{label} s={sparsity}]{pf}"), || {
+                black_box(session.decode_step_into(&token, &mut out).unwrap());
+            });
+
+            // Per-step samples for the JSON report.
+            let samples = sample_steps(append_samples, || {
+                black_box(session.append_frame_into(&frame, &mut out).unwrap());
+            });
+            let (p50, p99) = percentiles_us(&samples);
+            entries.push(Entry {
+                mode: "single",
+                policy: *label,
+                prefetch,
+                threads: 1,
+                streams: 1,
+                op: "append",
+                tokens_per_s: spec.tokens_per_frame as f64 / stats::mean(&samples),
+                p50_us: p50,
+                p99_us: p99,
+                samples: samples.len(),
+            });
+            let samples = sample_steps(decode_samples, || {
+                black_box(session.decode_step_into(&token, &mut out).unwrap());
+            });
+            let (p50, p99) = percentiles_us(&samples);
+            entries.push(Entry {
+                mode: "single",
+                policy: *label,
+                prefetch,
+                threads: 1,
+                streams: 1,
+                op: "decode",
+                tokens_per_s: 1.0 / stats::mean(&samples),
+                p50_us: p50,
+                p99_us: p99,
+                samples: samples.len(),
             });
         }
     }
 
-    // Experiment-harness point cost (what figure sweeps pay per point).
-    use neuron_chunking::experiments::{IoPolicy, PaperRig, RigConfig};
-    use neuron_chunking::model::ModelSpec;
-    use neuron_chunking::workload::DatasetSpec;
-    let rig = PaperRig::new(
-        ModelSpec::llava_7b(),
-        DeviceProfile::nano(),
-        RigConfig {
-            calib_samples: 8,
-            tokens_per_frame: 0,
-            seed: 1,
-        },
-    )
-    .unwrap();
-    let ds = DatasetSpec::tempcompass();
-    b.bench("paper-rig run_point llava-7b (3 frames)", || {
-        black_box(rig.run_point(&IoPolicy::Chunking, 0.4, &ds, 3).unwrap());
-    });
+    // --- exec-thread sweep: kernel-level parallelism, one session ---
+    for (label, policy, sparsity) in &policies {
+        for threads in [2usize, 4] {
+            let engine = build_engine(policy, *sparsity, true, threads);
+            let spec = engine.spec();
+            let session = engine.new_session();
+            let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
+            let frame = trace.frame(0);
+            let token = vec![0.1f32; spec.d];
+            let mut out = Vec::new();
+            session.append_frame_into(&frame, &mut out).unwrap();
+            session.decode_step_into(&token, &mut out).unwrap();
+            let samples = sample_steps(decode_samples, || {
+                black_box(session.decode_step_into(&token, &mut out).unwrap());
+            });
+            let (p50, p99) = percentiles_us(&samples);
+            b.bench(&format!("decode_step  tiny [{label}] xt={threads}"), || {
+                black_box(session.decode_step_into(&token, &mut out).unwrap());
+            });
+            entries.push(Entry {
+                mode: "exec_threads",
+                policy: *label,
+                prefetch: true,
+                threads,
+                streams: 1,
+                op: "decode",
+                tokens_per_s: 1.0 / stats::mean(&samples),
+                p50_us: p50,
+                p99_us: p99,
+                samples: samples.len(),
+            });
+        }
+    }
+
+    // --- multi-stream scaling: N sessions on N OS threads, shared core ---
+    for (label, policy, sparsity) in &policies {
+        for threads in [1usize, 2, 4] {
+            let engine = build_engine(policy, *sparsity, true, 1);
+            let spec = engine.spec();
+            let d = spec.d;
+            let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, threads + 1, 5);
+            let per_stream = decode_samples;
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for stream in 0..threads {
+                    let engine = engine.clone();
+                    let frame = trace.frame(stream);
+                    s.spawn(move || {
+                        let session = engine.new_session();
+                        let mut out = Vec::new();
+                        session.append_frame_into(&frame, &mut out).unwrap();
+                        let token = vec![0.1f32; d];
+                        session.decode_step_into(&token, &mut out).unwrap(); // warm
+                        for _ in 0..per_stream {
+                            black_box(session.decode_step_into(&token, &mut out).unwrap());
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let total_tokens = (threads * per_stream) as f64;
+            println!(
+                "{:<56} {:>12.0} tok/s  ({} streams x {} decodes)",
+                format!("scaling decode tiny [{label}] threads={threads}"),
+                total_tokens / wall,
+                threads,
+                per_stream
+            );
+            entries.push(Entry {
+                mode: "scaling",
+                policy: *label,
+                prefetch: true,
+                threads,
+                streams: threads,
+                op: "decode",
+                tokens_per_s: total_tokens / wall,
+                p50_us: 0.0,
+                p99_us: 0.0,
+                samples: threads * per_stream,
+            });
+        }
+    }
+
+    // --- experiment-harness point cost (what figure sweeps pay) ---
+    if !quick {
+        use neuron_chunking::experiments::{IoPolicy, PaperRig, RigConfig};
+        use neuron_chunking::model::ModelSpec;
+        use neuron_chunking::workload::DatasetSpec;
+        let rig = PaperRig::new(
+            ModelSpec::llava_7b(),
+            DeviceProfile::nano(),
+            RigConfig {
+                calib_samples: 8,
+                tokens_per_frame: 0,
+                seed: 1,
+            },
+        )
+        .unwrap();
+        let ds = DatasetSpec::tempcompass();
+        b.bench("paper-rig run_point llava-7b (3 frames)", || {
+            black_box(rig.run_point(&IoPolicy::Chunking, 0.4, &ds, 3).unwrap());
+        });
+    }
+
+    // --- machine-readable report (redline-style stats file) ---
+    let path = std::env::var("NC_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".to_string());
+    let rows: Vec<String> = entries.iter().map(|e| format!("  {}", e.to_json())).collect();
+    let json = format!(
+        "{{\n\"bench\":\"e2e\",\n\"model\":\"tiny\",\n\"entries\":[\n{}\n]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\nwrote {path} ({} entries)", entries.len());
 }

@@ -1,0 +1,118 @@
+//! Per-session scratch arena: every buffer the serving hot path needs,
+//! owned once and reused every call.
+//!
+//! The engine's steady-state forward pass (`append_frame` / `decode_step`)
+//! draws **all** of its working memory from here — activation ping-pong
+//! buffers, gather staging, selection candidates and radix-sort scratch,
+//! plan command/segment vectors, device receipts, and executor
+//! temporaries. Buffers grow to their high-water mark during the first
+//! (warm-up) call and never reallocate afterwards, which is what the
+//! allocation-regression integration test pins down: zero heap
+//! allocations per `decode_step` after warm-up.
+
+use crate::latency::Chunk;
+use crate::plan::{PlanScratch, PlannedRead};
+use crate::runtime::{ExecScratch, StageOutputs};
+use crate::sparsify::{SelectScratch, SelectionMask};
+
+/// Activation buffers of the layer loop. `xa` holds the running hidden
+/// state (layer input, overwritten by the down-projection residual
+/// output), `xb` the post-attention residual (`x1`); neither is ever an
+/// input and output of the same stage execution.
+#[derive(Debug, Default)]
+pub(crate) struct FwdBufs {
+    pub xa: Vec<f32>,
+    pub xb: Vec<f32>,
+    /// RMS-normed stage input (reused for both norm sites of a layer).
+    pub hn: Vec<f32>,
+    /// Attention output.
+    pub attn: Vec<f32>,
+    /// SwiGLU activation output.
+    pub act: Vec<f32>,
+    /// Per-column importance of the current stage input.
+    pub imp: Vec<f32>,
+}
+
+/// Gather/staging buffers of one selection-group load.
+#[derive(Debug, Default)]
+pub(crate) struct GatherScratch {
+    /// Gathered + zero-padded activations `[t, bucket]`.
+    pub xs: Vec<f32>,
+    /// Per-member weight buckets `[bucket, cols]` (Q-led groups use all
+    /// three slots, others fewer).
+    pub weights: [Vec<f32>; 3],
+    /// Union of selected + cached physical rows, ascending.
+    pub phys_rows: Vec<usize>,
+    /// Row membership bitmap (hot-neuron-cache union only).
+    pub selset: Vec<bool>,
+    /// Flash chunk demand recorded for next-call prefetch.
+    pub flash_chunks: Vec<Chunk>,
+    /// Residual demand after prefetch-buffer subtraction.
+    pub residual: Vec<Chunk>,
+    /// The stage's fresh planned read (plan + receipt, pooled).
+    pub fresh: PlannedRead,
+}
+
+/// The complete per-session scratch arena.
+#[derive(Debug, Default)]
+pub(crate) struct ScratchArena {
+    /// The current layer's prefetched whole-layer read, swapped out of the
+    /// session's prefetch slot at layer start.
+    pub pre: PlannedRead,
+    pub fwd: FwdBufs,
+    pub gather: GatherScratch,
+    /// Selection output mask (reused across stages).
+    pub sel: SelectionMask,
+    pub sel_scratch: SelectScratch,
+    /// Importance moved into physical (reordered) row space.
+    pub imp_phys: Vec<f32>,
+    pub plan_scratch: PlanScratch,
+    pub exec: ExecScratch,
+    pub outs: StageOutputs,
+}
+
+impl ScratchArena {
+    /// Pre-reserve worst-case capacity for every buffer whose length
+    /// depends on the *shape* of a selection (chunk counts drift token to
+    /// token as activations evolve, so warm-up alone cannot bound them).
+    /// Deterministic-size buffers (norms, importance, executor scratch)
+    /// reach their fixed high-water marks on the warm-up call regardless.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn reserve(
+        &mut self,
+        n_max: usize,
+        t_max: usize,
+        max_chunks: usize,
+        xs_cap: usize,
+        w_cap: usize,
+        group_bytes: usize,
+        layer_bytes: usize,
+    ) {
+        self.sel.mask.reserve(n_max);
+        self.sel.chunks.reserve(max_chunks);
+        self.imp_phys.reserve(n_max);
+        self.gather.phys_rows.reserve(n_max);
+        self.gather.selset.reserve(n_max);
+        self.gather.flash_chunks.reserve(max_chunks);
+        self.gather.residual.reserve(max_chunks);
+        self.gather.xs.reserve(xs_cap);
+        for w in &mut self.gather.weights {
+            w.reserve(w_cap);
+        }
+        // One selection group: at most 3 members × one span per chunk; a
+        // whole prefetched layer: all 7 matrices.
+        self.plan_scratch.reserve(7 * max_chunks);
+        self.gather.fresh.reserve(group_bytes, 3 * max_chunks, 3 * max_chunks);
+        self.pre.reserve(layer_bytes, 7 * max_chunks, 7 * max_chunks);
+        let act_cap = t_max * n_max;
+        self.fwd.xa.reserve(act_cap);
+        self.fwd.xb.reserve(act_cap);
+        self.fwd.hn.reserve(act_cap);
+        self.fwd.attn.reserve(act_cap);
+        self.fwd.act.reserve(act_cap);
+        self.fwd.imp.reserve(n_max);
+        for o in &mut self.outs.out {
+            o.reserve(act_cap);
+        }
+    }
+}

@@ -13,34 +13,52 @@
 //! gate/up, down-proj). K/V reuse Q's mask and Up reuses Gate's (they
 //! share input activations — Appendix A).
 //!
-//! ## Sessions and prefetch
+//! ## Sessions, prefetch, and the allocation-free hot path
 //!
 //! [`Engine`] is built with [`EngineBuilder`] and serves any number of
-//! independent [`Session`]s (one per stream; each owns its KV caches and
-//! prefetch state). With prefetch enabled (default), the engine
-//! double-buffers I/O against compute: while layer *l*'s stages execute,
-//! it plans and submits layer *l+1*'s whole-layer read using the masks the
-//! session selected on its *previous* call — streaming frames are
-//! temporally correlated, so most of the next selection is already
-//! resident when the layer is reached. Prefetched service time is charged
-//! only beyond the compute it overlapped; rows the prediction missed are
-//! fetched by a small residual plan.
+//! independent [`Session`]s (one per stream; each owns its KV caches,
+//! prefetch state, and a [`ScratchArena`]). The engine core is `Sync`:
+//! read-mostly state lives behind an `Arc<RwLock<..>>` shared by every
+//! session handle, so sessions on different threads serve concurrently
+//! over one engine ([`crate::coordinator::Scheduler`] runs a worker pool
+//! on exactly this property). Mutable per-stream state is owned by the
+//! `Session` itself.
+//!
+//! The steady-state serving path performs **zero heap allocations**:
+//! activations, gather staging, selection scratch, plan/receipt buffers
+//! and executor temporaries all come from the session's arena, weights
+//! are staged once into pooled buckets and handed to the executor as
+//! borrowed [`TensorView`]s (no clones), and every `*_into` API reuses
+//! capacity warmed up on the first call. An allocation-counting
+//! integration test enforces this with the default single-threaded
+//! kernels; `exec_threads > 1` additionally spawns scoped worker threads
+//! per stage, whose transient per-thread state allocates (by design —
+//! that mode trades arena purity for kernel parallelism).
+//!
+//! With prefetch enabled (default), the engine double-buffers I/O against
+//! compute: while layer *l*'s stages execute, it plans and submits layer
+//! *l+1*'s whole-layer read using the masks the session selected on its
+//! *previous* call — streaming frames are temporally correlated, so most
+//! of the next selection is already resident when the layer is reached.
+//! Prefetched service time is charged only beyond the compute it
+//! overlapped; rows the prediction missed are fetched by a small residual
+//! plan.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::arena::ScratchArena;
 use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy, StageTimer};
 use crate::latency::{Chunk, LatencyTable};
 use crate::model::{decode_f32_into, MatrixId, MatrixKind, ModelSpec, WeightStore};
-use crate::plan::{CoalescePolicy, IoPlanner, PlanRequest, PlannedRead, RowCursor};
+use crate::plan::{CoalescePolicy, IoPlanner, PlanScratch, PlannedRead, RowCursor};
 use crate::reorder::HotColdReorder;
-use crate::runtime::{Manifest, ModelMeta, Tensor, XlaRuntime};
-use crate::sparsify::{SelectionMask, Selector};
+use crate::runtime::{Manifest, ModelMeta, Tensor, TensorView, XlaRuntime};
+use crate::sparsify::{SelectScratch, SelectionMask, Selector};
 use crate::storage::{DeviceProfile, FlashDevice, ProfileConfig, Profiler, SimulatedSsd};
 
 /// Per-call stage accounting (one frame append or decode step).
@@ -105,12 +123,13 @@ pub struct EngineBuilder {
     artifact_dir: PathBuf,
     prefetch: bool,
     coalesce: CoalescePolicy,
+    exec_threads: usize,
 }
 
 impl EngineBuilder {
     /// Start from a runnable model name ("tiny" | "small" | "base") with
     /// defaults: nano profile, dense policy, prefetch on, contiguous
-    /// coalescing, artifacts in `./artifacts`.
+    /// coalescing, single-threaded kernels, artifacts in `./artifacts`.
     pub fn new(model: &str) -> Self {
         Self {
             model: model.to_string(),
@@ -121,6 +140,7 @@ impl EngineBuilder {
             artifact_dir: PathBuf::from("artifacts"),
             prefetch: true,
             coalesce: CoalescePolicy::contiguous(),
+            exec_threads: 1,
         }
     }
 
@@ -162,6 +182,13 @@ impl EngineBuilder {
         self
     }
 
+    /// Worker-thread count for the executor kernels (default 1 = inline).
+    /// Outputs are bit-identical at every value.
+    pub fn exec_threads(mut self, threads: usize) -> Self {
+        self.exec_threads = threads.max(1);
+        self
+    }
+
     /// Build the engine, generating + "flashing" the model weights.
     pub fn build(self) -> Result<Engine> {
         let runtime = XlaRuntime::open(&self.artifact_dir)?;
@@ -190,6 +217,42 @@ impl EngineBuilder {
         let sat = self.profile.saturation_bytes(0.99);
         let table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024)).build_table()?;
 
+        // Pre-key the table for every scored row size and pre-render every
+        // artifact name; both lookups are on the per-stage hot path and
+        // must not allocate there.
+        let mut keyed_tables: HashMap<usize, LatencyTable> = HashMap::new();
+        for kind in MatrixKind::SCORED {
+            let row_bytes = spec.row_bytes(kind);
+            keyed_tables
+                .entry(row_bytes)
+                .or_insert_with(|| table.with_row_bytes(row_bytes));
+        }
+        let mut artifact_names: HashMap<(&'static str, bool, usize), String> = HashMap::new();
+        let mut buckets: Vec<usize> = meta
+            .d_buckets
+            .iter()
+            .chain(meta.h_buckets.iter())
+            .copied()
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        for &bucket in &buckets {
+            for tt in [meta.t, 1] {
+                for base in ["qkv", "gateup", "projres"] {
+                    let kind = match (base, tt) {
+                        ("qkv", 1) => "qkv_decode".to_string(),
+                        ("qkv", _) => "qkv_append".to_string(),
+                        (b, 1) => format!("{b}_dec"),
+                        (b, _) => b.to_string(),
+                    };
+                    artifact_names.insert(
+                        (base, tt == 1, bucket),
+                        Manifest::artifact_name(&kind, &self.model, bucket),
+                    );
+                }
+            }
+        }
+
         let selector = self.policy.selector();
         let core = EngineCore {
             model: self.model,
@@ -198,29 +261,34 @@ impl EngineBuilder {
             sparsity: self.sparsity,
             seed: self.seed,
             prefetch: self.prefetch,
+            exec_threads: self.exec_threads,
             runtime,
             meta,
             spec,
             store,
             device,
             table,
+            keyed_tables,
+            artifact_names,
             planner: IoPlanner::new(self.coalesce),
             selector,
             neuron_cache: None,
-            metrics: Metrics::new(),
+            metrics: Mutex::new(Metrics::new()),
             epoch: 0,
         };
         Ok(Engine {
-            core: Rc::new(RefCell::new(core)),
+            core: Arc::new(RwLock::new(core)),
         })
     }
 }
 
-/// The serving engine facade. Cheap to clone handles out of via
-/// [`Engine::new_session`]; all sessions share the flash device, weight
-/// store, latency table and planner.
+/// The serving engine facade. `Clone` + `Send` + `Sync`: handles are
+/// cheap `Arc` clones and sessions opened from any of them share the
+/// flash device, weight store, latency table and planner. Serving takes
+/// the core read lock; only re-calibration takes the write lock.
+#[derive(Clone)]
 pub struct Engine {
-    core: Rc<RefCell<EngineCore>>,
+    core: Arc<RwLock<EngineCore>>,
 }
 
 impl Engine {
@@ -229,42 +297,44 @@ impl Engine {
     }
 
     /// Open an independent serving session (own KV caches, own prefetch
-    /// state). Sessions must not outlive calibration epochs silently —
-    /// they detect re-calibration and reset themselves.
+    /// state, own scratch arena). Sessions must not outlive calibration
+    /// epochs silently — they detect re-calibration and reset themselves.
     pub fn new_session(&self) -> Session {
-        let core = self.core.borrow();
-        let state = SessionState::new(&core.spec, core.epoch);
+        let core = self.core.read().unwrap();
+        let mut state = SessionState::new(&core.spec, core.epoch);
+        let mut scratch = ScratchArena::default();
+        core.reserve_session_buffers(&mut state, &mut scratch);
         drop(core);
         Session {
             core: self.core.clone(),
-            state: RefCell::new(state),
+            inner: Mutex::new(SessionInner { state, scratch }),
         }
     }
 
     pub fn spec(&self) -> ModelSpec {
-        self.core.borrow().spec.clone()
+        self.core.read().unwrap().spec.clone()
     }
 
     pub fn meta(&self) -> ModelMeta {
-        self.core.borrow().meta.clone()
+        self.core.read().unwrap().meta.clone()
     }
 
     pub fn policy(&self) -> Policy {
-        self.core.borrow().policy.clone()
+        self.core.read().unwrap().policy.clone()
     }
 
     pub fn latency_table(&self) -> LatencyTable {
-        self.core.borrow().table.clone()
+        self.core.read().unwrap().table.clone()
     }
 
     /// Snapshot of accumulated per-stage metrics.
     pub fn metrics(&self) -> Metrics {
-        self.core.borrow().metrics.clone()
+        self.core.read().unwrap().metrics.lock().unwrap().clone()
     }
 
     /// Pre-compile all artifacts (avoids first-request compile stalls).
     pub fn warmup(&self) -> Result<usize> {
-        let core = self.core.borrow();
+        let core = self.core.read().unwrap();
         core.runtime.warmup(&core.model)
     }
 
@@ -272,12 +342,12 @@ impl Engine {
     /// scored matrix, bake them into the flash layout, and invalidate all
     /// session state. Call before serving (offline step in the paper).
     pub fn calibrate_and_reorder(&self, frames: &[Vec<f32>]) -> Result<()> {
-        self.core.borrow_mut().calibrate_and_reorder(frames)
+        self.core.write().unwrap().calibrate_and_reorder(frames)
     }
 
     /// Install a hot-neuron cache built from calibration frequencies.
     pub fn set_neuron_cache(&self, cache: HotNeuronCache) {
-        self.core.borrow_mut().neuron_cache = Some(cache);
+        self.core.write().unwrap().neuron_cache = Some(cache);
     }
 }
 
@@ -289,8 +359,9 @@ fn group_index(kind: MatrixKind) -> usize {
         .expect("scored kind")
 }
 
-/// Per-group flash-chunk demand recorded for next-call prefetch.
-type GroupChunks = [Option<Vec<Chunk>>; 4];
+/// Per-group flash-chunk demand recorded for next-call prefetch. An empty
+/// list means "no demand recorded".
+type GroupChunks = [Vec<Chunk>; 4];
 
 struct SessionState {
     /// KV caches, one per layer.
@@ -298,8 +369,11 @@ struct SessionState {
     /// Flash chunks each (layer, group) demanded on the previous call —
     /// the prefetch prediction source.
     prev_masks: Vec<GroupChunks>,
-    /// Prefetched whole-layer reads for the current call.
-    prefetch: Vec<Option<PlannedRead>>,
+    /// This call's demand record; swapped into `prev_masks` at call end.
+    next_masks: Vec<GroupChunks>,
+    /// Pooled prefetched whole-layer reads, one slot per layer (an empty
+    /// plan means "nothing prefetched").
+    prefetch: Vec<PlannedRead>,
     epoch: u64,
 }
 
@@ -309,8 +383,9 @@ impl SessionState {
             kvs: (0..spec.layers)
                 .map(|_| KvCache::new(spec.cache_slots, spec.d))
                 .collect(),
-            prev_masks: Vec::new(),
-            prefetch: Vec::new(),
+            prev_masks: (0..spec.layers).map(|_| GroupChunks::default()).collect(),
+            next_masks: (0..spec.layers).map(|_| GroupChunks::default()).collect(),
+            prefetch: (0..spec.layers).map(|_| PlannedRead::default()).collect(),
             epoch,
         }
     }
@@ -319,25 +394,48 @@ impl SessionState {
         for kv in &mut self.kvs {
             kv.clear();
         }
-        self.prev_masks.clear();
-        self.prefetch.clear();
+        for masks in self.prev_masks.iter_mut().chain(self.next_masks.iter_mut()) {
+            for group in masks.iter_mut() {
+                group.clear();
+            }
+        }
+        for slot in &mut self.prefetch {
+            slot.clear();
+        }
         self.epoch = epoch;
     }
 }
 
-/// One serving stream: owns its KV caches and prefetch state, shares the
-/// engine core.
+/// Everything a session owns and mutates per call: serving state plus the
+/// scratch arena all hot-path buffers come from.
+struct SessionInner {
+    state: SessionState,
+    scratch: ScratchArena,
+}
+
+/// One serving stream: owns its KV caches, prefetch state, and scratch
+/// arena; shares the engine core. `Send + Sync`: concurrent calls on the
+/// same session serialize on its internal lock, calls on different
+/// sessions run in parallel.
 pub struct Session {
-    core: Rc<RefCell<EngineCore>>,
-    state: RefCell<SessionState>,
+    core: Arc<RwLock<EngineCore>>,
+    inner: Mutex<SessionInner>,
 }
 
 impl Session {
     /// Append one frame of token embeddings (`[T, d]` row-major); returns
     /// the output hidden states and stage stats.
     pub fn append_frame(&self, frame: &[f32]) -> Result<(Vec<f32>, StageStats)> {
-        let mut core = self.core.borrow_mut();
-        let mut state = self.state.borrow_mut();
+        let mut out = Vec::new();
+        let stats = self.append_frame_into(frame, &mut out)?;
+        Ok((out, stats))
+    }
+
+    /// Allocation-free [`Session::append_frame`]: the output hidden states
+    /// are written into `out` (cleared + refilled, capacity reused).
+    pub fn append_frame_into(&self, frame: &[f32], out: &mut Vec<f32>) -> Result<StageStats> {
+        let core = self.core.read().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         let t = core.meta.t;
         anyhow::ensure!(
             frame.len() == t * core.meta.d,
@@ -345,17 +443,28 @@ impl Session {
             t,
             core.meta.d
         );
-        core.forward(&mut state, frame, t)
+        let inner = &mut *inner;
+        core.forward(&mut inner.state, &mut inner.scratch, frame, t, out)
     }
 
     /// Decode one token (`[1, d]` embedding).
     pub fn decode_step(&self, token: &[f32]) -> Result<(Vec<f32>, StageStats)> {
-        let mut core = self.core.borrow_mut();
-        let mut state = self.state.borrow_mut();
+        let mut out = Vec::new();
+        let stats = self.decode_step_into(token, &mut out)?;
+        Ok((out, stats))
+    }
+
+    /// Allocation-free [`Session::decode_step`]: the next hidden state is
+    /// written into `out` (cleared + refilled, capacity reused). After one
+    /// warm-up call, further calls perform no heap allocations.
+    pub fn decode_step_into(&self, token: &[f32], out: &mut Vec<f32>) -> Result<StageStats> {
+        let core = self.core.read().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         anyhow::ensure!(token.len() == core.meta.d, "token must be [d]");
-        if state.epoch == core.epoch {
+        let inner = &mut *inner;
+        if inner.state.epoch == core.epoch {
             anyhow::ensure!(
-                !state.kvs.iter().all(|kv| kv.is_empty()),
+                !inner.state.kvs.iter().all(|kv| kv.is_empty()),
                 "decode requires a non-empty KV cache (append a frame first)"
             );
         } else {
@@ -363,18 +472,25 @@ impl Session {
             // its KV state is about to be discarded.
             anyhow::bail!("decode requires a non-empty KV cache (append a frame first)");
         }
-        core.forward(&mut state, token, 1)
+        core.forward(&mut inner.state, &mut inner.scratch, token, 1, out)
     }
 
     /// Clear KV caches and prefetch state.
     pub fn reset(&self) {
-        let core = self.core.borrow();
-        self.state.borrow_mut().reset(core.epoch);
+        let core = self.core.read().unwrap();
+        self.inner.lock().unwrap().state.reset(core.epoch);
     }
 
     /// Total KV tokens currently cached across layers.
     pub fn kv_tokens(&self) -> usize {
-        self.state.borrow().kvs.iter().map(|kv| kv.len()).sum()
+        self.inner
+            .lock()
+            .unwrap()
+            .state
+            .kvs
+            .iter()
+            .map(|kv| kv.len())
+            .sum()
     }
 }
 
@@ -385,18 +501,24 @@ struct EngineCore {
     sparsity: f64,
     seed: u64,
     prefetch: bool,
+    /// Executor kernel worker count (outputs are thread-count invariant).
+    exec_threads: usize,
     runtime: XlaRuntime,
     meta: ModelMeta,
     spec: ModelSpec,
     store: WeightStore,
     device: SimulatedSsd,
-    /// Byte-keyed latency table (re-keyed per matrix row size on use).
+    /// Byte-keyed latency table.
     table: LatencyTable,
+    /// The table pre-keyed per scored row size (hot path must not clone).
+    keyed_tables: HashMap<usize, LatencyTable>,
+    /// Pre-rendered artifact names: (stage base, is_decode, bucket).
+    artifact_names: HashMap<(&'static str, bool, usize), String>,
     planner: IoPlanner,
     selector: Option<Box<dyn Selector>>,
     /// Optional hot-neuron cache (§5 memory-budget extension).
     neuron_cache: Option<HotNeuronCache>,
-    metrics: Metrics,
+    metrics: Mutex<Metrics>,
     /// Bumped whenever the flash image is rebuilt (re-calibration);
     /// sessions compare and self-reset.
     epoch: u64,
@@ -462,227 +584,356 @@ impl EngineCore {
         Ok(out)
     }
 
+    /// One serving call (frame append or decode step). `&self`: all
+    /// mutable state lives in the session (`state` + `scratch`), so
+    /// concurrent sessions proceed under the shared read lock.
     fn forward(
-        &mut self,
+        &self,
         state: &mut SessionState,
+        scratch: &mut ScratchArena,
         input: &[f32],
         t: usize,
-    ) -> Result<(Vec<f32>, StageStats)> {
+        out: &mut Vec<f32>,
+    ) -> Result<StageStats> {
         if state.epoch != self.epoch {
             state.reset(self.epoch);
         }
         let d = self.meta.d;
         let h = self.meta.h;
+        let c = self.spec.cache_slots;
         let layers = self.spec.layers;
         let mut stats = StageStats::default();
-        let mut next_masks: Vec<GroupChunks> =
-            vec![[None, None, None, None]; layers];
-        state.prefetch.resize_with(layers, || None);
+        let mut prefetch_service = Duration::ZERO;
 
-        let mut x = input.to_vec();
+        let sc = &mut *scratch;
+        sc.fwd.xa.clear();
+        sc.fwd.xa.extend_from_slice(input);
+
         for layer in 0..layers {
             let layer_t0 = Instant::now();
             // Whole-layer prefetch buffer for this layer, if the previous
-            // call's masks were submitted while layer-1 executed.
-            let pre = state.prefetch[layer].take();
+            // call's masks were submitted while layer-1 executed. Swap the
+            // pooled slot out (its buffers cycle back in on the next
+            // prefetch write) and leave the slot empty.
+            std::mem::swap(&mut sc.pre, &mut state.prefetch[layer]);
+            state.prefetch[layer].clear();
+            let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
 
             // --- qkv + attention ---
             let timer = StageTimer::start();
-            let hn = rmsnorm(&x, t, d);
-            let imp = col_importance(&hn, t, d);
-            stats.host += timer.stop(&mut self.metrics, "host");
-            let sel = self.select(layer, MatrixKind::Q, &imp, &mut stats);
-            let (attn, k, v) = {
-                let (xs, weights, bucket, flash) = self.load_group(
-                    layer,
-                    MatrixKind::Q,
-                    &hn,
-                    t,
-                    &sel,
-                    pre.as_ref(),
-                    &mut stats,
-                )?;
-                next_masks[layer][group_index(MatrixKind::Q)] = Some(flash);
+            rmsnorm_into(&sc.fwd.xa, t, d, &mut sc.fwd.hn);
+            col_importance_into(&sc.fwd.hn, t, d, &mut sc.fwd.imp);
+            stats.host += timer.finish();
+            self.select_into(
+                layer,
+                MatrixKind::Q,
+                &sc.fwd.imp,
+                &mut stats,
+                &mut sc.sel_scratch,
+                &mut sc.imp_phys,
+                &mut sc.sel,
+            );
+            let bucket = self.load_group(
+                layer,
+                MatrixKind::Q,
+                &sc.fwd.hn,
+                t,
+                &sc.sel,
+                pre,
+                &mut sc.gather,
+                &mut sc.plan_scratch,
+                &mut stats,
+            )?;
+            let dst = &mut state.next_masks[layer][group_index(MatrixKind::Q)];
+            dst.clear();
+            dst.extend_from_slice(&sc.gather.flash_chunks);
+            {
                 let timer = StageTimer::start();
-                let (kc, vc, mask) = state.kvs[layer].tensors();
-                let name = self.artifact("qkv", t, bucket);
-                let out = self.runtime.execute(
-                    &name,
-                    &[
-                        Tensor::new(vec![t, bucket], xs),
-                        Tensor::new(vec![bucket, d], weights[0].clone()),
-                        Tensor::new(vec![bucket, d], weights[1].clone()),
-                        Tensor::new(vec![bucket, d], weights[2].clone()),
-                        kc,
-                        vc,
-                        mask,
-                    ],
-                )?;
-                stats.compute += timer.stop(&mut self.metrics, "compute");
-                (out[0].data.clone(), out[1].data.clone(), out[2].data.clone())
-            };
-            state.kvs[layer].append(&k, &v);
+                let (kc, vc, kmask) = state.kvs[layer].views();
+                let name = self.artifact_name("qkv", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &sc.gather.xs),
+                    TensorView::mat(bucket, d, &sc.gather.weights[0]),
+                    TensorView::mat(bucket, d, &sc.gather.weights[1]),
+                    TensorView::mat(bucket, d, &sc.gather.weights[2]),
+                    TensorView::mat(c, d, kc),
+                    TensorView::mat(c, d, vc),
+                    TensorView::vec1(c, kmask),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
+                stats.compute += timer.finish();
+            }
+            std::mem::swap(&mut sc.fwd.attn, &mut sc.outs.out[0]);
+            state.kvs[layer].append(&sc.outs.out[1], &sc.outs.out[2]);
 
             // --- o projection + residual ---
             let timer = StageTimer::start();
-            let imp = col_importance(&attn, t, d);
-            stats.host += timer.stop(&mut self.metrics, "host");
-            let sel = self.select(layer, MatrixKind::O, &imp, &mut stats);
-            let (x1, flash) =
-                self.run_projres(layer, MatrixKind::O, &attn, t, &x, &sel, pre.as_ref(), &mut stats)?;
-            next_masks[layer][group_index(MatrixKind::O)] = Some(flash);
+            col_importance_into(&sc.fwd.attn, t, d, &mut sc.fwd.imp);
+            stats.host += timer.finish();
+            self.select_into(
+                layer,
+                MatrixKind::O,
+                &sc.fwd.imp,
+                &mut stats,
+                &mut sc.sel_scratch,
+                &mut sc.imp_phys,
+                &mut sc.sel,
+            );
+            let bucket = self.load_group(
+                layer,
+                MatrixKind::O,
+                &sc.fwd.attn,
+                t,
+                &sc.sel,
+                pre,
+                &mut sc.gather,
+                &mut sc.plan_scratch,
+                &mut stats,
+            )?;
+            let dst = &mut state.next_masks[layer][group_index(MatrixKind::O)];
+            dst.clear();
+            dst.extend_from_slice(&sc.gather.flash_chunks);
+            {
+                let timer = StageTimer::start();
+                let name = self.artifact_name("projres", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &sc.gather.xs),
+                    TensorView::mat(bucket, d, &sc.gather.weights[0]),
+                    TensorView::mat(t, d, &sc.fwd.xa),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
+                stats.compute += timer.finish();
+            }
+            std::mem::swap(&mut sc.fwd.xb, &mut sc.outs.out[0]);
 
             // --- gate/up (SwiGLU) ---
             let timer = StageTimer::start();
-            let hn2 = rmsnorm(&x1, t, d);
-            let imp = col_importance(&hn2, t, d);
-            stats.host += timer.stop(&mut self.metrics, "host");
-            let sel = self.select(layer, MatrixKind::Gate, &imp, &mut stats);
-            let act = {
-                let (xs, weights, bucket, flash) = self.load_group(
-                    layer,
-                    MatrixKind::Gate,
-                    &hn2,
-                    t,
-                    &sel,
-                    pre.as_ref(),
-                    &mut stats,
-                )?;
-                next_masks[layer][group_index(MatrixKind::Gate)] = Some(flash);
+            rmsnorm_into(&sc.fwd.xb, t, d, &mut sc.fwd.hn);
+            col_importance_into(&sc.fwd.hn, t, d, &mut sc.fwd.imp);
+            stats.host += timer.finish();
+            self.select_into(
+                layer,
+                MatrixKind::Gate,
+                &sc.fwd.imp,
+                &mut stats,
+                &mut sc.sel_scratch,
+                &mut sc.imp_phys,
+                &mut sc.sel,
+            );
+            let bucket = self.load_group(
+                layer,
+                MatrixKind::Gate,
+                &sc.fwd.hn,
+                t,
+                &sc.sel,
+                pre,
+                &mut sc.gather,
+                &mut sc.plan_scratch,
+                &mut stats,
+            )?;
+            let dst = &mut state.next_masks[layer][group_index(MatrixKind::Gate)];
+            dst.clear();
+            dst.extend_from_slice(&sc.gather.flash_chunks);
+            {
                 let timer = StageTimer::start();
-                let name = self.artifact("gateup", t, bucket);
-                let out = self.runtime.execute(
-                    &name,
-                    &[
-                        Tensor::new(vec![t, bucket], xs),
-                        Tensor::new(vec![bucket, h], weights[0].clone()),
-                        Tensor::new(vec![bucket, h], weights[1].clone()),
-                    ],
-                )?;
-                stats.compute += timer.stop(&mut self.metrics, "compute");
-                out[0].data.clone()
-            };
+                let name = self.artifact_name("gateup", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &sc.gather.xs),
+                    TensorView::mat(bucket, h, &sc.gather.weights[0]),
+                    TensorView::mat(bucket, h, &sc.gather.weights[1]),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
+                stats.compute += timer.finish();
+            }
+            std::mem::swap(&mut sc.fwd.act, &mut sc.outs.out[0]);
 
             // --- down projection + residual ---
             let timer = StageTimer::start();
-            let imp = col_importance(&act, t, h);
-            stats.host += timer.stop(&mut self.metrics, "host");
-            let sel = self.select(layer, MatrixKind::Down, &imp, &mut stats);
-            let (xn, flash) = self.run_projres(
+            col_importance_into(&sc.fwd.act, t, h, &mut sc.fwd.imp);
+            stats.host += timer.finish();
+            self.select_into(
                 layer,
                 MatrixKind::Down,
-                &act,
+                &sc.fwd.imp,
+                &mut stats,
+                &mut sc.sel_scratch,
+                &mut sc.imp_phys,
+                &mut sc.sel,
+            );
+            let bucket = self.load_group(
+                layer,
+                MatrixKind::Down,
+                &sc.fwd.act,
                 t,
-                &x1,
-                &sel,
-                pre.as_ref(),
+                &sc.sel,
+                pre,
+                &mut sc.gather,
+                &mut sc.plan_scratch,
                 &mut stats,
             )?;
-            next_masks[layer][group_index(MatrixKind::Down)] = Some(flash);
-            x = xn;
+            let dst = &mut state.next_masks[layer][group_index(MatrixKind::Down)];
+            dst.clear();
+            dst.extend_from_slice(&sc.gather.flash_chunks);
+            {
+                let timer = StageTimer::start();
+                let name = self.artifact_name("projres", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &sc.gather.xs),
+                    TensorView::mat(bucket, d, &sc.gather.weights[0]),
+                    TensorView::mat(t, d, &sc.fwd.xb),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
+                stats.compute += timer.finish();
+            }
+            std::mem::swap(&mut sc.fwd.xa, &mut sc.outs.out[0]);
 
             // --- double-buffered prefetch of layer l+1 ---
             // Submit the next layer's predicted whole-layer read now; the
             // service time it cannot hide behind this layer's compute is
             // what the caller pays.
             if self.prefetch && layer + 1 < layers {
-                self.prefetch_layer(state, layer + 1, layer_t0.elapsed(), &mut stats)?;
+                prefetch_service += self.prefetch_layer(
+                    state,
+                    &mut sc.plan_scratch,
+                    layer + 1,
+                    layer_t0.elapsed(),
+                    &mut stats,
+                )?;
             }
         }
-        state.prev_masks = next_masks;
-        self.metrics.add_bytes("io", stats.bytes_loaded);
-        Ok((x, stats))
+        std::mem::swap(&mut state.prev_masks, &mut state.next_masks);
+        // One metrics fold per call (not per stage): the shared mutex is
+        // touched once, so concurrent sessions don't serialize on it.
+        {
+            let mut metrics = self.metrics.lock().unwrap();
+            metrics.add("host", stats.host);
+            metrics.add("select", stats.select);
+            metrics.add("compute", stats.compute);
+            metrics.add("io", stats.io);
+            if prefetch_service > Duration::ZERO {
+                metrics.add("prefetch", prefetch_service);
+            }
+            metrics.add_bytes("io", stats.bytes_loaded);
+        }
+        out.clear();
+        out.extend_from_slice(&sc.fwd.xa);
+        Ok(stats)
     }
 
     /// Plan + submit the predicted flash demand of `layer` (all four
     /// selection groups, every member matrix — one cross-matrix command
-    /// batch). `overlap` is the wall-clock compute window the prefetch
-    /// hides behind.
+    /// batch) into the session's pooled prefetch slot. `overlap` is the
+    /// wall-clock compute window the prefetch hides behind. Returns the
+    /// raw (pre-overlap-credit) service time for the caller's metrics
+    /// fold.
     fn prefetch_layer(
-        &mut self,
+        &self,
         state: &mut SessionState,
+        plan_scratch: &mut PlanScratch,
         layer: usize,
         overlap: Duration,
         stats: &mut StageStats,
-    ) -> Result<()> {
-        let Some(groups) = state.prev_masks.get(layer) else {
-            return Ok(());
+    ) -> Result<Duration> {
+        let SessionState {
+            prev_masks,
+            prefetch,
+            ..
+        } = state;
+        let Some(groups) = prev_masks.get(layer) else {
+            return Ok(Duration::ZERO);
         };
-        let mut requests = Vec::new();
+        // At most the seven matrices of one layer; stack-allocated.
+        let empty: &[Chunk] = &[];
+        let mut requests: [(MatrixId, &[Chunk]); 7] =
+            [(MatrixId::new(layer, MatrixKind::Q), empty); 7];
+        let mut n = 0usize;
         for (gi, scored) in MatrixKind::SCORED.into_iter().enumerate() {
-            let Some(chunks) = &groups[gi] else { continue };
+            let chunks = &groups[gi];
             if chunks.is_empty() {
                 continue;
             }
             for member in MatrixKind::ALL {
                 if member.mask_source() == scored {
-                    requests.push(PlanRequest::new(
-                        MatrixId::new(layer, member),
-                        chunks.clone(),
-                    ));
+                    requests[n] = (MatrixId::new(layer, member), chunks.as_slice());
+                    n += 1;
                 }
             }
         }
-        if requests.is_empty() {
-            return Ok(());
+        if n == 0 {
+            return Ok(Duration::ZERO);
         }
-        let plan = self
-            .planner
-            .plan(&self.store.layout, &requests, Some(&self.table));
-        if plan.is_empty() {
-            return Ok(());
+        let slot = &mut prefetch[layer];
+        self.planner.plan_refs_into(
+            &self.store.layout,
+            &requests[..n],
+            Some(&self.table),
+            plan_scratch,
+            &mut slot.plan,
+        );
+        if slot.plan.is_empty() {
+            return Ok(Duration::ZERO);
         }
-        let receipt = self.device.submit(&plan)?;
-        let read = PlannedRead { plan, receipt };
-        let service = read.service();
+        self.device.submit_into(&slot.plan, &mut slot.receipt)?;
+        let service = slot.receipt.service;
         let charged = service.saturating_sub(overlap);
         stats.io += charged;
-        stats.bytes_loaded += read.plan.payload_bytes();
-        stats.prefetched_bytes += read.plan.payload_bytes();
-        self.metrics.add("io", charged);
-        self.metrics.add("prefetch", service);
-        state.prefetch[layer] = Some(read);
-        Ok(())
+        stats.bytes_loaded += slot.plan.payload_bytes();
+        stats.prefetched_bytes += slot.plan.payload_bytes();
+        Ok(service)
     }
 
-    /// Run the selection policy for one scored matrix.
-    fn select(
-        &mut self,
+    /// Run the selection policy for one scored matrix, writing the mask
+    /// into `out` (arena-backed; no allocations at steady state).
+    #[allow(clippy::too_many_arguments)]
+    fn select_into(
+        &self,
         layer: usize,
         kind: MatrixKind,
         importance_logical: &[f32],
         stats: &mut StageStats,
-    ) -> SelectionMask {
+        scratch: &mut SelectScratch,
+        imp_phys: &mut Vec<f32>,
+        out: &mut SelectionMask,
+    ) {
         let rows = importance_logical.len();
         let timer = StageTimer::start();
         // Move importance into physical (reordered) row space.
         let id = MatrixId::new(layer, kind);
-        let mut imp: Vec<f32> = match self.store.permutation(id) {
-            Some(p) => p.apply(importance_logical),
-            None => importance_logical.to_vec(),
-        };
-        let total: f64 = imp.iter().map(|&v| v as f64).sum();
+        match self.store.permutation(id) {
+            Some(p) => p.apply_into(importance_logical, imp_phys),
+            None => {
+                imp_phys.clear();
+                imp_phys.extend_from_slice(importance_logical);
+            }
+        }
+        let total: f64 = imp_phys.iter().map(|&v| v as f64).sum();
         // Cached rows are free: zero their importance pre-selection (§5).
         if let Some(cache) = &self.neuron_cache {
-            cache.zero_cached(id, &mut imp);
+            cache.zero_cached(id, imp_phys);
         }
         let budget = ((1.0 - self.sparsity) * rows as f64).round() as usize;
-        let sel = match &self.selector {
-            None => SelectionMask::full(rows),
+        match &self.selector {
+            None => out.set_full(rows),
             Some(s) => {
                 let row_bytes = self.spec.row_bytes(kind);
-                let table = self.table.with_row_bytes(row_bytes);
-                s.select(&imp, budget, &table)
+                let table = self
+                    .keyed_tables
+                    .get(&row_bytes)
+                    .expect("table pre-keyed for every scored row size");
+                s.select_into(imp_phys, budget, table, scratch, out);
             }
-        };
-        stats.select += timer.stop(&mut self.metrics, "select");
+        }
+        stats.select += timer.finish();
         stats.importance_total += total;
-        stats.importance_kept += sel.captured_importance(&imp);
+        stats.importance_kept += out.captured_importance(imp_phys);
         if let Some(cache) = &self.neuron_cache {
             stats.importance_kept +=
                 cache.cached_importance(id, importance_logical, self.store.permutation(id));
         }
-        sel
     }
 
     /// Load all matrices of the selection group led by `kind`, gather the
@@ -690,50 +941,59 @@ impl EngineCore {
     /// flash submission serves every member; rows already resident in the
     /// layer prefetch buffer or the hot-neuron cache are not re-read.
     ///
-    /// Returns (xs, per-member weights, bucket, flash chunk demand).
+    /// Staging lands in the arena: `g.xs` (gathered activations),
+    /// `g.weights[..members]` (weight buckets the executor reads in
+    /// place), `g.flash_chunks` (demand recorded for prefetch). Returns
+    /// the compiled bucket size.
     #[allow(clippy::too_many_arguments)]
     fn load_group(
-        &mut self,
+        &self,
         layer: usize,
         kind: MatrixKind,
         acts: &[f32],
         t: usize,
         sel: &SelectionMask,
         prefetched: Option<&PlannedRead>,
+        g: &mut crate::coordinator::arena::GatherScratch,
+        plan_scratch: &mut PlanScratch,
         stats: &mut StageStats,
-    ) -> Result<(Vec<f32>, Vec<Vec<f32>>, usize, Vec<Chunk>)> {
-        let members: Vec<MatrixKind> = MatrixKind::ALL
-            .into_iter()
-            .filter(|m| m.mask_source() == kind)
-            .collect();
+    ) -> Result<usize> {
+        let members: &'static [MatrixKind] = match kind {
+            MatrixKind::Q => &[MatrixKind::Q, MatrixKind::K, MatrixKind::V],
+            MatrixKind::O => &[MatrixKind::O],
+            MatrixKind::Gate => &[MatrixKind::Gate, MatrixKind::Up],
+            MatrixKind::Down => &[MatrixKind::Down],
+            _ => unreachable!("only scored kinds lead a group"),
+        };
         let in_rows = self.spec.shape_of(kind).rows;
 
         // Union of selected + cached rows (sorted, physical space).
         let id0 = MatrixId::new(layer, kind);
-        let mut phys_rows: Vec<usize> = sel.indices();
-        let mut flash_chunks: Vec<Chunk> = sel.chunks.clone();
+        g.phys_rows.clear();
+        for chunk in &sel.chunks {
+            g.phys_rows.extend(chunk.start..chunk.end());
+        }
+        g.flash_chunks.clear();
+        g.flash_chunks.extend_from_slice(&sel.chunks);
         if let Some(cache) = &self.neuron_cache {
             let cached = cache.cached_rows(id0);
             if !cached.is_empty() {
-                let selset: Vec<bool> = {
-                    let mut v = vec![false; in_rows];
-                    for &r in &phys_rows {
-                        v[r] = true;
-                    }
-                    v
-                };
+                g.selset.clear();
+                g.selset.resize(in_rows, false);
+                for &r in g.phys_rows.iter() {
+                    g.selset[r] = true;
+                }
                 for &r in cached {
-                    if !selset[r] {
-                        phys_rows.push(r);
+                    if !g.selset[r] {
+                        g.phys_rows.push(r);
                     }
                 }
-                phys_rows.sort_unstable();
+                g.phys_rows.sort_unstable();
                 // Flash reads exclude cached rows.
-                flash_chunks = sel
-                    .chunks
-                    .iter()
-                    .flat_map(|c| cache.subtract_cached(id0, *c))
-                    .collect();
+                g.flash_chunks.clear();
+                for chunk in &sel.chunks {
+                    g.flash_chunks.extend(cache.subtract_cached(id0, *chunk));
+                }
             }
         }
 
@@ -742,85 +1002,94 @@ impl EngineCore {
         } else {
             &self.meta.d_buckets
         };
-        let bucket = ModelMeta::bucket_for(buckets, phys_rows.len());
+        let bucket = ModelMeta::bucket_for(buckets, g.phys_rows.len());
 
         // Gather activations: xs[:, j] = acts[:, logical(phys_rows[j])].
         let timer = StageTimer::start();
         let perm = self.store.permutation(id0);
-        let mut xs = vec![0.0f32; t * bucket];
-        for (j, &p) in phys_rows.iter().enumerate() {
+        g.xs.clear();
+        g.xs.resize(t * bucket, 0.0);
+        for (j, &p) in g.phys_rows.iter().enumerate() {
             let logical = perm.map(|pm| pm.old_of(p)).unwrap_or(p);
             for ti in 0..t {
-                xs[ti * bucket + j] = acts[ti * in_rows + logical];
+                g.xs[ti * bucket + j] = acts[ti * in_rows + logical];
             }
         }
-        stats.host += timer.stop(&mut self.metrics, "host");
+        stats.host += timer.finish();
 
         // Rows the prefetch buffer already holds need no fresh read; the
         // residual demand is planned as one cross-matrix batch. Coverage is
         // identical across members (the prefetcher requested the same
         // chunks for each), so the lead member's cursor decides.
-        let residual: Vec<Chunk> = match prefetched {
-            None => flash_chunks.clone(),
+        g.residual.clear();
+        match prefetched {
+            None => g.residual.extend_from_slice(&g.flash_chunks),
             Some(pre) => {
                 let lead = MatrixId::new(layer, members[0]);
                 let mut cursor = RowCursor::new(pre, lead);
-                let mut out = Vec::new();
-                for c in &flash_chunks {
+                for chunk in &g.flash_chunks {
                     let mut run: Option<usize> = None;
-                    for r in c.start..c.end() {
+                    for r in chunk.start..chunk.end() {
                         if cursor.advance_to(r).is_some() {
                             if let Some(s) = run.take() {
-                                out.push(Chunk::new(s, r - s));
+                                g.residual.push(Chunk::new(s, r - s));
                             }
                         } else if run.is_none() {
                             run = Some(r);
                         }
                     }
                     if let Some(s) = run {
-                        out.push(Chunk::new(s, c.end() - s));
+                        g.residual.push(Chunk::new(s, chunk.end() - s));
                     }
                 }
-                out
             }
-        };
-
-        // One planned submission for every member's residual rows.
-        let requests: Vec<PlanRequest> = members
-            .iter()
-            .map(|m| PlanRequest::new(MatrixId::new(layer, *m), residual.clone()))
-            .collect();
-        let plan = self
-            .planner
-            .plan(&self.store.layout, &requests, Some(&self.table));
-        let fresh = if plan.is_empty() {
-            None
-        } else {
-            let receipt = self.device.submit(&plan)?;
-            Some(PlannedRead { plan, receipt })
-        };
-        let io_total = fresh.as_ref().map(|f| f.service()).unwrap_or_default();
-        if let Some(f) = &fresh {
-            stats.bytes_loaded += f.plan.payload_bytes();
         }
 
+        // One planned submission for every member's residual rows.
+        let empty: &[Chunk] = &[];
+        let mut requests: [(MatrixId, &[Chunk]); 3] = [(id0, empty); 3];
+        for (i, member) in members.iter().enumerate() {
+            requests[i] = (MatrixId::new(layer, *member), g.residual.as_slice());
+        }
+        self.planner.plan_refs_into(
+            &self.store.layout,
+            &requests[..members.len()],
+            Some(&self.table),
+            plan_scratch,
+            &mut g.fresh.plan,
+        );
+        let have_fresh = !g.fresh.plan.is_empty();
+        if have_fresh {
+            self.device.submit_into(&g.fresh.plan, &mut g.fresh.receipt)?;
+            stats.bytes_loaded += g.fresh.plan.payload_bytes();
+        } else {
+            g.fresh.receipt.clear();
+        }
+        let io_total = g.fresh.receipt.service;
+
         // Assemble per-member weight buckets: fresh read → prefetch buffer
-        // → hot-neuron cache, walking phys_rows in ascending order.
+        // → hot-neuron cache, walking phys_rows in ascending order. The
+        // executor reads these buffers in place (no clones).
         let timer = StageTimer::start();
-        let mut weights = Vec::with_capacity(members.len());
-        for m in &members {
-            let id = MatrixId::new(layer, *m);
-            let cols = self.spec.shape_of(*m).cols;
-            let mut w = vec![0.0f32; bucket * cols];
-            let mut fresh_cursor = fresh.as_ref().map(|f| RowCursor::new(f, id));
+        for (mi, member) in members.iter().enumerate() {
+            let id = MatrixId::new(layer, *member);
+            let cols = self.spec.shape_of(*member).cols;
+            let w = &mut g.weights[mi];
+            w.clear();
+            w.resize(bucket * cols, 0.0);
+            let mut fresh_cursor = if have_fresh {
+                Some(RowCursor::new(&g.fresh, id))
+            } else {
+                None
+            };
             let mut pre_cursor = prefetched.map(|p| RowCursor::new(p, id));
-            for (j, &p) in phys_rows.iter().enumerate() {
+            for (j, &p) in g.phys_rows.iter().enumerate() {
                 let dst = &mut w[j * cols..(j + 1) * cols];
-                if let Some(bytes) = fresh_cursor.as_mut().and_then(|c| c.advance_to(p)) {
+                if let Some(bytes) = fresh_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
                     decode_f32_into(bytes, dst);
                     continue;
                 }
-                if let Some(bytes) = pre_cursor.as_mut().and_then(|c| c.advance_to(p)) {
+                if let Some(bytes) = pre_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
                     decode_f32_into(bytes, dst);
                     stats.prefetch_hits += 1;
                     continue;
@@ -831,42 +1100,11 @@ impl EngineCore {
                     }
                 }
             }
-            weights.push(w);
         }
-        stats.host += timer.stop(&mut self.metrics, "host");
+        stats.host += timer.finish();
 
         stats.io += io_total;
-        self.metrics.add("io", io_total);
-        Ok((xs, weights, bucket, flash_chunks))
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn run_projres(
-        &mut self,
-        layer: usize,
-        kind: MatrixKind,
-        acts: &[f32],
-        t: usize,
-        residual: &[f32],
-        sel: &SelectionMask,
-        prefetched: Option<&PlannedRead>,
-        stats: &mut StageStats,
-    ) -> Result<(Vec<f32>, Vec<Chunk>)> {
-        let d = self.meta.d;
-        let (xs, weights, bucket, flash) =
-            self.load_group(layer, kind, acts, t, sel, prefetched, stats)?;
-        let timer = StageTimer::start();
-        let name = self.artifact("projres", t, bucket);
-        let out = self.runtime.execute(
-            &name,
-            &[
-                Tensor::new(vec![t, bucket], xs),
-                Tensor::new(vec![bucket, d], weights[0].clone()),
-                Tensor::new(vec![t, d], residual.to_vec()),
-            ],
-        )?;
-        stats.compute += timer.stop(&mut self.metrics, "compute");
-        Ok((out[0].data.clone(), flash))
+        Ok(bucket)
     }
 
     /// Dense helpers used by the calibration pass. These also flow through
@@ -886,9 +1124,9 @@ impl EngineCore {
             Ok(rows)
         };
         let (kc, vc, mask) = kv.tensors();
-        let name = self.artifact("qkv", t, d);
+        let name = self.artifact_name("qkv", t, d)?;
         let out = self.runtime.execute(
-            &name,
+            name,
             &[
                 Tensor::new(vec![t, d], hn.to_vec()),
                 Tensor::new(vec![d, d], load(MatrixKind::Q)?),
@@ -913,9 +1151,9 @@ impl EngineCore {
             .store
             .read_rows(&self.device, MatrixId::new(layer, MatrixKind::Up), &sel.chunks)?
             .0;
-        let name = self.artifact("gateup", t, d);
+        let name = self.artifact_name("gateup", t, d)?;
         let out = self.runtime.execute(
-            &name,
+            name,
             &[
                 Tensor::new(vec![t, d], hn.to_vec()),
                 Tensor::new(vec![d, h], gate),
@@ -940,9 +1178,9 @@ impl EngineCore {
             .store
             .read_rows(&self.device, MatrixId::new(layer, kind), &sel.chunks)?
             .0;
-        let name = self.artifact("projres", t, rows);
+        let name = self.artifact_name("projres", t, rows)?;
         let out = self.runtime.execute(
-            &name,
+            name,
             &[
                 Tensor::new(vec![t, rows], acts.to_vec()),
                 Tensor::new(vec![rows, d], w),
@@ -952,21 +1190,99 @@ impl EngineCore {
         Ok(out[0].data.clone())
     }
 
-    fn artifact(&self, base: &str, t: usize, bucket: usize) -> String {
-        let kind = match (base, t) {
-            ("qkv", 1) => "qkv_decode".to_string(),
-            ("qkv", _) => "qkv_append".to_string(),
-            (b, 1) => format!("{b}_dec"),
-            (b, _) => b.to_string(),
+    /// Pre-reserve worst-case capacities for every session buffer whose
+    /// length depends on selection *shape*: selections drift token to
+    /// token as activations evolve, so the warm-up call alone cannot
+    /// bound chunk-count-dependent vectors. Capacities are capped by the
+    /// selection budget plus any hot-neuron-cache rows installed at
+    /// session-open time (cached rows join the compute set on top of the
+    /// budget), so this reserves the sparse working set, not the dense
+    /// one. A cache installed *after* a session opens can still grow that
+    /// session's gather buffers once (amortized, not steady-state). The
+    /// allocation-regression test relies on this.
+    fn reserve_session_buffers(&self, state: &mut SessionState, scratch: &mut ScratchArena) {
+        let spec = &self.spec;
+        let t_max = self.meta.t;
+        let n_max = spec.d.max(spec.h);
+        let max_chunks = n_max / 2 + 1;
+        let keep = (1.0 - self.sparsity).clamp(0.0, 1.0);
+        let kept_rows = |rows: usize| (((keep * rows as f64).round() as usize).max(1)).min(rows);
+        // Worst case cached rows joining a group's compute set (any layer).
+        let cached_max = |kind: MatrixKind| -> usize {
+            self.neuron_cache.as_ref().map_or(0, |cache| {
+                (0..spec.layers)
+                    .map(|layer| cache.cached_rows(MatrixId::new(layer, kind)).len())
+                    .max()
+                    .unwrap_or(0)
+            })
         };
-        Manifest::artifact_name(&kind, &self.model, bucket)
+        let mut group_bytes_max = 0usize;
+        let mut layer_bytes = 0usize;
+        let mut xs_cap = 0usize;
+        let mut w_cap = 0usize;
+        for kind in MatrixKind::SCORED {
+            let rows = spec.shape_of(kind).rows;
+            // Flash payload is budget-capped (cached rows are never
+            // re-read); the gathered compute set adds cached rows.
+            let kept_io = kept_rows(rows);
+            let kept_compute = (kept_io + cached_max(kind)).min(rows);
+            let buckets = if kind == MatrixKind::Down {
+                &self.meta.h_buckets
+            } else {
+                &self.meta.d_buckets
+            };
+            let bucket = ModelMeta::bucket_for(buckets, kept_compute);
+            xs_cap = xs_cap.max(t_max * bucket);
+            let mut group = 0usize;
+            for member in MatrixKind::ALL {
+                if member.mask_source() == kind {
+                    group += kept_io * self.store.layout.row_bytes(MatrixId::new(0, member));
+                    w_cap = w_cap.max(bucket * spec.shape_of(member).cols);
+                }
+            }
+            group_bytes_max = group_bytes_max.max(group);
+            layer_bytes += group;
+        }
+        scratch.reserve(
+            n_max,
+            t_max,
+            max_chunks,
+            xs_cap,
+            w_cap,
+            group_bytes_max,
+            layer_bytes,
+        );
+        for slot in &mut state.prefetch {
+            slot.reserve(layer_bytes, 7 * max_chunks, 7 * max_chunks);
+        }
+        for masks in state.prev_masks.iter_mut().chain(state.next_masks.iter_mut()) {
+            for group in masks.iter_mut() {
+                group.reserve(max_chunks);
+            }
+        }
+    }
+
+    /// Pre-rendered artifact name lookup (no per-call formatting).
+    fn artifact_name(&self, base: &'static str, t: usize, bucket: usize) -> Result<&str> {
+        self.artifact_names
+            .get(&(base, t == 1, bucket))
+            .map(|s| s.as_str())
+            .with_context(|| format!("no artifact name for {base} t={t} r={bucket}"))
     }
 }
 
 /// Scale-free RMSNorm over each of `t` rows of width `d` (host-side; the
 /// coordinator needs the values for scoring anyway).
 pub fn rmsnorm(x: &[f32], t: usize, d: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; t * d];
+    let mut out = Vec::new();
+    rmsnorm_into(x, t, d, &mut out);
+    out
+}
+
+/// Allocation-free [`rmsnorm`]: clears and refills `out`.
+pub fn rmsnorm_into(x: &[f32], t: usize, d: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(t * d, 0.0);
     for ti in 0..t {
         let row = &x[ti * d..(ti + 1) * d];
         let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
@@ -975,21 +1291,27 @@ pub fn rmsnorm(x: &[f32], t: usize, d: usize) -> Vec<f32> {
             *o = (v as f64 * inv) as f32;
         }
     }
-    out
 }
 
 /// Mean |activation| per column over `t` tokens (§B.2's multi-token
 /// importance).
 pub fn col_importance(x: &[f32], t: usize, d: usize) -> Vec<f32> {
-    let mut imp = vec![0.0f32; d];
+    let mut imp = Vec::new();
+    col_importance_into(x, t, d, &mut imp);
+    imp
+}
+
+/// Allocation-free [`col_importance`]: clears and refills `out`.
+pub fn col_importance_into(x: &[f32], t: usize, d: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(d, 0.0);
     for ti in 0..t {
         for j in 0..d {
-            imp[j] += x[ti * d + j].abs();
+            out[j] += x[ti * d + j].abs();
         }
     }
     let inv = 1.0 / t as f32;
-    imp.iter_mut().for_each(|v| *v *= inv);
-    imp
+    out.iter_mut().for_each(|v| *v *= inv);
 }
 
 fn full_mask(n: usize) -> SelectionMask {
@@ -1246,5 +1568,36 @@ mod tests {
             sr.io,
             sp.io
         );
+    }
+
+    #[test]
+    fn engine_handles_are_cloneable_and_sync() {
+        fn assert_sync_send<T: Sync + Send>() {}
+        assert_sync_send::<Engine>();
+        assert_sync_send::<Session>();
+        let e = build(Policy::TopK, 0.3);
+        let e2 = e.clone();
+        let f = frame(&e.spec(), 0);
+        // Sessions opened from different handles share the same core.
+        let a = e.new_session().append_frame(&f).unwrap().0;
+        let b = e2.new_session().append_frame(&f).unwrap().0;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_api() {
+        let e = build(Policy::TopK, 0.4);
+        let f = frame(&e.spec(), 2);
+        let s1 = e.new_session();
+        let s2 = e.new_session();
+        let (y, _) = s1.append_frame(&f).unwrap();
+        let mut y2 = Vec::new();
+        s2.append_frame_into(&f, &mut y2).unwrap();
+        assert_eq!(y, y2);
+        let token = vec![0.07f32; e.spec().d];
+        let (dy, _) = s1.decode_step(&token).unwrap();
+        let mut dy2 = Vec::new();
+        s2.decode_step_into(&token, &mut dy2).unwrap();
+        assert_eq!(dy, dy2);
     }
 }

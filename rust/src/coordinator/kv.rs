@@ -67,7 +67,14 @@ impl KvCache {
         }
     }
 
-    /// Export as (k, v, mask) tensors for the XLA artifacts.
+    /// Borrow the (k, v, mask) planes without copying — the serving path
+    /// hands these to the executor as [`crate::runtime::TensorView`]s.
+    pub fn views(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.k, &self.v, &self.mask)
+    }
+
+    /// Export as (k, v, mask) tensors for the XLA artifacts (allocating;
+    /// calibration/test convenience — serving uses [`KvCache::views`]).
     pub fn tensors(&self) -> (Tensor, Tensor, Tensor) {
         (
             Tensor::new(vec![self.capacity, self.dim], self.k.clone()),

@@ -23,12 +23,29 @@ impl Metrics {
     }
 
     pub fn add(&mut self, stage: &str, d: Duration) {
-        *self.totals.entry(stage.to_string()).or_default() += d;
-        *self.counts.entry(stage.to_string()).or_default() += 1;
+        // Probe-then-insert: the stage key is only allocated the first
+        // time it is seen, keeping steady-state serving allocation-free.
+        match self.totals.get_mut(stage) {
+            Some(t) => *t += d,
+            None => {
+                self.totals.insert(stage.to_string(), d);
+            }
+        }
+        match self.counts.get_mut(stage) {
+            Some(c) => *c += 1,
+            None => {
+                self.counts.insert(stage.to_string(), 1);
+            }
+        }
     }
 
     pub fn add_bytes(&mut self, stage: &str, n: u64) {
-        *self.bytes.entry(stage.to_string()).or_default() += n;
+        match self.bytes.get_mut(stage) {
+            Some(b) => *b += n,
+            None => {
+                self.bytes.insert(stage.to_string(), n);
+            }
+        }
     }
 
     pub fn total(&self, stage: &str) -> Duration {
@@ -88,6 +105,13 @@ impl StageTimer {
         let d = self.start.elapsed();
         metrics.add(stage, d);
         d
+    }
+
+    /// Elapsed time without metrics accounting — for callers that batch
+    /// their fold into shared metrics (one lock per request instead of
+    /// one per stage).
+    pub fn finish(self) -> Duration {
+        self.start.elapsed()
     }
 }
 

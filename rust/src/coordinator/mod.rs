@@ -3,13 +3,16 @@
 //! [`Engine`] (built via [`EngineBuilder`]) drives the per-matrix
 //! sparsification pipeline of §3: score activations → (permute) → select
 //! chunks → plan the group's flash reads → submit one cross-matrix command
-//! batch → gather/pad to a budget bucket → execute. Serving state lives in
-//! per-stream [`Session`] handles (KV caches + next-layer prefetch).
+//! batch → gather/pad to a budget bucket → execute. The engine core is
+//! `Sync` (read-mostly state behind `Arc<RwLock>`); serving state lives
+//! in per-stream [`Session`] handles (KV caches, next-layer prefetch, and
+//! a scratch arena that makes the steady-state path allocation-free).
 //! [`Scheduler`] runs multi-stream frame-append/decode traffic over one
-//! engine with priority batching. [`HotNeuronCache`] implements the §5
-//! memory-budget extension (cached rows get zero importance and skip
-//! flash).
+//! engine with priority batching across a configurable worker pool.
+//! [`HotNeuronCache`] implements the §5 memory-budget extension (cached
+//! rows get zero importance and skip flash).
 
+mod arena;
 mod engine;
 mod kv;
 mod metrics;

@@ -1,13 +1,17 @@
 //! Request scheduler: multi-stream frame-append/decode traffic over one
-//! engine (one flash device = one execution lane, the edge reality).
+//! engine, served by a configurable worker pool.
 //!
 //! Decode steps are latency-critical (a user is waiting on tokens) and
 //! preempt queued frame appends — the standard serving-priority split.
-//! The engine is constructed *inside* the worker thread (engine cores are
-//! thread-confined); each stream index lazily gets its own [`Session`],
-//! and callers talk through channels.
+//! The engine core is `Sync`, so all workers share one [`Engine`] handle;
+//! each stream index lazily gets its own [`Session`], and callers talk
+//! through channels. With `workers > 1`, independent streams decode
+//! genuinely in parallel over the same flash device and weight store,
+//! while a per-stream in-flight guard keeps each stream's requests in
+//! submission order (within each priority class) no matter which worker
+//! picks them up.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -60,13 +64,25 @@ pub struct SchedulerConfig {
     /// Maximum distinct stream indices (sessions are created lazily up to
     /// this bound; requests beyond it are rejected at submit).
     pub max_streams: usize,
+    /// Worker threads draining the queues. 1 preserves strict serial
+    /// execution; more lets independent streams run concurrently over the
+    /// shared engine core.
+    pub workers: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
+        // NC_SCHED_WORKERS lets CI (and operators) exercise the
+        // concurrent path without touching call sites.
+        let workers = std::env::var("NC_SCHED_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1);
         Self {
             max_queue: 256,
             max_streams: 64,
+            workers,
         }
     }
 }
@@ -81,6 +97,11 @@ struct Job {
 struct Queues {
     decode: VecDeque<Job>,
     append: VecDeque<Job>,
+    /// Streams with a request currently executing on some worker. A
+    /// stream's queued requests wait for its in-flight one, so
+    /// per-stream submission order is preserved even with many workers
+    /// (the session mutex alone would serialize but not order).
+    busy: HashSet<usize>,
     stopping: bool,
 }
 
@@ -90,21 +111,32 @@ impl Queues {
     }
 }
 
+/// Pop the oldest job whose stream is not currently in flight, keeping
+/// the relative order of everything left behind.
+fn pop_ready(queue: &mut VecDeque<Job>, busy: &HashSet<usize>) -> Option<Job> {
+    let idx = queue
+        .iter()
+        .position(|j| !busy.contains(&j.request.stream))?;
+    queue.remove(idx)
+}
+
 struct Shared {
     queues: Mutex<Queues>,
     cv: Condvar,
+    /// Lazily-created per-stream sessions, shared by all workers.
+    sessions: Mutex<Vec<Option<Arc<Session>>>>,
 }
 
-/// Thread-backed scheduler around an [`Engine`].
+/// Thread-pool-backed scheduler around an [`Engine`].
 pub struct Scheduler {
     shared: Arc<Shared>,
     cfg: SchedulerConfig,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Scheduler {
-    /// Spawn the worker; `make_engine` runs on the worker thread (engine
-    /// state is thread-confined).
+    /// Build the engine (on the calling thread) and spawn the worker
+    /// pool; every worker shares the engine through cheap handle clones.
     pub fn spawn<F>(cfg: SchedulerConfig, make_engine: F) -> Self
     where
         F: FnOnce() -> Engine + Send + 'static,
@@ -112,59 +144,20 @@ impl Scheduler {
         let shared = Arc::new(Shared {
             queues: Mutex::new(Queues::default()),
             cv: Condvar::new(),
+            sessions: Mutex::new(Vec::new()),
         });
-        let worker_shared = shared.clone();
-        let worker = std::thread::spawn(move || {
-            let engine = make_engine();
-            let mut sessions: Vec<Session> = Vec::new();
-            loop {
-                let job = {
-                    let mut q = worker_shared.queues.lock().unwrap();
-                    loop {
-                        // Priority: decode before append.
-                        if let Some(j) = q.decode.pop_front() {
-                            break Some(j);
-                        }
-                        if let Some(j) = q.append.pop_front() {
-                            break Some(j);
-                        }
-                        if q.stopping {
-                            break None;
-                        }
-                        q = worker_shared.cv.wait(q).unwrap();
-                    }
-                };
-                let Some(job) = job else { return };
-                let queue_wait = job.enqueued.elapsed();
-                while sessions.len() <= job.request.stream {
-                    sessions.push(engine.new_session());
-                }
-                let session = &sessions[job.request.stream];
-                let t0 = Instant::now();
-                let (output, stats) = match &job.request.kind {
-                    RequestKind::AppendFrame(f) => match session.append_frame(f) {
-                        Ok((y, s)) => (Ok(y), s),
-                        Err(e) => (Err(e.to_string()), StageStats::default()),
-                    },
-                    RequestKind::Decode(tok) => match session.decode_step(tok) {
-                        Ok((y, s)) => (Ok(y), s),
-                        Err(e) => (Err(e.to_string()), StageStats::default()),
-                    },
-                };
-                let _ = job.done.send(Completion {
-                    stream: job.request.stream,
-                    kind: job.request.kind.name(),
-                    output,
-                    stats,
-                    queue_wait,
-                    exec_wall: t0.elapsed(),
-                });
-            }
-        });
+        let engine = make_engine();
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let shared = shared.clone();
+                let engine = engine.clone();
+                std::thread::spawn(move || worker_loop(shared, engine))
+            })
+            .collect();
         Self {
             shared,
             cfg,
-            worker: Some(worker),
+            workers,
         }
     }
 
@@ -205,10 +198,15 @@ impl Scheduler {
         self.shared.queues.lock().unwrap().len()
     }
 
-    /// Drain queued work and stop the worker.
+    /// Number of worker threads serving the queues.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Drain queued work and stop the workers.
     pub fn shutdown(mut self) {
         self.stop_inner();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -222,9 +220,72 @@ impl Scheduler {
 impl Drop for Scheduler {
     fn drop(&mut self) {
         self.stop_inner();
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, engine: Engine) {
+    loop {
+        let job = {
+            let mut guard = shared.queues.lock().unwrap();
+            let job = loop {
+                // Priority: decode before append; streams with an
+                // in-flight request are skipped so per-stream order holds.
+                let q = &mut *guard;
+                if let Some(j) = pop_ready(&mut q.decode, &q.busy) {
+                    break Some(j);
+                }
+                if let Some(j) = pop_ready(&mut q.append, &q.busy) {
+                    break Some(j);
+                }
+                if q.stopping {
+                    break None;
+                }
+                guard = shared.cv.wait(guard).unwrap();
+            };
+            if let Some(job) = &job {
+                guard.busy.insert(job.request.stream);
+            }
+            job
+        };
+        let Some(job) = job else { return };
+        let queue_wait = job.enqueued.elapsed();
+        let session = {
+            let mut slots = shared.sessions.lock().unwrap();
+            if slots.len() <= job.request.stream {
+                slots.resize_with(job.request.stream + 1, || None);
+            }
+            slots[job.request.stream]
+                .get_or_insert_with(|| Arc::new(engine.new_session()))
+                .clone()
+        };
+        let t0 = Instant::now();
+        let (output, stats) = match &job.request.kind {
+            RequestKind::AppendFrame(f) => match session.append_frame(f) {
+                Ok((y, s)) => (Ok(y), s),
+                Err(e) => (Err(e.to_string()), StageStats::default()),
+            },
+            RequestKind::Decode(tok) => match session.decode_step(tok) {
+                Ok((y, s)) => (Ok(y), s),
+                Err(e) => (Err(e.to_string()), StageStats::default()),
+            },
+        };
+        let stream = job.request.stream;
+        let _ = job.done.send(Completion {
+            stream,
+            kind: job.request.kind.name(),
+            output,
+            stats,
+            queue_wait,
+            exec_wall: t0.elapsed(),
+        });
+        // Release the stream; any worker may now serve its next queued
+        // request (notify_all: the waiter isn't necessarily the one the
+        // submit-side notify_one woke).
+        shared.queues.lock().unwrap().busy.remove(&stream);
+        shared.cv.notify_all();
     }
 }
 
@@ -237,8 +298,17 @@ mod tests {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    fn spawn_tiny() -> Scheduler {
-        Scheduler::spawn(SchedulerConfig::default(), move || {
+    /// Single-worker config regardless of NC_SCHED_WORKERS: these tests
+    /// assert strict serial-execution properties.
+    fn serial_cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            workers: 1,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    fn spawn_tiny_cfg(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler::spawn(cfg, move || {
             Engine::builder("tiny")
                 .policy(Policy::TopK)
                 .sparsity(0.3)
@@ -246,6 +316,10 @@ mod tests {
                 .build()
                 .unwrap()
         })
+    }
+
+    fn spawn_tiny() -> Scheduler {
+        spawn_tiny_cfg(SchedulerConfig::default())
     }
 
     fn tiny_frame() -> Vec<f32> {
@@ -279,7 +353,7 @@ mod tests {
 
     #[test]
     fn decode_preempts_queued_appends() {
-        let s = spawn_tiny();
+        let s = spawn_tiny_cfg(serial_cfg());
         // Prime stream 0 so decode is legal (decode preempts *everything*,
         // including a not-yet-started priming append, so wait for it).
         let first = s
@@ -325,7 +399,8 @@ mod tests {
         let s = Scheduler::spawn(
             SchedulerConfig {
                 max_queue: 2,
-                ..Default::default()
+                workers: 1,
+                ..SchedulerConfig::default()
             },
             || {
                 Engine::builder("tiny")
@@ -334,7 +409,7 @@ mod tests {
                     .unwrap()
             },
         );
-        // Saturate: worker takes the first, queue holds two more.
+        // Saturate: the worker takes the first, queue holds two more.
         let mut rxs = Vec::new();
         let mut rejected = false;
         for _ in 0..8 {
@@ -376,7 +451,7 @@ mod tests {
         let s = Scheduler::spawn(
             SchedulerConfig {
                 max_streams: 2,
-                ..Default::default()
+                ..SchedulerConfig::default()
             },
             || {
                 Engine::builder("tiny")
@@ -392,5 +467,98 @@ mod tests {
             })
             .is_err());
         s.shutdown();
+    }
+
+    #[test]
+    fn same_stream_requests_stay_ordered_across_workers() {
+        // Pipelined appends on ONE stream with a 4-worker pool: the
+        // per-stream in-flight guard must keep them in submission order
+        // (KV state makes every output order-sensitive).
+        let s = spawn_tiny_cfg(SchedulerConfig {
+            workers: 4,
+            ..SchedulerConfig::default()
+        });
+        let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
+        let rxs: Vec<_> = (0..4)
+            .map(|f| {
+                s.submit(Request {
+                    stream: 0,
+                    kind: RequestKind::AppendFrame(trace.frame(f)),
+                })
+                .unwrap()
+            })
+            .collect();
+        let outs: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().output.unwrap())
+            .collect();
+        s.shutdown();
+        let reference = Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.3)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap();
+        let session = reference.new_session();
+        for (f, out) in outs.iter().enumerate() {
+            let (want, _) = session.append_frame(&trace.frame(f)).unwrap();
+            assert_eq!(out, &want, "frame {f} executed out of order");
+        }
+    }
+
+    #[test]
+    fn worker_pool_serves_streams_concurrently_and_correctly() {
+        // 4 workers, 4 streams: per-stream outputs must match a serial
+        // single-session reference exactly (stream isolation under
+        // concurrency), and every request must complete.
+        let cfg = SchedulerConfig {
+            workers: 4,
+            ..SchedulerConfig::default()
+        };
+        let s = spawn_tiny_cfg(cfg);
+        assert_eq!(s.workers(), 4);
+        let frames: Vec<Vec<f32>> = (0..4)
+            .map(|i| crate::workload::FrameTrace::new(64, 8, 8, 3).frame(i))
+            .collect();
+        let rxs: Vec<_> = (0..4)
+            .map(|stream| {
+                s.submit(Request {
+                    stream,
+                    kind: RequestKind::AppendFrame(frames[stream].clone()),
+                })
+                .unwrap()
+            })
+            .collect();
+        let outs: Vec<Vec<f32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().output.unwrap())
+            .collect();
+        // Decodes on every stream, concurrently.
+        let drxs: Vec<_> = (0..4)
+            .map(|stream| {
+                s.submit(Request {
+                    stream,
+                    kind: RequestKind::Decode(vec![0.02; 64]),
+                })
+                .unwrap()
+            })
+            .collect();
+        for rx in drxs {
+            rx.recv().unwrap().output.unwrap();
+        }
+        s.shutdown();
+        // Reference: an identically-built engine, one serial session per
+        // stream (deterministic weights per seed ⇒ identical outputs).
+        let reference = Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.3)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap();
+        for (stream, out) in outs.iter().enumerate() {
+            let session = reference.new_session();
+            let (want, _) = session.append_frame(&frames[stream]).unwrap();
+            assert_eq!(out, &want, "stream {stream} diverged under concurrency");
+        }
     }
 }

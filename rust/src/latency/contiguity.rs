@@ -29,6 +29,15 @@ impl Chunk {
 /// Extract maximal contiguous runs from a boolean selection mask.
 pub fn chunks_from_mask(mask: &[bool]) -> Vec<Chunk> {
     let mut chunks = Vec::new();
+    chunks_from_mask_into(mask, &mut chunks);
+    chunks
+}
+
+/// Allocation-free variant of [`chunks_from_mask`]: clears `out` and
+/// refills it, reusing its capacity (the serving hot path runs this per
+/// matrix per token).
+pub fn chunks_from_mask_into(mask: &[bool], out: &mut Vec<Chunk>) {
+    out.clear();
     let mut i = 0;
     while i < mask.len() {
         if mask[i] {
@@ -36,12 +45,11 @@ pub fn chunks_from_mask(mask: &[bool]) -> Vec<Chunk> {
             while i < mask.len() && mask[i] {
                 i += 1;
             }
-            chunks.push(Chunk::new(start, i - start));
+            out.push(Chunk::new(start, i - start));
         } else {
             i += 1;
         }
     }
-    chunks
 }
 
 /// Frequency distribution of chunk sizes — the paper's compact

@@ -9,5 +9,5 @@
 mod contiguity;
 mod table;
 
-pub use contiguity::{chunks_from_mask, Chunk, ContiguityDistribution};
+pub use contiguity::{chunks_from_mask, chunks_from_mask_into, Chunk, ContiguityDistribution};
 pub use table::LatencyTable;

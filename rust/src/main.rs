@@ -34,6 +34,9 @@ fn main() {
                  \x20 repro serve   [--model small] [--policy POLICY] [--sparsity 0.5]\n\
                  \x20               [--device nano|agx] [--frames 8] [--decode 4]\n\
                  \x20               [--reorder] [--no-prefetch] [--artifacts DIR]\n\
+                 \x20               [--threads N]  executor kernel worker threads\n\
+                 \x20                              (default 1; outputs are bit-identical\n\
+                 \x20                              at every thread count)\n\
                  \x20               POLICY: dense | topk | threshold[:t] |\n\
                  \x20                       chunking[:min_kb,jump_kb,max_kb] | bundling[:rows]\n\
                  \x20 repro profile [--device nano|agx|macbook] [--file PATH] [--out PATH]\n\
@@ -69,6 +72,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     let decode_steps: usize = flag(args, "--decode")
         .and_then(|s| s.parse().ok())
         .unwrap_or(4);
+    let threads: usize = flag(args, "--threads")
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1);
     let artifacts = PathBuf::from(flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
 
     let profile = match DeviceProfile::by_name(&device) {
@@ -90,13 +97,14 @@ fn cmd_serve(args: &[String]) -> i32 {
     };
 
     println!(
-        "serving model={model} policy={policy_name} sparsity={sparsity} device={device}"
+        "serving model={model} policy={policy_name} sparsity={sparsity} device={device} threads={threads}"
     );
     let engine = match Engine::builder(&model)
         .policy(policy)
         .sparsity(sparsity)
         .profile(profile)
         .prefetch(!has_flag(args, "--no-prefetch"))
+        .exec_threads(threads)
         .artifacts(&artifacts)
         .build()
     {

@@ -222,10 +222,15 @@ impl ModelSpec {
     }
 
     pub fn shape_of(&self, kind: MatrixKind) -> MatrixShape {
-        self.matrices()
-            .into_iter()
-            .find(|m| m.kind == kind)
-            .unwrap()
+        // Allocation-free (the serving path queries shapes per stage).
+        let (rows, cols) = match kind {
+            MatrixKind::Q => (self.d, self.d),
+            MatrixKind::K | MatrixKind::V => (self.d, self.kv),
+            MatrixKind::O => (self.d, self.d),
+            MatrixKind::Gate | MatrixKind::Up => (self.d, self.h),
+            MatrixKind::Down => (self.h, self.d),
+        };
+        MatrixShape { kind, rows, cols }
     }
 
     /// Selection groups: q→{q,k,v}, o→{o}, gate→{gate,up}, down→{down}.

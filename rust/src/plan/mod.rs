@@ -174,6 +174,23 @@ impl ReadPlan {
         self.segments.iter().map(|s| s.len() as u64).sum()
     }
 
+    /// Reset in place, reusing all buffer capacity (the serving hot path
+    /// replans into the same [`ReadPlan`] every token).
+    pub fn clear(&mut self) {
+        self.cmds.clear();
+        self.segments.clear();
+        self.batches.clear();
+        self.estimated_seconds = 0.0;
+    }
+
+    /// Pre-reserve capacity for worst-case command/segment counts so the
+    /// hot path never grows these vectors mid-serve.
+    pub fn reserve(&mut self, cmds: usize, segments: usize) {
+        self.cmds.reserve(cmds);
+        self.segments.reserve(segments);
+        self.batches.reserve(1);
+    }
+
     /// Structural invariants: commands sorted and disjoint, batches
     /// partition the command list, every segment inside its command.
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -211,7 +228,7 @@ impl ReadPlan {
 
 /// Receipt of a submitted plan: the raw command data plus the device's
 /// (virtual or wall-clock) service time.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct PlanReceipt {
     /// Concatenated command data, in command order.
     pub bytes: Vec<u8>,
@@ -221,9 +238,27 @@ pub struct PlanReceipt {
     pub cmd_offsets: Vec<usize>,
 }
 
+impl PlanReceipt {
+    /// Reset in place, reusing buffer capacity.
+    pub fn clear(&mut self) {
+        self.bytes.clear();
+        self.cmd_offsets.clear();
+        self.service = Duration::ZERO;
+    }
+
+    /// Pre-reserve worst-case payload/command capacity.
+    pub fn reserve(&mut self, bytes: usize, cmds: usize) {
+        self.bytes.reserve(bytes);
+        self.cmd_offsets.reserve(cmds);
+    }
+}
+
 /// A plan together with its receipt: supports exact row addressing, which
-/// the engine's gather path and prefetch buffer build on.
-#[derive(Clone, Debug)]
+/// the engine's gather path and prefetch buffer build on. A
+/// default-constructed (or [`PlannedRead::clear`]ed) value is "empty" —
+/// it covers no rows and the engine's pooled prefetch slots use that
+/// state to mean "nothing prefetched".
+#[derive(Clone, Debug, Default)]
 pub struct PlannedRead {
     pub plan: ReadPlan,
     pub receipt: PlanReceipt,
@@ -232,6 +267,24 @@ pub struct PlannedRead {
 impl PlannedRead {
     pub fn service(&self) -> Duration {
         self.receipt.service
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Reset in place, reusing all buffer capacity (pooled prefetch slots
+    /// and the per-stage fresh-read slot cycle through this).
+    pub fn clear(&mut self) {
+        self.plan.clear();
+        self.receipt.clear();
+    }
+
+    /// Pre-reserve worst-case capacity (bytes of payload, command and
+    /// segment counts) so pooled reads never grow mid-serve.
+    pub fn reserve(&mut self, bytes: usize, cmds: usize, segments: usize) {
+        self.plan.reserve(cmds, segments);
+        self.receipt.reserve(bytes, cmds);
     }
 
     /// Raw bytes of one payload segment.
@@ -265,28 +318,24 @@ impl PlannedRead {
 /// Monotone row-wise cursor over one matrix's segments of a
 /// [`PlannedRead`] — the merge-scan partner of an ascending row walk
 /// (rows must be queried in non-decreasing order).
+///
+/// Allocation-free: the planner emits segments sorted by flash offset,
+/// and within one matrix flash offset is monotone in row index, so this
+/// matrix's segments appear in ascending `chunk.start` order inside the
+/// plan's segment list. The cursor simply scans that list, skipping other
+/// matrices' segments.
 pub struct RowCursor<'a> {
     read: &'a PlannedRead,
-    /// Indices of this matrix's segments, sorted by chunk start.
-    segs: Vec<usize>,
+    id: MatrixId,
     pos: usize,
     last_row: usize,
 }
 
 impl<'a> RowCursor<'a> {
     pub fn new(read: &'a PlannedRead, id: MatrixId) -> Self {
-        let mut segs: Vec<usize> = read
-            .plan
-            .segments
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.id == id)
-            .map(|(i, _)| i)
-            .collect();
-        segs.sort_by_key(|&i| read.plan.segments[i].chunk.start);
         Self {
             read,
-            segs,
+            id,
             pos: 0,
             last_row: 0,
         }
@@ -299,20 +348,45 @@ impl<'a> RowCursor<'a> {
             self.pos = 0;
         }
         self.last_row = row;
-        while self.pos < self.segs.len() {
-            let seg = &self.read.plan.segments[self.segs[self.pos]];
-            if seg.chunk.end() <= row {
+        let segs = &self.read.plan.segments;
+        while self.pos < segs.len() {
+            let seg = &segs[self.pos];
+            if seg.id != self.id || seg.chunk.end() <= row {
                 self.pos += 1;
                 continue;
             }
             if seg.chunk.start <= row {
-                let bytes = self.read.segment_bytes(self.segs[self.pos]);
+                let bytes = self.read.segment_bytes(self.pos);
                 let off = (row - seg.chunk.start) * seg.row_bytes;
                 return Some(&bytes[off..off + seg.row_bytes]);
             }
             return None;
         }
         None
+    }
+}
+
+/// Raw per-chunk span prior to coalescing (planner working memory).
+#[derive(Clone, Copy, Debug)]
+struct RawSpan {
+    offset: u64,
+    len: usize,
+    id: MatrixId,
+    chunk: Chunk,
+    row_bytes: usize,
+}
+
+/// Reusable planner working memory for the allocation-free
+/// [`IoPlanner::plan_refs_into`] entry point.
+#[derive(Clone, Debug, Default)]
+pub struct PlanScratch {
+    raw: Vec<RawSpan>,
+}
+
+impl PlanScratch {
+    /// Pre-reserve worst-case span capacity.
+    pub fn reserve(&mut self, spans: usize) {
+        self.raw.reserve(spans);
     }
 }
 
@@ -335,31 +409,51 @@ impl IoPlanner {
         requests: &[PlanRequest],
         table: Option<&LatencyTable>,
     ) -> ReadPlan {
-        // Raw (offset, len, id, chunk, row_bytes) spans, one per chunk.
-        struct Raw {
-            offset: u64,
-            len: usize,
-            id: MatrixId,
-            chunk: Chunk,
-            row_bytes: usize,
-        }
-        let mut raw: Vec<Raw> = Vec::new();
-        for req in requests {
-            let row_bytes = layout.row_bytes(req.id);
-            for &chunk in &req.chunks {
+        let refs: Vec<(MatrixId, &[Chunk])> = requests
+            .iter()
+            .map(|r| (r.id, r.chunks.as_slice()))
+            .collect();
+        let mut scratch = PlanScratch::default();
+        let mut out = ReadPlan::default();
+        self.plan_refs_into(layout, &refs, table, &mut scratch, &mut out);
+        out
+    }
+
+    /// Allocation-free planning over borrowed chunk demands: clears `out`
+    /// and rebuilds it in place, drawing working memory from `scratch`.
+    /// Several requests may borrow the same chunk list (the engine's
+    /// selection groups do — every member matrix shares the group's
+    /// residual demand).
+    pub fn plan_refs_into(
+        &self,
+        layout: &FlashLayout,
+        requests: &[(MatrixId, &[Chunk])],
+        table: Option<&LatencyTable>,
+        scratch: &mut PlanScratch,
+        out: &mut ReadPlan,
+    ) {
+        out.clear();
+        let raw = &mut scratch.raw;
+        raw.clear();
+        for &(id, chunks) in requests {
+            let row_bytes = layout.row_bytes(id);
+            for &chunk in chunks {
                 if chunk.len == 0 {
                     continue;
                 }
-                raw.push(Raw {
-                    offset: layout.row_offset(req.id, chunk.start),
+                raw.push(RawSpan {
+                    offset: layout.row_offset(id, chunk.start),
                     len: chunk.len * row_bytes,
-                    id: req.id,
+                    id,
                     chunk,
                     row_bytes,
                 });
             }
         }
-        raw.sort_by_key(|r| r.offset);
+        // Unstable sort: span offsets are unique (regions are disjoint and
+        // chunks within a request don't overlap), and it avoids the stable
+        // sort's temporary allocation.
+        raw.sort_unstable_by_key(|r| r.offset);
 
         let page = self.policy.page_bytes as u64;
         let total = layout.total_bytes();
@@ -372,9 +466,9 @@ impl IoPlanner {
             }
         };
 
-        let mut cmds: Vec<Extent> = Vec::new();
-        let mut segments: Vec<PlanSegment> = Vec::new();
-        for r in &raw {
+        let cmds = &mut out.cmds;
+        let segments = &mut out.segments;
+        for r in raw.iter() {
             let lo = align_lo(r.offset);
             let hi = align_hi(r.offset + r.len as u64);
             let extend = self.policy.merge_adjacent
@@ -399,31 +493,22 @@ impl IoPlanner {
             });
         }
 
-        let batches = if cmds.is_empty() {
-            Vec::new()
-        } else if self.policy.max_batch == 0 {
-            vec![(0, cmds.len())]
-        } else {
-            let mut b = Vec::new();
-            let mut at = 0;
-            while at < cmds.len() {
-                let end = (at + self.policy.max_batch).min(cmds.len());
-                b.push((at, end));
-                at = end;
+        if !cmds.is_empty() {
+            if self.policy.max_batch == 0 {
+                out.batches.push((0, cmds.len()));
+            } else {
+                let mut at = 0;
+                while at < cmds.len() {
+                    let end = (at + self.policy.max_batch).min(cmds.len());
+                    out.batches.push((at, end));
+                    at = end;
+                }
             }
-            b
-        };
-
-        let estimated_seconds = table
-            .map(|t| cmds.iter().map(|c| t.latency_bytes(c.len)).sum())
-            .unwrap_or(0.0);
-
-        ReadPlan {
-            cmds,
-            segments,
-            batches,
-            estimated_seconds,
         }
+
+        out.estimated_seconds = table
+            .map(|t| out.cmds.iter().map(|c| t.latency_bytes(c.len)).sum())
+            .unwrap_or(0.0);
     }
 
     /// Convenience: plan one matrix's chunks.

@@ -68,6 +68,14 @@ impl Permutation {
         self.fwd.iter().map(|&old| data[old as usize]).collect()
     }
 
+    /// Allocation-free [`Permutation::apply`]: clears `out` and refills it,
+    /// reusing its capacity.
+    pub fn apply_into<T: Copy>(&self, data: &[T], out: &mut Vec<T>) {
+        assert_eq!(data.len(), self.len());
+        out.clear();
+        out.extend(self.fwd.iter().map(|&old| data[old as usize]));
+    }
+
     /// Inverse reorder: `out[old_pos] = data[inv[old_pos]]`.
     pub fn apply_inv<T: Copy>(&self, data: &[T]) -> Vec<T> {
         assert_eq!(data.len(), self.len());

@@ -5,6 +5,20 @@
 //! manifest. f64 accumulation keeps dense outputs permutation-stable (the
 //! engine's reorder tests compare outputs across different summation
 //! orders at 1e-3 tolerance).
+//!
+//! ## Blocked, parallel, bit-stable kernels
+//!
+//! The inner loops are cache-blocked (column tiles for matmul, heads for
+//! attention) and optionally fan out over `std::thread::scope` worker
+//! threads. Every output element's f64 reduction runs in a fixed order —
+//! ascending contraction index per output column, ascending slot per
+//! attention head — regardless of tiling or thread count, so outputs are
+//! **bit-identical** at any `threads` value and to the historical scalar
+//! executor (the determinism integration test pins this down).
+//!
+//! The [`ExecScratch`]/[`StageOutputs`] pair makes the steady-state
+//! execute path allocation-free: all temporaries and outputs live in
+//! caller-owned buffers that are resized once during warm-up.
 
 use std::collections::HashSet;
 use std::path::Path;
@@ -13,11 +27,26 @@ use std::sync::Mutex;
 use anyhow::{Context, Result};
 
 use crate::model::ModelSpec;
-use crate::runtime::{Manifest, Tensor};
+use crate::runtime::{Manifest, Tensor, TensorView};
 
 /// Large-negative mask value (not -inf: keeps softmax finite) — mirrors
 /// `ref.py::NEG_INF`.
 const NEG_INF: f64 = -1e9;
+
+/// Column-tile width of the blocked matmul: one tile's f64 accumulators
+/// for all token rows stay resident in L1.
+const MATMUL_TILE: usize = 64;
+
+/// Minimum multiply-accumulate count before a matmul fans out over
+/// threads (below this, `thread::scope` setup costs more than the work).
+const PAR_MIN_OPS: usize = 1 << 15;
+
+/// Minimum score-matrix volume (`t * slots * d`) before attention fans
+/// out over heads.
+const PAR_MIN_ATTN: usize = 1 << 14;
+
+/// Largest per-head dim the attention kernel's stack accumulator covers.
+const MAX_HEAD_DIM: usize = 128;
 
 /// Reference runtime with the same API as the PJRT backend.
 pub struct XlaRuntime {
@@ -71,13 +100,34 @@ impl XlaRuntime {
     }
 
     /// Execute an artifact with the given inputs; validates shapes against
-    /// the manifest.
+    /// the manifest. Allocating convenience wrapper over
+    /// [`XlaRuntime::execute_into`] (single-threaded).
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let views: Vec<TensorView> = inputs.iter().map(TensorView::from_tensor).collect();
+        let mut scratch = ExecScratch::default();
+        let mut outs = StageOutputs::default();
+        self.execute_into(name, &views, 1, &mut scratch, &mut outs)?;
+        Ok((0..outs.n)
+            .map(|i| Tensor::new(outs.dims[i].to_vec(), std::mem::take(&mut outs.out[i])))
+            .collect())
+    }
+
+    /// Execute an artifact over borrowed input views, writing outputs and
+    /// temporaries into caller-owned reusable buffers. `threads` bounds
+    /// the kernel worker count (1 = inline, no spawning); outputs are
+    /// bit-identical at every thread count.
+    pub fn execute_into(
+        &self,
+        name: &str,
+        inputs: &[TensorView],
+        threads: usize,
+        scratch: &mut ExecScratch,
+        outs: &mut StageOutputs,
+    ) -> Result<()> {
         let meta = self
             .manifest
             .artifact(name)
-            .with_context(|| format!("unknown artifact {name}"))?
-            .clone();
+            .with_context(|| format!("unknown artifact {name}"))?;
         anyhow::ensure!(
             inputs.len() == meta.inputs.len(),
             "{name}: expected {} inputs, got {}",
@@ -86,101 +136,284 @@ impl XlaRuntime {
         );
         for (i, (t, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
             anyhow::ensure!(
-                &t.dims == spec,
-                "{name}: input {i} shape {:?} != manifest {:?}",
+                t.matches(spec),
+                "{name}: input {i} shape {:?} (rank {}) != manifest {:?}",
                 t.dims,
+                t.rank,
                 spec
             );
         }
-        self.compiled.lock().unwrap().insert(name.to_string());
+        {
+            // Insert allocates the key only on the first execution;
+            // steady-state serving stays allocation-free.
+            let mut cache = self.compiled.lock().unwrap();
+            if !cache.contains(name) {
+                cache.insert(name.to_string());
+            }
+        }
         let model = self
             .manifest
             .model(&meta.model)
             .with_context(|| format!("{name}: unknown model {}", meta.model))?;
-        let out = match meta.kind.as_str() {
+        let threads = threads.max(1);
+        match meta.kind.as_str() {
             "qkv_append" | "qkv_decode" => {
-                let (xs, wq, wk, wv, kc, vc, mask) = (
+                let (xs, wq, wk, wv, kc, vc, kmask) = (
                     &inputs[0], &inputs[1], &inputs[2], &inputs[3], &inputs[4], &inputs[5],
                     &inputs[6],
                 );
                 let t = xs.dims[0];
+                let bucket = xs.dims[1];
                 let d = wq.dims[1];
                 let c = kc.dims[0];
-                let q = matmul(xs, wq);
-                let k = matmul(xs, wk);
-                let v = matmul(xs, wv);
+                // Q feeds attention only; K/V are stage outputs 1 and 2.
+                scratch.q.clear();
+                scratch.q.resize(t * d, 0.0);
+                matmul_into(xs.data, t, bucket, wq.data, d, &mut scratch.q, &mut scratch.acc, threads);
+                outs.out[1].clear();
+                outs.out[1].resize(t * d, 0.0);
+                matmul_into(xs.data, t, bucket, wk.data, d, &mut outs.out[1], &mut scratch.acc, threads);
+                outs.out[2].clear();
+                outs.out[2].resize(t * d, 0.0);
+                matmul_into(xs.data, t, bucket, wv.data, d, &mut outs.out[2], &mut scratch.acc, threads);
                 // keys/vals = concat(cache, new); mask = concat(mask, 1s).
-                let mut keys = kc.data.clone();
-                keys.extend_from_slice(&k.data);
-                let mut vals = vc.data.clone();
-                vals.extend_from_slice(&v.data);
-                let mut full_mask = mask.data.clone();
-                full_mask.extend(std::iter::repeat(1.0f32).take(t));
-                let attn = mha_attention(&q.data, &keys, &vals, &full_mask, t, c + t, d, model.nh);
-                vec![Tensor::new(vec![t, d], attn), k, v]
+                scratch.keys.clear();
+                scratch.keys.extend_from_slice(kc.data);
+                scratch.keys.extend_from_slice(&outs.out[1]);
+                scratch.vals.clear();
+                scratch.vals.extend_from_slice(vc.data);
+                scratch.vals.extend_from_slice(&outs.out[2]);
+                scratch.mask.clear();
+                scratch.mask.extend_from_slice(kmask.data);
+                scratch.mask.resize(c + t, 1.0);
+                outs.out[0].clear();
+                outs.out[0].resize(t * d, 0.0);
+                mha_attention_into(
+                    &scratch.q,
+                    &scratch.keys,
+                    &scratch.vals,
+                    &scratch.mask,
+                    t,
+                    c + t,
+                    d,
+                    model.nh,
+                    &mut scratch.scores,
+                    &mut outs.out[0],
+                    threads,
+                );
+                outs.dims[0] = [t, d];
+                outs.dims[1] = [t, d];
+                outs.dims[2] = [t, d];
+                outs.n = 3;
             }
             "gateup" | "gateup_dec" => {
-                let gate = matmul(&inputs[0], &inputs[1]);
-                let up = matmul(&inputs[0], &inputs[2]);
-                let act: Vec<f32> = gate
-                    .data
-                    .iter()
-                    .zip(&up.data)
-                    .map(|(&g, &u)| (silu(g as f64) * u as f64) as f32)
-                    .collect();
-                vec![Tensor::new(gate.dims, act)]
+                let (xs, wg, wu) = (&inputs[0], &inputs[1], &inputs[2]);
+                let t = xs.dims[0];
+                let bucket = xs.dims[1];
+                let h = wg.dims[1];
+                outs.out[0].clear();
+                outs.out[0].resize(t * h, 0.0);
+                matmul_into(xs.data, t, bucket, wg.data, h, &mut outs.out[0], &mut scratch.acc, threads);
+                scratch.tmp.clear();
+                scratch.tmp.resize(t * h, 0.0);
+                matmul_into(xs.data, t, bucket, wu.data, h, &mut scratch.tmp, &mut scratch.acc, threads);
+                swiglu_into(&mut outs.out[0], &scratch.tmp, threads);
+                outs.dims[0] = [t, h];
+                outs.n = 1;
             }
             "projres" | "projres_dec" => {
-                let y = matmul(&inputs[0], &inputs[1]);
-                let res = &inputs[2];
-                let out: Vec<f32> = y.data.iter().zip(&res.data).map(|(&a, &b)| a + b).collect();
-                vec![Tensor::new(res.dims.clone(), out)]
+                let (xs, w, res) = (&inputs[0], &inputs[1], &inputs[2]);
+                let t = xs.dims[0];
+                let bucket = xs.dims[1];
+                let d = w.dims[1];
+                outs.out[0].clear();
+                outs.out[0].resize(t * d, 0.0);
+                matmul_into(xs.data, t, bucket, w.data, d, &mut outs.out[0], &mut scratch.acc, threads);
+                for (o, &rv) in outs.out[0].iter_mut().zip(res.data) {
+                    *o += rv;
+                }
+                outs.dims[0] = [t, d];
+                outs.n = 1;
             }
             other => anyhow::bail!("{name}: unknown artifact kind {other}"),
-        };
+        }
         anyhow::ensure!(
-            out.len() == meta.outputs,
+            outs.n == meta.outputs,
             "{name}: produced {} outputs, manifest says {}",
-            out.len(),
+            outs.n,
             meta.outputs
         );
-        Ok(out)
+        Ok(())
     }
 }
 
-/// `a[t,r] @ b[r,n]` with f64 accumulation.
-fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    let (t, r) = (a.dims[0], a.dims[1]);
-    let (rb, n) = (b.dims[0], b.dims[1]);
-    assert_eq!(r, rb, "contraction mismatch {r} vs {rb}");
-    let mut out = vec![0.0f32; t * n];
-    for ti in 0..t {
-        let mut acc = vec![0.0f64; n];
-        let row = &a.data[ti * r..(ti + 1) * r];
-        for (kk, &av) in row.iter().enumerate() {
+/// Reusable executor working memory. All kernel temporaries live here so
+/// the steady-state execute path performs no heap allocations (buffers
+/// grow to their high-water mark during warm-up, then stabilize).
+#[derive(Clone, Debug, Default)]
+pub struct ExecScratch {
+    /// Blocked-matmul f64 accumulator (single-thread path).
+    acc: Vec<f64>,
+    /// Q projection (attention input).
+    q: Vec<f32>,
+    /// Concatenated cache + new keys.
+    keys: Vec<f32>,
+    /// Concatenated cache + new values.
+    vals: Vec<f32>,
+    /// Concatenated validity mask.
+    mask: Vec<f32>,
+    /// Per-head attention score rows (`nh * slots`).
+    scores: Vec<f64>,
+    /// Second matmul output (up-projection).
+    tmp: Vec<f32>,
+}
+
+/// Reusable stage outputs: up to three output buffers plus their shapes.
+#[derive(Clone, Debug, Default)]
+pub struct StageOutputs {
+    pub out: [Vec<f32>; 3],
+    pub dims: [[usize; 2]; 3],
+    /// Number of valid outputs for the last executed stage.
+    pub n: usize,
+}
+
+/// Raw pointer wrapper that is Send/Sync; used for disjoint-range writes
+/// from scoped worker threads (same pattern as `storage::real`).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// `out[t, n] = a[t, r] @ b[r, n]` with f64 accumulation, cache-blocked
+/// over [`MATMUL_TILE`]-wide column tiles and optionally parallel over
+/// tiles. Every output element's reduction runs over `k` ascending with
+/// the same zero-skip as the scalar reference executor, so results are
+/// bit-identical at any tile split or thread count.
+pub(crate) fn matmul_into(
+    a: &[f32],
+    t: usize,
+    r: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+    acc: &mut Vec<f64>,
+    threads: usize,
+) {
+    assert_eq!(a.len(), t * r, "matmul lhs shape");
+    assert_eq!(b.len(), r * n, "matmul rhs shape");
+    assert_eq!(out.len(), t * n, "matmul out shape");
+    if t == 0 || n == 0 {
+        return;
+    }
+    let tiles = n.div_ceil(MATMUL_TILE);
+    if threads <= 1 || tiles < 2 || t * r * n < PAR_MIN_OPS {
+        acc.clear();
+        acc.resize(t * MATMUL_TILE, 0.0);
+        let out_ptr = out.as_mut_ptr();
+        for tile in 0..tiles {
+            // Safety: single caller, in-bounds tile ranges of `out`.
+            unsafe { matmul_tile(a, t, r, b, n, tile, acc, out_ptr) };
+        }
+        return;
+    }
+    let workers = threads.min(tiles);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let ptr = out_ptr;
+            s.spawn(move || {
+                let mut acc = vec![0.0f64; t * MATMUL_TILE];
+                let mut tile = w;
+                while tile < tiles {
+                    // Safety: tiles are disjoint column ranges of `out`;
+                    // each thread writes only its own tiles and `out`
+                    // outlives the scope.
+                    unsafe { matmul_tile(a, t, r, b, n, tile, &mut acc, ptr.0) };
+                    tile += workers;
+                }
+            });
+        }
+    });
+}
+
+/// One column tile of the blocked matmul. `out` is written through a raw
+/// pointer so parallel callers can share the buffer across disjoint
+/// tiles.
+///
+/// Safety: the caller must guarantee `out` points to a live `[t, n]`
+/// buffer and that no other thread touches columns
+/// `[tile*MATMUL_TILE, (tile+1)*MATMUL_TILE)` concurrently.
+unsafe fn matmul_tile(
+    a: &[f32],
+    t: usize,
+    r: usize,
+    b: &[f32],
+    n: usize,
+    tile: usize,
+    acc: &mut [f64],
+    out: *mut f32,
+) {
+    let j0 = tile * MATMUL_TILE;
+    let j1 = (j0 + MATMUL_TILE).min(n);
+    let tw = j1 - j0;
+    let acc = &mut acc[..t * tw];
+    acc.fill(0.0);
+    for k in 0..r {
+        let brow = &b[k * n + j0..k * n + j1];
+        for ti in 0..t {
+            let av = a[ti * r + k];
             if av == 0.0 {
                 continue; // zero-padded budget rows contribute nothing
             }
-            let brow = &b.data[kk * n..(kk + 1) * n];
             let av = av as f64;
-            for (j, &bv) in brow.iter().enumerate() {
-                acc[j] += av * bv as f64;
+            let arow = &mut acc[ti * tw..(ti + 1) * tw];
+            for (o, &bv) in arow.iter_mut().zip(brow) {
+                *o += av * bv as f64;
             }
         }
-        for (o, &v) in out[ti * n..(ti + 1) * n].iter_mut().zip(&acc) {
-            *o = v as f32;
+    }
+    for ti in 0..t {
+        for e in 0..tw {
+            *out.add(ti * n + j0 + e) = acc[ti * tw + e] as f32;
         }
     }
-    Tensor::new(vec![t, n], out)
 }
 
 fn silu(x: f64) -> f64 {
     x / (1.0 + (-x).exp())
 }
 
+/// `gate[i] = silu(gate[i]) * up[i]` in f64, elementwise — optionally
+/// parallel over even splits (bit-identical: per-element math is
+/// independent of the split).
+fn swiglu_into(gate: &mut [f32], up: &[f32], threads: usize) {
+    assert_eq!(gate.len(), up.len(), "swiglu operand shapes");
+    let n = gate.len();
+    if threads <= 1 || n < 4096 {
+        for (g, &u) in gate.iter_mut().zip(up) {
+            *g = (silu(*g as f64) * u as f64) as f32;
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (gs, us) in gate.chunks_mut(chunk).zip(up.chunks(chunk)) {
+            s.spawn(move || {
+                for (g, &u) in gs.iter_mut().zip(us) {
+                    *g = (silu(*g as f64) * u as f64) as f32;
+                }
+            });
+        }
+    });
+}
+
 /// Multi-head attention of `t` query tokens over `s` key/value slots —
-/// mirror of `ref.py::mha_attention` (max-subtracted softmax).
-fn mha_attention(
+/// mirror of `ref.py::mha_attention` (max-subtracted softmax), blocked
+/// and optionally parallel over heads. Heads are fully independent and
+/// each head's math is identical at any thread count, so outputs are
+/// bit-identical to the serial executor.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mha_attention_into(
     q: &[f32],
     keys: &[f32],
     vals: &[f32],
@@ -189,47 +422,97 @@ fn mha_attention(
     s: usize,
     d: usize,
     nh: usize,
-) -> Vec<f32> {
+    scores: &mut Vec<f64>,
+    out: &mut [f32],
+    threads: usize,
+) {
     assert_eq!(d % nh, 0, "head split {d} % {nh}");
+    assert_eq!(out.len(), t * d, "attention out shape");
     let hd = d / nh;
-    let scale = 1.0 / (hd as f64).sqrt();
-    let mut out = vec![0.0f32; t * d];
-    let mut scores = vec![0.0f64; s];
-    for h in 0..nh {
-        let off = h * hd;
-        for ti in 0..t {
-            let qrow = &q[ti * d + off..ti * d + off + hd];
-            let mut max = f64::MIN;
-            for (j, sc) in scores.iter_mut().enumerate() {
-                let krow = &keys[j * d + off..j * d + off + hd];
-                let dot: f64 = qrow
-                    .iter()
-                    .zip(krow)
-                    .map(|(&a, &b)| a as f64 * b as f64)
-                    .sum();
-                let v = dot * scale + (1.0 - mask[j] as f64) * NEG_INF;
-                *sc = v;
-                max = max.max(v);
-            }
-            let mut denom = 0.0f64;
-            for sc in scores.iter_mut() {
-                *sc = (*sc - max).exp();
-                denom += *sc;
-            }
-            let mut acc = vec![0.0f64; hd];
-            for (j, &p) in scores.iter().enumerate() {
-                let vrow = &vals[j * d + off..j * d + off + hd];
-                let p = p / denom;
-                for (a, &v) in acc.iter_mut().zip(vrow) {
-                    *a += p * v as f64;
+    assert!(hd <= MAX_HEAD_DIM, "head dim {hd} exceeds {MAX_HEAD_DIM}");
+    scores.clear();
+    scores.resize(nh * s, 0.0);
+    if threads <= 1 || nh < 2 || t * s * d < PAR_MIN_ATTN {
+        let out_ptr = out.as_mut_ptr();
+        for (h, sc) in scores.chunks_mut(s).enumerate() {
+            // Safety: single caller, heads write disjoint columns.
+            unsafe { attn_head(q, keys, vals, mask, t, s, d, hd, h, sc, out_ptr) };
+        }
+        return;
+    }
+    let workers = threads.min(nh);
+    let per = nh.div_ceil(workers);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|sp| {
+        for (wi, block) in scores.chunks_mut(per * s).enumerate() {
+            let ptr = out_ptr;
+            sp.spawn(move || {
+                for (e, sc) in block.chunks_mut(s).enumerate() {
+                    let h = wi * per + e;
+                    // Safety: each head owns a disjoint column range of
+                    // `out`, which outlives the scope.
+                    unsafe { attn_head(q, keys, vals, mask, t, s, d, hd, h, sc, ptr.0) };
                 }
-            }
-            for (e, &v) in acc.iter().enumerate() {
-                out[ti * d + off + e] = v as f32;
+            });
+        }
+    });
+}
+
+/// One attention head (exact `ref.py` math, f64 throughout).
+///
+/// Safety: the caller must guarantee `out` points to a live `[t, d]`
+/// buffer and that no other thread touches head `h`'s columns
+/// `[h*hd, (h+1)*hd)` concurrently.
+#[allow(clippy::too_many_arguments)]
+unsafe fn attn_head(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    mask: &[f32],
+    t: usize,
+    s: usize,
+    d: usize,
+    hd: usize,
+    h: usize,
+    scores: &mut [f64],
+    out: *mut f32,
+) {
+    debug_assert_eq!(scores.len(), s);
+    let off = h * hd;
+    let scale = 1.0 / (hd as f64).sqrt();
+    let mut acc = [0.0f64; MAX_HEAD_DIM];
+    for ti in 0..t {
+        let qrow = &q[ti * d + off..ti * d + off + hd];
+        let mut max = f64::MIN;
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let krow = &keys[j * d + off..j * d + off + hd];
+            let dot: f64 = qrow
+                .iter()
+                .zip(krow)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            let v = dot * scale + (1.0 - mask[j] as f64) * NEG_INF;
+            *sc = v;
+            max = max.max(v);
+        }
+        let mut denom = 0.0f64;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - max).exp();
+            denom += *sc;
+        }
+        let accs = &mut acc[..hd];
+        accs.fill(0.0);
+        for (j, &p) in scores.iter().enumerate() {
+            let vrow = &vals[j * d + off..j * d + off + hd];
+            let p = p / denom;
+            for (a, &v) in accs.iter_mut().zip(vrow) {
+                *a += p * v as f64;
             }
         }
+        for (e, &v) in accs.iter().enumerate() {
+            *out.add(ti * d + off + e) = v as f32;
+        }
     }
-    out
 }
 
 // ------------------------------------------------- manifest synthesis

@@ -24,7 +24,7 @@ mod pjrt;
 pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
 
 #[cfg(not(feature = "pjrt"))]
-pub use exec::XlaRuntime;
+pub use exec::{ExecScratch, StageOutputs, XlaRuntime};
 #[cfg(feature = "pjrt")]
 pub use pjrt::XlaRuntime;
 
@@ -51,6 +51,51 @@ impl Tensor {
 
     pub fn rows(&self) -> usize {
         self.dims[0]
+    }
+}
+
+/// A borrowed tensor handed to the runtime: shape + data slice, no copy.
+/// This is how the engine feeds arena-staged activations and in-place
+/// weight buffers to the executor without cloning them into [`Tensor`]s.
+/// Rank is 1 or 2; rank-1 views keep the length in `dims[0]`.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorView<'a> {
+    pub dims: [usize; 2],
+    pub rank: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn mat(rows: usize, cols: usize, data: &'a [f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self {
+            dims: [rows, cols],
+            rank: 2,
+            data,
+        }
+    }
+
+    pub fn vec1(len: usize, data: &'a [f32]) -> Self {
+        assert_eq!(data.len(), len);
+        Self {
+            dims: [len, 0],
+            rank: 1,
+            data,
+        }
+    }
+
+    pub fn from_tensor(t: &'a Tensor) -> Self {
+        assert!(!t.dims.is_empty() && t.dims.len() <= 2, "views are rank 1/2");
+        if t.dims.len() == 2 {
+            Self::mat(t.dims[0], t.dims[1], &t.data)
+        } else {
+            Self::vec1(t.dims[0], &t.data)
+        }
+    }
+
+    /// Shape check against a manifest input spec.
+    pub fn matches(&self, spec: &[usize]) -> bool {
+        spec.len() == self.rank && spec.iter().zip(self.dims.iter()).all(|(a, b)| a == b)
     }
 }
 

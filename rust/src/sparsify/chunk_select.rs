@@ -11,12 +11,13 @@
 //! 3. **Greedy selection** — sort candidates by utility descending, take
 //!    non-overlapping chunks while the budget lasts.
 //!
-//! The paper sorts on GPU (80% of its runtime); here an unstable
-//! float-key sort on a `(score, start, len)` SoA plays that role and the
-//! 2 ms/matrix budget is enforced in benches (Fig 13 reproduction).
+//! The paper sorts on GPU (80% of its runtime); here a four-pass 8-bit
+//! LSD radix sort on bit-keyed `(score_bits, start, len)` tuples plays
+//! that role and the 2 ms/matrix budget is enforced in benches (Fig 13
+//! reproduction).
 
-use crate::latency::{Chunk, LatencyTable};
-use crate::sparsify::{SelectionMask, Selector};
+use crate::latency::LatencyTable;
+use crate::sparsify::{SelectScratch, SelectionMask, Selector};
 
 /// Hyperparameters of Algorithm 1, in KB like the paper's Appendix H.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -89,12 +90,32 @@ impl ChunkSelect {
         importance: &[f32],
         table: &LatencyTable,
     ) -> Vec<(f32, u32, u32)> {
+        let mut cumsum = Vec::new();
+        let mut keyed = Vec::new();
+        self.candidates_into(importance, table, &mut cumsum, &mut keyed);
+        keyed
+            .iter()
+            .map(|&(bits, i, r)| (f32::from_bits(bits), i, r))
+            .collect()
+    }
+
+    /// Allocation-free candidate generation, emitting radix-ready
+    /// `(score_bits, start, len)` tuples directly (scores are
+    /// non-negative, so IEEE-754 bit patterns order identically to the
+    /// float values — no intermediate float-keyed copy).
+    pub fn candidates_into(
+        &self,
+        importance: &[f32],
+        table: &LatencyTable,
+        cumsum: &mut Vec<f64>,
+        out: &mut Vec<(u32, u32, u32)>,
+    ) {
         let n = importance.len();
         let p = self.config.to_rows(table.row_bytes());
         let r_max = p.r_max.min(n);
 
         // Prefix sums for O(1) window benefit (Algorithm 1 line 2).
-        let mut cumsum = Vec::with_capacity(n + 1);
+        cumsum.clear();
         let mut acc = 0.0f64;
         cumsum.push(0.0);
         for &v in importance {
@@ -102,7 +123,7 @@ impl ChunkSelect {
             cumsum.push(acc);
         }
 
-        let mut cands: Vec<(f32, u32, u32)> = Vec::new();
+        out.clear();
         let mut r = p.r_min.min(r_max);
         while r <= r_max {
             let cost = table.latency_rows(r);
@@ -111,7 +132,7 @@ impl ChunkSelect {
             let mut i = 0usize;
             while i + r <= n {
                 let benefit = cumsum[i + r] - cumsum[i];
-                cands.push(((benefit * inv_cost) as f32, i as u32, r as u32));
+                out.push((((benefit * inv_cost) as f32).to_bits(), i as u32, r as u32));
                 i += stride;
             }
             // Always include the right-aligned window so trailing rows are
@@ -119,29 +140,32 @@ impl ChunkSelect {
             if n >= r && (n - r) % stride != 0 {
                 let i = n - r;
                 let benefit = cumsum[i + r] - cumsum[i];
-                cands.push(((benefit * inv_cost) as f32, i as u32, r as u32));
+                out.push((((benefit * inv_cost) as f32).to_bits(), i as u32, r as u32));
             }
             if r == r_max {
                 break;
             }
             r = (r + p.r_step).min(r_max);
         }
-        cands
     }
 }
 
-/// Descending stable LSD radix sort on the first tuple element (two
-/// 16-bit counting-sort passes) — the CPU analogue of the paper's GPU
+/// Descending stable LSD radix sort on the first tuple element (four
+/// 8-bit counting-sort passes) — the CPU analogue of the paper's GPU
 /// radix sort (Appendix H: >80% of selection runtime is this sort).
-fn radix_sort_desc(v: &mut Vec<(u32, u32, u32)>) {
+/// `scratch` is the double buffer; it is resized (not reallocated once
+/// warm) and left holding garbage.
+fn radix_sort_desc(v: &mut Vec<(u32, u32, u32)>, scratch: &mut Vec<(u32, u32, u32)>) {
     let n = v.len();
     if n < 64 {
         v.sort_unstable_by(|a, b| b.0.cmp(&a.0));
         return;
     }
-    let mut scratch: Vec<(u32, u32, u32)> = vec![(0, 0, 0); n];
+    scratch.clear();
+    scratch.resize(n, (0, 0, 0));
     // Four passes over 8-bit digits (256 counters live in L1, unlike a
     // 64 K-counter 16-bit variant which thrashes cache for n ~ 10^4..5).
+    // An even pass count leaves the sorted data back in `v`.
     for shift in [0u32, 8, 16, 24] {
         let mut counts = [0u32; 256];
         for item in v.iter() {
@@ -159,7 +183,7 @@ fn radix_sort_desc(v: &mut Vec<(u32, u32, u32)>) {
             scratch[counts[d] as usize] = *item;
             counts[d] += 1;
         }
-        std::mem::swap(v, &mut scratch);
+        std::mem::swap(v, scratch);
     }
 }
 
@@ -174,36 +198,48 @@ impl Selector for ChunkSelect {
         budget: usize,
         table: &LatencyTable,
     ) -> SelectionMask {
+        let mut scratch = SelectScratch::default();
+        let mut out = SelectionMask::default();
+        self.select_into(importance, budget, table, &mut scratch, &mut out);
+        out
+    }
+
+    fn select_into(
+        &self,
+        importance: &[f32],
+        budget: usize,
+        table: &LatencyTable,
+        scratch: &mut SelectScratch,
+        out: &mut SelectionMask,
+    ) {
         let n = importance.len();
         let budget = budget.min(n);
         if budget == 0 || n == 0 {
-            return SelectionMask::empty(n);
+            out.reset(n);
+            return;
         }
         if budget == n {
-            return SelectionMask::full(n);
+            out.set_full(n);
+            return;
         }
 
-        let mut cands = self.candidates(importance, table);
+        // Stage 1+2: bit-keyed candidates straight into the sort buffer.
+        self.candidates_into(importance, table, &mut scratch.cumsum, &mut scratch.cands);
         // Stage 3: sort by utility descending. The paper uses a
-        // data-independent GPU radix sort; we mirror it with a 2-pass LSD
-        // radix sort on the score's IEEE-754 bits (non-negative floats
-        // order identically to their bit patterns). O(n) vs O(n log n):
-        // ~6x faster than pdqsort on the 18944-row shape (§Perf log).
-        let mut keyed: Vec<(u32, u32, u32)> = cands
-            .iter()
-            .map(|&(s, i, r)| (s.to_bits(), i, r))
-            .collect();
-        radix_sort_desc(&mut keyed);
-        cands.clear();
+        // data-independent GPU radix sort; we mirror it with an LSD radix
+        // sort on the score's IEEE-754 bits (non-negative floats order
+        // identically to their bit patterns). O(n) vs O(n log n): ~6x
+        // faster than pdqsort on the 18944-row shape (§Perf log).
+        radix_sort_desc(&mut scratch.cands, &mut scratch.radix);
 
-        let mut mask = vec![false; n];
+        out.reset(n);
+        let mask = &mut out.mask;
         let mut selected = 0usize;
-        let mut chunks: Vec<Chunk> = Vec::new();
         // Once the remaining budget is below the smallest candidate size,
         // nothing further can be placed — break instead of scanning the
         // tail of the sorted list (§Perf: the tail scan dominated greedy).
         let min_len = self.config.to_rows(table.row_bytes()).r_min.min(n);
-        for &(_, start, len) in &keyed {
+        for &(_, start, len) in scratch.cands.iter() {
             if budget - selected < min_len {
                 break;
             }
@@ -216,20 +252,20 @@ impl Selector for ChunkSelect {
                 continue;
             }
             mask[start..start + len].iter_mut().for_each(|m| *m = true);
-            chunks.push(Chunk::new(start, len));
             selected += len;
             if selected >= budget {
                 break;
             }
         }
-        // Merge adjacent selected chunks into maximal runs for reporting.
-        SelectionMask::from_mask(mask)
+        // Merge adjacent selected runs into maximal chunks for reporting.
+        out.recompute_chunks();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::latency::Chunk;
     use crate::rng::Rng;
 
     /// Table with strong contiguity preference: 100us overhead + 1 GB/s,

@@ -23,10 +23,10 @@ pub use chunk_select::{ChunkSelect, ChunkSelectConfig};
 pub use threshold::Threshold;
 pub use topk::TopK;
 
-use crate::latency::{chunks_from_mask, Chunk, LatencyTable};
+use crate::latency::{chunks_from_mask, chunks_from_mask_into, Chunk, LatencyTable};
 
 /// Result of a selection: boolean mask + its maximal chunks.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SelectionMask {
     pub mask: Vec<bool>,
     pub chunks: Vec<Chunk>,
@@ -47,6 +47,28 @@ impl SelectionMask {
 
     pub fn full(n: usize) -> Self {
         Self::from_mask(vec![true; n])
+    }
+
+    /// Reset in place to an all-false mask of `n` rows, reusing capacity.
+    pub fn reset(&mut self, n: usize) {
+        self.mask.clear();
+        self.mask.resize(n, false);
+        self.chunks.clear();
+    }
+
+    /// Reset in place to an all-true mask of `n` rows, reusing capacity.
+    pub fn set_full(&mut self, n: usize) {
+        self.mask.clear();
+        self.mask.resize(n, true);
+        self.chunks.clear();
+        if n > 0 {
+            self.chunks.push(Chunk::new(0, n));
+        }
+    }
+
+    /// Recompute `chunks` from `mask` in place (after direct mask edits).
+    pub fn recompute_chunks(&mut self) {
+        chunks_from_mask_into(&self.mask, &mut self.chunks);
     }
 
     /// Number of selected rows.
@@ -87,6 +109,22 @@ impl SelectionMask {
     }
 }
 
+/// Reusable selection working memory. Selectors that implement
+/// [`Selector::select_into`] draw all their temporaries from here so the
+/// steady-state serving path performs no heap allocations (buffers grow to
+/// their high-water mark during warm-up, then stabilize).
+#[derive(Clone, Debug, Default)]
+pub struct SelectScratch {
+    /// Bit-keyed `(score_bits, start, len)` candidate tuples.
+    pub cands: Vec<(u32, u32, u32)>,
+    /// Radix-sort double buffer.
+    pub radix: Vec<(u32, u32, u32)>,
+    /// Importance prefix sums.
+    pub cumsum: Vec<f64>,
+    /// Row-index scratch (top-k partial selection).
+    pub idx: Vec<u32>,
+}
+
 /// A neuron-selection policy.
 ///
 /// `importance` is the per-row score (mean |activation| over tokens);
@@ -102,6 +140,22 @@ pub trait Selector: Send + Sync {
         budget: usize,
         table: &LatencyTable,
     ) -> SelectionMask;
+
+    /// Allocation-free variant: write the selection into `out`, drawing
+    /// temporaries from `scratch`. The default implementation falls back
+    /// to [`Selector::select`] (allocating); hot-path selectors override
+    /// it.
+    fn select_into(
+        &self,
+        importance: &[f32],
+        budget: usize,
+        table: &LatencyTable,
+        scratch: &mut SelectScratch,
+        out: &mut SelectionMask,
+    ) {
+        let _ = scratch;
+        *out = self.select(importance, budget, table);
+    }
 }
 
 #[cfg(test)]

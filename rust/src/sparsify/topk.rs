@@ -3,7 +3,7 @@
 //! the largest importance, ignoring storage layout entirely.
 
 use crate::latency::LatencyTable;
-use crate::sparsify::{SelectionMask, Selector};
+use crate::sparsify::{SelectScratch, SelectionMask, Selector};
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TopK;
@@ -17,29 +17,48 @@ impl Selector for TopK {
         &self,
         importance: &[f32],
         budget: usize,
-        _table: &LatencyTable,
+        table: &LatencyTable,
     ) -> SelectionMask {
+        let mut scratch = SelectScratch::default();
+        let mut out = SelectionMask::default();
+        self.select_into(importance, budget, table, &mut scratch, &mut out);
+        out
+    }
+
+    fn select_into(
+        &self,
+        importance: &[f32],
+        budget: usize,
+        _table: &LatencyTable,
+        scratch: &mut SelectScratch,
+        out: &mut SelectionMask,
+    ) {
         let n = importance.len();
         let k = budget.min(n);
         if k == 0 {
-            return SelectionMask::empty(n);
+            out.reset(n);
+            return;
         }
         if k == n {
-            return SelectionMask::full(n);
+            out.set_full(n);
+            return;
         }
-        // Partial selection: select_nth_unstable on indices (O(n) expected)
-        // keeps the hot path allocation-light.
-        let mut idx: Vec<u32> = (0..n as u32).collect();
+        // Partial selection: select_nth_unstable on indices (O(n)
+        // expected) keeps the hot path allocation-free (the index buffer
+        // comes from the scratch arena).
+        let idx = &mut scratch.idx;
+        idx.clear();
+        idx.extend(0..n as u32);
         idx.select_nth_unstable_by(k - 1, |&a, &b| {
             importance[b as usize]
                 .partial_cmp(&importance[a as usize])
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        let mut mask = vec![false; n];
+        out.reset(n);
         for &i in &idx[..k] {
-            mask[i as usize] = true;
+            out.mask[i as usize] = true;
         }
-        SelectionMask::from_mask(mask)
+        out.recompute_chunks();
     }
 }
 

@@ -79,28 +79,32 @@ pub trait FlashDevice: Send + Sync {
     /// (simulated, real-file, profiler probes) supports plans without
     /// further work; native backends may override to drive deeper queues.
     fn submit(&self, plan: &ReadPlan) -> anyhow::Result<PlanReceipt> {
+        let mut receipt = PlanReceipt::default();
+        self.submit_into(plan, &mut receipt)?;
+        Ok(receipt)
+    }
+
+    /// Allocation-free [`FlashDevice::submit`]: clears `receipt` and
+    /// refills it in place, reusing its buffer capacity. The serving hot
+    /// path cycles a pooled receipt through this every token.
+    fn submit_into(&self, plan: &ReadPlan, receipt: &mut PlanReceipt) -> anyhow::Result<()> {
+        receipt.clear();
         let cmds = plan.cmds();
         let total: usize = cmds.iter().map(|e| e.len).sum();
-        let mut bytes = vec![0u8; total];
-        let mut cmd_offsets = Vec::with_capacity(cmds.len());
+        receipt.bytes.resize(total, 0);
         let mut at = 0usize;
         for e in cmds {
-            cmd_offsets.push(at);
+            receipt.cmd_offsets.push(at);
             at += e.len;
         }
-        let mut service = Duration::ZERO;
         let mut cursor = 0usize;
         for &(s, e) in plan.batches() {
             let batch = &cmds[s..e];
             let n: usize = batch.iter().map(|x| x.len).sum();
-            service += self.read_batch(batch, &mut bytes[cursor..cursor + n])?;
+            receipt.service += self.read_batch(batch, &mut receipt.bytes[cursor..cursor + n])?;
             cursor += n;
         }
-        Ok(PlanReceipt {
-            bytes,
-            service,
-            cmd_offsets,
-        })
+        Ok(())
     }
 }
 

@@ -14,7 +14,7 @@
 use std::fs::File;
 use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::storage::{Extent, FlashDevice};
@@ -144,11 +144,6 @@ impl RealFileDevice {
 struct SendPtr(*mut u8);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
-
-// Unused Condvar import guard (thread::scope supersedes a hand-rolled
-// pool; kept minimal).
-#[allow(dead_code)]
-fn _unused(_: &Condvar) {}
 
 impl FlashDevice for RealFileDevice {
     fn name(&self) -> &str {

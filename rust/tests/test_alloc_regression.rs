@@ -1,0 +1,125 @@
+//! Allocation-regression guard: after one warm-up token, further
+//! `decode_step` calls perform **zero heap allocations** on the serving
+//! path.
+//!
+//! A counting global allocator flags every `alloc`/`alloc_zeroed` and
+//! every growing `realloc` while armed. The engine's scratch arena,
+//! pooled plans/receipts, `*_into` APIs and pre-reserved
+//! selection-shape-dependent buffers are exactly what this test pins
+//! down; any new per-token allocation on the hot path fails it.
+//!
+//! All configurations run inside one `#[test]` so the global counter is
+//! never toggled from two test threads at once.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use neuron_chunking::coordinator::{Engine, Policy};
+use neuron_chunking::sparsify::ChunkSelectConfig;
+use neuron_chunking::workload::FrameTrace;
+
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // Growing an existing buffer is an allocation for our purposes;
+        // shrinks are not.
+        if ARMED.load(Ordering::Relaxed) && new_size > layout.size() {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Build an engine, warm one session (frame + one token), then count heap
+/// allocations across `steps` further decode steps.
+fn decode_allocs(policy: Policy, sparsity: f64, prefetch: bool, steps: usize) -> u64 {
+    let engine = Engine::builder("tiny")
+        .policy(policy)
+        .sparsity(sparsity)
+        .prefetch(prefetch)
+        .exec_threads(1)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
+    engine.warmup().unwrap();
+    let spec = engine.spec();
+    let session = engine.new_session();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 2, 7);
+    let mut out = Vec::new();
+    session.append_frame_into(&trace.frame(0), &mut out).unwrap();
+    let token = vec![0.08f32; spec.d];
+    // One warm-up token grows every arena buffer to its high-water mark.
+    session.decode_step_into(&token, &mut out).unwrap();
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..steps {
+        session.decode_step_into(&token, &mut out).unwrap();
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_decode_is_allocation_free() {
+    // One test body: the counting allocator is process-global state.
+    let configs: Vec<(&str, Policy, f64, bool)> = vec![
+        ("dense +pf", Policy::Dense, 0.0, true),
+        ("dense -pf", Policy::Dense, 0.0, false),
+        ("topk +pf", Policy::TopK, 0.5, true),
+        ("topk -pf", Policy::TopK, 0.5, false),
+        (
+            "chunking +pf",
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            },
+            0.5,
+            true,
+        ),
+        (
+            "chunking -pf",
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            },
+            0.5,
+            false,
+        ),
+    ];
+    for (label, policy, sparsity, prefetch) in configs {
+        let allocs = decode_allocs(policy, sparsity, prefetch, 8);
+        assert_eq!(
+            allocs, 0,
+            "[{label}] decode_step allocated {allocs} times across 8 steady-state steps"
+        );
+    }
+}

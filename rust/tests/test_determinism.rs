@@ -1,0 +1,89 @@
+//! Parallel-executor determinism: engine outputs must be **bit-identical**
+//! across executor thread counts (1/2/4), for both `append_frame` and
+//! `decode_step`, with prefetch on and off.
+//!
+//! The blocked kernels keep every output element's f64 reduction in a
+//! fixed order (ascending contraction index per column, ascending slot
+//! per attention head), so tiling and threading must not change a single
+//! bit. This is what lets the serving stack scale worker threads without
+//! perturbing accuracy experiments.
+
+use std::path::PathBuf;
+
+use neuron_chunking::coordinator::{Engine, Policy};
+use neuron_chunking::sparsify::ChunkSelectConfig;
+use neuron_chunking::workload::FrameTrace;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Two appends + two decodes on one session; returns all four outputs.
+fn run(model: &str, policy: Policy, sparsity: f64, prefetch: bool, threads: usize) -> Vec<Vec<f32>> {
+    let engine = Engine::builder(model)
+        .policy(policy)
+        .sparsity(sparsity)
+        .prefetch(prefetch)
+        .exec_threads(threads)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
+    let spec = engine.spec();
+    let session = engine.new_session();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 11);
+    let mut outs = Vec::new();
+    outs.push(session.append_frame(&trace.frame(0)).unwrap().0);
+    outs.push(session.append_frame(&trace.frame(1)).unwrap().0);
+    let token = vec![0.03f32; spec.d];
+    outs.push(session.decode_step(&token).unwrap().0);
+    outs.push(session.decode_step(&token).unwrap().0);
+    outs
+}
+
+fn policies() -> Vec<(Policy, f64)> {
+    vec![
+        (Policy::Dense, 0.0),
+        (Policy::TopK, 0.5),
+        (
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            },
+            0.5,
+        ),
+    ]
+}
+
+#[test]
+fn tiny_outputs_bit_identical_across_thread_counts() {
+    for prefetch in [false, true] {
+        for (policy, sparsity) in policies() {
+            let base = run("tiny", policy.clone(), sparsity, prefetch, 1);
+            for threads in [2usize, 4] {
+                let got = run("tiny", policy.clone(), sparsity, prefetch, threads);
+                for (step, (want, have)) in base.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        want, have,
+                        "tiny policy={policy:?} prefetch={prefetch} threads={threads} \
+                         diverged at step {step}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn small_outputs_bit_identical_across_thread_counts() {
+    // The small model's matmuls are large enough to actually cross the
+    // parallel-dispatch threshold on the decode path too.
+    let base = run("small", Policy::TopK, 0.5, true, 1);
+    for threads in [2usize, 4] {
+        let got = run("small", Policy::TopK, 0.5, true, threads);
+        for (step, (want, have)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(
+                want, have,
+                "small threads={threads} diverged at step {step}"
+            );
+        }
+    }
+}
