@@ -26,6 +26,7 @@ struct Entry {
     prefetch: bool,
     threads: usize,
     streams: usize,
+    devices: usize,
     op: &'static str,
     tokens_per_s: f64,
     p50_us: f64,
@@ -37,13 +38,14 @@ impl Entry {
     fn to_json(&self) -> String {
         format!(
             "{{\"mode\":\"{}\",\"policy\":\"{}\",\"prefetch\":{},\"threads\":{},\
-             \"streams\":{},\"op\":\"{}\",\"tokens_per_s\":{:.3},\"p50_us\":{:.3},\
-             \"p99_us\":{:.3},\"samples\":{}}}",
+             \"streams\":{},\"devices\":{},\"op\":\"{}\",\"tokens_per_s\":{:.3},\
+             \"p50_us\":{:.3},\"p99_us\":{:.3},\"samples\":{}}}",
             self.mode,
             self.policy,
             self.prefetch,
             self.threads,
             self.streams,
+            self.devices,
             self.op,
             self.tokens_per_s,
             self.p50_us,
@@ -61,12 +63,23 @@ fn percentiles_us(samples: &[f64]) -> (f64, f64) {
 }
 
 fn build_engine(policy: &Policy, sparsity: f64, prefetch: bool, threads: usize) -> Engine {
+    build_engine_devices(policy, sparsity, prefetch, threads, 1)
+}
+
+fn build_engine_devices(
+    policy: &Policy,
+    sparsity: f64,
+    prefetch: bool,
+    threads: usize,
+    devices: usize,
+) -> Engine {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = Engine::builder("tiny")
         .policy(policy.clone())
         .sparsity(sparsity)
         .prefetch(prefetch)
         .exec_threads(threads)
+        .devices(devices)
         .artifacts(&dir)
         .build()
         .unwrap();
@@ -137,6 +150,7 @@ fn main() {
                 prefetch,
                 threads: 1,
                 streams: 1,
+                devices: 1,
                 op: "append",
                 tokens_per_s: spec.tokens_per_frame as f64 / stats::mean(&samples),
                 p50_us: p50,
@@ -153,6 +167,7 @@ fn main() {
                 prefetch,
                 threads: 1,
                 streams: 1,
+                devices: 1,
                 op: "decode",
                 tokens_per_s: 1.0 / stats::mean(&samples),
                 p50_us: p50,
@@ -187,6 +202,7 @@ fn main() {
                 prefetch: true,
                 threads,
                 streams: 1,
+                devices: 1,
                 op: "decode",
                 tokens_per_s: 1.0 / stats::mean(&samples),
                 p50_us: p50,
@@ -236,11 +252,53 @@ fn main() {
                 prefetch: true,
                 threads,
                 streams: threads,
+                devices: 1,
                 op: "decode",
                 tokens_per_s: total_tokens / wall,
                 p50_us: 0.0,
                 p99_us: 0.0,
                 samples: threads * per_stream,
+            });
+        }
+    }
+
+    // --- device-count sweep: sharded storage pool, decode + append ---
+    // Outputs are bit-identical across pool sizes; what the sweep tracks
+    // is how accounted (virtual) I/O service and wall throughput respond
+    // to striping the flash image over 1/2/4 simulated members.
+    let mut device_entries: Vec<Entry> = Vec::new();
+    for (label, policy, sparsity) in &policies {
+        for devices in [1usize, 2, 4] {
+            let engine = build_engine_devices(policy, *sparsity, true, 1, devices);
+            let spec = engine.spec();
+            let session = engine.new_session();
+            let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
+            let frame = trace.frame(0);
+            let token = vec![0.1f32; spec.d];
+            let mut out = Vec::new();
+            session.append_frame_into(&frame, &mut out).unwrap();
+            session.decode_step_into(&token, &mut out).unwrap(); // warm
+            let samples = sample_steps(decode_samples, || {
+                black_box(session.decode_step_into(&token, &mut out).unwrap());
+            });
+            let (p50, p99) = percentiles_us(&samples);
+            println!(
+                "{:<56} {:>12.0} tok/s",
+                format!("device_scaling decode tiny [{label}] devices={devices}"),
+                1.0 / stats::mean(&samples)
+            );
+            device_entries.push(Entry {
+                mode: "device_scaling",
+                policy: *label,
+                prefetch: true,
+                threads: 1,
+                streams: 1,
+                devices,
+                op: "decode",
+                tokens_per_s: 1.0 / stats::mean(&samples),
+                p50_us: p50,
+                p99_us: p99,
+                samples: samples.len(),
             });
         }
     }
@@ -269,10 +327,20 @@ fn main() {
     // --- machine-readable report (redline-style stats file) ---
     let path = std::env::var("NC_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".to_string());
     let rows: Vec<String> = entries.iter().map(|e| format!("  {}", e.to_json())).collect();
+    let dev_rows: Vec<String> = device_entries
+        .iter()
+        .map(|e| format!("  {}", e.to_json()))
+        .collect();
     let json = format!(
-        "{{\n\"bench\":\"e2e\",\n\"model\":\"tiny\",\n\"entries\":[\n{}\n]\n}}\n",
-        rows.join(",\n")
+        "{{\n\"bench\":\"e2e\",\n\"model\":\"tiny\",\n\"entries\":[\n{}\n],\n\
+         \"device_scaling\":[\n{}\n]\n}}\n",
+        rows.join(",\n"),
+        dev_rows.join(",\n")
     );
     std::fs::write(&path, &json).expect("write bench json");
-    println!("\nwrote {path} ({} entries)", entries.len());
+    println!(
+        "\nwrote {path} ({} entries + {} device-scaling entries)",
+        entries.len(),
+        device_entries.len()
+    );
 }

@@ -14,6 +14,7 @@ use crate::latency::Chunk;
 use crate::plan::{PlanScratch, PlannedRead};
 use crate::runtime::{ExecScratch, StageOutputs};
 use crate::sparsify::{SelectScratch, SelectionMask};
+use crate::storage::PoolScratch;
 
 /// Activation buffers of the layer loop. `xa` holds the running hidden
 /// state (layer input, overwritten by the down-projection residual
@@ -67,6 +68,9 @@ pub(crate) struct ScratchArena {
     /// Importance moved into physical (reordered) row space.
     pub imp_phys: Vec<f32>,
     pub plan_scratch: PlanScratch,
+    /// Sharded-plan working memory + per-member staging receipts for the
+    /// storage pool, plus per-call per-member I/O accounting.
+    pub pool: PoolScratch,
     pub exec: ExecScratch,
     pub outs: StageOutputs,
 }

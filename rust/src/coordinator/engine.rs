@@ -3,11 +3,18 @@
 //!
 //! For every weight matrix, per frame:
 //!   score input activation → (apply offline-reorder permutation) →
-//!   chunk-select under the latency model → **plan** the group's flash
-//!   reads ([`crate::plan::IoPlanner`]) → submit one cross-matrix command
-//!   batch ([`crate::storage::FlashDevice::submit`]) → gather activations
+//!   chunk-select under the (pool-effective) latency model → **plan**
+//!   the group's flash reads ([`crate::plan::IoPlanner`]) → **shard**
+//!   the plan across the storage pool's members
+//!   ([`crate::plan::IoPlanner::shard_into`]) → fan one cross-matrix
+//!   command batch out per member
+//!   ([`crate::storage::DevicePool::submit_sharded_into`]; a
+//!   single-member pool degenerates to the historical
+//!   [`crate::storage::FlashDevice::submit`] path) → gather activations
 //!   → zero-pad to the compiled budget bucket → execute the stage
-//!   artifact.
+//!   artifact. Pool service time is the max over members; per-member
+//!   bytes/latency land in the metrics so utilization skew is
+//!   observable.
 //!
 //! A transformer block runs as four such stages (qkv+attention, o-proj,
 //! gate/up, down-proj). K/V reuse Q's mask and Up reuses Gate's (they
@@ -55,11 +62,16 @@ use crate::coordinator::arena::ScratchArena;
 use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy, StageTimer};
 use crate::latency::{Chunk, LatencyTable};
 use crate::model::{decode_f32_into, MatrixId, MatrixKind, ModelSpec, WeightStore};
-use crate::plan::{CoalescePolicy, IoPlanner, PlanScratch, PlannedRead, RowCursor};
+use crate::plan::{
+    CoalescePolicy, IoPlanner, PlanReceipt, PlanScratch, PlannedRead, ReadPlan, RowCursor,
+};
 use crate::reorder::HotColdReorder;
 use crate::runtime::{Manifest, ModelMeta, Tensor, TensorView, XlaRuntime};
 use crate::sparsify::{SelectScratch, SelectionMask, Selector};
-use crate::storage::{DeviceProfile, FlashDevice, ProfileConfig, Profiler, SimulatedSsd};
+use crate::storage::{
+    DevicePool, DeviceProfile, FlashDevice, PoolScratch, ProfileConfig, Profiler, SimulatedSsd,
+    StripeLayout, StripePolicy,
+};
 
 /// Per-call stage accounting (one frame append or decode step).
 #[derive(Clone, Copy, Debug, Default)]
@@ -124,13 +136,25 @@ pub struct EngineBuilder {
     prefetch: bool,
     coalesce: CoalescePolicy,
     exec_threads: usize,
+    devices: usize,
+    member_profiles: Option<Vec<DeviceProfile>>,
+    stripe_policy: StripePolicy,
+    stripe_bytes: Option<usize>,
 }
 
 impl EngineBuilder {
     /// Start from a runnable model name ("tiny" | "small" | "base") with
     /// defaults: nano profile, dense policy, prefetch on, contiguous
-    /// coalescing, single-threaded kernels, artifacts in `./artifacts`.
+    /// coalescing, single-threaded kernels, a single-member storage pool
+    /// (`NC_DEVICES` overrides the default member count without touching
+    /// call sites — CI uses it to run the whole suite sharded),
+    /// artifacts in `./artifacts`.
     pub fn new(model: &str) -> Self {
+        let devices = std::env::var("NC_DEVICES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1);
         Self {
             model: model.to_string(),
             profile: DeviceProfile::nano(),
@@ -141,6 +165,10 @@ impl EngineBuilder {
             prefetch: true,
             coalesce: CoalescePolicy::contiguous(),
             exec_threads: 1,
+            devices,
+            member_profiles: None,
+            stripe_policy: StripePolicy::RoundRobin,
+            stripe_bytes: None,
         }
     }
 
@@ -189,6 +217,42 @@ impl EngineBuilder {
         self
     }
 
+    /// Number of homogeneous storage-pool members (default 1, or
+    /// `NC_DEVICES`), each a [`SimulatedSsd`] with the builder's device
+    /// profile over its stripe of the flash image. Homogeneous pools of
+    /// any size produce bit-identical outputs and identical
+    /// selected-chunk sets — only (virtual) service time changes.
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n.max(1);
+        self.member_profiles = None;
+        self
+    }
+
+    /// Heterogeneous pool: one member per profile (fast + slow flash mix).
+    /// Selection utility then prices chunks under the stripe-weighted
+    /// blend of the members' `T[s]` tables.
+    pub fn device_profiles(mut self, profiles: Vec<DeviceProfile>) -> Self {
+        if !profiles.is_empty() {
+            self.devices = profiles.len();
+            self.member_profiles = Some(profiles);
+        }
+        self
+    }
+
+    /// How stripe blocks are assigned to members (default round-robin;
+    /// [`StripePolicy::HotAware`] co-locates each matrix's hottest rows).
+    pub fn stripe_policy(mut self, policy: StripePolicy) -> Self {
+        self.stripe_policy = policy;
+        self
+    }
+
+    /// Explicit stripe-unit size in bytes (default: adaptive per matrix,
+    /// `⌈rows / (4·devices)⌉` rows).
+    pub fn stripe_bytes(mut self, bytes: usize) -> Self {
+        self.stripe_bytes = if bytes == 0 { None } else { Some(bytes) };
+        self
+    }
+
     /// Build the engine, generating + "flashing" the model weights.
     pub fn build(self) -> Result<Engine> {
         let runtime = XlaRuntime::open(&self.artifact_dir)?;
@@ -205,17 +269,58 @@ impl EngineBuilder {
             "rust spec / python manifest dimension mismatch"
         );
         let store = WeightStore::new(spec.clone(), false, self.seed);
-        let device = SimulatedSsd::with_image(
-            self.profile.clone(),
-            store.build_image(),
-            self.seed ^ 0xD1CE,
-        );
+        let member_profiles: Vec<DeviceProfile> = match &self.member_profiles {
+            Some(v) if !v.is_empty() => v.clone(),
+            _ => vec![self.profile.clone(); self.devices.max(1)],
+        };
+        let n_dev = member_profiles.len();
 
-        // Profile T[s] against an unbounded twin of the device (the
-        // analytical model is capacity-independent).
-        let probe = SimulatedSsd::timing_only(self.profile.clone(), 1 << 40, self.seed ^ 0xBEEF);
-        let sat = self.profile.saturation_bytes(0.99);
-        let table = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024)).build_table()?;
+        // Profile T[s] once per *distinct* member profile against an
+        // unbounded twin (the analytical model is capacity-independent).
+        // Sharing one probe seed per profile keeps homogeneous pools of
+        // any size on the same table — and therefore on the same
+        // selections — as a single device.
+        let mut distinct: Vec<(String, LatencyTable)> = Vec::new();
+        for p in &member_profiles {
+            if distinct.iter().any(|(name, _)| *name == p.name) {
+                continue;
+            }
+            let probe = SimulatedSsd::timing_only(p.clone(), 1 << 40, self.seed ^ 0xBEEF);
+            let sat = p.saturation_bytes(0.99);
+            let t = Profiler::new(&probe, ProfileConfig::coarse(sat, 1024)).build_table()?;
+            distinct.push((p.name.clone(), t));
+        }
+        let member_tables: Vec<LatencyTable> = member_profiles
+            .iter()
+            .map(|p| {
+                distinct
+                    .iter()
+                    .find(|(name, _)| *name == p.name)
+                    .expect("profiled above")
+                    .1
+                    .clone()
+            })
+            .collect();
+
+        // Stripe the flat weight space across the members and blend the
+        // member tables into the pool-effective T[s] that selection
+        // utility prices chunks with (homogeneous pools reuse the single
+        // member table verbatim).
+        let stripe =
+            StripeLayout::build(&store.layout, n_dev, self.stripe_policy, self.stripe_bytes);
+        let table = if distinct.len() == 1 {
+            distinct[0].1.clone()
+        } else {
+            LatencyTable::blended(&member_tables, stripe.device_bytes())
+        };
+        let pool = DevicePool::simulated(
+            &member_profiles,
+            stripe,
+            &store.build_image(),
+            self.seed ^ 0xD1CE,
+        )?
+        .with_tables(member_tables.clone());
+        let dev_io_names: Vec<String> = (0..n_dev).map(|m| format!("io.dev{m}")).collect();
 
         // Pre-key the table for every scored row size and pre-render every
         // artifact name; both lookups are on the per-stage hot path and
@@ -256,7 +361,6 @@ impl EngineBuilder {
         let selector = self.policy.selector();
         let core = EngineCore {
             model: self.model,
-            profile: self.profile,
             policy: self.policy,
             sparsity: self.sparsity,
             seed: self.seed,
@@ -266,7 +370,12 @@ impl EngineBuilder {
             meta,
             spec,
             store,
-            device,
+            pool,
+            member_profiles,
+            member_tables,
+            stripe_policy: self.stripe_policy,
+            stripe_bytes: self.stripe_bytes,
+            dev_io_names,
             table,
             keyed_tables,
             artifact_names,
@@ -325,6 +434,11 @@ impl Engine {
 
     pub fn latency_table(&self) -> LatencyTable {
         self.core.read().unwrap().table.clone()
+    }
+
+    /// Number of storage-pool members serving this engine.
+    pub fn devices(&self) -> usize {
+        self.core.read().unwrap().pool.len()
     }
 
     /// Snapshot of accumulated per-stage metrics.
@@ -496,7 +610,6 @@ impl Session {
 
 struct EngineCore {
     model: String,
-    profile: DeviceProfile,
     policy: Policy,
     sparsity: f64,
     seed: u64,
@@ -507,8 +620,18 @@ struct EngineCore {
     meta: ModelMeta,
     spec: ModelSpec,
     store: WeightStore,
-    device: SimulatedSsd,
-    /// Byte-keyed latency table.
+    /// Sharded storage pool (single-member pools reproduce the legacy
+    /// one-device behaviour bit for bit).
+    pool: DevicePool,
+    /// One profile per pool member (homogeneous = N copies).
+    member_profiles: Vec<DeviceProfile>,
+    /// Per-member profiled `T[s]` tables.
+    member_tables: Vec<LatencyTable>,
+    stripe_policy: StripePolicy,
+    stripe_bytes: Option<usize>,
+    /// Pre-rendered per-member metrics keys ("io.dev0", …).
+    dev_io_names: Vec<String>,
+    /// Byte-keyed pool-effective latency table (selection utility).
     table: LatencyTable,
     /// The table pre-keyed per scored row size (hot path must not clone).
     keyed_tables: HashMap<usize, LatencyTable>,
@@ -549,11 +672,19 @@ impl EngineCore {
                 }
             }
         }
-        self.device = SimulatedSsd::with_image(
-            self.profile.clone(),
-            self.store.build_image(),
-            self.seed ^ 0xD1CE,
+        let stripe = StripeLayout::build(
+            &self.store.layout,
+            self.member_profiles.len(),
+            self.stripe_policy,
+            self.stripe_bytes,
         );
+        self.pool = DevicePool::simulated(
+            &self.member_profiles,
+            stripe,
+            &self.store.build_image(),
+            self.seed ^ 0xD1CE,
+        )?
+        .with_tables(self.member_tables.clone());
         self.epoch += 1;
         Ok(())
     }
@@ -606,6 +737,7 @@ impl EngineCore {
         let mut prefetch_service = Duration::ZERO;
 
         let sc = &mut *scratch;
+        sc.pool.accum.reset(self.pool.len());
         sc.fwd.xa.clear();
         sc.fwd.xa.extend_from_slice(input);
 
@@ -642,6 +774,7 @@ impl EngineCore {
                 pre,
                 &mut sc.gather,
                 &mut sc.plan_scratch,
+                &mut sc.pool,
                 &mut stats,
             )?;
             let dst = &mut state.next_masks[layer][group_index(MatrixKind::Q)];
@@ -689,6 +822,7 @@ impl EngineCore {
                 pre,
                 &mut sc.gather,
                 &mut sc.plan_scratch,
+                &mut sc.pool,
                 &mut stats,
             )?;
             let dst = &mut state.next_masks[layer][group_index(MatrixKind::O)];
@@ -731,6 +865,7 @@ impl EngineCore {
                 pre,
                 &mut sc.gather,
                 &mut sc.plan_scratch,
+                &mut sc.pool,
                 &mut stats,
             )?;
             let dst = &mut state.next_masks[layer][group_index(MatrixKind::Gate)];
@@ -772,6 +907,7 @@ impl EngineCore {
                 pre,
                 &mut sc.gather,
                 &mut sc.plan_scratch,
+                &mut sc.pool,
                 &mut stats,
             )?;
             let dst = &mut state.next_masks[layer][group_index(MatrixKind::Down)];
@@ -799,6 +935,7 @@ impl EngineCore {
                 prefetch_service += self.prefetch_layer(
                     state,
                     &mut sc.plan_scratch,
+                    &mut sc.pool,
                     layer + 1,
                     layer_t0.elapsed(),
                     &mut stats,
@@ -818,6 +955,16 @@ impl EngineCore {
                 metrics.add("prefetch", prefetch_service);
             }
             metrics.add_bytes("io", stats.bytes_loaded);
+            // Per-member I/O accounting (multi-member pools only): bytes
+            // and summed service per device, from which utilization skew
+            // is derived. Keys are pre-rendered, so this allocates
+            // nothing at steady state.
+            if self.pool.len() > 1 {
+                for m in 0..self.pool.len() {
+                    metrics.add(&self.dev_io_names[m], sc.pool.accum.service[m]);
+                    metrics.add_bytes(&self.dev_io_names[m], sc.pool.accum.bytes[m]);
+                }
+            }
         }
         out.clear();
         out.extend_from_slice(&sc.fwd.xa);
@@ -834,6 +981,7 @@ impl EngineCore {
         &self,
         state: &mut SessionState,
         plan_scratch: &mut PlanScratch,
+        pool_scratch: &mut PoolScratch,
         layer: usize,
         overlap: Duration,
         stats: &mut StageStats,
@@ -877,13 +1025,45 @@ impl EngineCore {
         if slot.plan.is_empty() {
             return Ok(Duration::ZERO);
         }
-        self.device.submit_into(&slot.plan, &mut slot.receipt)?;
+        self.submit_pooled(&slot.plan, pool_scratch, &mut slot.receipt)?;
         let service = slot.receipt.service;
         let charged = service.saturating_sub(overlap);
         stats.io += charged;
         stats.bytes_loaded += slot.plan.payload_bytes();
         stats.prefetched_bytes += slot.plan.payload_bytes();
         Ok(service)
+    }
+
+    /// Submit one logical plan through the storage pool. Single-member
+    /// pools delegate straight to the member (bit-identical to the
+    /// historical one-device path); larger pools run the
+    /// [`IoPlanner::shard_into`] step and fan the sub-plans out across
+    /// members, reassembling the logical receipt. Per-member
+    /// bytes/service land in `ps.last` and accumulate into `ps.accum`
+    /// for the per-call metrics fold. Allocation-free at steady state.
+    fn submit_pooled(
+        &self,
+        plan: &ReadPlan,
+        ps: &mut PoolScratch,
+        receipt: &mut PlanReceipt,
+    ) -> Result<()> {
+        if self.pool.len() == 1 {
+            self.pool.member(0).submit_into(plan, receipt)?;
+            ps.last.reset(1);
+            ps.last.bytes[0] = plan.cmd_bytes();
+            ps.last.service[0] = receipt.service;
+        } else {
+            self.planner.shard_into(plan, self.pool.stripe(), &mut ps.sharded);
+            self.pool.submit_sharded_into(
+                plan,
+                &ps.sharded,
+                &mut ps.staging,
+                receipt,
+                &mut ps.last,
+            )?;
+        }
+        ps.accum.absorb(&ps.last);
+        Ok(())
     }
 
     /// Run the selection policy for one scored matrix, writing the mask
@@ -956,6 +1136,7 @@ impl EngineCore {
         prefetched: Option<&PlannedRead>,
         g: &mut crate::coordinator::arena::GatherScratch,
         plan_scratch: &mut PlanScratch,
+        pool_scratch: &mut PoolScratch,
         stats: &mut StageStats,
     ) -> Result<usize> {
         let members: &'static [MatrixKind] = match kind {
@@ -1060,7 +1241,7 @@ impl EngineCore {
         );
         let have_fresh = !g.fresh.plan.is_empty();
         if have_fresh {
-            self.device.submit_into(&g.fresh.plan, &mut g.fresh.receipt)?;
+            self.submit_pooled(&g.fresh.plan, pool_scratch, &mut g.fresh.receipt)?;
             stats.bytes_loaded += g.fresh.plan.payload_bytes();
         } else {
             g.fresh.receipt.clear();
@@ -1120,7 +1301,7 @@ impl EngineCore {
         let d = self.meta.d;
         let load = |m: MatrixKind| -> Result<Vec<f32>> {
             let id = MatrixId::new(layer, m);
-            let (rows, _) = self.store.read_rows(&self.device, id, &sel.chunks)?;
+            let (rows, _) = self.store.read_rows(&self.pool, id, &sel.chunks)?;
             Ok(rows)
         };
         let (kc, vc, mask) = kv.tensors();
@@ -1145,11 +1326,11 @@ impl EngineCore {
         let h = self.meta.h;
         let gate = self
             .store
-            .read_rows(&self.device, MatrixId::new(layer, MatrixKind::Gate), &sel.chunks)?
+            .read_rows(&self.pool, MatrixId::new(layer, MatrixKind::Gate), &sel.chunks)?
             .0;
         let up = self
             .store
-            .read_rows(&self.device, MatrixId::new(layer, MatrixKind::Up), &sel.chunks)?
+            .read_rows(&self.pool, MatrixId::new(layer, MatrixKind::Up), &sel.chunks)?
             .0;
         let name = self.artifact_name("gateup", t, d)?;
         let out = self.runtime.execute(
@@ -1176,7 +1357,7 @@ impl EngineCore {
         let rows = self.spec.shape_of(kind).rows;
         let w = self
             .store
-            .read_rows(&self.device, MatrixId::new(layer, kind), &sel.chunks)?
+            .read_rows(&self.pool, MatrixId::new(layer, kind), &sel.chunks)?
             .0;
         let name = self.artifact_name("projres", t, rows)?;
         let out = self.runtime.execute(
@@ -1252,6 +1433,13 @@ impl EngineCore {
             group_bytes_max,
             layer_bytes,
         );
+        // Pool fan-out scratch: a logical command gains at most one
+        // extra piece per stripe block it crosses, so per-member command
+        // capacity is bounded by the plan's worst command count plus the
+        // total block count; staging is bounded by a whole layer landing
+        // on one member.
+        let pool_cmds = 7 * max_chunks + self.pool.stripe().num_blocks() + 1;
+        scratch.pool.reserve(self.pool.len(), pool_cmds, layer_bytes);
         for slot in &mut state.prefetch {
             slot.reserve(layer_bytes, 7 * max_chunks, 7 * max_chunks);
         }
@@ -1582,6 +1770,66 @@ mod tests {
         let a = e.new_session().append_frame(&f).unwrap().0;
         let b = e2.new_session().append_frame(&f).unwrap().0;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pooled_engine_bit_identical_and_reports_per_device_io() {
+        let single = build(Policy::TopK, 0.4);
+        let pooled = Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.4)
+            .devices(3)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap();
+        assert_eq!(pooled.devices(), 3);
+        let f = frame(&single.spec(), 2);
+        let (a, sa) = single.new_session().append_frame(&f).unwrap();
+        let (b, sb) = pooled.new_session().append_frame(&f).unwrap();
+        // Sharding is a pure I/O-topology change: outputs and selections
+        // are bit-identical to the single device.
+        assert_eq!(a, b);
+        assert_eq!(sa.bytes_loaded, sb.bytes_loaded);
+        // Per-member accounting covers every transferred byte.
+        let m = pooled.metrics();
+        let dev_bytes: u64 = (0..3).map(|i| m.bytes(&format!("io.dev{i}"))).sum();
+        assert_eq!(dev_bytes, sb.bytes_loaded);
+        let busy = (0..3).filter(|&i| m.bytes(&format!("io.dev{i}")) > 0).count();
+        assert!(busy >= 2, "striping should spread I/O over members, got {busy}");
+    }
+
+    #[test]
+    fn heterogeneous_pool_serves() {
+        let e = Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.3)
+            .device_profiles(vec![DeviceProfile::nano(), DeviceProfile::agx()])
+            .stripe_policy(StripePolicy::HotAware)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap();
+        assert_eq!(e.devices(), 2);
+        let f = frame(&e.spec(), 1);
+        let (y, st) = e.new_session().append_frame(&f).unwrap();
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert!(st.io > Duration::ZERO);
+    }
+
+    #[test]
+    fn pooled_reorder_matches_single_device() {
+        let mk = |devices: usize| {
+            let e = Engine::builder("tiny")
+                .policy(Policy::TopK)
+                .sparsity(0.4)
+                .devices(devices)
+                .artifacts(&artifact_dir())
+                .build()
+                .unwrap();
+            let calib: Vec<Vec<f32>> = (0..3).map(|i| frame(&e.spec(), i)).collect();
+            e.calibrate_and_reorder(&calib).unwrap();
+            e.new_session().append_frame(&frame(&e.spec(), 5)).unwrap().0
+        };
+        assert_eq!(mk(1), mk(4));
     }
 
     #[test]

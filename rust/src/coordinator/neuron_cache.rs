@@ -38,16 +38,34 @@ impl HotNeuronCache {
     ) -> Self {
         let mut cache = Self::default();
         let spec: &ModelSpec = &store.spec;
-        'outer: for layer in 0..spec.layers {
+        for layer in 0..spec.layers {
             for scored in MatrixKind::SCORED {
                 let sid = MatrixId::new(layer, scored);
                 let Some(freq) = freqs.get(&sid) else { continue };
                 let rows = spec.shape_of(scored).rows;
                 let take = ((rows as f64) * fraction) as usize;
                 let mut order: Vec<usize> = (0..rows).collect();
-                order.sort_by(|&a, &b| freq[b].partial_cmp(&freq[a]).unwrap());
+                order.sort_by(|&a, &b| freq[b].total_cmp(&freq[a]));
                 let mut chosen: Vec<usize> = order[..take.min(rows)].to_vec();
                 chosen.sort_unstable();
+                // Budget-check the *whole* group up front: members share
+                // one selection mask, and the engine subtracts cached rows
+                // from flash reads per group, so caching must be
+                // all-or-nothing per group (a partially cached group would
+                // leave uncached member rows unread). A group that doesn't
+                // fit is skipped — later, smaller groups still fill the
+                // budget instead of ending caching outright.
+                let group_bytes: u64 = MatrixKind::ALL
+                    .into_iter()
+                    .filter(|m| m.mask_source() == scored)
+                    .map(|m| {
+                        store.layout.row_bytes(MatrixId::new(layer, m)) as u64
+                            * chosen.len() as u64
+                    })
+                    .sum();
+                if group_bytes == 0 || cache.bytes + group_bytes > budget_bytes {
+                    continue;
+                }
                 // Apply to every member sharing this selection mask.
                 for member in MatrixKind::ALL {
                     if member.mask_source() != scored {
@@ -55,9 +73,6 @@ impl HotNeuronCache {
                     }
                     let id = MatrixId::new(layer, member);
                     let row_bytes = store.layout.row_bytes(id) as u64;
-                    if cache.bytes + row_bytes * chosen.len() as u64 > budget_bytes {
-                        break 'outer;
-                    }
                     cache.bytes += row_bytes * chosen.len() as u64;
                     let mut mask = vec![false; rows];
                     for &r in &chosen {
@@ -256,6 +271,41 @@ mod tests {
         for &r in cache.cached_rows(id) {
             let data = cache.row_data(id, r).unwrap();
             assert_eq!(data, &logical[r * cols..(r + 1) * cols]);
+        }
+    }
+
+    #[test]
+    fn over_budget_group_skipped_not_fatal() {
+        let s = store();
+        let f = freqs_for(&s);
+        // At fraction 0.25 on tiny: the Q/K/V group costs 12288 B, O
+        // 4096 B, Gate/Up 24576 B, Down 12288 B per layer. With a
+        // 30000 B budget the Gate/Up group overflows — it must be
+        // skipped while the *later* Down group still fills the budget
+        // (the old `break 'outer` ended caching for every later group).
+        let cache = HotNeuronCache::build(&s, &f, 0.25, 30_000, false);
+        assert!(cache.bytes() <= 30_000);
+        assert!(
+            !cache.cached_rows(MatrixId::new(0, MatrixKind::Down)).is_empty(),
+            "later group should still be cached after an over-budget skip"
+        );
+        assert!(cache.cached_rows(MatrixId::new(0, MatrixKind::Gate)).is_empty());
+        assert_eq!(cache.bytes(), 28_672);
+        // Group atomicity: members sharing a mask are cached together or
+        // not at all (a partial group would break the engine's
+        // subtract-cached flash-read logic).
+        for layer in 0..s.spec.layers {
+            for scored in MatrixKind::SCORED {
+                for member in MatrixKind::ALL {
+                    if member.mask_source() == scored {
+                        assert_eq!(
+                            cache.cached_rows(MatrixId::new(layer, member)),
+                            cache.cached_rows(MatrixId::new(layer, scored)),
+                            "partial group at layer {layer} {scored:?}/{member:?}"
+                        );
+                    }
+                }
+            }
         }
     }
 

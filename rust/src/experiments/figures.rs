@@ -63,7 +63,7 @@ pub fn fig2(_q: Quality) -> anyhow::Result<Vec<Table>> {
     let relu = ActivationGen::relu(n, 11).sample(0);
     let vlm = ActivationGen::vlm(n, 196, 0.5, 11).sample(0);
     let norm_sort = |mut v: Vec<f32>| {
-        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v.sort_by(|a, b| b.total_cmp(a));
         let max = v[0].max(1e-9);
         v.into_iter().map(|x| x / max).collect::<Vec<f32>>()
     };

@@ -445,7 +445,7 @@ pub struct CurvePoint {
 pub fn speedup_at_matched_accuracy(baseline: &[CurvePoint], ours: &[CurvePoint]) -> (f64, f64) {
     // Build baseline accuracy -> latency interpolation (sorted by acc).
     let mut base: Vec<(f64, f64)> = baseline.iter().map(|p| (p.accuracy, p.io_seconds)).collect();
-    base.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    base.sort_by(|a, b| a.0.total_cmp(&b.0));
     let (lo, hi) = (base.first().unwrap().0, base.last().unwrap().0);
     let interp = |acc: f64| -> Option<f64> {
         if acc < lo || acc > hi {

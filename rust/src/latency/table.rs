@@ -37,6 +37,40 @@ impl LatencyTable {
         }
     }
 
+    /// Pool-effective table over heterogeneous members: the expected
+    /// `T[s]` for a chunk whose placement follows the stripe shares
+    /// (`weights`, e.g. per-member byte shares). Entries are the
+    /// weighted mean of the member tables' (interpolated/extrapolated)
+    /// latencies on a common grid — the smallest member step up to the
+    /// largest member range. Selection utility uses this, so chunk
+    /// selection prices a fast+slow pool between its extremes; exact
+    /// per-member tables still price each sharded sub-plan.
+    pub fn blended(tables: &[LatencyTable], weights: &[u64]) -> LatencyTable {
+        assert!(!tables.is_empty() && tables.len() == weights.len());
+        let step = tables.iter().map(|t| t.step_bytes()).min().unwrap();
+        let max = tables.iter().map(|t| t.max_bytes()).max().unwrap();
+        let total: u64 = weights.iter().sum();
+        let n = (max / step).max(1);
+        let entries: Vec<f64> = (1..=n)
+            .map(|i| {
+                let b = i * step;
+                tables
+                    .iter()
+                    .zip(weights)
+                    .map(|(t, &w)| {
+                        let w = if total > 0 {
+                            w as f64 / total as f64
+                        } else {
+                            1.0 / tables.len() as f64
+                        };
+                        w * t.latency_bytes(b)
+                    })
+                    .sum()
+            })
+            .collect();
+        LatencyTable::new(step, entries, tables[0].row_bytes())
+    }
+
     pub fn row_bytes(&self) -> usize {
         self.row_bytes
     }
@@ -275,6 +309,30 @@ mod tests {
     fn from_text_rejects_garbage() {
         assert!(LatencyTable::from_text("nope").is_err());
         assert!(LatencyTable::from_text("latency_table v1\nstep_bytes 0").is_err());
+    }
+
+    #[test]
+    fn blended_table_sits_between_members() {
+        let fast = table(); // 50us + 1 GB/s
+        let slow = LatencyTable::new(
+            1024,
+            (1..=64)
+                .map(|i| 100e-6 + (i * 1024) as f64 / 0.5e9)
+                .collect(),
+            1024,
+        );
+        let mix = LatencyTable::blended(&[fast.clone(), slow.clone()], &[1, 1]);
+        for b in [1024usize, 8192, 65536] {
+            let l = mix.latency_bytes(b);
+            assert!(l >= fast.latency_bytes(b) * 0.999, "mix below fast at {b}");
+            assert!(l <= slow.latency_bytes(b) * 1.001, "mix above slow at {b}");
+        }
+        // Homogeneous blend reproduces the member table (to float noise).
+        let same = LatencyTable::blended(&[fast.clone(), fast.clone()], &[3, 1]);
+        for b in [2048usize, 30000, 65536] {
+            let (a, want) = (same.latency_bytes(b), fast.latency_bytes(b));
+            assert!((a - want).abs() <= 1e-9 * want.abs(), "{a} vs {want}");
+        }
     }
 
     #[test]

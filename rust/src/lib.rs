@@ -38,6 +38,11 @@ pub mod storage;
 pub mod workload;
 
 pub use latency::{Chunk, ContiguityDistribution, LatencyTable};
-pub use plan::{CoalescePolicy, IoPlanner, PlanReceipt, PlanRequest, PlannedRead, ReadPlan};
+pub use plan::{
+    CoalescePolicy, DeviceSubPlan, IoPlanner, PlanReceipt, PlanRequest, PlannedRead, ReadPlan,
+    ShardedPlan,
+};
 pub use sparsify::{SelectionMask, Selector};
-pub use storage::{DeviceProfile, FlashDevice, SimulatedSsd};
+pub use storage::{
+    DevicePool, DeviceProfile, FlashDevice, PoolStats, SimulatedSsd, StripeLayout, StripePolicy,
+};

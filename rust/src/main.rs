@@ -16,7 +16,7 @@ use neuron_chunking::coordinator::{Engine, Policy};
 use neuron_chunking::report::{fmt_bw, fmt_secs, Table};
 use neuron_chunking::stats;
 use neuron_chunking::storage::{
-    DeviceProfile, Profiler, ProfileConfig, RealFileDevice, SimulatedSsd,
+    DeviceProfile, Profiler, ProfileConfig, RealFileDevice, SimulatedSsd, StripePolicy,
 };
 use neuron_chunking::workload::FrameTrace;
 
@@ -37,6 +37,12 @@ fn main() {
                  \x20               [--threads N]  executor kernel worker threads\n\
                  \x20                              (default 1; outputs are bit-identical\n\
                  \x20                              at every thread count)\n\
+                 \x20               [--devices N]  storage-pool members (default 1 or\n\
+                 \x20                              $NC_DEVICES; outputs are bit-identical\n\
+                 \x20                              at every pool size)\n\
+                 \x20               [--stripe-hot] layout-aware striping (co-locate each\n\
+                 \x20                              matrix's hot rows, staggered per matrix)\n\
+                 \x20               [--stripe-kb K] explicit stripe unit (default adaptive)\n\
                  \x20               POLICY: dense | topk | threshold[:t] |\n\
                  \x20                       chunking[:min_kb,jump_kb,max_kb] | bundling[:rows]\n\
                  \x20 repro profile [--device nano|agx|macbook] [--file PATH] [--out PATH]\n\
@@ -96,24 +102,34 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
 
-    println!(
-        "serving model={model} policy={policy_name} sparsity={sparsity} device={device} threads={threads}"
-    );
-    let engine = match Engine::builder(&model)
+    let mut builder = Engine::builder(&model)
         .policy(policy)
         .sparsity(sparsity)
         .profile(profile)
         .prefetch(!has_flag(args, "--no-prefetch"))
         .exec_threads(threads)
-        .artifacts(&artifacts)
-        .build()
-    {
+        .artifacts(&artifacts);
+    if let Some(n) = flag(args, "--devices").and_then(|s| s.parse::<usize>().ok()) {
+        builder = builder.devices(n);
+    }
+    if has_flag(args, "--stripe-hot") {
+        builder = builder.stripe_policy(StripePolicy::HotAware);
+    }
+    if let Some(kb) = flag(args, "--stripe-kb").and_then(|s| s.parse::<usize>().ok()) {
+        builder = builder.stripe_bytes(kb * 1024);
+    }
+    let engine = match builder.build() {
         Ok(e) => e,
         Err(e) => {
             eprintln!("engine init failed: {e:#}");
             return 1;
         }
     };
+    println!(
+        "serving model={model} policy={policy_name} sparsity={sparsity} device={device} \
+         threads={threads} devices={}",
+        engine.devices()
+    );
     let spec = engine.spec();
     let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, frames + 1, 11);
 
@@ -176,6 +192,34 @@ fn cmd_serve(args: &[String]) -> i32 {
         fmt_secs(med),
         1.0 / med
     );
+    // Per-member I/O breakdown + utilization skew for multi-device pools.
+    let n_dev = engine.devices();
+    if n_dev > 1 {
+        let m = engine.metrics();
+        let mut dt = Table::new("per-device I/O", &["device", "MB", "service", "share"]);
+        let services: Vec<f64> = (0..n_dev)
+            .map(|i| m.total(&format!("io.dev{i}")).as_secs_f64())
+            .collect();
+        let total_service: f64 = services.iter().sum();
+        for (i, &s) in services.iter().enumerate() {
+            dt.row(vec![
+                format!("dev{i}"),
+                format!("{:.1}", m.bytes(&format!("io.dev{i}")) as f64 / 1e6),
+                fmt_secs(s),
+                format!(
+                    "{:.1}%",
+                    if total_service > 0.0 { 100.0 * s / total_service } else { 0.0 }
+                ),
+            ]);
+        }
+        println!("{}", dt.render());
+        let max = services.iter().cloned().fold(0.0f64, f64::max);
+        let mean = total_service / n_dev as f64;
+        println!(
+            "utilization skew (max/mean member service): {:.2}",
+            if mean > 0.0 { max / mean } else { 1.0 }
+        );
+    }
     0
 }
 
@@ -251,7 +295,7 @@ fn cmd_profile(args: &[String]) -> i32 {
 }
 
 fn cmd_select(args: &[String]) -> i32 {
-    use neuron_chunking::sparsify::{ChunkSelect, Selector, TopK};
+    use neuron_chunking::sparsify::{ChunkSelect, ChunkSelectConfig, Selector, TopK};
     use neuron_chunking::workload::ActivationGen;
     let rows: usize = flag(args, "--rows").and_then(|s| s.parse().ok()).unwrap_or(4096);
     let sparsity: f64 = flag(args, "--sparsity")

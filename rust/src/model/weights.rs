@@ -92,6 +92,20 @@ impl FlashLayout {
         r.base + (row * r.row_bytes) as u64
     }
 
+    /// All matrix regions in flat-address order:
+    /// `(id, base, row_bytes, rows)`. Regions pack back-to-back, so the
+    /// returned list tiles `[0, total_bytes)`. Used by
+    /// [`crate::storage::StripeLayout`] to build row-aligned stripe maps.
+    pub fn regions_in_order(&self) -> Vec<(MatrixId, u64, usize, usize)> {
+        let mut v: Vec<(MatrixId, u64, usize, usize)> = self
+            .regions
+            .iter()
+            .map(|(id, r)| (*id, r.base, r.row_bytes, r.rows))
+            .collect();
+        v.sort_by_key(|&(_, base, _, _)| base);
+        v
+    }
+
     /// One extent per chunk — a chunk of `len` adjacent rows is a single
     /// contiguous read of `len * row_bytes`.
     pub fn extents_for_chunks(&self, id: MatrixId, chunks: &[Chunk]) -> Vec<Extent> {

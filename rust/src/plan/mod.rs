@@ -32,7 +32,7 @@ use std::time::Duration;
 
 use crate::latency::{Chunk, LatencyTable};
 use crate::model::{FlashLayout, MatrixId};
-use crate::storage::{DeviceProfile, Extent};
+use crate::storage::{DeviceProfile, Extent, StripeLayout};
 
 /// One matrix's chunked row demand (physical/reordered row space).
 #[derive(Clone, Debug)]
@@ -366,6 +366,94 @@ impl<'a> RowCursor<'a> {
     }
 }
 
+/// One pool member's slice of a sharded plan: device-local commands plus
+/// each command's destination byte offset inside the *logical* receipt.
+/// Commands appear in logical (flat-address) order; locally-contiguous
+/// pieces with contiguous destinations are merged on insert, so a
+/// one-member pool reproduces the logical command list exactly.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceSubPlan {
+    /// Device-local extents, in logical order.
+    pub cmds: Vec<Extent>,
+    /// Destination offset in the logical receipt's `bytes` per command.
+    pub dsts: Vec<usize>,
+}
+
+impl DeviceSubPlan {
+    pub fn is_empty(&self) -> bool {
+        self.cmds.is_empty()
+    }
+
+    /// Bytes this member will read.
+    pub fn bytes(&self) -> usize {
+        self.cmds.iter().map(|e| e.len).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.cmds.clear();
+        self.dsts.clear();
+    }
+
+    pub fn reserve(&mut self, cmds: usize) {
+        self.cmds.reserve(cmds);
+        self.dsts.reserve(cmds);
+    }
+
+    /// Append a piece, merging with the previous one when both the
+    /// device-local range and the destination range are contiguous.
+    pub fn push_piece(&mut self, local: Extent, dst: usize) {
+        if let Some(last) = self.cmds.last_mut() {
+            let last_dst = *self.dsts.last().unwrap();
+            if last.end() == local.offset && last_dst + last.len == dst {
+                last.len += local.len;
+                return;
+            }
+        }
+        self.cmds.push(local);
+        self.dsts.push(dst);
+    }
+}
+
+/// A logical [`ReadPlan`] split across the members of a storage pool:
+/// one [`DeviceSubPlan`] per member (possibly empty). Built by
+/// [`IoPlanner::shard_into`], consumed by
+/// [`crate::storage::DevicePool::submit_sharded_into`], which reassembles
+/// the logical receipt bit-identically to a single-device submission.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedPlan {
+    pub shards: Vec<DeviceSubPlan>,
+    /// Logical bytes covered (== the source plan's `cmd_bytes`).
+    total: usize,
+}
+
+impl ShardedPlan {
+    pub fn total_bytes(&self) -> usize {
+        self.total
+    }
+
+    /// Reset in place for a pool of `devices` members, reusing all
+    /// buffer capacity.
+    pub fn clear_for(&mut self, devices: usize) {
+        if self.shards.len() != devices {
+            self.shards.resize_with(devices, Default::default);
+        }
+        for s in &mut self.shards {
+            s.clear();
+        }
+        self.total = 0;
+    }
+
+    /// Pre-reserve worst-case per-member command capacity.
+    pub fn reserve(&mut self, devices: usize, cmds: usize) {
+        if self.shards.len() < devices {
+            self.shards.resize_with(devices, Default::default);
+        }
+        for s in &mut self.shards {
+            s.reserve(cmds);
+        }
+    }
+}
+
 /// Raw per-chunk span prior to coalescing (planner working memory).
 #[derive(Clone, Copy, Debug)]
 struct RawSpan {
@@ -520,6 +608,26 @@ impl IoPlanner {
         table: Option<&LatencyTable>,
     ) -> ReadPlan {
         self.plan(layout, &[PlanRequest::new(id, chunks.to_vec())], table)
+    }
+
+    /// The shard step: split one logical [`ReadPlan`] into per-member
+    /// sub-plans under a pool's [`StripeLayout`]. Every logical command
+    /// is cut at stripe boundaries; each piece becomes a device-local
+    /// command carrying its destination offset in the logical receipt,
+    /// so the pool can reassemble submission results bit-identically to
+    /// a single-device submit. Allocation-free at steady state (`out`
+    /// reuses its capacity); with a one-member pool the single shard
+    /// reproduces the logical command list exactly.
+    pub fn shard_into(&self, plan: &ReadPlan, stripe: &StripeLayout, out: &mut ShardedPlan) {
+        out.clear_for(stripe.devices());
+        let mut at = 0usize;
+        for cmd in plan.cmds() {
+            stripe.for_pieces(*cmd, |dev, local, flat| {
+                out.shards[dev].push_piece(local, at + (flat - cmd.offset) as usize);
+            });
+            at += cmd.len;
+        }
+        out.total = at;
     }
 }
 

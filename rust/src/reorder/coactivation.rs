@@ -35,7 +35,7 @@ impl CoActivationReorder {
                 assert_eq!(s.len(), n);
                 let mut idx: Vec<u32> = (0..n as u32).collect();
                 idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                    s[b as usize].partial_cmp(&s[a as usize]).unwrap()
+                    s[b as usize].total_cmp(&s[a as usize])
                 });
                 let mut row = vec![false; n];
                 for &i in &idx[..k] {

@@ -21,8 +21,7 @@ impl HotColdReorder {
         let mut idx: Vec<u32> = (0..freq.len() as u32).collect();
         idx.sort_by(|&a, &b| {
             freq[b as usize]
-                .partial_cmp(&freq[a as usize])
-                .unwrap()
+                .total_cmp(&freq[a as usize])
                 .then(a.cmp(&b))
         });
         Permutation::from_fwd(idx).expect("sorted indices are a bijection")

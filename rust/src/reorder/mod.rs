@@ -37,7 +37,7 @@ pub fn activation_frequency(samples: &[Vec<f32>], n: usize) -> Vec<f64> {
             continue;
         }
         // Threshold = k-th largest value.
-        scratch.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+        scratch.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
         let thresh = scratch[k - 1];
         for (i, &v) in s.iter().enumerate() {
             if v >= thresh {

@@ -55,7 +55,7 @@ impl Selector for Bundling {
                 (s, i)
             })
             .collect();
-        scores.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scores.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
         let mut mask = vec![false; n];
         let mut selected = 0usize;
         for &(_, i) in &scores {

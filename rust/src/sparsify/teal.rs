@@ -37,7 +37,7 @@ impl SparsityAllocator {
                     .iter()
                     .map(|&x| if mean > 0.0 { (x as f64 / mean) as f32 } else { x })
                     .collect();
-                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v.sort_by(|a, b| a.total_cmp(b));
                 v
             })
             .collect();

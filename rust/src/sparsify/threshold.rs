@@ -19,7 +19,7 @@ impl Threshold {
     pub fn calibrated(samples: &[f32], sparsity: f64) -> Self {
         assert!((0.0..=1.0).contains(&sparsity));
         let mut v: Vec<f32> = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let cut = ((v.len() as f64) * sparsity) as usize;
         let threshold = if cut == 0 {
             f32::NEG_INFINITY

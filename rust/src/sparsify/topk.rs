@@ -50,9 +50,7 @@ impl Selector for TopK {
         idx.clear();
         idx.extend(0..n as u32);
         idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            importance[b as usize]
-                .partial_cmp(&importance[a as usize])
-                .unwrap_or(std::cmp::Ordering::Equal)
+            importance[b as usize].total_cmp(&importance[a as usize])
         });
         out.reset(n);
         for &i in &idx[..k] {
@@ -99,7 +97,7 @@ mod tests {
         let imp = [3.0f32, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
         let sm = TopK.select(&imp, 4, &table());
         let mut sorted = imp.to_vec();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        sorted.sort_by(|a, b| b.total_cmp(a));
         let best: f64 = sorted[..4].iter().map(|&v| v as f64).sum();
         assert!((sm.captured_importance(&imp) - best).abs() < 1e-6);
     }

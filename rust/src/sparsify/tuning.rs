@@ -146,9 +146,8 @@ pub fn pick_config(points: &[SweepPoint], saturation_kb: f64) -> Option<ChunkSel
         .filter(|p| p.feasible && p.runtime_ms <= 0.8 * RUNTIME_GATE_MS)
         .min_by(|a, b| {
             (a.start_kb + a.jump_cap_kb)
-                .partial_cmp(&(b.start_kb + b.jump_cap_kb))
-                .unwrap()
-                .then(a.runtime_ms.partial_cmp(&b.runtime_ms).unwrap())
+                .total_cmp(&(b.start_kb + b.jump_cap_kb))
+                .then(a.runtime_ms.total_cmp(&b.runtime_ms))
         })
         .map(|p| ChunkSelectConfig::new(p.start_kb, p.jump_cap_kb, saturation_kb))
 }

@@ -37,7 +37,7 @@ pub fn cv(xs: &[f64]) -> f64 {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&v, p)
 }
 
@@ -171,7 +171,7 @@ pub fn bootstrap_bca(
         }
         boots.push(stat(&buf));
     }
-    boots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    boots.sort_by(|a, b| a.total_cmp(b));
 
     // Bias correction: fraction of bootstrap stats below the point estimate.
     let below = boots.iter().filter(|&&b| b < theta).count();

@@ -16,6 +16,7 @@
 //! [`Profiler`] implements the Appendix-D microbenchmark that builds the
 //! `T[s]` lookup table against either backend.
 
+mod pool;
 mod profile;
 mod profiler;
 mod real;
@@ -25,6 +26,7 @@ use std::time::Duration;
 
 use crate::plan::{PlanReceipt, ReadPlan};
 
+pub use pool::{DevicePool, PoolScratch, PoolStats, StripeLayout, StripePolicy};
 pub use profile::DeviceProfile;
 pub use profiler::{ProfileConfig, Profiler};
 pub use real::RealFileDevice;
@@ -58,6 +60,16 @@ pub trait FlashDevice: Send + Sync {
 
     /// Total addressable bytes.
     fn capacity(&self) -> u64;
+
+    /// Whether reported service time is a *virtual* clock (analytical
+    /// simulators) rather than measured wall time. A [`DevicePool`]
+    /// submits all-virtual-clock members serially — concurrency cannot
+    /// change an analytical clock, max-over-members aggregation is exact
+    /// either way, and the pooled serving hot path stays
+    /// allocation-free (no per-submit thread spawn).
+    fn is_virtual_time(&self) -> bool {
+        false
+    }
 
     /// Read all extents into `out` (must equal the summed extent length).
     fn read_batch(&self, extents: &[Extent], out: &mut [u8]) -> anyhow::Result<Duration>;

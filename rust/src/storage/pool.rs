@@ -1,0 +1,933 @@
+//! Sharded multi-device storage pool.
+//!
+//! Production edge/serving boxes stripe model weights across several
+//! flash devices or NVMe namespaces; once per-device access cost is
+//! modeled (the paper's `T[s]`), *inter-device* parallelism is the
+//! remaining lever on top of the paper's *intra-device* contiguity
+//! model. This module supplies that layer:
+//!
+//! * [`StripeLayout`] maps the flat weight address space of a
+//!   [`FlashLayout`] onto N member devices. Striping is **chunk-granular
+//!   and row-aligned**: stripe blocks never split a weight row, and the
+//!   unit is sized to the scale of selection chunks (adaptive
+//!   `rows/(4·N)` per matrix by default, or an explicit byte size), so a
+//!   selected chunk maps to one member in the common case and at most a
+//!   handful at the boundaries — never the page-granular shredding of
+//!   classic RAID striping, which would destroy the contiguity the
+//!   whole system is built around.
+//! * [`DevicePool`] owns the members (each a [`FlashDevice`] with its
+//!   own profile and `T[s]` table) and serves logical plans: a
+//!   [`crate::plan::ShardedPlan`] (built by
+//!   [`crate::plan::IoPlanner::shard_into`]) is fanned out across
+//!   members and reassembled into the *logical* [`PlanReceipt`] —
+//!   byte-identical to a single-device submission. Service time is the
+//!   **max over members** (devices work in parallel), and per-member
+//!   bytes/latency are reported through [`PoolStats`] so utilization
+//!   skew is observable.
+//!
+//! Fan-out strategy: members whose service time is a *virtual* clock
+//! ([`crate::storage::SimulatedSsd`]) are submitted serially — an
+//! analytical clock cannot tell the difference, the max-over-members
+//! aggregation is exact either way, and the serving hot path stays
+//! allocation-free. Pools with any wall-clock member
+//! ([`crate::storage::RealFileDevice`]) fan out with
+//! `std::thread::scope`, one thread per member with a non-empty
+//! sub-plan.
+
+use std::time::Duration;
+
+use crate::latency::LatencyTable;
+use crate::model::FlashLayout;
+use crate::plan::{DeviceSubPlan, PlanReceipt, ReadPlan, ShardedPlan};
+use crate::storage::{DeviceProfile, Extent, FlashDevice, RealFileDevice, SimulatedSsd};
+
+/// How stripe blocks are assigned to pool members.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StripePolicy {
+    /// Block `b` of every matrix region goes to member `b % N`. Simple
+    /// and balanced by volume, but after a hot–cold reorder every
+    /// matrix's hottest rows (the low block indices) pile onto member 0.
+    RoundRobin,
+    /// Layout-aware: each matrix's hot head (its first `⌈blocks/N⌉`
+    /// stripe blocks — the hottest rows once the reorder permutation is
+    /// baked in) is co-located on one member, staggered per matrix
+    /// (`region_seq % N`), so hot traffic spreads across members while
+    /// staying intra-member contiguous. Cold tails round-robin.
+    HotAware,
+}
+
+/// Chunk-granular mapping of the flat weight address space onto pool
+/// members.
+///
+/// Invariants (property-tested):
+/// * blocks tile `[0, total_bytes)` exactly, in flat-address order;
+/// * every block boundary is a row boundary of its matrix region (a
+///   weight row never straddles members — with `align_rows` layouts
+///   this also keeps sharded commands page-aligned);
+/// * each member's blocks are assigned disjoint, densely-packed
+///   device-local ranges, so member images partition the flat image.
+#[derive(Clone, Debug)]
+pub struct StripeLayout {
+    devices: usize,
+    /// Flat start offset per block, ascending; block `b` ends where
+    /// block `b+1` starts (the last ends at `total`).
+    starts: Vec<u64>,
+    /// Owning member per block.
+    device: Vec<u32>,
+    /// Device-local start offset per block.
+    local: Vec<u64>,
+    /// Total bytes assigned to each member.
+    device_bytes: Vec<u64>,
+    total: u64,
+}
+
+impl StripeLayout {
+    /// Build a stripe map for `devices` members over `layout`.
+    ///
+    /// `stripe_bytes = None` sizes blocks adaptively per matrix
+    /// (`⌈rows / (4·devices)⌉` rows) so every matrix stripes across all
+    /// members regardless of its size; `Some(b)` uses `max(1, b /
+    /// row_bytes)` rows per block (production-scale, chunk-granular
+    /// units).
+    pub fn build(
+        layout: &FlashLayout,
+        devices: usize,
+        policy: StripePolicy,
+        stripe_bytes: Option<usize>,
+    ) -> Self {
+        let devices = devices.max(1);
+        let mut starts = Vec::new();
+        let mut device = Vec::new();
+        let mut local = Vec::new();
+        let mut device_bytes = vec![0u64; devices];
+        for (seq, (_id, base, row_bytes, rows)) in
+            layout.regions_in_order().into_iter().enumerate()
+        {
+            let stripe_rows = match stripe_bytes {
+                Some(b) => (b / row_bytes).max(1),
+                None => rows.div_ceil(devices * 4).max(1),
+            };
+            let nblocks = rows.div_ceil(stripe_rows);
+            let hot = nblocks.div_ceil(devices);
+            for b in 0..nblocks {
+                let dev = match policy {
+                    StripePolicy::RoundRobin => b % devices,
+                    StripePolicy::HotAware => {
+                        if b < hot {
+                            seq % devices
+                        } else {
+                            (seq + b) % devices
+                        }
+                    }
+                };
+                let row0 = b * stripe_rows;
+                let nrows = stripe_rows.min(rows - row0);
+                let len = (nrows * row_bytes) as u64;
+                starts.push(base + (row0 * row_bytes) as u64);
+                device.push(dev as u32);
+                local.push(device_bytes[dev]);
+                device_bytes[dev] += len;
+            }
+        }
+        Self {
+            devices,
+            starts,
+            device,
+            local,
+            device_bytes,
+            total: layout.total_bytes(),
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.starts.len()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total
+    }
+
+    /// Bytes assigned to each member (sums to `total_bytes`).
+    pub fn device_bytes(&self) -> &[u64] {
+        &self.device_bytes
+    }
+
+    fn block_of(&self, offset: u64) -> usize {
+        match self.starts.binary_search(&offset) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Owning member of a flat byte offset.
+    pub fn device_of(&self, offset: u64) -> usize {
+        self.device[self.block_of(offset)] as usize
+    }
+
+    /// Split a flat extent at stripe boundaries, emitting
+    /// `(member, device-local extent, flat offset of the piece)` in flat
+    /// order. Allocation-free.
+    pub fn for_pieces(&self, extent: Extent, mut f: impl FnMut(usize, Extent, u64)) {
+        if extent.len == 0 {
+            return;
+        }
+        debug_assert!(extent.end() <= self.total, "extent beyond stripe map");
+        let mut off = extent.offset;
+        let end = extent.end();
+        let mut b = self.block_of(off);
+        while off < end {
+            let block_end = if b + 1 < self.starts.len() {
+                self.starts[b + 1]
+            } else {
+                self.total
+            };
+            let take = block_end.min(end) - off;
+            let local = self.local[b] + (off - self.starts[b]);
+            f(self.device[b] as usize, Extent::new(local, take as usize), off);
+            off += take;
+            b += 1;
+        }
+    }
+
+    /// Partition a flat flash image into per-member images
+    /// (device-local address space).
+    pub fn shard_image(&self, flat: &[u8]) -> Vec<Vec<u8>> {
+        assert_eq!(flat.len() as u64, self.total, "image / layout size mismatch");
+        let mut out: Vec<Vec<u8>> = self
+            .device_bytes
+            .iter()
+            .map(|&b| vec![0u8; b as usize])
+            .collect();
+        for b in 0..self.starts.len() {
+            let start = self.starts[b] as usize;
+            let end = if b + 1 < self.starts.len() {
+                self.starts[b + 1] as usize
+            } else {
+                flat.len()
+            };
+            let dev = self.device[b] as usize;
+            let local = self.local[b] as usize;
+            out[dev][local..local + (end - start)].copy_from_slice(&flat[start..end]);
+        }
+        out
+    }
+}
+
+/// Per-member bytes and service time of pooled submissions. `reset` per
+/// submit, `absorb` to accumulate across a call; all buffers reusable
+/// (allocation-free at steady state once reserved).
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    pub bytes: Vec<u64>,
+    pub service: Vec<Duration>,
+}
+
+impl PoolStats {
+    pub fn reset(&mut self, devices: usize) {
+        self.bytes.clear();
+        self.bytes.resize(devices, 0);
+        self.service.clear();
+        self.service.resize(devices, Duration::ZERO);
+    }
+
+    pub fn reserve(&mut self, devices: usize) {
+        self.bytes.reserve(devices);
+        self.service.reserve(devices);
+    }
+
+    /// Accumulate another submission's stats into this one.
+    pub fn absorb(&mut self, other: &PoolStats) {
+        if self.bytes.len() < other.bytes.len() {
+            self.bytes.resize(other.bytes.len(), 0);
+            self.service.resize(other.service.len(), Duration::ZERO);
+        }
+        for (a, &b) in self.bytes.iter_mut().zip(&other.bytes) {
+            *a += b;
+        }
+        for (a, &b) in self.service.iter_mut().zip(&other.service) {
+            *a += b;
+        }
+    }
+
+    /// Pool service time: the slowest member (devices work in parallel).
+    pub fn max_service(&self) -> Duration {
+        self.service.iter().max().copied().unwrap_or_default()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Utilization skew: max member service over mean member service
+    /// (1.0 = perfectly balanced; N = one member did all the work).
+    pub fn utilization_skew(&self) -> f64 {
+        let n = self.service.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let max = self.max_service().as_secs_f64();
+        let mean = self.service.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Reusable working memory for pooled submissions: the sharded plan,
+/// per-member staging receipts, the last submission's [`PoolStats`] and
+/// a per-call accumulator. Lives in the session's scratch arena so the
+/// pooled hot path stays allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct PoolScratch {
+    pub sharded: ShardedPlan,
+    pub staging: Vec<PlanReceipt>,
+    /// Stats of the most recent submission.
+    pub last: PoolStats,
+    /// Accumulated stats across a serving call (reset per call).
+    pub accum: PoolStats,
+}
+
+impl PoolScratch {
+    /// Pre-reserve worst-case capacity: `cmds` commands and `bytes`
+    /// staging bytes per member.
+    pub fn reserve(&mut self, devices: usize, cmds: usize, bytes: usize) {
+        self.sharded.reserve(devices, cmds);
+        if self.staging.len() < devices {
+            self.staging.resize_with(devices, Default::default);
+        }
+        for st in &mut self.staging {
+            st.reserve(bytes, cmds);
+        }
+        self.last.reserve(devices);
+        self.accum.reserve(devices);
+    }
+}
+
+/// Raw pointer wrapper that is Send/Sync (disjoint-range writes only).
+struct SendPtr(*mut u8);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// A pool of N flash devices behind one flat address space.
+///
+/// Implements [`FlashDevice`] over the *flat* space (capacity =
+/// `StripeLayout::total_bytes`), so planner-backed cold paths
+/// ([`crate::model::WeightStore::read_rows`], the profiler) work
+/// unchanged; the serving hot path uses [`DevicePool::submit_sharded_into`]
+/// with caller-owned scratch instead.
+pub struct DevicePool {
+    name: String,
+    members: Vec<Box<dyn FlashDevice>>,
+    /// Per-member profiled `T[s]` (absent for members built without one).
+    tables: Vec<Option<LatencyTable>>,
+    stripe: StripeLayout,
+    /// Fan out with scoped threads (any wall-clock member) vs the exact
+    /// serial path (all-virtual-clock members; keeps the hot path
+    /// allocation-free).
+    parallel: bool,
+}
+
+impl DevicePool {
+    pub fn new(
+        name: &str,
+        members: Vec<Box<dyn FlashDevice>>,
+        stripe: StripeLayout,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!members.is_empty(), "pool needs at least one member");
+        anyhow::ensure!(
+            members.len() == stripe.devices(),
+            "pool has {} members but stripe maps {}",
+            members.len(),
+            stripe.devices()
+        );
+        for (m, member) in members.iter().enumerate() {
+            anyhow::ensure!(
+                member.capacity() >= stripe.device_bytes()[m],
+                "member {m} ({}) holds {} < assigned {}",
+                member.name(),
+                member.capacity(),
+                stripe.device_bytes()[m]
+            );
+        }
+        let parallel = !members.iter().all(|m| m.is_virtual_time());
+        let tables = members.iter().map(|_| None).collect();
+        Ok(Self {
+            name: name.to_string(),
+            members,
+            tables,
+            stripe,
+            parallel,
+        })
+    }
+
+    /// Attach per-member latency tables (one per member, in order).
+    pub fn with_tables(mut self, tables: Vec<LatencyTable>) -> Self {
+        assert_eq!(tables.len(), self.members.len());
+        self.tables = tables.into_iter().map(Some).collect();
+        self
+    }
+
+    /// Homogeneous-or-heterogeneous simulated pool: one
+    /// [`SimulatedSsd`] member per profile, each backed by its shard of
+    /// `image`. Member `m` is seeded `seed ^ (m · φ64)` so member 0 of a
+    /// 1-member pool reproduces the historical single-device stream.
+    pub fn simulated(
+        profiles: &[DeviceProfile],
+        stripe: StripeLayout,
+        image: &[u8],
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            profiles.len() == stripe.devices(),
+            "{} profiles for {} stripe members",
+            profiles.len(),
+            stripe.devices()
+        );
+        let shards = stripe.shard_image(image);
+        let members: Vec<Box<dyn FlashDevice>> = shards
+            .into_iter()
+            .zip(profiles)
+            .enumerate()
+            .map(|(m, (img, p))| {
+                Box::new(SimulatedSsd::with_image(
+                    p.clone(),
+                    img,
+                    seed ^ (m as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                )) as Box<dyn FlashDevice>
+            })
+            .collect();
+        Self::new("pool", members, stripe)
+    }
+
+    /// Real-storage pool: one backing file per member (each holding that
+    /// member's device-local image, e.g. written from
+    /// [`StripeLayout::shard_image`]).
+    pub fn from_files(
+        paths: &[std::path::PathBuf],
+        stripe: StripeLayout,
+        threads: usize,
+        direct: bool,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            paths.len() == stripe.devices(),
+            "{} files for {} stripe members",
+            paths.len(),
+            stripe.devices()
+        );
+        let members = paths
+            .iter()
+            .map(|p| {
+                RealFileDevice::open(p, threads, direct)
+                    .map(|d| Box::new(d) as Box<dyn FlashDevice>)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Self::new("pool-files", members, stripe)
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn member(&self, m: usize) -> &dyn FlashDevice {
+        self.members[m].as_ref()
+    }
+
+    pub fn member_table(&self, m: usize) -> Option<&LatencyTable> {
+        self.tables.get(m).and_then(|t| t.as_ref())
+    }
+
+    pub fn stripe(&self) -> &StripeLayout {
+        &self.stripe
+    }
+
+    /// Pool-aware plan estimate: service time is the slowest member, so
+    /// the estimate is the max over members of `Σ T_m[bytes(cmd)]` under
+    /// each member's own table. 0.0 when no tables are attached.
+    pub fn estimate_sharded(&self, sharded: &ShardedPlan) -> f64 {
+        let mut worst = 0.0f64;
+        for (m, shard) in sharded.shards.iter().enumerate() {
+            if let Some(t) = self.member_table(m) {
+                let est: f64 = shard.cmds.iter().map(|c| t.latency_bytes(c.len)).sum();
+                worst = worst.max(est);
+            }
+        }
+        worst
+    }
+
+    /// Submit a pre-sharded logical plan: fan the per-member sub-plans
+    /// out across members, reassemble the *logical* receipt (bytes in
+    /// logical command order — bit-identical to a single-device
+    /// submission), report service as the max over members, and record
+    /// per-member bytes/latency into `stats`.
+    ///
+    /// Allocation-free at steady state: `staging` receipts and `stats`
+    /// vectors reuse their capacity (pool them in a
+    /// [`PoolScratch`]). Logical submission batches are not preserved —
+    /// each member receives its sub-plan as one deep batch (the serving
+    /// coalesce policy submits one batch anyway).
+    pub fn submit_sharded_into(
+        &self,
+        plan: &ReadPlan,
+        sharded: &ShardedPlan,
+        staging: &mut Vec<PlanReceipt>,
+        receipt: &mut PlanReceipt,
+        stats: &mut PoolStats,
+    ) -> anyhow::Result<()> {
+        let n = self.members.len();
+        anyhow::ensure!(
+            sharded.shards.len() == n,
+            "sharded plan has {} shards for {} members",
+            sharded.shards.len(),
+            n
+        );
+        receipt.clear();
+        let cmds = plan.cmds();
+        let total: usize = cmds.iter().map(|e| e.len).sum();
+        anyhow::ensure!(
+            sharded.total_bytes() == total,
+            "sharded plan covers {} of {} plan bytes",
+            sharded.total_bytes(),
+            total
+        );
+        receipt.bytes.resize(total, 0);
+        let mut at = 0usize;
+        for e in cmds {
+            receipt.cmd_offsets.push(at);
+            at += e.len;
+        }
+        if staging.len() < n {
+            staging.resize_with(n, Default::default);
+        }
+        stats.reset(n);
+        receipt.service = self.fan_out(&sharded.shards, staging, &mut receipt.bytes, stats)?;
+        Ok(())
+    }
+
+    /// Run every member's sub-plan, scattering the data into the logical
+    /// output buffer (`dsts` are disjoint by construction). Returns the
+    /// max member service time.
+    fn fan_out(
+        &self,
+        shards: &[DeviceSubPlan],
+        staging: &mut [PlanReceipt],
+        out: &mut [u8],
+        stats: &mut PoolStats,
+    ) -> anyhow::Result<Duration> {
+        let mut max = Duration::ZERO;
+        if !self.parallel {
+            // Serial exact path: members report virtual clocks, so
+            // concurrency cannot change the outcome; max-over-members is
+            // computed directly and no thread is spawned (the pooled
+            // serving hot path stays allocation-free).
+            for (m, shard) in shards.iter().enumerate() {
+                if shard.cmds.is_empty() {
+                    continue;
+                }
+                let st = &mut staging[m];
+                st.clear();
+                let b = shard.bytes();
+                st.bytes.resize(b, 0);
+                let d = self.members[m].read_batch(&shard.cmds, &mut st.bytes)?;
+                let mut sat = 0usize;
+                for (e, &dst) in shard.cmds.iter().zip(&shard.dsts) {
+                    out[dst..dst + e.len].copy_from_slice(&st.bytes[sat..sat + e.len]);
+                    sat += e.len;
+                }
+                stats.bytes[m] = b as u64;
+                stats.service[m] = d;
+                max = max.max(d);
+            }
+            return Ok(max);
+        }
+
+        // Wall-clock members: one scoped thread per member with a
+        // non-empty sub-plan, each reading into its own staging buffer
+        // and scattering to disjoint ranges of the shared output.
+        let out_len = out.len();
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let mut err: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (m, (shard, st)) in shards.iter().zip(staging.iter_mut()).enumerate() {
+                if shard.cmds.is_empty() {
+                    continue;
+                }
+                let member = &self.members[m];
+                let out_ptr = &out_ptr;
+                handles.push((
+                    m,
+                    scope.spawn(move || -> anyhow::Result<(u64, Duration)> {
+                        st.clear();
+                        let b = shard.bytes();
+                        st.bytes.resize(b, 0);
+                        let d = member.read_batch(&shard.cmds, &mut st.bytes)?;
+                        let mut sat = 0usize;
+                        for (e, &dst) in shard.cmds.iter().zip(&shard.dsts) {
+                            debug_assert!(dst + e.len <= out_len);
+                            // SAFETY: members scatter to disjoint
+                            // [dst, dst+len) ranges (the shard step
+                            // partitions every logical command).
+                            let slice = unsafe {
+                                std::slice::from_raw_parts_mut(out_ptr.0.add(dst), e.len)
+                            };
+                            slice.copy_from_slice(&st.bytes[sat..sat + e.len]);
+                            sat += e.len;
+                        }
+                        Ok((b as u64, d))
+                    }),
+                ));
+            }
+            for (m, h) in handles {
+                match h.join().expect("pool member thread panicked") {
+                    Ok((b, d)) => {
+                        stats.bytes[m] = b;
+                        stats.service[m] = d;
+                        max = max.max(d);
+                    }
+                    Err(e) => err = Some(e),
+                }
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(max)
+    }
+}
+
+impl FlashDevice for DevicePool {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn capacity(&self) -> u64 {
+        self.stripe.total_bytes()
+    }
+
+    fn is_virtual_time(&self) -> bool {
+        self.members.iter().all(|m| m.is_virtual_time())
+    }
+
+    /// Flat-space batched read (cold paths; allocates working memory).
+    /// Service time is the max over members.
+    fn read_batch(&self, extents: &[Extent], out: &mut [u8]) -> anyhow::Result<Duration> {
+        let total: usize = extents.iter().map(|e| e.len).sum();
+        anyhow::ensure!(out.len() == total, "out buffer {} != {}", out.len(), total);
+        if self.members.len() == 1 {
+            return self.members[0].read_batch(extents, out);
+        }
+        for e in extents {
+            anyhow::ensure!(
+                e.end() <= self.stripe.total_bytes(),
+                "extent {:?} beyond pool capacity {}",
+                e,
+                self.stripe.total_bytes()
+            );
+        }
+        let n = self.members.len();
+        let mut shards: Vec<DeviceSubPlan> = (0..n).map(|_| DeviceSubPlan::default()).collect();
+        let mut at = 0usize;
+        for e in extents {
+            self.stripe.for_pieces(*e, |dev, local, flat| {
+                shards[dev].push_piece(local, at + (flat - e.offset) as usize);
+            });
+            at += e.len;
+        }
+        let mut staging: Vec<PlanReceipt> = (0..n).map(|_| PlanReceipt::default()).collect();
+        let mut stats = PoolStats::default();
+        stats.reset(n);
+        self.fan_out(&shards, &mut staging, out, &mut stats)
+    }
+
+    fn service_time(&self, extents: &[Extent]) -> anyhow::Result<Duration> {
+        let total: usize = extents.iter().map(|e| e.len).sum();
+        let mut scratch = vec![0u8; total];
+        self.read_batch(extents, &mut scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latency::Chunk;
+    use crate::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+    use crate::plan::{CoalescePolicy, IoPlanner, PlanRequest};
+
+    fn store() -> WeightStore {
+        WeightStore::new(ModelSpec::tiny(), false, 42)
+    }
+
+    fn nano_pool(
+        store: &WeightStore,
+        image: &[u8],
+        devices: usize,
+        policy: StripePolicy,
+    ) -> DevicePool {
+        let stripe = StripeLayout::build(&store.layout, devices, policy, None);
+        DevicePool::simulated(&vec![DeviceProfile::nano(); devices], stripe, image, 7).unwrap()
+    }
+
+    #[test]
+    fn stripe_blocks_tile_and_balance() {
+        let s = store();
+        for devices in [1usize, 2, 3, 4] {
+            let stripe = StripeLayout::build(&s.layout, devices, StripePolicy::RoundRobin, None);
+            assert_eq!(
+                stripe.device_bytes().iter().sum::<u64>(),
+                s.layout.total_bytes()
+            );
+            assert_eq!(stripe.devices(), devices);
+            if devices > 1 {
+                // Adaptive striping gives every member a non-trivial share.
+                for (m, &b) in stripe.device_bytes().iter().enumerate() {
+                    assert!(b > 0, "member {m} got no bytes");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stripe_boundaries_are_row_aligned() {
+        let s = store();
+        let stripe = StripeLayout::build(&s.layout, 4, StripePolicy::RoundRobin, None);
+        for (id, base, row_bytes, rows) in s.layout.regions_in_order() {
+            let _ = id;
+            let end = base + (rows * row_bytes) as u64;
+            for &start in &stripe.starts {
+                if start > base && start < end {
+                    assert_eq!(
+                        ((start - base) as usize) % row_bytes,
+                        0,
+                        "block boundary splits a row"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pieces_reassemble_extents() {
+        let s = store();
+        let stripe = StripeLayout::build(&s.layout, 3, StripePolicy::HotAware, Some(2048));
+        let extent = Extent::new(100, 9000);
+        let mut covered = 0usize;
+        let mut next_flat = extent.offset;
+        stripe.for_pieces(extent, |dev, local, flat| {
+            assert!(dev < 3);
+            assert_eq!(flat, next_flat, "pieces out of order or gapped");
+            assert!(local.end() <= stripe.device_bytes()[dev]);
+            covered += local.len;
+            next_flat += local.len as u64;
+        });
+        assert_eq!(covered, extent.len);
+    }
+
+    #[test]
+    fn hot_aware_staggers_region_heads() {
+        let s = store();
+        let stripe = StripeLayout::build(&s.layout, 4, StripePolicy::HotAware, None);
+        let heads: Vec<usize> = s
+            .layout
+            .regions_in_order()
+            .iter()
+            .map(|&(_, base, _, _)| stripe.device_of(base))
+            .collect();
+        // Consecutive matrices' hot heads land on different members.
+        assert!(heads.windows(2).any(|w| w[0] != w[1]));
+        let distinct: std::collections::HashSet<usize> = heads.iter().copied().collect();
+        assert_eq!(distinct.len(), 4, "hot heads should cover all members");
+    }
+
+    #[test]
+    fn round_robin_piles_heads_on_member_zero() {
+        let s = store();
+        let stripe = StripeLayout::build(&s.layout, 4, StripePolicy::RoundRobin, None);
+        for (_, base, _, _) in s.layout.regions_in_order() {
+            assert_eq!(stripe.device_of(base), 0);
+        }
+    }
+
+    #[test]
+    fn pool_read_batch_matches_flat_image() {
+        let s = store();
+        let image = s.build_image();
+        for devices in [1usize, 2, 4] {
+            for policy in [StripePolicy::RoundRobin, StripePolicy::HotAware] {
+                let pool = nano_pool(&s, &image, devices, policy);
+                let extents = [
+                    Extent::new(10, 100),
+                    Extent::new(5000, 2000),
+                    Extent::new(image.len() as u64 - 64, 64),
+                ];
+                let (bytes, t) = pool.read_batch_vec(&extents).unwrap();
+                let mut want = Vec::new();
+                for e in &extents {
+                    want.extend_from_slice(&image[e.offset as usize..e.end() as usize]);
+                }
+                assert_eq!(bytes, want, "devices={devices} policy={policy:?}");
+                assert!(t > Duration::ZERO);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_submit_reassembles_logical_receipt() {
+        let s = store();
+        let image = s.build_image();
+        let flat = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 5);
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let id = MatrixId::new(0, MatrixKind::Gate);
+        let requests = vec![PlanRequest::new(
+            id,
+            vec![Chunk::new(0, 8), Chunk::new(20, 5), Chunk::new(40, 16)],
+        )];
+        let plan = planner.plan(&s.layout, &requests, None);
+        let want = flat.submit(&plan).unwrap();
+        for devices in [1usize, 2, 4] {
+            let pool = nano_pool(&s, &image, devices, StripePolicy::RoundRobin);
+            let mut sharded = ShardedPlan::default();
+            planner.shard_into(&plan, pool.stripe(), &mut sharded);
+            assert_eq!(sharded.total_bytes() as u64, plan.cmd_bytes());
+            let mut receipt = PlanReceipt::default();
+            let mut staging = Vec::new();
+            let mut stats = PoolStats::default();
+            pool.submit_sharded_into(&plan, &sharded, &mut staging, &mut receipt, &mut stats)
+                .unwrap();
+            assert_eq!(receipt.bytes, want.bytes, "devices={devices}");
+            assert_eq!(receipt.cmd_offsets, want.cmd_offsets);
+            assert_eq!(stats.total_bytes(), plan.cmd_bytes());
+            assert_eq!(receipt.service, stats.max_service());
+            if devices == 1 {
+                assert_eq!(sharded.shards[0].cmds.as_slice(), plan.cmds());
+            }
+        }
+    }
+
+    #[test]
+    fn real_file_pool_round_trips() {
+        use std::io::Write;
+        let s = store();
+        let image = s.build_image();
+        let stripe = StripeLayout::build(&s.layout, 2, StripePolicy::RoundRobin, None);
+        let shards = stripe.shard_image(&image);
+        let paths: Vec<std::path::PathBuf> = shards
+            .iter()
+            .enumerate()
+            .map(|(m, data)| {
+                let path = std::env::temp_dir()
+                    .join(format!("nc_pool_test_{}_{m}", std::process::id()));
+                let mut f = std::fs::File::create(&path).unwrap();
+                f.write_all(data).unwrap();
+                path
+            })
+            .collect();
+        let pool = DevicePool::from_files(&paths, stripe, 2, false).unwrap();
+        assert!(!pool.is_virtual_time(), "file pool is wall-clock");
+        let extents = [Extent::new(3, 50), Extent::new(9000, 3000)];
+        let (bytes, _) = pool.read_batch_vec(&extents).unwrap();
+        let mut want = Vec::new();
+        for e in &extents {
+            want.extend_from_slice(&image[e.offset as usize..e.end() as usize]);
+        }
+        assert_eq!(bytes, want);
+        // The planned path reassembles identically through the parallel
+        // fan-out too.
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let id = MatrixId::new(1, MatrixKind::Down);
+        let plan = planner.plan_chunks(&s.layout, id, &[Chunk::new(2, 30)], None);
+        let mut sharded = ShardedPlan::default();
+        planner.shard_into(&plan, pool.stripe(), &mut sharded);
+        let mut receipt = PlanReceipt::default();
+        let mut staging = Vec::new();
+        let mut stats = PoolStats::default();
+        pool.submit_sharded_into(&plan, &sharded, &mut staging, &mut receipt, &mut stats)
+            .unwrap();
+        let flat = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 5);
+        assert_eq!(receipt.bytes, flat.submit(&plan).unwrap().bytes);
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn estimate_sharded_is_max_over_members() {
+        use crate::storage::{ProfileConfig, Profiler};
+        let s = store();
+        let image = s.build_image();
+        let stripe = StripeLayout::build(&s.layout, 2, StripePolicy::RoundRobin, None);
+        let profiles = vec![DeviceProfile::nano(), DeviceProfile::agx()];
+        let pool = DevicePool::simulated(&profiles, stripe, &image, 9).unwrap();
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let id = MatrixId::new(0, MatrixKind::Down);
+        let plan = planner.plan_chunks(&s.layout, id, &[Chunk::new(0, 64)], None);
+        let mut sharded = ShardedPlan::default();
+        planner.shard_into(&plan, pool.stripe(), &mut sharded);
+        // No tables attached -> no estimate.
+        assert_eq!(pool.estimate_sharded(&sharded), 0.0);
+        // With per-member tables: the slowest member's Σ T_m.
+        let tables: Vec<LatencyTable> = profiles
+            .iter()
+            .map(|p| {
+                let probe = SimulatedSsd::timing_only(p.clone(), 1 << 40, 5);
+                Profiler::new(&probe, ProfileConfig::coarse(p.saturation_bytes(0.99), 1024))
+                    .build_table()
+                    .unwrap()
+            })
+            .collect();
+        let pool = pool.with_tables(tables.clone());
+        assert_eq!(pool.member_table(0).unwrap().max_bytes(), tables[0].max_bytes());
+        let want = (0..2)
+            .map(|m| {
+                sharded.shards[m]
+                    .cmds
+                    .iter()
+                    .map(|c| tables[m].latency_bytes(c.len))
+                    .sum::<f64>()
+            })
+            .fold(0.0f64, f64::max);
+        let got = pool.estimate_sharded(&sharded);
+        assert!(got > 0.0);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn pool_stats_accounting() {
+        let mut a = PoolStats::default();
+        a.reset(2);
+        a.bytes[0] = 100;
+        a.service[0] = Duration::from_millis(4);
+        a.service[1] = Duration::from_millis(1);
+        assert_eq!(a.max_service(), Duration::from_millis(4));
+        assert!((a.utilization_skew() - 1.6).abs() < 1e-9);
+        let mut b = PoolStats::default();
+        b.reset(2);
+        b.bytes[1] = 50;
+        b.service[1] = Duration::from_millis(3);
+        a.absorb(&b);
+        assert_eq!(a.bytes, vec![100, 50]);
+        assert_eq!(a.service[1], Duration::from_millis(4));
+    }
+
+    #[test]
+    fn member_capacity_checked() {
+        let s = store();
+        let stripe = StripeLayout::build(&s.layout, 2, StripePolicy::RoundRobin, None);
+        let members: Vec<Box<dyn FlashDevice>> = (0..2)
+            .map(|m| {
+                Box::new(SimulatedSsd::timing_only(DeviceProfile::nano(), 16, m))
+                    as Box<dyn FlashDevice>
+            })
+            .collect();
+        assert!(DevicePool::new("tiny-pool", members, stripe).is_err());
+    }
+}

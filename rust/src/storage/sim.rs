@@ -144,6 +144,13 @@ impl FlashDevice for SimulatedSsd {
         self.capacity
     }
 
+    /// Service times are a deterministic analytical model, not wall
+    /// clock: pool fan-out may run members serially without changing any
+    /// outcome.
+    fn is_virtual_time(&self) -> bool {
+        true
+    }
+
     fn read_batch(&self, extents: &[Extent], out: &mut [u8]) -> anyhow::Result<Duration> {
         self.check_extents(extents)?;
         let total: usize = extents.iter().map(|e| e.len).sum();

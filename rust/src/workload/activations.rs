@@ -243,7 +243,7 @@ mod tests {
         let b = g.sample(1);
         let top = |s: &[f32]| {
             let mut idx: Vec<usize> = (0..s.len()).collect();
-            idx.sort_by(|&x, &y| s[y].partial_cmp(&s[x]).unwrap());
+            idx.sort_by(|&x, &y| s[y].total_cmp(&s[x]));
             idx[..512].iter().copied().collect::<std::collections::HashSet<_>>()
         };
         let overlap = top(&a).intersection(&top(&b)).count();

@@ -61,13 +61,22 @@ fn artifact_dir() -> PathBuf {
 }
 
 /// Build an engine, warm one session (frame + one token), then count heap
-/// allocations across `steps` further decode steps.
-fn decode_allocs(policy: Policy, sparsity: f64, prefetch: bool, steps: usize) -> u64 {
+/// allocations across `steps` further decode steps. `devices > 1` runs
+/// the sharded storage-pool path (simulated members fan out serially, so
+/// pooling must stay allocation-free too).
+fn decode_allocs(
+    policy: Policy,
+    sparsity: f64,
+    prefetch: bool,
+    devices: usize,
+    steps: usize,
+) -> u64 {
     let engine = Engine::builder("tiny")
         .policy(policy)
         .sparsity(sparsity)
         .prefetch(prefetch)
         .exec_threads(1)
+        .devices(devices)
         .artifacts(&artifact_dir())
         .build()
         .unwrap();
@@ -93,11 +102,13 @@ fn decode_allocs(policy: Policy, sparsity: f64, prefetch: bool, steps: usize) ->
 #[test]
 fn steady_state_decode_is_allocation_free() {
     // One test body: the counting allocator is process-global state.
-    let configs: Vec<(&str, Policy, f64, bool)> = vec![
-        ("dense +pf", Policy::Dense, 0.0, true),
-        ("dense -pf", Policy::Dense, 0.0, false),
-        ("topk +pf", Policy::TopK, 0.5, true),
-        ("topk -pf", Policy::TopK, 0.5, false),
+    // The `pool4` rows pin the acceptance criterion that sharded
+    // multi-device serving stays allocation-free per decode step.
+    let configs: Vec<(&str, Policy, f64, bool, usize)> = vec![
+        ("dense +pf", Policy::Dense, 0.0, true, 1),
+        ("dense -pf", Policy::Dense, 0.0, false, 1),
+        ("topk +pf", Policy::TopK, 0.5, true, 1),
+        ("topk -pf", Policy::TopK, 0.5, false, 1),
         (
             "chunking +pf",
             Policy::Chunking {
@@ -105,6 +116,7 @@ fn steady_state_decode_is_allocation_free() {
             },
             0.5,
             true,
+            1,
         ),
         (
             "chunking -pf",
@@ -113,10 +125,22 @@ fn steady_state_decode_is_allocation_free() {
             },
             0.5,
             false,
+            1,
+        ),
+        ("dense pool4", Policy::Dense, 0.0, true, 4),
+        ("topk pool4", Policy::TopK, 0.5, true, 4),
+        (
+            "chunking pool4",
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            },
+            0.5,
+            true,
+            4,
         ),
     ];
-    for (label, policy, sparsity, prefetch) in configs {
-        let allocs = decode_allocs(policy, sparsity, prefetch, 8);
+    for (label, policy, sparsity, prefetch, devices) in configs {
+        let allocs = decode_allocs(policy, sparsity, prefetch, devices, 8);
         assert_eq!(
             allocs, 0,
             "[{label}] decode_step allocated {allocs} times across 8 steady-state steps"

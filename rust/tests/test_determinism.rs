@@ -72,6 +72,65 @@ fn tiny_outputs_bit_identical_across_thread_counts() {
     }
 }
 
+/// Two appends + two decodes against a `devices`-member homogeneous
+/// pool; returns outputs plus the per-call (bytes_loaded,
+/// importance_kept) pair — equal pairs mean the selected-chunk sets were
+/// identical.
+fn run_pool(
+    policy: Policy,
+    sparsity: f64,
+    devices: usize,
+) -> (Vec<Vec<f32>>, Vec<(u64, f64)>) {
+    let engine = Engine::builder("tiny")
+        .policy(policy)
+        .sparsity(sparsity)
+        .prefetch(true)
+        .exec_threads(1)
+        .devices(devices)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
+    let spec = engine.spec();
+    let session = engine.new_session();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 11);
+    let mut outs = Vec::new();
+    let mut sels = Vec::new();
+    for i in 0..2 {
+        let (y, s) = session.append_frame(&trace.frame(i)).unwrap();
+        outs.push(y);
+        sels.push((s.bytes_loaded, s.importance_kept));
+    }
+    let token = vec![0.03f32; spec.d];
+    for _ in 0..2 {
+        let (y, s) = session.decode_step(&token).unwrap();
+        outs.push(y);
+        sels.push((s.bytes_loaded, s.importance_kept));
+    }
+    (outs, sels)
+}
+
+#[test]
+fn tiny_outputs_bit_identical_across_pool_sizes() {
+    // Sharding the flash image across a homogeneous pool is a pure
+    // I/O-topology change: decode outputs are bit-identical and the
+    // selected-chunk sets (observed through loaded bytes and captured
+    // importance, both exact) are unchanged for 1/2/4 members.
+    for (policy, sparsity) in policies() {
+        let (base_out, base_sel) = run_pool(policy.clone(), sparsity, 1);
+        for devices in [2usize, 4] {
+            let (out, sel) = run_pool(policy.clone(), sparsity, devices);
+            assert_eq!(
+                base_out, out,
+                "policy={policy:?} devices={devices} outputs diverged"
+            );
+            assert_eq!(
+                base_sel, sel,
+                "policy={policy:?} devices={devices} selections diverged"
+            );
+        }
+    }
+}
+
 #[test]
 fn small_outputs_bit_identical_across_thread_counts() {
     // The small model's matmuls are large enough to actually cross the

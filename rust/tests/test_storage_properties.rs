@@ -4,10 +4,13 @@
 
 use neuron_chunking::latency::chunks_from_mask;
 use neuron_chunking::model::{FlashLayout, MatrixId, ModelSpec};
-use neuron_chunking::plan::{CoalescePolicy, IoPlanner, PlanRequest, PlannedRead};
+use neuron_chunking::plan::{
+    CoalescePolicy, IoPlanner, PlanReceipt, PlanRequest, PlannedRead, ShardedPlan,
+};
 use neuron_chunking::proptest::check;
 use neuron_chunking::storage::{
-    DeviceProfile, Extent, FlashDevice, ProfileConfig, Profiler, SimulatedSsd,
+    DevicePool, DeviceProfile, Extent, FlashDevice, PoolStats, ProfileConfig, Profiler,
+    SimulatedSsd, StripeLayout, StripePolicy,
 };
 
 fn arb_profile(rng: &mut neuron_chunking::rng::Rng) -> DeviceProfile {
@@ -289,6 +292,75 @@ fn prop_plan_page_alignment_respected_for_aligned_layouts() {
         }
         if plan.cmd_bytes() < plan.payload_bytes() {
             return Err("commands smaller than payload".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_pool_submit_matches_single_device() {
+    // Stripe round-trip identity: shard a logical plan across a pool,
+    // submit per device, and the reassembled PlanReceipt must be
+    // bit-identical to a single-device submission — for random chunk
+    // demands, random coalesce/stripe settings, and 1/2/4 members.
+    check("stripe round-trip identity", 12, |rng| {
+        let spec = ModelSpec::tiny();
+        let store = neuron_chunking::model::WeightStore::new(spec.clone(), false, 11);
+        let image = store.build_image();
+        let flat = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 3);
+        let requests = arb_requests(rng, &spec);
+        let planner = IoPlanner::new(if rng.bool(0.5) {
+            CoalescePolicy::contiguous()
+        } else {
+            CoalescePolicy::passthrough()
+        });
+        let plan = planner.plan(&store.layout, &requests, None);
+        let want = flat.submit(&plan).map_err(|e| e.to_string())?;
+        for devices in [1usize, 2, 4] {
+            let policy = if rng.bool(0.5) {
+                StripePolicy::RoundRobin
+            } else {
+                StripePolicy::HotAware
+            };
+            let stripe_bytes = if rng.bool(0.5) {
+                None
+            } else {
+                Some(rng.range(1, 16) * 1024)
+            };
+            let stripe = StripeLayout::build(&store.layout, devices, policy, stripe_bytes);
+            let profiles = vec![DeviceProfile::nano(); devices];
+            let pool = DevicePool::simulated(&profiles, stripe, &image, 3)
+                .map_err(|e| e.to_string())?;
+            let mut sharded = ShardedPlan::default();
+            planner.shard_into(&plan, pool.stripe(), &mut sharded);
+            if sharded.total_bytes() as u64 != plan.cmd_bytes() {
+                return Err(format!(
+                    "shards cover {} of {} bytes (n={devices})",
+                    sharded.total_bytes(),
+                    plan.cmd_bytes()
+                ));
+            }
+            if devices == 1 && sharded.shards[0].cmds.as_slice() != plan.cmds() {
+                return Err("1-member shard must reproduce the logical commands".into());
+            }
+            let mut receipt = PlanReceipt::default();
+            let mut staging = Vec::new();
+            let mut stats = PoolStats::default();
+            pool.submit_sharded_into(&plan, &sharded, &mut staging, &mut receipt, &mut stats)
+                .map_err(|e| e.to_string())?;
+            if receipt.bytes != want.bytes {
+                return Err(format!("receipt bytes differ at n={devices}"));
+            }
+            if receipt.cmd_offsets != want.cmd_offsets {
+                return Err(format!("cmd offsets differ at n={devices}"));
+            }
+            if stats.total_bytes() != plan.cmd_bytes() {
+                return Err(format!(
+                    "per-device accounting {} != {} at n={devices}",
+                    stats.total_bytes(),
+                    plan.cmd_bytes()
+                ));
+            }
         }
         Ok(())
     });
