@@ -5,9 +5,15 @@
 //! Besides the human-readable table, this bench emits a machine-readable
 //! `BENCH_e2e.json` (override the path with `NC_BENCH_JSON`) so the perf
 //! trajectory is tracked across PRs: per policy × prefetch × thread
-//! count, decode/append tokens-per-second plus p50/p99 step latency, and
-//! a multi-stream scaling sweep that drives N concurrent sessions over
-//! the shared `Sync` engine core from N OS threads.
+//! count, decode/append tokens-per-second plus p50/p99 step latency, a
+//! multi-stream scaling sweep that drives N concurrent sessions over
+//! the shared `Sync` engine core from N OS threads, a storage-pool
+//! device sweep, and an async I/O overlap sweep against a wall-clock
+//! file-backed pool (sync vs queue depths {1, 2, 4}).
+//!
+//! CI gates on this report: `bench-gate` (scripts/bench_gate.rs) diffs
+//! it against the committed `BENCH_baseline.json` and fails on >15%
+//! tokens/s or p99 regression.
 
 use std::path::Path;
 use std::time::Instant;
@@ -27,6 +33,9 @@ struct Entry {
     threads: usize,
     streams: usize,
     devices: usize,
+    /// Async I/O pipeline on (queue_depth then records the bound).
+    async_io: bool,
+    queue_depth: usize,
     op: &'static str,
     tokens_per_s: f64,
     p50_us: f64,
@@ -38,7 +47,8 @@ impl Entry {
     fn to_json(&self) -> String {
         format!(
             "{{\"mode\":\"{}\",\"policy\":\"{}\",\"prefetch\":{},\"threads\":{},\
-             \"streams\":{},\"devices\":{},\"op\":\"{}\",\"tokens_per_s\":{:.3},\
+             \"streams\":{},\"devices\":{},\"async_io\":{},\"queue_depth\":{},\
+             \"op\":\"{}\",\"tokens_per_s\":{:.3},\
              \"p50_us\":{:.3},\"p99_us\":{:.3},\"samples\":{}}}",
             self.mode,
             self.policy,
@@ -46,6 +56,8 @@ impl Entry {
             self.threads,
             self.streams,
             self.devices,
+            self.async_io,
+            self.queue_depth,
             self.op,
             self.tokens_per_s,
             self.p50_us,
@@ -74,12 +86,16 @@ fn build_engine_devices(
     devices: usize,
 ) -> Engine {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    // Async I/O is pinned off here so every row's identity fields stay
+    // truthful regardless of NC_ASYNC_IO; the overlap sweep below builds
+    // its engines explicitly.
     let engine = Engine::builder("tiny")
         .policy(policy.clone())
         .sparsity(sparsity)
         .prefetch(prefetch)
         .exec_threads(threads)
         .devices(devices)
+        .async_io(false)
         .artifacts(&dir)
         .build()
         .unwrap();
@@ -151,6 +167,8 @@ fn main() {
                 threads: 1,
                 streams: 1,
                 devices: 1,
+                async_io: false,
+                queue_depth: 0,
                 op: "append",
                 tokens_per_s: spec.tokens_per_frame as f64 / stats::mean(&samples),
                 p50_us: p50,
@@ -168,6 +186,8 @@ fn main() {
                 threads: 1,
                 streams: 1,
                 devices: 1,
+                async_io: false,
+                queue_depth: 0,
                 op: "decode",
                 tokens_per_s: 1.0 / stats::mean(&samples),
                 p50_us: p50,
@@ -203,6 +223,8 @@ fn main() {
                 threads,
                 streams: 1,
                 devices: 1,
+                async_io: false,
+                queue_depth: 0,
                 op: "decode",
                 tokens_per_s: 1.0 / stats::mean(&samples),
                 p50_us: p50,
@@ -253,6 +275,8 @@ fn main() {
                 threads,
                 streams: threads,
                 devices: 1,
+                async_io: false,
+                queue_depth: 0,
                 op: "decode",
                 tokens_per_s: total_tokens / wall,
                 p50_us: 0.0,
@@ -294,6 +318,8 @@ fn main() {
                 threads: 1,
                 streams: 1,
                 devices,
+                async_io: false,
+                queue_depth: 0,
                 op: "decode",
                 tokens_per_s: 1.0 / stats::mean(&samples),
                 p50_us: p50,
@@ -302,6 +328,71 @@ fn main() {
             });
         }
     }
+
+    // --- async I/O overlap sweep: wall-clock file-backed pool ---
+    // The sweep the tentpole claim rests on: the same workload served
+    // from *real* per-member backing files (wall-clock reads), with the
+    // synchronous inline-prefetch path vs the async pipeline at queue
+    // depths {1, 2, 4}. With async on, next-layer reads proceed on the
+    // I/O workers while kernels execute, so decode wall time drops by
+    // the overlapped service.
+    let mut async_entries: Vec<Entry> = Vec::new();
+    let backing_root = std::env::temp_dir().join(format!("nc_bench_async_{}", std::process::id()));
+    for (label, policy, sparsity) in &policies {
+        if *label == "topk" {
+            continue; // dense + chunking bracket the selection spectrum
+        }
+        for (async_io, depth) in [(false, 0usize), (true, 1), (true, 2), (true, 4)] {
+            let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            let engine = Engine::builder("tiny")
+                .policy(policy.clone())
+                .sparsity(*sparsity)
+                .prefetch(true)
+                .devices(2)
+                .file_backed(&backing_root)
+                .async_io(async_io)
+                .io_queue_depth(depth.max(1))
+                .artifacts(&dir)
+                .build()
+                .unwrap();
+            engine.warmup().unwrap();
+            let spec = engine.spec();
+            let session = engine.new_session();
+            let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
+            let frame = trace.frame(0);
+            let token = vec![0.1f32; spec.d];
+            let mut out = Vec::new();
+            session.append_frame_into(&frame, &mut out).unwrap();
+            session.decode_step_into(&token, &mut out).unwrap(); // warm
+            let samples = sample_steps(decode_samples, || {
+                black_box(session.decode_step_into(&token, &mut out).unwrap());
+            });
+            let (p50, p99) = percentiles_us(&samples);
+            println!(
+                "{:<56} {:>12.0} tok/s",
+                format!(
+                    "async_overlap decode tiny [{label}] async={async_io} qd={depth}"
+                ),
+                1.0 / stats::mean(&samples)
+            );
+            async_entries.push(Entry {
+                mode: "async_overlap",
+                policy: *label,
+                prefetch: true,
+                threads: 1,
+                streams: 1,
+                devices: 2,
+                async_io,
+                queue_depth: depth,
+                op: "decode",
+                tokens_per_s: 1.0 / stats::mean(&samples),
+                p50_us: p50,
+                p99_us: p99,
+                samples: samples.len(),
+            });
+        }
+    }
+    std::fs::remove_dir_all(&backing_root).ok();
 
     // --- experiment-harness point cost (what figure sweeps pay) ---
     if !quick {
@@ -331,16 +422,22 @@ fn main() {
         .iter()
         .map(|e| format!("  {}", e.to_json()))
         .collect();
+    let async_rows: Vec<String> = async_entries
+        .iter()
+        .map(|e| format!("  {}", e.to_json()))
+        .collect();
     let json = format!(
         "{{\n\"bench\":\"e2e\",\n\"model\":\"tiny\",\n\"entries\":[\n{}\n],\n\
-         \"device_scaling\":[\n{}\n]\n}}\n",
+         \"device_scaling\":[\n{}\n],\n\"async_overlap\":[\n{}\n]\n}}\n",
         rows.join(",\n"),
-        dev_rows.join(",\n")
+        dev_rows.join(",\n"),
+        async_rows.join(",\n")
     );
     std::fs::write(&path, &json).expect("write bench json");
     println!(
-        "\nwrote {path} ({} entries + {} device-scaling entries)",
+        "\nwrote {path} ({} entries + {} device-scaling + {} async-overlap entries)",
         entries.len(),
-        device_entries.len()
+        device_entries.len(),
+        async_entries.len()
     );
 }

@@ -43,6 +43,13 @@ fn main() {
                  \x20               [--stripe-hot] layout-aware striping (co-locate each\n\
                  \x20                              matrix's hot rows, staggered per matrix)\n\
                  \x20               [--stripe-kb K] explicit stripe unit (default adaptive)\n\
+                 \x20               [--async-io]   asynchronous I/O pipeline (submit layer\n\
+                 \x20                              k+1's prefetch before layer k's kernels;\n\
+                 \x20                              outputs are bit-identical either way)\n\
+                 \x20               [--queue-depth N] in-flight whole-layer prefetch bound\n\
+                 \x20                              (default 2)\n\
+                 \x20               [--file-backed DIR] serve from real per-member backing\n\
+                 \x20                              files under DIR (wall-clock I/O)\n\
                  \x20               POLICY: dense | topk | threshold[:t] |\n\
                  \x20                       chunking[:min_kb,jump_kb,max_kb] | bundling[:rows]\n\
                  \x20 repro profile [--device nano|agx|macbook] [--file PATH] [--out PATH]\n\
@@ -118,6 +125,15 @@ fn cmd_serve(args: &[String]) -> i32 {
     if let Some(kb) = flag(args, "--stripe-kb").and_then(|s| s.parse::<usize>().ok()) {
         builder = builder.stripe_bytes(kb * 1024);
     }
+    if has_flag(args, "--async-io") {
+        builder = builder.async_io(true);
+    }
+    if let Some(n) = flag(args, "--queue-depth").and_then(|s| s.parse::<usize>().ok()) {
+        builder = builder.io_queue_depth(n);
+    }
+    if let Some(dir) = flag(args, "--file-backed") {
+        builder = builder.file_backed(std::path::Path::new(&dir));
+    }
     let engine = match builder.build() {
         Ok(e) => e,
         Err(e) => {
@@ -127,8 +143,10 @@ fn cmd_serve(args: &[String]) -> i32 {
     };
     println!(
         "serving model={model} policy={policy_name} sparsity={sparsity} device={device} \
-         threads={threads} devices={}",
-        engine.devices()
+         threads={threads} devices={} async_io={} queue_depth={}",
+        engine.devices(),
+        engine.async_io(),
+        engine.io_queue_depth()
     );
     let spec = engine.spec();
     let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, frames + 1, 11);
@@ -192,6 +210,20 @@ fn cmd_serve(args: &[String]) -> i32 {
         fmt_secs(med),
         1.0 / med
     );
+    // I/O overlap achieved by the prefetch pipeline (async or inline).
+    {
+        let m = engine.metrics();
+        let overlapped = m.total("io.overlapped").as_secs_f64();
+        let charged = m.total("io").as_secs_f64();
+        if overlapped > 0.0 {
+            println!(
+                "io overlap ratio: {:.1}% ({} of {} service hidden behind compute)",
+                100.0 * overlapped / (overlapped + charged),
+                fmt_secs(overlapped),
+                fmt_secs(overlapped + charged)
+            );
+        }
+    }
     // Per-member I/O breakdown + utilization skew for multi-device pools.
     let n_dev = engine.devices();
     if n_dev > 1 {

@@ -251,6 +251,23 @@ impl PlanReceipt {
         self.bytes.reserve(bytes);
         self.cmd_offsets.reserve(cmds);
     }
+
+    /// Clear and pre-size for a command list: `bytes` zeroed to the
+    /// summed command length, `cmd_offsets` rebuilt in order. Returns
+    /// the total byte count. Shared by every submission path that fills
+    /// the data out of band (device shims, pool fan-out, async I/O
+    /// tickets); reuses capacity, so it is allocation-free once warm.
+    pub fn presize_for(&mut self, cmds: &[Extent]) -> usize {
+        self.clear();
+        let total: usize = cmds.iter().map(|e| e.len).sum();
+        self.bytes.resize(total, 0);
+        let mut at = 0usize;
+        for e in cmds {
+            self.cmd_offsets.push(at);
+            at += e.len;
+        }
+        total
+    }
 }
 
 /// A plan together with its receipt: supports exact row addressing, which

@@ -23,8 +23,13 @@ mod pjrt;
 
 pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
 
+// The host executor's scratch/output types are the engine's calling
+// convention for both backends (the PJRT shim adapts onto them), so they
+// are exported unconditionally.
+pub use exec::{ExecScratch, StageOutputs};
+
 #[cfg(not(feature = "pjrt"))]
-pub use exec::{ExecScratch, StageOutputs, XlaRuntime};
+pub use exec::XlaRuntime;
 #[cfg(feature = "pjrt")]
 pub use pjrt::XlaRuntime;
 
@@ -96,6 +101,18 @@ impl<'a> TensorView<'a> {
     /// Shape check against a manifest input spec.
     pub fn matches(&self, spec: &[usize]) -> bool {
         spec.len() == self.rank && spec.iter().zip(self.dims.iter()).all(|(a, b)| a == b)
+    }
+
+    /// Owned copy (allocates — for cold paths and the PJRT shim, which
+    /// stages owned literals anyway; the host executor reads views in
+    /// place instead).
+    pub fn to_tensor(&self) -> Tensor {
+        let dims = if self.rank == 1 {
+            vec![self.dims[0]]
+        } else {
+            vec![self.dims[0], self.dims[1]]
+        };
+        Tensor::new(dims, self.data.to_vec())
     }
 }
 

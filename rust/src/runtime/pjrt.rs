@@ -3,9 +3,11 @@
 //! client. Executables are compiled lazily on first use and cached per
 //! (kind, budget-bucket).
 //!
-//! Requires the external `xla` crate (not vendored — enable the feature
-//! only in environments with registry access) and a built `artifacts/`
-//! directory containing `manifest.tsv` plus the `.hlo.txt` files.
+//! Builds against the compile-time stub in `vendor/xla` by default (CI
+//! type-checks this backend with `cargo check --features pjrt`); actually
+//! running it requires swapping in the external `xla` crate (registry
+//! access) and a built `artifacts/` directory containing `manifest.tsv`
+//! plus the `.hlo.txt` files.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -13,7 +15,7 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{Manifest, Tensor};
+use crate::runtime::{ExecScratch, Manifest, StageOutputs, Tensor, TensorView};
 
 fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(&t.data);
@@ -129,5 +131,37 @@ impl XlaRuntime {
             meta.outputs
         );
         parts.iter().map(from_literal).collect()
+    }
+
+    /// Borrowed-input execution with the engine's calling convention
+    /// (same signature as the host executor's `execute_into`). The PJRT
+    /// path stages owned literals anyway, so this shim copies the views
+    /// into tensors and ignores `threads`/`scratch` (XLA manages its own
+    /// parallelism and buffers).
+    pub fn execute_into(
+        &self,
+        name: &str,
+        inputs: &[TensorView],
+        _threads: usize,
+        _scratch: &mut ExecScratch,
+        outs: &mut StageOutputs,
+    ) -> Result<()> {
+        let owned: Vec<Tensor> = inputs.iter().map(TensorView::to_tensor).collect();
+        let results = self.execute(name, &owned)?;
+        anyhow::ensure!(
+            results.len() <= outs.out.len(),
+            "{name}: {} outputs exceed the stage-output capacity {}",
+            results.len(),
+            outs.out.len()
+        );
+        outs.n = results.len();
+        for (i, t) in results.into_iter().enumerate() {
+            outs.dims[i] = [
+                t.dims.first().copied().unwrap_or(1),
+                t.dims.get(1).copied().unwrap_or(1),
+            ];
+            outs.out[i] = t.data;
+        }
+        Ok(())
     }
 }

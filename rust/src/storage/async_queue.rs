@@ -1,0 +1,428 @@
+//! Asynchronous I/O workers: one thread per pool member, fed by bounded
+//! submission queues, completing into tickets the engine awaits only at
+//! the moment a layer's weights are consumed.
+//!
+//! This is the wall-clock half of the engine's async pipeline. Members
+//! whose service time is a *virtual* clock ([`crate::storage::SimulatedSsd`])
+//! never come through here — an analytical clock cannot observe
+//! concurrency, so the engine submits them inline and credits overlap
+//! analytically (`max(compute, io)` per stage), keeping the latency model
+//! exact, deterministic and allocation-free. Pools with wall-clock
+//! members ([`crate::storage::RealFileDevice`]) route every sub-plan
+//! through these workers instead, so flash reads genuinely proceed while
+//! the engine executes kernels.
+//!
+//! Design:
+//! * **Bounded submission queues** — one FIFO per member, capacity =
+//!   the engine's I/O queue depth × [`SESSION_SLACK`] (headroom so a
+//!   few concurrent sessions, each already bounded to `depth` in-flight
+//!   submissions by the engine pipeline window, never block mid-token).
+//!   A full queue blocks the submitter — deliberate backpressure.
+//! * **Per-member ordering** — a single worker drains each member's
+//!   queue in submission order, so one member never reorders commands
+//!   relative to the engine's plan sequence.
+//! * **Completion tickets** — a submission covering N members returns
+//!   one [`IoTicket`]; `wait_scatter` blocks until all N member jobs are
+//!   done, scatters their staging bytes into the logical receipt buffer
+//!   and reports per-member bytes/service. Workers never touch engine
+//!   memory: each job reads into its own pooled staging buffer, so an
+//!   abandoned ticket ([`IoTicket::discard`]) is always safe.
+//! * **Buffer recycling** — completed job buffers return to a shared
+//!   free list, so steady-state submissions reuse capacity instead of
+//!   growing fresh vectors per token.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::plan::ShardedPlan;
+use crate::storage::{Extent, FlashDevice, PoolStats};
+
+/// Reusable buffers of one member job (recycled through the free list).
+#[derive(Default)]
+struct JobBufs {
+    /// Device-local commands for this member.
+    cmds: Vec<Extent>,
+    /// Destination byte offset in the logical receipt per command.
+    dsts: Vec<usize>,
+    /// Staging buffer the worker reads into.
+    staging: Vec<u8>,
+}
+
+/// One queued unit of work for one member's worker.
+struct Job {
+    member: usize,
+    bufs: JobBufs,
+    ticket: Arc<TicketState>,
+}
+
+/// Completion state shared between the submitter and the workers.
+struct TicketState {
+    done: Mutex<TicketDone>,
+    cv: Condvar,
+}
+
+struct TicketDone {
+    /// Member jobs still outstanding.
+    remaining: usize,
+    /// Completed jobs: (member, buffers, member service time).
+    jobs: Vec<(usize, JobBufs, Duration)>,
+    /// First member error, if any (the ticket then fails as a whole).
+    error: Option<anyhow::Error>,
+}
+
+/// One member's bounded FIFO submission queue.
+struct MemberQueue {
+    inner: Mutex<VecDeque<Job>>,
+    cap: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// State shared by the submitter handle and every worker thread.
+struct Shared {
+    queues: Vec<MemberQueue>,
+    /// Recycled job buffers (capacity survives across submissions).
+    free: Mutex<Vec<JobBufs>>,
+    shutdown: AtomicBool,
+}
+
+/// Completion handle of one sharded submission. One-shot: consume it with
+/// [`IoTicket::wait_scatter`] (engine path) or [`IoTicket::discard`]
+/// (abandoned submissions, e.g. a session reset mid-pipeline).
+pub struct IoTicket {
+    state: Arc<TicketState>,
+    shared: Arc<Shared>,
+}
+
+impl IoTicket {
+    fn wait_done(&self) -> std::sync::MutexGuard<'_, TicketDone> {
+        let mut done = self.state.done.lock().unwrap();
+        while done.remaining > 0 {
+            done = self.state.cv.wait(done).unwrap();
+        }
+        done
+    }
+
+    /// Block until every member job completes, scatter each job's staging
+    /// bytes into `out` at the recorded destination offsets, accumulate
+    /// per-member bytes/service into `stats` (indexed by member; caller
+    /// resets), and return the max member service time (the pool's
+    /// parallel service, same convention as
+    /// [`crate::storage::DevicePool::submit_sharded_into`]).
+    pub fn wait_scatter(self, out: &mut [u8], stats: &mut PoolStats) -> anyhow::Result<Duration> {
+        let mut done = self.wait_done();
+        if let Some(e) = done.error.take() {
+            let mut free = self.shared.free.lock().unwrap();
+            for (_, bufs, _) in done.jobs.drain(..) {
+                free.push(bufs);
+            }
+            return Err(e);
+        }
+        let mut max = Duration::ZERO;
+        for (m, bufs, service) in done.jobs.drain(..) {
+            let mut at = 0usize;
+            for (e, &dst) in bufs.cmds.iter().zip(&bufs.dsts) {
+                out[dst..dst + e.len].copy_from_slice(&bufs.staging[at..at + e.len]);
+                at += e.len;
+            }
+            if m < stats.bytes.len() {
+                stats.bytes[m] += at as u64;
+                stats.service[m] += service;
+            }
+            max = max.max(service);
+            // Short critical section per buffer: other sessions' submits
+            // pop this free list and must not wait out a whole-layer
+            // scatter.
+            self.shared.free.lock().unwrap().push(bufs);
+        }
+        Ok(max)
+    }
+
+    /// Block until every member job completes and drop the data (used
+    /// when a submission is abandoned before its layer is reached).
+    pub fn discard(self) {
+        let mut done = self.wait_done();
+        done.error.take();
+        let mut free = self.shared.free.lock().unwrap();
+        for (_, bufs, _) in done.jobs.drain(..) {
+            free.push(bufs);
+        }
+    }
+}
+
+/// Per-member asynchronous I/O workers behind bounded submission queues.
+/// Dropping the queue shuts the workers down after they drain any jobs
+/// already queued (outstanding tickets still complete).
+pub struct AsyncIoQueue {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    depth: usize,
+}
+
+/// Queue headroom multiplier: each member queue holds
+/// `depth × SESSION_SLACK` jobs, so up to `SESSION_SLACK` concurrent
+/// sessions (each bounded to `depth` in-flight submissions by the engine
+/// pipeline window) never block in [`AsyncIoQueue::submit`] mid-token.
+/// Beyond that, a full queue is deliberate backpressure.
+const SESSION_SLACK: usize = 4;
+
+impl AsyncIoQueue {
+    /// Spawn one worker per member. `depth` is the per-session in-flight
+    /// bound; each member's queue holds `depth × SESSION_SLACK` jobs
+    /// (submissions beyond it block the submitter).
+    pub fn start(members: Vec<Arc<dyn FlashDevice>>, depth: usize) -> Self {
+        let depth = depth.max(1);
+        let cap = depth * SESSION_SLACK;
+        let shared = Arc::new(Shared {
+            queues: members
+                .iter()
+                .map(|_| MemberQueue {
+                    inner: Mutex::new(VecDeque::with_capacity(cap)),
+                    cap,
+                    not_empty: Condvar::new(),
+                    not_full: Condvar::new(),
+                })
+                .collect(),
+            free: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = members
+            .into_iter()
+            .enumerate()
+            .map(|(m, member)| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("nc-io-{m}"))
+                    .spawn(move || worker_loop(shared, member, m))
+                    .expect("spawn async I/O worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            depth,
+        }
+    }
+
+    /// The configured per-session in-flight bound (each member's queue
+    /// actually holds `depth × SESSION_SLACK` jobs).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of member workers.
+    pub fn members(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Submit one sharded plan: each member with a non-empty sub-plan
+    /// gets one job (copied out of `sharded`, so the caller's scratch is
+    /// free for reuse immediately). Returns the completion ticket.
+    /// Blocks only when a member's queue is at capacity.
+    pub fn submit(&self, sharded: &ShardedPlan) -> IoTicket {
+        let n_jobs = sharded.shards.iter().filter(|s| !s.is_empty()).count();
+        let state = Arc::new(TicketState {
+            done: Mutex::new(TicketDone {
+                remaining: n_jobs,
+                jobs: Vec::with_capacity(n_jobs),
+                error: None,
+            }),
+            cv: Condvar::new(),
+        });
+        for (m, shard) in sharded.shards.iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            let mut bufs = self.shared.free.lock().unwrap().pop().unwrap_or_default();
+            bufs.cmds.clear();
+            bufs.cmds.extend_from_slice(&shard.cmds);
+            bufs.dsts.clear();
+            bufs.dsts.extend_from_slice(&shard.dsts);
+            self.push(Job {
+                member: m,
+                bufs,
+                ticket: state.clone(),
+            });
+        }
+        IoTicket {
+            state,
+            shared: self.shared.clone(),
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let q = &self.shared.queues[job.member];
+        let mut inner = q.inner.lock().unwrap();
+        while inner.len() >= q.cap {
+            inner = q.not_full.wait(inner).unwrap();
+        }
+        inner.push_back(job);
+        q.not_empty.notify_one();
+    }
+}
+
+impl Drop for AsyncIoQueue {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for q in &self.shared.queues {
+            // Wake idle workers so they observe the shutdown flag.
+            let _guard = q.inner.lock().unwrap();
+            q.not_empty.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            w.join().expect("async I/O worker panicked");
+        }
+    }
+}
+
+/// Worker body: drain the member queue in FIFO order; on shutdown, finish
+/// anything already queued, then exit.
+fn worker_loop(shared: Arc<Shared>, member: Arc<dyn FlashDevice>, m: usize) {
+    loop {
+        let job = {
+            let q = &shared.queues[m];
+            let mut inner = q.inner.lock().unwrap();
+            loop {
+                if let Some(j) = inner.pop_front() {
+                    q.not_full.notify_one();
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                inner = q.not_empty.wait(inner).unwrap();
+            }
+        };
+        let Some(mut job) = job else {
+            return;
+        };
+        let total: usize = job.bufs.cmds.iter().map(|e| e.len).sum();
+        job.bufs.staging.clear();
+        job.bufs.staging.resize(total, 0);
+        let result = member.read_batch(&job.bufs.cmds, &mut job.bufs.staging);
+        let mut done = job.ticket.done.lock().unwrap();
+        match result {
+            Ok(service) => done.jobs.push((job.member, job.bufs, service)),
+            Err(e) => {
+                if done.error.is_none() {
+                    done.error = Some(e);
+                }
+                shared.free.lock().unwrap().push(job.bufs);
+            }
+        }
+        done.remaining -= 1;
+        if done.remaining == 0 {
+            job.ticket.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::DeviceSubPlan;
+    use crate::storage::{DeviceProfile, SimulatedSsd};
+
+    fn members_with_images(images: Vec<Vec<u8>>) -> Vec<Arc<dyn FlashDevice>> {
+        images
+            .into_iter()
+            .enumerate()
+            .map(|(m, img)| {
+                Arc::new(SimulatedSsd::with_image(
+                    DeviceProfile::nano(),
+                    img,
+                    m as u64,
+                )) as Arc<dyn FlashDevice>
+            })
+            .collect()
+    }
+
+    fn sharded(pieces: &[(usize, Extent, usize)], members: usize) -> ShardedPlan {
+        let mut sp = ShardedPlan::default();
+        sp.shards = (0..members).map(|_| DeviceSubPlan::default()).collect();
+        for &(m, e, dst) in pieces {
+            sp.shards[m].cmds.push(e);
+            sp.shards[m].dsts.push(dst);
+        }
+        sp
+    }
+
+    #[test]
+    fn scatter_reassembles_member_reads() {
+        let img0: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let img1: Vec<u8> = (0..=255u8).rev().cycle().take(4096).collect();
+        let queue = AsyncIoQueue::start(members_with_images(vec![img0.clone(), img1.clone()]), 2);
+        assert_eq!(queue.members(), 2);
+        assert_eq!(queue.depth(), 2);
+        // Interleaved destinations: member 0 fills [0, 8) and [16, 24),
+        // member 1 fills [8, 16).
+        let sp = sharded(
+            &[
+                (0, Extent::new(100, 8), 0),
+                (1, Extent::new(200, 8), 8),
+                (0, Extent::new(300, 8), 16),
+            ],
+            2,
+        );
+        let ticket = queue.submit(&sp);
+        let mut out = vec![0u8; 24];
+        let mut stats = PoolStats::default();
+        stats.reset(2);
+        let max = ticket.wait_scatter(&mut out, &mut stats).unwrap();
+        assert_eq!(&out[0..8], &img0[100..108]);
+        assert_eq!(&out[8..16], &img1[200..208]);
+        assert_eq!(&out[16..24], &img0[300..308]);
+        assert_eq!(stats.bytes, vec![16, 8]);
+        assert!(max >= stats.service[0].min(stats.service[1]));
+        assert_eq!(max, stats.max_service());
+    }
+
+    #[test]
+    fn member_errors_fail_the_ticket() {
+        let queue = AsyncIoQueue::start(members_with_images(vec![vec![1u8; 64]]), 1);
+        // Extent beyond the member's 64-byte capacity.
+        let sp = sharded(&[(0, Extent::new(32, 64), 0)], 1);
+        let ticket = queue.submit(&sp);
+        let mut out = vec![0u8; 64];
+        let mut stats = PoolStats::default();
+        stats.reset(1);
+        assert!(ticket.wait_scatter(&mut out, &mut stats).is_err());
+    }
+
+    #[test]
+    fn discard_and_shutdown_are_clean() {
+        let queue = AsyncIoQueue::start(members_with_images(vec![vec![9u8; 1024]; 3]), 1);
+        for _ in 0..4 {
+            let sp = sharded(
+                &[(0, Extent::new(0, 16), 0), (2, Extent::new(16, 16), 16)],
+                3,
+            );
+            queue.submit(&sp).discard();
+        }
+        // Buffers were recycled through the free list.
+        assert!(!queue.shared.free.lock().unwrap().is_empty());
+        drop(queue); // joins workers without deadlock
+    }
+
+    #[test]
+    fn submission_order_is_preserved_per_member() {
+        // One member, queue depth 4: jobs complete in submission order, so
+        // sequential tickets observe their own data (no cross-talk).
+        let img: Vec<u8> = (0..=255u8).cycle().take(2048).collect();
+        let queue = AsyncIoQueue::start(members_with_images(vec![img.clone()]), 4);
+        let tickets: Vec<IoTicket> = (0..4usize)
+            .map(|i| queue.submit(&sharded(&[(0, Extent::new(i as u64 * 97, 32), 0)], 1)))
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let mut out = vec![0u8; 32];
+            let mut stats = PoolStats::default();
+            stats.reset(1);
+            t.wait_scatter(&mut out, &mut stats).unwrap();
+            let off = i * 97;
+            assert_eq!(out.as_slice(), &img[off..off + 32], "ticket {i}");
+        }
+    }
+}

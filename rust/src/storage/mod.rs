@@ -15,7 +15,13 @@
 //!
 //! [`Profiler`] implements the Appendix-D microbenchmark that builds the
 //! `T[s]` lookup table against either backend.
+//!
+//! [`DevicePool`] stripes the flat weight space across several members
+//! (see `pool.rs`), and [`AsyncIoQueue`] supplies per-member I/O worker
+//! threads behind bounded submission queues so the engine can overlap
+//! wall-clock flash reads with compute (see `async_queue.rs`).
 
+mod async_queue;
 mod pool;
 mod profile;
 mod profiler;
@@ -26,6 +32,7 @@ use std::time::Duration;
 
 use crate::plan::{PlanReceipt, ReadPlan};
 
+pub use async_queue::{AsyncIoQueue, IoTicket};
 pub use pool::{DevicePool, PoolScratch, PoolStats, StripeLayout, StripePolicy};
 pub use profile::DeviceProfile;
 pub use profiler::{ProfileConfig, Profiler};
@@ -100,15 +107,8 @@ pub trait FlashDevice: Send + Sync {
     /// refills it in place, reusing its buffer capacity. The serving hot
     /// path cycles a pooled receipt through this every token.
     fn submit_into(&self, plan: &ReadPlan, receipt: &mut PlanReceipt) -> anyhow::Result<()> {
-        receipt.clear();
         let cmds = plan.cmds();
-        let total: usize = cmds.iter().map(|e| e.len).sum();
-        receipt.bytes.resize(total, 0);
-        let mut at = 0usize;
-        for e in cmds {
-            receipt.cmd_offsets.push(at);
-            at += e.len;
-        }
+        receipt.presize_for(cmds);
         let mut cursor = 0usize;
         for &(s, e) in plan.batches() {
             let batch = &cmds[s..e];

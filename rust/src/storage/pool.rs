@@ -34,6 +34,7 @@
 //! `std::thread::scope`, one thread per member with a non-empty
 //! sub-plan.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::latency::LatencyTable;
@@ -323,7 +324,10 @@ unsafe impl Sync for SendPtr {}
 /// with caller-owned scratch instead.
 pub struct DevicePool {
     name: String,
-    members: Vec<Box<dyn FlashDevice>>,
+    /// `Arc` rather than `Box`: the async I/O workers
+    /// ([`crate::storage::AsyncIoQueue`]) hold shared references to the
+    /// members they serve, outliving any single submission.
+    members: Vec<Arc<dyn FlashDevice>>,
     /// Per-member profiled `T[s]` (absent for members built without one).
     tables: Vec<Option<LatencyTable>>,
     stripe: StripeLayout,
@@ -359,7 +363,7 @@ impl DevicePool {
         let tables = members.iter().map(|_| None).collect();
         Ok(Self {
             name: name.to_string(),
-            members,
+            members: members.into_iter().map(Arc::from).collect(),
             tables,
             stripe,
             parallel,
@@ -442,6 +446,16 @@ impl DevicePool {
         self.members[m].as_ref()
     }
 
+    /// Shared handle to one member (what async I/O workers hold).
+    pub fn member_arc(&self, m: usize) -> Arc<dyn FlashDevice> {
+        self.members[m].clone()
+    }
+
+    /// Shared handles to every member, in order.
+    pub fn member_arcs(&self) -> Vec<Arc<dyn FlashDevice>> {
+        self.members.clone()
+    }
+
     pub fn member_table(&self, m: usize) -> Option<&LatencyTable> {
         self.tables.get(m).and_then(|t| t.as_ref())
     }
@@ -490,21 +504,13 @@ impl DevicePool {
             sharded.shards.len(),
             n
         );
-        receipt.clear();
-        let cmds = plan.cmds();
-        let total: usize = cmds.iter().map(|e| e.len).sum();
+        let total = receipt.presize_for(plan.cmds());
         anyhow::ensure!(
             sharded.total_bytes() == total,
             "sharded plan covers {} of {} plan bytes",
             sharded.total_bytes(),
             total
         );
-        receipt.bytes.resize(total, 0);
-        let mut at = 0usize;
-        for e in cmds {
-            receipt.cmd_offsets.push(at);
-            at += e.len;
-        }
         if staging.len() < n {
             staging.resize_with(n, Default::default);
         }

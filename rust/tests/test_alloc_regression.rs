@@ -63,12 +63,15 @@ fn artifact_dir() -> PathBuf {
 /// Build an engine, warm one session (frame + one token), then count heap
 /// allocations across `steps` further decode steps. `devices > 1` runs
 /// the sharded storage-pool path (simulated members fan out serially, so
-/// pooling must stay allocation-free too).
+/// pooling must stay allocation-free too); `async_io` runs the async
+/// pipeline (virtual-clock members submit inline with analytic overlap
+/// credit, which must also stay allocation-free).
 fn decode_allocs(
     policy: Policy,
     sparsity: f64,
     prefetch: bool,
     devices: usize,
+    async_io: bool,
     steps: usize,
 ) -> u64 {
     let engine = Engine::builder("tiny")
@@ -77,6 +80,8 @@ fn decode_allocs(
         .prefetch(prefetch)
         .exec_threads(1)
         .devices(devices)
+        .async_io(async_io)
+        .io_queue_depth(2)
         .artifacts(&artifact_dir())
         .build()
         .unwrap();
@@ -103,12 +108,14 @@ fn decode_allocs(
 fn steady_state_decode_is_allocation_free() {
     // One test body: the counting allocator is process-global state.
     // The `pool4` rows pin the acceptance criterion that sharded
-    // multi-device serving stays allocation-free per decode step.
-    let configs: Vec<(&str, Policy, f64, bool, usize)> = vec![
-        ("dense +pf", Policy::Dense, 0.0, true, 1),
-        ("dense -pf", Policy::Dense, 0.0, false, 1),
-        ("topk +pf", Policy::TopK, 0.5, true, 1),
-        ("topk -pf", Policy::TopK, 0.5, false, 1),
+    // multi-device serving stays allocation-free per decode step; the
+    // `async` rows pin the same for the async I/O pipeline on
+    // virtual-clock pools.
+    let configs: Vec<(&str, Policy, f64, bool, usize, bool)> = vec![
+        ("dense +pf", Policy::Dense, 0.0, true, 1, false),
+        ("dense -pf", Policy::Dense, 0.0, false, 1, false),
+        ("topk +pf", Policy::TopK, 0.5, true, 1, false),
+        ("topk -pf", Policy::TopK, 0.5, false, 1, false),
         (
             "chunking +pf",
             Policy::Chunking {
@@ -117,6 +124,7 @@ fn steady_state_decode_is_allocation_free() {
             0.5,
             true,
             1,
+            false,
         ),
         (
             "chunking -pf",
@@ -126,9 +134,10 @@ fn steady_state_decode_is_allocation_free() {
             0.5,
             false,
             1,
+            false,
         ),
-        ("dense pool4", Policy::Dense, 0.0, true, 4),
-        ("topk pool4", Policy::TopK, 0.5, true, 4),
+        ("dense pool4", Policy::Dense, 0.0, true, 4, false),
+        ("topk pool4", Policy::TopK, 0.5, true, 4, false),
         (
             "chunking pool4",
             Policy::Chunking {
@@ -137,10 +146,24 @@ fn steady_state_decode_is_allocation_free() {
             0.5,
             true,
             4,
+            false,
+        ),
+        ("dense async", Policy::Dense, 0.0, true, 1, true),
+        ("topk async", Policy::TopK, 0.5, true, 1, true),
+        ("topk async pool4", Policy::TopK, 0.5, true, 4, true),
+        (
+            "chunking async pool4",
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            },
+            0.5,
+            true,
+            4,
+            true,
         ),
     ];
-    for (label, policy, sparsity, prefetch, devices) in configs {
-        let allocs = decode_allocs(policy, sparsity, prefetch, devices, 8);
+    for (label, policy, sparsity, prefetch, devices, async_io) in configs {
+        let allocs = decode_allocs(policy, sparsity, prefetch, devices, async_io, 8);
         assert_eq!(
             allocs, 0,
             "[{label}] decode_step allocated {allocs} times across 8 steady-state steps"

@@ -1,0 +1,297 @@
+//! `bench-gate` — the CI perf-regression gate over `BENCH_e2e.json`.
+//!
+//! Diffs the current bench report against the committed baseline
+//! (`BENCH_baseline.json`) and fails (exit 1) when any matched entry's
+//! `tokens_per_s` drops, or `p99_us` rises, by more than the threshold
+//! (default 15%, `NC_BENCH_GATE_PCT` or `--pct N` overrides).
+//!
+//! Usage:
+//!   bench-gate CURRENT.json BASELINE.json [--pct N] [--relative] [--update]
+//!
+//! * `--update`  — refresh the baseline: copy CURRENT over BASELINE and
+//!   exit 0. This is how the committed baseline is regenerated after an
+//!   intentional perf change (run the bench, then
+//!   `cargo run --release --bin bench-gate -- BENCH_e2e.json
+//!   BENCH_baseline.json --update` and commit the result).
+//! * `--relative` — machine-independent mode: instead of absolute
+//!   tokens/s, each entry's current/baseline ratio is compared against
+//!   the *median* ratio across all entries, so a uniformly slower (or
+//!   faster) host cancels out and only configurations that regressed
+//!   relative to the rest of the suite are flagged.
+//!
+//! Entries are matched on their identifying fields (mode, policy,
+//! prefetch, threads, streams, devices, op, async_io, queue_depth);
+//! entries present on only one side are reported but never fail the gate
+//! (the bench matrix is allowed to grow).
+//!
+//! The JSON is the flat machine-readable format `bench_e2e` emits; the
+//! tiny parser below handles exactly that shape (one level of nesting,
+//! string/number/bool scalars) — no external crates.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+/// One parsed bench entry: identifying fields + metrics.
+#[derive(Clone, Debug, Default)]
+struct Entry {
+    key: String,
+    tokens_per_s: f64,
+    p99_us: f64,
+}
+
+/// Split the fields of one flat JSON object body (no nested containers).
+fn parse_object(body: &str) -> BTreeMap<String, String> {
+    let mut fields = BTreeMap::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut prev_escape = false;
+    let mut start = 0usize;
+    let bytes = body.as_bytes();
+    let mut parts: Vec<&str> = Vec::new();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' if !prev_escape => in_str = !in_str,
+            b'[' | b'{' if !in_str => depth += 1,
+            b']' | b'}' if !in_str => depth = depth.saturating_sub(1),
+            b',' if !in_str && depth == 0 => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        prev_escape = b == b'\\' && !prev_escape;
+    }
+    if start < body.len() {
+        parts.push(&body[start..]);
+    }
+    for part in parts {
+        if let Some((k, v)) = part.split_once(':') {
+            let key = k.trim().trim_matches('"').to_string();
+            let val = v.trim().trim_matches('"').to_string();
+            fields.insert(key, val);
+        }
+    }
+    fields
+}
+
+/// Extract every measurement object (anything with a `tokens_per_s`
+/// field) from a bench report.
+fn parse_entries(json: &str) -> Vec<Entry> {
+    const ID_FIELDS: [&str; 9] = [
+        "mode",
+        "policy",
+        "prefetch",
+        "threads",
+        "streams",
+        "devices",
+        "op",
+        "async_io",
+        "queue_depth",
+    ];
+    let mut entries = Vec::new();
+    let bytes = json.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == b'{' && i > 0 {
+            // Find the matching close brace (entries contain no nested
+            // objects; strings contain no braces in this format).
+            if let Some(rel) = json[i + 1..].find('}') {
+                let body = &json[i + 1..i + 1 + rel];
+                if body.contains("\"tokens_per_s\"") {
+                    let fields = parse_object(body);
+                    let key = ID_FIELDS
+                        .iter()
+                        .map(|f| fields.get(*f).cloned().unwrap_or_default())
+                        .collect::<Vec<_>>()
+                        .join("|");
+                    entries.push(Entry {
+                        key,
+                        tokens_per_s: fields
+                            .get("tokens_per_s")
+                            .and_then(|v| v.parse().ok())
+                            .unwrap_or(0.0),
+                        p99_us: fields
+                            .get("p99_us")
+                            .and_then(|v| v.parse().ok())
+                            .unwrap_or(0.0),
+                    });
+                }
+                i += rel + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    entries
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    if v.is_empty() {
+        return 1.0;
+    }
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[v.len() / 2]
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // `--pct` consumes the following token as its value; every other
+    // non-flag token is positional.
+    let mut positional: Vec<&String> = Vec::new();
+    let mut skip_value = false;
+    for a in &args {
+        if skip_value {
+            skip_value = false;
+            continue;
+        }
+        if a == "--pct" {
+            skip_value = true;
+            continue;
+        }
+        if !a.starts_with("--") {
+            positional.push(a);
+        }
+    }
+    if positional.len() != 2 {
+        eprintln!("usage: bench-gate CURRENT.json BASELINE.json [--pct N] [--relative] [--update]");
+        return ExitCode::from(2);
+    }
+    let (current_path, baseline_path) = (positional[0], positional[1]);
+    let relative = args.iter().any(|a| a == "--relative");
+    let update = args.iter().any(|a| a == "--update");
+    let pct: f64 = args
+        .iter()
+        .position(|a| a == "--pct")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .or_else(|| {
+            std::env::var("NC_BENCH_GATE_PCT")
+                .ok()
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(15.0);
+
+    if update {
+        match std::fs::copy(current_path, baseline_path) {
+            Ok(_) => {
+                println!("baseline refreshed: {current_path} -> {baseline_path}");
+                return ExitCode::SUCCESS;
+            }
+            Err(e) => {
+                eprintln!("baseline refresh failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let current = match std::fs::read_to_string(current_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot read {current_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let baseline = match std::fs::read_to_string(baseline_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot read {baseline_path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let current = parse_entries(&current);
+    let baseline = parse_entries(&baseline);
+    if current.is_empty() || baseline.is_empty() {
+        eprintln!(
+            "no comparable entries (current: {}, baseline: {})",
+            current.len(),
+            baseline.len()
+        );
+        return ExitCode::FAILURE;
+    }
+    let by_key: BTreeMap<&str, &Entry> = current.iter().map(|e| (e.key.as_str(), e)).collect();
+
+    // Pair up baseline entries with their current counterparts.
+    let mut pairs: Vec<(&Entry, &Entry)> = Vec::new();
+    let mut missing = 0usize;
+    for base in &baseline {
+        match by_key.get(base.key.as_str()) {
+            Some(cur) => pairs.push((base, *cur)),
+            None => {
+                println!("  [skip] baseline-only entry: {}", base.key);
+                missing += 1;
+            }
+        }
+    }
+    // A gate that matches nothing gates nothing: key-schema drift (e.g.
+    // a new identity field) must fail loudly, not pass vacuously.
+    if pairs.is_empty() {
+        eprintln!(
+            "perf gate FAILED: no baseline entry matches the current report \
+             ({} baseline vs {} current entries) — the entry key schema drifted; \
+             refresh the baseline with --update",
+            baseline.len(),
+            current.len()
+        );
+        return ExitCode::FAILURE;
+    }
+    let new_entries = current.len().saturating_sub(pairs.len());
+    let ratio_median = median(
+        pairs
+            .iter()
+            .filter(|(b, _)| b.tokens_per_s > 0.0)
+            .map(|(b, c)| c.tokens_per_s / b.tokens_per_s)
+            .collect(),
+    );
+
+    let floor = 1.0 - pct / 100.0;
+    let ceil = 1.0 + pct / 100.0;
+    let mut failures = 0usize;
+    println!(
+        "perf gate: {} matched entries, threshold {pct}% ({} mode, median speed ratio {:.3})",
+        pairs.len(),
+        if relative { "relative" } else { "absolute" },
+        ratio_median
+    );
+    for (base, cur) in &pairs {
+        if base.tokens_per_s <= 0.0 {
+            continue;
+        }
+        let ratio = cur.tokens_per_s / base.tokens_per_s;
+        let tput_bad = if relative {
+            ratio < ratio_median * floor
+        } else {
+            ratio < floor
+        };
+        // p99 gates only in absolute mode (a latency percentile has no
+        // meaningful cross-entry normalization).
+        let p99_bad = !relative
+            && base.p99_us > 0.0
+            && cur.p99_us > 0.0
+            && cur.p99_us / base.p99_us > ceil;
+        if tput_bad || p99_bad {
+            failures += 1;
+            println!(
+                "  [FAIL] {}: tokens/s {:.1} -> {:.1} ({:+.1}%), p99 {:.1}us -> {:.1}us",
+                base.key,
+                base.tokens_per_s,
+                cur.tokens_per_s,
+                (ratio - 1.0) * 100.0,
+                base.p99_us,
+                cur.p99_us
+            );
+        }
+    }
+    println!(
+        "perf gate: {failures} regression(s), {missing} baseline-only, {new_entries} new \
+         entries (new entries never gate; refresh the baseline with --update)"
+    );
+    if failures > 0 {
+        eprintln!(
+            "perf gate FAILED: >{pct}% regression vs {baseline_path}; if intentional, refresh \
+             the baseline (see scripts/bench_gate.rs docs)"
+        );
+        return ExitCode::FAILURE;
+    }
+    println!("perf gate passed");
+    ExitCode::SUCCESS
+}
