@@ -8,8 +8,10 @@
 //! count, decode/append tokens-per-second plus p50/p99 step latency, a
 //! multi-stream scaling sweep that drives N concurrent sessions over
 //! the shared `Sync` engine core from N OS threads, a storage-pool
-//! device sweep, and an async I/O overlap sweep against a wall-clock
-//! file-backed pool (sync vs queue depths {1, 2, 4}).
+//! device sweep, an async I/O overlap sweep against a wall-clock
+//! file-backed pool (sync vs queue depths {1, 2, 4}), and a
+//! cross-stream batch-scaling sweep (fused decode batches over
+//! {1, 2, 4} streams, tokens/s + shared-bytes dedup ratio).
 //!
 //! CI gates on this report: `bench-gate` (scripts/bench_gate.rs) diffs
 //! it against the committed `BENCH_baseline.json` and fails on >15%
@@ -19,7 +21,7 @@ use std::path::Path;
 use std::time::Instant;
 
 use neuron_chunking::benchlib::{black_box, header, Bencher};
-use neuron_chunking::coordinator::{Engine, Policy};
+use neuron_chunking::coordinator::{DecodeRequest, Engine, Policy, StageStats};
 use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::stats;
 use neuron_chunking::storage::DeviceProfile;
@@ -394,6 +396,77 @@ fn main() {
     }
     std::fs::remove_dir_all(&backing_root).ok();
 
+    // --- batch_scaling sweep: cross-stream fused decode batches ---
+    // N sessions decode as one fused batch per step: shared chunks are
+    // read once (`io.shared_bytes`) and shared weight tiles run once
+    // across all member activations. Outputs are bit-identical to solo
+    // decoding; the sweep tracks aggregate tokens/s and the dedup ratio
+    // as the batch deepens.
+    let mut batch_entries: Vec<(Entry, f64)> = Vec::new();
+    for (label, policy, sparsity) in &policies {
+        if *label == "topk" {
+            continue; // dense + chunking bracket the selection spectrum
+        }
+        for streams in [1usize, 2, 4] {
+            let engine = build_engine(policy, *sparsity, true, 1);
+            let spec = engine.spec();
+            let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, streams + 1, 5);
+            let sessions: Vec<_> = (0..streams).map(|_| engine.new_session()).collect();
+            let mut out = Vec::new();
+            for (i, s) in sessions.iter().enumerate() {
+                s.append_frame_into(&trace.frame(i), &mut out).unwrap();
+            }
+            let token = vec![0.1f32; spec.d];
+            let reqs: Vec<DecodeRequest> = sessions
+                .iter()
+                .map(|s| DecodeRequest {
+                    session: s,
+                    token: &token,
+                })
+                .collect();
+            let mut outs: Vec<Vec<f32>> = vec![Vec::new(); streams];
+            let mut st = vec![StageStats::default(); streams];
+            engine.decode_batch_into(&reqs, &mut outs, &mut st).unwrap(); // warm
+            // Snapshot the I/O counters after warm-up so the recorded
+            // dedup ratio covers exactly the sampled batched decodes
+            // (priming appends and warm-up traffic excluded).
+            let m0 = engine.metrics();
+            let samples = sample_steps(decode_samples, || {
+                black_box(engine.decode_batch_into(&reqs, &mut outs, &mut st).unwrap());
+            });
+            let (p50, p99) = percentiles_us(&samples);
+            let tps = streams as f64 / stats::mean(&samples);
+            let m = engine.metrics();
+            let shared = m.bytes("io.shared_bytes") - m0.bytes("io.shared_bytes");
+            let io_b = m.bytes("io") - m0.bytes("io");
+            let ratio = shared as f64 / ((shared + io_b).max(1)) as f64;
+            println!(
+                "{:<56} {:>12.0} tok/s  (shared {:.1}%)",
+                format!("batch_scaling decode tiny [{label}] streams={streams}"),
+                tps,
+                100.0 * ratio
+            );
+            batch_entries.push((
+                Entry {
+                    mode: "batch_scaling",
+                    policy: *label,
+                    prefetch: true,
+                    threads: 1,
+                    streams,
+                    devices: 1,
+                    async_io: false,
+                    queue_depth: 0,
+                    op: "decode",
+                    tokens_per_s: tps,
+                    p50_us: p50,
+                    p99_us: p99,
+                    samples: samples.len(),
+                },
+                ratio,
+            ));
+        }
+    }
+
     // --- experiment-harness point cost (what figure sweeps pay) ---
     if !quick {
         use neuron_chunking::experiments::{IoPolicy, PaperRig, RigConfig};
@@ -426,18 +499,32 @@ fn main() {
         .iter()
         .map(|e| format!("  {}", e.to_json()))
         .collect();
+    // Batch rows carry the fused-I/O dedup ratio as an extra field
+    // (shared bytes / (shared + charged) — 0 means no cross-stream
+    // overlap, 0.5 means every byte was demanded by two streams).
+    let batch_rows: Vec<String> = batch_entries
+        .iter()
+        .map(|(e, ratio)| {
+            let base = e.to_json();
+            format!("  {},\"shared_ratio\":{:.4}}}", &base[..base.len() - 1], ratio)
+        })
+        .collect();
     let json = format!(
         "{{\n\"bench\":\"e2e\",\n\"model\":\"tiny\",\n\"entries\":[\n{}\n],\n\
-         \"device_scaling\":[\n{}\n],\n\"async_overlap\":[\n{}\n]\n}}\n",
+         \"device_scaling\":[\n{}\n],\n\"async_overlap\":[\n{}\n],\n\
+         \"batch_scaling\":[\n{}\n]\n}}\n",
         rows.join(",\n"),
         dev_rows.join(",\n"),
-        async_rows.join(",\n")
+        async_rows.join(",\n"),
+        batch_rows.join(",\n")
     );
     std::fs::write(&path, &json).expect("write bench json");
     println!(
-        "\nwrote {path} ({} entries + {} device-scaling + {} async-overlap entries)",
+        "\nwrote {path} ({} entries + {} device-scaling + {} async-overlap + {} batch-scaling \
+         entries)",
         entries.len(),
         device_entries.len(),
-        async_entries.len()
+        async_entries.len(),
+        batch_entries.len()
     );
 }

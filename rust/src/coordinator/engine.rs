@@ -35,7 +35,7 @@
 //! activations, gather staging, selection scratch, plan/receipt buffers
 //! and executor temporaries all come from the session's arena, weights
 //! are staged once into pooled buckets and handed to the executor as
-//! borrowed [`TensorView`]s (no clones), and every `*_into` API reuses
+//! borrowed [`crate::runtime::TensorView`]s (no clones), and every `*_into` API reuses
 //! capacity warmed up on the first call. An allocation-counting
 //! integration test enforces this with the default single-threaded
 //! kernels; `exec_threads > 1` additionally spawns scoped worker threads
@@ -71,94 +71,24 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::arena::ScratchArena;
-use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy, StageTimer};
-use crate::latency::{Chunk, LatencyTable};
-use crate::model::{decode_f32_into, MatrixId, MatrixKind, ModelSpec, WeightStore};
-use crate::plan::{
-    CoalescePolicy, IoPlanner, PlanReceipt, PlanScratch, PlannedRead, ReadPlan, RowCursor,
-};
+use crate::coordinator::pipeline::batch::{BatchArena, DecodeRequest};
+use crate::coordinator::pipeline::stages::{col_importance, full_mask, rmsnorm};
+use crate::coordinator::pipeline::{SessionState, StageStats};
+use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy};
+use crate::latency::LatencyTable;
+use crate::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+use crate::plan::{CoalescePolicy, IoPlanner};
 use crate::reorder::HotColdReorder;
-use crate::runtime::{Manifest, ModelMeta, Tensor, TensorView, XlaRuntime};
-use crate::sparsify::{SelectScratch, SelectionMask, Selector};
+use crate::runtime::{Manifest, ModelMeta, Tensor, XlaRuntime};
+use crate::sparsify::{SelectionMask, Selector};
 use crate::storage::{
-    AsyncIoQueue, DevicePool, DeviceProfile, FlashDevice, IoTicket, PoolScratch, ProfileConfig,
-    Profiler, SimulatedSsd, StripeLayout, StripePolicy,
+    AsyncIoQueue, DevicePool, DeviceProfile, ProfileConfig, Profiler, SimulatedSsd, StripeLayout,
+    StripePolicy,
 };
-
-/// Per-call stage accounting (one frame append or decode step).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct StageStats {
-    /// Flash service time (virtual for simulated devices), after prefetch
-    /// overlap credit.
-    pub io: Duration,
-    /// Stage-artifact execution wall time.
-    pub compute: Duration,
-    /// Selection-algorithm wall time.
-    pub select: Duration,
-    /// Host gather/pad/norm wall time.
-    pub host: Duration,
-    pub bytes_loaded: u64,
-    /// Bytes loaded speculatively by the next-layer prefetcher (subset of
-    /// `bytes_loaded`).
-    pub prefetched_bytes: u64,
-    /// Weight rows served from the prefetch buffer instead of a fresh
-    /// flash read.
-    pub prefetch_hits: u64,
-    /// Flash service time hidden behind compute by the prefetch pipeline
-    /// (the overlap credit already subtracted from `io`).
-    pub overlapped_io: Duration,
-    /// Highest number of whole-layer prefetches in flight at once (async
-    /// I/O pipeline only; 0 otherwise).
-    pub max_inflight: u64,
-    /// Retained / total importance this call (accuracy proxy).
-    pub importance_kept: f64,
-    pub importance_total: f64,
-}
-
-impl StageStats {
-    pub fn end_to_end(&self) -> Duration {
-        self.io + self.compute + self.select + self.host
-    }
-
-    /// Fraction of total flash service time that was hidden behind
-    /// compute (`overlapped / (charged + overlapped)`), in [0, 1].
-    pub fn overlap_ratio(&self) -> f64 {
-        let total = self.io + self.overlapped_io;
-        if total.is_zero() {
-            0.0
-        } else {
-            self.overlapped_io.as_secs_f64() / total.as_secs_f64()
-        }
-    }
-
-    pub fn retained_fraction(&self) -> f64 {
-        if self.importance_total <= 0.0 {
-            1.0
-        } else {
-            self.importance_kept / self.importance_total
-        }
-    }
-
-    /// Merge another call's stats (used by aggregating drivers).
-    pub fn absorb(&mut self, other: &StageStats) {
-        self.io += other.io;
-        self.compute += other.compute;
-        self.select += other.select;
-        self.host += other.host;
-        self.bytes_loaded += other.bytes_loaded;
-        self.prefetched_bytes += other.prefetched_bytes;
-        self.prefetch_hits += other.prefetch_hits;
-        self.overlapped_io += other.overlapped_io;
-        self.max_inflight = self.max_inflight.max(other.max_inflight);
-        self.importance_kept += other.importance_kept;
-        self.importance_total += other.importance_total;
-    }
-}
 
 /// Builder for [`Engine`] — the only way to construct one.
 #[derive(Clone, Debug)]
@@ -473,6 +403,7 @@ impl EngineBuilder {
             selector,
             neuron_cache: None,
             metrics: Mutex::new(Metrics::new()),
+            batch_arenas: Mutex::new(Vec::new()),
             epoch: 0,
         };
         Ok(Engine {
@@ -552,6 +483,52 @@ impl Engine {
         core.runtime.warmup(&core.model)
     }
 
+    /// Decode one token on several sessions **cooperatively**: selection
+    /// runs per stream, the per-group flash plans are fused so chunks
+    /// demanded by more than one stream are read once
+    /// ([`crate::plan::IoPlanner::fuse_into`]), and streams whose compute
+    /// sets coincide share one gathered weight tile through the
+    /// multi-stream kernels. Outputs and selected-chunk sets are
+    /// **bit-identical** to solo [`Session::decode_step`] calls on the
+    /// same sessions — batching is a pure throughput change.
+    ///
+    /// Members must be distinct sessions of this engine, each with a
+    /// non-empty KV cache; the batch is validated before any member
+    /// mutates, so an invalid member fails the call with every session
+    /// unchanged. An error *after* validation (e.g. a device failure
+    /// mid-layer) aborts the whole batch and — exactly like a solo
+    /// `decode_step` failing mid-call — may leave members' KV state
+    /// partially advanced; callers should reset such sessions rather
+    /// than retry the token. At most
+    /// [`MAX_DECODE_BATCH`](crate::coordinator::MAX_DECODE_BATCH)
+    /// members per call.
+    pub fn decode_batch(&self, reqs: &[DecodeRequest]) -> Result<Vec<(Vec<f32>, StageStats)>> {
+        let mut outs = vec![Vec::new(); reqs.len()];
+        let mut stats = vec![StageStats::default(); reqs.len()];
+        self.decode_batch_into(reqs, &mut outs, &mut stats)?;
+        Ok(outs.into_iter().zip(stats).collect())
+    }
+
+    /// Allocation-free [`Engine::decode_batch`]: outputs and stats land
+    /// in caller-owned slices (cleared + refilled, capacity reused).
+    /// After one warm-up batch of a given size, further batches perform
+    /// no heap allocations.
+    pub fn decode_batch_into(
+        &self,
+        reqs: &[DecodeRequest],
+        outs: &mut [Vec<f32>],
+        stats: &mut [StageStats],
+    ) -> Result<()> {
+        for (i, r) in reqs.iter().enumerate() {
+            anyhow::ensure!(
+                Arc::ptr_eq(&self.core, &r.session.core),
+                "batch member {i}: session belongs to a different engine"
+            );
+        }
+        let core = self.core.read().unwrap();
+        crate::coordinator::pipeline::batch::decode_batch(&core, reqs, outs, stats)
+    }
+
     /// Run dense calibration passes, build hot–cold permutations per
     /// scored matrix, bake them into the flash layout, and invalidate all
     /// session state. Call before serving (offline step in the paper).
@@ -565,145 +542,22 @@ impl Engine {
     }
 }
 
-/// Group index within [`MatrixKind::SCORED`] (Q, O, Gate, Down).
-fn group_index(kind: MatrixKind) -> usize {
-    MatrixKind::SCORED
-        .iter()
-        .position(|&k| k == kind)
-        .expect("scored kind")
-}
-
-/// Per-group flash-chunk demand recorded for next-call prefetch. An empty
-/// list means "no demand recorded".
-type GroupChunks = [Vec<Chunk>; 4];
-
-/// Per-call analytic clock for virtual-pool async accounting. Virtual
-/// waits charged to `io` do not advance the real wall clock (nothing
-/// actually sleeps), so the stall already charged this call is carried
-/// explicitly: the analytic "now" is wall-now plus that stall, the
-/// device frees up at the last submission's completion, and each
-/// charge is the time remaining from the analytic now — queued reads
-/// serialize without double-counting the backlog across stages.
-struct VirtualClock {
-    /// Analytic completion of the latest virtual submission.
-    free_at: Instant,
-    /// Virtual stall time already charged to `io` this call.
-    stall: Duration,
-}
-
-impl VirtualClock {
-    fn start() -> Self {
-        Self {
-            free_at: Instant::now(),
-            stall: Duration::ZERO,
-        }
-    }
-
-    /// The analytic current time: wall clock advanced by charged stalls.
-    fn now(&self) -> Instant {
-        Instant::now() + self.stall
-    }
-}
-
-/// Submission state of one layer's in-flight prefetch (async pipeline).
-#[derive(Default)]
-enum PendingPrefetch {
-    /// Nothing submitted for this layer.
-    #[default]
-    Idle,
-    /// Submitted inline against an all-virtual-clock pool: the receipt is
-    /// already filled; `completion` places the read's analytic finish on
-    /// the wall timeline under a *device-serial* queueing model
-    /// (`completion = max(submit, device-free) + service` — concurrent
-    /// in-flight reads queue behind each other instead of each crediting
-    /// the same compute window), and the overlap credit is settled when
-    /// the layer consumes it.
-    Virtual { completion: Instant, service: Duration },
-    /// Submitted to the async I/O workers (wall-clock pool): the ticket
-    /// completes once every member's sub-plan has been read.
-    InFlight { ticket: IoTicket },
-}
-
-struct SessionState {
-    /// KV caches, one per layer.
-    kvs: Vec<KvCache>,
-    /// Flash chunks each (layer, group) demanded on the previous call —
-    /// the prefetch prediction source.
-    prev_masks: Vec<GroupChunks>,
-    /// This call's demand record; swapped into `prev_masks` at call end.
-    next_masks: Vec<GroupChunks>,
-    /// Pooled prefetched whole-layer reads, one slot per layer (an empty
-    /// plan means "nothing prefetched").
-    prefetch: Vec<PlannedRead>,
-    /// Async-pipeline submission state, one slot per layer. Every
-    /// non-`Idle` entry is consumed at its layer within the same call;
-    /// entries only survive a call when it aborted mid-pipeline, and are
-    /// drained before the next one begins.
-    pending: Vec<PendingPrefetch>,
-    epoch: u64,
-}
-
-impl SessionState {
-    fn new(spec: &ModelSpec, epoch: u64) -> Self {
-        Self {
-            kvs: (0..spec.layers)
-                .map(|_| KvCache::new(spec.cache_slots, spec.d))
-                .collect(),
-            prev_masks: (0..spec.layers).map(|_| GroupChunks::default()).collect(),
-            next_masks: (0..spec.layers).map(|_| GroupChunks::default()).collect(),
-            prefetch: (0..spec.layers).map(|_| PlannedRead::default()).collect(),
-            pending: (0..spec.layers).map(|_| PendingPrefetch::default()).collect(),
-            epoch,
-        }
-    }
-
-    /// Settle any submission a previous (aborted) call left behind: await
-    /// and discard in-flight tickets, clear the matching prefetch slots.
-    /// No-op (and allocation-free) when every entry is `Idle`.
-    fn drain_stale(&mut self) {
-        for (slot, pending) in self.prefetch.iter_mut().zip(self.pending.iter_mut()) {
-            match std::mem::take(pending) {
-                PendingPrefetch::Idle => {}
-                PendingPrefetch::Virtual { .. } => slot.clear(),
-                PendingPrefetch::InFlight { ticket } => {
-                    ticket.discard();
-                    slot.clear();
-                }
-            }
-        }
-    }
-
-    fn reset(&mut self, epoch: u64) {
-        self.drain_stale();
-        for kv in &mut self.kvs {
-            kv.clear();
-        }
-        for masks in self.prev_masks.iter_mut().chain(self.next_masks.iter_mut()) {
-            for group in masks.iter_mut() {
-                group.clear();
-            }
-        }
-        for slot in &mut self.prefetch {
-            slot.clear();
-        }
-        self.epoch = epoch;
-    }
-}
-
 /// Everything a session owns and mutates per call: serving state plus the
-/// scratch arena all hot-path buffers come from.
-struct SessionInner {
-    state: SessionState,
-    scratch: ScratchArena,
+/// scratch arena all hot-path buffers come from. The pipeline drivers
+/// (solo and batch) work directly on this pair.
+pub(crate) struct SessionInner {
+    pub(crate) state: SessionState,
+    pub(crate) scratch: ScratchArena,
 }
 
 /// One serving stream: owns its KV caches, prefetch state, and scratch
 /// arena; shares the engine core. `Send + Sync`: concurrent calls on the
 /// same session serialize on its internal lock, calls on different
-/// sessions run in parallel.
+/// sessions run in parallel (and the batch driver locks several sessions
+/// in address order to decode them as one fused batch).
 pub struct Session {
-    core: Arc<RwLock<EngineCore>>,
-    inner: Mutex<SessionInner>,
+    pub(crate) core: Arc<RwLock<EngineCore>>,
+    pub(crate) inner: Mutex<SessionInner>,
 }
 
 impl Session {
@@ -778,52 +632,61 @@ impl Session {
     }
 }
 
-struct EngineCore {
-    model: String,
-    policy: Policy,
-    sparsity: f64,
-    seed: u64,
-    prefetch: bool,
+/// The shared, read-mostly engine state every session and both pipeline
+/// drivers work against. `pub(crate)` fields: the staged pipeline
+/// (`coordinator::pipeline`) is the other half of this type's
+/// implementation — its stage helpers and drivers live there as inherent
+/// impls.
+pub(crate) struct EngineCore {
+    pub(crate) model: String,
+    pub(crate) policy: Policy,
+    pub(crate) sparsity: f64,
+    pub(crate) seed: u64,
+    pub(crate) prefetch: bool,
     /// Async I/O pipeline enabled (submit-ahead prefetch + completion
     /// tickets). Pure timing change; outputs are invariant.
-    async_io: bool,
+    pub(crate) async_io: bool,
     /// Bound on in-flight whole-layer prefetches / worker queue slots.
-    io_queue_depth: usize,
+    pub(crate) io_queue_depth: usize,
     /// Per-member I/O workers (wall-clock pools with async I/O only).
-    async_pipe: Option<AsyncIoQueue>,
+    pub(crate) async_pipe: Option<AsyncIoQueue>,
     /// Real-storage backing directory (file-backed pools), if any.
-    backing_dir: Option<PathBuf>,
+    pub(crate) backing_dir: Option<PathBuf>,
     /// Executor kernel worker count (outputs are thread-count invariant).
-    exec_threads: usize,
-    runtime: XlaRuntime,
-    meta: ModelMeta,
-    spec: ModelSpec,
-    store: WeightStore,
+    pub(crate) exec_threads: usize,
+    pub(crate) runtime: XlaRuntime,
+    pub(crate) meta: ModelMeta,
+    pub(crate) spec: ModelSpec,
+    pub(crate) store: WeightStore,
     /// Sharded storage pool (single-member pools reproduce the legacy
     /// one-device behaviour bit for bit).
-    pool: DevicePool,
+    pub(crate) pool: DevicePool,
     /// One profile per pool member (homogeneous = N copies).
-    member_profiles: Vec<DeviceProfile>,
+    pub(crate) member_profiles: Vec<DeviceProfile>,
     /// Per-member profiled `T[s]` tables.
-    member_tables: Vec<LatencyTable>,
-    stripe_policy: StripePolicy,
-    stripe_bytes: Option<usize>,
+    pub(crate) member_tables: Vec<LatencyTable>,
+    pub(crate) stripe_policy: StripePolicy,
+    pub(crate) stripe_bytes: Option<usize>,
     /// Pre-rendered per-member metrics keys ("io.dev0", …).
-    dev_io_names: Vec<String>,
+    pub(crate) dev_io_names: Vec<String>,
     /// Byte-keyed pool-effective latency table (selection utility).
-    table: LatencyTable,
+    pub(crate) table: LatencyTable,
     /// The table pre-keyed per scored row size (hot path must not clone).
-    keyed_tables: HashMap<usize, LatencyTable>,
+    pub(crate) keyed_tables: HashMap<usize, LatencyTable>,
     /// Pre-rendered artifact names: (stage base, is_decode, bucket).
-    artifact_names: HashMap<(&'static str, bool, usize), String>,
-    planner: IoPlanner,
-    selector: Option<Box<dyn Selector>>,
+    pub(crate) artifact_names: HashMap<(&'static str, bool, usize), String>,
+    pub(crate) planner: IoPlanner,
+    pub(crate) selector: Option<Box<dyn Selector>>,
     /// Optional hot-neuron cache (§5 memory-budget extension).
-    neuron_cache: Option<HotNeuronCache>,
-    metrics: Mutex<Metrics>,
+    pub(crate) neuron_cache: Option<HotNeuronCache>,
+    pub(crate) metrics: Mutex<Metrics>,
+    /// Pooled batch-driver working memory (fusion scratch, fused
+    /// plan/receipt, cohort kernel buffers), recycled so steady-state
+    /// batched decoding allocates nothing.
+    pub(crate) batch_arenas: Mutex<Vec<Box<BatchArena>>>,
     /// Bumped whenever the flash image is rebuilt (re-calibration);
     /// sessions compare and self-reset.
-    epoch: u64,
+    pub(crate) epoch: u64,
 }
 
 impl EngineCore {
@@ -897,782 +760,6 @@ impl EngineCore {
             x = self.exec_projres(layer, MatrixKind::Down, &act, t, &x1, &full_mask(h))?;
         }
         Ok(out)
-    }
-
-    /// One serving call (frame append or decode step). `&self`: all
-    /// mutable state lives in the session (`state` + `scratch`), so
-    /// concurrent sessions proceed under the shared read lock.
-    fn forward(
-        &self,
-        state: &mut SessionState,
-        scratch: &mut ScratchArena,
-        input: &[f32],
-        t: usize,
-        out: &mut Vec<f32>,
-    ) -> Result<StageStats> {
-        if state.epoch != self.epoch {
-            state.reset(self.epoch);
-        }
-        let d = self.meta.d;
-        let h = self.meta.h;
-        let c = self.spec.cache_slots;
-        let layers = self.spec.layers;
-        let mut stats = StageStats::default();
-        let mut prefetch_service = Duration::ZERO;
-
-        let sc = &mut *scratch;
-        sc.pool.accum.reset(self.pool.len());
-        sc.fwd.xa.clear();
-        sc.fwd.xa.extend_from_slice(input);
-
-        // Async pipeline state: keep up to `io_queue_depth` whole-layer
-        // prefetches in flight, each submitted *before* the kernels of
-        // the layers it overlaps with run, and awaited only at the moment
-        // its layer consumes the weights.
-        let async_on = self.async_io && self.prefetch;
-        let depth = self.io_queue_depth.max(1);
-        let mut in_flight = 0u64;
-        let mut next_submit = 1usize;
-        // Per-call analytic clock for the virtual-pool queueing model
-        // (virtual-clock pools only; wall-clock pools measure real time).
-        let mut vclock = VirtualClock::start();
-        if async_on {
-            state.drain_stale();
-        }
-
-        for layer in 0..layers {
-            let layer_t0 = Instant::now();
-            if async_on {
-                // Await this layer's prefetch (if one is in flight) right
-                // before its weights are consumed; only service time the
-                // intervening compute could not hide is charged.
-                in_flight -= self.consume_pending(
-                    state,
-                    sc,
-                    layer,
-                    &mut stats,
-                    &mut prefetch_service,
-                    &mut vclock,
-                )?;
-                // Then top up the submission window before this layer's
-                // kernels execute. Consuming first keeps the bound exact:
-                // at most `depth` layers are ever in flight per session,
-                // so a submission never blocks on a full member queue
-                // ahead of this layer's compute (the queues carry slack
-                // for several concurrent sessions; past that, a full
-                // queue is deliberate backpressure).
-                while next_submit < layers && next_submit <= layer + depth {
-                    let l = next_submit;
-                    next_submit += 1;
-                    if self.submit_prefetch(state, sc, l, &mut stats, &mut vclock)? {
-                        in_flight += 1;
-                        stats.max_inflight = stats.max_inflight.max(in_flight);
-                    }
-                }
-            }
-            // Whole-layer prefetch buffer for this layer, if the previous
-            // call's masks were submitted while layer-1 executed. Swap the
-            // pooled slot out (its buffers cycle back in on the next
-            // prefetch write) and leave the slot empty.
-            std::mem::swap(&mut sc.pre, &mut state.prefetch[layer]);
-            state.prefetch[layer].clear();
-            let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
-
-            // --- qkv + attention ---
-            let timer = StageTimer::start();
-            rmsnorm_into(&sc.fwd.xa, t, d, &mut sc.fwd.hn);
-            col_importance_into(&sc.fwd.hn, t, d, &mut sc.fwd.imp);
-            stats.host += timer.finish();
-            self.select_into(
-                layer,
-                MatrixKind::Q,
-                &sc.fwd.imp,
-                &mut stats,
-                &mut sc.sel_scratch,
-                &mut sc.imp_phys,
-                &mut sc.sel,
-            );
-            let bucket = self.load_group(
-                layer,
-                MatrixKind::Q,
-                &sc.fwd.hn,
-                t,
-                &sc.sel,
-                pre,
-                &mut sc.gather,
-                &mut sc.plan_scratch,
-                &mut sc.pool,
-                &mut stats,
-            )?;
-            let dst = &mut state.next_masks[layer][group_index(MatrixKind::Q)];
-            dst.clear();
-            dst.extend_from_slice(&sc.gather.flash_chunks);
-            {
-                let timer = StageTimer::start();
-                let (kc, vc, kmask) = state.kvs[layer].views();
-                let name = self.artifact_name("qkv", t, bucket)?;
-                let inputs = [
-                    TensorView::mat(t, bucket, &sc.gather.xs),
-                    TensorView::mat(bucket, d, &sc.gather.weights[0]),
-                    TensorView::mat(bucket, d, &sc.gather.weights[1]),
-                    TensorView::mat(bucket, d, &sc.gather.weights[2]),
-                    TensorView::mat(c, d, kc),
-                    TensorView::mat(c, d, vc),
-                    TensorView::vec1(c, kmask),
-                ];
-                self.runtime
-                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
-                stats.compute += timer.finish();
-            }
-            std::mem::swap(&mut sc.fwd.attn, &mut sc.outs.out[0]);
-            state.kvs[layer].append(&sc.outs.out[1], &sc.outs.out[2]);
-
-            // --- o projection + residual ---
-            let timer = StageTimer::start();
-            col_importance_into(&sc.fwd.attn, t, d, &mut sc.fwd.imp);
-            stats.host += timer.finish();
-            self.select_into(
-                layer,
-                MatrixKind::O,
-                &sc.fwd.imp,
-                &mut stats,
-                &mut sc.sel_scratch,
-                &mut sc.imp_phys,
-                &mut sc.sel,
-            );
-            let bucket = self.load_group(
-                layer,
-                MatrixKind::O,
-                &sc.fwd.attn,
-                t,
-                &sc.sel,
-                pre,
-                &mut sc.gather,
-                &mut sc.plan_scratch,
-                &mut sc.pool,
-                &mut stats,
-            )?;
-            let dst = &mut state.next_masks[layer][group_index(MatrixKind::O)];
-            dst.clear();
-            dst.extend_from_slice(&sc.gather.flash_chunks);
-            {
-                let timer = StageTimer::start();
-                let name = self.artifact_name("projres", t, bucket)?;
-                let inputs = [
-                    TensorView::mat(t, bucket, &sc.gather.xs),
-                    TensorView::mat(bucket, d, &sc.gather.weights[0]),
-                    TensorView::mat(t, d, &sc.fwd.xa),
-                ];
-                self.runtime
-                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
-                stats.compute += timer.finish();
-            }
-            std::mem::swap(&mut sc.fwd.xb, &mut sc.outs.out[0]);
-
-            // --- gate/up (SwiGLU) ---
-            let timer = StageTimer::start();
-            rmsnorm_into(&sc.fwd.xb, t, d, &mut sc.fwd.hn);
-            col_importance_into(&sc.fwd.hn, t, d, &mut sc.fwd.imp);
-            stats.host += timer.finish();
-            self.select_into(
-                layer,
-                MatrixKind::Gate,
-                &sc.fwd.imp,
-                &mut stats,
-                &mut sc.sel_scratch,
-                &mut sc.imp_phys,
-                &mut sc.sel,
-            );
-            let bucket = self.load_group(
-                layer,
-                MatrixKind::Gate,
-                &sc.fwd.hn,
-                t,
-                &sc.sel,
-                pre,
-                &mut sc.gather,
-                &mut sc.plan_scratch,
-                &mut sc.pool,
-                &mut stats,
-            )?;
-            let dst = &mut state.next_masks[layer][group_index(MatrixKind::Gate)];
-            dst.clear();
-            dst.extend_from_slice(&sc.gather.flash_chunks);
-            {
-                let timer = StageTimer::start();
-                let name = self.artifact_name("gateup", t, bucket)?;
-                let inputs = [
-                    TensorView::mat(t, bucket, &sc.gather.xs),
-                    TensorView::mat(bucket, h, &sc.gather.weights[0]),
-                    TensorView::mat(bucket, h, &sc.gather.weights[1]),
-                ];
-                self.runtime
-                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
-                stats.compute += timer.finish();
-            }
-            std::mem::swap(&mut sc.fwd.act, &mut sc.outs.out[0]);
-
-            // --- down projection + residual ---
-            let timer = StageTimer::start();
-            col_importance_into(&sc.fwd.act, t, h, &mut sc.fwd.imp);
-            stats.host += timer.finish();
-            self.select_into(
-                layer,
-                MatrixKind::Down,
-                &sc.fwd.imp,
-                &mut stats,
-                &mut sc.sel_scratch,
-                &mut sc.imp_phys,
-                &mut sc.sel,
-            );
-            let bucket = self.load_group(
-                layer,
-                MatrixKind::Down,
-                &sc.fwd.act,
-                t,
-                &sc.sel,
-                pre,
-                &mut sc.gather,
-                &mut sc.plan_scratch,
-                &mut sc.pool,
-                &mut stats,
-            )?;
-            let dst = &mut state.next_masks[layer][group_index(MatrixKind::Down)];
-            dst.clear();
-            dst.extend_from_slice(&sc.gather.flash_chunks);
-            {
-                let timer = StageTimer::start();
-                let name = self.artifact_name("projres", t, bucket)?;
-                let inputs = [
-                    TensorView::mat(t, bucket, &sc.gather.xs),
-                    TensorView::mat(bucket, d, &sc.gather.weights[0]),
-                    TensorView::mat(t, d, &sc.fwd.xb),
-                ];
-                self.runtime
-                    .execute_into(name, &inputs, self.exec_threads, &mut sc.exec, &mut sc.outs)?;
-                stats.compute += timer.finish();
-            }
-            std::mem::swap(&mut sc.fwd.xa, &mut sc.outs.out[0]);
-
-            // --- double-buffered prefetch of layer l+1 (sync mode) ---
-            // Submit the next layer's predicted whole-layer read now; the
-            // service time it cannot hide behind this layer's compute is
-            // what the caller pays. (The async pipeline replaces this
-            // with submit-ahead at layer start + await-at-consumption.)
-            if !async_on && self.prefetch && layer + 1 < layers {
-                prefetch_service += self.prefetch_layer(
-                    state,
-                    &mut sc.plan_scratch,
-                    &mut sc.pool,
-                    layer + 1,
-                    layer_t0.elapsed(),
-                    &mut stats,
-                )?;
-            }
-        }
-        std::mem::swap(&mut state.prev_masks, &mut state.next_masks);
-        // One metrics fold per call (not per stage): the shared mutex is
-        // touched once, so concurrent sessions don't serialize on it.
-        {
-            let mut metrics = self.metrics.lock().unwrap();
-            metrics.add("host", stats.host);
-            metrics.add("select", stats.select);
-            metrics.add("compute", stats.compute);
-            metrics.add("io", stats.io);
-            if prefetch_service > Duration::ZERO {
-                metrics.add("prefetch", prefetch_service);
-                // Service time the pipeline hid behind compute; the
-                // overlap ratio is `io.overlapped / (io + io.overlapped)`.
-                metrics.add("io.overlapped", stats.overlapped_io);
-            }
-            if async_on {
-                // Per-call max of in-flight whole-layer prefetches
-                // (accumulated; divide by the "io" call count for the
-                // average achieved queue depth).
-                metrics.add_bytes("io.queue_depth", stats.max_inflight);
-            }
-            metrics.add_bytes("io", stats.bytes_loaded);
-            // Per-member I/O accounting (multi-member pools only): bytes
-            // and summed service per device, from which utilization skew
-            // is derived. Keys are pre-rendered, so this allocates
-            // nothing at steady state.
-            if self.pool.len() > 1 {
-                for m in 0..self.pool.len() {
-                    metrics.add(&self.dev_io_names[m], sc.pool.accum.service[m]);
-                    metrics.add_bytes(&self.dev_io_names[m], sc.pool.accum.bytes[m]);
-                }
-            }
-        }
-        out.clear();
-        out.extend_from_slice(&sc.fwd.xa);
-        Ok(stats)
-    }
-
-    /// Plan the predicted flash demand of `layer` (all four selection
-    /// groups, every member matrix — one cross-matrix command batch) into
-    /// the session's pooled prefetch slot. Returns whether the plan is
-    /// non-empty. Allocation-free.
-    fn plan_layer_prefetch(
-        &self,
-        state: &mut SessionState,
-        plan_scratch: &mut PlanScratch,
-        layer: usize,
-    ) -> bool {
-        let SessionState {
-            prev_masks,
-            prefetch,
-            ..
-        } = state;
-        let Some(groups) = prev_masks.get(layer) else {
-            return false;
-        };
-        // At most the seven matrices of one layer; stack-allocated.
-        let empty: &[Chunk] = &[];
-        let mut requests: [(MatrixId, &[Chunk]); 7] =
-            [(MatrixId::new(layer, MatrixKind::Q), empty); 7];
-        let mut n = 0usize;
-        for (gi, scored) in MatrixKind::SCORED.into_iter().enumerate() {
-            let chunks = &groups[gi];
-            if chunks.is_empty() {
-                continue;
-            }
-            for member in MatrixKind::ALL {
-                if member.mask_source() == scored {
-                    requests[n] = (MatrixId::new(layer, member), chunks.as_slice());
-                    n += 1;
-                }
-            }
-        }
-        if n == 0 {
-            return false;
-        }
-        let slot = &mut prefetch[layer];
-        self.planner.plan_refs_into(
-            &self.store.layout,
-            &requests[..n],
-            Some(&self.table),
-            plan_scratch,
-            &mut slot.plan,
-        );
-        !slot.plan.is_empty()
-    }
-
-    /// Synchronous-mode prefetch: plan + submit `layer`'s predicted
-    /// demand into its slot. `overlap` is the wall-clock compute window
-    /// already elapsed that the prefetch hides behind. Returns the raw
-    /// (pre-overlap-credit) service time for the caller's metrics fold.
-    fn prefetch_layer(
-        &self,
-        state: &mut SessionState,
-        plan_scratch: &mut PlanScratch,
-        pool_scratch: &mut PoolScratch,
-        layer: usize,
-        overlap: Duration,
-        stats: &mut StageStats,
-    ) -> Result<Duration> {
-        if !self.plan_layer_prefetch(state, plan_scratch, layer) {
-            return Ok(Duration::ZERO);
-        }
-        let PlannedRead { plan, receipt } = &mut state.prefetch[layer];
-        if let Err(e) = self.submit_pooled(plan, pool_scratch, receipt) {
-            // A failed submission must not leave a non-empty plan over an
-            // unfilled receipt: the next call would swap the slot in as a
-            // valid prefetch and serve garbage bytes.
-            state.prefetch[layer].clear();
-            return Err(e);
-        }
-        let PlannedRead { plan, receipt } = &mut state.prefetch[layer];
-        let service = receipt.service;
-        let charged = service.saturating_sub(overlap);
-        stats.io += charged;
-        stats.overlapped_io += service - charged;
-        stats.bytes_loaded += plan.payload_bytes();
-        stats.prefetched_bytes += plan.payload_bytes();
-        Ok(service)
-    }
-
-    /// Async-pipeline submission of `layer`'s predicted prefetch demand.
-    /// Returns whether anything was submitted (and is now in flight).
-    ///
-    /// Virtual-clock pools submit inline (an analytical clock cannot
-    /// observe concurrency — the data and service time are exact either
-    /// way) and place the read's analytic completion on the wall
-    /// timeline under the device-serial queueing model of
-    /// [`VirtualClock`]; the overlap credit is settled in
-    /// [`EngineCore::consume_pending`]. Wall-clock pools hand the
-    /// sharded plan to the per-member I/O workers and hold the
-    /// completion ticket.
-    fn submit_prefetch(
-        &self,
-        state: &mut SessionState,
-        sc: &mut ScratchArena,
-        layer: usize,
-        stats: &mut StageStats,
-        vclock: &mut VirtualClock,
-    ) -> Result<bool> {
-        if !self.plan_layer_prefetch(state, &mut sc.plan_scratch, layer) {
-            return Ok(false);
-        }
-        let SessionState {
-            prefetch, pending, ..
-        } = state;
-        let PlannedRead { plan, receipt } = &mut prefetch[layer];
-        stats.bytes_loaded += plan.payload_bytes();
-        stats.prefetched_bytes += plan.payload_bytes();
-        match &self.async_pipe {
-            None => {
-                if let Err(e) = self.submit_pooled(plan, &mut sc.pool, receipt) {
-                    // Never leave a non-empty plan over an unfilled
-                    // receipt: the next call would swap the slot in as a
-                    // valid prefetch and serve garbage bytes.
-                    prefetch[layer].clear();
-                    return Err(e);
-                }
-                let service = prefetch[layer].receipt.service;
-                // Device-serial virtual queueing: this read starts when
-                // the (pool-level) virtual device frees up, never before
-                // the analytic now — concurrent in-flight prefetches
-                // must not each credit the same compute window.
-                let start = vclock.free_at.max(vclock.now());
-                let completion = start + service;
-                vclock.free_at = completion;
-                pending[layer] = PendingPrefetch::Virtual {
-                    completion,
-                    service,
-                };
-            }
-            Some(pipe) => {
-                self.planner
-                    .shard_into(plan, self.pool.stripe(), &mut sc.pool.sharded);
-                // Pre-size the logical receipt here; the workers fill
-                // their own staging buffers and the ticket scatters into
-                // these bytes at await time.
-                let total = receipt.presize_for(plan.cmds());
-                if sc.pool.sharded.total_bytes() != total {
-                    let covered = sc.pool.sharded.total_bytes();
-                    prefetch[layer].clear();
-                    anyhow::bail!("sharded prefetch covers {covered} of {total} plan bytes");
-                }
-                let ticket = pipe.submit(&sc.pool.sharded);
-                pending[layer] = PendingPrefetch::InFlight { ticket };
-            }
-        }
-        Ok(true)
-    }
-
-    /// Settle `layer`'s in-flight prefetch right before its weights are
-    /// consumed. Returns 1 if a submission was pending (the caller's
-    /// in-flight counter decrements), 0 otherwise.
-    ///
-    /// Accounting charges only what compute could not hide: for virtual
-    /// clocks, the time remaining until the read's device-serial
-    /// analytic completion — the stage pays `max(compute, io)` with
-    /// queued reads serializing on the virtual device (a single pool
-    /// cannot serve N in-flight layers at N× bandwidth); for wall-clock
-    /// tickets, the time this call actually blocked waiting. The hidden
-    /// remainder lands in `overlapped_io`.
-    #[allow(clippy::too_many_arguments)]
-    fn consume_pending(
-        &self,
-        state: &mut SessionState,
-        sc: &mut ScratchArena,
-        layer: usize,
-        stats: &mut StageStats,
-        prefetch_service: &mut Duration,
-        vclock: &mut VirtualClock,
-    ) -> Result<u64> {
-        match std::mem::take(&mut state.pending[layer]) {
-            PendingPrefetch::Idle => Ok(0),
-            PendingPrefetch::Virtual {
-                completion,
-                service,
-            } => {
-                // Remaining time until the device-serial analytic finish,
-                // measured from the analytic now (wall clock + stalls
-                // already charged this call, which nothing actually slept
-                // through).
-                let charged = completion.saturating_duration_since(vclock.now());
-                vclock.stall += charged;
-                stats.io += charged;
-                stats.overlapped_io += service.saturating_sub(charged);
-                *prefetch_service += service;
-                Ok(1)
-            }
-            PendingPrefetch::InFlight { ticket } => {
-                let slot = &mut state.prefetch[layer];
-                sc.pool.last.reset(self.pool.len());
-                let wait_t0 = Instant::now();
-                let waited = ticket.wait_scatter(&mut slot.receipt.bytes, &mut sc.pool.last);
-                let service = match waited {
-                    Ok(d) => d,
-                    Err(e) => {
-                        slot.clear();
-                        return Err(e);
-                    }
-                };
-                let blocked = wait_t0.elapsed();
-                slot.receipt.service = service;
-                sc.pool.accum.absorb(&sc.pool.last);
-                stats.io += blocked;
-                stats.overlapped_io += service.saturating_sub(blocked);
-                *prefetch_service += service;
-                Ok(1)
-            }
-        }
-    }
-
-    /// Submit one logical plan through the storage pool. Single-member
-    /// pools delegate straight to the member (bit-identical to the
-    /// historical one-device path); larger pools run the
-    /// [`IoPlanner::shard_into`] step and fan the sub-plans out across
-    /// members, reassembling the logical receipt. Per-member
-    /// bytes/service land in `ps.last` and accumulate into `ps.accum`
-    /// for the per-call metrics fold. Allocation-free at steady state.
-    fn submit_pooled(
-        &self,
-        plan: &ReadPlan,
-        ps: &mut PoolScratch,
-        receipt: &mut PlanReceipt,
-    ) -> Result<()> {
-        if self.pool.len() == 1 {
-            self.pool.member(0).submit_into(plan, receipt)?;
-            ps.last.reset(1);
-            ps.last.bytes[0] = plan.cmd_bytes();
-            ps.last.service[0] = receipt.service;
-        } else {
-            self.planner.shard_into(plan, self.pool.stripe(), &mut ps.sharded);
-            self.pool.submit_sharded_into(
-                plan,
-                &ps.sharded,
-                &mut ps.staging,
-                receipt,
-                &mut ps.last,
-            )?;
-        }
-        ps.accum.absorb(&ps.last);
-        Ok(())
-    }
-
-    /// Run the selection policy for one scored matrix, writing the mask
-    /// into `out` (arena-backed; no allocations at steady state).
-    #[allow(clippy::too_many_arguments)]
-    fn select_into(
-        &self,
-        layer: usize,
-        kind: MatrixKind,
-        importance_logical: &[f32],
-        stats: &mut StageStats,
-        scratch: &mut SelectScratch,
-        imp_phys: &mut Vec<f32>,
-        out: &mut SelectionMask,
-    ) {
-        let rows = importance_logical.len();
-        let timer = StageTimer::start();
-        // Move importance into physical (reordered) row space.
-        let id = MatrixId::new(layer, kind);
-        match self.store.permutation(id) {
-            Some(p) => p.apply_into(importance_logical, imp_phys),
-            None => {
-                imp_phys.clear();
-                imp_phys.extend_from_slice(importance_logical);
-            }
-        }
-        let total: f64 = imp_phys.iter().map(|&v| v as f64).sum();
-        // Cached rows are free: zero their importance pre-selection (§5).
-        if let Some(cache) = &self.neuron_cache {
-            cache.zero_cached(id, imp_phys);
-        }
-        let budget = ((1.0 - self.sparsity) * rows as f64).round() as usize;
-        match &self.selector {
-            None => out.set_full(rows),
-            Some(s) => {
-                let row_bytes = self.spec.row_bytes(kind);
-                let table = self
-                    .keyed_tables
-                    .get(&row_bytes)
-                    .expect("table pre-keyed for every scored row size");
-                s.select_into(imp_phys, budget, table, scratch, out);
-            }
-        }
-        stats.select += timer.finish();
-        stats.importance_total += total;
-        stats.importance_kept += out.captured_importance(imp_phys);
-        if let Some(cache) = &self.neuron_cache {
-            stats.importance_kept +=
-                cache.cached_importance(id, importance_logical, self.store.permutation(id));
-        }
-    }
-
-    /// Load all matrices of the selection group led by `kind`, gather the
-    /// activations, pad to the compiled bucket. One planned, cross-matrix
-    /// flash submission serves every member; rows already resident in the
-    /// layer prefetch buffer or the hot-neuron cache are not re-read.
-    ///
-    /// Staging lands in the arena: `g.xs` (gathered activations),
-    /// `g.weights[..members]` (weight buckets the executor reads in
-    /// place), `g.flash_chunks` (demand recorded for prefetch). Returns
-    /// the compiled bucket size.
-    #[allow(clippy::too_many_arguments)]
-    fn load_group(
-        &self,
-        layer: usize,
-        kind: MatrixKind,
-        acts: &[f32],
-        t: usize,
-        sel: &SelectionMask,
-        prefetched: Option<&PlannedRead>,
-        g: &mut crate::coordinator::arena::GatherScratch,
-        plan_scratch: &mut PlanScratch,
-        pool_scratch: &mut PoolScratch,
-        stats: &mut StageStats,
-    ) -> Result<usize> {
-        let members: &'static [MatrixKind] = match kind {
-            MatrixKind::Q => &[MatrixKind::Q, MatrixKind::K, MatrixKind::V],
-            MatrixKind::O => &[MatrixKind::O],
-            MatrixKind::Gate => &[MatrixKind::Gate, MatrixKind::Up],
-            MatrixKind::Down => &[MatrixKind::Down],
-            _ => unreachable!("only scored kinds lead a group"),
-        };
-        let in_rows = self.spec.shape_of(kind).rows;
-
-        // Union of selected + cached rows (sorted, physical space).
-        let id0 = MatrixId::new(layer, kind);
-        g.phys_rows.clear();
-        for chunk in &sel.chunks {
-            g.phys_rows.extend(chunk.start..chunk.end());
-        }
-        g.flash_chunks.clear();
-        g.flash_chunks.extend_from_slice(&sel.chunks);
-        if let Some(cache) = &self.neuron_cache {
-            let cached = cache.cached_rows(id0);
-            if !cached.is_empty() {
-                g.selset.clear();
-                g.selset.resize(in_rows, false);
-                for &r in g.phys_rows.iter() {
-                    g.selset[r] = true;
-                }
-                for &r in cached {
-                    if !g.selset[r] {
-                        g.phys_rows.push(r);
-                    }
-                }
-                g.phys_rows.sort_unstable();
-                // Flash reads exclude cached rows.
-                g.flash_chunks.clear();
-                for chunk in &sel.chunks {
-                    g.flash_chunks.extend(cache.subtract_cached(id0, *chunk));
-                }
-            }
-        }
-
-        let buckets = if kind == MatrixKind::Down {
-            &self.meta.h_buckets
-        } else {
-            &self.meta.d_buckets
-        };
-        let bucket = ModelMeta::bucket_for(buckets, g.phys_rows.len());
-
-        // Gather activations: xs[:, j] = acts[:, logical(phys_rows[j])].
-        let timer = StageTimer::start();
-        let perm = self.store.permutation(id0);
-        g.xs.clear();
-        g.xs.resize(t * bucket, 0.0);
-        for (j, &p) in g.phys_rows.iter().enumerate() {
-            let logical = perm.map(|pm| pm.old_of(p)).unwrap_or(p);
-            for ti in 0..t {
-                g.xs[ti * bucket + j] = acts[ti * in_rows + logical];
-            }
-        }
-        stats.host += timer.finish();
-
-        // Rows the prefetch buffer already holds need no fresh read; the
-        // residual demand is planned as one cross-matrix batch. Coverage is
-        // identical across members (the prefetcher requested the same
-        // chunks for each), so the lead member's cursor decides.
-        g.residual.clear();
-        match prefetched {
-            None => g.residual.extend_from_slice(&g.flash_chunks),
-            Some(pre) => {
-                let lead = MatrixId::new(layer, members[0]);
-                let mut cursor = RowCursor::new(pre, lead);
-                for chunk in &g.flash_chunks {
-                    let mut run: Option<usize> = None;
-                    for r in chunk.start..chunk.end() {
-                        if cursor.advance_to(r).is_some() {
-                            if let Some(s) = run.take() {
-                                g.residual.push(Chunk::new(s, r - s));
-                            }
-                        } else if run.is_none() {
-                            run = Some(r);
-                        }
-                    }
-                    if let Some(s) = run {
-                        g.residual.push(Chunk::new(s, chunk.end() - s));
-                    }
-                }
-            }
-        }
-
-        // One planned submission for every member's residual rows.
-        let empty: &[Chunk] = &[];
-        let mut requests: [(MatrixId, &[Chunk]); 3] = [(id0, empty); 3];
-        for (i, member) in members.iter().enumerate() {
-            requests[i] = (MatrixId::new(layer, *member), g.residual.as_slice());
-        }
-        self.planner.plan_refs_into(
-            &self.store.layout,
-            &requests[..members.len()],
-            Some(&self.table),
-            plan_scratch,
-            &mut g.fresh.plan,
-        );
-        let have_fresh = !g.fresh.plan.is_empty();
-        if have_fresh {
-            self.submit_pooled(&g.fresh.plan, pool_scratch, &mut g.fresh.receipt)?;
-            stats.bytes_loaded += g.fresh.plan.payload_bytes();
-        } else {
-            g.fresh.receipt.clear();
-        }
-        let io_total = g.fresh.receipt.service;
-
-        // Assemble per-member weight buckets: fresh read → prefetch buffer
-        // → hot-neuron cache, walking phys_rows in ascending order. The
-        // executor reads these buffers in place (no clones).
-        let timer = StageTimer::start();
-        for (mi, member) in members.iter().enumerate() {
-            let id = MatrixId::new(layer, *member);
-            let cols = self.spec.shape_of(*member).cols;
-            let w = &mut g.weights[mi];
-            w.clear();
-            w.resize(bucket * cols, 0.0);
-            let mut fresh_cursor = if have_fresh {
-                Some(RowCursor::new(&g.fresh, id))
-            } else {
-                None
-            };
-            let mut pre_cursor = prefetched.map(|p| RowCursor::new(p, id));
-            for (j, &p) in g.phys_rows.iter().enumerate() {
-                let dst = &mut w[j * cols..(j + 1) * cols];
-                if let Some(bytes) = fresh_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
-                    decode_f32_into(bytes, dst);
-                    continue;
-                }
-                if let Some(bytes) = pre_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
-                    decode_f32_into(bytes, dst);
-                    stats.prefetch_hits += 1;
-                    continue;
-                }
-                if let Some(cache) = &self.neuron_cache {
-                    if let Some(row) = cache.row_data(id, p) {
-                        dst.copy_from_slice(row);
-                    }
-                }
-            }
-        }
-        stats.host += timer.finish();
-
-        stats.io += io_total;
-        Ok(bucket)
     }
 
     /// Dense helpers used by the calibration pass. These also flow through
@@ -1838,7 +925,12 @@ impl EngineCore {
     }
 
     /// Pre-rendered artifact name lookup (no per-call formatting).
-    fn artifact_name(&self, base: &'static str, t: usize, bucket: usize) -> Result<&str> {
+    pub(crate) fn artifact_name(
+        &self,
+        base: &'static str,
+        t: usize,
+        bucket: usize,
+    ) -> Result<&str> {
         self.artifact_names
             .get(&(base, t == 1, bucket))
             .map(|s| s.as_str())
@@ -1876,59 +968,13 @@ fn build_pool(
     }
 }
 
-/// Scale-free RMSNorm over each of `t` rows of width `d` (host-side; the
-/// coordinator needs the values for scoring anyway).
-pub fn rmsnorm(x: &[f32], t: usize, d: usize) -> Vec<f32> {
-    let mut out = Vec::new();
-    rmsnorm_into(x, t, d, &mut out);
-    out
-}
-
-/// Allocation-free [`rmsnorm`]: clears and refills `out`.
-pub fn rmsnorm_into(x: &[f32], t: usize, d: usize, out: &mut Vec<f32>) {
-    out.clear();
-    out.resize(t * d, 0.0);
-    for ti in 0..t {
-        let row = &x[ti * d..(ti + 1) * d];
-        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
-        let inv = 1.0 / (ms + 1e-6).sqrt();
-        for (o, &v) in out[ti * d..(ti + 1) * d].iter_mut().zip(row) {
-            *o = (v as f64 * inv) as f32;
-        }
-    }
-}
-
-/// Mean |activation| per column over `t` tokens (§B.2's multi-token
-/// importance).
-pub fn col_importance(x: &[f32], t: usize, d: usize) -> Vec<f32> {
-    let mut imp = Vec::new();
-    col_importance_into(x, t, d, &mut imp);
-    imp
-}
-
-/// Allocation-free [`col_importance`]: clears and refills `out`.
-pub fn col_importance_into(x: &[f32], t: usize, d: usize, out: &mut Vec<f32>) {
-    out.clear();
-    out.resize(d, 0.0);
-    for ti in 0..t {
-        for j in 0..d {
-            out[j] += x[ti * d + j].abs();
-        }
-    }
-    let inv = 1.0 / t as f32;
-    out.iter_mut().for_each(|v| *v *= inv);
-}
-
-fn full_mask(n: usize) -> SelectionMask {
-    SelectionMask::full(n)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::Policy;
     use crate::sparsify::ChunkSelectConfig;
     use crate::workload::FrameTrace;
+    use std::time::Duration;
 
     fn artifact_dir() -> std::path::PathBuf {
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -1945,27 +991,6 @@ mod tests {
 
     fn frame(spec: &ModelSpec, idx: usize) -> Vec<f32> {
         FrameTrace::new(spec.d, spec.tokens_per_frame, 8, 7).frame(idx)
-    }
-
-    #[test]
-    fn rmsnorm_unit_rms() {
-        let x: Vec<f32> = (0..128).map(|i| (i as f32 - 64.0) * 0.3).collect();
-        let out = rmsnorm(&x, 2, 64);
-        for ti in 0..2 {
-            let ms: f64 = out[ti * 64..(ti + 1) * 64]
-                .iter()
-                .map(|&v| (v as f64).powi(2))
-                .sum::<f64>()
-                / 64.0;
-            assert!((ms - 1.0).abs() < 1e-3, "rms {ms}");
-        }
-    }
-
-    #[test]
-    fn col_importance_means_abs() {
-        let x = vec![1.0f32, -2.0, 3.0, -4.0]; // t=2, d=2
-        let imp = col_importance(&x, 2, 2);
-        assert_eq!(imp, vec![2.0, 3.0]);
     }
 
     #[test]
@@ -2287,6 +1312,125 @@ mod tests {
             e.new_session().append_frame(&frame(&e.spec(), 5)).unwrap().0
         };
         assert_eq!(mk(1), mk(4));
+    }
+
+    #[test]
+    fn decode_batch_matches_solo_sessions() {
+        let e = build(Policy::TopK, 0.4);
+        let spec = e.spec();
+        // Two streams with different histories, decoded as one batch…
+        let s0 = e.new_session();
+        let s1 = e.new_session();
+        s0.append_frame(&frame(&spec, 0)).unwrap();
+        s1.append_frame(&frame(&spec, 3)).unwrap();
+        // …against solo reference sessions with the same histories.
+        let r0 = e.new_session();
+        let r1 = e.new_session();
+        r0.append_frame(&frame(&spec, 0)).unwrap();
+        r1.append_frame(&frame(&spec, 3)).unwrap();
+        let t0 = vec![0.05f32; spec.d];
+        let t1 = vec![-0.02f32; spec.d];
+        for step in 0..2 {
+            let got = e
+                .decode_batch(&[
+                    DecodeRequest {
+                        session: &s0,
+                        token: &t0,
+                    },
+                    DecodeRequest {
+                        session: &s1,
+                        token: &t1,
+                    },
+                ])
+                .unwrap();
+            let (w0, st0) = r0.decode_step(&t0).unwrap();
+            let (w1, st1) = r1.decode_step(&t1).unwrap();
+            assert_eq!(got[0].0, w0, "stream 0 diverged at step {step}");
+            assert_eq!(got[1].0, w1, "stream 1 diverged at step {step}");
+            // Selected-chunk sets unchanged (observed through exact
+            // bytes/importance accounting).
+            assert_eq!(got[0].1.bytes_loaded, st0.bytes_loaded);
+            assert_eq!(got[1].1.bytes_loaded, st1.bytes_loaded);
+            assert_eq!(got[0].1.importance_kept, st0.importance_kept);
+            assert_eq!(got[1].1.importance_kept, st1.importance_kept);
+        }
+        // Batch bookkeeping landed in the metrics: two batches of two.
+        let m = e.metrics();
+        assert_eq!(m.count("batch.occupancy"), 2);
+        assert_eq!(m.bytes("batch.occupancy"), 4);
+    }
+
+    #[test]
+    fn decode_batch_shares_overlapping_reads() {
+        // Two streams fed the *same* history select the same chunks, so
+        // the fused plan reads every byte once: shared bytes equal one
+        // stream's worth of traffic.
+        let e = build(Policy::TopK, 0.4);
+        let spec = e.spec();
+        let s0 = e.new_session();
+        let s1 = e.new_session();
+        s0.append_frame(&frame(&spec, 1)).unwrap();
+        s1.append_frame(&frame(&spec, 1)).unwrap();
+        let tok = vec![0.03f32; spec.d];
+        let got = e
+            .decode_batch(&[
+                DecodeRequest {
+                    session: &s0,
+                    token: &tok,
+                },
+                DecodeRequest {
+                    session: &s1,
+                    token: &tok,
+                },
+            ])
+            .unwrap();
+        assert_eq!(got[0].0, got[1].0, "identical streams must stay identical");
+        let m = e.metrics();
+        assert!(
+            m.bytes("io.shared_bytes") > 0,
+            "identical selections should dedup to shared reads"
+        );
+    }
+
+    #[test]
+    fn decode_batch_rejects_invalid_members() {
+        let e = build(Policy::Dense, 0.0);
+        let s = e.new_session();
+        s.append_frame(&frame(&e.spec(), 0)).unwrap();
+        let tok = vec![0.1f32; e.spec().d];
+        // Same session twice would deadlock — rejected up front.
+        assert!(e
+            .decode_batch(&[
+                DecodeRequest {
+                    session: &s,
+                    token: &tok,
+                },
+                DecodeRequest {
+                    session: &s,
+                    token: &tok,
+                },
+            ])
+            .is_err());
+        // Sessions of a different engine are rejected.
+        let other = build(Policy::Dense, 0.0);
+        let foreign = other.new_session();
+        assert!(e
+            .decode_batch(&[DecodeRequest {
+                session: &foreign,
+                token: &tok,
+            }])
+            .is_err());
+        // A member without KV fails the whole batch before any state
+        // mutates (all-or-nothing validation).
+        let empty = e.new_session();
+        assert!(e
+            .decode_batch(&[DecodeRequest {
+                session: &empty,
+                token: &tok,
+            }])
+            .is_err());
+        // The valid session still decodes solo afterwards.
+        assert!(s.decode_step(&tok).is_ok());
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! compute/select/gather times are always wall-clock. The engine sums
 //! them into an end-to-end latency the same way the paper's breakdown
 //! does.
+//!
+//! Batched-serving keys: `io.shared_bytes` counts bytes the fused
+//! cross-stream plans read **once** instead of once per subscriber (the
+//! dedup ratio is `shared / (shared + io bytes)`), and
+//! `batch.occupancy` records one count per fused batch with the member
+//! total in its byte counter — `bytes / count` is the average achieved
+//! batch occupancy.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};

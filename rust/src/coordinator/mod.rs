@@ -7,8 +7,14 @@
 //! `Sync` (read-mostly state behind `Arc<RwLock>`); serving state lives
 //! in per-stream [`Session`] handles (KV caches, next-layer prefetch, and
 //! a scratch arena that makes the steady-state path allocation-free).
-//! [`Scheduler`] runs multi-stream frame-append/decode traffic over one
-//! engine with priority batching across a configurable worker pool.
+//! The per-layer stage sequence itself lives in `pipeline/` (normalize →
+//! score/select → plan → submit/await → execute → scatter), whose batch
+//! driver also serves **cross-stream decode batches**: concurrent decode
+//! requests ([`DecodeRequest`]) run stage-synchronously with fused I/O
+//! plans (shared chunks read once) and multi-stream kernels, bit-identical
+//! to solo decoding. [`Scheduler`] runs multi-stream frame-append/decode
+//! traffic over one engine with priority batching across a configurable
+//! worker pool, forming fused decode batches inside a bounded window.
 //! [`HotNeuronCache`] implements the §5 memory-budget extension (cached
 //! rows get zero importance and skip flash).
 
@@ -17,12 +23,16 @@ mod engine;
 mod kv;
 mod metrics;
 mod neuron_cache;
+mod pipeline;
 mod scheduler;
 
-pub use engine::{Engine, EngineBuilder, Session, StageStats};
+pub use engine::{Engine, EngineBuilder, Session};
 pub use kv::KvCache;
 pub use metrics::{Metrics, StageTimer};
 pub use neuron_cache::HotNeuronCache;
+pub use pipeline::batch::{DecodeRequest, MAX_DECODE_BATCH};
+pub use pipeline::stages::{col_importance, col_importance_into, rmsnorm, rmsnorm_into};
+pub use pipeline::StageStats;
 pub use scheduler::{Completion, Request, RequestKind, Scheduler, SchedulerConfig};
 
 use crate::sparsify::{Bundling, ChunkSelect, ChunkSelectConfig, Selector, Threshold, TopK};

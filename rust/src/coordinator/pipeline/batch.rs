@@ -1,0 +1,755 @@
+//! Cross-stream batched decoding: the batch driver over the staged
+//! pipeline.
+//!
+//! Concurrent decode requests on *different* sessions are driven through
+//! the per-layer stages **stage-synchronously**: selection runs per
+//! stream (so every stream's selected-chunk set is exactly what it would
+//! pick solo), then the per-group flash plans are fused
+//! ([`crate::plan::IoPlanner::fuse_into`]) so chunks demanded by more
+//! than one stream are read from flash once and scattered to every
+//! subscriber, and streams whose compute sets coincide form a *cohort*
+//! that gathers one shared weight tile and runs the multi-stream kernels
+//! ([`crate::runtime::XlaRuntime::execute_batched_into`]) across all
+//! member activations in one dispatch. Per-layer prefetch submissions
+//! are fused the same way.
+//!
+//! Two streams decoding the same layer often select overlapping hot
+//! chunks (the paper's contiguity argument made cross-stream): the fused
+//! plan reads each shared chunk once, so the deeper the batch, the fewer
+//! bytes and commands per stream — `io.shared_bytes` and
+//! `batch.occupancy` in the engine metrics track exactly that.
+//!
+//! **Determinism invariant**: every member's outputs and selected-chunk
+//! sets are bit-identical to solo [`Session::decode_step`] calls on the
+//! same session history — fusion changes which *submission* carries a
+//! byte, never the byte; cohort kernels compute each stream's rows in
+//! the solo reduction order. Batching is a pure throughput change.
+//!
+//! Batched decoding always drives the inline (synchronous) submission
+//! path; on engines with wall-clock pools and async I/O the fused read
+//! is routed through the per-member I/O workers as a single fused
+//! ticket ([`crate::storage::IoTicket::wait_scatter_fused`]). Either
+//! way the batch is validated member-by-member *before* any state
+//! mutates, and steady-state batched decoding performs zero heap
+//! allocations (the batch arena is pooled in the engine core).
+
+use std::sync::MutexGuard;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::{EngineCore, Session, SessionInner};
+use crate::coordinator::pipeline::StageStats;
+use crate::coordinator::StageTimer;
+use crate::model::{MatrixId, MatrixKind};
+use crate::plan::{FuseScratch, FusedPlan, PlanReceipt, PlannedRead, ReadPlan};
+use crate::runtime::{ExecScratch, StageOutputs, StreamCtx, TensorView};
+use crate::storage::PoolScratch;
+
+/// Ceiling on the members of one fused decode batch. Schedulers clamp
+/// their window to this; it bounds the driver's stack-allocated
+/// bookkeeping so batch formation never allocates.
+pub const MAX_DECODE_BATCH: usize = 16;
+
+/// One member of a decode batch: a session plus the token to decode.
+pub struct DecodeRequest<'a> {
+    pub session: &'a Session,
+    pub token: &'a [f32],
+}
+
+/// Batch-level working memory: fusion scratch, the fused plan/receipt,
+/// pool fan-out buffers, and the cohort kernels' stacked activations and
+/// outputs. Pooled in the engine core's free list, so steady-state
+/// batched decoding reuses capacity instead of allocating.
+#[derive(Default)]
+pub(crate) struct BatchArena {
+    /// Fusion working memory (the plan layer's [`FuseScratch`]).
+    fuse: FuseScratch,
+    /// Fused union plan + subscriber scatter map of the current step.
+    fused: FusedPlan,
+    /// Receipt of the fused submission (inline scatter path).
+    receipt: PlanReceipt,
+    /// Pool fan-out scratch + per-batch per-member I/O accounting.
+    pool: PoolScratch,
+    /// Stacked activations `[n, bucket]` of one cohort.
+    xs: Vec<f32>,
+    exec: ExecScratch,
+    outs: StageOutputs,
+}
+
+/// Which pooled [`PlannedRead`] a fused submission scatters into.
+#[derive(Clone, Copy)]
+enum FuseTarget {
+    /// The per-group fresh read (`scratch.gather.fresh`).
+    Fresh,
+    /// A layer's prefetch slot (`state.prefetch[layer]`).
+    Prefetch(usize),
+}
+
+fn target_read<'x>(inner: &'x mut SessionInner, target: FuseTarget) -> &'x mut PlannedRead {
+    match target {
+        FuseTarget::Fresh => &mut inner.scratch.gather.fresh,
+        FuseTarget::Prefetch(layer) => &mut inner.state.prefetch[layer],
+    }
+}
+
+impl EngineCore {
+    pub(crate) fn take_batch_arena(&self) -> Box<BatchArena> {
+        self.batch_arenas.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub(crate) fn put_batch_arena(&self, bs: Box<BatchArena>) {
+        self.batch_arenas.lock().unwrap().push(bs);
+    }
+
+    /// Pre-reserve the batch arena's worst-case capacities for an
+    /// `n`-member batch. Like the session-buffer reserves, this bounds
+    /// every selection-shape-dependent buffer, so once a batch of a
+    /// given size has warmed the arena, further batches allocate
+    /// nothing (`reserve` is a no-op when capacity suffices).
+    fn reserve_batch(&self, n: usize, bs: &mut BatchArena) {
+        let spec = &self.spec;
+        let n_max = spec.d.max(spec.h);
+        let max_chunks = n_max / 2 + 1;
+        // A whole prefetched layer (all 7 matrices) per member is the
+        // worst single fusion.
+        let member_cmds = 7 * max_chunks;
+        let mut layer_bytes = 0usize;
+        for kind in MatrixKind::SCORED {
+            for member in MatrixKind::ALL {
+                if member.mask_source() == kind {
+                    layer_bytes += spec.shape_of(member).rows
+                        * self.store.layout.row_bytes(MatrixId::new(0, member));
+                }
+            }
+        }
+        bs.fuse.reserve(n * member_cmds);
+        bs.fused.reserve(n * member_cmds);
+        bs.receipt.reserve(n * layer_bytes, n * member_cmds);
+        let pool_cmds = n * member_cmds + self.pool.stripe().num_blocks() + 1;
+        bs.pool.reserve(self.pool.len(), pool_cmds, n * layer_bytes);
+        bs.xs.reserve(n * n_max);
+        for o in &mut bs.outs.out {
+            o.reserve(n * n_max);
+        }
+        bs.exec
+            .reserve(n, spec.d, spec.h, spec.cache_slots, self.meta.nh);
+    }
+}
+
+/// Decode one token on every member session cooperatively. See the
+/// module docs for the driver's structure and invariants. Called with
+/// the engine core's read lock held.
+pub(crate) fn decode_batch(
+    core: &EngineCore,
+    reqs: &[DecodeRequest],
+    outs: &mut [Vec<f32>],
+    stats_out: &mut [StageStats],
+) -> Result<()> {
+    let n = reqs.len();
+    anyhow::ensure!(n >= 1, "decode batch needs at least one member");
+    anyhow::ensure!(
+        n <= MAX_DECODE_BATCH,
+        "decode batch of {n} exceeds MAX_DECODE_BATCH ({MAX_DECODE_BATCH})"
+    );
+    anyhow::ensure!(
+        outs.len() == n && stats_out.len() == n,
+        "decode batch outputs/stats slices must match the request count"
+    );
+    let d = core.meta.d;
+    for (i, r) in reqs.iter().enumerate() {
+        anyhow::ensure!(r.token.len() == d, "batch member {i}: token must be [d={d}]");
+    }
+
+    // Deadlock-free locking: acquire the session locks in address order
+    // (concurrent batches over overlapping session sets then always lock
+    // in the same global order); a session may appear at most once.
+    let mut order: [usize; MAX_DECODE_BATCH] = [0; MAX_DECODE_BATCH];
+    for (i, o) in order.iter_mut().enumerate().take(n) {
+        *o = i;
+    }
+    order[..n].sort_unstable_by_key(|&i| reqs[i].session as *const Session as usize);
+    for w in order[..n].windows(2) {
+        anyhow::ensure!(
+            !std::ptr::eq(reqs[w[0]].session, reqs[w[1]].session),
+            "decode batch contains the same session twice"
+        );
+    }
+    let mut guards: [Option<MutexGuard<SessionInner>>; MAX_DECODE_BATCH] =
+        std::array::from_fn(|_| None);
+    for &i in &order[..n] {
+        guards[i] = Some(reqs[i].session.inner.lock().unwrap());
+    }
+    let mut members: [Option<&mut SessionInner>; MAX_DECODE_BATCH] =
+        std::array::from_fn(|_| None);
+    for (slot, g) in members.iter_mut().zip(guards.iter_mut()).take(n) {
+        *slot = Some(&mut **g.as_mut().expect("guard held for every member"));
+    }
+    let members = &mut members[..n];
+
+    // Validate every member's decode preconditions (mirroring the solo
+    // path) *before* any state mutates: a batch starts on all members or
+    // on none, so an invalid member cannot poison the others.
+    for (i, m) in members.iter().enumerate() {
+        let inner = m.as_ref().expect("member slot filled");
+        let ok = inner.state.epoch == core.epoch
+            && inner.state.kvs.iter().any(|kv| !kv.is_empty());
+        anyhow::ensure!(
+            ok,
+            "batch member {i}: decode requires a non-empty KV cache (append a frame first)"
+        );
+    }
+
+    let mut bs = core.take_batch_arena();
+    let result = run_batch(core, members, reqs, outs, stats_out, &mut bs);
+    core.put_batch_arena(bs);
+    result
+}
+
+fn run_batch(
+    core: &EngineCore,
+    members: &mut [Option<&mut SessionInner>],
+    reqs: &[DecodeRequest],
+    outs: &mut [Vec<f32>],
+    stats_out: &mut [StageStats],
+    bs: &mut BatchArena,
+) -> Result<()> {
+    let n = members.len();
+    let layers = core.spec.layers;
+    let t = 1usize;
+    core.reserve_batch(n, bs);
+    bs.pool.accum.reset(core.pool.len());
+    let mut shared_bytes = 0u64;
+    let mut prefetch_service = Duration::ZERO;
+    let mut buckets: [usize; MAX_DECODE_BATCH] = [0; MAX_DECODE_BATCH];
+
+    // Per-member call preamble (mirrors the solo driver's).
+    for (i, m) in members.iter_mut().enumerate() {
+        let inner = m.as_mut().expect("member slot filled");
+        // Batched decoding drives the inline submission path; settle any
+        // prefetch a previous aborted async call left in flight first.
+        inner.state.drain_stale();
+        let sc = &mut inner.scratch;
+        sc.fwd.xa.clear();
+        sc.fwd.xa.extend_from_slice(reqs[i].token);
+        stats_out[i] = StageStats::default();
+    }
+
+    for layer in 0..layers {
+        let layer_t0 = Instant::now();
+        // Swap each member's prefetched whole-layer read into its arena.
+        for m in members.iter_mut() {
+            let inner = m.as_mut().expect("member slot filled");
+            let SessionInner { state, scratch } = &mut **inner;
+            std::mem::swap(&mut scratch.pre, &mut state.prefetch[layer]);
+            state.prefetch[layer].clear();
+        }
+
+        for group in 0..4 {
+            let kind = MatrixKind::SCORED[group];
+            // --- per-stream: normalize → score → select → plan ---
+            for (i, m) in members.iter_mut().enumerate() {
+                let inner = m.as_mut().expect("member slot filled");
+                let SessionInner { state, scratch: sc } = &mut **inner;
+                let stats = &mut stats_out[i];
+                core.score_group(group, t, &mut sc.fwd, stats);
+                core.select_into(
+                    layer,
+                    kind,
+                    &sc.fwd.imp,
+                    stats,
+                    &mut sc.sel_scratch,
+                    &mut sc.imp_phys,
+                    &mut sc.sel,
+                );
+                let acts: &[f32] = match group {
+                    0 | 2 => &sc.fwd.hn,
+                    1 => &sc.fwd.attn,
+                    _ => &sc.fwd.act,
+                };
+                let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
+                buckets[i] = core.prepare_group_load(
+                    layer,
+                    kind,
+                    acts,
+                    t,
+                    &sc.sel,
+                    pre,
+                    &mut sc.gather,
+                    &mut sc.plan_scratch,
+                    stats,
+                );
+                let dst = &mut state.next_masks[layer][group];
+                dst.clear();
+                dst.extend_from_slice(&sc.gather.flash_chunks);
+            }
+
+            // --- cohort streams with identical compute sets; the lead
+            //     gathers the shared weight tile once, so only lead
+            //     demand needs to touch flash at all ---
+            let mut cohort_of: [usize; MAX_DECODE_BATCH] = [usize::MAX; MAX_DECODE_BATCH];
+            for i in 0..n {
+                if cohort_of[i] != usize::MAX {
+                    continue;
+                }
+                cohort_of[i] = i;
+                for j in (i + 1)..n {
+                    if cohort_of[j] != usize::MAX {
+                        continue;
+                    }
+                    let a = &members[i]
+                        .as_ref()
+                        .expect("member slot filled")
+                        .scratch
+                        .gather
+                        .phys_rows;
+                    let b = &members[j]
+                        .as_ref()
+                        .expect("member slot filled")
+                        .scratch
+                        .gather
+                        .phys_rows;
+                    if a == b {
+                        cohort_of[j] = i;
+                    }
+                }
+            }
+
+            // --- fuse the cohort leads' fresh plans into one submission.
+            // Followers share their lead's compute set, and the weight
+            // tile is gathered once from the lead's sources, so follower
+            // demand never needs to be read (or scattered) at all —
+            // their whole planned read counts as deduped.
+            let mut followers: [bool; MAX_DECODE_BATCH] = [false; MAX_DECODE_BATCH];
+            {
+                let empty = ReadPlan::default();
+                let mut plans: [&ReadPlan; MAX_DECODE_BATCH] = [&empty; MAX_DECODE_BATCH];
+                for (i, slot) in plans.iter_mut().enumerate().take(n) {
+                    let plan = &members[i]
+                        .as_ref()
+                        .expect("member slot filled")
+                        .scratch
+                        .gather
+                        .fresh
+                        .plan;
+                    if cohort_of[i] == i {
+                        *slot = plan;
+                    } else {
+                        followers[i] = true;
+                        shared_bytes += plan.cmd_bytes();
+                    }
+                }
+                core.planner
+                    .fuse_into(&plans[..n], Some(&core.table), &mut bs.fuse, &mut bs.fused);
+            }
+            let service = if bs.fused.is_empty() {
+                Duration::ZERO
+            } else {
+                shared_bytes += bs.fused.shared_bytes();
+                submit_fused(core, members, FuseTarget::Fresh, &followers[..n], bs)
+                    .with_context(|| format!("batched group read (layer {layer})"))?
+            };
+            for (i, m) in members.iter_mut().enumerate() {
+                let inner = m.as_mut().expect("member slot filled");
+                let fresh = &inner.scratch.gather.fresh;
+                if !fresh.plan.is_empty() {
+                    // Accounting mirrors a solo decode: the stream's own
+                    // demanded payload, charged the fused submission's
+                    // service (the batch shares one device pass).
+                    stats_out[i].bytes_loaded += fresh.plan.payload_bytes();
+                    stats_out[i].io += service;
+                }
+            }
+
+            for i in 0..n {
+                if cohort_of[i] != i {
+                    continue;
+                }
+                let inner = members[i].as_mut().expect("member slot filled");
+                let SessionInner { state: _, scratch: sc } = &mut **inner;
+                let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
+                core.gather_group_weights(
+                    layer,
+                    kind,
+                    buckets[i],
+                    pre,
+                    &mut sc.gather,
+                    &mut stats_out[i],
+                );
+            }
+
+            // --- execute: one multi-stream dispatch per cohort ---
+            for lead in 0..n {
+                if cohort_of[lead] != lead {
+                    continue;
+                }
+                let size = cohort_of[..n].iter().filter(|&&c| c == lead).count();
+                if size == 1 {
+                    let inner = members[lead].as_mut().expect("member slot filled");
+                    let SessionInner { state, scratch: sc } = &mut **inner;
+                    core.exec_group_solo(
+                        group,
+                        t,
+                        buckets[lead],
+                        &mut state.kvs[layer],
+                        &sc.gather,
+                        &mut sc.fwd,
+                        &mut sc.exec,
+                        &mut sc.outs,
+                        &mut stats_out[lead],
+                    )?;
+                } else {
+                    exec_cohort(
+                        core, members, &cohort_of, lead, size, group, buckets[lead], layer,
+                        bs, stats_out,
+                    )?;
+                }
+            }
+        }
+
+        // --- fused prefetch of layer l+1 (inline path) ---
+        if core.prefetch && layer + 1 < layers {
+            let mut any = false;
+            for m in members.iter_mut() {
+                let inner = m.as_mut().expect("member slot filled");
+                let SessionInner { state, scratch: sc } = &mut **inner;
+                any |= core.plan_layer_prefetch(state, &mut sc.plan_scratch, layer + 1);
+            }
+            if any {
+                {
+                    let empty = ReadPlan::default();
+                    let mut plans: [&ReadPlan; MAX_DECODE_BATCH] = [&empty; MAX_DECODE_BATCH];
+                    for (i, slot) in plans.iter_mut().enumerate().take(n) {
+                        *slot = &members[i]
+                            .as_ref()
+                            .expect("member slot filled")
+                            .state
+                            .prefetch[layer + 1]
+                            .plan;
+                    }
+                    core.planner.fuse_into(
+                        &plans[..n],
+                        Some(&core.table),
+                        &mut bs.fuse,
+                        &mut bs.fused,
+                    );
+                }
+                shared_bytes += bs.fused.shared_bytes();
+                // Every member keeps (and needs) its own prefetch
+                // buffer, so prefetch fusion has no followers.
+                let no_followers = [false; MAX_DECODE_BATCH];
+                let target = FuseTarget::Prefetch(layer + 1);
+                let service = match submit_fused(core, members, target, &no_followers[..n], bs)
+                {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // Never leave a non-empty plan over an unfilled
+                        // receipt: the next call would swap the slot in
+                        // and serve garbage bytes.
+                        for m in members.iter_mut() {
+                            m.as_mut().expect("member slot filled").state.prefetch[layer + 1]
+                                .clear();
+                        }
+                        return Err(e);
+                    }
+                };
+                let overlap = layer_t0.elapsed();
+                for (i, m) in members.iter_mut().enumerate() {
+                    let inner = m.as_mut().expect("member slot filled");
+                    let slot = &inner.state.prefetch[layer + 1];
+                    if slot.plan.is_empty() {
+                        continue;
+                    }
+                    let payload = slot.plan.payload_bytes();
+                    let charged = service.saturating_sub(overlap);
+                    stats_out[i].io += charged;
+                    stats_out[i].overlapped_io += service - charged;
+                    stats_out[i].bytes_loaded += payload;
+                    stats_out[i].prefetched_bytes += payload;
+                }
+                prefetch_service += service;
+            }
+        }
+    }
+
+    // Per-member call epilogue + outputs.
+    for (i, m) in members.iter_mut().enumerate() {
+        let inner = m.as_mut().expect("member slot filled");
+        let SessionInner { state, scratch: sc } = &mut **inner;
+        std::mem::swap(&mut state.prev_masks, &mut state.next_masks);
+        outs[i].clear();
+        outs[i].extend_from_slice(&sc.fwd.xa);
+    }
+
+    // One metrics fold for the whole batch (keys are literals or
+    // pre-rendered, so this allocates nothing once warm).
+    {
+        let mut host = Duration::ZERO;
+        let mut select = Duration::ZERO;
+        let mut compute = Duration::ZERO;
+        let mut io = Duration::ZERO;
+        let mut overlapped = Duration::ZERO;
+        let mut bytes = 0u64;
+        for s in stats_out.iter() {
+            host += s.host;
+            select += s.select;
+            compute += s.compute;
+            io += s.io;
+            overlapped += s.overlapped_io;
+            bytes += s.bytes_loaded;
+        }
+        let mut metrics = core.metrics.lock().unwrap();
+        metrics.add("host", host);
+        metrics.add("select", select);
+        metrics.add("compute", compute);
+        metrics.add("io", io);
+        if prefetch_service > Duration::ZERO {
+            metrics.add("prefetch", prefetch_service);
+            metrics.add("io.overlapped", overlapped);
+        }
+        metrics.add_bytes("io", bytes);
+        // Fusion accounting: bytes the batch read once instead of once
+        // per subscriber (the dedup ratio is shared / (shared + io
+        // bytes)), and the achieved batch occupancy (bytes = Σ members,
+        // count = batches → average members per batch).
+        metrics.add_bytes("io.shared_bytes", shared_bytes);
+        metrics.add("batch.occupancy", Duration::ZERO);
+        metrics.add_bytes("batch.occupancy", n as u64);
+        if core.pool.len() > 1 {
+            for m in 0..core.pool.len() {
+                metrics.add(&core.dev_io_names[m], bs.pool.accum.service[m]);
+                metrics.add_bytes(&core.dev_io_names[m], bs.pool.accum.bytes[m]);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Submit the fused union plan once and scatter its bytes into every
+/// subscriber's target receipt; sets each non-empty subscriber's receipt
+/// service to the fused submission's service and returns it. Members
+/// flagged in `followers` were excluded from the fusion (their cohort
+/// lead's tile serves them) — their receipts are cleared, never filled.
+fn submit_fused(
+    core: &EngineCore,
+    members: &mut [Option<&mut SessionInner>],
+    target: FuseTarget,
+    followers: &[bool],
+    bs: &mut BatchArena,
+) -> Result<Duration> {
+    let n = members.len();
+    // Pre-size every subscriber receipt for its own plan layout (the
+    // same layout a solo submission would produce).
+    for (i, m) in members.iter_mut().enumerate() {
+        let inner = m.as_mut().expect("member slot filled");
+        let PlannedRead { plan, receipt } = target_read(inner, target);
+        if plan.is_empty() || followers[i] {
+            receipt.clear();
+        } else {
+            receipt.presize_for(plan.cmds());
+        }
+    }
+    let service = match &core.async_pipe {
+        Some(pipe) => {
+            // Wall-clock pools: one fused ticket reads the union on the
+            // per-member I/O workers and scatters straight into the N
+            // subscriber receipts.
+            core.planner
+                .shard_into(&bs.fused.plan, core.pool.stripe(), &mut bs.pool.sharded);
+            let total: usize = bs.fused.plan.cmds().iter().map(|e| e.len).sum();
+            anyhow::ensure!(
+                bs.pool.sharded.total_bytes() == total,
+                "sharded fused plan covers {} of {total} bytes",
+                bs.pool.sharded.total_bytes()
+            );
+            let ticket = pipe.submit(&bs.pool.sharded);
+            bs.pool.last.reset(core.pool.len());
+            let mut slices: [&mut [u8]; MAX_DECODE_BATCH] =
+                std::array::from_fn(|_| Default::default());
+            for (slot, m) in slices.iter_mut().zip(members.iter_mut()) {
+                let inner = m.as_mut().expect("member slot filled");
+                *slot = &mut target_read(inner, target).receipt.bytes[..];
+            }
+            let service =
+                ticket.wait_scatter_fused(&bs.fused, &mut slices[..n], &mut bs.pool.last)?;
+            bs.pool.accum.absorb(&bs.pool.last);
+            service
+        }
+        None => {
+            // Inline path: submit the union through the pool into the
+            // batch receipt, then copy each subscriber its bytes.
+            core.submit_pooled(&bs.fused.plan, &mut bs.pool, &mut bs.receipt)?;
+            for (i, m) in members.iter_mut().enumerate() {
+                let inner = m.as_mut().expect("member slot filled");
+                let bytes = &mut target_read(inner, target).receipt.bytes;
+                for c in bs.fused.copies.iter().filter(|c| c.stream == i) {
+                    bytes[c.dst..c.dst + c.len]
+                        .copy_from_slice(&bs.receipt.bytes[c.src..c.src + c.len]);
+                }
+            }
+            bs.receipt.service
+        }
+    };
+    for (i, m) in members.iter_mut().enumerate() {
+        if followers[i] {
+            continue;
+        }
+        let inner = m.as_mut().expect("member slot filled");
+        let read = target_read(inner, target);
+        if !read.plan.is_empty() {
+            read.receipt.service = service;
+        }
+    }
+    Ok(service)
+}
+
+/// Run one group's stage artifact for a cohort of `size > 1` streams
+/// that share the lead's gathered weight tile: stack the members'
+/// activation rows, dispatch the multi-stream kernel once, then scatter
+/// each stream's output rows back into its own forward buffers (and
+/// append K/V for the attention group).
+#[allow(clippy::too_many_arguments)]
+fn exec_cohort(
+    core: &EngineCore,
+    members: &mut [Option<&mut SessionInner>],
+    cohort_of: &[usize; MAX_DECODE_BATCH],
+    lead: usize,
+    size: usize,
+    group: usize,
+    bucket: usize,
+    layer: usize,
+    bs: &mut BatchArena,
+    stats_out: &mut [StageStats],
+) -> Result<()> {
+    let n = members.len();
+    let d = core.meta.d;
+    let h = core.meta.h;
+
+    // Stack the cohort's activation rows [size, bucket].
+    bs.xs.clear();
+    for i in 0..n {
+        if cohort_of[i] != lead {
+            continue;
+        }
+        bs.xs.extend_from_slice(
+            &members[i]
+                .as_ref()
+                .expect("member slot filled")
+                .scratch
+                .gather
+                .xs,
+        );
+    }
+
+    let timer = StageTimer::start();
+    {
+        // Per-stream operands (KV views / residual rows) + the lead's
+        // shared weight tile; all shared borrows, released before the
+        // write-back below.
+        let mut streams: [StreamCtx; MAX_DECODE_BATCH] = [StreamCtx::default(); MAX_DECODE_BATCH];
+        let mut si = 0usize;
+        for i in 0..n {
+            if cohort_of[i] != lead {
+                continue;
+            }
+            let inner = members[i].as_ref().expect("member slot filled");
+            streams[si] = match group {
+                0 => {
+                    let (kc, vc, kmask) = inner.state.kvs[layer].views();
+                    StreamCtx {
+                        kc,
+                        vc,
+                        kmask,
+                        ..StreamCtx::default()
+                    }
+                }
+                1 => StreamCtx {
+                    residual: &inner.scratch.fwd.xa,
+                    ..StreamCtx::default()
+                },
+                3 => StreamCtx {
+                    residual: &inner.scratch.fwd.xb,
+                    ..StreamCtx::default()
+                },
+                _ => StreamCtx::default(),
+            };
+            si += 1;
+        }
+        let lead_g = &members[lead]
+            .as_ref()
+            .expect("member slot filled")
+            .scratch
+            .gather;
+        let (base, n_weights, cols) = match group {
+            0 => ("qkv", 3usize, d),
+            1 | 3 => ("projres", 1, d),
+            _ => ("gateup", 2, h),
+        };
+        let name = core.artifact_name(base, 1, bucket)?;
+        // Pad unused slots with the first tile (only the first
+        // `n_weights` views are passed on).
+        let weights: [TensorView; 3] = [
+            TensorView::mat(bucket, cols, &lead_g.weights[0]),
+            if n_weights > 1 {
+                TensorView::mat(bucket, cols, &lead_g.weights[1])
+            } else {
+                TensorView::mat(bucket, cols, &lead_g.weights[0])
+            },
+            if n_weights > 2 {
+                TensorView::mat(bucket, cols, &lead_g.weights[2])
+            } else {
+                TensorView::mat(bucket, cols, &lead_g.weights[0])
+            },
+        ];
+        core.runtime.execute_batched_into(
+            name,
+            &bs.xs,
+            &weights[..n_weights],
+            &streams[..size],
+            core.exec_threads,
+            &mut bs.exec,
+            &mut bs.outs,
+        )?;
+    }
+    let shared_compute = timer.finish();
+
+    // Scatter output rows back per member + post-exec updates.
+    let mut si = 0usize;
+    for i in 0..n {
+        if cohort_of[i] != lead {
+            continue;
+        }
+        let inner = members[i].as_mut().expect("member slot filled");
+        let SessionInner { state, scratch: sc } = &mut **inner;
+        match group {
+            0 => {
+                sc.fwd.attn.clear();
+                sc.fwd.attn
+                    .extend_from_slice(&bs.outs.out[0][si * d..(si + 1) * d]);
+                state.kvs[layer].append(
+                    &bs.outs.out[1][si * d..(si + 1) * d],
+                    &bs.outs.out[2][si * d..(si + 1) * d],
+                );
+            }
+            1 => {
+                sc.fwd.xb.clear();
+                sc.fwd.xb
+                    .extend_from_slice(&bs.outs.out[0][si * d..(si + 1) * d]);
+            }
+            2 => {
+                sc.fwd.act.clear();
+                sc.fwd.act
+                    .extend_from_slice(&bs.outs.out[0][si * h..(si + 1) * h]);
+            }
+            _ => {
+                sc.fwd.xa.clear();
+                sc.fwd.xa
+                    .extend_from_slice(&bs.outs.out[0][si * d..(si + 1) * d]);
+            }
+        }
+        // Each member observes the cohort's shared dispatch wall time.
+        stats_out[i].compute += shared_compute;
+        si += 1;
+    }
+    Ok(())
+}

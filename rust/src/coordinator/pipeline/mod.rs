@@ -1,0 +1,686 @@
+//! The staged decode pipeline: the per-session serving path, modelled as
+//! explicit per-layer stages, plus the cross-stream batch driver built on
+//! top of them.
+//!
+//! Every serving call (frame append or decode step) runs each transformer
+//! layer through the same stage sequence, one pass per selection group
+//! (qkv+attention, o-proj, gate/up, down-proj):
+//!
+//! 1. **normalize/score** ([`EngineCore::score_group`]) — RMS-norm the
+//!    stage input where the reference model does, reduce it to per-column
+//!    importance;
+//! 2. **select** ([`EngineCore::select_into`]) — run the sparsification
+//!    policy under the (pool-effective) latency model;
+//! 3. **plan** ([`EngineCore::prepare_group_load`]) — subtract what the
+//!    layer prefetch buffer already holds, plan the residual demand as
+//!    one cross-matrix command batch, gather the activation columns;
+//! 4. **submit/await** ([`EngineCore::submit_pooled`]) — one pooled flash
+//!    submission per group (the async pipeline moves the *prefetch*
+//!    submissions ahead of compute and awaits them here);
+//! 5. **execute** ([`EngineCore::exec_group_solo`]) — run the compiled
+//!    stage artifact over the gathered weights;
+//! 6. **scatter** — stage outputs land back in the session's activation
+//!    buffers, KV caches append, and the demand is recorded for the next
+//!    call's prefetch prediction.
+//!
+//! [`forward`](EngineCore::forward) drives a single stream through those
+//! stages; [`batch`] drives a whole [`DecodeBatch`-style
+//! group](crate::coordinator::DecodeRequest) of streams through them
+//! stage-synchronously, fusing the per-stream plans at step 4 so chunks
+//! demanded by several streams are read from flash **once**
+//! ([`crate::plan::IoPlanner::fuse_into`]) and executing each shared
+//! weight tile across all member streams' activations at step 5
+//! ([`crate::runtime::XlaRuntime::execute_batched_into`]).
+//!
+//! Hard invariant, shared by both drivers and pinned by the determinism
+//! tests: a stream's outputs and selected-chunk sets are **bit-identical**
+//! whether it decodes solo or inside any batch composition, at any queue
+//! depth and pool size.
+
+pub(crate) mod batch;
+pub(crate) mod stages;
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::arena::ScratchArena;
+use crate::coordinator::engine::EngineCore;
+use crate::coordinator::KvCache;
+use crate::latency::Chunk;
+use crate::model::{MatrixId, MatrixKind, ModelSpec};
+use crate::plan::{PlanReceipt, PlanScratch, PlannedRead, ReadPlan};
+use crate::storage::{IoTicket, PoolScratch};
+
+/// Per-call stage accounting (one frame append or decode step).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageStats {
+    /// Flash service time (virtual for simulated devices), after prefetch
+    /// overlap credit.
+    pub io: Duration,
+    /// Stage-artifact execution wall time.
+    pub compute: Duration,
+    /// Selection-algorithm wall time.
+    pub select: Duration,
+    /// Host gather/pad/norm wall time.
+    pub host: Duration,
+    pub bytes_loaded: u64,
+    /// Bytes loaded speculatively by the next-layer prefetcher (subset of
+    /// `bytes_loaded`).
+    pub prefetched_bytes: u64,
+    /// Weight rows served from the prefetch buffer instead of a fresh
+    /// flash read.
+    pub prefetch_hits: u64,
+    /// Flash service time hidden behind compute by the prefetch pipeline
+    /// (the overlap credit already subtracted from `io`).
+    pub overlapped_io: Duration,
+    /// Highest number of whole-layer prefetches in flight at once (async
+    /// I/O pipeline only; 0 otherwise).
+    pub max_inflight: u64,
+    /// Retained / total importance this call (accuracy proxy).
+    pub importance_kept: f64,
+    pub importance_total: f64,
+}
+
+impl StageStats {
+    pub fn end_to_end(&self) -> Duration {
+        self.io + self.compute + self.select + self.host
+    }
+
+    /// Fraction of total flash service time that was hidden behind
+    /// compute (`overlapped / (charged + overlapped)`), in [0, 1].
+    pub fn overlap_ratio(&self) -> f64 {
+        let total = self.io + self.overlapped_io;
+        if total.is_zero() {
+            0.0
+        } else {
+            self.overlapped_io.as_secs_f64() / total.as_secs_f64()
+        }
+    }
+
+    pub fn retained_fraction(&self) -> f64 {
+        if self.importance_total <= 0.0 {
+            1.0
+        } else {
+            self.importance_kept / self.importance_total
+        }
+    }
+
+    /// Merge another call's stats (used by aggregating drivers).
+    pub fn absorb(&mut self, other: &StageStats) {
+        self.io += other.io;
+        self.compute += other.compute;
+        self.select += other.select;
+        self.host += other.host;
+        self.bytes_loaded += other.bytes_loaded;
+        self.prefetched_bytes += other.prefetched_bytes;
+        self.prefetch_hits += other.prefetch_hits;
+        self.overlapped_io += other.overlapped_io;
+        self.max_inflight = self.max_inflight.max(other.max_inflight);
+        self.importance_kept += other.importance_kept;
+        self.importance_total += other.importance_total;
+    }
+}
+
+/// Group index within [`MatrixKind::SCORED`] (Q, O, Gate, Down).
+pub(crate) fn group_index(kind: MatrixKind) -> usize {
+    MatrixKind::SCORED
+        .iter()
+        .position(|&k| k == kind)
+        .expect("scored kind")
+}
+
+/// Per-group flash-chunk demand recorded for next-call prefetch. An empty
+/// list means "no demand recorded".
+pub(crate) type GroupChunks = [Vec<Chunk>; 4];
+
+/// Per-call analytic clock for virtual-pool async accounting. Virtual
+/// waits charged to `io` do not advance the real wall clock (nothing
+/// actually sleeps), so the stall already charged this call is carried
+/// explicitly: the analytic "now" is wall-now plus that stall, the
+/// device frees up at the last submission's completion, and each
+/// charge is the time remaining from the analytic now — queued reads
+/// serialize without double-counting the backlog across stages.
+struct VirtualClock {
+    /// Analytic completion of the latest virtual submission.
+    free_at: Instant,
+    /// Virtual stall time already charged to `io` this call.
+    stall: Duration,
+}
+
+impl VirtualClock {
+    fn start() -> Self {
+        Self {
+            free_at: Instant::now(),
+            stall: Duration::ZERO,
+        }
+    }
+
+    /// The analytic current time: wall clock advanced by charged stalls.
+    fn now(&self) -> Instant {
+        Instant::now() + self.stall
+    }
+}
+
+/// Submission state of one layer's in-flight prefetch (async pipeline).
+#[derive(Default)]
+pub(crate) enum PendingPrefetch {
+    /// Nothing submitted for this layer.
+    #[default]
+    Idle,
+    /// Submitted inline against an all-virtual-clock pool: the receipt is
+    /// already filled; `completion` places the read's analytic finish on
+    /// the wall timeline under a *device-serial* queueing model
+    /// (`completion = max(submit, device-free) + service` — concurrent
+    /// in-flight reads queue behind each other instead of each crediting
+    /// the same compute window), and the overlap credit is settled when
+    /// the layer consumes it.
+    Virtual { completion: Instant, service: Duration },
+    /// Submitted to the async I/O workers (wall-clock pool): the ticket
+    /// completes once every member's sub-plan has been read.
+    InFlight { ticket: IoTicket },
+}
+
+pub(crate) struct SessionState {
+    /// KV caches, one per layer.
+    pub(crate) kvs: Vec<KvCache>,
+    /// Flash chunks each (layer, group) demanded on the previous call —
+    /// the prefetch prediction source.
+    pub(crate) prev_masks: Vec<GroupChunks>,
+    /// This call's demand record; swapped into `prev_masks` at call end.
+    pub(crate) next_masks: Vec<GroupChunks>,
+    /// Pooled prefetched whole-layer reads, one slot per layer (an empty
+    /// plan means "nothing prefetched").
+    pub(crate) prefetch: Vec<PlannedRead>,
+    /// Async-pipeline submission state, one slot per layer. Every
+    /// non-`Idle` entry is consumed at its layer within the same call;
+    /// entries only survive a call when it aborted mid-pipeline, and are
+    /// drained before the next one begins.
+    pub(crate) pending: Vec<PendingPrefetch>,
+    pub(crate) epoch: u64,
+}
+
+impl SessionState {
+    pub(crate) fn new(spec: &ModelSpec, epoch: u64) -> Self {
+        Self {
+            kvs: (0..spec.layers)
+                .map(|_| KvCache::new(spec.cache_slots, spec.d))
+                .collect(),
+            prev_masks: (0..spec.layers).map(|_| GroupChunks::default()).collect(),
+            next_masks: (0..spec.layers).map(|_| GroupChunks::default()).collect(),
+            prefetch: (0..spec.layers).map(|_| PlannedRead::default()).collect(),
+            pending: (0..spec.layers).map(|_| PendingPrefetch::default()).collect(),
+            epoch,
+        }
+    }
+
+    /// Settle any submission a previous (aborted) call left behind: await
+    /// and discard in-flight tickets, clear the matching prefetch slots.
+    /// No-op (and allocation-free) when every entry is `Idle`. Both
+    /// serving drivers and [`SessionState::reset`] run this, so a reset
+    /// mid-pipeline can never scatter stale bytes into the next request.
+    pub(crate) fn drain_stale(&mut self) {
+        for (slot, pending) in self.prefetch.iter_mut().zip(self.pending.iter_mut()) {
+            match std::mem::take(pending) {
+                PendingPrefetch::Idle => {}
+                PendingPrefetch::Virtual { .. } => slot.clear(),
+                PendingPrefetch::InFlight { ticket } => {
+                    ticket.discard();
+                    slot.clear();
+                }
+            }
+        }
+    }
+
+    pub(crate) fn reset(&mut self, epoch: u64) {
+        self.drain_stale();
+        for kv in &mut self.kvs {
+            kv.clear();
+        }
+        for masks in self.prev_masks.iter_mut().chain(self.next_masks.iter_mut()) {
+            for group in masks.iter_mut() {
+                group.clear();
+            }
+        }
+        for slot in &mut self.prefetch {
+            slot.clear();
+        }
+        self.epoch = epoch;
+    }
+}
+
+impl EngineCore {
+    /// One serving call (frame append or decode step) of a single stream:
+    /// the solo driver over the staged pipeline. `&self`: all mutable
+    /// state lives in the session (`state` + `scratch`), so concurrent
+    /// sessions proceed under the shared read lock.
+    pub(crate) fn forward(
+        &self,
+        state: &mut SessionState,
+        scratch: &mut ScratchArena,
+        input: &[f32],
+        t: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<StageStats> {
+        if state.epoch != self.epoch {
+            state.reset(self.epoch);
+        }
+        let layers = self.spec.layers;
+        let mut stats = StageStats::default();
+        let mut prefetch_service = Duration::ZERO;
+
+        let sc = &mut *scratch;
+        sc.pool.accum.reset(self.pool.len());
+        sc.fwd.xa.clear();
+        sc.fwd.xa.extend_from_slice(input);
+
+        // Async pipeline state: keep up to `io_queue_depth` whole-layer
+        // prefetches in flight, each submitted *before* the kernels of
+        // the layers it overlaps with run, and awaited only at the moment
+        // its layer consumes the weights.
+        let async_on = self.async_io && self.prefetch;
+        let depth = self.io_queue_depth.max(1);
+        let mut in_flight = 0u64;
+        let mut next_submit = 1usize;
+        // Per-call analytic clock for the virtual-pool queueing model
+        // (virtual-clock pools only; wall-clock pools measure real time).
+        let mut vclock = VirtualClock::start();
+        if async_on {
+            state.drain_stale();
+        }
+
+        for layer in 0..layers {
+            let layer_t0 = Instant::now();
+            if async_on {
+                // Await this layer's prefetch (if one is in flight) right
+                // before its weights are consumed; only service time the
+                // intervening compute could not hide is charged.
+                in_flight -= self.consume_pending(
+                    state,
+                    sc,
+                    layer,
+                    &mut stats,
+                    &mut prefetch_service,
+                    &mut vclock,
+                )?;
+                // Then top up the submission window before this layer's
+                // kernels execute. Consuming first keeps the bound exact:
+                // at most `depth` layers are ever in flight per session,
+                // so a submission never blocks on a full member queue
+                // ahead of this layer's compute (the queues carry slack
+                // for several concurrent sessions; past that, a full
+                // queue is deliberate backpressure).
+                while next_submit < layers && next_submit <= layer + depth {
+                    let l = next_submit;
+                    next_submit += 1;
+                    if self.submit_prefetch(state, sc, l, &mut stats, &mut vclock)? {
+                        in_flight += 1;
+                        stats.max_inflight = stats.max_inflight.max(in_flight);
+                    }
+                }
+            }
+            // Whole-layer prefetch buffer for this layer, if the previous
+            // call's masks were submitted while layer-1 executed. Swap the
+            // pooled slot out (its buffers cycle back in on the next
+            // prefetch write) and leave the slot empty.
+            std::mem::swap(&mut sc.pre, &mut state.prefetch[layer]);
+            state.prefetch[layer].clear();
+            let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
+
+            for group in 0..4 {
+                let kind = MatrixKind::SCORED[group];
+                // normalize → score → select.
+                self.score_group(group, t, &mut sc.fwd, &mut stats);
+                self.select_into(
+                    layer,
+                    kind,
+                    &sc.fwd.imp,
+                    &mut stats,
+                    &mut sc.sel_scratch,
+                    &mut sc.imp_phys,
+                    &mut sc.sel,
+                );
+                // Plan the residual demand, gather activation columns.
+                let acts: &[f32] = match group {
+                    0 | 2 => &sc.fwd.hn,
+                    1 => &sc.fwd.attn,
+                    _ => &sc.fwd.act,
+                };
+                let bucket = self.prepare_group_load(
+                    layer,
+                    kind,
+                    acts,
+                    t,
+                    &sc.sel,
+                    pre,
+                    &mut sc.gather,
+                    &mut sc.plan_scratch,
+                    &mut stats,
+                );
+                // Record the demand for next-call prefetch prediction.
+                let dst = &mut state.next_masks[layer][group];
+                dst.clear();
+                dst.extend_from_slice(&sc.gather.flash_chunks);
+                // Submit the group's planned read through the pool.
+                if sc.gather.fresh.plan.is_empty() {
+                    sc.gather.fresh.receipt.clear();
+                } else {
+                    let PlannedRead { plan, receipt } = &mut sc.gather.fresh;
+                    self.submit_pooled(plan, &mut sc.pool, receipt)?;
+                    stats.bytes_loaded += plan.payload_bytes();
+                }
+                stats.io += sc.gather.fresh.receipt.service;
+                // Assemble the weight tile and execute the stage.
+                self.gather_group_weights(layer, kind, bucket, pre, &mut sc.gather, &mut stats);
+                self.exec_group_solo(
+                    group,
+                    t,
+                    bucket,
+                    &mut state.kvs[layer],
+                    &sc.gather,
+                    &mut sc.fwd,
+                    &mut sc.exec,
+                    &mut sc.outs,
+                    &mut stats,
+                )?;
+            }
+
+            // --- double-buffered prefetch of layer l+1 (sync mode) ---
+            // Submit the next layer's predicted whole-layer read now; the
+            // service time it cannot hide behind this layer's compute is
+            // what the caller pays. (The async pipeline replaces this
+            // with submit-ahead at layer start + await-at-consumption.)
+            if !async_on && self.prefetch && layer + 1 < layers {
+                prefetch_service += self.prefetch_layer(
+                    state,
+                    &mut sc.plan_scratch,
+                    &mut sc.pool,
+                    layer + 1,
+                    layer_t0.elapsed(),
+                    &mut stats,
+                )?;
+            }
+        }
+        std::mem::swap(&mut state.prev_masks, &mut state.next_masks);
+        // One metrics fold per call (not per stage): the shared mutex is
+        // touched once, so concurrent sessions don't serialize on it.
+        {
+            let mut metrics = self.metrics.lock().unwrap();
+            metrics.add("host", stats.host);
+            metrics.add("select", stats.select);
+            metrics.add("compute", stats.compute);
+            metrics.add("io", stats.io);
+            if prefetch_service > Duration::ZERO {
+                metrics.add("prefetch", prefetch_service);
+                // Service time the pipeline hid behind compute; the
+                // overlap ratio is `io.overlapped / (io + io.overlapped)`.
+                metrics.add("io.overlapped", stats.overlapped_io);
+            }
+            if async_on {
+                // Per-call max of in-flight whole-layer prefetches
+                // (accumulated; divide by the "io" call count for the
+                // average achieved queue depth).
+                metrics.add_bytes("io.queue_depth", stats.max_inflight);
+            }
+            metrics.add_bytes("io", stats.bytes_loaded);
+            // Per-member I/O accounting (multi-member pools only): bytes
+            // and summed service per device, from which utilization skew
+            // is derived. Keys are pre-rendered, so this allocates
+            // nothing at steady state.
+            if self.pool.len() > 1 {
+                for m in 0..self.pool.len() {
+                    metrics.add(&self.dev_io_names[m], sc.pool.accum.service[m]);
+                    metrics.add_bytes(&self.dev_io_names[m], sc.pool.accum.bytes[m]);
+                }
+            }
+        }
+        out.clear();
+        out.extend_from_slice(&sc.fwd.xa);
+        Ok(stats)
+    }
+
+    /// Plan the predicted flash demand of `layer` (all four selection
+    /// groups, every member matrix — one cross-matrix command batch) into
+    /// the session's pooled prefetch slot. Returns whether the plan is
+    /// non-empty. Allocation-free.
+    pub(crate) fn plan_layer_prefetch(
+        &self,
+        state: &mut SessionState,
+        plan_scratch: &mut PlanScratch,
+        layer: usize,
+    ) -> bool {
+        let SessionState {
+            prev_masks,
+            prefetch,
+            ..
+        } = state;
+        let Some(groups) = prev_masks.get(layer) else {
+            return false;
+        };
+        // At most the seven matrices of one layer; stack-allocated.
+        let empty: &[Chunk] = &[];
+        let mut requests: [(MatrixId, &[Chunk]); 7] =
+            [(MatrixId::new(layer, MatrixKind::Q), empty); 7];
+        let mut n = 0usize;
+        for (gi, scored) in MatrixKind::SCORED.into_iter().enumerate() {
+            let chunks = &groups[gi];
+            if chunks.is_empty() {
+                continue;
+            }
+            for member in MatrixKind::ALL {
+                if member.mask_source() == scored {
+                    requests[n] = (MatrixId::new(layer, member), chunks.as_slice());
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            return false;
+        }
+        let slot = &mut prefetch[layer];
+        self.planner.plan_refs_into(
+            &self.store.layout,
+            &requests[..n],
+            Some(&self.table),
+            plan_scratch,
+            &mut slot.plan,
+        );
+        !slot.plan.is_empty()
+    }
+
+    /// Synchronous-mode prefetch: plan + submit `layer`'s predicted
+    /// demand into its slot. `overlap` is the wall-clock compute window
+    /// already elapsed that the prefetch hides behind. Returns the raw
+    /// (pre-overlap-credit) service time for the caller's metrics fold.
+    pub(crate) fn prefetch_layer(
+        &self,
+        state: &mut SessionState,
+        plan_scratch: &mut PlanScratch,
+        pool_scratch: &mut PoolScratch,
+        layer: usize,
+        overlap: Duration,
+        stats: &mut StageStats,
+    ) -> Result<Duration> {
+        if !self.plan_layer_prefetch(state, plan_scratch, layer) {
+            return Ok(Duration::ZERO);
+        }
+        let PlannedRead { plan, receipt } = &mut state.prefetch[layer];
+        if let Err(e) = self.submit_pooled(plan, pool_scratch, receipt) {
+            // A failed submission must not leave a non-empty plan over an
+            // unfilled receipt: the next call would swap the slot in as a
+            // valid prefetch and serve garbage bytes.
+            state.prefetch[layer].clear();
+            return Err(e);
+        }
+        let PlannedRead { plan, receipt } = &mut state.prefetch[layer];
+        let service = receipt.service;
+        let charged = service.saturating_sub(overlap);
+        stats.io += charged;
+        stats.overlapped_io += service - charged;
+        stats.bytes_loaded += plan.payload_bytes();
+        stats.prefetched_bytes += plan.payload_bytes();
+        Ok(service)
+    }
+
+    /// Async-pipeline submission of `layer`'s predicted prefetch demand.
+    /// Returns whether anything was submitted (and is now in flight).
+    ///
+    /// Virtual-clock pools submit inline (an analytical clock cannot
+    /// observe concurrency — the data and service time are exact either
+    /// way) and place the read's analytic completion on the wall
+    /// timeline under the device-serial queueing model of
+    /// [`VirtualClock`]; the overlap credit is settled in
+    /// [`EngineCore::consume_pending`]. Wall-clock pools hand the
+    /// sharded plan to the per-member I/O workers and hold the
+    /// completion ticket.
+    fn submit_prefetch(
+        &self,
+        state: &mut SessionState,
+        sc: &mut ScratchArena,
+        layer: usize,
+        stats: &mut StageStats,
+        vclock: &mut VirtualClock,
+    ) -> Result<bool> {
+        if !self.plan_layer_prefetch(state, &mut sc.plan_scratch, layer) {
+            return Ok(false);
+        }
+        let SessionState {
+            prefetch, pending, ..
+        } = state;
+        let PlannedRead { plan, receipt } = &mut prefetch[layer];
+        stats.bytes_loaded += plan.payload_bytes();
+        stats.prefetched_bytes += plan.payload_bytes();
+        match &self.async_pipe {
+            None => {
+                if let Err(e) = self.submit_pooled(plan, &mut sc.pool, receipt) {
+                    // Never leave a non-empty plan over an unfilled
+                    // receipt: the next call would swap the slot in as a
+                    // valid prefetch and serve garbage bytes.
+                    prefetch[layer].clear();
+                    return Err(e);
+                }
+                let service = prefetch[layer].receipt.service;
+                // Device-serial virtual queueing: this read starts when
+                // the (pool-level) virtual device frees up, never before
+                // the analytic now — concurrent in-flight prefetches
+                // must not each credit the same compute window.
+                let start = vclock.free_at.max(vclock.now());
+                let completion = start + service;
+                vclock.free_at = completion;
+                pending[layer] = PendingPrefetch::Virtual {
+                    completion,
+                    service,
+                };
+            }
+            Some(pipe) => {
+                self.planner
+                    .shard_into(plan, self.pool.stripe(), &mut sc.pool.sharded);
+                // Pre-size the logical receipt here; the workers fill
+                // their own staging buffers and the ticket scatters into
+                // these bytes at await time.
+                let total = receipt.presize_for(plan.cmds());
+                if sc.pool.sharded.total_bytes() != total {
+                    let covered = sc.pool.sharded.total_bytes();
+                    prefetch[layer].clear();
+                    anyhow::bail!("sharded prefetch covers {covered} of {total} plan bytes");
+                }
+                let ticket = pipe.submit(&sc.pool.sharded);
+                pending[layer] = PendingPrefetch::InFlight { ticket };
+            }
+        }
+        Ok(true)
+    }
+
+    /// Settle `layer`'s in-flight prefetch right before its weights are
+    /// consumed. Returns 1 if a submission was pending (the caller's
+    /// in-flight counter decrements), 0 otherwise.
+    ///
+    /// Accounting charges only what compute could not hide: for virtual
+    /// clocks, the time remaining until the read's device-serial
+    /// analytic completion — the stage pays `max(compute, io)` with
+    /// queued reads serializing on the virtual device (a single pool
+    /// cannot serve N in-flight layers at N× bandwidth); for wall-clock
+    /// tickets, the time this call actually blocked waiting. The hidden
+    /// remainder lands in `overlapped_io`.
+    #[allow(clippy::too_many_arguments)]
+    fn consume_pending(
+        &self,
+        state: &mut SessionState,
+        sc: &mut ScratchArena,
+        layer: usize,
+        stats: &mut StageStats,
+        prefetch_service: &mut Duration,
+        vclock: &mut VirtualClock,
+    ) -> Result<u64> {
+        match std::mem::take(&mut state.pending[layer]) {
+            PendingPrefetch::Idle => Ok(0),
+            PendingPrefetch::Virtual {
+                completion,
+                service,
+            } => {
+                // Remaining time until the device-serial analytic finish,
+                // measured from the analytic now (wall clock + stalls
+                // already charged this call, which nothing actually slept
+                // through).
+                let charged = completion.saturating_duration_since(vclock.now());
+                vclock.stall += charged;
+                stats.io += charged;
+                stats.overlapped_io += service.saturating_sub(charged);
+                *prefetch_service += service;
+                Ok(1)
+            }
+            PendingPrefetch::InFlight { ticket } => {
+                let slot = &mut state.prefetch[layer];
+                sc.pool.last.reset(self.pool.len());
+                let wait_t0 = Instant::now();
+                let waited = ticket.wait_scatter(&mut slot.receipt.bytes, &mut sc.pool.last);
+                let service = match waited {
+                    Ok(d) => d,
+                    Err(e) => {
+                        slot.clear();
+                        return Err(e);
+                    }
+                };
+                let blocked = wait_t0.elapsed();
+                slot.receipt.service = service;
+                sc.pool.accum.absorb(&sc.pool.last);
+                stats.io += blocked;
+                stats.overlapped_io += service.saturating_sub(blocked);
+                *prefetch_service += service;
+                Ok(1)
+            }
+        }
+    }
+
+    /// Submit one logical plan through the storage pool. Single-member
+    /// pools delegate straight to the member (bit-identical to the
+    /// historical one-device path); larger pools run the
+    /// [`crate::plan::IoPlanner::shard_into`] step and fan the sub-plans
+    /// out across members, reassembling the logical receipt. Per-member
+    /// bytes/service land in `ps.last` and accumulate into `ps.accum`
+    /// for the per-call metrics fold. Allocation-free at steady state.
+    pub(crate) fn submit_pooled(
+        &self,
+        plan: &ReadPlan,
+        ps: &mut PoolScratch,
+        receipt: &mut PlanReceipt,
+    ) -> Result<()> {
+        if self.pool.len() == 1 {
+            self.pool.member(0).submit_into(plan, receipt)?;
+            ps.last.reset(1);
+            ps.last.bytes[0] = plan.cmd_bytes();
+            ps.last.service[0] = receipt.service;
+        } else {
+            self.planner.shard_into(plan, self.pool.stripe(), &mut ps.sharded);
+            self.pool.submit_sharded_into(
+                plan,
+                &ps.sharded,
+                &mut ps.staging,
+                receipt,
+                &mut ps.last,
+            )?;
+        }
+        ps.accum.absorb(&ps.last);
+        Ok(())
+    }
+}

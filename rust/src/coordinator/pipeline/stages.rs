@@ -1,0 +1,436 @@
+//! The individual pipeline stages: normalize/score, select, plan,
+//! gather, execute. Both serving drivers compose exactly these helpers —
+//! [`EngineCore::forward`](crate::coordinator::engine::EngineCore) runs
+//! them for one stream, the batch driver runs them stage-synchronously
+//! across a whole decode batch — which is what makes the solo/batched
+//! bit-identity invariant auditable: the per-stream math lives in one
+//! place.
+
+use anyhow::Result;
+
+use crate::coordinator::arena::{FwdBufs, GatherScratch};
+use crate::coordinator::engine::EngineCore;
+use crate::coordinator::pipeline::StageStats;
+use crate::coordinator::{KvCache, StageTimer};
+use crate::latency::Chunk;
+use crate::model::{decode_f32_into, MatrixId, MatrixKind};
+use crate::plan::{PlanScratch, PlannedRead, RowCursor};
+use crate::runtime::{ExecScratch, ModelMeta, StageOutputs, TensorView};
+use crate::sparsify::{SelectScratch, SelectionMask};
+
+/// The member matrices of the selection group led by a scored `kind`
+/// (K/V reuse Q's mask, Up reuses Gate's — they share input activations).
+pub(crate) fn group_members(kind: MatrixKind) -> &'static [MatrixKind] {
+    match kind {
+        MatrixKind::Q => &[MatrixKind::Q, MatrixKind::K, MatrixKind::V],
+        MatrixKind::O => &[MatrixKind::O],
+        MatrixKind::Gate => &[MatrixKind::Gate, MatrixKind::Up],
+        MatrixKind::Down => &[MatrixKind::Down],
+        _ => unreachable!("only scored kinds lead a group"),
+    }
+}
+
+impl EngineCore {
+    /// Stage 1 — normalize/score: RMS-norm the stage input where the
+    /// reference model does and reduce it to per-column importance
+    /// (`fwd.imp`), per selection group.
+    pub(crate) fn score_group(
+        &self,
+        group: usize,
+        t: usize,
+        fwd: &mut FwdBufs,
+        stats: &mut StageStats,
+    ) {
+        let d = self.meta.d;
+        let h = self.meta.h;
+        let timer = StageTimer::start();
+        match group {
+            0 => {
+                rmsnorm_into(&fwd.xa, t, d, &mut fwd.hn);
+                col_importance_into(&fwd.hn, t, d, &mut fwd.imp);
+            }
+            1 => col_importance_into(&fwd.attn, t, d, &mut fwd.imp),
+            2 => {
+                rmsnorm_into(&fwd.xb, t, d, &mut fwd.hn);
+                col_importance_into(&fwd.hn, t, d, &mut fwd.imp);
+            }
+            _ => col_importance_into(&fwd.act, t, h, &mut fwd.imp),
+        }
+        stats.host += timer.finish();
+    }
+
+    /// Stage 2 — select: run the selection policy for one scored matrix,
+    /// writing the mask into `out` (arena-backed; no allocations at
+    /// steady state).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn select_into(
+        &self,
+        layer: usize,
+        kind: MatrixKind,
+        importance_logical: &[f32],
+        stats: &mut StageStats,
+        scratch: &mut SelectScratch,
+        imp_phys: &mut Vec<f32>,
+        out: &mut SelectionMask,
+    ) {
+        let rows = importance_logical.len();
+        let timer = StageTimer::start();
+        // Move importance into physical (reordered) row space.
+        let id = MatrixId::new(layer, kind);
+        match self.store.permutation(id) {
+            Some(p) => p.apply_into(importance_logical, imp_phys),
+            None => {
+                imp_phys.clear();
+                imp_phys.extend_from_slice(importance_logical);
+            }
+        }
+        let total: f64 = imp_phys.iter().map(|&v| v as f64).sum();
+        // Cached rows are free: zero their importance pre-selection (§5).
+        if let Some(cache) = &self.neuron_cache {
+            cache.zero_cached(id, imp_phys);
+        }
+        let budget = ((1.0 - self.sparsity) * rows as f64).round() as usize;
+        match &self.selector {
+            None => out.set_full(rows),
+            Some(s) => {
+                let row_bytes = self.spec.row_bytes(kind);
+                let table = self
+                    .keyed_tables
+                    .get(&row_bytes)
+                    .expect("table pre-keyed for every scored row size");
+                s.select_into(imp_phys, budget, table, scratch, out);
+            }
+        }
+        stats.select += timer.finish();
+        stats.importance_total += total;
+        stats.importance_kept += out.captured_importance(imp_phys);
+        if let Some(cache) = &self.neuron_cache {
+            stats.importance_kept +=
+                cache.cached_importance(id, importance_logical, self.store.permutation(id));
+        }
+    }
+
+    /// Stage 3 — plan: build the group's compute set (selected ∪ cached
+    /// rows), gather the matching activation columns padded to the
+    /// compiled bucket, subtract what the layer prefetch buffer already
+    /// holds, and plan the residual demand as one cross-matrix command
+    /// batch into `g.fresh.plan` (not yet submitted). Returns the
+    /// compiled bucket size. Allocation-free.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn prepare_group_load(
+        &self,
+        layer: usize,
+        kind: MatrixKind,
+        acts: &[f32],
+        t: usize,
+        sel: &SelectionMask,
+        prefetched: Option<&PlannedRead>,
+        g: &mut GatherScratch,
+        plan_scratch: &mut PlanScratch,
+        stats: &mut StageStats,
+    ) -> usize {
+        let members = group_members(kind);
+        let in_rows = self.spec.shape_of(kind).rows;
+
+        // Union of selected + cached rows (sorted, physical space).
+        let id0 = MatrixId::new(layer, kind);
+        g.phys_rows.clear();
+        for chunk in &sel.chunks {
+            g.phys_rows.extend(chunk.start..chunk.end());
+        }
+        g.flash_chunks.clear();
+        g.flash_chunks.extend_from_slice(&sel.chunks);
+        if let Some(cache) = &self.neuron_cache {
+            let cached = cache.cached_rows(id0);
+            if !cached.is_empty() {
+                g.selset.clear();
+                g.selset.resize(in_rows, false);
+                for &r in g.phys_rows.iter() {
+                    g.selset[r] = true;
+                }
+                for &r in cached {
+                    if !g.selset[r] {
+                        g.phys_rows.push(r);
+                    }
+                }
+                g.phys_rows.sort_unstable();
+                // Flash reads exclude cached rows.
+                g.flash_chunks.clear();
+                for chunk in &sel.chunks {
+                    g.flash_chunks.extend(cache.subtract_cached(id0, *chunk));
+                }
+            }
+        }
+
+        let buckets = if kind == MatrixKind::Down {
+            &self.meta.h_buckets
+        } else {
+            &self.meta.d_buckets
+        };
+        let bucket = ModelMeta::bucket_for(buckets, g.phys_rows.len());
+
+        // Gather activations: xs[:, j] = acts[:, logical(phys_rows[j])].
+        let timer = StageTimer::start();
+        let perm = self.store.permutation(id0);
+        g.xs.clear();
+        g.xs.resize(t * bucket, 0.0);
+        for (j, &p) in g.phys_rows.iter().enumerate() {
+            let logical = perm.map(|pm| pm.old_of(p)).unwrap_or(p);
+            for ti in 0..t {
+                g.xs[ti * bucket + j] = acts[ti * in_rows + logical];
+            }
+        }
+        stats.host += timer.finish();
+
+        // Rows the prefetch buffer already holds need no fresh read; the
+        // residual demand is planned as one cross-matrix batch. Coverage is
+        // identical across members (the prefetcher requested the same
+        // chunks for each), so the lead member's cursor decides.
+        g.residual.clear();
+        match prefetched {
+            None => g.residual.extend_from_slice(&g.flash_chunks),
+            Some(pre) => {
+                let lead = MatrixId::new(layer, members[0]);
+                let mut cursor = RowCursor::new(pre, lead);
+                for chunk in &g.flash_chunks {
+                    let mut run: Option<usize> = None;
+                    for r in chunk.start..chunk.end() {
+                        if cursor.advance_to(r).is_some() {
+                            if let Some(s) = run.take() {
+                                g.residual.push(Chunk::new(s, r - s));
+                            }
+                        } else if run.is_none() {
+                            run = Some(r);
+                        }
+                    }
+                    if let Some(s) = run {
+                        g.residual.push(Chunk::new(s, chunk.end() - s));
+                    }
+                }
+            }
+        }
+
+        // One planned submission covering every member's residual rows.
+        let empty: &[Chunk] = &[];
+        let mut requests: [(MatrixId, &[Chunk]); 3] = [(id0, empty); 3];
+        for (i, member) in members.iter().enumerate() {
+            requests[i] = (MatrixId::new(layer, *member), g.residual.as_slice());
+        }
+        self.planner.plan_refs_into(
+            &self.store.layout,
+            &requests[..members.len()],
+            Some(&self.table),
+            plan_scratch,
+            &mut g.fresh.plan,
+        );
+        bucket
+    }
+
+    /// Stage 6 (gather half) — assemble per-member weight buckets: fresh
+    /// read → prefetch buffer → hot-neuron cache, walking `phys_rows` in
+    /// ascending order. The executor reads these buffers in place (no
+    /// clones). Every row's bytes come from the shared flash image (or
+    /// the engine-level cache), so a batch cohort sharing one compute
+    /// set can reuse a single member's gathered tile bit-identically.
+    pub(crate) fn gather_group_weights(
+        &self,
+        layer: usize,
+        kind: MatrixKind,
+        bucket: usize,
+        prefetched: Option<&PlannedRead>,
+        g: &mut GatherScratch,
+        stats: &mut StageStats,
+    ) {
+        let members = group_members(kind);
+        let have_fresh = !g.fresh.plan.is_empty();
+        let timer = StageTimer::start();
+        for (mi, member) in members.iter().enumerate() {
+            let id = MatrixId::new(layer, *member);
+            let cols = self.spec.shape_of(*member).cols;
+            let w = &mut g.weights[mi];
+            w.clear();
+            w.resize(bucket * cols, 0.0);
+            let mut fresh_cursor = if have_fresh {
+                Some(RowCursor::new(&g.fresh, id))
+            } else {
+                None
+            };
+            let mut pre_cursor = prefetched.map(|p| RowCursor::new(p, id));
+            for (j, &p) in g.phys_rows.iter().enumerate() {
+                let dst = &mut w[j * cols..(j + 1) * cols];
+                if let Some(bytes) = fresh_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
+                    decode_f32_into(bytes, dst);
+                    continue;
+                }
+                if let Some(bytes) = pre_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
+                    decode_f32_into(bytes, dst);
+                    stats.prefetch_hits += 1;
+                    continue;
+                }
+                if let Some(cache) = &self.neuron_cache {
+                    if let Some(row) = cache.row_data(id, p) {
+                        dst.copy_from_slice(row);
+                    }
+                }
+            }
+        }
+        stats.host += timer.finish();
+    }
+
+    /// Stage 5 — execute one group's compiled stage artifact over the
+    /// gathered weights for a single stream, then scatter the outputs
+    /// into the forward buffers (and append K/V for the attention
+    /// group). The batch driver replaces this with the multi-stream
+    /// kernels for cohorts that share a weight tile.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn exec_group_solo(
+        &self,
+        group: usize,
+        t: usize,
+        bucket: usize,
+        kv: &mut KvCache,
+        g: &GatherScratch,
+        fwd: &mut FwdBufs,
+        exec: &mut ExecScratch,
+        outs: &mut StageOutputs,
+        stats: &mut StageStats,
+    ) -> Result<()> {
+        let d = self.meta.d;
+        let h = self.meta.h;
+        let c = self.spec.cache_slots;
+        match group {
+            0 => {
+                let timer = StageTimer::start();
+                let (kc, vc, kmask) = kv.views();
+                let name = self.artifact_name("qkv", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &g.xs),
+                    TensorView::mat(bucket, d, &g.weights[0]),
+                    TensorView::mat(bucket, d, &g.weights[1]),
+                    TensorView::mat(bucket, d, &g.weights[2]),
+                    TensorView::mat(c, d, kc),
+                    TensorView::mat(c, d, vc),
+                    TensorView::vec1(c, kmask),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, exec, outs)?;
+                stats.compute += timer.finish();
+                std::mem::swap(&mut fwd.attn, &mut outs.out[0]);
+                kv.append(&outs.out[1], &outs.out[2]);
+            }
+            1 => {
+                let timer = StageTimer::start();
+                let name = self.artifact_name("projres", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &g.xs),
+                    TensorView::mat(bucket, d, &g.weights[0]),
+                    TensorView::mat(t, d, &fwd.xa),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, exec, outs)?;
+                stats.compute += timer.finish();
+                std::mem::swap(&mut fwd.xb, &mut outs.out[0]);
+            }
+            2 => {
+                let timer = StageTimer::start();
+                let name = self.artifact_name("gateup", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &g.xs),
+                    TensorView::mat(bucket, h, &g.weights[0]),
+                    TensorView::mat(bucket, h, &g.weights[1]),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, exec, outs)?;
+                stats.compute += timer.finish();
+                std::mem::swap(&mut fwd.act, &mut outs.out[0]);
+            }
+            _ => {
+                let timer = StageTimer::start();
+                let name = self.artifact_name("projres", t, bucket)?;
+                let inputs = [
+                    TensorView::mat(t, bucket, &g.xs),
+                    TensorView::mat(bucket, d, &g.weights[0]),
+                    TensorView::mat(t, d, &fwd.xb),
+                ];
+                self.runtime
+                    .execute_into(name, &inputs, self.exec_threads, exec, outs)?;
+                stats.compute += timer.finish();
+                std::mem::swap(&mut fwd.xa, &mut outs.out[0]);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Scale-free RMSNorm over each of `t` rows of width `d` (host-side; the
+/// coordinator needs the values for scoring anyway).
+pub fn rmsnorm(x: &[f32], t: usize, d: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    rmsnorm_into(x, t, d, &mut out);
+    out
+}
+
+/// Allocation-free [`rmsnorm`]: clears and refills `out`.
+pub fn rmsnorm_into(x: &[f32], t: usize, d: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(t * d, 0.0);
+    for ti in 0..t {
+        let row = &x[ti * d..(ti + 1) * d];
+        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for (o, &v) in out[ti * d..(ti + 1) * d].iter_mut().zip(row) {
+            *o = (v as f64 * inv) as f32;
+        }
+    }
+}
+
+/// Mean |activation| per column over `t` tokens (§B.2's multi-token
+/// importance).
+pub fn col_importance(x: &[f32], t: usize, d: usize) -> Vec<f32> {
+    let mut imp = Vec::new();
+    col_importance_into(x, t, d, &mut imp);
+    imp
+}
+
+/// Allocation-free [`col_importance`]: clears and refills `out`.
+pub fn col_importance_into(x: &[f32], t: usize, d: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(d, 0.0);
+    for ti in 0..t {
+        for j in 0..d {
+            out[j] += x[ti * d + j].abs();
+        }
+    }
+    let inv = 1.0 / t as f32;
+    out.iter_mut().for_each(|v| *v *= inv);
+}
+
+pub(crate) fn full_mask(n: usize) -> SelectionMask {
+    SelectionMask::full(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let x: Vec<f32> = (0..128).map(|i| (i as f32 - 64.0) * 0.3).collect();
+        let out = rmsnorm(&x, 2, 64);
+        for ti in 0..2 {
+            let ms: f64 = out[ti * 64..(ti + 1) * 64]
+                .iter()
+                .map(|&v| (v as f64).powi(2))
+                .sum::<f64>()
+                / 64.0;
+            assert!((ms - 1.0).abs() < 1e-3, "rms {ms}");
+        }
+    }
+
+    #[test]
+    fn col_importance_means_abs() {
+        let x = vec![1.0f32, -2.0, 3.0, -4.0]; // t=2, d=2
+        let imp = col_importance(&x, 2, 2);
+        assert_eq!(imp, vec![2.0, 3.0]);
+    }
+}

@@ -10,13 +10,30 @@
 //! while a per-stream in-flight guard keeps each stream's requests in
 //! submission order (within each priority class) no matter which worker
 //! picks them up.
+//!
+//! ## Cross-stream decode batching
+//!
+//! With a non-zero [`SchedulerConfig::batch_window`], a worker that picks
+//! up a decode request keeps collecting further *ready* decode requests —
+//! oldest first, at most one per stream (the in-flight guard enforces
+//! this for free), up to [`SchedulerConfig::max_batch`] — waiting up to
+//! the window for more to arrive, then serves the whole group as **one
+//! fused batch** ([`Engine::decode_batch_into`]): per-stream selection,
+//! shared chunks read from flash once, shared weight tiles executed
+//! across all member activations. Every member still gets its own
+//! [`Completion`], and outputs are bit-identical to solo decoding, so
+//! batching only trades a bounded queueing delay (≤ the window) for
+//! I/O dedup and kernel-dispatch amortization. Appends are never
+//! batched and still yield to decodes; a batch whose validation fails
+//! falls back to solo decodes so one bad stream cannot poison the
+//! others.
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Engine, Session, StageStats};
+use crate::coordinator::{DecodeRequest, Engine, Session, StageStats, MAX_DECODE_BATCH};
 
 /// What a request asks the engine to do.
 #[derive(Clone, Debug)]
@@ -68,21 +85,37 @@ pub struct SchedulerConfig {
     /// execution; more lets independent streams run concurrently over the
     /// shared engine core.
     pub workers: usize,
+    /// Cross-stream decode-batching window: a worker that picked up a
+    /// decode waits up to this long for further ready decodes from other
+    /// streams before serving the group as one fused batch.
+    /// `Duration::ZERO` (the default) disables batching entirely.
+    pub batch_window: Duration,
+    /// Most decode requests fused into one batch (clamped to
+    /// [`MAX_DECODE_BATCH`]; values ≤ 1 disable batching).
+    pub max_batch: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        // NC_SCHED_WORKERS lets CI (and operators) exercise the
-        // concurrent path without touching call sites.
+        // NC_SCHED_WORKERS / NC_BATCH_WINDOW_US let CI (and operators)
+        // exercise the concurrent and batched paths without touching
+        // call sites.
         let workers = std::env::var("NC_SCHED_WORKERS")
             .ok()
             .and_then(|v| v.parse::<usize>().ok())
             .filter(|&n| n >= 1)
             .unwrap_or(1);
+        let batch_window = std::env::var("NC_BATCH_WINDOW_US")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_micros)
+            .unwrap_or(Duration::ZERO);
         Self {
             max_queue: 256,
             max_streams: 64,
             workers,
+            batch_window,
+            max_batch: 4,
         }
     }
 }
@@ -127,11 +160,25 @@ struct Shared {
     sessions: Mutex<Vec<Option<Arc<Session>>>>,
 }
 
+/// Decode-batching knobs handed to each worker.
+#[derive(Clone, Copy)]
+struct BatchCfg {
+    window: Duration,
+    max_batch: usize,
+}
+
+impl BatchCfg {
+    fn enabled(&self) -> bool {
+        self.window > Duration::ZERO && self.max_batch > 1
+    }
+}
+
 /// Thread-pool-backed scheduler around an [`Engine`].
 pub struct Scheduler {
     shared: Arc<Shared>,
     cfg: SchedulerConfig,
     workers: Vec<std::thread::JoinHandle<()>>,
+    engine: Engine,
 }
 
 impl Scheduler {
@@ -147,18 +194,29 @@ impl Scheduler {
             sessions: Mutex::new(Vec::new()),
         });
         let engine = make_engine();
+        let batch = BatchCfg {
+            window: cfg.batch_window,
+            max_batch: cfg.max_batch.min(MAX_DECODE_BATCH),
+        };
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let shared = shared.clone();
                 let engine = engine.clone();
-                std::thread::spawn(move || worker_loop(shared, engine))
+                std::thread::spawn(move || worker_loop(shared, engine, batch))
             })
             .collect();
         Self {
             shared,
             cfg,
             workers,
+            engine,
         }
+    }
+
+    /// A handle to the scheduler's engine (metrics inspection, warmup,
+    /// calibration — the core is shared with the workers).
+    pub fn engine(&self) -> Engine {
+        self.engine.clone()
     }
 
     /// Enqueue a request; returns the completion receiver, or an error if
@@ -226,67 +284,218 @@ impl Drop for Scheduler {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, engine: Engine) {
+/// Fetch (or lazily create) the session of one stream.
+fn stream_session(shared: &Arc<Shared>, engine: &Engine, stream: usize) -> Arc<Session> {
+    let mut slots = shared.sessions.lock().unwrap();
+    if slots.len() <= stream {
+        slots.resize_with(stream + 1, || None);
+    }
+    slots[stream]
+        .get_or_insert_with(|| Arc::new(engine.new_session()))
+        .clone()
+}
+
+fn worker_loop(shared: Arc<Shared>, engine: Engine, batch: BatchCfg) {
+    let mut jobs: Vec<Job> = Vec::new();
     loop {
-        let job = {
+        jobs.clear();
+        {
             let mut guard = shared.queues.lock().unwrap();
-            let job = loop {
+            loop {
                 // Priority: decode before append; streams with an
                 // in-flight request are skipped so per-stream order holds.
                 let q = &mut *guard;
                 if let Some(j) = pop_ready(&mut q.decode, &q.busy) {
-                    break Some(j);
+                    q.busy.insert(j.request.stream);
+                    jobs.push(j);
+                    break;
                 }
                 if let Some(j) = pop_ready(&mut q.append, &q.busy) {
-                    break Some(j);
+                    q.busy.insert(j.request.stream);
+                    jobs.push(j);
+                    break;
                 }
                 if q.stopping {
-                    break None;
+                    break;
                 }
                 guard = shared.cv.wait(guard).unwrap();
-            };
-            if let Some(job) = &job {
-                guard.busy.insert(job.request.stream);
             }
-            job
-        };
-        let Some(job) = job else { return };
-        let queue_wait = job.enqueued.elapsed();
-        let session = {
-            let mut slots = shared.sessions.lock().unwrap();
-            if slots.len() <= job.request.stream {
-                slots.resize_with(job.request.stream + 1, || None);
+            // Cross-stream decode batching: keep collecting ready
+            // decodes (oldest first — the busy guard already enforces at
+            // most one per stream) up to `max_batch`, waiting out the
+            // bounded window for more to arrive. Appends never batch.
+            let decode_lead = jobs
+                .first()
+                .is_some_and(|j| matches!(j.request.kind, RequestKind::Decode(_)));
+            if batch.enabled() && decode_lead {
+                let deadline = Instant::now() + batch.window;
+                loop {
+                    {
+                        let q = &mut *guard;
+                        while jobs.len() < batch.max_batch {
+                            match pop_ready(&mut q.decode, &q.busy) {
+                                Some(j) => {
+                                    q.busy.insert(j.request.stream);
+                                    jobs.push(j);
+                                }
+                                None => break,
+                            }
+                        }
+                    }
+                    if jobs.len() >= batch.max_batch || guard.stopping {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    guard = shared.cv.wait_timeout(guard, deadline - now).unwrap().0;
+                }
             }
-            slots[job.request.stream]
-                .get_or_insert_with(|| Arc::new(engine.new_session()))
-                .clone()
+        }
+        if jobs.is_empty() {
+            return; // stopping, nothing left to serve
+        }
+        if jobs.len() == 1 {
+            let job = jobs.pop().expect("one job claimed");
+            run_single(&shared, &engine, job);
+        } else {
+            run_decode_batch(&shared, &engine, &mut jobs);
+        }
+    }
+}
+
+/// Serve one request on its stream's session and deliver the completion.
+fn run_single(shared: &Arc<Shared>, engine: &Engine, job: Job) {
+    let queue_wait = job.enqueued.elapsed();
+    let session = stream_session(shared, engine, job.request.stream);
+    let t0 = Instant::now();
+    let (output, stats) = match &job.request.kind {
+        RequestKind::AppendFrame(f) => match session.append_frame(f) {
+            Ok((y, s)) => (Ok(y), s),
+            Err(e) => (Err(e.to_string()), StageStats::default()),
+        },
+        RequestKind::Decode(tok) => match session.decode_step(tok) {
+            Ok((y, s)) => (Ok(y), s),
+            Err(e) => (Err(e.to_string()), StageStats::default()),
+        },
+    };
+    let stream = job.request.stream;
+    let _ = job.done.send(Completion {
+        stream,
+        kind: job.request.kind.name(),
+        output,
+        stats,
+        queue_wait,
+        exec_wall: t0.elapsed(),
+    });
+    // Release the stream; any worker may now serve its next queued
+    // request (notify_all: the waiter isn't necessarily the one the
+    // submit-side notify_one woke).
+    shared.queues.lock().unwrap().busy.remove(&stream);
+    shared.cv.notify_all();
+}
+
+/// Serve a group of decode jobs (distinct streams) as one fused batch;
+/// every member gets its own completion.
+///
+/// Members that would fail the batch's all-or-nothing validation for a
+/// *predictable* reason (no primed KV yet) are screened out up front and
+/// served solo, so they get their own error while the rest still batch.
+/// If the fused batch itself errors, every member receives that error —
+/// never a silent solo retry: a mid-run failure may already have
+/// advanced member KV state (exactly like a solo decode failing
+/// mid-layer), so re-decoding on top of it would deliver corrupted
+/// outputs as `Ok`.
+fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) {
+    let streams: Vec<usize> = jobs.iter().map(|j| j.request.stream).collect();
+    let sessions: Vec<Arc<Session>> = jobs
+        .iter()
+        .map(|j| stream_session(shared, engine, j.request.stream))
+        .collect();
+    let waits: Vec<Duration> = jobs.iter().map(|j| j.enqueued.elapsed()).collect();
+
+    // Screen out members that cannot decode yet; serve them solo for
+    // their own per-stream error (or result, if a frame landed
+    // in-between). `ready` keeps (job index) of the batchable rest.
+    let mut ready: Vec<usize> = Vec::with_capacity(jobs.len());
+    let mut solo_done: Vec<(usize, Result<Vec<f32>, String>, StageStats, Duration)> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        if sessions[i].kv_tokens() > 0 {
+            ready.push(i);
+            continue;
+        }
+        let RequestKind::Decode(tok) = &job.request.kind else {
+            unreachable!("batches hold decode requests only");
         };
         let t0 = Instant::now();
-        let (output, stats) = match &job.request.kind {
-            RequestKind::AppendFrame(f) => match session.append_frame(f) {
-                Ok((y, s)) => (Ok(y), s),
-                Err(e) => (Err(e.to_string()), StageStats::default()),
-            },
-            RequestKind::Decode(tok) => match session.decode_step(tok) {
-                Ok((y, s)) => (Ok(y), s),
-                Err(e) => (Err(e.to_string()), StageStats::default()),
-            },
+        let (output, st) = match sessions[i].decode_step(tok) {
+            Ok((y, s)) => (Ok(y), s),
+            Err(e) => (Err(e.to_string()), StageStats::default()),
         };
-        let stream = job.request.stream;
-        let _ = job.done.send(Completion {
-            stream,
-            kind: job.request.kind.name(),
-            output,
-            stats,
-            queue_wait,
-            exec_wall: t0.elapsed(),
-        });
-        // Release the stream; any worker may now serve its next queued
-        // request (notify_all: the waiter isn't necessarily the one the
-        // submit-side notify_one woke).
-        shared.queues.lock().unwrap().busy.remove(&stream);
-        shared.cv.notify_all();
+        solo_done.push((i, output, st, t0.elapsed()));
     }
+
+    let mut outs = vec![Vec::new(); ready.len()];
+    let mut stats = vec![StageStats::default(); ready.len()];
+    let t0 = Instant::now();
+    let batch_result = if ready.is_empty() {
+        Ok(())
+    } else {
+        let reqs: Vec<DecodeRequest> = ready
+            .iter()
+            .map(|&i| {
+                let RequestKind::Decode(tok) = &jobs[i].request.kind else {
+                    unreachable!("batches hold decode requests only");
+                };
+                DecodeRequest {
+                    session: &sessions[i],
+                    token: tok,
+                }
+            })
+            .collect();
+        engine.decode_batch_into(&reqs, &mut outs, &mut stats)
+    };
+    let exec_wall = t0.elapsed();
+
+    // Deliver the batch members' completions.
+    for (bi, &i) in ready.iter().enumerate() {
+        let output = match &batch_result {
+            Ok(()) => Ok(std::mem::take(&mut outs[bi])),
+            Err(e) => Err(e.to_string()),
+        };
+        let job = &jobs[i];
+        let _ = job.done.send(Completion {
+            stream: job.request.stream,
+            kind: "decode",
+            output,
+            stats: stats[bi],
+            queue_wait: waits[i],
+            exec_wall,
+        });
+    }
+    // And the screened-out members' solo completions.
+    for (i, output, st, wall) in solo_done {
+        let job = &jobs[i];
+        let _ = job.done.send(Completion {
+            stream: job.request.stream,
+            kind: "decode",
+            output,
+            stats: st,
+            queue_wait: waits[i],
+            exec_wall: wall,
+        });
+    }
+    jobs.clear();
+
+    // Release every member stream at once.
+    {
+        let mut q = shared.queues.lock().unwrap();
+        for s in &streams {
+            q.busy.remove(s);
+        }
+    }
+    shared.cv.notify_all();
 }
 
 #[cfg(test)]
@@ -504,6 +713,153 @@ mod tests {
             let (want, _) = session.append_frame(&trace.frame(f)).unwrap();
             assert_eq!(out, &want, "frame {f} executed out of order");
         }
+    }
+
+    #[test]
+    fn shutdown_with_queued_requests_drains_cleanly() {
+        // Satellite regression: shutdown while requests are still queued
+        // must not deadlock any worker, and every submitted request must
+        // either complete or be cleanly rejected (its channel
+        // disconnects) — never hang.
+        let s = spawn_tiny_cfg(serial_cfg());
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                s.submit(Request {
+                    stream: i % 3,
+                    kind: RequestKind::AppendFrame(tiny_frame()),
+                })
+                .unwrap()
+            })
+            .collect();
+        // Shut down immediately: the single worker is at most one job
+        // in; the rest are still queued.
+        s.shutdown();
+        let mut completed = 0usize;
+        let mut rejected = 0usize;
+        for rx in rxs {
+            // After shutdown() joined the workers, every sender side is
+            // either used or dropped, so recv() cannot block.
+            match rx.recv() {
+                Ok(c) => {
+                    c.output.unwrap();
+                    completed += 1;
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        assert_eq!(completed + rejected, 6);
+        // The drain semantics deliver everything that was queued before
+        // the stop flag was observed.
+        assert!(completed >= 1, "at least the in-flight job completes");
+    }
+
+    #[test]
+    fn batched_decodes_match_solo_reference() {
+        // One worker + a batching window: four decode requests from four
+        // primed streams coalesce into fused batches, and every stream's
+        // output must be bit-identical to a solo single-session
+        // reference.
+        let s = spawn_tiny_cfg(SchedulerConfig {
+            workers: 1,
+            batch_window: Duration::from_millis(500),
+            max_batch: 4,
+            ..SchedulerConfig::default()
+        });
+        let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
+        // Prime each stream with its own frame.
+        let rxs: Vec<_> = (0..4)
+            .map(|stream| {
+                s.submit(Request {
+                    stream,
+                    kind: RequestKind::AppendFrame(trace.frame(stream)),
+                })
+                .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().output.unwrap();
+        }
+        // Two decode rounds; submissions land fast enough to batch.
+        let token = vec![0.04f32; 64];
+        let mut rounds: Vec<Vec<Vec<f32>>> = Vec::new();
+        for _ in 0..2 {
+            let rxs: Vec<_> = (0..4)
+                .map(|stream| {
+                    s.submit(Request {
+                        stream,
+                        kind: RequestKind::Decode(token.clone()),
+                    })
+                    .unwrap()
+                })
+                .collect();
+            rounds.push(
+                rxs.into_iter()
+                    .map(|rx| rx.recv().unwrap().output.unwrap())
+                    .collect(),
+            );
+        }
+        // Batches actually formed (occupancy metric counts members).
+        let m = s.engine().metrics();
+        assert!(
+            m.bytes("batch.occupancy") >= 2,
+            "expected at least one fused batch, got occupancy bytes {}",
+            m.bytes("batch.occupancy")
+        );
+        s.shutdown();
+        // Reference: identical engine, solo sessions per stream — the
+        // batched outputs must be bit-identical.
+        let reference = Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.3)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap();
+        for stream in 0..4usize {
+            let session = reference.new_session();
+            session.append_frame(&trace.frame(stream)).unwrap();
+            for (round, outs) in rounds.iter().enumerate() {
+                let (want, _) = session.decode_step(&token).unwrap();
+                assert_eq!(
+                    outs[stream], want,
+                    "stream {stream} diverged under batching at round {round}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_fallback_isolates_invalid_streams() {
+        // Stream 1 decodes without a primed KV: the batch falls back to
+        // solo decodes, stream 1 gets its error, stream 0 still
+        // completes.
+        let s = spawn_tiny_cfg(SchedulerConfig {
+            workers: 1,
+            batch_window: Duration::from_millis(300),
+            max_batch: 4,
+            ..SchedulerConfig::default()
+        });
+        let prime = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::AppendFrame(tiny_frame()),
+            })
+            .unwrap();
+        prime.recv().unwrap().output.unwrap();
+        let good = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::Decode(vec![0.02; 64]),
+            })
+            .unwrap();
+        let bad = s
+            .submit(Request {
+                stream: 1,
+                kind: RequestKind::Decode(vec![0.02; 64]),
+            })
+            .unwrap();
+        assert!(good.recv().unwrap().output.is_ok());
+        assert!(bad.recv().unwrap().output.is_err());
+        s.shutdown();
     }
 
     #[test]

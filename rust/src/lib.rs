@@ -39,8 +39,8 @@ pub mod workload;
 
 pub use latency::{Chunk, ContiguityDistribution, LatencyTable};
 pub use plan::{
-    CoalescePolicy, DeviceSubPlan, IoPlanner, PlanReceipt, PlanRequest, PlannedRead, ReadPlan,
-    ShardedPlan,
+    CoalescePolicy, DeviceSubPlan, FuseScratch, FusedCopy, FusedPlan, IoPlanner, PlanReceipt,
+    PlanRequest, PlannedRead, ReadPlan, ShardedPlan,
 };
 pub use sparsify::{SelectionMask, Selector};
 pub use storage::{

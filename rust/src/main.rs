@@ -50,6 +50,11 @@ fn main() {
                  \x20                              (default 2)\n\
                  \x20               [--file-backed DIR] serve from real per-member backing\n\
                  \x20                              files under DIR (wall-clock I/O)\n\
+                 \x20               [--streams N]  concurrent decode streams served through\n\
+                 \x20                              the scheduler (default 1 = single stream)\n\
+                 \x20               [--batch-window US] cross-stream decode-batching window\n\
+                 \x20                              in microseconds (with --streams > 1;\n\
+                 \x20                              fused I/O plans, outputs bit-identical)\n\
                  \x20               POLICY: dense | topk | threshold[:t] |\n\
                  \x20                       chunking[:min_kb,jump_kb,max_kb] | bundling[:rows]\n\
                  \x20 repro profile [--device nano|agx|macbook] [--file PATH] [--out PATH]\n\
@@ -141,6 +146,16 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     };
+    let streams: usize = flag(args, "--streams")
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1);
+    if streams > 1 {
+        let window_us: u64 = flag(args, "--batch-window")
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        return serve_batched(engine, streams, window_us, decode_steps);
+    }
     println!(
         "serving model={model} policy={policy_name} sparsity={sparsity} device={device} \
          threads={threads} devices={} async_io={} queue_depth={}",
@@ -252,6 +267,92 @@ fn cmd_serve(args: &[String]) -> i32 {
             if mean > 0.0 { max / mean } else { 1.0 }
         );
     }
+    0
+}
+
+/// Multi-stream decode serving through the scheduler's cross-stream
+/// batching path: every stream is primed with its own frame, then decode
+/// rounds are submitted concurrently so the bounded window fuses them
+/// into shared-read batches. Reports throughput, achieved batch
+/// occupancy, and the fused-I/O dedup ratio.
+fn serve_batched(engine: Engine, streams: usize, window_us: u64, decode_steps: usize) -> i32 {
+    use neuron_chunking::coordinator::{Request, RequestKind, Scheduler, SchedulerConfig};
+    let spec = engine.spec();
+    println!(
+        "batched serving: {streams} streams, window {window_us}us, {} decode rounds",
+        decode_steps.max(1)
+    );
+    let cfg = SchedulerConfig {
+        workers: 1,
+        batch_window: std::time::Duration::from_micros(window_us),
+        max_batch: streams.max(2),
+        ..SchedulerConfig::default()
+    };
+    let sched = Scheduler::spawn(cfg, move || engine);
+    sched.engine().warmup().ok();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, streams + 1, 11);
+    // Prime every stream with its own frame.
+    let rxs: Vec<_> = (0..streams)
+        .map(|st| {
+            sched
+                .submit(Request {
+                    stream: st,
+                    kind: RequestKind::AppendFrame(trace.frame(st)),
+                })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        if let Err(e) = rx.recv().unwrap().output {
+            eprintln!("stream priming failed: {e}");
+            return 1;
+        }
+    }
+    let token = vec![0.05f32; spec.d];
+    let rounds = decode_steps.max(1);
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        let rxs: Vec<_> = (0..streams)
+            .map(|st| {
+                sched
+                    .submit(Request {
+                        stream: st,
+                        kind: RequestKind::Decode(token.clone()),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            if let Err(e) = rx.recv().unwrap().output {
+                eprintln!("decode failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = (streams * rounds) as f64;
+    let m = sched.engine().metrics();
+    let batches = m.count("batch.occupancy");
+    let occupancy = if batches > 0 {
+        m.bytes("batch.occupancy") as f64 / batches as f64
+    } else {
+        1.0
+    };
+    let shared = m.bytes("io.shared_bytes");
+    let io_bytes = m.bytes("io");
+    println!(
+        "decode throughput: {:.0} tok/s ({streams} streams x {rounds} rounds in {:.3}s)",
+        total / wall,
+        wall
+    );
+    println!("batch occupancy: {occupancy:.2} avg members over {batches} fused batches");
+    println!(
+        "shared (deduped) reads: {:.2} MB of {:.2} MB demanded ({:.1}% saved by fusion)",
+        shared as f64 / 1e6,
+        (shared + io_bytes) as f64 / 1e6,
+        100.0 * shared as f64 / ((shared + io_bytes).max(1)) as f64
+    );
+    sched.shutdown();
     0
 }
 

@@ -222,7 +222,16 @@ impl WeightStore {
         let mut cursor = RowCursor::new(&read, id);
         for c in chunks {
             for r in c.start..c.end() {
-                let row = cursor.advance_to(r).expect("plan covers requested rows");
+                // A malformed plan must fail the request, not the
+                // process: name the matrix and row so the caller can tell
+                // which demand the plan missed.
+                let row = cursor.advance_to(r).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "plan for matrix {:?} (layer {}) does not cover requested row {r}",
+                        id.kind,
+                        id.layer
+                    )
+                })?;
                 decode_f32_row(row, cols, &mut out);
             }
         }

@@ -471,6 +471,94 @@ impl ShardedPlan {
     }
 }
 
+/// One stream's command span inside a fused plan (fusion working memory).
+#[derive(Clone, Copy, Debug)]
+struct FuseSpan {
+    offset: u64,
+    len: usize,
+    stream: usize,
+    /// Destination byte offset inside the stream's own receipt.
+    dst: usize,
+}
+
+/// Reusable working memory for the allocation-free
+/// [`IoPlanner::fuse_into`] entry point. Lives in the batch driver's
+/// arena so cross-stream fusion allocates nothing at steady state.
+#[derive(Clone, Debug, Default)]
+pub struct FuseScratch {
+    spans: Vec<FuseSpan>,
+}
+
+impl FuseScratch {
+    /// Pre-reserve worst-case span capacity (Σ streams' command counts).
+    pub fn reserve(&mut self, spans: usize) {
+        self.spans.reserve(spans);
+    }
+}
+
+/// One subscriber copy of a fused read: `len` bytes at `src` inside the
+/// fused receipt land at `dst` inside stream `stream`'s own receipt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusedCopy {
+    pub stream: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub len: usize,
+}
+
+/// Several streams' [`ReadPlan`]s fused into one deduplicated device
+/// submission: the union command list is read **once** and the per-stream
+/// `copies` scatter each subscriber's bytes back into its own receipt,
+/// bit-identically to what a solo submission of its plan would have
+/// produced. Built by [`IoPlanner::fuse_into`]; consumed by the batch
+/// decode driver (sync scatter) and by
+/// [`crate::storage::IoTicket::wait_scatter_fused`] (async workers).
+#[derive(Clone, Debug, Default)]
+pub struct FusedPlan {
+    /// Union command list (sorted, disjoint, one submission batch).
+    pub plan: ReadPlan,
+    /// Subscriber scatter map, in flash-offset order.
+    pub copies: Vec<FusedCopy>,
+    /// Number of source streams (including ones with empty plans).
+    pub streams: usize,
+    /// Σ per-stream command bytes — what `streams` solo submissions
+    /// would have transferred.
+    pub solo_bytes: u64,
+}
+
+impl FusedPlan {
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Bytes the fused submission reads once.
+    pub fn fused_bytes(&self) -> u64 {
+        self.plan.cmd_bytes()
+    }
+
+    /// Bytes saved by deduplication: ranges demanded by more than one
+    /// stream are read once instead of once per subscriber. (Fusion
+    /// merges only touching/overlapping extents and never pads, so the
+    /// union is always ≤ the solo total.)
+    pub fn shared_bytes(&self) -> u64 {
+        self.solo_bytes.saturating_sub(self.plan.cmd_bytes())
+    }
+
+    /// Reset in place, reusing all buffer capacity.
+    pub fn clear(&mut self) {
+        self.plan.clear();
+        self.copies.clear();
+        self.streams = 0;
+        self.solo_bytes = 0;
+    }
+
+    /// Pre-reserve worst-case command/copy capacity.
+    pub fn reserve(&mut self, cmds: usize) {
+        self.plan.reserve(cmds, 0);
+        self.copies.reserve(cmds);
+    }
+}
+
 /// Raw per-chunk span prior to coalescing (planner working memory).
 #[derive(Clone, Copy, Debug)]
 struct RawSpan {
@@ -627,6 +715,89 @@ impl IoPlanner {
         self.plan(layout, &[PlanRequest::new(id, chunks.to_vec())], table)
     }
 
+    /// The fusion step: union/dedup several streams' plans into one
+    /// [`FusedPlan`]. Commands that touch or overlap collapse into one
+    /// union command, so a flash range demanded by N subscriber streams
+    /// is read once; `copies` records, for every original command, where
+    /// its bytes sit inside the fused receipt (`src`) and inside the
+    /// owning stream's receipt (`dst`). Scattering the fused receipt
+    /// through `copies` reproduces each subscriber's solo receipt bytes
+    /// bit for bit (same flash ranges, same layout — only the service
+    /// time differs, because the device saw one deep batch).
+    ///
+    /// Allocation-free at steady state: working memory comes from
+    /// `scratch`, `out` reuses its capacity. Stream index = position in
+    /// `plans`; empty plans contribute nothing but keep their index.
+    pub fn fuse_into(
+        &self,
+        plans: &[&ReadPlan],
+        table: Option<&LatencyTable>,
+        scratch: &mut FuseScratch,
+        out: &mut FusedPlan,
+    ) {
+        out.clear();
+        out.streams = plans.len();
+        let spans = &mut scratch.spans;
+        spans.clear();
+        for (stream, plan) in plans.iter().enumerate() {
+            let mut dst = 0usize;
+            for c in plan.cmds() {
+                if c.len > 0 {
+                    spans.push(FuseSpan {
+                        offset: c.offset,
+                        len: c.len,
+                        stream,
+                        dst,
+                    });
+                }
+                dst += c.len;
+            }
+            out.solo_bytes += plan.cmd_bytes();
+        }
+        spans.sort_unstable_by_key(|s| (s.offset, s.stream));
+
+        // Pass 1: union command list (merge touching/overlapping spans;
+        // no padding, so union bytes never exceed the solo total).
+        for s in spans.iter() {
+            let hi = s.offset + s.len as u64;
+            match out.plan.cmds.last_mut() {
+                Some(last) if s.offset <= last.end() => {
+                    let end = last.end().max(hi);
+                    last.len = (end - last.offset) as usize;
+                }
+                _ => out.plan.cmds.push(Extent::new(s.offset, s.len)),
+            }
+        }
+        if !out.plan.cmds.is_empty() {
+            out.plan.batches.push((0, out.plan.cmds.len()));
+        }
+        out.plan.estimated_seconds = table
+            .map(|t| out.plan.cmds.iter().map(|c| t.latency_bytes(c.len)).sum())
+            .unwrap_or(0.0);
+
+        // Pass 2: subscriber copies. Spans and union commands are both in
+        // flash-offset order and no span straddles a union boundary
+        // (merging only ever grows the command a span landed in), so one
+        // forward cursor suffices; a command's receipt offset is the
+        // prefix sum of the final command lengths before it.
+        let mut cmd = 0usize;
+        let mut cmd_off = 0usize;
+        for s in spans.iter() {
+            while out.plan.cmds[cmd].end() < s.offset + s.len as u64 {
+                cmd_off += out.plan.cmds[cmd].len;
+                cmd += 1;
+            }
+            let c = &out.plan.cmds[cmd];
+            debug_assert!(c.offset <= s.offset && s.offset + s.len as u64 <= c.end());
+            out.copies.push(FusedCopy {
+                stream: s.stream,
+                src: cmd_off + (s.offset - c.offset) as usize,
+                dst: s.dst,
+                len: s.len,
+            });
+        }
+    }
+
     /// The shard step: split one logical [`ReadPlan`] into per-member
     /// sub-plans under a pool's [`StripeLayout`]. Every logical command
     /// is cut at stripe boundaries; each piece becomes a device-local
@@ -771,5 +942,111 @@ mod tests {
         plan.validate().unwrap();
         assert!(plan.is_empty());
         assert_eq!(plan.cmd_bytes(), 0);
+    }
+
+    fn fuse(plans: &[&ReadPlan]) -> FusedPlan {
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let mut scratch = FuseScratch::default();
+        let mut out = FusedPlan::default();
+        planner.fuse_into(plans, None, &mut scratch, &mut out);
+        out
+    }
+
+    #[test]
+    fn fuse_single_stream_is_identity() {
+        let l = layout(false);
+        let id = MatrixId::new(0, MatrixKind::Gate);
+        let chunks = vec![Chunk::new(2, 3), Chunk::new(10, 4)];
+        let plan =
+            IoPlanner::new(CoalescePolicy::contiguous()).plan_chunks(&l, id, &chunks, None);
+        let fused = fuse(&[&plan]);
+        assert_eq!(fused.streams, 1);
+        assert_eq!(fused.plan.cmds(), plan.cmds());
+        assert_eq!(fused.fused_bytes(), plan.cmd_bytes());
+        assert_eq!(fused.shared_bytes(), 0);
+        // The copies tile the stream receipt exactly, in order.
+        let mut at = 0usize;
+        for c in &fused.copies {
+            assert_eq!(c.stream, 0);
+            assert_eq!(c.dst, at);
+            assert_eq!(c.src, at);
+            at += c.len;
+        }
+        assert_eq!(at as u64, plan.cmd_bytes());
+    }
+
+    #[test]
+    fn fuse_dedups_overlapping_streams() {
+        let l = layout(false);
+        let id = MatrixId::new(0, MatrixKind::Q);
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        // Stream 0 wants rows [0, 8); stream 1 wants rows [4, 12): the
+        // union is [0, 12) and rows [4, 8) are shared.
+        let a = planner.plan_chunks(&l, id, &[Chunk::new(0, 8)], None);
+        let b = planner.plan_chunks(&l, id, &[Chunk::new(4, 8)], None);
+        let fused = fuse(&[&a, &b]);
+        let rb = l.row_bytes(id) as u64;
+        assert_eq!(fused.streams, 2);
+        assert_eq!(fused.plan.num_cmds(), 1);
+        assert_eq!(fused.fused_bytes(), 12 * rb);
+        assert_eq!(fused.solo_bytes, 16 * rb);
+        assert_eq!(fused.shared_bytes(), 4 * rb);
+        // Subscriber copies cover each stream's whole receipt.
+        for (stream, plan) in [(0usize, &a), (1, &b)] {
+            let covered: usize = fused
+                .copies
+                .iter()
+                .filter(|c| c.stream == stream)
+                .map(|c| c.len)
+                .sum();
+            assert_eq!(covered as u64, plan.cmd_bytes());
+        }
+        // Stream 1's copy starts 4 rows into the fused receipt.
+        let c1 = fused.copies.iter().find(|c| c.stream == 1).unwrap();
+        assert_eq!(c1.src as u64, 4 * rb);
+        assert_eq!(c1.dst, 0);
+    }
+
+    #[test]
+    fn fuse_keeps_disjoint_streams_apart() {
+        let l = layout(false);
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let a = planner.plan_chunks(
+            &l,
+            MatrixId::new(0, MatrixKind::Q),
+            &[Chunk::new(0, 2)],
+            None,
+        );
+        let b = planner.plan_chunks(
+            &l,
+            MatrixId::new(1, MatrixKind::Down),
+            &[Chunk::new(3, 2)],
+            None,
+        );
+        let fused = fuse(&[&a, &b]);
+        assert_eq!(fused.plan.num_cmds(), 2);
+        assert_eq!(fused.shared_bytes(), 0);
+        assert_eq!(fused.fused_bytes(), a.cmd_bytes() + b.cmd_bytes());
+        fused.plan.validate().unwrap();
+    }
+
+    #[test]
+    fn fuse_handles_empty_members() {
+        let l = layout(false);
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let a = planner.plan_chunks(
+            &l,
+            MatrixId::new(0, MatrixKind::Q),
+            &[Chunk::new(0, 2)],
+            None,
+        );
+        let empty = ReadPlan::default();
+        let fused = fuse(&[&empty, &a, &empty]);
+        assert_eq!(fused.streams, 3);
+        assert_eq!(fused.fused_bytes(), a.cmd_bytes());
+        assert!(fused.copies.iter().all(|c| c.stream == 1));
+        let none = fuse(&[&empty, &empty]);
+        assert!(none.is_empty());
+        assert_eq!(none.fused_bytes(), 0);
     }
 }

@@ -247,6 +247,181 @@ impl XlaRuntime {
     }
 }
 
+impl XlaRuntime {
+    /// Multi-stream decode execution: run a decode-stage artifact (t = 1)
+    /// for `streams.len()` streams that **share the weight tile**, with
+    /// their activation rows stacked `[n, bucket]` in `xs`. Outputs land
+    /// stacked `[n, ·]` in stream order.
+    ///
+    /// Matmul rows are computed independently, each in the same f64
+    /// reduction order as the solo path, and attention runs per stream
+    /// over its own KV operands, so every stream's output rows are
+    /// **bit-identical** to `n` solo [`XlaRuntime::execute_into`] calls —
+    /// at any thread count. This is what lets the batch decode driver run
+    /// one kernel dispatch per weight tile instead of one per stream
+    /// without perturbing a single bit of any stream's output.
+    ///
+    /// `weights` are the artifact's shared weight inputs (3 for
+    /// `qkv_decode`, 2 for `gateup_dec`, 1 for `projres_dec`), validated
+    /// against the manifest; per-stream operands (KV caches, residual
+    /// rows) arrive in `streams`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_batched_into(
+        &self,
+        name: &str,
+        xs: &[f32],
+        weights: &[TensorView],
+        streams: &[StreamCtx],
+        threads: usize,
+        scratch: &mut ExecScratch,
+        outs: &mut StageOutputs,
+    ) -> Result<()> {
+        let meta = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let n = streams.len();
+        anyhow::ensure!(n >= 1, "{name}: batched execution needs >= 1 stream");
+        anyhow::ensure!(
+            meta.t == 1,
+            "{name}: batched execution covers decode stages only (t = 1)"
+        );
+        let expected_weights = match meta.kind.as_str() {
+            "qkv_decode" => 3,
+            "gateup_dec" => 2,
+            "projres_dec" => 1,
+            other => anyhow::bail!("{name}: artifact kind {other} has no batched decode path"),
+        };
+        anyhow::ensure!(
+            weights.len() == expected_weights,
+            "{name}: expected {expected_weights} shared weight inputs, got {}",
+            weights.len()
+        );
+        for (i, (w, spec)) in weights.iter().zip(meta.inputs.iter().skip(1)).enumerate() {
+            anyhow::ensure!(
+                w.matches(spec),
+                "{name}: weight {i} shape {:?} != manifest {:?}",
+                w.dims,
+                spec
+            );
+        }
+        let bucket = meta.inputs[0][1];
+        anyhow::ensure!(
+            xs.len() == n * bucket,
+            "{name}: stacked activations must be [n={n}, bucket={bucket}]"
+        );
+        {
+            let mut cache = self.compiled.lock().unwrap();
+            if !cache.contains(name) {
+                cache.insert(name.to_string());
+            }
+        }
+        let model = self
+            .manifest
+            .model(&meta.model)
+            .with_context(|| format!("{name}: unknown model {}", meta.model))?;
+        let threads = threads.max(1);
+        match meta.kind.as_str() {
+            "qkv_decode" => {
+                let (wq, wk, wv) = (&weights[0], &weights[1], &weights[2]);
+                let d = wq.dims[1];
+                scratch.q.clear();
+                scratch.q.resize(n * d, 0.0);
+                matmul_into(xs, n, bucket, wq.data, d, &mut scratch.q, &mut scratch.acc, threads);
+                outs.out[1].clear();
+                outs.out[1].resize(n * d, 0.0);
+                matmul_into(xs, n, bucket, wk.data, d, &mut outs.out[1], &mut scratch.acc, threads);
+                outs.out[2].clear();
+                outs.out[2].resize(n * d, 0.0);
+                matmul_into(xs, n, bucket, wv.data, d, &mut outs.out[2], &mut scratch.acc, threads);
+                outs.out[0].clear();
+                outs.out[0].resize(n * d, 0.0);
+                for (i, st) in streams.iter().enumerate() {
+                    let c = st.kmask.len();
+                    anyhow::ensure!(
+                        st.kc.len() == c * d && st.vc.len() == c * d,
+                        "{name}: stream {i} KV operands must be [c={c}, d={d}]"
+                    );
+                    scratch.keys.clear();
+                    scratch.keys.extend_from_slice(st.kc);
+                    scratch.keys.extend_from_slice(&outs.out[1][i * d..(i + 1) * d]);
+                    scratch.vals.clear();
+                    scratch.vals.extend_from_slice(st.vc);
+                    scratch.vals.extend_from_slice(&outs.out[2][i * d..(i + 1) * d]);
+                    scratch.mask.clear();
+                    scratch.mask.extend_from_slice(st.kmask);
+                    scratch.mask.resize(c + 1, 1.0);
+                    mha_attention_into(
+                        &scratch.q[i * d..(i + 1) * d],
+                        &scratch.keys,
+                        &scratch.vals,
+                        &scratch.mask,
+                        1,
+                        c + 1,
+                        d,
+                        model.nh,
+                        &mut scratch.scores,
+                        &mut outs.out[0][i * d..(i + 1) * d],
+                        threads,
+                    );
+                }
+                outs.dims[0] = [n, d];
+                outs.dims[1] = [n, d];
+                outs.dims[2] = [n, d];
+                outs.n = 3;
+            }
+            "gateup_dec" => {
+                let (wg, wu) = (&weights[0], &weights[1]);
+                let h = wg.dims[1];
+                outs.out[0].clear();
+                outs.out[0].resize(n * h, 0.0);
+                matmul_into(xs, n, bucket, wg.data, h, &mut outs.out[0], &mut scratch.acc, threads);
+                scratch.tmp.clear();
+                scratch.tmp.resize(n * h, 0.0);
+                matmul_into(xs, n, bucket, wu.data, h, &mut scratch.tmp, &mut scratch.acc, threads);
+                swiglu_into(&mut outs.out[0], &scratch.tmp, threads);
+                outs.dims[0] = [n, h];
+                outs.n = 1;
+            }
+            "projres_dec" => {
+                let w = &weights[0];
+                let d = w.dims[1];
+                outs.out[0].clear();
+                outs.out[0].resize(n * d, 0.0);
+                matmul_into(xs, n, bucket, w.data, d, &mut outs.out[0], &mut scratch.acc, threads);
+                for (i, st) in streams.iter().enumerate() {
+                    anyhow::ensure!(
+                        st.residual.len() == d,
+                        "{name}: stream {i} residual must be [d={d}]"
+                    );
+                    for (o, &rv) in outs.out[0][i * d..(i + 1) * d].iter_mut().zip(st.residual) {
+                        *o += rv;
+                    }
+                }
+                outs.dims[0] = [n, d];
+                outs.n = 1;
+            }
+            _ => unreachable!("kind validated above"),
+        }
+        Ok(())
+    }
+}
+
+/// Per-stream operands of one batched decode-stage execution: the weight
+/// tile is shared across the batch, these are the operands that differ
+/// per stream. Unused operands stay empty (`gateup_dec` needs none).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamCtx<'a> {
+    /// Cached keys `[c, d]` (qkv stages only).
+    pub kc: &'a [f32],
+    /// Cached values `[c, d]` (qkv stages only).
+    pub vc: &'a [f32],
+    /// Cache validity mask `[c]` (qkv stages only).
+    pub kmask: &'a [f32],
+    /// Residual row `[d]` (projres stages only).
+    pub residual: &'a [f32],
+}
+
 /// Reusable executor working memory. All kernel temporaries live here so
 /// the steady-state execute path performs no heap allocations (buffers
 /// grow to their high-water mark during warm-up, then stabilize).
@@ -266,6 +441,24 @@ pub struct ExecScratch {
     scores: Vec<f64>,
     /// Second matmul output (up-projection).
     tmp: Vec<f32>,
+}
+
+impl ExecScratch {
+    /// Pre-reserve worst-case kernel temporaries for a `t`-row dispatch
+    /// over hidden dim `d`, MLP dim `h`, `slots` KV cache slots and `nh`
+    /// attention heads. `reserve` is a no-op once capacity suffices, so
+    /// callers that must stay allocation-free (the batch decode arena)
+    /// can bound these buffers up front instead of relying on a warm-up
+    /// dispatch of every shape.
+    pub fn reserve(&mut self, t: usize, d: usize, h: usize, slots: usize, nh: usize) {
+        self.acc.reserve(t * MATMUL_TILE);
+        self.q.reserve(t * d);
+        self.keys.reserve((slots + t) * d);
+        self.vals.reserve((slots + t) * d);
+        self.mask.reserve(slots + t);
+        self.scores.reserve(nh * (slots + t));
+        self.tmp.reserve(t * h);
+    }
 }
 
 /// Reusable stage outputs: up to three output buffers plus their shapes.
@@ -783,6 +976,134 @@ mod tests {
             .unwrap();
         for (a, b) in clean[0].data.iter().zip(&dirty[0].data) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_rows_match_solo_execution() {
+        let rt = rt();
+        let m = rt.manifest.model("tiny").unwrap().clone();
+        let r = m.d_buckets[1];
+        let n = 3usize;
+        let mut rng = crate::rng::Rng::new(11);
+        let mut fill = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32 * 0.2).collect()
+        };
+        let xs = fill(n * r);
+        // --- gateup_dec: stacked rows == per-row solo runs ---
+        let wg = fill(r * m.h);
+        let wu = fill(r * m.h);
+        let name = format!("gateup_dec_tiny_r{r}");
+        let weights = [
+            TensorView::mat(r, m.h, &wg),
+            TensorView::mat(r, m.h, &wu),
+        ];
+        let streams = vec![StreamCtx::default(); n];
+        let mut scratch = ExecScratch::default();
+        let mut outs = StageOutputs::default();
+        rt.execute_batched_into(&name, &xs, &weights, &streams, 2, &mut scratch, &mut outs)
+            .unwrap();
+        assert_eq!(outs.n, 1);
+        assert_eq!(outs.dims[0], [n, m.h]);
+        for i in 0..n {
+            let solo = rt
+                .execute(
+                    &name,
+                    &[
+                        Tensor::new(vec![1, r], xs[i * r..(i + 1) * r].to_vec()),
+                        Tensor::new(vec![r, m.h], wg.clone()),
+                        Tensor::new(vec![r, m.h], wu.clone()),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(
+                &outs.out[0][i * m.h..(i + 1) * m.h],
+                solo[0].data.as_slice(),
+                "gateup stream {i} diverged"
+            );
+        }
+        // --- projres_dec: per-stream residuals ---
+        let w = fill(r * m.d);
+        let residuals: Vec<Vec<f32>> = (0..n).map(|_| fill(m.d)).collect();
+        let name = format!("projres_dec_tiny_r{r}");
+        let weights = [TensorView::mat(r, m.d, &w)];
+        let streams: Vec<StreamCtx> = residuals
+            .iter()
+            .map(|res| StreamCtx {
+                residual: res,
+                ..StreamCtx::default()
+            })
+            .collect();
+        rt.execute_batched_into(&name, &xs, &weights, &streams, 1, &mut scratch, &mut outs)
+            .unwrap();
+        for i in 0..n {
+            let solo = rt
+                .execute(
+                    &name,
+                    &[
+                        Tensor::new(vec![1, r], xs[i * r..(i + 1) * r].to_vec()),
+                        Tensor::new(vec![r, m.d], w.clone()),
+                        Tensor::new(vec![1, m.d], residuals[i].clone()),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(
+                &outs.out[0][i * m.d..(i + 1) * m.d],
+                solo[0].data.as_slice(),
+                "projres stream {i} diverged"
+            );
+        }
+        // --- qkv_decode: per-stream KV caches ---
+        let (wq, wk, wv) = (fill(r * m.d), fill(r * m.d), fill(r * m.d));
+        let kvs: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..n)
+            .map(|i| {
+                let mut mask = vec![0.0f32; m.c];
+                for s in mask.iter_mut().take(i + 1) {
+                    *s = 1.0;
+                }
+                (fill(m.c * m.d), fill(m.c * m.d), mask)
+            })
+            .collect();
+        let name = format!("qkv_decode_tiny_r{r}");
+        let weights = [
+            TensorView::mat(r, m.d, &wq),
+            TensorView::mat(r, m.d, &wk),
+            TensorView::mat(r, m.d, &wv),
+        ];
+        let streams: Vec<StreamCtx> = kvs
+            .iter()
+            .map(|(kc, vc, mask)| StreamCtx {
+                kc,
+                vc,
+                kmask: mask,
+                ..StreamCtx::default()
+            })
+            .collect();
+        rt.execute_batched_into(&name, &xs, &weights, &streams, 4, &mut scratch, &mut outs)
+            .unwrap();
+        assert_eq!(outs.n, 3);
+        for i in 0..n {
+            let solo = rt
+                .execute(
+                    &name,
+                    &[
+                        Tensor::new(vec![1, r], xs[i * r..(i + 1) * r].to_vec()),
+                        Tensor::new(vec![r, m.d], wq.clone()),
+                        Tensor::new(vec![r, m.d], wk.clone()),
+                        Tensor::new(vec![r, m.d], wv.clone()),
+                        Tensor::new(vec![m.c, m.d], kvs[i].0.clone()),
+                        Tensor::new(vec![m.c, m.d], kvs[i].1.clone()),
+                        Tensor::new(vec![m.c], kvs[i].2.clone()),
+                    ],
+                )
+                .unwrap();
+            for k in 0..3 {
+                assert_eq!(
+                    &outs.out[k][i * m.d..(i + 1) * m.d],
+                    solo[k].data.as_slice(),
+                    "qkv output {k} stream {i} diverged"
+                );
+            }
         }
     }
 

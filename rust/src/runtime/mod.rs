@@ -25,8 +25,9 @@ pub use manifest::{ArtifactMeta, Manifest, ModelMeta};
 
 // The host executor's scratch/output types are the engine's calling
 // convention for both backends (the PJRT shim adapts onto them), so they
-// are exported unconditionally.
-pub use exec::{ExecScratch, StageOutputs};
+// are exported unconditionally — as is the per-stream operand bundle of
+// the batched decode kernels.
+pub use exec::{ExecScratch, StageOutputs, StreamCtx};
 
 #[cfg(not(feature = "pjrt"))]
 pub use exec::XlaRuntime;

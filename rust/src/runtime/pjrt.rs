@@ -15,7 +15,7 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{ExecScratch, Manifest, StageOutputs, Tensor, TensorView};
+use crate::runtime::{ExecScratch, Manifest, StageOutputs, StreamCtx, Tensor, TensorView};
 
 fn to_literal(t: &Tensor) -> Result<xla::Literal> {
     let lit = xla::Literal::vec1(&t.data);
@@ -161,6 +161,87 @@ impl XlaRuntime {
                 t.dims.get(1).copied().unwrap_or(1),
             ];
             outs.out[i] = t.data;
+        }
+        Ok(())
+    }
+
+    /// Multi-stream decode execution with the host executor's calling
+    /// convention ([`StreamCtx`] per stream, activations stacked
+    /// `[n, bucket]`, outputs stacked in stream order). The fixed-shape
+    /// HLO artifacts have no `[n, bucket]` entry point, so this shim runs
+    /// the solo artifact once per stream — trivially bit-identical to the
+    /// solo path, which is the batched kernels' contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_batched_into(
+        &self,
+        name: &str,
+        xs: &[f32],
+        weights: &[TensorView],
+        streams: &[StreamCtx],
+        threads: usize,
+        scratch: &mut ExecScratch,
+        outs: &mut StageOutputs,
+    ) -> Result<()> {
+        let meta = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("unknown artifact {name}"))?
+            .clone();
+        let n = streams.len();
+        anyhow::ensure!(n >= 1, "{name}: batched execution needs >= 1 stream");
+        anyhow::ensure!(
+            meta.t == 1,
+            "{name}: batched execution covers decode stages only (t = 1)"
+        );
+        let bucket = meta
+            .inputs
+            .first()
+            .and_then(|s| s.get(1))
+            .copied()
+            .with_context(|| format!("{name}: malformed activation input spec"))?;
+        anyhow::ensure!(
+            xs.len() == n * bucket,
+            "{name}: stacked activations must be [n={n}, bucket={bucket}]"
+        );
+        let mut solo = StageOutputs::default();
+        for (i, st) in streams.iter().enumerate() {
+            let mut inputs: Vec<TensorView> = Vec::with_capacity(meta.inputs.len());
+            inputs.push(TensorView::mat(1, bucket, &xs[i * bucket..(i + 1) * bucket]));
+            inputs.extend_from_slice(weights);
+            match meta.kind.as_str() {
+                "qkv_decode" => {
+                    let d = weights
+                        .first()
+                        .map(|w| w.dims[1])
+                        .with_context(|| format!("{name}: missing weight inputs"))?;
+                    let c = st.kmask.len();
+                    inputs.push(TensorView::mat(c, d, st.kc));
+                    inputs.push(TensorView::mat(c, d, st.vc));
+                    inputs.push(TensorView::vec1(c, st.kmask));
+                }
+                "projres_dec" => {
+                    let d = weights
+                        .first()
+                        .map(|w| w.dims[1])
+                        .with_context(|| format!("{name}: missing weight inputs"))?;
+                    inputs.push(TensorView::mat(1, d, st.residual));
+                }
+                "gateup_dec" => {}
+                other => {
+                    anyhow::bail!("{name}: artifact kind {other} has no batched decode path")
+                }
+            }
+            self.execute_into(name, &inputs, threads, scratch, &mut solo)?;
+            if i == 0 {
+                outs.n = solo.n;
+                for k in 0..solo.n {
+                    outs.out[k].clear();
+                    outs.dims[k] = [n, solo.dims[k][1]];
+                }
+            }
+            for k in 0..solo.n {
+                outs.out[k].extend_from_slice(&solo.out[k]);
+            }
         }
         Ok(())
     }

@@ -37,7 +37,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::plan::ShardedPlan;
+use crate::plan::{FusedPlan, ShardedPlan};
 use crate::storage::{Extent, FlashDevice, PoolStats};
 
 /// Reusable buffers of one member job (recycled through the free list).
@@ -136,6 +136,78 @@ impl IoTicket {
             // Short critical section per buffer: other sessions' submits
             // pop this free list and must not wait out a whole-layer
             // scatter.
+            self.shared.free.lock().unwrap().push(bufs);
+        }
+        Ok(max)
+    }
+
+    /// Fused variant of [`IoTicket::wait_scatter`]: the ticket's
+    /// submission was the *union* plan of a [`FusedPlan`], and its bytes
+    /// scatter to **N subscriber receipts** at once — each member piece
+    /// covers a range of the fused logical receipt, and every subscriber
+    /// copy overlapping that range gets its slice written into
+    /// `outs[copy.stream]` at the copy's destination offset. Shared
+    /// ranges are read once from flash and delivered to every
+    /// subscriber; each subscriber's bytes end up bit-identical to a
+    /// solo submission of its own plan. Relies on `fused.copies` being
+    /// sorted by `src` ([`crate::plan::IoPlanner::fuse_into`] guarantees
+    /// this — copies are emitted in flash order) to join pieces and
+    /// copies with one forward cursor. Per-member bytes/service land in
+    /// `stats` (indexed by member; caller resets); returns the max
+    /// member service time.
+    pub fn wait_scatter_fused(
+        self,
+        fused: &FusedPlan,
+        outs: &mut [&mut [u8]],
+        stats: &mut PoolStats,
+    ) -> anyhow::Result<Duration> {
+        let mut done = self.wait_done();
+        if let Some(e) = done.error.take() {
+            let mut free = self.shared.free.lock().unwrap();
+            for (_, bufs, _) in done.jobs.drain(..) {
+                free.push(bufs);
+            }
+            return Err(e);
+        }
+        let mut max = Duration::ZERO;
+        for (m, bufs, service) in done.jobs.drain(..) {
+            // One member's pieces arrive in ascending fused-receipt
+            // order, and `copies` is sorted by `src` (fusion emits it in
+            // flash order), so a forward cursor joins the two without
+            // rescanning: copies that end before this piece can never
+            // match a later piece of the same member.
+            let mut from = 0usize;
+            let mut at = 0usize;
+            for (e, &dst) in bufs.cmds.iter().zip(&bufs.dsts) {
+                // This piece holds fused-receipt bytes [dst, dst+len);
+                // hand every overlapping subscriber copy its slice.
+                let piece = &bufs.staging[at..at + e.len];
+                let (p_lo, p_hi) = (dst, dst + e.len);
+                while from < fused.copies.len() {
+                    let c = &fused.copies[from];
+                    if c.src + c.len > p_lo {
+                        break;
+                    }
+                    from += 1;
+                }
+                for c in &fused.copies[from..] {
+                    if c.src >= p_hi {
+                        break;
+                    }
+                    let lo = c.src.max(p_lo);
+                    let hi = (c.src + c.len).min(p_hi);
+                    if lo < hi {
+                        outs[c.stream][c.dst + (lo - c.src)..c.dst + (hi - c.src)]
+                            .copy_from_slice(&piece[lo - p_lo..hi - p_lo]);
+                    }
+                }
+                at += e.len;
+            }
+            if m < stats.bytes.len() {
+                stats.bytes[m] += at as u64;
+                stats.service[m] += service;
+            }
+            max = max.max(service);
             self.shared.free.lock().unwrap().push(bufs);
         }
         Ok(max)
@@ -377,6 +449,54 @@ mod tests {
         assert_eq!(&out[16..24], &img0[300..308]);
         assert_eq!(stats.bytes, vec![16, 8]);
         assert!(max >= stats.service[0].min(stats.service[1]));
+        assert_eq!(max, stats.max_service());
+    }
+
+    #[test]
+    fn fused_ticket_scatters_to_n_receipts() {
+        use crate::plan::{FusedCopy, FusedPlan};
+        let img0: Vec<u8> = (0..=255u8).cycle().take(1024).collect();
+        let img1: Vec<u8> = (0..=255u8).rev().cycle().take(1024).collect();
+        let queue = AsyncIoQueue::start(members_with_images(vec![img0.clone(), img1.clone()]), 2);
+        // Fused logical receipt: [0, 16) from member 0, [16, 24) from
+        // member 1. Stream 0 subscribes to [0, 16); stream 1 subscribes
+        // to [8, 24) — the shared range [8, 16) is read once.
+        let sp = sharded(
+            &[(0, Extent::new(100, 16), 0), (1, Extent::new(50, 8), 16)],
+            2,
+        );
+        let fused = FusedPlan {
+            copies: vec![
+                FusedCopy {
+                    stream: 0,
+                    src: 0,
+                    dst: 0,
+                    len: 16,
+                },
+                FusedCopy {
+                    stream: 1,
+                    src: 8,
+                    dst: 0,
+                    len: 16,
+                },
+            ],
+            streams: 2,
+            solo_bytes: 32,
+            ..FusedPlan::default()
+        };
+        let ticket = queue.submit(&sp);
+        let mut out0 = vec![0u8; 16];
+        let mut out1 = vec![0u8; 16];
+        let mut stats = PoolStats::default();
+        stats.reset(2);
+        let mut outs: [&mut [u8]; 2] = [&mut out0, &mut out1];
+        let max = ticket
+            .wait_scatter_fused(&fused, &mut outs, &mut stats)
+            .unwrap();
+        assert_eq!(&out0[..], &img0[100..116]);
+        assert_eq!(&out1[..8], &img0[108..116]);
+        assert_eq!(&out1[8..], &img1[50..58]);
+        assert_eq!(stats.bytes, vec![16, 8]);
         assert_eq!(max, stats.max_service());
     }
 

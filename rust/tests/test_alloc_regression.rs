@@ -15,7 +15,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-use neuron_chunking::coordinator::{Engine, Policy};
+use neuron_chunking::coordinator::{DecodeRequest, Engine, Policy, StageStats};
 use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::workload::FrameTrace;
 
@@ -104,6 +104,69 @@ fn decode_allocs(
     ALLOCS.load(Ordering::SeqCst)
 }
 
+/// Build an engine with two sessions, warm both plus the batch arena,
+/// then count heap allocations across `steps` fused batched decodes.
+/// Steady-state batched decoding must be allocation-free too: the batch
+/// arena is pooled in the engine core, fusion scratch and the fused
+/// plan/receipt reuse capacity, and all batch bookkeeping is
+/// stack-allocated.
+fn batched_decode_allocs(policy: Policy, sparsity: f64, devices: usize, steps: usize) -> u64 {
+    let engine = Engine::builder("tiny")
+        .policy(policy)
+        .sparsity(sparsity)
+        .prefetch(true)
+        .exec_threads(1)
+        .devices(devices)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
+    engine.warmup().unwrap();
+    let spec = engine.spec();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 2, 7);
+    let s0 = engine.new_session();
+    let s1 = engine.new_session();
+    let mut out = Vec::new();
+    s0.append_frame_into(&trace.frame(0), &mut out).unwrap();
+    s1.append_frame_into(&trace.frame(1), &mut out).unwrap();
+    let t0 = vec![0.08f32; spec.d];
+    let t1 = vec![-0.04f32; spec.d];
+    let mut outs: Vec<Vec<f32>> = vec![Vec::new(), Vec::new()];
+    let mut stats = vec![StageStats::default(); 2];
+    // Two warm-up batches grow the pooled batch arena and both members'
+    // buffers to their high-water marks.
+    for _ in 0..2 {
+        let reqs = [
+            DecodeRequest {
+                session: &s0,
+                token: &t0,
+            },
+            DecodeRequest {
+                session: &s1,
+                token: &t1,
+            },
+        ];
+        engine.decode_batch_into(&reqs, &mut outs, &mut stats).unwrap();
+    }
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..steps {
+        let reqs = [
+            DecodeRequest {
+                session: &s0,
+                token: &t0,
+            },
+            DecodeRequest {
+                session: &s1,
+                token: &t1,
+            },
+        ];
+        engine.decode_batch_into(&reqs, &mut outs, &mut stats).unwrap();
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
 #[test]
 fn steady_state_decode_is_allocation_free() {
     // One test body: the counting allocator is process-global state.
@@ -167,6 +230,28 @@ fn steady_state_decode_is_allocation_free() {
         assert_eq!(
             allocs, 0,
             "[{label}] decode_step allocated {allocs} times across 8 steady-state steps"
+        );
+    }
+    // Batched decode rows: the fused cross-stream path (plan fusion,
+    // shared submission + scatter, cohort kernels) must also be
+    // allocation-free at steady state, on single devices and pools.
+    let batched: Vec<(&str, Policy, f64, usize)> = vec![
+        ("batch topk", Policy::TopK, 0.5, 1),
+        ("batch dense pool4", Policy::Dense, 0.0, 4),
+        (
+            "batch chunking",
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            },
+            0.5,
+            1,
+        ),
+    ];
+    for (label, policy, sparsity, devices) in batched {
+        let allocs = batched_decode_allocs(policy, sparsity, devices, 8);
+        assert_eq!(
+            allocs, 0,
+            "[{label}] decode_batch allocated {allocs} times across 8 steady-state batches"
         );
     }
 }

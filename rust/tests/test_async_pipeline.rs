@@ -9,7 +9,7 @@
 
 use std::path::PathBuf;
 
-use neuron_chunking::coordinator::{Engine, Policy};
+use neuron_chunking::coordinator::{DecodeRequest, Engine, Policy};
 use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::workload::FrameTrace;
 
@@ -135,6 +135,110 @@ fn file_backed_async_matches_simulated_sync() {
     assert_eq!(base_out, out, "sync file-backed outputs diverged");
     assert_eq!(base_sel, sel, "sync file-backed selections diverged");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reset_mid_pipeline_discards_stale_prefetch_state() {
+    // Satellite regression: `Session::reset` drains every in-flight /
+    // pending prefetch slot (`drain_stale`), so a reset between requests
+    // can never scatter stale bytes into the next one. Exercised on the
+    // wall-clock file-backed async pipeline (real tickets) by comparing
+    // a reset-then-replay session against a fresh session bit for bit.
+    let dir = std::env::temp_dir().join(format!("nc_async_reset_{}", std::process::id()));
+    let engine = Engine::builder("tiny")
+        .policy(Policy::TopK)
+        .sparsity(0.4)
+        .devices(2)
+        .async_io(true)
+        .io_queue_depth(2)
+        .file_backed(&dir)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
+    let spec = engine.spec();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 11);
+    let token = vec![0.03f32; spec.d];
+    // Run a session mid-conversation, then reset it with prefetch slots
+    // populated for the next call.
+    let recycled = engine.new_session();
+    recycled.append_frame(&trace.frame(0)).unwrap();
+    recycled.decode_step(&token).unwrap();
+    recycled.reset();
+    assert_eq!(recycled.kv_tokens(), 0, "reset must clear KV state");
+    // Replay a different history: outputs must match a fresh session
+    // exactly — any stale prefetched bytes would perturb them.
+    let fresh = engine.new_session();
+    let (y_fresh, s_fresh) = fresh.append_frame(&trace.frame(2)).unwrap();
+    let (y_recycled, s_recycled) = recycled.append_frame(&trace.frame(2)).unwrap();
+    assert_eq!(y_fresh, y_recycled, "reset session served stale state");
+    assert_eq!(s_fresh.bytes_loaded, s_recycled.bytes_loaded);
+    assert_eq!(
+        s_recycled.prefetch_hits, 0,
+        "reset must discard the prefetch buffers"
+    );
+    let (d_fresh, _) = fresh.decode_step(&token).unwrap();
+    let (d_recycled, _) = recycled.decode_step(&token).unwrap();
+    assert_eq!(d_fresh, d_recycled);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn batched_decode_matches_solo_on_wall_clock_async_pool() {
+    // The batch driver's fused reads route through the async I/O workers
+    // on wall-clock pools (one fused ticket scattering to N subscriber
+    // receipts): outputs and selections must still be bit-identical to
+    // solo decoding over the same files.
+    let root = std::env::temp_dir().join(format!("nc_async_batch_{}", std::process::id()));
+    let mk = |sub: &str| {
+        Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.4)
+            .devices(2)
+            .async_io(true)
+            .io_queue_depth(2)
+            .file_backed(&root.join(sub))
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap()
+    };
+    let trace = FrameTrace::new(64, 8, 4, 11);
+    let tokens: Vec<Vec<f32>> = (0..2).map(|i| vec![0.02 * (i as f32 + 1.0); 64]).collect();
+    // Solo reference.
+    let solo_engine = mk("solo");
+    let solo: Vec<(Vec<f32>, u64, f64)> = (0..2)
+        .map(|i| {
+            let s = solo_engine.new_session();
+            s.append_frame(&trace.frame(i)).unwrap();
+            let (y, st) = s.decode_step(&tokens[i]).unwrap();
+            (y, st.bytes_loaded, st.importance_kept)
+        })
+        .collect();
+    // Fused batch over the same histories.
+    let batch_engine = mk("batch");
+    let sessions: Vec<_> = (0..2)
+        .map(|i| {
+            let s = batch_engine.new_session();
+            s.append_frame(&trace.frame(i)).unwrap();
+            s
+        })
+        .collect();
+    let reqs: Vec<DecodeRequest> = sessions
+        .iter()
+        .zip(&tokens)
+        .map(|(s, t)| DecodeRequest {
+            session: s,
+            token: t,
+        })
+        .collect();
+    let results = batch_engine.decode_batch(&reqs).unwrap();
+    for (i, ((y, st), (want_y, want_b, want_imp))) in
+        results.into_iter().zip(solo).enumerate()
+    {
+        assert_eq!(y, want_y, "stream {i} outputs diverged on async pool");
+        assert_eq!(st.bytes_loaded, want_b, "stream {i} bytes diverged");
+        assert_eq!(st.importance_kept, want_imp, "stream {i} selections diverged");
+    }
+    std::fs::remove_dir_all(&root).ok();
 }
 
 #[test]

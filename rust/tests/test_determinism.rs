@@ -10,7 +10,7 @@
 
 use std::path::PathBuf;
 
-use neuron_chunking::coordinator::{Engine, Policy};
+use neuron_chunking::coordinator::{DecodeRequest, Engine, Policy, Session};
 use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::workload::FrameTrace;
 
@@ -127,6 +127,131 @@ fn tiny_outputs_bit_identical_across_pool_sizes() {
                 base_sel, sel,
                 "policy={policy:?} devices={devices} selections diverged"
             );
+        }
+    }
+}
+
+/// Per-stream observation of one decode: output plus the exact
+/// (bytes_loaded, importance_kept) pair — equal pairs mean the
+/// selected-chunk sets were identical.
+type StreamTrace = Vec<(Vec<f32>, u64, f64)>;
+
+fn batch_engine(policy: Policy, sparsity: f64, async_io: bool, devices: usize) -> Engine {
+    Engine::builder("tiny")
+        .policy(policy)
+        .sparsity(sparsity)
+        .prefetch(true)
+        .exec_threads(1)
+        .devices(devices)
+        .async_io(async_io)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap()
+}
+
+/// Four streams with distinct histories and tokens; three decode rounds.
+fn batch_fixture(engine: &Engine) -> (Vec<Session>, Vec<Vec<f32>>) {
+    let spec = engine.spec();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 8, 11);
+    let sessions: Vec<Session> = (0..4)
+        .map(|i| {
+            let s = engine.new_session();
+            s.append_frame(&trace.frame(i)).unwrap();
+            s
+        })
+        .collect();
+    let tokens: Vec<Vec<f32>> = (0..4)
+        .map(|i| vec![0.01 * (i as f32 + 1.0); spec.d])
+        .collect();
+    (sessions, tokens)
+}
+
+/// Solo reference: each stream decodes alone via `decode_step`.
+fn run_batch_solo(
+    policy: Policy,
+    sparsity: f64,
+    async_io: bool,
+    devices: usize,
+) -> Vec<StreamTrace> {
+    let engine = batch_engine(policy, sparsity, async_io, devices);
+    let (sessions, tokens) = batch_fixture(&engine);
+    let mut out: Vec<StreamTrace> = (0..4).map(|_| Vec::new()).collect();
+    for _round in 0..3 {
+        for i in 0..4 {
+            let (y, st) = sessions[i].decode_step(&tokens[i]).unwrap();
+            out[i].push((y, st.bytes_loaded, st.importance_kept));
+        }
+    }
+    out
+}
+
+/// Batched: the same four streams decode in fused groups of `batch`.
+fn run_batch_grouped(
+    policy: Policy,
+    sparsity: f64,
+    async_io: bool,
+    devices: usize,
+    batch: usize,
+) -> Vec<StreamTrace> {
+    let engine = batch_engine(policy, sparsity, async_io, devices);
+    let (sessions, tokens) = batch_fixture(&engine);
+    let mut out: Vec<StreamTrace> = (0..4).map(|_| Vec::new()).collect();
+    for _round in 0..3 {
+        let mut start = 0usize;
+        while start < 4 {
+            let end = (start + batch).min(4);
+            let reqs: Vec<DecodeRequest> = (start..end)
+                .map(|i| DecodeRequest {
+                    session: &sessions[i],
+                    token: &tokens[i],
+                })
+                .collect();
+            let results = engine.decode_batch(&reqs).unwrap();
+            for (i, (y, st)) in (start..end).zip(results) {
+                out[i].push((y, st.bytes_loaded, st.importance_kept));
+            }
+            start = end;
+        }
+    }
+    out
+}
+
+#[test]
+fn batched_decode_bit_identical_across_batch_compositions() {
+    // The tentpole invariant: a stream's outputs and selected-chunk sets
+    // are bit-identical whether it decodes solo or inside any batch
+    // composition — per policy, across batch sizes {1, 2, 4}.
+    for (policy, sparsity) in policies() {
+        let solo = run_batch_solo(policy.clone(), sparsity, false, 1);
+        for batch in [1usize, 2, 4] {
+            let got = run_batch_grouped(policy.clone(), sparsity, false, 1, batch);
+            assert_eq!(
+                solo, got,
+                "policy={policy:?} batch={batch} diverged from solo"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_decode_bit_identical_across_async_and_pool_sizes() {
+    // The same invariant across the async I/O pipeline toggle and pool
+    // sizes {1, 4}: batching must compose with every I/O topology.
+    let base = run_batch_solo(Policy::TopK, 0.5, false, 1);
+    for async_io in [false, true] {
+        for devices in [1usize, 4] {
+            let solo = run_batch_solo(Policy::TopK, 0.5, async_io, devices);
+            assert_eq!(
+                base, solo,
+                "solo async={async_io} devices={devices} diverged"
+            );
+            for batch in [2usize, 4] {
+                let got = run_batch_grouped(Policy::TopK, 0.5, async_io, devices, batch);
+                assert_eq!(
+                    base, got,
+                    "batched async={async_io} devices={devices} batch={batch} diverged"
+                );
+            }
         }
     }
 }

@@ -5,7 +5,8 @@
 use neuron_chunking::latency::chunks_from_mask;
 use neuron_chunking::model::{FlashLayout, MatrixId, ModelSpec};
 use neuron_chunking::plan::{
-    CoalescePolicy, IoPlanner, PlanReceipt, PlanRequest, PlannedRead, ShardedPlan,
+    CoalescePolicy, FuseScratch, FusedPlan, IoPlanner, PlanReceipt, PlanRequest, PlannedRead,
+    ReadPlan, ShardedPlan,
 };
 use neuron_chunking::proptest::check;
 use neuron_chunking::storage::{
@@ -360,6 +361,97 @@ fn prop_sharded_pool_submit_matches_single_device() {
                     stats.total_bytes(),
                     plan.cmd_bytes()
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_plan_covers_union_and_scatters_bit_identically() {
+    // Fusion round-trip identity: random per-stream plans × {1, 2, 4}
+    // streams → the fused command list covers exactly the union of the
+    // streams' byte ranges (shared ranges once), and scattering one
+    // fused submission through the subscriber copies reproduces every
+    // stream's solo receipt bytes bit for bit.
+    check("fusion round-trip identity", 12, |rng| {
+        let spec = ModelSpec::tiny();
+        let store = neuron_chunking::model::WeightStore::new(spec.clone(), false, 13);
+        let image = store.build_image();
+        let dev = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 3);
+        let planner = IoPlanner::new(if rng.bool(0.5) {
+            CoalescePolicy::contiguous()
+        } else {
+            CoalescePolicy::passthrough()
+        });
+        for streams in [1usize, 2, 4] {
+            let plans: Vec<ReadPlan> = (0..streams)
+                .map(|_| planner.plan(&store.layout, &arb_requests(rng, &spec), None))
+                .collect();
+            let solo: Vec<PlanReceipt> = plans
+                .iter()
+                .map(|p| dev.submit(p))
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+            let refs: Vec<&ReadPlan> = plans.iter().collect();
+            let mut scratch = FuseScratch::default();
+            let mut fused = FusedPlan::default();
+            planner.fuse_into(&refs, None, &mut scratch, &mut fused);
+            fused.plan.validate().map_err(|e| e.to_string())?;
+            // Byte coverage equals the union of the stream extents
+            // (touching ranges merged, like the fusion step itself).
+            let mut spans: Vec<(u64, u64)> = plans
+                .iter()
+                .flat_map(|p| p.cmds().iter().map(|c| (c.offset, c.end())))
+                .collect();
+            spans.sort_unstable();
+            let mut union: Vec<(u64, u64)> = Vec::new();
+            for (lo, hi) in spans {
+                match union.last_mut() {
+                    Some(last) if lo <= last.1 => last.1 = last.1.max(hi),
+                    _ => union.push((lo, hi)),
+                }
+            }
+            let got: Vec<(u64, u64)> = fused
+                .plan
+                .cmds()
+                .iter()
+                .map(|c| (c.offset, c.end()))
+                .collect();
+            if got != union {
+                return Err(format!(
+                    "fused cover {got:?} != union {union:?} (n={streams})"
+                ));
+            }
+            let union_bytes: u64 = union.iter().map(|(lo, hi)| hi - lo).sum();
+            if fused.fused_bytes() != union_bytes {
+                return Err(format!(
+                    "fused bytes {} != union size {union_bytes}",
+                    fused.fused_bytes()
+                ));
+            }
+            let solo_total: u64 = plans.iter().map(|p| p.cmd_bytes()).sum();
+            if fused.shared_bytes() != solo_total - union_bytes {
+                return Err(format!(
+                    "shared accounting {} != {} (n={streams})",
+                    fused.shared_bytes(),
+                    solo_total - union_bytes
+                ));
+            }
+            // One fused submission scattered through the subscriber
+            // copies == each stream's solo submission, bit for bit.
+            let fused_receipt = dev.submit(&fused.plan).map_err(|e| e.to_string())?;
+            for (i, want) in solo.iter().enumerate() {
+                let mut got = vec![0u8; want.bytes.len()];
+                for c in fused.copies.iter().filter(|c| c.stream == i) {
+                    got[c.dst..c.dst + c.len]
+                        .copy_from_slice(&fused_receipt.bytes[c.src..c.src + c.len]);
+                }
+                if got != want.bytes {
+                    return Err(format!(
+                        "stream {i} scattered bytes differ from solo (n={streams})"
+                    ));
+                }
             }
         }
         Ok(())
