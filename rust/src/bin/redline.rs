@@ -1,0 +1,130 @@
+//! `redline` — the serving load harness.
+//!
+//! ```text
+//! redline run     --addr HOST:PORT [--rps R] [--duration S] [--streams N]
+//!                 [--connections C] [--mix P:D] [--steps K] [--burst B]
+//!                 [--out FILE]
+//! redline compare BASELINE.json CANDIDATE.json [--pct N]
+//! ```
+//!
+//! `run` drives a live `repro serve` instance open-loop at the target
+//! RPS, prints a latency/throughput table, and writes a JSON run file
+//! (default `BENCH_serving.json`) whose entries the CI bench gate
+//! consumes directly. `compare` diffs two run files and exits 1 when any
+//! matched entry regressed past the threshold (default 10%) — the same
+//! verdict rules the gate applies, so a clean local compare means a
+//! clean CI gate.
+
+use std::process::ExitCode;
+use std::time::Duration;
+
+use neuron_chunking::serving::args::{parse_mix, ArgError, ArgParser};
+use neuron_chunking::serving::loadgen::{self, compare_files, RunConfig};
+
+const USAGE: &str = "usage:
+  redline run     --addr HOST:PORT [--rps R] [--duration S] [--streams N]
+                  [--connections C] [--mix P:D] [--steps K] [--burst B] [--out FILE]
+  redline compare BASELINE.json CANDIDATE.json [--pct N]";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let result = match argv.first().map(String::as_str) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("compare") => cmd_compare(&argv[1..]),
+        _ => {
+            eprintln!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("redline: {e}");
+            eprintln!("{USAGE}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<ExitCode, ArgError> {
+    let p = ArgParser::new(args);
+    let mix = match p.raw("--mix")? {
+        Some(s) => parse_mix(s)?,
+        None => (1, 8),
+    };
+    let duration_s: f64 = p.parsed_or("--duration", 10.0)?;
+    let cfg = RunConfig {
+        addr: p.string_or("--addr", "127.0.0.1:8321")?,
+        rps: p.parsed_or("--rps", 20.0)?,
+        burst: p.parsed_or("--burst", 4usize)?,
+        duration: Duration::from_secs_f64(duration_s.max(0.1)),
+        streams: p.parsed_or("--streams", 4usize)?,
+        connections: p.parsed_or("--connections", 4usize)?,
+        mix,
+        steps: p.parsed_or("--steps", 4usize)?,
+    };
+    let out_path = p.string_or("--out", "BENCH_serving.json")?;
+
+    let report = match loadgen::run(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("redline run failed: {e}");
+            return Ok(ExitCode::FAILURE);
+        }
+    };
+    print!("{}", report.render_table());
+    if let Err(e) = std::fs::write(&out_path, report.to_json()) {
+        eprintln!("cannot write {out_path}: {e}");
+        return Ok(ExitCode::FAILURE);
+    }
+    println!("run file written to {out_path}");
+    let requests = report.decode.requests + report.append.requests;
+    let errors = report.decode.errors + report.append.errors;
+    if requests == 0 || errors == requests {
+        eprintln!("redline: no successful requests ({errors}/{requests} errored)");
+        return Ok(ExitCode::FAILURE);
+    }
+    Ok(ExitCode::SUCCESS)
+}
+
+fn cmd_compare(args: &[String]) -> Result<ExitCode, ArgError> {
+    let p = ArgParser::new(args);
+    let pct: f64 = p.parsed_or("--pct", 10.0)?;
+    let positional: Vec<&String> = args
+        .iter()
+        .enumerate()
+        .filter(|(i, a)| {
+            !a.starts_with("--") && (*i == 0 || args[i - 1] != "--pct")
+        })
+        .map(|(_, a)| a)
+        .collect();
+    let [baseline_path, candidate_path] = positional.as_slice() else {
+        return Err(ArgError {
+            flag: "compare".to_string(),
+            reason: "needs exactly two run files".to_string(),
+        });
+    };
+    let read = |path: &str| {
+        std::fs::read_to_string(path).map_err(|e| ArgError {
+            flag: path.to_string(),
+            reason: format!("cannot read: {e}"),
+        })
+    };
+    let baseline = read(baseline_path)?;
+    let candidate = read(candidate_path)?;
+    match compare_files(&baseline, &candidate, pct) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.regressions() > 0 {
+                eprintln!("redline compare: REGRESSED vs {baseline_path}");
+                Ok(ExitCode::FAILURE)
+            } else {
+                Ok(ExitCode::SUCCESS)
+            }
+        }
+        Err(e) => {
+            eprintln!("redline compare failed: {e}");
+            Ok(ExitCode::FAILURE)
+        }
+    }
+}

@@ -467,6 +467,16 @@ impl Engine {
         self.core.read().unwrap().async_io
     }
 
+    /// Whether next-layer prefetch is enabled.
+    pub fn prefetch(&self) -> bool {
+        self.core.read().unwrap().prefetch
+    }
+
+    /// Executor kernel worker-thread count.
+    pub fn exec_threads(&self) -> usize {
+        self.core.read().unwrap().exec_threads
+    }
+
     /// Configured bound on in-flight whole-layer prefetches.
     pub fn io_queue_depth(&self) -> usize {
         self.core.read().unwrap().io_queue_depth

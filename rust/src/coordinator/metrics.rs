@@ -71,6 +71,18 @@ impl Metrics {
         self.totals.iter().map(|(k, v)| (k.as_str(), *v))
     }
 
+    /// All `(stage, count)` pairs (the `/metrics` exposition walks these;
+    /// count keys are a subset of the duration keys).
+    pub fn counts_iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counts.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// All `(stage, bytes)` pairs — byte counters are keyed independently
+    /// of durations (e.g. `batch.occupancy` has bytes but no duration).
+    pub fn bytes_iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.bytes.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
     /// Merge another metrics block into this one.
     pub fn merge(&mut self, other: &Metrics) {
         for (k, v) in &other.totals {

@@ -177,7 +177,10 @@ impl BatchCfg {
 pub struct Scheduler {
     shared: Arc<Shared>,
     cfg: SchedulerConfig,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Drained exactly once: [`Scheduler::shutdown`] is idempotent (the
+    /// network server's signal path and `Drop` may both call it).
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    worker_count: usize,
     engine: Engine,
 }
 
@@ -198,7 +201,8 @@ impl Scheduler {
             window: cfg.batch_window,
             max_batch: cfg.max_batch.min(MAX_DECODE_BATCH),
         };
-        let workers = (0..cfg.workers.max(1))
+        let worker_count = cfg.workers.max(1);
+        let workers = (0..worker_count)
             .map(|_| {
                 let shared = shared.clone();
                 let engine = engine.clone();
@@ -208,7 +212,8 @@ impl Scheduler {
         Self {
             shared,
             cfg,
-            workers,
+            workers: Mutex::new(workers),
+            worker_count,
             engine,
         }
     }
@@ -258,13 +263,24 @@ impl Scheduler {
 
     /// Number of worker threads serving the queues.
     pub fn workers(&self) -> usize {
-        self.workers.len()
+        self.worker_count
     }
 
-    /// Drain queued work and stop the workers.
-    pub fn shutdown(mut self) {
+    /// Configured stream-index bound (requests at or beyond it are
+    /// rejected at submit).
+    pub fn max_streams(&self) -> usize {
+        self.cfg.max_streams
+    }
+
+    /// Drain queued work and stop the workers. Idempotent: a second call
+    /// (or the implicit one from `Drop`) finds the worker pool already
+    /// drained and returns immediately — the network server's shutdown
+    /// path and `Drop` may both get here without panicking or
+    /// deadlocking.
+    pub fn shutdown(&self) {
         self.stop_inner();
-        for w in self.workers.drain(..) {
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -277,10 +293,7 @@ impl Scheduler {
 
 impl Drop for Scheduler {
     fn drop(&mut self) {
-        self.stop_inner();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -751,6 +764,33 @@ mod tests {
         // The drain semantics deliver everything that was queued before
         // the stop flag was observed.
         assert!(completed >= 1, "at least the in-flight job completes");
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        // Satellite regression: the network server's signal path and
+        // `Drop` may both call shutdown — the second call (and the
+        // implicit Drop after both) must neither panic nor deadlock,
+        // and submits after shutdown must be clean errors.
+        let s = spawn_tiny_cfg(serial_cfg());
+        let rx = s
+            .submit(Request {
+                stream: 0,
+                kind: RequestKind::AppendFrame(tiny_frame()),
+            })
+            .unwrap();
+        rx.recv().unwrap().output.unwrap();
+        s.shutdown();
+        s.shutdown();
+        assert!(
+            s.submit(Request {
+                stream: 0,
+                kind: RequestKind::AppendFrame(tiny_frame()),
+            })
+            .is_err(),
+            "submit after shutdown must be rejected"
+        );
+        drop(s); // third stop via Drop — still clean
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod reorder;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serving;
 pub mod sparsify;
 pub mod stats;
 pub mod storage;

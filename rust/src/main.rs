@@ -14,6 +14,7 @@ use std::path::PathBuf;
 
 use neuron_chunking::coordinator::{Engine, Policy};
 use neuron_chunking::report::{fmt_bw, fmt_secs, Table};
+use neuron_chunking::serving::{ArgError, ArgParser};
 use neuron_chunking::stats;
 use neuron_chunking::storage::{
     DeviceProfile, Profiler, ProfileConfig, RealFileDevice, SimulatedSsd, StripePolicy,
@@ -51,10 +52,22 @@ fn main() {
                  \x20               [--file-backed DIR] serve from real per-member backing\n\
                  \x20                              files under DIR (wall-clock I/O)\n\
                  \x20               [--streams N]  concurrent decode streams served through\n\
-                 \x20                              the scheduler (default 1 = single stream)\n\
+                 \x20                              the scheduler (default 1 = single stream;\n\
+                 \x20                              with --listen: stream capacity, default 64)\n\
                  \x20               [--batch-window US] cross-stream decode-batching window\n\
                  \x20                              in microseconds (with --streams > 1;\n\
                  \x20                              fused I/O plans, outputs bit-identical)\n\
+                 \x20               [--listen HOST:PORT] network mode: serve the engine over\n\
+                 \x20                              HTTP/1.1 (POST /v1/streams,\n\
+                 \x20                              /v1/streams/{id}/append, …/decode;\n\
+                 \x20                              GET /metrics, /healthz, /v1/config);\n\
+                 \x20                              port 0 picks a free port\n\
+                 \x20               [--addr-file PATH] write the bound address to PATH\n\
+                 \x20               [--workers N]  scheduler worker threads (network mode)\n\
+                 \x20               [--max-connections N] connection bound (default 64)\n\
+                 \x20               [--max-body-kb N] request-body cap (default 8192)\n\
+                 \x20               [--duration S] network mode: stop serving after S\n\
+                 \x20                              seconds (default: until SIGINT/SIGTERM)\n\
                  \x20               POLICY: dense | topk | threshold[:t] |\n\
                  \x20                       chunking[:min_kb,jump_kb,max_kb] | bundling[:rows]\n\
                  \x20 repro profile [--device nano|agx|macbook] [--file PATH] [--out PATH]\n\
@@ -73,34 +86,35 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
-fn has_flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
+fn cmd_serve(args: &[String]) -> i32 {
+    // Typed flag parsing (shared with `redline`): a bad or valueless
+    // flag is a usage error (exit 2), never a panic or a silent default.
+    match cmd_serve_inner(args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("repro serve: {e}");
+            eprintln!("run `repro` without arguments for usage");
+            2
+        }
+    }
 }
 
-fn cmd_serve(args: &[String]) -> i32 {
-    let model = flag(args, "--model").unwrap_or_else(|| "small".into());
-    let policy_name = flag(args, "--policy").unwrap_or_else(|| "chunking".into());
-    let sparsity: f64 = flag(args, "--sparsity")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0.5);
-    let device = flag(args, "--device").unwrap_or_else(|| "nano".into());
-    let frames: usize = flag(args, "--frames")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(8);
-    let decode_steps: usize = flag(args, "--decode")
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(4);
-    let threads: usize = flag(args, "--threads")
-        .and_then(|s| s.parse().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(1);
-    let artifacts = PathBuf::from(flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into()));
+fn cmd_serve_inner(args: &[String]) -> Result<i32, ArgError> {
+    let p = ArgParser::new(args);
+    let model = p.string_or("--model", "small")?;
+    let policy_name = p.string_or("--policy", "chunking")?;
+    let sparsity: f64 = p.parsed_or("--sparsity", 0.5)?;
+    let device = p.string_or("--device", "nano")?;
+    let frames: usize = p.parsed_or("--frames", 8)?;
+    let decode_steps: usize = p.parsed_or("--decode", 4)?;
+    let threads = p.parsed_or("--threads", 1usize)?.max(1);
+    let artifacts = PathBuf::from(p.string_or("--artifacts", "artifacts")?);
 
     let profile = match DeviceProfile::by_name(&device) {
         Some(p) => p,
         None => {
             eprintln!("unknown device {device}");
-            return 2;
+            return Ok(2);
         }
     };
     let sat_kb = profile.saturation_bytes(0.99) as f64 / 1024.0;
@@ -110,7 +124,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         Ok(p) => p.tuned_for_saturation(sat_kb),
         Err(e) => {
             eprintln!("{e}");
-            return 2;
+            return Ok(2);
         }
     };
 
@@ -118,43 +132,41 @@ fn cmd_serve(args: &[String]) -> i32 {
         .policy(policy)
         .sparsity(sparsity)
         .profile(profile)
-        .prefetch(!has_flag(args, "--no-prefetch"))
+        .prefetch(!p.has("--no-prefetch"))
         .exec_threads(threads)
         .artifacts(&artifacts);
-    if let Some(n) = flag(args, "--devices").and_then(|s| s.parse::<usize>().ok()) {
+    if let Some(n) = p.parsed::<usize>("--devices")? {
         builder = builder.devices(n);
     }
-    if has_flag(args, "--stripe-hot") {
+    if p.has("--stripe-hot") {
         builder = builder.stripe_policy(StripePolicy::HotAware);
     }
-    if let Some(kb) = flag(args, "--stripe-kb").and_then(|s| s.parse::<usize>().ok()) {
+    if let Some(kb) = p.parsed::<usize>("--stripe-kb")? {
         builder = builder.stripe_bytes(kb * 1024);
     }
-    if has_flag(args, "--async-io") {
+    if p.has("--async-io") {
         builder = builder.async_io(true);
     }
-    if let Some(n) = flag(args, "--queue-depth").and_then(|s| s.parse::<usize>().ok()) {
+    if let Some(n) = p.parsed::<usize>("--queue-depth")? {
         builder = builder.io_queue_depth(n);
     }
-    if let Some(dir) = flag(args, "--file-backed") {
-        builder = builder.file_backed(std::path::Path::new(&dir));
+    if let Some(dir) = p.raw("--file-backed")? {
+        builder = builder.file_backed(std::path::Path::new(dir));
     }
     let engine = match builder.build() {
         Ok(e) => e,
         Err(e) => {
             eprintln!("engine init failed: {e:#}");
-            return 1;
+            return Ok(1);
         }
     };
-    let streams: usize = flag(args, "--streams")
-        .and_then(|s| s.parse().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(1);
+    if p.has("--listen") {
+        return serve_network(engine, &p, &model, &device, sparsity);
+    }
+    let streams = p.parsed_or("--streams", 1usize)?.max(1);
     if streams > 1 {
-        let window_us: u64 = flag(args, "--batch-window")
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0);
-        return serve_batched(engine, streams, window_us, decode_steps);
+        let window_us: u64 = p.parsed_or("--batch-window", 0u64)?;
+        return Ok(serve_batched(engine, streams, window_us, decode_steps));
     }
     println!(
         "serving model={model} policy={policy_name} sparsity={sparsity} device={device} \
@@ -166,12 +178,12 @@ fn cmd_serve(args: &[String]) -> i32 {
     let spec = engine.spec();
     let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, frames + 1, 11);
 
-    if has_flag(args, "--reorder") {
+    if p.has("--reorder") {
         let calib: Vec<Vec<f32>> = (0..4).map(|i| trace.frame(i)).collect();
         println!("calibrating hot–cold reorder on 4 frames…");
         if let Err(e) = engine.calibrate_and_reorder(&calib) {
             eprintln!("reorder failed: {e:#}");
-            return 1;
+            return Ok(1);
         }
     }
 
@@ -180,7 +192,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     // Warmup frame (not measured).
     if let Err(e) = session.append_frame(&trace.frame(0)) {
         eprintln!("warmup failed: {e:#}");
-        return 1;
+        return Ok(1);
     }
 
     let mut t = Table::new(
@@ -267,7 +279,95 @@ fn cmd_serve(args: &[String]) -> i32 {
             if mean > 0.0 { max / mean } else { 1.0 }
         );
     }
-    0
+    Ok(0)
+}
+
+/// Signal flag for the network server's graceful shutdown (`SIGINT` /
+/// `SIGTERM` → drain connections, join workers, exit 0).
+static SHUTDOWN_SIGNAL: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: libc::c_int) {
+    // Async-signal-safe: a relaxed atomic store and nothing else.
+    SHUTDOWN_SIGNAL.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// `repro serve --listen ADDR`: expose the engine over HTTP through the
+/// scheduler. Runs until SIGINT/SIGTERM (or `--duration` elapses), then
+/// shuts down gracefully — the scheduler's idempotent `shutdown` makes
+/// the signal path and `Drop` safe to overlap.
+fn serve_network(
+    engine: Engine,
+    p: &ArgParser,
+    model: &str,
+    device: &str,
+    sparsity: f64,
+) -> Result<i32, ArgError> {
+    use neuron_chunking::coordinator::{Scheduler, SchedulerConfig};
+    use neuron_chunking::serving::{Server, ServerConfig};
+    use std::sync::atomic::Ordering;
+
+    let listen: String = p.require("--listen")?;
+    let addr_file = p.raw("--addr-file")?.map(str::to_string);
+    let duration_s: Option<f64> = p.parsed("--duration")?;
+    let window_us: u64 = p.parsed_or("--batch-window", 0u64)?;
+    let defaults = SchedulerConfig::default();
+    let sched_cfg = SchedulerConfig {
+        // In network mode `--streams` is the stream *capacity*.
+        max_streams: p.parsed_or("--streams", defaults.max_streams)?.max(1),
+        workers: p.parsed_or("--workers", defaults.workers)?.max(1),
+        batch_window: std::time::Duration::from_micros(window_us),
+        ..defaults
+    };
+    let server_cfg = ServerConfig {
+        listen,
+        max_connections: p.parsed_or("--max-connections", 64usize)?.max(1),
+        max_body_bytes: p.parsed_or("--max-body-kb", 8192usize)?.max(1) * 1024,
+        extra_config: vec![
+            ("device".to_string(), format!("\"{device}\"")),
+            ("sparsity".to_string(), format!("{sparsity}")),
+            ("batch_window_us".to_string(), format!("{window_us}")),
+        ],
+        ..ServerConfig::default()
+    };
+
+    println!("compiling {} artifacts…", engine.warmup().unwrap_or(0));
+    let sched = Scheduler::spawn(sched_cfg, move || engine);
+    let server = match Server::start(server_cfg, sched) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server start failed: {e:#}");
+            return Ok(1);
+        }
+    };
+    let addr = server.local_addr();
+    if let Some(path) = &addr_file {
+        if let Err(e) = std::fs::write(path, format!("{addr}\n")) {
+            eprintln!("cannot write --addr-file {path}: {e}");
+            return Ok(1);
+        }
+    }
+    println!("serving model={model} device={device} on http://{addr}");
+    println!(
+        "endpoints: POST /v1/streams | POST /v1/streams/{{id}}/append | \
+         POST /v1/streams/{{id}}/decode | GET /metrics | GET /healthz | GET /v1/config"
+    );
+    unsafe {
+        let handler = on_shutdown_signal as extern "C" fn(libc::c_int) as libc::sighandler_t;
+        libc::signal(libc::SIGINT, handler);
+        libc::signal(libc::SIGTERM, handler);
+    }
+    let deadline = duration_s.map(|s| {
+        std::time::Instant::now() + std::time::Duration::from_secs_f64(s.max(0.0))
+    });
+    while !SHUTDOWN_SIGNAL.load(Ordering::Relaxed) {
+        if deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("shutting down…");
+    server.shutdown();
+    Ok(0)
 }
 
 /// Multi-stream decode serving through the scheduler's cross-stream

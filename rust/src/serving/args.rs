@@ -1,0 +1,175 @@
+//! Tiny typed CLI-flag parser shared by `repro serve` and `redline`.
+//!
+//! The previous ad-hoc pattern (`flag(..).and_then(|s| s.parse().ok())
+//! .unwrap_or(default)`) silently swallowed typos — `--streams x` served
+//! one stream instead of failing. Here a present-but-unparsable (or
+//! valueless) flag is a hard [`ArgError`] the binaries turn into a usage
+//! message and exit code 2, never a panic and never a silent default.
+
+use std::str::FromStr;
+
+/// A flag-parsing failure: which flag, and why.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgError {
+    pub flag: String,
+    pub reason: String,
+}
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.flag, self.reason)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Borrowing view over a raw `--flag value` argument list.
+pub struct ArgParser<'a> {
+    args: &'a [String],
+}
+
+impl<'a> ArgParser<'a> {
+    pub fn new(args: &'a [String]) -> Self {
+        Self { args }
+    }
+
+    /// Presence of a boolean flag.
+    pub fn has(&self, name: &str) -> bool {
+        self.args.iter().any(|a| a == name)
+    }
+
+    /// The raw token following `name`, if the flag is present at all.
+    /// A following token that is itself a flag counts as a missing
+    /// value (negative numbers are fine: they start with a single `-`).
+    pub fn raw(&self, name: &str) -> Result<Option<&'a str>, ArgError> {
+        let Some(i) = self.args.iter().position(|a| a == name) else {
+            return Ok(None);
+        };
+        match self.args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => Ok(Some(v.as_str())),
+            _ => Err(ArgError {
+                flag: name.to_string(),
+                reason: "missing value".to_string(),
+            }),
+        }
+    }
+
+    /// Typed optional flag: absent → `Ok(None)`; present with a bad or
+    /// missing value → `Err`.
+    pub fn parsed<T: FromStr>(&self, name: &str) -> Result<Option<T>, ArgError> {
+        match self.raw(name)? {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| ArgError {
+                flag: name.to_string(),
+                reason: format!("invalid value {v:?}"),
+            }),
+        }
+    }
+
+    /// Typed flag with a default for absence.
+    pub fn parsed_or<T: FromStr>(&self, name: &str, default: T) -> Result<T, ArgError> {
+        Ok(self.parsed(name)?.unwrap_or(default))
+    }
+
+    /// Typed mandatory flag.
+    pub fn require<T: FromStr>(&self, name: &str) -> Result<T, ArgError> {
+        self.parsed(name)?.ok_or_else(|| ArgError {
+            flag: name.to_string(),
+            reason: "required flag missing".to_string(),
+        })
+    }
+
+    /// String flag with a default.
+    pub fn string_or(&self, name: &str, default: &str) -> Result<String, ArgError> {
+        Ok(self.raw(name)?.map(str::to_string).unwrap_or_else(|| default.to_string()))
+    }
+}
+
+/// Parse a `P:D` stream-mix ratio (prefills per cycle, decodes per
+/// cycle), e.g. `1:8` = one vision prefill per eight decode requests.
+/// `0:1` disables ongoing prefills entirely.
+pub fn parse_mix(s: &str) -> Result<(usize, usize), ArgError> {
+    let err = |reason: &str| ArgError {
+        flag: "--mix".to_string(),
+        reason: format!("{reason} (expected P:D, e.g. 1:8)"),
+    };
+    let (p, d) = s.split_once(':').ok_or_else(|| err("missing ':'"))?;
+    let p: usize = p.parse().map_err(|_| err("bad prefill count"))?;
+    let d: usize = d.parse().map_err(|_| err("bad decode count"))?;
+    if p + d == 0 {
+        return Err(err("mix cannot be 0:0"));
+    }
+    Ok((p, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(tokens: &[&str]) -> Vec<String> {
+        tokens.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn absent_flag_uses_default() {
+        let args = argv(&["--other", "1"]);
+        let p = ArgParser::new(&args);
+        assert_eq!(p.parsed_or("--streams", 4usize).unwrap(), 4);
+        assert_eq!(p.parsed::<usize>("--streams").unwrap(), None);
+        assert!(!p.has("--verbose"));
+    }
+
+    #[test]
+    fn present_flag_parses() {
+        let args = argv(&["--streams", "8", "--rps", "2.5", "--verbose"]);
+        let p = ArgParser::new(&args);
+        assert_eq!(p.parsed_or("--streams", 1usize).unwrap(), 8);
+        assert_eq!(p.parsed_or("--rps", 1.0f64).unwrap(), 2.5);
+        assert!(p.has("--verbose"));
+    }
+
+    #[test]
+    fn bad_value_is_an_error_not_a_default() {
+        let args = argv(&["--streams", "lots"]);
+        let p = ArgParser::new(&args);
+        let e = p.parsed_or("--streams", 1usize).unwrap_err();
+        assert_eq!(e.flag, "--streams");
+        assert!(e.reason.contains("lots"), "{e}");
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        // Trailing flag, and flag followed by another flag.
+        for toks in [vec!["--streams"], vec!["--streams", "--other"]] {
+            let args = argv(&toks);
+            let p = ArgParser::new(&args);
+            let e = p.parsed_or("--streams", 1usize).unwrap_err();
+            assert_eq!(e.reason, "missing value");
+        }
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let args = argv(&["--delta", "-3"]);
+        let p = ArgParser::new(&args);
+        assert_eq!(p.parsed_or("--delta", 0i64).unwrap(), -3);
+    }
+
+    #[test]
+    fn require_reports_absence() {
+        let args = argv(&[]);
+        let p = ArgParser::new(&args);
+        let e = p.require::<String>("--target").unwrap_err();
+        assert_eq!(e.flag, "--target");
+        assert!(e.reason.contains("required"));
+    }
+
+    #[test]
+    fn mix_parses_and_rejects() {
+        assert_eq!(parse_mix("1:8").unwrap(), (1, 8));
+        assert_eq!(parse_mix("0:1").unwrap(), (0, 1));
+        for bad in ["", "1", "x:2", "1:y", "0:0", "1:2:3"] {
+            assert!(parse_mix(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! Dependency-free HTTP/1.1 framing: request reading for the server,
+//! response writing, and the response-parsing half used by the loadgen
+//! client. `std::net` only — the offline environment has no hyper.
+//!
+//! Scope is deliberately narrow: identity bodies with `Content-Length`,
+//! keep-alive, and a bounded header section. Chunked transfer encoding
+//! is rejected cleanly with `501` (the wire protocol never needs it),
+//! oversized bodies with `413`, and a POST without a length with `411`.
+
+use std::io::{BufRead, Read, Write};
+
+/// Longest accepted request/status/header line, bytes.
+const MAX_LINE: usize = 8 * 1024;
+/// Most headers accepted per message.
+const MAX_HEADERS: usize = 64;
+
+/// One parsed request. Header names are lowercased on read.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.version != "HTTP/1.0",
+        }
+    }
+
+    pub fn body_str(&self) -> Result<&str, HttpError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| HttpError::bad(400, "body is not valid UTF-8"))
+    }
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Read timed out before the first byte of a request arrived: the
+    /// connection is idle, not broken — callers poll their shutdown flag
+    /// and try again.
+    Idle,
+    /// Protocol violation: answer with `status`, then close.
+    Bad { status: u16, detail: String },
+    /// Transport failure mid-message: close without answering.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    pub fn bad(status: u16, detail: &str) -> Self {
+        HttpError::Bad {
+            status,
+            detail: detail.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Idle => write!(f, "idle"),
+            HttpError::Bad { status, detail } => write!(f, "{status}: {detail}"),
+            HttpError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one line (up to `\n`, stripping `\r\n`). `first` marks the first
+/// line of a message, where EOF/timeout means "idle connection" rather
+/// than "truncated request".
+fn read_line(r: &mut impl BufRead, first: bool) -> Result<Option<Vec<u8>>, HttpError> {
+    let mut line = Vec::new();
+    loop {
+        let buf = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) if is_timeout(&e) => {
+                if first && line.is_empty() {
+                    return Err(HttpError::Idle);
+                }
+                return Err(HttpError::bad(408, "timed out mid-request"));
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        };
+        if buf.is_empty() {
+            // EOF.
+            if first && line.is_empty() {
+                return Ok(None);
+            }
+            return Err(HttpError::bad(400, "connection closed mid-request"));
+        }
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(nl) => {
+                line.extend_from_slice(&buf[..nl]);
+                r.consume(nl + 1);
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return Ok(Some(line));
+            }
+            None => {
+                let n = buf.len();
+                line.extend_from_slice(buf);
+                r.consume(n);
+                if line.len() > MAX_LINE {
+                    return Err(HttpError::bad(431, "header line too long"));
+                }
+            }
+        }
+    }
+}
+
+/// Read one request off a (possibly keep-alive) connection.
+///
+/// * `Ok(Some(req))` — a complete request.
+/// * `Ok(None)` — the peer closed cleanly between requests.
+/// * `Err(HttpError::Idle)` — read timeout between requests (poll and
+///   retry).
+/// * `Err(HttpError::Bad{..})` — answer with the status, then close.
+/// * `Err(HttpError::Io(_))` — close silently.
+pub fn read_request(
+    r: &mut impl BufRead,
+    max_body: usize,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let line = match read_line(r, true)? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let line = String::from_utf8(line).map_err(|_| HttpError::bad(400, "bad request line"))?;
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if v.starts_with("HTTP/") => {
+            (m.to_string(), p.to_string(), v.to_string())
+        }
+        _ => return Err(HttpError::bad(400, "bad request line")),
+    };
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, false)? {
+            Some(l) => l,
+            None => return Err(HttpError::bad(400, "truncated header section")),
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::bad(431, "too many headers"));
+        }
+        let line =
+            String::from_utf8(line).map_err(|_| HttpError::bad(400, "bad header encoding"))?;
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::bad(400, "malformed header"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let req_head = HttpRequest {
+        method,
+        path,
+        version,
+        headers,
+        body: Vec::new(),
+    };
+
+    if req_head.header("transfer-encoding").is_some() {
+        // Chunked (and any other transfer coding) is out of scope; the
+        // client must frame with Content-Length.
+        return Err(HttpError::bad(501, "transfer-encoding not supported"));
+    }
+
+    let body = match req_head.header("content-length") {
+        Some(v) => {
+            let len: usize = v
+                .parse()
+                .map_err(|_| HttpError::bad(400, "bad content-length"))?;
+            if len > max_body {
+                return Err(HttpError::bad(413, "body exceeds server limit"));
+            }
+            let mut body = vec![0u8; len];
+            if let Err(e) = r.read_exact(&mut body) {
+                if is_timeout(&e) {
+                    return Err(HttpError::bad(408, "timed out reading body"));
+                }
+                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    return Err(HttpError::bad(400, "connection closed mid-body"));
+                }
+                return Err(HttpError::Io(e));
+            }
+            body
+        }
+        None if req_head.method == "POST" || req_head.method == "PUT" => {
+            return Err(HttpError::bad(411, "content-length required"));
+        }
+        None => Vec::new(),
+    };
+
+    Ok(Some(HttpRequest { body, ..req_head }))
+}
+
+/// Standard reason phrase for the statuses this server emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+/// Write one response (identity body, explicit length).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason_phrase(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one response (status, body) off a client connection. Returns
+/// `(status, body, keep_alive)`.
+pub fn read_response(r: &mut impl BufRead) -> Result<(u16, Vec<u8>, bool), HttpError> {
+    let line = match read_line(r, true)? {
+        Some(l) => l,
+        None => return Err(HttpError::bad(400, "connection closed before response")),
+    };
+    let line = String::from_utf8(line).map_err(|_| HttpError::bad(400, "bad status line"))?;
+    let mut parts = line.split_whitespace();
+    let status: u16 = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/") => code
+            .parse()
+            .map_err(|_| HttpError::bad(400, "bad status code"))?,
+        _ => return Err(HttpError::bad(400, "bad status line")),
+    };
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = true;
+    loop {
+        let line = match read_line(r, false)? {
+            Some(l) => l,
+            None => return Err(HttpError::bad(400, "truncated response headers")),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let line =
+            String::from_utf8(line).map_err(|_| HttpError::bad(400, "bad header encoding"))?;
+        if let Some((name, value)) = line.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length = value.parse().ok();
+            } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            }
+        }
+    }
+    let len = content_length.ok_or_else(|| HttpError::bad(400, "response without length"))?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(HttpError::Io)?;
+    Ok((status, body, keep_alive))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &str) -> Result<Option<HttpRequest>, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_get() {
+        let r = req("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.keep_alive());
+        assert_eq!(r.header("HOST"), Some("x"));
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let r = req("POST /v1/streams HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"abcd");
+        assert_eq!(r.body_str().unwrap(), "abcd");
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let r = req("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive());
+        let r = req("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive(), "1.0 defaults to close");
+    }
+
+    #[test]
+    fn chunked_rejected_with_501() {
+        let e = req("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::Bad { status: 501, .. }), "{e}");
+    }
+
+    #[test]
+    fn oversized_body_rejected_with_413() {
+        let e = req("POST /x HTTP/1.1\r\nContent-Length: 2048\r\n\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::Bad { status: 413, .. }), "{e}");
+    }
+
+    #[test]
+    fn post_without_length_rejected_with_411() {
+        let e = req("POST /x HTTP/1.1\r\n\r\n").unwrap_err();
+        assert!(matches!(e, HttpError::Bad { status: 411, .. }), "{e}");
+    }
+
+    #[test]
+    fn malformed_request_line_rejected_with_400() {
+        for bad in ["GARBAGE\r\n\r\n", "GET /x\r\n\r\n", "GET /x NOPE/1.1\r\n\r\n"] {
+            let e = req(bad).unwrap_err();
+            assert!(matches!(e, HttpError::Bad { status: 400, .. }), "{bad:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn truncated_body_rejected_with_400() {
+        let e = req("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap_err();
+        assert!(matches!(e, HttpError::Bad { status: 400, .. }), "{e}");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(req("").unwrap().is_none());
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "application/json", b"{\"ok\":true}", true).unwrap();
+        let (status, body, keep) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+        assert!(keep);
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal keep-alive HTTP client for the serving wire protocol.
+//!
+//! One [`Client`] owns one TCP connection; the runner gives each worker
+//! thread its own so concurrent requests really are concurrent at the
+//! socket level (the server is thread-per-connection).
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::serving::http;
+use crate::serving::json::{self, Json};
+
+/// Parsed accounting from an append/decode response.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Reply {
+    /// Server-side execution wall time (sum over steps), µs.
+    pub latency_us: u64,
+    /// Server-side scheduler queue wait (sum over steps), µs.
+    pub queue_us: u64,
+    pub steps: u64,
+}
+
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        // A wedged server should fail the request, not hang the worker.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let writer = stream.try_clone().map_err(|e| format!("clone socket: {e}"))?;
+        Ok(Self {
+            writer,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    /// One keep-alive request/response exchange. Non-2xx statuses are
+    /// errors carrying the server's `"error"` detail.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<Json, String> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: redline\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        self.writer
+            .write_all(head.as_bytes())
+            .and_then(|()| self.writer.write_all(body.as_bytes()))
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| format!("send {method} {path}: {e}"))?;
+        let (status, bytes, _keep) = http::read_response(&mut self.reader)
+            .map_err(|e| format!("read {method} {path}: {e}"))?;
+        let text = String::from_utf8(bytes).map_err(|_| "non-UTF-8 response".to_string())?;
+        let value = if text.trim().is_empty() {
+            Json::Null
+        } else {
+            Json::parse(&text).map_err(|e| format!("bad response JSON: {e}"))?
+        };
+        if !(200..300).contains(&status) {
+            let detail = value
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("no detail");
+            return Err(format!("{method} {path}: HTTP {status}: {detail}"));
+        }
+        Ok(value)
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<Json, String> {
+        self.request("GET", path, "")
+    }
+
+    /// `POST /v1/streams` → new stream id.
+    pub fn open_stream(&mut self) -> Result<usize, String> {
+        let v = self.request("POST", "/v1/streams", "{}")?;
+        v.get("stream")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| "stream-open reply has no id".to_string())
+    }
+
+    /// `POST /v1/streams/{id}/append` with a `[tokens_per_frame * d]` frame.
+    pub fn append(&mut self, stream: usize, frame: &[f32]) -> Result<Reply, String> {
+        let mut body = String::with_capacity(frame.len() * 8 + 16);
+        body.push_str("{\"frame\":");
+        json::push_f32_array(&mut body, frame);
+        body.push('}');
+        let v = self.request("POST", &format!("/v1/streams/{stream}/append"), &body)?;
+        Ok(reply_from(&v))
+    }
+
+    /// `POST /v1/streams/{id}/decode` for `steps` tokens.
+    pub fn decode(&mut self, stream: usize, token: &[f32], steps: usize) -> Result<Reply, String> {
+        let mut body = String::with_capacity(token.len() * 8 + 32);
+        body.push_str("{\"token\":");
+        json::push_f32_array(&mut body, token);
+        body.push_str(&format!(",\"steps\":{steps}}}"));
+        let v = self.request("POST", &format!("/v1/streams/{stream}/decode"), &body)?;
+        Ok(reply_from(&v))
+    }
+}
+
+fn reply_from(v: &Json) -> Reply {
+    let u64_of = |key: &str| {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .map(|x| x.max(0.0) as u64)
+            .unwrap_or(0)
+    };
+    Reply {
+        latency_us: u64_of("latency_us"),
+        queue_us: u64_of("queue_us"),
+        steps: u64_of("steps"),
+    }
+}

@@ -1,0 +1,313 @@
+//! `redline compare` — diff two run files and issue regression verdicts.
+//!
+//! Entries are matched on the same identity fields the CI bench gate
+//! (`scripts/bench_gate.rs`) uses, and the verdict rules are the gate's
+//! rules: throughput (`tokens_per_s`) regresses when it *drops* past the
+//! threshold, tail latency (`p99_us`, `p999_us`) regresses when it
+//! *rises* past it. A run pair that passes `redline compare --pct N`
+//! passes the bench gate at the same threshold, so developers can
+//! pre-flight locally exactly what CI will enforce. Entries present on
+//! only one side are reported but never fail (the matrix may grow).
+
+use std::collections::BTreeMap;
+
+use crate::serving::json::Json;
+
+/// Identity fields forming the match key — keep in sync with
+/// `ID_FIELDS` in `scripts/bench_gate.rs`.
+pub const ID_FIELDS: [&str; 11] = [
+    "mode",
+    "policy",
+    "prefetch",
+    "threads",
+    "streams",
+    "devices",
+    "op",
+    "async_io",
+    "queue_depth",
+    "rps",
+    "mix",
+];
+
+/// Metrics compared, with direction: `true` = higher is better.
+const METRICS: [(&str, bool); 3] = [
+    ("tokens_per_s", true),
+    ("p99_us", false),
+    ("p999_us", false),
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    Regressed,
+    Improved,
+}
+
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub key: String,
+    pub metric: &'static str,
+    pub base: f64,
+    pub cand: f64,
+    pub status: Status,
+}
+
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub pct: f64,
+    pub matched: usize,
+    pub baseline_only: Vec<String>,
+    pub candidate_only: Vec<String>,
+    pub verdicts: Vec<Verdict>,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> usize {
+        self.verdicts
+            .iter()
+            .filter(|v| v.status == Status::Regressed)
+            .count()
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.verdicts
+            .iter()
+            .filter(|v| v.status == Status::Improved)
+            .count()
+    }
+
+    /// Terminal rendering: one line per metric verdict plus a summary.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "redline compare: {} matched entries, threshold {}%",
+            self.matched, self.pct
+        );
+        for v in &self.verdicts {
+            let tag = match v.status {
+                Status::Ok => "  ok  ",
+                Status::Regressed => "REGRES",
+                Status::Improved => "improv",
+            };
+            let delta = if v.base > 0.0 {
+                (v.cand / v.base - 1.0) * 100.0
+            } else {
+                0.0
+            };
+            let _ = writeln!(
+                out,
+                "  [{tag}] {}: {} {:.1} -> {:.1} ({delta:+.1}%)",
+                v.key, v.metric, v.base, v.cand
+            );
+        }
+        for k in &self.baseline_only {
+            let _ = writeln!(out, "  [ skip ] baseline-only entry: {k}");
+        }
+        for k in &self.candidate_only {
+            let _ = writeln!(out, "  [ skip ] candidate-only entry: {k}");
+        }
+        let _ = writeln!(
+            out,
+            "verdict: {} regression(s), {} improvement(s), {} matched",
+            self.regressions(),
+            self.improvements(),
+            self.matched
+        );
+        out
+    }
+}
+
+/// Every object with a `tokens_per_s` field, anywhere in the document
+/// (handles both redline run files and `bench_e2e`-style reports).
+fn collect_entries<'a>(v: &'a Json, out: &mut Vec<&'a Json>) {
+    match v {
+        Json::Obj(fields) => {
+            if v.get("tokens_per_s").is_some() {
+                out.push(v);
+            } else {
+                for (_, child) in fields {
+                    collect_entries(child, out);
+                }
+            }
+        }
+        Json::Arr(items) => {
+            for item in items {
+                collect_entries(item, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn entry_key(e: &Json) -> String {
+    ID_FIELDS
+        .iter()
+        .map(|f| match e.get(f) {
+            None => String::new(),
+            Some(Json::Str(s)) => s.clone(),
+            Some(other) => other.to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+fn index_entries(text: &str) -> Result<BTreeMap<String, Vec<(&'static str, f64)>>, String> {
+    let doc = Json::parse(text).map_err(|e| format!("bad run file: {e}"))?;
+    let mut entries = Vec::new();
+    collect_entries(&doc, &mut entries);
+    let mut by_key = BTreeMap::new();
+    for e in entries {
+        let metrics: Vec<(&'static str, f64)> = METRICS
+            .iter()
+            .filter_map(|&(name, _)| {
+                e.get(name).and_then(Json::as_f64).map(|v| (name, v))
+            })
+            .collect();
+        by_key.insert(entry_key(e), metrics);
+    }
+    Ok(by_key)
+}
+
+/// Compare two run files (text contents, not paths). `pct` is the
+/// symmetric threshold: beyond it in the bad direction → regressed,
+/// beyond it in the good direction → improved.
+pub fn compare_files(baseline: &str, candidate: &str, pct: f64) -> Result<CompareReport, String> {
+    let base = index_entries(baseline)?;
+    let cand = index_entries(candidate)?;
+    if base.is_empty() {
+        return Err("baseline has no entries with tokens_per_s".to_string());
+    }
+    if cand.is_empty() {
+        return Err("candidate has no entries with tokens_per_s".to_string());
+    }
+    let mut report = CompareReport {
+        pct,
+        matched: 0,
+        baseline_only: Vec::new(),
+        candidate_only: cand
+            .keys()
+            .filter(|k| !base.contains_key(*k))
+            .cloned()
+            .collect(),
+        verdicts: Vec::new(),
+    };
+    let floor = 1.0 - pct / 100.0;
+    let ceil = 1.0 + pct / 100.0;
+    for (key, base_metrics) in &base {
+        let Some(cand_metrics) = cand.get(key) else {
+            report.baseline_only.push(key.clone());
+            continue;
+        };
+        report.matched += 1;
+        for &(name, higher_is_better) in &METRICS {
+            let b = base_metrics.iter().find(|(n, _)| *n == name).map(|&(_, v)| v);
+            let c = cand_metrics.iter().find(|(n, _)| *n == name).map(|&(_, v)| v);
+            let (Some(b), Some(c)) = (b, c) else { continue };
+            if b <= 0.0 || c <= 0.0 {
+                continue; // no meaningful ratio (e.g. zero-error run vs not)
+            }
+            let ratio = c / b;
+            let status = if higher_is_better {
+                if ratio < floor {
+                    Status::Regressed
+                } else if ratio > ceil {
+                    Status::Improved
+                } else {
+                    Status::Ok
+                }
+            } else if ratio > ceil {
+                Status::Regressed
+            } else if ratio < floor {
+                Status::Improved
+            } else {
+                Status::Ok
+            };
+            report.verdicts.push(Verdict {
+                key: key.clone(),
+                metric: name,
+                base: b,
+                cand: c,
+                status,
+            });
+        }
+    }
+    if report.matched == 0 {
+        return Err(format!(
+            "no entries match between the runs ({} baseline, {} candidate) — \
+             were they produced with the same identity (policy/streams/rps/mix)?",
+            base.len(),
+            cand.len()
+        ));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_file(tps: f64, p99: u64, p999: u64) -> String {
+        format!(
+            "{{\"bench\":\"serving\",\"entries\":[{{\"mode\":\"served\",\"policy\":\"topk\",\
+             \"streams\":4,\"rps\":20,\"mix\":\"1:8\",\"op\":\"decode\",\
+             \"tokens_per_s\":{tps},\"p99_us\":{p99},\"p999_us\":{p999}}}]}}"
+        )
+    }
+
+    #[test]
+    fn identical_runs_have_no_regressions() {
+        let a = run_file(100.0, 5_000, 9_000);
+        let r = compare_files(&a, &a, 10.0).unwrap();
+        assert_eq!(r.matched, 1);
+        assert_eq!(r.regressions(), 0);
+        assert_eq!(r.improvements(), 0);
+        assert_eq!(r.verdicts.len(), 3);
+        assert!(r.render().contains("0 regression(s)"), "{}", r.render());
+    }
+
+    #[test]
+    fn throughput_drop_and_tail_rise_regress() {
+        let base = run_file(100.0, 5_000, 9_000);
+        let slower = run_file(80.0, 5_100, 9_100); // -20% tput
+        let r = compare_files(&base, &slower, 10.0).unwrap();
+        assert_eq!(r.regressions(), 1);
+        let spikier = run_file(99.0, 8_000, 30_000); // p99 +60%, p999 +233%
+        let r = compare_files(&base, &spikier, 10.0).unwrap();
+        assert_eq!(r.regressions(), 2);
+        // Better in the good direction is an improvement, not a failure.
+        let faster = run_file(150.0, 2_000, 3_000);
+        let r = compare_files(&base, &faster, 10.0).unwrap();
+        assert_eq!(r.regressions(), 0);
+        assert_eq!(r.improvements(), 3);
+    }
+
+    #[test]
+    fn unmatched_entries_are_reported_not_failed() {
+        let base = run_file(100.0, 5_000, 9_000);
+        let other = base.replace("\"1:8\"", "\"0:1\""); // different identity
+        assert!(compare_files(&base, &other, 10.0).is_err()); // nothing matches at all
+        // A candidate with the matched entry plus a new one: the extra
+        // entry is reported, never failed.
+        let entry_appended = base.replace(
+            "}]}",
+            "},{\"mode\":\"served\",\"op\":\"append\",\"tokens_per_s\":50.0,\"p99_us\":100}]}",
+        );
+        let r = compare_files(&base, &entry_appended, 10.0).unwrap();
+        assert_eq!(r.matched, 1);
+        assert_eq!(r.regressions(), 0);
+        assert_eq!(r.candidate_only.len(), 1);
+        assert!(r.render().contains("candidate-only"), "{}", r.render());
+    }
+
+    #[test]
+    fn keys_use_identity_fields() {
+        let e = Json::parse(
+            "{\"mode\":\"served\",\"policy\":\"topk\",\"streams\":4,\"rps\":20,\
+             \"mix\":\"1:8\",\"op\":\"decode\",\"tokens_per_s\":1}",
+        )
+        .unwrap();
+        assert_eq!(entry_key(&e), "served|topk|||4||decode|||20|1:8");
+    }
+}

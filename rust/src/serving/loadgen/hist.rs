@@ -1,0 +1,174 @@
+//! Fixed-bucket latency histogram with bounded relative error.
+//!
+//! Geometric buckets, [`SUB_PER_OCTAVE`] per power of two, so any
+//! recorded value lands in a bucket whose width is ≤ `2^(1/16) − 1`
+//! ≈ 4.4% of its value — percentile queries are accurate to that bound
+//! with O(1) record cost and a few KiB of memory, no matter how many
+//! samples a redline run produces.
+
+const SUB_PER_OCTAVE: usize = 16;
+const OCTAVES: usize = 40; // 1 µs .. ~2^40 µs (≈ 12.7 days)
+const BUCKETS: usize = SUB_PER_OCTAVE * OCTAVES;
+
+/// Latency histogram over microsecond values.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u128,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn bucket_index(us: u64) -> usize {
+    if us <= 1 {
+        return 0;
+    }
+    let idx = ((us as f64).log2() * SUB_PER_OCTAVE as f64) as usize;
+    idx.min(BUCKETS - 1)
+}
+
+/// Upper edge of bucket `i` — the value a percentile query reports for
+/// samples that landed there.
+fn bucket_edge(i: usize) -> u64 {
+    2f64.powf((i as f64 + 1.0) / SUB_PER_OCTAVE as f64).round() as u64
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; BUCKETS],
+            count: 0,
+            sum_us: 0,
+            min_us: u64::MAX,
+            max_us: 0,
+        }
+    }
+
+    pub fn record(&mut self, us: u64) {
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us as u128;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.max_us
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` ∈ [0, 1] (e.g. `0.99` for p99), clamped to
+    /// the observed min/max so bucket edges never report a latency
+    /// outside what was actually seen.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_edge(i).clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_track_uniform_data() {
+        let mut h = Histogram::new();
+        for us in 1..=10_000u64 {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 10_000);
+        let p50 = h.percentile(0.50) as f64;
+        let p99 = h.percentile(0.99) as f64;
+        // Bucket width bounds relative error at ~4.4%; allow 10%.
+        assert!((p50 - 5_000.0).abs() / 5_000.0 < 0.10, "p50={p50}");
+        assert!((p99 - 9_900.0).abs() / 9_900.0 < 0.10, "p99={p99}");
+        assert_eq!(h.percentile(1.0), 10_000);
+        assert_eq!(h.max_us(), 10_000);
+        assert!((h.mean_us() - 5_000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for us in [3u64, 40, 500, 6_000, 70_000] {
+            a.record(us);
+            all.record(us);
+        }
+        for us in [9u64, 80, 900, 10_000, 200_000] {
+            b.record(us);
+            all.record(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.percentile(q), all.percentile(q), "q={q}");
+        }
+        assert_eq!(a.max_us(), 200_000);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.max_us(), 0);
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(7);
+        assert!(h.percentile(0.5) <= 7);
+        assert_eq!(h.percentile(1.0), 7);
+    }
+
+    #[test]
+    fn bucket_error_is_bounded() {
+        // Every representable value's bucket edge is within ~4.5% above.
+        for us in [1u64, 10, 137, 999, 12_345, 1_000_000, 123_456_789] {
+            let edge = bucket_edge(bucket_index(us));
+            assert!(edge >= us, "edge {edge} < {us}");
+            assert!((edge as f64) < us as f64 * 1.046 + 1.0, "edge {edge} too far above {us}");
+        }
+    }
+}

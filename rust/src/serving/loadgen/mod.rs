@@ -1,0 +1,23 @@
+//! The redline load harness: an open-loop generator that drives the
+//! serving front end over real sockets.
+//!
+//! Open-loop means request *intended-send times* come from a fixed
+//! schedule (a [`rate::TokenBucket`] at the target RPS), not from when
+//! the previous response happened to return — and latency is measured
+//! from the intended time, so a stalled server inflates the recorded
+//! percentiles instead of silently thinning the arrival rate
+//! (coordinated omission). [`hist::Histogram`] buckets latencies with
+//! bounded relative error; [`runner`] orchestrates a run and renders
+//! the report; [`compare`] diffs two run files and issues regression
+//! verdicts that map one-to-one onto the CI bench gate.
+
+pub mod client;
+pub mod compare;
+pub mod hist;
+pub mod rate;
+pub mod runner;
+
+pub use compare::compare_files;
+pub use hist::Histogram;
+pub use rate::TokenBucket;
+pub use runner::{run, RunConfig, RunReport};

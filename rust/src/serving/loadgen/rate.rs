@@ -1,0 +1,94 @@
+//! Token-bucket pacing for the open-loop generator.
+
+use std::time::{Duration, Instant};
+
+/// A token bucket that hands out *send deadlines* rather than blocking:
+/// [`TokenBucket::reserve`] always consumes a token (going into debt if
+/// none is available) and returns the instant the consumed token exists,
+/// i.e. the intended send time under the configured rate. The caller
+/// sleeps until that instant and stamps the request with it — this is
+/// what makes the harness open-loop: the schedule never stretches just
+/// because the server got slow.
+#[derive(Debug)]
+pub struct TokenBucket {
+    /// Tokens per second.
+    rate: f64,
+    /// Bucket capacity: how many requests may fire back-to-back after an
+    /// idle stretch.
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// `rate` must be positive; `burst` is clamped to ≥ 1.
+    pub fn new(rate: f64, burst: usize, now: Instant) -> Self {
+        assert!(rate > 0.0, "token bucket rate must be positive");
+        let burst = burst.max(1) as f64;
+        Self {
+            rate,
+            burst,
+            tokens: burst,
+            last: now,
+        }
+    }
+
+    /// Consume one token, returning the instant at which it is (or
+    /// becomes) available. Monotonically non-decreasing across calls.
+    pub fn reserve(&mut self, now: Instant) -> Instant {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.last = now;
+        self.tokens -= 1.0;
+        if self.tokens >= 0.0 {
+            now
+        } else {
+            // In debt: the token materializes -tokens/rate from now.
+            now + Duration::from_secs_f64(-self.tokens / self.rate)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_fires_immediately_then_paces() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(1000.0, 3, t0);
+        // Burst of 3 at t0, then 1ms spacing.
+        assert_eq!(b.reserve(t0), t0);
+        assert_eq!(b.reserve(t0), t0);
+        assert_eq!(b.reserve(t0), t0);
+        let d4 = b.reserve(t0) - t0;
+        let d5 = b.reserve(t0) - t0;
+        assert!(d4 >= Duration::from_micros(900) && d4 <= Duration::from_micros(1100), "{d4:?}");
+        assert!(d5 >= Duration::from_micros(1900) && d5 <= Duration::from_micros(2100), "{d5:?}");
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(100.0, 2, t0);
+        // Drain the burst, then idle 10s: only `burst` tokens accrue.
+        b.reserve(t0);
+        b.reserve(t0);
+        let later = t0 + Duration::from_secs(10);
+        assert_eq!(b.reserve(later), later);
+        assert_eq!(b.reserve(later), later);
+        assert!(b.reserve(later) > later);
+    }
+
+    #[test]
+    fn deadlines_are_monotonic() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10_000.0, 1, t0);
+        let mut prev = t0;
+        for _ in 0..100 {
+            let at = b.reserve(t0);
+            assert!(at >= prev);
+            prev = at;
+        }
+    }
+}

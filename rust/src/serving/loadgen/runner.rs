@@ -1,0 +1,486 @@
+//! Open-loop run orchestration: pace → send → measure → report.
+//!
+//! One pacer thread turns the target RPS into a schedule of intended
+//! send times (token bucket); worker threads (one connection each) pull
+//! scheduled items off a shared queue, fire the request, and record the
+//! latency **from the intended time**, so scheduler backlog and server
+//! stalls show up in the percentiles instead of stretching the schedule
+//! (open-loop / coordinated-omission-resistant measurement).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::client::Client;
+use super::hist::Histogram;
+use super::rate::TokenBucket;
+use crate::serving::json::{self, Json};
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Server address, e.g. `127.0.0.1:8321`.
+    pub addr: String,
+    /// Target request rate (requests/s, across all ops).
+    pub rps: f64,
+    /// Token-bucket burst capacity.
+    pub burst: usize,
+    /// How long to keep the schedule running.
+    pub duration: Duration,
+    /// Streams to open (requests round-robin across them).
+    pub streams: usize,
+    /// Client connections = concurrent in-flight requests.
+    pub connections: usize,
+    /// Prefill:decode request mix per cycle, e.g. `(1, 8)`.
+    pub mix: (usize, usize),
+    /// Decode steps per decode request.
+    pub steps: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8321".to_string(),
+            rps: 20.0,
+            burst: 4,
+            duration: Duration::from_secs(10),
+            streams: 4,
+            connections: 4,
+            mix: (1, 8),
+            steps: 4,
+        }
+    }
+}
+
+/// Per-op aggregate over one run.
+#[derive(Clone, Debug, Default)]
+pub struct OpStats {
+    pub requests: u64,
+    pub errors: u64,
+    /// Tokens produced (decode steps, or frame tokens for prefill).
+    pub tokens: u64,
+    /// Client-observed latency from intended-send time.
+    pub hist: Histogram,
+    /// Sum of server-reported execution wall time, µs.
+    pub server_us: u64,
+    /// Sum of server-reported scheduler queue wait, µs.
+    pub queue_us: u64,
+}
+
+impl OpStats {
+    fn tokens_per_s(&self, wall: Duration) -> f64 {
+        let s = wall.as_secs_f64();
+        if s > 0.0 {
+            self.tokens as f64 / s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Everything a run produced: identity, per-op stats, wall time.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub cfg: RunConfig,
+    /// `(key, raw JSON value)` identity pairs stamped into every entry —
+    /// run shape plus the server's own `/v1/config` (policy, devices,
+    /// async_io, …), so reports match on true served identity.
+    pub ident: Vec<(String, String)>,
+    pub decode: OpStats,
+    pub append: OpStats,
+    pub wall: Duration,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Prefill,
+    Decode,
+}
+
+struct WorkItem {
+    intended: Instant,
+    stream: usize,
+    op: Op,
+}
+
+/// `std::sync::mpsc::Receiver` is not `Sync`, so the multi-consumer
+/// queue is a mutexed deque with a condvar and an explicit closed flag.
+struct WorkQueue {
+    state: Mutex<(VecDeque<WorkItem>, bool)>,
+    cv: Condvar,
+}
+
+impl WorkQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, item: WorkItem) {
+        self.state.lock().unwrap().0.push_back(item);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<WorkItem> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.0.pop_front() {
+                return Some(item);
+            }
+            if s.1 {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+}
+
+/// Deterministic pseudo-embedding (no RNG dependency; values in
+/// [-0.5, 0.5) with enough variety to exercise selection).
+fn synth_values(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| (i.wrapping_mul(2_654_435_761) % 1000) as f32 / 1000.0 - 0.5)
+        .collect()
+}
+
+/// Execute one open-loop run against a live server.
+pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
+    if cfg.rps <= 0.0 {
+        return Err("--rps must be positive".to_string());
+    }
+    if cfg.streams == 0 || cfg.connections == 0 || cfg.steps == 0 {
+        return Err("--streams/--connections/--steps must be ≥ 1".to_string());
+    }
+    let (mix_p, mix_d) = cfg.mix;
+    if mix_p + mix_d == 0 {
+        return Err("--mix cannot be 0:0".to_string());
+    }
+
+    // Probe identity + model shape, open and prime the streams.
+    let mut probe = Client::connect(&cfg.addr)?;
+    let server_cfg = probe.get("/v1/config")?;
+    let d = server_cfg
+        .get("d")
+        .and_then(Json::as_usize)
+        .ok_or("server config has no \"d\"")?;
+    let tpf = server_cfg
+        .get("tokens_per_frame")
+        .and_then(Json::as_usize)
+        .ok_or("server config has no \"tokens_per_frame\"")?;
+    let frame = synth_values(tpf * d);
+    let token = synth_values(d);
+    let mut stream_ids = Vec::with_capacity(cfg.streams);
+    for _ in 0..cfg.streams {
+        let id = probe.open_stream()?;
+        probe.append(id, &frame)?; // prime: decodes need KV context
+        stream_ids.push(id);
+    }
+
+    let queue = Arc::new(WorkQueue::new());
+    let stats = Arc::new(Mutex::new((OpStats::default(), OpStats::default())));
+
+    let workers: Vec<_> = (0..cfg.connections)
+        .map(|_| {
+            let queue = queue.clone();
+            let stats = stats.clone();
+            let addr = cfg.addr.clone();
+            let frame = frame.clone();
+            let token = token.clone();
+            let steps = cfg.steps;
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).ok();
+                while let Some(item) = queue.pop() {
+                    let res = match (client.as_mut(), item.op) {
+                        (None, _) => Err("no connection".to_string()),
+                        (Some(c), Op::Decode) => c.decode(item.stream, &token, steps),
+                        (Some(c), Op::Prefill) => c.append(item.stream, &frame),
+                    };
+                    let latency = Instant::now().saturating_duration_since(item.intended);
+                    let mut guard = stats.lock().unwrap();
+                    let op_stats = match item.op {
+                        Op::Decode => &mut guard.0,
+                        Op::Prefill => &mut guard.1,
+                    };
+                    op_stats.requests += 1;
+                    match res {
+                        Ok(reply) => {
+                            op_stats.hist.record(latency.as_micros() as u64);
+                            op_stats.server_us += reply.latency_us;
+                            op_stats.queue_us += reply.queue_us;
+                            op_stats.tokens += match item.op {
+                                // Server-reported step count, falling
+                                // back to the configured one.
+                                Op::Decode if reply.steps > 0 => reply.steps,
+                                Op::Decode => steps as u64,
+                                Op::Prefill => tpf as u64,
+                            };
+                        }
+                        Err(_) => {
+                            op_stats.errors += 1;
+                            drop(guard);
+                            // One reconnect attempt; persistent failure
+                            // keeps counting errors, never panics.
+                            client = Client::connect(&addr).ok();
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // The pacer: turn RPS into intended-send times and enqueue.
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+    let cycle = mix_p + mix_d;
+    let mut bucket = TokenBucket::new(cfg.rps, cfg.burst, start);
+    let mut seq = 0usize;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let intended = bucket.reserve(now);
+        if intended >= deadline {
+            break;
+        }
+        let wait = intended.saturating_duration_since(Instant::now());
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        let op = if seq % cycle < mix_p {
+            Op::Prefill
+        } else {
+            Op::Decode
+        };
+        queue.push(WorkItem {
+            intended,
+            stream: stream_ids[seq % stream_ids.len()],
+            op,
+        });
+        seq += 1;
+    }
+    queue.close();
+    for w in workers {
+        let _ = w.join();
+    }
+    let wall = start.elapsed();
+
+    let guard = stats.lock().unwrap();
+    let (decode, append) = (guard.0.clone(), guard.1.clone());
+    drop(guard);
+    Ok(RunReport {
+        cfg: cfg.clone(),
+        ident: ident_pairs(cfg, &server_cfg),
+        decode,
+        append,
+        wall,
+    })
+}
+
+/// Identity pairs: run shape + server-reported engine identity, in the
+/// order the bench gate's ID fields expect to find them.
+fn ident_pairs(cfg: &RunConfig, server_cfg: &Json) -> Vec<(String, String)> {
+    let mut pairs: Vec<(String, String)> = vec![("mode".into(), "\"served\"".into())];
+    // Copy engine identity verbatim from /v1/config (raw JSON values so
+    // strings keep quotes and bools/numbers stay bare).
+    for key in ["policy", "prefetch", "threads", "devices", "async_io", "queue_depth"] {
+        if let Some(v) = server_cfg.get(key) {
+            pairs.push((key.to_string(), v.to_string()));
+        }
+    }
+    pairs.push(("streams".into(), cfg.streams.to_string()));
+    let mut rps = String::new();
+    json::push_f64(&mut rps, cfg.rps);
+    pairs.push(("rps".into(), rps));
+    pairs.push(("mix".into(), format!("\"{}:{}\"", cfg.mix.0, cfg.mix.1)));
+    pairs
+}
+
+fn entry_json(ident: &[(String, String)], op: &str, s: &OpStats, wall: Duration) -> String {
+    use std::fmt::Write as _;
+    let mut b = String::with_capacity(256);
+    b.push('{');
+    for (k, v) in ident {
+        let _ = write!(b, "\"{k}\":{v},");
+    }
+    let mut tps = String::new();
+    json::push_f64(&mut tps, s.tokens_per_s(wall));
+    let _ = write!(
+        b,
+        "\"op\":\"{op}\",\"requests\":{},\"errors\":{},\"tokens\":{},\"tokens_per_s\":{tps},\
+         \"p50_us\":{},\"p90_us\":{},\"p99_us\":{},\"p999_us\":{},\"max_us\":{},\
+         \"mean_us\":{:.1},\"server_us\":{},\"server_queue_us\":{}}}",
+        s.requests,
+        s.errors,
+        s.tokens,
+        s.hist.percentile(0.50),
+        s.hist.percentile(0.90),
+        s.hist.percentile(0.99),
+        s.hist.percentile(0.999),
+        s.hist.max_us(),
+        s.hist.mean_us(),
+        s.server_us,
+        s.queue_us,
+    );
+    b
+}
+
+/// Human-friendly microseconds.
+pub fn fmt_us(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us}µs")
+    } else if us < 1_000_000 {
+        format!("{:.2}ms", us as f64 / 1_000.0)
+    } else {
+        format!("{:.2}s", us as f64 / 1_000_000.0)
+    }
+}
+
+impl RunReport {
+    /// The JSON run file (`BENCH_serving.json`): run header + one flat
+    /// gate-compatible entry per op that saw traffic.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut b = String::with_capacity(1024);
+        let mut rps = String::new();
+        json::push_f64(&mut rps, self.cfg.rps);
+        let _ = write!(
+            b,
+            "{{\n  \"bench\": \"serving\",\n  \"addr\": ",
+        );
+        json::push_str_escaped(&mut b, &self.cfg.addr);
+        let _ = write!(
+            b,
+            ",\n  \"rps\": {rps},\n  \"duration_s\": {:.3},\n  \"connections\": {},\n  \
+             \"steps\": {},\n  \"entries\": [",
+            self.wall.as_secs_f64(),
+            self.cfg.connections,
+            self.cfg.steps,
+        );
+        let mut first = true;
+        for (op, s) in [("decode", &self.decode), ("append", &self.append)] {
+            if s.requests == 0 {
+                continue;
+            }
+            if !first {
+                b.push(',');
+            }
+            first = false;
+            b.push_str("\n    ");
+            b.push_str(&entry_json(&self.ident, op, s, self.wall));
+        }
+        b.push_str("\n  ]\n}\n");
+        b
+    }
+
+    /// Pretty terminal table.
+    pub fn render_table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "redline: {} rps for {:.1}s against {} ({} streams, mix {}:{}, {} conns, {} steps/decode)",
+            self.cfg.rps,
+            self.wall.as_secs_f64(),
+            self.cfg.addr,
+            self.cfg.streams,
+            self.cfg.mix.0,
+            self.cfg.mix.1,
+            self.cfg.connections,
+            self.cfg.steps,
+        );
+        let _ = writeln!(
+            out,
+            "{:<8} {:>7} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "op", "reqs", "errs", "tok/s", "p50", "p90", "p99", "p999", "max"
+        );
+        for (op, s) in [("decode", &self.decode), ("append", &self.append)] {
+            if s.requests == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "{:<8} {:>7} {:>6} {:>9.1} {:>9} {:>9} {:>9} {:>9} {:>9}",
+                op,
+                s.requests,
+                s.errors,
+                s.tokens_per_s(self.wall),
+                fmt_us(s.hist.percentile(0.50)),
+                fmt_us(s.hist.percentile(0.90)),
+                fmt_us(s.hist.percentile(0.99)),
+                fmt_us(s.hist.percentile(0.999)),
+                fmt_us(s.hist.max_us()),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_stats(n: u64) -> OpStats {
+        let mut s = OpStats::default();
+        for i in 0..n {
+            s.requests += 1;
+            s.tokens += 4;
+            s.hist.record(1_000 + i * 10);
+        }
+        s
+    }
+
+    #[test]
+    fn entry_json_is_flat_and_gate_compatible() {
+        let ident = vec![
+            ("mode".to_string(), "\"served\"".to_string()),
+            ("policy".to_string(), "\"topk\"".to_string()),
+            ("streams".to_string(), "4".to_string()),
+            ("rps".to_string(), "20".to_string()),
+            ("mix".to_string(), "\"1:8\"".to_string()),
+        ];
+        let e = entry_json(&ident, "decode", &fake_stats(100), Duration::from_secs(2));
+        // Flat: exactly one object, no nesting.
+        assert_eq!(e.matches('{').count(), 1, "{e}");
+        assert_eq!(e.matches('}').count(), 1);
+        let v = Json::parse(&e).expect("entry parses");
+        assert_eq!(v.get("mode").and_then(Json::as_str), Some("served"));
+        assert_eq!(v.get("op").and_then(Json::as_str), Some("decode"));
+        assert_eq!(v.get("mix").and_then(Json::as_str), Some("1:8"));
+        assert_eq!(v.get("tokens_per_s").and_then(Json::as_f64), Some(200.0));
+        assert!(v.get("p99_us").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(v.get("p999_us").is_some());
+    }
+
+    #[test]
+    fn report_json_parses_and_lists_active_ops() {
+        let report = RunReport {
+            cfg: RunConfig::default(),
+            ident: vec![("mode".to_string(), "\"served\"".to_string())],
+            decode: fake_stats(10),
+            append: OpStats::default(), // no traffic → no entry
+            wall: Duration::from_secs(1),
+        };
+        let text = report.to_json();
+        let v = Json::parse(&text).expect("report parses");
+        let entries = v.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("op").and_then(Json::as_str), Some("decode"));
+        let table = report.render_table();
+        assert!(table.contains("decode"), "{table}");
+        assert!(!table.contains("append"), "{table}");
+    }
+
+    #[test]
+    fn fmt_us_scales() {
+        assert_eq!(fmt_us(950), "950µs");
+        assert_eq!(fmt_us(1_234), "1.23ms");
+        assert_eq!(fmt_us(2_500_000), "2.50s");
+    }
+}

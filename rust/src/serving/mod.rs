@@ -1,0 +1,19 @@
+//! Network serving front end + closed-loop load harness.
+//!
+//! Everything here is dependency-free `std`: [`http`] is a minimal
+//! HTTP/1.1 reader/writer, [`json`] a small parser/printer whose float
+//! round-trip is bit-exact for `f32` payloads, [`server`] the
+//! thread-per-connection front end over the
+//! [`Scheduler`](crate::coordinator::Scheduler), [`args`] the shared
+//! CLI-flag parser, and [`loadgen`] the open-loop redline bencher
+//! (`redline` binary) that drives the server over real sockets and
+//! reports coordinated-omission-resistant latency percentiles.
+
+pub mod args;
+pub mod http;
+pub mod json;
+pub mod loadgen;
+pub mod server;
+
+pub use args::{parse_mix, ArgError, ArgParser};
+pub use server::{Server, ServerConfig};

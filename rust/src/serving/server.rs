@@ -1,0 +1,601 @@
+//! The network serving front end: a dependency-free HTTP/1.1 server
+//! (`std::net`, thread-per-connection) fronting a [`Scheduler`].
+//!
+//! ## Wire protocol (JSON over HTTP/1.1, keep-alive)
+//!
+//! | Endpoint                        | Meaning                                   |
+//! |---------------------------------|-------------------------------------------|
+//! | `GET  /healthz`                 | liveness — `200 ok`                       |
+//! | `GET  /metrics`                 | text exposition of the engine metrics fold|
+//! | `GET  /v1/config`               | engine/server configuration snapshot      |
+//! | `POST /v1/streams`              | open a stream (lazily binds a `Session`)  |
+//! | `POST /v1/streams/{id}/append`  | vision prefill: `{"frame":[f32;T*d]}`     |
+//! | `POST /v1/streams/{id}/decode`  | `{"token":[f32;d],"steps":N,"echo":bool}` |
+//!
+//! Append/decode responses carry per-request latency (execution wall +
+//! queue wait, per decode step), the request's [`StageStats`] breakdown,
+//! and a snapshot of the engine's global `io.*` / `batch.*` counters, so
+//! a network caller sees exactly the accounting an in-process caller
+//! gets. Requests flow through the scheduler — concurrent decodes from
+//! different connections fuse into cross-stream batches exactly like
+//! in-process traffic, and outputs stay bit-identical to solo
+//! [`Session::decode_step`](crate::coordinator::Session::decode_step)
+//! calls (pinned by `rust/tests/test_serving.rs`).
+//!
+//! ## Connection handling
+//!
+//! One acceptor thread; each connection gets its own handler thread with
+//! a bounded total ([`ServerConfig::max_connections`]) — a connection
+//! beyond the bound is answered `503` and closed, never left hanging.
+//! Handlers poll the shutdown flag on a read-timeout tick, so
+//! [`Server::shutdown`] drains idle keep-alive connections promptly and
+//! then shuts the scheduler down (idempotently).
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Completion, Request, RequestKind, Scheduler, StageStats};
+use crate::model::ModelSpec;
+use crate::serving::http::{self, HttpError, HttpRequest};
+use crate::serving::json::{self, Json};
+
+/// Most decode steps honored per request (larger asks are a 400; loop
+/// client-side instead of holding one connection thread for minutes).
+const MAX_STEPS_PER_REQUEST: usize = 1024;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:0` (0 = OS-assigned port; read the
+    /// real one back from [`Server::local_addr`]).
+    pub listen: String,
+    /// Concurrent-connection bound; excess connections get `503`.
+    pub max_connections: usize,
+    /// Request-body byte cap; larger bodies get `413`.
+    pub max_body_bytes: usize,
+    /// Idle-read poll tick: how quickly handlers notice shutdown, and
+    /// the mid-request inactivity timeout (`408`).
+    pub read_timeout: Duration,
+    /// Extra `"key": <raw JSON value>` pairs appended to `GET
+    /// /v1/config` (the CLI adds flags the engine cannot introspect).
+    pub extra_config: Vec<(String, String)>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".to_string(),
+            max_connections: 64,
+            max_body_bytes: 8 << 20,
+            read_timeout: Duration::from_secs(2),
+            extra_config: Vec::new(),
+        }
+    }
+}
+
+struct ServerInner {
+    scheduler: Scheduler,
+    cfg: ServerConfig,
+    spec: ModelSpec,
+    stopping: AtomicBool,
+    /// Live connection-handler threads (acceptor enforces the bound).
+    active: AtomicUsize,
+    /// Monotonic stream-id allocator; ids < `next` are open.
+    next_stream: Mutex<usize>,
+}
+
+/// A running serving front end. Dropping it (or calling
+/// [`Server::shutdown`]) stops accepting, drains handlers, and shuts the
+/// scheduler down.
+pub struct Server {
+    addr: SocketAddr,
+    inner: Arc<ServerInner>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving `scheduler` (callers should
+    /// [`warmup`](crate::coordinator::Engine::warmup) the engine first so
+    /// the first request doesn't pay compile stalls).
+    pub fn start(cfg: ServerConfig, scheduler: Scheduler) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("cannot bind {}", cfg.listen))?;
+        let addr = listener.local_addr().context("no local addr")?;
+        let spec = scheduler.engine().spec();
+        let inner = Arc::new(ServerInner {
+            scheduler,
+            cfg,
+            spec,
+            stopping: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_stream: Mutex::new(0),
+        });
+        let accept_inner = inner.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("nc-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_inner))
+            .context("cannot spawn acceptor")?;
+        Ok(Server {
+            addr,
+            inner,
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// The actually-bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Open streams so far (monotonic).
+    pub fn streams_open(&self) -> usize {
+        *self.inner.next_stream.lock().unwrap()
+    }
+
+    /// Graceful stop: stop accepting, drain connection handlers, shut
+    /// the scheduler down.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        let Some(acceptor) = self.acceptor.take() else {
+            return;
+        };
+        self.inner.stopping.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        let _ = acceptor.join();
+        // Handlers notice `stopping` within one read-timeout tick.
+        let deadline = Instant::now() + self.inner.cfg.read_timeout + Duration::from_secs(3);
+        while self.inner.active.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.inner.scheduler.shutdown();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<ServerInner>) {
+    for conn in listener.incoming() {
+        if inner.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // Connection bound: count optimistically, back out + 503 when
+        // over. The client gets an answer, never a hang.
+        let now_active = inner.active.fetch_add(1, Ordering::SeqCst) + 1;
+        if now_active > inner.cfg.max_connections {
+            inner.active.fetch_sub(1, Ordering::SeqCst);
+            let mut stream = stream;
+            let _ = http::write_response(
+                &mut stream,
+                503,
+                "application/json",
+                b"{\"error\":\"connection limit reached\"}",
+                false,
+            );
+            continue;
+        }
+        let conn_inner = inner.clone();
+        let spawned = std::thread::Builder::new()
+            .name("nc-conn".to_string())
+            .spawn(move || {
+                handle_connection(&conn_inner, stream);
+                conn_inner.active.fetch_sub(1, Ordering::SeqCst);
+            });
+        if spawned.is_err() {
+            // Thread exhaustion: the optimistic count must be undone
+            // (the connection itself just drops closed).
+            inner.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+fn handle_connection(inner: &Arc<ServerInner>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(inner.cfg.read_timeout));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if inner.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        match http::read_request(&mut reader, inner.cfg.max_body_bytes) {
+            Ok(Some(req)) => {
+                let keep = req.keep_alive();
+                let resp = route(inner, &req);
+                if http::write_response(
+                    &mut writer,
+                    resp.status,
+                    resp.content_type,
+                    resp.body.as_bytes(),
+                    keep,
+                )
+                .is_err()
+                {
+                    break;
+                }
+                if !keep {
+                    break;
+                }
+            }
+            Ok(None) => break, // peer closed between requests
+            Err(HttpError::Idle) => continue, // poll tick: re-check stopping
+            Err(HttpError::Bad { status, detail }) => {
+                let _ = http::write_response(
+                    &mut writer,
+                    status,
+                    "application/json",
+                    error_json(&detail).as_bytes(),
+                    false,
+                );
+                break;
+            }
+            Err(HttpError::Io(_)) => break,
+        }
+    }
+}
+
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    fn json(status: u16, body: String) -> Self {
+        Response {
+            status,
+            content_type: "application/json",
+            body,
+        }
+    }
+
+    fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, error_json(msg))
+    }
+
+    fn text(status: u16, body: String) -> Self {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body,
+        }
+    }
+}
+
+fn error_json(msg: &str) -> String {
+    let mut s = String::from("{\"error\":");
+    json::push_str_escaped(&mut s, msg);
+    s.push('}');
+    s
+}
+
+/// `/v1/streams/{id}/{op}` → `(id, op)`.
+fn parse_stream_path(path: &str) -> Option<(usize, &str)> {
+    let rest = path.strip_prefix("/v1/streams/")?;
+    let (id, op) = rest.split_once('/')?;
+    if op.is_empty() || op.contains('/') {
+        return None;
+    }
+    Some((id.parse().ok()?, op))
+}
+
+fn route(inner: &Arc<ServerInner>, req: &HttpRequest) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::text(200, "ok\n".to_string()),
+        ("GET", "/metrics") => Response::text(200, metrics_text(inner)),
+        ("GET", "/v1/config") => Response::json(200, config_json(inner)),
+        ("POST", "/v1/streams") => open_stream(inner),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/config") | (_, "/v1/streams") => {
+            Response::error(405, "method not allowed")
+        }
+        _ => match parse_stream_path(&req.path) {
+            Some((stream, op)) => stream_route(inner, req, stream, op),
+            None => Response::error(404, "unknown route"),
+        },
+    }
+}
+
+fn stream_route(inner: &Arc<ServerInner>, req: &HttpRequest, stream: usize, op: &str) -> Response {
+    if !matches!(op, "append" | "decode") {
+        return Response::error(404, "unknown route");
+    }
+    if req.method != "POST" {
+        return Response::error(405, "method not allowed");
+    }
+    if stream >= *inner.next_stream.lock().unwrap() {
+        return Response::error(404, "unknown stream (open one with POST /v1/streams)");
+    }
+    let body = match req.body_str().map(Json::parse) {
+        Ok(Ok(v)) => v,
+        Ok(Err(e)) => return Response::error(400, &format!("bad JSON body: {e}")),
+        Err(_) => return Response::error(400, "body is not valid UTF-8"),
+    };
+    if op == "append" {
+        handle_append(inner, stream, &body)
+    } else {
+        handle_decode(inner, stream, &body)
+    }
+}
+
+fn open_stream(inner: &Arc<ServerInner>) -> Response {
+    let id = {
+        let mut next = inner.next_stream.lock().unwrap();
+        if *next >= inner.scheduler.max_streams() {
+            return Response::error(503, "stream capacity reached");
+        }
+        let id = *next;
+        *next += 1;
+        id
+    };
+    Response::json(
+        200,
+        format!(
+            "{{\"stream\":{id},\"d\":{},\"tokens_per_frame\":{}}}",
+            inner.spec.d, inner.spec.tokens_per_frame
+        ),
+    )
+}
+
+/// Submit one request and wait for its completion.
+fn serve_one(inner: &Arc<ServerInner>, request: Request) -> Result<Completion, Response> {
+    let rx = inner
+        .scheduler
+        .submit(request)
+        .map_err(|e| Response::error(503, &format!("rejected: {e}")))?;
+    rx.recv()
+        .map_err(|_| Response::error(500, "scheduler dropped the request (shutting down)"))
+}
+
+fn handle_append(inner: &Arc<ServerInner>, stream: usize, body: &Json) -> Response {
+    let Some(frame) = body.get("frame").and_then(Json::as_f32s) else {
+        return Response::error(400, "body needs \"frame\": [f32; tokens_per_frame * d]");
+    };
+    let want = inner.spec.tokens_per_frame * inner.spec.d;
+    if frame.len() != want {
+        return Response::error(
+            400,
+            &format!("frame has {} values, model wants {want}", frame.len()),
+        );
+    }
+    let echo = body.get("echo").and_then(Json::as_bool).unwrap_or(false);
+    let completion = match serve_one(
+        inner,
+        Request {
+            stream,
+            kind: RequestKind::AppendFrame(frame),
+        },
+    ) {
+        Ok(c) => c,
+        Err(resp) => return resp,
+    };
+    match &completion.output {
+        Ok(output) => {
+            let output = echo.then_some(output.as_slice());
+            serve_response(inner, "append", stream, &completion.stats, &[&completion], output)
+        }
+        Err(e) => Response::error(422, e),
+    }
+}
+
+fn handle_decode(inner: &Arc<ServerInner>, stream: usize, body: &Json) -> Response {
+    let Some(token) = body.get("token").and_then(Json::as_f32s) else {
+        return Response::error(400, "body needs \"token\": [f32; d]");
+    };
+    if token.len() != inner.spec.d {
+        return Response::error(
+            400,
+            &format!("token has {} values, model wants {}", token.len(), inner.spec.d),
+        );
+    }
+    let steps = match body.get("steps") {
+        None => 1,
+        Some(v) => match v.as_usize() {
+            Some(n) if (1..=MAX_STEPS_PER_REQUEST).contains(&n) => n,
+            _ => {
+                return Response::error(
+                    400,
+                    &format!("steps must be an integer in 1..={MAX_STEPS_PER_REQUEST}"),
+                )
+            }
+        },
+    };
+    let echo = body.get("echo").and_then(Json::as_bool).unwrap_or(false);
+
+    let mut agg = StageStats::default();
+    let mut completions: Vec<Completion> = Vec::with_capacity(steps);
+    let mut last_output: Vec<f32> = Vec::new();
+    for step in 0..steps {
+        let completion = match serve_one(
+            inner,
+            Request {
+                stream,
+                kind: RequestKind::Decode(token.clone()),
+            },
+        ) {
+            Ok(c) => c,
+            Err(resp) => return resp,
+        };
+        match &completion.output {
+            Ok(output) => {
+                if echo && step + 1 == steps {
+                    last_output = output.clone();
+                }
+                agg.absorb(&completion.stats);
+                completions.push(completion);
+            }
+            Err(e) => {
+                return Response::error(422, &format!("decode step {step}: {e}"));
+            }
+        }
+    }
+    let refs: Vec<&Completion> = completions.iter().collect();
+    let output = echo.then_some(last_output.as_slice());
+    serve_response(inner, "decode", stream, &agg, &refs, output)
+}
+
+/// Build the accounting-rich response every served request returns.
+fn serve_response(
+    inner: &Arc<ServerInner>,
+    op: &str,
+    stream: usize,
+    stats: &StageStats,
+    completions: &[&Completion],
+    output: Option<&[f32]>,
+) -> Response {
+    use std::fmt::Write as _;
+    let exec_us: u128 = completions.iter().map(|c| c.exec_wall.as_micros()).sum();
+    let queue_us: u128 = completions.iter().map(|c| c.queue_wait.as_micros()).sum();
+    let mut b = String::with_capacity(512);
+    let _ = write!(
+        b,
+        "{{\"stream\":{stream},\"op\":\"{op}\",\"steps\":{},\
+         \"latency_us\":{exec_us},\"queue_us\":{queue_us},\"step_latency_us\":[",
+        completions.len(),
+    );
+    for (i, c) in completions.iter().enumerate() {
+        if i > 0 {
+            b.push(',');
+        }
+        let _ = write!(b, "{}", c.exec_wall.as_micros());
+    }
+    let _ = write!(
+        b,
+        "],\"io_us\":{},\"compute_us\":{},\"select_us\":{},\"host_us\":{},\
+         \"bytes_loaded\":{},\"prefetch_hits\":{},\"retained\":{:.6}",
+        stats.io.as_micros(),
+        stats.compute.as_micros(),
+        stats.select.as_micros(),
+        stats.host.as_micros(),
+        stats.bytes_loaded,
+        stats.prefetch_hits,
+        stats.retained_fraction(),
+    );
+    // Global engine counters (monotonic — network callers diff
+    // successive responses the way in-process callers diff
+    // `Engine::metrics` snapshots).
+    let m = inner.scheduler.engine().metrics();
+    let _ = write!(
+        b,
+        ",\"engine\":{{\"io_s\":{:.9},\"io_bytes\":{},\"io_shared_bytes\":{},\
+         \"io_overlapped_s\":{:.9},\"batch_batches\":{},\"batch_members\":{}}}",
+        m.total("io").as_secs_f64(),
+        m.bytes("io"),
+        m.bytes("io.shared_bytes"),
+        m.total("io.overlapped").as_secs_f64(),
+        m.count("batch.occupancy"),
+        m.bytes("batch.occupancy"),
+    );
+    if let Some(out) = output {
+        b.push_str(",\"output\":");
+        json::push_f32_array(&mut b, out);
+    }
+    b.push('}');
+    Response::json(200, b)
+}
+
+/// Text exposition of the engine metrics fold plus server gauges.
+fn metrics_text(inner: &Arc<ServerInner>) -> String {
+    use std::fmt::Write as _;
+    let m = inner.scheduler.engine().metrics();
+    let mut out = String::with_capacity(1024);
+    out.push_str("# neuron-chunking serving metrics (counters since engine start)\n");
+    for (stage, d) in m.stages() {
+        let _ = writeln!(out, "nc_stage_seconds{{stage=\"{stage}\"}} {:.9}", d.as_secs_f64());
+    }
+    for (stage, c) in m.counts_iter() {
+        let _ = writeln!(out, "nc_stage_count{{stage=\"{stage}\"}} {c}");
+    }
+    for (stage, bytes) in m.bytes_iter() {
+        let _ = writeln!(out, "nc_stage_bytes{{stage=\"{stage}\"}} {bytes}");
+    }
+    let _ = writeln!(
+        out,
+        "nc_server_active_connections {}",
+        inner.active.load(Ordering::SeqCst)
+    );
+    let _ = writeln!(out, "nc_server_streams_open {}", *inner.next_stream.lock().unwrap());
+    let _ = writeln!(out, "nc_server_queued_requests {}", inner.scheduler.queued());
+    out
+}
+
+/// Engine/server configuration snapshot — the loadgen stamps these into
+/// its run reports so `redline compare` and the bench gate match entries
+/// on true served identity, not client-side guesses.
+fn config_json(inner: &Arc<ServerInner>) -> String {
+    use std::fmt::Write as _;
+    let engine = inner.scheduler.engine();
+    let mut b = String::with_capacity(256);
+    b.push_str("{\"model\":");
+    json::push_str_escaped(&mut b, &inner.spec.name);
+    b.push_str(",\"policy\":");
+    json::push_str_escaped(&mut b, engine.policy().name());
+    let _ = write!(
+        b,
+        ",\"d\":{},\"tokens_per_frame\":{},\"layers\":{},\"prefetch\":{},\"threads\":{},\
+         \"devices\":{},\"async_io\":{},\"queue_depth\":{},\"workers\":{},\"max_streams\":{},\
+         \"max_connections\":{}",
+        inner.spec.d,
+        inner.spec.tokens_per_frame,
+        inner.spec.layers,
+        engine.prefetch(),
+        engine.exec_threads(),
+        engine.devices(),
+        engine.async_io(),
+        engine.io_queue_depth(),
+        inner.scheduler.workers(),
+        inner.scheduler.max_streams(),
+        inner.cfg.max_connections,
+    );
+    for (key, raw) in &inner.cfg.extra_config {
+        b.push(',');
+        json::push_str_escaped(&mut b, key);
+        b.push(':');
+        b.push_str(raw);
+    }
+    b.push('}');
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_paths_parse() {
+        assert_eq!(parse_stream_path("/v1/streams/3/decode"), Some((3, "decode")));
+        assert_eq!(parse_stream_path("/v1/streams/0/append"), Some((0, "append")));
+        for bad in [
+            "/v1/streams",
+            "/v1/streams/",
+            "/v1/streams/3",
+            "/v1/streams/x/decode",
+            "/v1/streams/3/decode/extra",
+            "/v2/streams/3/decode",
+        ] {
+            assert_eq!(parse_stream_path(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn error_bodies_escape() {
+        assert_eq!(error_json("a\"b"), "{\"error\":\"a\\\"b\"}");
+    }
+}

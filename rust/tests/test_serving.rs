@@ -1,0 +1,404 @@
+//! Wire-level tests for the serving front end + load harness.
+//!
+//! The load-bearing guarantee: a decode served over the network is
+//! **bit-identical** to the same decode run in-process through
+//! `Session::decode_step` — the HTTP/JSON layer adds latency, never
+//! numerics (float arrays survive the wire exactly; see
+//! `serving::json`). The rest pins the protocol's failure behavior:
+//! malformed traffic gets clean statuses, the connection bound answers
+//! `503` instead of hanging, and shutdown is graceful from both the
+//! explicit and the `Drop` path.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use neuron_chunking::coordinator::{Engine, Policy, Scheduler, SchedulerConfig};
+use neuron_chunking::serving::http;
+use neuron_chunking::serving::json::{self, Json};
+use neuron_chunking::serving::loadgen::{self, client::Client, compare_files, RunConfig};
+use neuron_chunking::serving::{Server, ServerConfig};
+use neuron_chunking::workload::FrameTrace;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tiny_engine() -> Engine {
+    Engine::builder("tiny")
+        .policy(Policy::TopK)
+        .sparsity(0.3)
+        .artifacts(&artifacts_dir())
+        .build()
+        .expect("tiny engine")
+}
+
+/// A live server over a fresh tiny engine; port 0 → OS-assigned.
+fn start_server(max_connections: usize, workers: usize) -> Server {
+    let sched = Scheduler::spawn(
+        SchedulerConfig {
+            workers,
+            ..SchedulerConfig::default()
+        },
+        tiny_engine,
+    );
+    sched.engine().warmup().expect("warmup");
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".to_string(),
+        max_connections,
+        max_body_bytes: 64 * 1024,
+        read_timeout: Duration::from_millis(200),
+        extra_config: vec![("test".to_string(), "true".to_string())],
+    };
+    Server::start(cfg, sched).expect("server start")
+}
+
+fn addr_of(server: &Server) -> String {
+    server.local_addr().to_string()
+}
+
+/// The acceptance criterion: open stream → append → decode over
+/// loopback HTTP, outputs bit-identical to the in-process engine.
+#[test]
+fn loopback_round_trip_is_bit_identical_to_in_process() {
+    // In-process reference: same model, same policy, same seed.
+    let reference = tiny_engine();
+    reference.warmup().expect("warmup");
+    let spec = reference.spec();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 2, 11);
+    let frame = trace.frame(0);
+    let token = vec![0.05f32; spec.d];
+    let session = reference.new_session();
+    let (ref_append, _) = session.append_frame(&frame).expect("reference append");
+    let ref_decodes: Vec<Vec<f32>> = (0..3)
+        .map(|_| session.decode_step(&token).expect("reference decode").0)
+        .collect();
+
+    // Served: same traffic over the wire, echoing outputs back.
+    let server = start_server(8, 1);
+    let mut client = Client::connect(&addr_of(&server)).expect("connect");
+    let stream = client.open_stream().expect("open stream");
+
+    let mut body = String::from("{\"echo\":true,\"frame\":");
+    json::push_f32_array(&mut body, &frame);
+    body.push('}');
+    let reply = client
+        .request("POST", &format!("/v1/streams/{stream}/append"), &body)
+        .expect("served append");
+    let served_append = reply
+        .get("output")
+        .and_then(Json::as_f32s)
+        .expect("append echoes output");
+    assert_bits_eq(&served_append, &ref_append, "append");
+
+    for (step, expected) in ref_decodes.iter().enumerate() {
+        let mut body = String::from("{\"echo\":true,\"steps\":1,\"token\":");
+        json::push_f32_array(&mut body, &token);
+        body.push('}');
+        let reply = client
+            .request("POST", &format!("/v1/streams/{stream}/decode"), &body)
+            .expect("served decode");
+        let served = reply
+            .get("output")
+            .and_then(Json::as_f32s)
+            .expect("decode echoes output");
+        assert_bits_eq(&served, expected, &format!("decode step {step}"));
+        // The response carries the engine's accounting, not just data.
+        assert!(reply.get("latency_us").and_then(Json::as_f64).is_some());
+        assert!(reply.get("engine").and_then(|e| e.get("io_bytes")).is_some());
+    }
+    server.shutdown();
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: element {i} differs: {g} vs {w}"
+        );
+    }
+}
+
+/// Raw-socket request, returning (status, body).
+fn raw_request(addr: &str, payload: &[u8]) -> (u16, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    stream.write_all(payload).expect("send");
+    let mut reader = BufReader::new(stream);
+    let (status, body, _keep) = http::read_response(&mut reader).expect("response");
+    (status, body)
+}
+
+#[test]
+fn protocol_violations_get_clean_statuses() {
+    let server = start_server(8, 1);
+    let addr = addr_of(&server);
+
+    // Chunked transfer encoding → 501.
+    let (status, _) = raw_request(
+        &addr,
+        b"POST /v1/streams HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+    );
+    assert_eq!(status, 501);
+
+    // Declared body larger than the server limit → 413.
+    let (status, _) = raw_request(
+        &addr,
+        b"POST /v1/streams HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n",
+    );
+    assert_eq!(status, 413);
+
+    // POST without a length → 411.
+    let (status, _) = raw_request(&addr, b"POST /v1/streams HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 411);
+
+    // Unknown route → 404; wrong method on a known route → 405.
+    let (status, _) = raw_request(&addr, b"GET /nope HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 404);
+    let (status, _) = raw_request(&addr, b"DELETE /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 405);
+
+    // Stream that was never opened → 404 with a JSON error body.
+    let (status, body) = raw_request(
+        &addr,
+        b"POST /v1/streams/7/decode HTTP/1.1\r\nContent-Length: 2\r\n\r\n{}",
+    );
+    assert_eq!(status, 404);
+    let err = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(err.get("error").and_then(Json::as_str).is_some());
+
+    // Garbage JSON on an open stream → 400.
+    let mut client = Client::connect(&addr).expect("connect");
+    let stream = client.open_stream().expect("open");
+    let (status, _) = raw_request(
+        &addr,
+        format!("POST /v1/streams/{stream}/decode HTTP/1.1\r\nContent-Length: 4\r\n\r\nnope")
+            .as_bytes(),
+    );
+    assert_eq!(status, 400);
+    server.shutdown();
+}
+
+#[test]
+fn health_metrics_and_config_respond() {
+    let server = start_server(8, 1);
+    let mut client = Client::connect(&addr_of(&server)).expect("connect");
+
+    let (status, body) = raw_request(&addr_of(&server), b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    assert_eq!(body, b"ok\n");
+
+    let cfg = client.get("/v1/config").expect("config");
+    assert_eq!(cfg.get("model").and_then(Json::as_str), Some("tiny"));
+    assert_eq!(cfg.get("policy").and_then(Json::as_str), Some("topk"));
+    assert!(cfg.get("d").and_then(Json::as_usize).is_some());
+    // extra_config pairs pass through verbatim.
+    assert_eq!(cfg.get("test").and_then(Json::as_bool), Some(true));
+
+    // Drive one request so the metrics fold is non-trivial.
+    let stream = client.open_stream().expect("open");
+    let d = cfg.get("d").and_then(Json::as_usize).unwrap();
+    let tpf = cfg.get("tokens_per_frame").and_then(Json::as_usize).unwrap();
+    client.append(stream, &vec![0.05f32; tpf * d]).expect("append");
+    let (status, body) = raw_request(&addr_of(&server), b"GET /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("nc_stage_seconds{stage=\"io\"}"), "{text}");
+    assert!(text.contains("nc_server_streams_open 1"), "{text}");
+    server.shutdown();
+}
+
+/// Clients beyond the connection bound get an immediate `503`, never a
+/// hang (requests on the in-bound connections keep working).
+#[test]
+fn connection_limit_returns_503_not_a_hang() {
+    let server = start_server(2, 1);
+    let addr = addr_of(&server);
+    // Two keep-alive connections, both established and answering (so the
+    // acceptor has definitely counted them).
+    let mut a = Client::connect(&addr).expect("conn a");
+    let mut b = Client::connect(&addr).expect("conn b");
+    a.get("/healthz").expect("a healthz");
+    b.get("/healthz").expect("b healthz");
+
+    // The third is over the bound: answered 503 and closed, within the
+    // read timeout (a hang would error the read instead).
+    let (status, body) = raw_request(&addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 503);
+    assert!(String::from_utf8(body).unwrap().contains("connection limit"));
+
+    // The in-bound connections still serve.
+    a.get("/healthz").expect("a again");
+    drop(a);
+    drop(b);
+    // Freed capacity is reusable (allow a beat for the handler threads
+    // to notice the closes and decrement).
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let mut c = Client::connect(&addr).expect("conn c");
+        match c.get("/healthz") {
+            Ok(_) => break,
+            Err(_) if std::time::Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => panic!("capacity never freed: {e}"),
+        }
+    }
+    server.shutdown();
+}
+
+/// Stream capacity (scheduler `max_streams`) is enforced at open with a
+/// `503`, and shutdown works from the `Drop` path too.
+#[test]
+fn stream_capacity_and_drop_shutdown() {
+    let sched = Scheduler::spawn(
+        SchedulerConfig {
+            workers: 1,
+            max_streams: 2,
+            ..SchedulerConfig::default()
+        },
+        tiny_engine,
+    );
+    sched.engine().warmup().expect("warmup");
+    let server = Server::start(
+        ServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            read_timeout: Duration::from_millis(200),
+            ..ServerConfig::default()
+        },
+        sched,
+    )
+    .expect("start");
+    let mut client = Client::connect(&addr_of(&server)).expect("connect");
+    assert_eq!(client.open_stream().expect("first"), 0);
+    assert_eq!(client.open_stream().expect("second"), 1);
+    let err = client.open_stream().expect_err("third must be rejected");
+    assert!(err.contains("503"), "{err}");
+    drop(server); // Drop path: must not panic or deadlock.
+}
+
+/// The full harness loop: redline drives a live server open-loop, the
+/// report carries served identity + percentiles, and comparing a run
+/// against itself is regression-free.
+#[test]
+fn redline_run_and_compare_end_to_end() {
+    let server = start_server(16, 2);
+    let cfg = RunConfig {
+        addr: addr_of(&server),
+        rps: 60.0,
+        burst: 4,
+        duration: Duration::from_millis(900),
+        streams: 2,
+        connections: 2,
+        mix: (1, 4),
+        steps: 2,
+    };
+    let report = loadgen::run(&cfg).expect("redline run");
+    assert!(report.decode.requests > 0, "no decodes issued");
+    assert_eq!(report.decode.errors, 0, "decode errors");
+    assert_eq!(report.append.errors, 0, "append errors");
+    assert_eq!(report.decode.tokens, 2 * report.decode.requests);
+    assert!(report.decode.hist.percentile(0.99) > 0);
+
+    let text = report.to_json();
+    let doc = Json::parse(&text).expect("run file parses");
+    let entries = doc.get("entries").and_then(Json::as_arr).expect("entries");
+    assert!(!entries.is_empty());
+    for e in entries {
+        assert_eq!(e.get("mode").and_then(Json::as_str), Some("served"));
+        assert_eq!(e.get("policy").and_then(Json::as_str), Some("topk"));
+        assert!(e.get("tokens_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(e.get("p99_us").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(e.get("p999_us").is_some());
+    }
+
+    // Same build, same run → identical file → zero regressions: the
+    // `redline compare` half of the acceptance criterion.
+    let report2 = compare_files(&text, &text, 10.0).expect("compare");
+    assert_eq!(report2.regressions(), 0);
+    assert!(report2.matched >= 1);
+    assert!(report2.render().contains("0 regression(s)"));
+    server.shutdown();
+}
+
+/// Decode responses from concurrent network streams are bit-identical
+/// to solo in-process decoding even through the batching window (the
+/// scheduler's fused path guarantees it; this pins the network layer on
+/// top of it).
+#[test]
+fn served_batched_decodes_stay_bit_identical() {
+    let sched = Scheduler::spawn(
+        SchedulerConfig {
+            workers: 2,
+            batch_window: Duration::from_micros(300),
+            ..SchedulerConfig::default()
+        },
+        tiny_engine,
+    );
+    sched.engine().warmup().expect("warmup");
+    let server = Server::start(
+        ServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            read_timeout: Duration::from_millis(200),
+            ..ServerConfig::default()
+        },
+        sched,
+    )
+    .expect("start");
+    let addr = addr_of(&server);
+
+    // Reference: two independent in-process sessions.
+    let reference = tiny_engine();
+    reference.warmup().expect("warmup");
+    let spec = reference.spec();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 2, 11);
+    let token = vec![0.05f32; spec.d];
+    let mut expected: Vec<Vec<Vec<f32>>> = Vec::new();
+    for s in 0..2 {
+        let session = reference.new_session();
+        session.append_frame(&trace.frame(s)).expect("ref append");
+        expected.push(
+            (0..2)
+                .map(|_| session.decode_step(&token).expect("ref decode").0)
+                .collect(),
+        );
+    }
+
+    // Served: two clients decoding concurrently through the window.
+    let mut handles = Vec::new();
+    for s in 0..2usize {
+        let addr = addr.clone();
+        let frame = trace.frame(s);
+        let token = token.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let stream = client.open_stream().expect("open");
+            client.append(stream, &frame).expect("append");
+            let mut outs = Vec::new();
+            for _ in 0..2 {
+                let mut body = String::from("{\"echo\":true,\"steps\":1,\"token\":");
+                json::push_f32_array(&mut body, &token);
+                body.push('}');
+                let reply = client
+                    .request("POST", &format!("/v1/streams/{stream}/decode"), &body)
+                    .expect("decode");
+                outs.push(reply.get("output").and_then(Json::as_f32s).expect("echo"));
+            }
+            // Key by the frame index, not the server-assigned stream
+            // id — open order between the threads is racy.
+            (s, outs)
+        }));
+    }
+    for handle in handles {
+        let (s, outs) = handle.join().expect("client thread");
+        for (step, out) in outs.iter().enumerate() {
+            assert_bits_eq(out, &expected[s][step], &format!("client {s} step {step}"));
+        }
+    }
+    server.shutdown();
+}

@@ -1,9 +1,10 @@
-//! `bench-gate` — the CI perf-regression gate over `BENCH_e2e.json`.
+//! `bench-gate` — the CI perf-regression gate over `BENCH_e2e.json` and
+//! `BENCH_serving.json` (the `redline` wire-level run file).
 //!
 //! Diffs the current bench report against the committed baseline
 //! (`BENCH_baseline.json`) and fails (exit 1) when any matched entry's
-//! `tokens_per_s` drops, or `p99_us` rises, by more than the threshold
-//! (default 15%, `NC_BENCH_GATE_PCT` or `--pct N` overrides).
+//! `tokens_per_s` drops, or `p99_us`/`p999_us` rises, by more than the
+//! threshold (default 15%, `NC_BENCH_GATE_PCT` or `--pct N` overrides).
 //!
 //! Usage:
 //!   bench-gate CURRENT.json BASELINE.json [--pct N] [--relative] [--update]
@@ -20,9 +21,10 @@
 //!   relative to the rest of the suite are flagged.
 //!
 //! Entries are matched on their identifying fields (mode, policy,
-//! prefetch, threads, streams, devices, op, async_io, queue_depth);
-//! entries present on only one side are reported but never fail the gate
-//! (the bench matrix is allowed to grow).
+//! prefetch, threads, streams, devices, op, async_io, queue_depth, rps,
+//! mix — the last two identify served redline runs); entries present on
+//! only one side are reported but never fail the gate (the bench matrix
+//! is allowed to grow).
 //!
 //! The JSON is the flat machine-readable format `bench_e2e` emits; the
 //! tiny parser below handles exactly that shape (one level of nesting,
@@ -37,6 +39,7 @@ struct Entry {
     key: String,
     tokens_per_s: f64,
     p99_us: f64,
+    p999_us: f64,
 }
 
 /// Split the fields of one flat JSON object body (no nested containers).
@@ -77,7 +80,10 @@ fn parse_object(body: &str) -> BTreeMap<String, String> {
 /// Extract every measurement object (anything with a `tokens_per_s`
 /// field) from a bench report.
 fn parse_entries(json: &str) -> Vec<Entry> {
-    const ID_FIELDS: [&str; 9] = [
+    // Keep in sync with `ID_FIELDS` in
+    // `rust/src/serving/loadgen/compare.rs` (redline's compare applies
+    // the same matching so local verdicts mirror the CI gate).
+    const ID_FIELDS: [&str; 11] = [
         "mode",
         "policy",
         "prefetch",
@@ -87,6 +93,8 @@ fn parse_entries(json: &str) -> Vec<Entry> {
         "op",
         "async_io",
         "queue_depth",
+        "rps",
+        "mix",
     ];
     let mut entries = Vec::new();
     let bytes = json.as_bytes();
@@ -112,6 +120,10 @@ fn parse_entries(json: &str) -> Vec<Entry> {
                             .unwrap_or(0.0),
                         p99_us: fields
                             .get("p99_us")
+                            .and_then(|v| v.parse().ok())
+                            .unwrap_or(0.0),
+                        p999_us: fields
+                            .get("p999_us")
                             .and_then(|v| v.parse().ok())
                             .unwrap_or(0.0),
                     });
@@ -262,22 +274,24 @@ fn main() -> ExitCode {
         } else {
             ratio < floor
         };
-        // p99 gates only in absolute mode (a latency percentile has no
-        // meaningful cross-entry normalization).
-        let p99_bad = !relative
-            && base.p99_us > 0.0
-            && cur.p99_us > 0.0
-            && cur.p99_us / base.p99_us > ceil;
-        if tput_bad || p99_bad {
+        // Tail latency gates only in absolute mode (a latency percentile
+        // has no meaningful cross-entry normalization).
+        let tail_bad = |b: f64, c: f64| !relative && b > 0.0 && c > 0.0 && c / b > ceil;
+        let p99_bad = tail_bad(base.p99_us, cur.p99_us);
+        let p999_bad = tail_bad(base.p999_us, cur.p999_us);
+        if tput_bad || p99_bad || p999_bad {
             failures += 1;
             println!(
-                "  [FAIL] {}: tokens/s {:.1} -> {:.1} ({:+.1}%), p99 {:.1}us -> {:.1}us",
+                "  [FAIL] {}: tokens/s {:.1} -> {:.1} ({:+.1}%), p99 {:.1}us -> {:.1}us, \
+                 p999 {:.1}us -> {:.1}us",
                 base.key,
                 base.tokens_per_s,
                 cur.tokens_per_s,
                 (ratio - 1.0) * 100.0,
                 base.p99_us,
-                cur.p99_us
+                cur.p99_us,
+                base.p999_us,
+                cur.p999_us
             );
         }
     }

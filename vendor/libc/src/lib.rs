@@ -1,6 +1,7 @@
 //! Minimal stand-in for the `libc` crate (no registry access in the build
-//! environment). Declares only what `storage/real.rs` uses: positional
-//! reads, fadvise hints, and the `O_DIRECT` flag.
+//! environment). Declares only what the crate uses: positional reads,
+//! fadvise hints, the `O_DIRECT` flag, and `signal` for the serving
+//! front end's graceful-shutdown handler.
 
 #![allow(non_camel_case_types)]
 
@@ -27,8 +28,26 @@ pub const O_DIRECT: c_int = 0;
 pub const POSIX_FADV_RANDOM: c_int = 1;
 pub const POSIX_FADV_DONTNEED: c_int = 4;
 
+/// `void (*)(int)` handler address, as `signal(2)` takes it.
+pub type sighandler_t = usize;
+
+pub const SIGINT: c_int = 2;
+pub const SIGTERM: c_int = 15;
+
 extern "C" {
     pub fn pread(fd: c_int, buf: *mut c_void, count: size_t, offset: off_t) -> ssize_t;
+}
+
+#[cfg(unix)]
+extern "C" {
+    pub fn signal(signum: c_int, handler: sighandler_t) -> sighandler_t;
+}
+
+/// No-op where `signal(2)` is unavailable: the server still shuts down
+/// via `--duration` or process exit.
+#[cfg(not(unix))]
+pub unsafe fn signal(_signum: c_int, _handler: sighandler_t) -> sighandler_t {
+    0
 }
 
 #[cfg(target_os = "linux")]
