@@ -467,6 +467,143 @@ fn main() {
         }
     }
 
+    // --- fault_tail sweep: hedged vs unhedged tail under a straggler ---
+    // The robustness claim in one number: the same routed plan submitted
+    // through the async ticket path (`AsyncIoQueue::submit_hedged`)
+    // against a file-backed replicated pool whose member 0 stalls a few
+    // percent of its reads. Unhedged, every stall lands in the caller's
+    // tail; hedged, the ticket waiter re-issues the straggler's commands
+    // to the replica at the hedge deadline and completes from whichever
+    // source wins, so p999 collapses from the stall duration to the
+    // hedge budget. (The inline `fan_out_hedged` path drains stragglers
+    // before returning, so only this async path shows the wall-clock
+    // win.)
+    let mut fault_entries: Vec<(Entry, f64)> = Vec::new();
+    {
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        use neuron_chunking::latency::Chunk;
+        use neuron_chunking::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+        use neuron_chunking::plan::{CoalescePolicy, IoPlanner, PlanReceipt, ShardedPlan};
+        use neuron_chunking::storage::{
+            AsyncIoQueue, DevicePool, FaultConfig, FaultInjector, HedgeConfig, PoolStats,
+            StripeLayout, StripePolicy,
+        };
+
+        let s = WeightStore::new(ModelSpec::tiny(), false, 42);
+        let image = s.build_image();
+        let fault_samples = if quick { 128 } else { 512 };
+        let root = std::env::temp_dir().join(format!("nc_bench_fault_{}", std::process::id()));
+        std::fs::create_dir_all(&root).unwrap();
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        // Hot (replicated) region head: every extent is replica-covered,
+        // so a straggling original always has somewhere to hedge to.
+        let plan = planner.plan_chunks(
+            &s.layout,
+            MatrixId::new(0, MatrixKind::Up),
+            &[Chunk::new(0, 16)],
+            None,
+        );
+        let mut tails: Vec<f64> = Vec::new();
+        for hedged in [false, true] {
+            let stripe =
+                StripeLayout::build_replicated(&s.layout, 2, StripePolicy::RoundRobin, None, 2);
+            let shards = stripe.shard_image(&image);
+            let paths: Vec<std::path::PathBuf> = shards
+                .iter()
+                .enumerate()
+                .map(|(m, data)| {
+                    let p = root.join(format!("member{m}.img"));
+                    std::fs::write(&p, data).unwrap();
+                    p
+                })
+                .collect();
+            // Factor 0 disables hedging, so both arms run the identical
+            // submit_hedged call site and the identical fault sequence
+            // (fresh injector, same seed, same member-0 read order).
+            let factor = if hedged { 4.0 } else { 0.0 };
+            let mut pool = DevicePool::from_files(&paths, stripe, 2, false)
+                .unwrap()
+                .with_hedge(HedgeConfig {
+                    factor,
+                    floor: Duration::from_micros(500),
+                });
+            pool.wrap_members(|i, inner| {
+                if i == 0 {
+                    Arc::new(FaultInjector::new(
+                        inner,
+                        FaultConfig {
+                            spike_rate: 0.03,
+                            spike: Duration::from_millis(10),
+                            ..FaultConfig::default()
+                        },
+                    ))
+                } else {
+                    inner
+                }
+            });
+            let health = Some(pool.health());
+            let queue = AsyncIoQueue::start_with_health(pool.member_arcs(), 2, health);
+            let mut sharded = ShardedPlan::default();
+            pool.route_plan(&plan, &mut sharded);
+            let mut receipt = PlanReceipt::default();
+            let mut scratch = PoolStats::default();
+            for _ in 0..4 {
+                receipt.presize_for(plan.cmds());
+                let ticket = queue.submit_hedged(&sharded, &pool);
+                ticket.wait_scatter(&mut receipt.bytes, &mut scratch).unwrap(); // warm
+            }
+            let samples = sample_steps(fault_samples, || {
+                receipt.presize_for(plan.cmds());
+                let ticket = queue.submit_hedged(&sharded, &pool);
+                black_box(ticket.wait_scatter(&mut receipt.bytes, &mut scratch).unwrap());
+            });
+            let (p50, p99) = percentiles_us(&samples);
+            let p999 = stats::percentile(&samples, 99.9) * 1e6;
+            let h = pool.health().snapshot();
+            let label = if hedged { "hedged" } else { "unhedged" };
+            println!(
+                "{:<56} {:>12.0} sub/s  p99={:.0}us p999={:.0}us hedges={} wins={}",
+                format!("fault_tail submit [{label}] spike=3%x10ms"),
+                1.0 / stats::mean(&samples),
+                p99,
+                p999,
+                h.hedges,
+                h.hedge_wins
+            );
+            tails.push(p999);
+            fault_entries.push((
+                Entry {
+                    mode: "fault_tail",
+                    policy: "raw",
+                    prefetch: false,
+                    threads: 2,
+                    streams: 1,
+                    devices: 2,
+                    async_io: true,
+                    queue_depth: 2,
+                    op: if hedged { "submit_hedged" } else { "submit_unhedged" },
+                    tokens_per_s: 1.0 / stats::mean(&samples),
+                    p50_us: p50,
+                    p99_us: p99,
+                    samples: samples.len(),
+                },
+                p999,
+            ));
+            drop(queue);
+            for p in paths {
+                std::fs::remove_file(p).ok();
+            }
+        }
+        std::fs::remove_dir_all(&root).ok();
+        println!(
+            "fault_tail: hedged p999 {:.2}ms vs unhedged {:.2}ms",
+            tails[1] / 1e3,
+            tails[0] / 1e3
+        );
+    }
+
     // --- experiment-harness point cost (what figure sweeps pay) ---
     if !quick {
         use neuron_chunking::experiments::{IoPolicy, PaperRig, RigConfig};
@@ -509,22 +646,33 @@ fn main() {
             format!("  {},\"shared_ratio\":{:.4}}}", &base[..base.len() - 1], ratio)
         })
         .collect();
+    // Fault-tail rows carry p999 as an extra field so the gate can hold
+    // the hedged tail below the unhedged stall duration.
+    let fault_rows: Vec<String> = fault_entries
+        .iter()
+        .map(|(e, p999)| {
+            let base = e.to_json();
+            format!("  {},\"p999_us\":{:.3}}}", &base[..base.len() - 1], p999)
+        })
+        .collect();
     let json = format!(
         "{{\n\"bench\":\"e2e\",\n\"model\":\"tiny\",\n\"entries\":[\n{}\n],\n\
          \"device_scaling\":[\n{}\n],\n\"async_overlap\":[\n{}\n],\n\
-         \"batch_scaling\":[\n{}\n]\n}}\n",
+         \"batch_scaling\":[\n{}\n],\n\"fault_tail\":[\n{}\n]\n}}\n",
         rows.join(",\n"),
         dev_rows.join(",\n"),
         async_rows.join(",\n"),
-        batch_rows.join(",\n")
+        batch_rows.join(",\n"),
+        fault_rows.join(",\n")
     );
     std::fs::write(&path, &json).expect("write bench json");
     println!(
         "\nwrote {path} ({} entries + {} device-scaling + {} async-overlap + {} batch-scaling \
-         entries)",
+         + {} fault-tail entries)",
         entries.len(),
         device_entries.len(),
         async_entries.len(),
-        batch_entries.len()
+        batch_entries.len(),
+        fault_entries.len()
     );
 }

@@ -86,8 +86,9 @@ use crate::reorder::HotColdReorder;
 use crate::runtime::{Manifest, ModelMeta, Tensor, XlaRuntime};
 use crate::sparsify::{SelectionMask, Selector};
 use crate::storage::{
-    AsyncIoQueue, DevicePool, DeviceProfile, ProfileConfig, Profiler, SimulatedSsd, StripeLayout,
-    StripePolicy,
+    dead_member_from_env, AsyncIoQueue, DevicePool, DeviceProfile, FaultConfig, FaultHandle,
+    FaultInjector, HedgeConfig, PoolHealthSnapshot, ProfileConfig, Profiler, SimulatedSsd,
+    StripeLayout, StripePolicy,
 };
 
 /// Builder for [`Engine`] — the only way to construct one.
@@ -106,6 +107,7 @@ pub struct EngineBuilder {
     member_profiles: Option<Vec<DeviceProfile>>,
     stripe_policy: StripePolicy,
     stripe_bytes: Option<usize>,
+    replication: usize,
     async_io: bool,
     io_queue_depth: usize,
     backing_dir: Option<PathBuf>,
@@ -129,6 +131,13 @@ impl EngineBuilder {
         let async_io = std::env::var("NC_ASYNC_IO")
             .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
             .unwrap_or(false);
+        // `NC_REPLICATION=r` turns on hot-stripe replication suite-wide
+        // (chaos CI runs every test against a replicated pool).
+        let replication = std::env::var("NC_REPLICATION")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&r| r >= 1)
+            .unwrap_or(1);
         Self {
             model: model.to_string(),
             profile: DeviceProfile::nano(),
@@ -143,6 +152,7 @@ impl EngineBuilder {
             member_profiles: None,
             stripe_policy: StripePolicy::RoundRobin,
             stripe_bytes: None,
+            replication,
             async_io,
             io_queue_depth: 2,
             backing_dir: None,
@@ -227,6 +237,18 @@ impl EngineBuilder {
     /// `⌈rows / (4·devices)⌉` rows).
     pub fn stripe_bytes(mut self, bytes: usize) -> Self {
         self.stripe_bytes = if bytes == 0 { None } else { Some(bytes) };
+        self
+    }
+
+    /// Hot-stripe replication factor (default 1, or `NC_REPLICATION`):
+    /// each matrix's hot head is stored on `r` pool members
+    /// ([`StripeLayout::build_replicated`]), so reads route to the
+    /// least-loaded holder, hedge around stragglers, and keep serving
+    /// replica-covered extents when a member dies. Replicas are
+    /// byte-identical — outputs and selections are invariant in `r`.
+    /// Clamped to the member count at build time.
+    pub fn replication(mut self, r: usize) -> Self {
+        self.replication = r.max(1);
         self
     }
 
@@ -317,25 +339,39 @@ impl EngineBuilder {
         // member tables into the pool-effective T[s] that selection
         // utility prices chunks with (homogeneous pools reuse the single
         // member table verbatim).
-        let stripe =
-            StripeLayout::build(&store.layout, n_dev, self.stripe_policy, self.stripe_bytes);
+        let stripe = StripeLayout::build_replicated(
+            &store.layout,
+            n_dev,
+            self.stripe_policy,
+            self.stripe_bytes,
+            self.replication,
+        );
         let table = if distinct.len() == 1 {
             distinct[0].1.clone()
         } else {
             LatencyTable::blended(&member_tables, stripe.device_bytes())
         };
-        let pool = build_pool(
+        let mut pool = build_pool(
             &member_profiles,
             stripe,
             &store.build_image(),
             self.seed ^ 0xD1CE,
             self.backing_dir.as_deref(),
         )?
-        .with_tables(member_tables.clone());
+        .with_tables(member_tables.clone())
+        .with_hedge(HedgeConfig::from_env());
+        apply_env_faults(&mut pool);
         // Wall-clock members get per-member async I/O workers; an
         // all-virtual pool needs none (overlap is credited analytically).
-        let async_pipe = (self.async_io && !pool.is_virtual_time())
-            .then(|| AsyncIoQueue::start(pool.member_arcs(), self.io_queue_depth));
+        // Workers share the pool-health handle so their retries and
+        // dead-member marks land on the same counters as inline reads.
+        let async_pipe = (self.async_io && !pool.is_virtual_time()).then(|| {
+            AsyncIoQueue::start_with_health(
+                pool.member_arcs(),
+                self.io_queue_depth,
+                Some(pool.health()),
+            )
+        });
         let dev_io_names: Vec<String> = (0..n_dev).map(|m| format!("io.dev{m}")).collect();
 
         // Pre-key the table for every scored row size and pre-render every
@@ -395,6 +431,7 @@ impl EngineBuilder {
             member_tables,
             stripe_policy: self.stripe_policy,
             stripe_bytes: self.stripe_bytes,
+            replication: self.replication,
             dev_io_names,
             table,
             keyed_tables,
@@ -462,6 +499,39 @@ impl Engine {
         self.core.read().unwrap().pool.len()
     }
 
+    /// Hot-stripe replication factor of the storage pool (1 = none).
+    pub fn replication(&self) -> usize {
+        self.core.read().unwrap().pool.stripe().replication()
+    }
+
+    /// Liveness + fault-counter snapshot of the storage pool: dead
+    /// members and cumulative retries / failovers / hedges / hedge wins.
+    /// `/healthz` reports "degraded" from this when a member is dead but
+    /// replication keeps the pool serving.
+    pub fn pool_health(&self) -> PoolHealthSnapshot {
+        self.core.read().unwrap().pool.health().snapshot()
+    }
+
+    /// Wrap pool member `m` in a [`FaultInjector`] and return its
+    /// control handle — the programmatic fault seam (the env-driven one
+    /// is `NC_FAULT_*` at build time). Only the inline submit path sees
+    /// the wrapper: async I/O workers clone member handles at build, so
+    /// combine with `async_io(false)` (simulated pools are always
+    /// inline). Panics if `m` is out of range.
+    pub fn inject_faults(&self, m: usize, cfg: FaultConfig) -> FaultHandle {
+        let mut core = self.core.write().unwrap();
+        let mut handle = None;
+        core.pool.wrap_members(|i, inner| {
+            if i != m {
+                return inner;
+            }
+            let fi = FaultInjector::new(inner, cfg.clone());
+            handle = Some(fi.handle());
+            Arc::new(fi)
+        });
+        handle.expect("pool member index out of range")
+    }
+
     /// Whether the asynchronous I/O pipeline is enabled.
     pub fn async_io(&self) -> bool {
         self.core.read().unwrap().async_io
@@ -482,9 +552,21 @@ impl Engine {
         self.core.read().unwrap().io_queue_depth
     }
 
-    /// Snapshot of accumulated per-stage metrics.
+    /// Snapshot of accumulated per-stage metrics, including the pool's
+    /// fault-tolerance counters (`io.retries`, `io.failovers`,
+    /// `io.hedges`, `io.hedge_wins`) and `pool.dead` (dead-member count)
+    /// as byte-keyed gauges — `/metrics` exposes them with no extra
+    /// plumbing.
     pub fn metrics(&self) -> Metrics {
-        self.core.read().unwrap().metrics.lock().unwrap().clone()
+        let core = self.core.read().unwrap();
+        let mut m = core.metrics.lock().unwrap().clone();
+        let h = core.pool.health().snapshot();
+        m.add_bytes("io.retries", h.retries);
+        m.add_bytes("io.failovers", h.failovers);
+        m.add_bytes("io.hedges", h.hedges);
+        m.add_bytes("io.hedge_wins", h.hedge_wins);
+        m.add_bytes("pool.dead", h.dead_members.len() as u64);
+        m
     }
 
     /// Pre-compile all artifacts (avoids first-request compile stalls).
@@ -505,11 +587,13 @@ impl Engine {
     /// Members must be distinct sessions of this engine, each with a
     /// non-empty KV cache; the batch is validated before any member
     /// mutates, so an invalid member fails the call with every session
-    /// unchanged. An error *after* validation (e.g. a device failure
-    /// mid-layer) aborts the whole batch and — exactly like a solo
-    /// `decode_step` failing mid-call — may leave members' KV state
-    /// partially advanced; callers should reset such sessions rather
-    /// than retry the token. At most
+    /// unchanged. After validation the batch is **transactional**:
+    /// every member's KV caches are marked before the pipeline runs,
+    /// and an error mid-batch (e.g. a device failure mid-layer) rolls
+    /// every member back before returning — a failed batch never leaves
+    /// a session partially advanced, so callers may safely retry
+    /// members solo (the scheduler does exactly that to isolate the
+    /// failing stream). At most
     /// [`MAX_DECODE_BATCH`](crate::coordinator::MAX_DECODE_BATCH)
     /// members per call.
     pub fn decode_batch(&self, reqs: &[DecodeRequest]) -> Result<Vec<(Vec<f32>, StageStats)>> {
@@ -677,6 +761,8 @@ pub(crate) struct EngineCore {
     pub(crate) member_tables: Vec<LatencyTable>,
     pub(crate) stripe_policy: StripePolicy,
     pub(crate) stripe_bytes: Option<usize>,
+    /// Hot-stripe replication factor the pool was built with.
+    pub(crate) replication: usize,
     /// Pre-rendered per-member metrics keys ("io.dev0", …).
     pub(crate) dev_io_names: Vec<String>,
     /// Byte-keyed pool-effective latency table (selection utility).
@@ -724,24 +810,33 @@ impl EngineCore {
                 }
             }
         }
-        let stripe = StripeLayout::build(
+        let stripe = StripeLayout::build_replicated(
             &self.store.layout,
             self.member_profiles.len(),
             self.stripe_policy,
             self.stripe_bytes,
+            self.replication,
         );
-        self.pool = build_pool(
+        let mut pool = build_pool(
             &self.member_profiles,
             stripe,
             &self.store.build_image(),
             self.seed ^ 0xD1CE,
             self.backing_dir.as_deref(),
         )?
-        .with_tables(self.member_tables.clone());
+        .with_tables(self.member_tables.clone())
+        .with_hedge(self.pool.hedge_config());
+        apply_env_faults(&mut pool);
+        self.pool = pool;
         // The old workers held handles to the replaced members; restart
-        // them against the rebuilt pool.
-        self.async_pipe = (self.async_io && !self.pool.is_virtual_time())
-            .then(|| AsyncIoQueue::start(self.pool.member_arcs(), self.io_queue_depth));
+        // them against the rebuilt pool (sharing its fresh health handle).
+        self.async_pipe = (self.async_io && !self.pool.is_virtual_time()).then(|| {
+            AsyncIoQueue::start_with_health(
+                self.pool.member_arcs(),
+                self.io_queue_depth,
+                Some(self.pool.health()),
+            )
+        });
         self.epoch += 1;
         Ok(())
     }
@@ -976,6 +1071,26 @@ fn build_pool(
             DevicePool::from_files(&paths, stripe, 2, false)
         }
     }
+}
+
+/// Wrap every pool member in a [`FaultInjector`] when any `NC_FAULT_*`
+/// knob is set (chaos CI / kill tests): members share the probabilistic
+/// config but get distinct RNG seeds, and `NC_FAULT_DEAD=m` kills
+/// exactly member `m` at build time. No knobs set → the pool is left
+/// untouched (zero overhead on the healthy path).
+fn apply_env_faults(pool: &mut DevicePool) {
+    let Some(base) = FaultConfig::from_env() else {
+        return;
+    };
+    let dead = dead_member_from_env();
+    pool.wrap_members(|m, inner| {
+        let cfg = FaultConfig {
+            seed: base.seed ^ ((m as u64 + 1) << 32),
+            dead: dead == Some(m),
+            ..base.clone()
+        };
+        Arc::new(FaultInjector::new(inner, cfg))
+    });
 }
 
 #[cfg(test)]

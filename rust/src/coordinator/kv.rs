@@ -83,6 +83,54 @@ impl KvCache {
         )
     }
 
+    /// Capture a rollback point covering up to `tokens` future appends,
+    /// reusing `mark`'s buffers (allocation-free at steady state). A
+    /// ring append *overwrites* old slots, so position alone cannot be
+    /// restored — the mark saves the contents of the slots the next
+    /// `tokens` appends will claim. Used by the transactional decode
+    /// batch: on a mid-batch failure every member's KV is rolled back
+    /// so a failed call never leaves state partially advanced.
+    pub fn mark_into(&self, tokens: usize, mark: &mut KvMark) {
+        let n = tokens.min(self.capacity);
+        mark.cursor = self.cursor;
+        mark.filled = self.filled;
+        mark.appended = self.appended;
+        mark.slots = n;
+        mark.k.clear();
+        mark.v.clear();
+        mark.mask.clear();
+        for i in 0..n {
+            let s = (self.cursor + i) % self.capacity;
+            mark.k.extend_from_slice(&self.k[s * self.dim..(s + 1) * self.dim]);
+            mark.v.extend_from_slice(&self.v[s * self.dim..(s + 1) * self.dim]);
+            mark.mask.push(self.mask[s]);
+        }
+    }
+
+    /// Undo every append made since `mark` was captured: restore the
+    /// overwritten slots, then the ring head. Panics if more appends
+    /// happened than the mark's window covers (callers size the window
+    /// to the batch's token count).
+    pub fn rollback(&mut self, mark: &KvMark) {
+        let n = (self.appended - mark.appended) as usize;
+        assert!(
+            n <= mark.slots,
+            "rollback window exceeded: {n} appends for {} saved slots",
+            mark.slots
+        );
+        for i in 0..n {
+            let s = (mark.cursor + i) % self.capacity;
+            self.k[s * self.dim..(s + 1) * self.dim]
+                .copy_from_slice(&mark.k[i * self.dim..(i + 1) * self.dim]);
+            self.v[s * self.dim..(s + 1) * self.dim]
+                .copy_from_slice(&mark.v[i * self.dim..(i + 1) * self.dim]);
+            self.mask[s] = mark.mask[i];
+        }
+        self.cursor = mark.cursor;
+        self.filled = mark.filled;
+        self.appended = mark.appended;
+    }
+
     pub fn clear(&mut self) {
         self.k.iter_mut().for_each(|x| *x = 0.0);
         self.v.iter_mut().for_each(|x| *x = 0.0);
@@ -93,9 +141,69 @@ impl KvCache {
     }
 }
 
+/// Rollback point of one [`KvCache`] (see [`KvCache::mark_into`]).
+/// Reusable: buffers keep their capacity across marks.
+#[derive(Clone, Debug, Default)]
+pub struct KvMark {
+    cursor: usize,
+    filled: usize,
+    appended: u64,
+    slots: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    mask: Vec<f32>,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mark_rollback_restores_overwritten_slots() {
+        let mut kv = KvCache::new(2, 1);
+        kv.append(&[1.0], &[10.0]);
+        kv.append(&[2.0], &[20.0]); // full: next append overwrites slot 0
+        let mut mark = KvMark::default();
+        kv.mark_into(1, &mut mark);
+        kv.append(&[3.0], &[30.0]); // destroys slot 0's (1.0, 10.0)
+        assert_eq!(kv.tensors().0.data, vec![3.0, 2.0]);
+        kv.rollback(&mark);
+        assert_eq!(kv.len(), 2);
+        assert_eq!(kv.appended(), 2);
+        let (k, v, m) = kv.tensors();
+        assert_eq!(k.data, vec![1.0, 2.0]);
+        assert_eq!(v.data, vec![10.0, 20.0]);
+        assert_eq!(m.data, vec![1.0, 1.0]);
+        // Re-appending after rollback behaves as if the failed append
+        // never happened.
+        kv.append(&[4.0], &[40.0]);
+        assert_eq!(kv.tensors().0.data, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn rollback_with_no_appends_is_noop() {
+        let mut kv = KvCache::new(4, 2);
+        kv.append(&[1.0, 2.0], &[3.0, 4.0]);
+        let mut mark = KvMark::default();
+        kv.mark_into(1, &mut mark);
+        let before = kv.tensors();
+        kv.rollback(&mark);
+        let after = kv.tensors();
+        assert_eq!(before.0.data, after.0.data);
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn rollback_restores_mask_of_fresh_slots() {
+        let mut kv = KvCache::new(3, 1);
+        kv.append(&[1.0], &[10.0]);
+        let mut mark = KvMark::default();
+        kv.mark_into(1, &mut mark);
+        kv.append(&[2.0], &[20.0]); // fresh slot, mask 0 -> 1
+        kv.rollback(&mark);
+        assert_eq!(kv.len(), 1);
+        assert_eq!(kv.tensors().2.data, vec![1.0, 0.0, 0.0]);
+    }
 
     #[test]
     fn append_and_mask() {

@@ -27,7 +27,7 @@ mod pipeline;
 mod scheduler;
 
 pub use engine::{Engine, EngineBuilder, Session};
-pub use kv::KvCache;
+pub use kv::{KvCache, KvMark};
 pub use metrics::{Metrics, StageTimer};
 pub use neuron_cache::HotNeuronCache;
 pub use pipeline::batch::{DecodeRequest, MAX_DECODE_BATCH};

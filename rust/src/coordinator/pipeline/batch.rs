@@ -30,8 +30,12 @@
 //! is routed through the per-member I/O workers as a single fused
 //! ticket ([`crate::storage::IoTicket::wait_scatter_fused`]). Either
 //! way the batch is validated member-by-member *before* any state
-//! mutates, and steady-state batched decoding performs zero heap
-//! allocations (the batch arena is pooled in the engine core).
+//! mutates, and a failure *after* validation (a device error mid-layer)
+//! rolls every member's KV caches back to their pre-batch marks
+//! ([`crate::coordinator::KvCache::mark_into`]) — a failed batch is
+//! transactional, so the scheduler can retry its members solo. At
+//! steady state batched decoding performs zero heap allocations (the
+//! batch arena, marks included, is pooled in the engine core).
 
 use std::sync::MutexGuard;
 use std::time::{Duration, Instant};
@@ -40,7 +44,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::engine::{EngineCore, Session, SessionInner};
 use crate::coordinator::pipeline::StageStats;
-use crate::coordinator::StageTimer;
+use crate::coordinator::{KvMark, StageTimer};
 use crate::model::{MatrixId, MatrixKind};
 use crate::plan::{FuseScratch, FusedPlan, PlanReceipt, PlannedRead, ReadPlan};
 use crate::runtime::{ExecScratch, StageOutputs, StreamCtx, TensorView};
@@ -75,6 +79,10 @@ pub(crate) struct BatchArena {
     xs: Vec<f32>,
     exec: ExecScratch,
     outs: StageOutputs,
+    /// Per-member, per-layer KV rollback marks captured before the
+    /// batch mutates anything (decode appends exactly one token per
+    /// layer cache, so each mark covers a one-slot window).
+    kv_marks: Vec<Vec<KvMark>>,
 }
 
 /// Which pooled [`PlannedRead`] a fused submission scatters into.
@@ -201,7 +209,34 @@ pub(crate) fn decode_batch(
     }
 
     let mut bs = core.take_batch_arena();
+    // Transactional decode: mark every member's per-layer KV ring
+    // before the pipeline mutates anything. A decode step appends
+    // exactly one token per layer cache, so one-slot marks cover every
+    // append a failed run could have made.
+    if bs.kv_marks.len() < n {
+        bs.kv_marks.resize_with(n, Vec::new);
+    }
+    for (i, m) in members.iter().enumerate() {
+        let inner = m.as_ref().expect("member slot filled");
+        let marks = &mut bs.kv_marks[i];
+        if marks.len() < inner.state.kvs.len() {
+            marks.resize_with(inner.state.kvs.len(), KvMark::default);
+        }
+        for (kv, mark) in inner.state.kvs.iter().zip(marks.iter_mut()) {
+            kv.mark_into(1, mark);
+        }
+    }
     let result = run_batch(core, members, reqs, outs, stats_out, &mut bs);
+    if result.is_err() {
+        // Roll every member back: a failed batch leaves no session
+        // partially advanced (callers may retry members solo).
+        for (i, m) in members.iter_mut().enumerate() {
+            let inner = m.as_mut().expect("member slot filled");
+            for (kv, mark) in inner.state.kvs.iter_mut().zip(bs.kv_marks[i].iter()) {
+                kv.rollback(mark);
+            }
+        }
+    }
     core.put_batch_arena(bs);
     result
 }
@@ -553,16 +588,21 @@ fn submit_fused(
         Some(pipe) => {
             // Wall-clock pools: one fused ticket reads the union on the
             // per-member I/O workers and scatters straight into the N
-            // subscriber receipts.
-            core.planner
-                .shard_into(&bs.fused.plan, core.pool.stripe(), &mut bs.pool.sharded);
+            // subscriber receipts. Replicated/degraded pools route each
+            // piece to a live replica and arm hedged completion.
+            if core.pool.needs_routing() {
+                core.pool.route_plan(&bs.fused.plan, &mut bs.pool.sharded);
+            } else {
+                core.planner
+                    .shard_into(&bs.fused.plan, core.pool.stripe(), &mut bs.pool.sharded);
+            }
             let total: usize = bs.fused.plan.cmds().iter().map(|e| e.len).sum();
             anyhow::ensure!(
                 bs.pool.sharded.total_bytes() == total,
                 "sharded fused plan covers {} of {total} bytes",
                 bs.pool.sharded.total_bytes()
             );
-            let ticket = pipe.submit(&bs.pool.sharded);
+            let ticket = pipe.submit_hedged(&bs.pool.sharded, &core.pool);
             bs.pool.last.reset(core.pool.len());
             let mut slices: [&mut [u8]; MAX_DECODE_BATCH] =
                 std::array::from_fn(|_| Default::default());

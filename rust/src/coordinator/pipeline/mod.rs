@@ -573,8 +573,12 @@ impl EngineCore {
                 };
             }
             Some(pipe) => {
-                self.planner
-                    .shard_into(plan, self.pool.stripe(), &mut sc.pool.sharded);
+                if self.pool.needs_routing() {
+                    self.pool.route_plan(plan, &mut sc.pool.sharded);
+                } else {
+                    self.planner
+                        .shard_into(plan, self.pool.stripe(), &mut sc.pool.sharded);
+                }
                 // Pre-size the logical receipt here; the workers fill
                 // their own staging buffers and the ticket scatters into
                 // these bytes at await time.
@@ -584,7 +588,10 @@ impl EngineCore {
                     prefetch[layer].clear();
                     anyhow::bail!("sharded prefetch covers {covered} of {total} plan bytes");
                 }
-                let ticket = pipe.submit(&sc.pool.sharded);
+                // Routed plans over replicated stripes get hedged
+                // completion (stragglers re-issued to another replica);
+                // unrouted plans fall through to a plain ticket.
+                let ticket = pipe.submit_hedged(&sc.pool.sharded, &self.pool);
                 pending[layer] = PendingPrefetch::InFlight { ticket };
             }
         }
@@ -654,9 +661,12 @@ impl EngineCore {
 
     /// Submit one logical plan through the storage pool. Single-member
     /// pools delegate straight to the member (bit-identical to the
-    /// historical one-device path); larger pools run the
-    /// [`crate::plan::IoPlanner::shard_into`] step and fan the sub-plans
-    /// out across members, reassembling the logical receipt. Per-member
+    /// historical one-device path, now with retries); larger pools run
+    /// the [`crate::plan::IoPlanner::shard_into`] step — or the
+    /// replica-routed [`crate::storage::DevicePool::route_plan`] when
+    /// hot stripes are
+    /// replicated or a member is dead — and fan the sub-plans out across
+    /// members, reassembling the logical receipt. Per-member
     /// bytes/service land in `ps.last` and accumulate into `ps.accum`
     /// for the per-call metrics fold. Allocation-free at steady state.
     pub(crate) fn submit_pooled(
@@ -666,12 +676,19 @@ impl EngineCore {
         receipt: &mut PlanReceipt,
     ) -> Result<()> {
         if self.pool.len() == 1 {
-            self.pool.member(0).submit_into(plan, receipt)?;
+            // Single-member fast path with the pool's retry + liveness
+            // accounting (bit-identical bytes; transient faults are
+            // absorbed instead of failing the call).
+            self.pool.submit_member_into(0, plan, receipt)?;
             ps.last.reset(1);
             ps.last.bytes[0] = plan.cmd_bytes();
             ps.last.service[0] = receipt.service;
         } else {
-            self.planner.shard_into(plan, self.pool.stripe(), &mut ps.sharded);
+            if self.pool.needs_routing() {
+                self.pool.route_plan(plan, &mut ps.sharded);
+            } else {
+                self.planner.shard_into(plan, self.pool.stripe(), &mut ps.sharded);
+            }
             self.pool.submit_sharded_into(
                 plan,
                 &ps.sharded,

@@ -415,11 +415,13 @@ fn run_single(shared: &Arc<Shared>, engine: &Engine, job: Job) {
 /// Members that would fail the batch's all-or-nothing validation for a
 /// *predictable* reason (no primed KV yet) are screened out up front and
 /// served solo, so they get their own error while the rest still batch.
-/// If the fused batch itself errors, every member receives that error —
-/// never a silent solo retry: a mid-run failure may already have
-/// advanced member KV state (exactly like a solo decode failing
-/// mid-layer), so re-decoding on top of it would deliver corrupted
-/// outputs as `Ok`.
+/// If the fused batch itself errors, the members are retried **solo**:
+/// a failed [`Engine::decode_batch_into`] rolls every member's KV back
+/// to its pre-batch state (transactional), so re-decoding the same
+/// token solo is safe and bit-identical to having never batched. The
+/// stream that actually carries the fault (e.g. its selection needs an
+/// extent only a dead member holds) gets its own error completion while
+/// the innocent members still complete.
 fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) {
     let streams: Vec<usize> = jobs.iter().map(|j| j.request.stream).collect();
     let sessions: Vec<Arc<Session>> = jobs
@@ -471,20 +473,36 @@ fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) 
     };
     let exec_wall = t0.elapsed();
 
-    // Deliver the batch members' completions.
+    // Deliver the batch members' completions. A failed batch rolled
+    // every member's KV back, so each member is retried solo: innocent
+    // streams complete normally and only the faulty one carries the
+    // error.
     for (bi, &i) in ready.iter().enumerate() {
-        let output = match &batch_result {
-            Ok(()) => Ok(std::mem::take(&mut outs[bi])),
-            Err(e) => Err(e.to_string()),
+        let (output, st, wall) = match &batch_result {
+            Ok(()) => (Ok(std::mem::take(&mut outs[bi])), stats[bi], exec_wall),
+            Err(_) => {
+                let RequestKind::Decode(tok) = &jobs[i].request.kind else {
+                    unreachable!("batches hold decode requests only");
+                };
+                let solo_t0 = Instant::now();
+                match sessions[i].decode_step(tok) {
+                    Ok((y, s)) => (Ok(y), s, exec_wall + solo_t0.elapsed()),
+                    Err(e) => (
+                        Err(e.to_string()),
+                        StageStats::default(),
+                        exec_wall + solo_t0.elapsed(),
+                    ),
+                }
+            }
         };
         let job = &jobs[i];
         let _ = job.done.send(Completion {
             stream: job.request.stream,
             kind: "decode",
             output,
-            stats: stats[bi],
+            stats: st,
             queue_wait: waits[i],
-            exec_wall,
+            exec_wall: wall,
         });
     }
     // And the screened-out members' solo completions.
@@ -900,6 +918,84 @@ mod tests {
         assert!(good.recv().unwrap().output.is_ok());
         assert!(bad.recv().unwrap().output.is_err());
         s.shutdown();
+    }
+
+    #[test]
+    fn fused_batch_device_error_isolates_faulty_stream() {
+        // A persistent injected device error during a fused batch must
+        // produce exactly one error completion: the fused attempt burns
+        // READ_ATTEMPTS reads, rolls every member back (transactional
+        // decode_batch), and the scheduler retries each stream solo —
+        // the first solo retry burns the remaining READ_ATTEMPTS and
+        // errors, the rest see a healthy device and complete with
+        // outputs bit-identical to a fault-free reference.
+        use crate::storage::{FaultConfig, READ_ATTEMPTS};
+        let build = || {
+            Engine::builder("tiny")
+                .policy(Policy::TopK)
+                .sparsity(0.3)
+                .devices(1)
+                .exec_threads(1)
+                .prefetch(false)
+                .async_io(false)
+                .artifacts(&artifact_dir())
+                .build()
+                .unwrap()
+        };
+        let engine = build();
+        let fault = engine.inject_faults(0, FaultConfig::default());
+        let s = Scheduler::spawn(
+            SchedulerConfig {
+                workers: 1,
+                batch_window: Duration::from_millis(300),
+                max_batch: 4,
+                ..SchedulerConfig::default()
+            },
+            move || engine,
+        );
+        let trace = crate::workload::FrameTrace::new(64, 8, 4, 3);
+        for stream in 0..3usize {
+            s.submit(Request {
+                stream,
+                kind: RequestKind::AppendFrame(trace.frame(stream)),
+            })
+            .unwrap()
+            .recv()
+            .unwrap()
+            .output
+            .unwrap();
+        }
+        let token = vec![0.02f32; 64];
+        let rxs: Vec<_> = (0..3)
+            .map(|stream| {
+                s.submit(Request {
+                    stream,
+                    kind: RequestKind::Decode(token.clone()),
+                })
+                .unwrap()
+            })
+            .collect();
+        // Armed inside the batch window (the worker is still collecting
+        // arrivals), so the whole budget lands on the fused execution.
+        fault.fail_next(2 * READ_ATTEMPTS as u64);
+        let outs: Vec<Result<Vec<f32>, String>> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().output).collect();
+        s.shutdown();
+        let errs: Vec<bool> = outs.iter().map(Result::is_err).collect();
+        assert_eq!(
+            errs.iter().filter(|&&e| e).count(),
+            1,
+            "exactly one stream absorbs the persistent fault: {errs:?}"
+        );
+        let reference = build();
+        for (stream, out) in outs.iter().enumerate() {
+            if let Ok(y) = out {
+                let session = reference.new_session();
+                session.append_frame(&trace.frame(stream)).unwrap();
+                let (want, _) = session.decode_step(&token).unwrap();
+                assert_eq!(y, &want, "stream {stream} diverged after batch fault recovery");
+            }
+        }
     }
 
     #[test]

@@ -44,6 +44,10 @@ fn main() {
                  \x20               [--stripe-hot] layout-aware striping (co-locate each\n\
                  \x20                              matrix's hot rows, staggered per matrix)\n\
                  \x20               [--stripe-kb K] explicit stripe unit (default adaptive)\n\
+                 \x20               [--replication N] extra copies of each region's hot\n\
+                 \x20                              stripe blocks on other members (default 1\n\
+                 \x20                              or $NC_REPLICATION; 1 = no replication;\n\
+                 \x20                              enables failover + hedged reads)\n\
                  \x20               [--async-io]   asynchronous I/O pipeline (submit layer\n\
                  \x20                              k+1's prefetch before layer k's kernels;\n\
                  \x20                              outputs are bit-identical either way)\n\
@@ -143,6 +147,9 @@ fn cmd_serve_inner(args: &[String]) -> Result<i32, ArgError> {
     }
     if let Some(kb) = p.parsed::<usize>("--stripe-kb")? {
         builder = builder.stripe_bytes(kb * 1024);
+    }
+    if let Some(r) = p.parsed::<usize>("--replication")? {
+        builder = builder.replication(r);
     }
     if p.has("--async-io") {
         builder = builder.async_io(true);
@@ -331,6 +338,9 @@ fn serve_network(
     };
 
     println!("compiling {} artifacts…", engine.warmup().unwrap_or(0));
+    // Keep a facade handle (cheap Arc clone) for the end-of-run pool
+    // health summary; the scheduler owns the moved engine.
+    let engine_handle = engine.clone();
     let sched = Scheduler::spawn(sched_cfg, move || engine);
     let server = match Server::start(server_cfg, sched) {
         Ok(s) => s,
@@ -366,6 +376,11 @@ fn serve_network(
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
     println!("shutting down…");
+    let h = engine_handle.pool_health();
+    println!(
+        "pool health: dead={:?} retries={} failovers={} hedges={} hedge_wins={}",
+        h.dead_members, h.retries, h.failovers, h.hedges, h.hedge_wins
+    );
     server.shutdown();
     Ok(0)
 }

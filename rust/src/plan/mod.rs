@@ -394,6 +394,12 @@ pub struct DeviceSubPlan {
     pub cmds: Vec<Extent>,
     /// Destination offset in the logical receipt's `bytes` per command.
     pub dsts: Vec<usize>,
+    /// Flat (pool-address-space) offset per command. Filled only by the
+    /// *routed* shard step ([`ShardedPlan::route_from`]); empty for
+    /// plans built with [`IoPlanner::shard_into`]. Hedged re-issue needs
+    /// the flat address to re-map a straggler's commands onto the other
+    /// replicas, so routed plans carry it (`flats.len() == cmds.len()`).
+    pub flats: Vec<u64>,
 }
 
 impl DeviceSubPlan {
@@ -409,6 +415,7 @@ impl DeviceSubPlan {
     pub fn clear(&mut self) {
         self.cmds.clear();
         self.dsts.clear();
+        self.flats.clear();
     }
 
     pub fn reserve(&mut self, cmds: usize) {
@@ -428,6 +435,28 @@ impl DeviceSubPlan {
         }
         self.cmds.push(local);
         self.dsts.push(dst);
+    }
+
+    /// [`DeviceSubPlan::push_piece`] for the routed shard step: also
+    /// records the piece's flat offset, and merges only when the local
+    /// range, the destination range **and** the flat range are all
+    /// contiguous (replica copies of adjacent blocks need not be
+    /// device-locally adjacent).
+    pub fn push_piece_routed(&mut self, local: Extent, dst: usize, flat: u64) {
+        if let Some(last) = self.cmds.last_mut() {
+            let last_dst = *self.dsts.last().unwrap();
+            let last_flat = *self.flats.last().unwrap();
+            if last.end() == local.offset
+                && last_dst + last.len == dst
+                && last_flat + last.len as u64 == flat
+            {
+                last.len += local.len;
+                return;
+            }
+        }
+        self.cmds.push(local);
+        self.dsts.push(dst);
+        self.flats.push(flat);
     }
 }
 
@@ -468,6 +497,38 @@ impl ShardedPlan {
         for s in &mut self.shards {
             s.reserve(cmds);
         }
+    }
+
+    /// Replica-routed shard step: like [`IoPlanner::shard_into`] but
+    /// every piece is offered to a chooser together with *all* replicas
+    /// that hold it (`(member, device-local extent)` pairs, primary
+    /// first), and lands on the member the chooser picks. Sub-plans
+    /// carry flat offsets ([`DeviceSubPlan::flats`]) so a straggling
+    /// member's commands can later be re-mapped onto the surviving
+    /// replicas (hedged reads, failover). With replication 1 the chooser
+    /// always sees one option and the result is bit-identical to
+    /// `shard_into` apart from the recorded flats.
+    pub fn route_from(
+        &mut self,
+        cmds: &[Extent],
+        stripe: &StripeLayout,
+        mut choose: impl FnMut(&[(usize, Extent)]) -> usize,
+    ) {
+        self.clear_for(stripe.devices());
+        let mut at = 0usize;
+        for cmd in cmds {
+            stripe.for_pieces_all(*cmd, |flat, options| {
+                let pick = choose(options).min(options.len() - 1);
+                let (dev, local) = options[pick];
+                self.shards[dev].push_piece_routed(
+                    local,
+                    at + (flat - cmd.offset) as usize,
+                    flat,
+                );
+            });
+            at += cmd.len;
+        }
+        self.total = at;
     }
 }
 
@@ -816,6 +877,20 @@ impl IoPlanner {
             at += cmd.len;
         }
         out.total = at;
+    }
+
+    /// Replica-routed [`IoPlanner::shard_into`]: each stripe piece goes
+    /// to whichever holding replica `choose` picks (see
+    /// [`ShardedPlan::route_from`]). Used by replicated pools to skip
+    /// dead members and to spread hot-stripe traffic by load.
+    pub fn shard_routed_into(
+        &self,
+        plan: &ReadPlan,
+        stripe: &StripeLayout,
+        choose: impl FnMut(&[(usize, Extent)]) -> usize,
+        out: &mut ShardedPlan,
+    ) {
+        out.route_from(plan.cmds(), stripe, choose);
     }
 }
 

@@ -19,6 +19,15 @@ pub struct Reply {
     /// Server-side scheduler queue wait (sum over steps), µs.
     pub queue_us: u64,
     pub steps: u64,
+    /// Cumulative fault-tolerance counters from the response's
+    /// `"engine"` object (monotonic over the server's lifetime, so the
+    /// last-seen values are the run's final snapshot).
+    pub io_retries: u64,
+    pub io_failovers: u64,
+    pub io_hedges: u64,
+    pub io_hedge_wins: u64,
+    /// Number of pool members currently marked dead.
+    pub pool_dead: u64,
 }
 
 pub struct Client {
@@ -111,9 +120,22 @@ fn reply_from(v: &Json) -> Reply {
             .map(|x| x.max(0.0) as u64)
             .unwrap_or(0)
     };
+    let engine = v.get("engine");
+    let eng_u64 = |key: &str| {
+        engine
+            .and_then(|e| e.get(key))
+            .and_then(Json::as_f64)
+            .map(|x| x.max(0.0) as u64)
+            .unwrap_or(0)
+    };
     Reply {
         latency_us: u64_of("latency_us"),
         queue_us: u64_of("queue_us"),
         steps: u64_of("steps"),
+        io_retries: eng_u64("io_retries"),
+        io_failovers: eng_u64("io_failovers"),
+        io_hedges: eng_u64("io_hedges"),
+        io_hedge_wins: eng_u64("io_hedge_wins"),
+        pool_dead: eng_u64("pool_dead"),
     }
 }

@@ -20,4 +20,4 @@ pub mod runner;
 pub use compare::compare_files;
 pub use hist::Histogram;
 pub use rate::TokenBucket;
-pub use runner::{run, RunConfig, RunReport};
+pub use runner::{run, HealthCounters, RunConfig, RunReport};

@@ -11,7 +11,7 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::client::Client;
+use super::client::{Client, Reply};
 use super::hist::Histogram;
 use super::rate::TokenBucket;
 use crate::serving::json::{self, Json};
@@ -77,6 +77,30 @@ impl OpStats {
     }
 }
 
+/// Last-seen cumulative engine fault-tolerance counters. The server
+/// reports them monotonically in every response's `"engine"` object,
+/// so the element-wise max across all workers' replies is the run's
+/// final snapshot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HealthCounters {
+    pub io_retries: u64,
+    pub io_failovers: u64,
+    pub io_hedges: u64,
+    pub io_hedge_wins: u64,
+    /// Pool members marked dead at the last observed response.
+    pub pool_dead: u64,
+}
+
+impl HealthCounters {
+    fn absorb(&mut self, r: &Reply) {
+        self.io_retries = self.io_retries.max(r.io_retries);
+        self.io_failovers = self.io_failovers.max(r.io_failovers);
+        self.io_hedges = self.io_hedges.max(r.io_hedges);
+        self.io_hedge_wins = self.io_hedge_wins.max(r.io_hedge_wins);
+        self.pool_dead = self.pool_dead.max(r.pool_dead);
+    }
+}
+
 /// Everything a run produced: identity, per-op stats, wall time.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -87,6 +111,8 @@ pub struct RunReport {
     pub ident: Vec<(String, String)>,
     pub decode: OpStats,
     pub append: OpStats,
+    /// Final engine fault-tolerance snapshot observed during the run.
+    pub health: HealthCounters,
     pub wall: Duration,
 }
 
@@ -183,7 +209,11 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
     }
 
     let queue = Arc::new(WorkQueue::new());
-    let stats = Arc::new(Mutex::new((OpStats::default(), OpStats::default())));
+    let stats = Arc::new(Mutex::new((
+        OpStats::default(),
+        OpStats::default(),
+        HealthCounters::default(),
+    )));
 
     let workers: Vec<_> = (0..cfg.connections)
         .map(|_| {
@@ -203,6 +233,9 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
                     };
                     let latency = Instant::now().saturating_duration_since(item.intended);
                     let mut guard = stats.lock().unwrap();
+                    if let Ok(reply) = &res {
+                        guard.2.absorb(reply);
+                    }
                     let op_stats = match item.op {
                         Op::Decode => &mut guard.0,
                         Op::Prefill => &mut guard.1,
@@ -272,13 +305,14 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
     let wall = start.elapsed();
 
     let guard = stats.lock().unwrap();
-    let (decode, append) = (guard.0.clone(), guard.1.clone());
+    let (decode, append, health) = (guard.0.clone(), guard.1.clone(), guard.2);
     drop(guard);
     Ok(RunReport {
         cfg: cfg.clone(),
         ident: ident_pairs(cfg, &server_cfg),
         decode,
         append,
+        health,
         wall,
     })
 }
@@ -355,13 +389,21 @@ impl RunReport {
             "{{\n  \"bench\": \"serving\",\n  \"addr\": ",
         );
         json::push_str_escaped(&mut b, &self.cfg.addr);
+        let h = &self.health;
         let _ = write!(
             b,
             ",\n  \"rps\": {rps},\n  \"duration_s\": {:.3},\n  \"connections\": {},\n  \
-             \"steps\": {},\n  \"entries\": [",
+             \"steps\": {},\n  \"pool_dead\": {},\n  \"io_retries\": {},\n  \
+             \"io_failovers\": {},\n  \"io_hedges\": {},\n  \"io_hedge_wins\": {},\n  \
+             \"entries\": [",
             self.wall.as_secs_f64(),
             self.cfg.connections,
             self.cfg.steps,
+            h.pool_dead,
+            h.io_retries,
+            h.io_failovers,
+            h.io_hedges,
+            h.io_hedge_wins,
         );
         let mut first = true;
         for (op, s) in [("decode", &self.decode), ("append", &self.append)] {
@@ -418,6 +460,12 @@ impl RunReport {
                 fmt_us(s.hist.max_us()),
             );
         }
+        let h = &self.health;
+        let _ = writeln!(
+            out,
+            "pool: dead={} retries={} failovers={} hedges={} hedge_wins={}",
+            h.pool_dead, h.io_retries, h.io_failovers, h.io_hedges, h.io_hedge_wins,
+        );
         out
     }
 }
@@ -465,6 +513,12 @@ mod tests {
             ident: vec![("mode".to_string(), "\"served\"".to_string())],
             decode: fake_stats(10),
             append: OpStats::default(), // no traffic → no entry
+            health: HealthCounters {
+                io_hedges: 3,
+                io_hedge_wins: 2,
+                pool_dead: 1,
+                ..HealthCounters::default()
+            },
             wall: Duration::from_secs(1),
         };
         let text = report.to_json();
@@ -472,9 +526,12 @@ mod tests {
         let entries = v.get("entries").and_then(Json::as_arr).unwrap();
         assert_eq!(entries.len(), 1);
         assert_eq!(entries[0].get("op").and_then(Json::as_str), Some("decode"));
+        assert_eq!(v.get("io_hedges").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(v.get("pool_dead").and_then(Json::as_f64), Some(1.0));
         let table = report.render_table();
         assert!(table.contains("decode"), "{table}");
         assert!(!table.contains("append"), "{table}");
+        assert!(table.contains("pool: dead=1"), "{table}");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //!
 //! | Endpoint                        | Meaning                                   |
 //! |---------------------------------|-------------------------------------------|
-//! | `GET  /healthz`                 | liveness — `200 ok`                       |
+//! | `GET  /healthz`                 | liveness — `200 ok`, or `200 degraded: …` when a pool member is dead but replication keeps serving |
 //! | `GET  /metrics`                 | text exposition of the engine metrics fold|
 //! | `GET  /v1/config`               | engine/server configuration snapshot      |
 //! | `POST /v1/streams`              | open a stream (lazily binds a `Session`)  |
@@ -299,7 +299,7 @@ fn parse_stream_path(path: &str) -> Option<(usize, &str)> {
 
 fn route(inner: &Arc<ServerInner>, req: &HttpRequest) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Response::text(200, "ok\n".to_string()),
+        ("GET", "/healthz") => Response::text(200, healthz_text(inner)),
         ("GET", "/metrics") => Response::text(200, metrics_text(inner)),
         ("GET", "/v1/config") => Response::json(200, config_json(inner)),
         ("POST", "/v1/streams") => open_stream(inner),
@@ -495,13 +495,20 @@ fn serve_response(
     let _ = write!(
         b,
         ",\"engine\":{{\"io_s\":{:.9},\"io_bytes\":{},\"io_shared_bytes\":{},\
-         \"io_overlapped_s\":{:.9},\"batch_batches\":{},\"batch_members\":{}}}",
+         \"io_overlapped_s\":{:.9},\"batch_batches\":{},\"batch_members\":{},\
+         \"io_retries\":{},\"io_failovers\":{},\"io_hedges\":{},\"io_hedge_wins\":{},\
+         \"pool_dead\":{}}}",
         m.total("io").as_secs_f64(),
         m.bytes("io"),
         m.bytes("io.shared_bytes"),
         m.total("io.overlapped").as_secs_f64(),
         m.count("batch.occupancy"),
         m.bytes("batch.occupancy"),
+        m.bytes("io.retries"),
+        m.bytes("io.failovers"),
+        m.bytes("io.hedges"),
+        m.bytes("io.hedge_wins"),
+        m.bytes("pool.dead"),
     );
     if let Some(out) = output {
         b.push_str(",\"output\":");
@@ -509,6 +516,31 @@ fn serve_response(
     }
     b.push('}');
     Response::json(200, b)
+}
+
+/// `/healthz` body: `ok` while every pool member is live. A pool
+/// serving around a dead member answers `degraded: …` — still `200`,
+/// because replica-covered extents keep serving; orchestrators alert on
+/// the body and pull `/metrics` for the failover/hedge counters.
+fn healthz_text(inner: &Arc<ServerInner>) -> String {
+    use std::fmt::Write as _;
+    let h = inner.scheduler.engine().pool_health();
+    if h.dead_members.is_empty() {
+        return "ok\n".to_string();
+    }
+    let mut b = String::from("degraded: dead pool members [");
+    for (i, m) in h.dead_members.iter().enumerate() {
+        if i > 0 {
+            b.push(',');
+        }
+        let _ = write!(b, "{m}");
+    }
+    let _ = writeln!(
+        b,
+        "], serving replica-covered extents (retries {}, failovers {}, hedges {})",
+        h.retries, h.failovers, h.hedges
+    );
+    b
 }
 
 /// Text exposition of the engine metrics fold plus server gauges.

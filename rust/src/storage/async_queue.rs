@@ -30,15 +30,24 @@
 //! * **Buffer recycling** — completed job buffers return to a shared
 //!   free list, so steady-state submissions reuse capacity instead of
 //!   growing fresh vectors per token.
+//! * **Hedged tickets** — [`AsyncIoQueue::submit_hedged`] arms each
+//!   member job with a deadline from the member's own profiled estimate
+//!   and a precomputed replica re-issue plan; a straggling or failing
+//!   member's commands are re-read from the other live replicas and the
+//!   first completion wins (losers recycle their buffers). Workers also
+//!   retry transient read errors and mark persistently-failing members
+//!   dead on the shared [`PoolHealth`].
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::plan::{FusedPlan, ShardedPlan};
-use crate::storage::{Extent, FlashDevice, PoolStats};
+use crate::storage::{
+    DevicePool, Extent, FlashDevice, PoolError, PoolHealth, PoolStats, READ_ATTEMPTS,
+};
 
 /// Reusable buffers of one member job (recycled through the free list).
 #[derive(Default)]
@@ -56,6 +65,12 @@ struct Job {
     member: usize,
     bufs: JobBufs,
     ticket: Arc<TicketState>,
+    /// Hedged tickets: index of the slot this attempt belongs to
+    /// (`None` on plain submissions).
+    slot: Option<usize>,
+    /// Whether this attempt is a replica re-issue rather than the
+    /// original member read.
+    hedge: bool,
 }
 
 /// Completion state shared between the submitter and the workers.
@@ -65,12 +80,40 @@ struct TicketState {
 }
 
 struct TicketDone {
-    /// Member jobs still outstanding.
+    /// Slots (member jobs) still unresolved.
     remaining: usize,
     /// Completed jobs: (member, buffers, member service time).
     jobs: Vec<(usize, JobBufs, Duration)>,
     /// First member error, if any (the ticket then fails as a whole).
     error: Option<anyhow::Error>,
+    /// Hedged tickets only: per-original-member attempt state (empty on
+    /// plain submissions — their fast path is untouched).
+    slots: Vec<SlotState>,
+}
+
+/// Per-original-member state of a hedged ticket. The waiter
+/// ([`IoTicket::wait_done`]) fires hedges; workers resolve slots. A
+/// slot resolves when its original read completes, or when every fired
+/// hedge part completes (replicas are byte-identical, so either source
+/// — or both — writing the receipt is correct).
+struct SlotState {
+    /// Original member (for error naming).
+    member: usize,
+    /// Hedge deadline; cleared once the hedge fires.
+    deadline: Option<Instant>,
+    /// Precomputed replica re-issue: `(target, cmds, dsts)` groups
+    /// covering every byte of the original sub-plan. Drained when the
+    /// hedge fires; empty = nowhere to hedge to.
+    reroutes: Vec<(usize, Vec<Extent>, Vec<usize>)>,
+    /// Attempts in flight (original + fired hedge parts).
+    outstanding: usize,
+    /// Hedge parts fired / completed OK.
+    parts: usize,
+    parts_done: usize,
+    fired: bool,
+    resolved: bool,
+    /// First error of any attempt (surfaces only if the slot dead-ends).
+    err: Option<anyhow::Error>,
 }
 
 /// One member's bounded FIFO submission queue.
@@ -87,6 +130,26 @@ struct Shared {
     /// Recycled job buffers (capacity survives across submissions).
     free: Mutex<Vec<JobBufs>>,
     shutdown: AtomicBool,
+    /// Pool health (liveness + fault counters), when attached via
+    /// [`AsyncIoQueue::start_with_health`]: workers count retries and
+    /// mark persistently-failing members dead; hedged tickets record
+    /// hedge / hedge-win counters.
+    health: Option<Arc<PoolHealth>>,
+}
+
+impl Shared {
+    /// Enqueue one job on its member's bounded queue (blocks on
+    /// backpressure). Never call while holding a ticket's `done` lock —
+    /// workers need that lock to drain the queue.
+    fn push(&self, job: Job) {
+        let q = &self.queues[job.member];
+        let mut inner = q.inner.lock().unwrap();
+        while inner.len() >= q.cap {
+            inner = q.not_full.wait(inner).unwrap();
+        }
+        inner.push_back(job);
+        q.not_empty.notify_one();
+    }
 }
 
 /// Completion handle of one sharded submission. One-shot: consume it with
@@ -100,10 +163,114 @@ pub struct IoTicket {
 impl IoTicket {
     fn wait_done(&self) -> std::sync::MutexGuard<'_, TicketDone> {
         let mut done = self.state.done.lock().unwrap();
-        while done.remaining > 0 {
-            done = self.state.cv.wait(done).unwrap();
+        if done.slots.is_empty() {
+            // Plain ticket: byte-for-byte the original wait.
+            while done.remaining > 0 {
+                done = self.state.cv.wait(done).unwrap();
+            }
+            return done;
         }
-        done
+        // Hedged ticket: the waiter doubles as the hedge trigger —
+        // re-issue a straggling or failed member's commands to the other
+        // live replicas, and declare a slot failed only once every
+        // attempt (original + hedge parts) is spent. Workers resolve
+        // slots and recycle loser buffers, so nothing leaks.
+        loop {
+            // 1) Fire due hedges: deadline missed, or the original
+            //    failed with nothing else in flight.
+            let now = Instant::now();
+            let mut fire: Vec<Job> = Vec::new();
+            for s in 0..done.slots.len() {
+                let due = {
+                    let slot = &done.slots[s];
+                    !slot.resolved
+                        && !slot.fired
+                        && !slot.reroutes.is_empty()
+                        && (slot.deadline.is_some_and(|d| d <= now)
+                            || (slot.outstanding == 0 && slot.err.is_some()))
+                };
+                if !due {
+                    continue;
+                }
+                let reroutes = std::mem::take(&mut done.slots[s].reroutes);
+                done.slots[s].fired = true;
+                done.slots[s].deadline = None;
+                done.slots[s].parts = reroutes.len();
+                done.slots[s].outstanding += reroutes.len();
+                if let Some(h) = &self.shared.health {
+                    h.note_hedge();
+                }
+                for (target, cmds, dsts) in reroutes {
+                    if let Some(h) = &self.shared.health {
+                        h.add_routed(target, cmds.iter().map(|e| e.len as u64).sum());
+                    }
+                    let mut bufs = self.shared.free.lock().unwrap().pop().unwrap_or_default();
+                    bufs.cmds.clear();
+                    bufs.cmds.extend_from_slice(&cmds);
+                    bufs.dsts.clear();
+                    bufs.dsts.extend_from_slice(&dsts);
+                    fire.push(Job {
+                        member: target,
+                        bufs,
+                        ticket: self.state.clone(),
+                        slot: Some(s),
+                        hedge: true,
+                    });
+                }
+            }
+            if !fire.is_empty() {
+                // Queue pushes block on backpressure — never while
+                // holding the ticket lock (workers need it to complete).
+                drop(done);
+                for job in fire {
+                    self.shared.push(job);
+                }
+                done = self.state.done.lock().unwrap();
+                continue;
+            }
+            // 2) Declare dead-ended slots failed (every attempt spent,
+            //    no hedge left to fire).
+            for s in 0..done.slots.len() {
+                let dead_end = {
+                    let slot = &done.slots[s];
+                    !slot.resolved
+                        && slot.outstanding == 0
+                        && (slot.fired || slot.reroutes.is_empty())
+                };
+                if dead_end {
+                    done.slots[s].resolved = true;
+                    done.remaining -= 1;
+                    let member = done.slots[s].member;
+                    let e = done.slots[s].err.take().unwrap_or_else(|| {
+                        anyhow::Error::new(PoolError::MemberFailed { member })
+                    });
+                    if done.error.is_none() {
+                        done.error = Some(e);
+                    }
+                }
+            }
+            if done.remaining == 0 {
+                return done;
+            }
+            // 3) Sleep until a completion or the earliest armed deadline.
+            let next = done
+                .slots
+                .iter()
+                .filter(|s| !s.resolved && !s.fired && !s.reroutes.is_empty())
+                .filter_map(|s| s.deadline)
+                .min();
+            match next {
+                Some(dl) => {
+                    let wait = dl.saturating_duration_since(Instant::now());
+                    if wait.is_zero() {
+                        continue;
+                    }
+                    let (d, _) = self.state.cv.wait_timeout(done, wait).unwrap();
+                    done = d;
+                }
+                None => done = self.state.cv.wait(done).unwrap(),
+            }
+        }
     }
 
     /// Block until every member job completes, scatter each job's staging
@@ -246,6 +413,20 @@ impl AsyncIoQueue {
     /// bound; each member's queue holds `depth × SESSION_SLACK` jobs
     /// (submissions beyond it block the submitter).
     pub fn start(members: Vec<Arc<dyn FlashDevice>>, depth: usize) -> Self {
+        Self::start_with_health(members, depth, None)
+    }
+
+    /// [`AsyncIoQueue::start`] with a shared [`PoolHealth`] attached:
+    /// workers count retries and mark persistently-failing members dead,
+    /// and hedged tickets ([`AsyncIoQueue::submit_hedged`]) record the
+    /// hedge / hedge-win counters. Pass the owning pool's
+    /// [`DevicePool::health`] so inline and async paths share one view
+    /// of member liveness.
+    pub fn start_with_health(
+        members: Vec<Arc<dyn FlashDevice>>,
+        depth: usize,
+        health: Option<Arc<PoolHealth>>,
+    ) -> Self {
         let depth = depth.max(1);
         let cap = depth * SESSION_SLACK;
         let shared = Arc::new(Shared {
@@ -260,6 +441,7 @@ impl AsyncIoQueue {
                 .collect(),
             free: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
+            health,
         });
         let workers = members
             .into_iter()
@@ -301,6 +483,7 @@ impl AsyncIoQueue {
                 remaining: n_jobs,
                 jobs: Vec::with_capacity(n_jobs),
                 error: None,
+                slots: Vec::new(),
             }),
             cv: Condvar::new(),
         });
@@ -313,10 +496,12 @@ impl AsyncIoQueue {
             bufs.cmds.extend_from_slice(&shard.cmds);
             bufs.dsts.clear();
             bufs.dsts.extend_from_slice(&shard.dsts);
-            self.push(Job {
+            self.shared.push(Job {
                 member: m,
                 bufs,
                 ticket: state.clone(),
+                slot: None,
+                hedge: false,
             });
         }
         IoTicket {
@@ -325,14 +510,74 @@ impl AsyncIoQueue {
         }
     }
 
-    fn push(&self, job: Job) {
-        let q = &self.shared.queues[job.member];
-        let mut inner = q.inner.lock().unwrap();
-        while inner.len() >= q.cap {
-            inner = q.not_full.wait(inner).unwrap();
+    /// Hedged submission over a *routed* sharded plan: like
+    /// [`AsyncIoQueue::submit`], but each member job carries a hedge
+    /// deadline derived from that member's own profiled estimate
+    /// ([`DevicePool::hedge_budget`]) plus a precomputed replica
+    /// re-issue plan ([`DevicePool::reroute_shard`]). The ticket's
+    /// waiter doubles as the hedge trigger: a member that misses its
+    /// deadline — or fails outright — gets its commands re-issued to
+    /// the other live replicas, and whichever source completes first
+    /// resolves the member (replicas are byte-identical, so both
+    /// completing is harmless; loser buffers recycle through the free
+    /// list, never leak). Falls back to a plain submission when the
+    /// pool cannot hedge: no replication, hedging disabled, or an
+    /// unrouted plan (no flat offsets to re-map).
+    pub fn submit_hedged(&self, sharded: &ShardedPlan, pool: &DevicePool) -> IoTicket {
+        if pool.stripe().replication() <= 1
+            || !pool.hedge_config().enabled()
+            || sharded.shards.iter().any(|s| s.flats.len() != s.cmds.len())
+        {
+            return self.submit(sharded);
         }
-        inner.push_back(job);
-        q.not_empty.notify_one();
+        let now = Instant::now();
+        let mut slots = Vec::new();
+        let mut jobs = Vec::new();
+        for (m, shard) in sharded.shards.iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            let slot = slots.len();
+            slots.push(SlotState {
+                member: m,
+                deadline: Some(now + pool.hedge_budget(m, shard)),
+                reroutes: pool.reroute_shard(shard, m).unwrap_or_default(),
+                outstanding: 1,
+                parts: 0,
+                parts_done: 0,
+                fired: false,
+                resolved: false,
+                err: None,
+            });
+            let mut bufs = self.shared.free.lock().unwrap().pop().unwrap_or_default();
+            bufs.cmds.clear();
+            bufs.cmds.extend_from_slice(&shard.cmds);
+            bufs.dsts.clear();
+            bufs.dsts.extend_from_slice(&shard.dsts);
+            jobs.push((m, bufs, slot));
+        }
+        let state = Arc::new(TicketState {
+            done: Mutex::new(TicketDone {
+                remaining: slots.len(),
+                jobs: Vec::with_capacity(slots.len()),
+                error: None,
+                slots,
+            }),
+            cv: Condvar::new(),
+        });
+        for (m, bufs, slot) in jobs {
+            self.shared.push(Job {
+                member: m,
+                bufs,
+                ticket: state.clone(),
+                slot: Some(slot),
+                hedge: false,
+            });
+        }
+        IoTicket {
+            state,
+            shared: self.shared.clone(),
+        }
     }
 }
 
@@ -374,22 +619,104 @@ fn worker_loop(shared: Arc<Shared>, member: Arc<dyn FlashDevice>, m: usize) {
         let total: usize = job.bufs.cmds.iter().map(|e| e.len).sum();
         job.bufs.staging.clear();
         job.bufs.staging.resize(total, 0);
-        let result = member.read_batch(&job.bufs.cmds, &mut job.bufs.staging);
+        let result = read_with_retries(
+            member.as_ref(),
+            shared.health.as_deref(),
+            m,
+            &job.bufs.cmds,
+            &mut job.bufs.staging,
+        );
         let mut done = job.ticket.done.lock().unwrap();
-        match result {
-            Ok(service) => done.jobs.push((job.member, job.bufs, service)),
-            Err(e) => {
-                if done.error.is_none() {
-                    done.error = Some(e);
+        match job.slot {
+            None => {
+                // Plain ticket: first error wins, notify on completion.
+                match result {
+                    Ok(service) => done.jobs.push((job.member, job.bufs, service)),
+                    Err(e) => {
+                        if done.error.is_none() {
+                            done.error = Some(e);
+                        }
+                        shared.free.lock().unwrap().push(job.bufs);
+                    }
                 }
-                shared.free.lock().unwrap().push(job.bufs);
+                done.remaining -= 1;
+                if done.remaining == 0 {
+                    job.ticket.cv.notify_all();
+                }
+            }
+            Some(s) => {
+                // Hedged ticket: resolve the slot on first success
+                // (original, or the last hedge part); errors park in the
+                // slot for the waiter to judge (it may still hedge).
+                done.slots[s].outstanding -= 1;
+                match result {
+                    Ok(service) => {
+                        if done.slots[s].resolved {
+                            // Loser of a resolved race: recycle.
+                            shared.free.lock().unwrap().push(job.bufs);
+                        } else {
+                            let win = if job.hedge {
+                                done.slots[s].parts_done += 1;
+                                done.slots[s].parts_done == done.slots[s].parts
+                            } else {
+                                true
+                            };
+                            done.jobs.push((job.member, job.bufs, service));
+                            if win {
+                                done.slots[s].resolved = true;
+                                done.remaining -= 1;
+                                if job.hedge {
+                                    if let Some(h) = &shared.health {
+                                        h.note_hedge_win();
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if done.slots[s].err.is_none() {
+                            done.slots[s].err = Some(e);
+                        }
+                        shared.free.lock().unwrap().push(job.bufs);
+                    }
+                }
+                // The waiter also reacts to errors and straggler
+                // deadlines, so every hedged completion wakes it.
+                job.ticket.cv.notify_all();
             }
         }
-        done.remaining -= 1;
-        if done.remaining == 0 {
-            job.ticket.cv.notify_all();
+    }
+}
+
+/// One member read with [`READ_ATTEMPTS`] attempts. Transient failures
+/// retry in place (counted on `health` when attached); persistent
+/// failure marks the member dead and surfaces a typed
+/// [`PoolError::MemberFailed`] naming the member.
+fn read_with_retries(
+    member: &dyn FlashDevice,
+    health: Option<&PoolHealth>,
+    m: usize,
+    cmds: &[Extent],
+    out: &mut [u8],
+) -> anyhow::Result<Duration> {
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..READ_ATTEMPTS {
+        match member.read_batch(cmds, out) {
+            Ok(d) => return Ok(d),
+            Err(e) => {
+                if attempt + 1 < READ_ATTEMPTS {
+                    if let Some(h) = health {
+                        h.note_retry();
+                    }
+                }
+                last = Some(e);
+            }
         }
     }
+    if let Some(h) = health {
+        h.mark_dead(m);
+    }
+    Err(last.unwrap().context(PoolError::MemberFailed { member: m }))
 }
 
 #[cfg(test)]
@@ -525,6 +852,76 @@ mod tests {
         // Buffers were recycled through the free list.
         assert!(!queue.shared.free.lock().unwrap().is_empty());
         drop(queue); // joins workers without deadlock
+    }
+
+    #[test]
+    fn hedged_ticket_fails_over_to_replica() {
+        use crate::model::{ModelSpec, WeightStore};
+        use crate::storage::{
+            DeviceProfile, FaultConfig, FaultInjector, HedgeConfig, StripeLayout, StripePolicy,
+        };
+        let store = WeightStore::new(ModelSpec::tiny(), false, 42);
+        let image = store.build_image();
+        let stripe =
+            StripeLayout::build_replicated(&store.layout, 2, StripePolicy::RoundRobin, None, 2);
+        let mut pool =
+            DevicePool::simulated(&vec![DeviceProfile::nano(); 2], stripe, &image, 7).unwrap();
+        // Member 0 is dead: its original job burns its retries and the
+        // waiter must hedge the whole sub-plan onto the replica.
+        pool.wrap_members(|m, d| {
+            if m == 0 {
+                Arc::new(FaultInjector::new(
+                    d,
+                    FaultConfig { dead: true, ..Default::default() },
+                )) as Arc<dyn FlashDevice>
+            } else {
+                d
+            }
+        });
+        let pool = pool.with_hedge(HedgeConfig::default());
+        // A replicated (hot) extent: find one via the stripe map, then
+        // route it so the sub-plan carries flat offsets.
+        let mut hot = None;
+        pool.stripe()
+            .for_pieces_all(Extent::new(0, image.len()), |flat, options| {
+                if options.len() == 2 && options[0].0 == 0 && hot.is_none() {
+                    hot = Some(Extent::new(flat, options[0].1.len));
+                }
+            });
+        let hot = hot.expect("replicated stripe has hot pieces on member 0");
+        // Force the sub-plan onto the dead member (primary holder), with
+        // flat offsets so the waiter can re-map it onto the replica.
+        let mut forced = ShardedPlan::default();
+        forced.shards = vec![DeviceSubPlan::default(), DeviceSubPlan::default()];
+        pool.stripe().for_pieces_all(hot, |flat, options| {
+            let (m0, l0) = options[0];
+            assert_eq!(m0, 0);
+            forced.shards[0].push_piece_routed(l0, (flat - hot.offset) as usize, flat);
+        });
+        let queue =
+            AsyncIoQueue::start_with_health(pool.member_arcs(), 2, Some(pool.health()));
+        let ticket = queue.submit_hedged(&forced, &pool);
+        let mut out = vec![0u8; hot.len];
+        let mut stats = PoolStats::default();
+        stats.reset(2);
+        ticket.wait_scatter(&mut out, &mut stats).unwrap();
+        assert_eq!(
+            out.as_slice(),
+            &image[hot.offset as usize..hot.end() as usize],
+            "hedged bytes must match the flat image"
+        );
+        let h = pool.health().snapshot();
+        assert!(h.hedges >= 1, "hedge must fire");
+        assert!(h.hedge_wins >= 1, "replica must win");
+        assert!(h.retries >= 1, "dead member burns retries first");
+        assert!(h.dead_members.contains(&0), "member 0 marked dead");
+        // An uncoverable slot (both replicas dead) fails cleanly with a
+        // typed error instead of hanging.
+        pool.health().mark_dead(1);
+        let ticket = queue.submit_hedged(&forced, &pool);
+        let mut out = vec![0u8; hot.len];
+        let err = ticket.wait_scatter(&mut out, &mut stats).unwrap_err();
+        assert!(err.downcast_ref::<PoolError>().is_some(), "typed pool error: {err:#}");
     }
 
     #[test]

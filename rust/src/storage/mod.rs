@@ -22,6 +22,7 @@
 //! wall-clock flash reads with compute (see `async_queue.rs`).
 
 mod async_queue;
+mod fault;
 mod pool;
 mod profile;
 mod profiler;
@@ -33,11 +34,51 @@ use std::time::Duration;
 use crate::plan::{PlanReceipt, ReadPlan};
 
 pub use async_queue::{AsyncIoQueue, IoTicket};
-pub use pool::{DevicePool, PoolScratch, PoolStats, StripeLayout, StripePolicy};
+pub use fault::{FaultConfig, FaultHandle, FaultInjector};
+pub(crate) use fault::dead_member_from_env;
+pub use pool::{
+    DevicePool, HedgeConfig, PoolHealth, PoolHealthSnapshot, PoolScratch, PoolStats, StripeLayout,
+    StripePolicy,
+};
 pub use profile::DeviceProfile;
 pub use profiler::{ProfileConfig, Profiler};
 pub use real::RealFileDevice;
 pub use sim::SimulatedSsd;
+
+/// Read attempts per member before the pool declares it failed: one
+/// initial try plus three retries. Transient injected/firmware errors
+/// are absorbed here; only a *persistently* failing member escalates to
+/// failover (replica re-route) or a typed [`PoolError`].
+pub const READ_ATTEMPTS: usize = 4;
+
+/// Typed pool failure surfaced through `anyhow` (callers can
+/// `downcast_ref::<PoolError>()`). Degraded-mode serving relies on these
+/// being clean errors: a dead member must never panic or hang a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// A member kept failing after [`READ_ATTEMPTS`] attempts.
+    MemberFailed { member: usize },
+    /// The request touches bytes whose only replica(s) live on dead
+    /// member(s); replication cannot cover it.
+    Uncovered { member: usize },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::MemberFailed { member } => {
+                write!(f, "pool member {member} failed after {READ_ATTEMPTS} attempts")
+            }
+            PoolError::Uncovered { member } => write!(
+                f,
+                "request touches extents only held by dead pool member {member} \
+                 (not replica-covered)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
 
 /// One contiguous byte range on the device.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -34,13 +34,20 @@
 //! `std::thread::scope`, one thread per member with a non-empty
 //! sub-plan.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::latency::LatencyTable;
 use crate::model::FlashLayout;
 use crate::plan::{DeviceSubPlan, PlanReceipt, ReadPlan, ShardedPlan};
-use crate::storage::{DeviceProfile, Extent, FlashDevice, RealFileDevice, SimulatedSsd};
+use crate::storage::{
+    DeviceProfile, Extent, FlashDevice, PoolError, RealFileDevice, SimulatedSsd, READ_ATTEMPTS,
+};
+
+/// Hard cap on the stripe replication factor (stack-sized replica
+/// option arrays on the routing hot path).
+pub const MAX_REPLICAS: usize = 8;
 
 /// How stripe blocks are assigned to pool members.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,14 +77,26 @@ pub enum StripePolicy {
 #[derive(Clone, Debug)]
 pub struct StripeLayout {
     devices: usize,
+    /// Stripe replication factor: hot-head blocks exist on this many
+    /// members (1 = no replication).
+    replication: usize,
     /// Flat start offset per block, ascending; block `b` ends where
     /// block `b+1` starts (the last ends at `total`).
     starts: Vec<u64>,
-    /// Owning member per block.
+    /// Owning (primary) member per block.
     device: Vec<u32>,
-    /// Device-local start offset per block.
+    /// Device-local start offset per block (on the primary member).
     local: Vec<u64>,
-    /// Total bytes assigned to each member.
+    /// Prefix index into `copy_dev`/`copy_local`: block `b`'s extra
+    /// replica copies are entries `copy_off[b]..copy_off[b+1]`
+    /// (`len == num_blocks + 1`; all-equal when replication is 1).
+    copy_off: Vec<u32>,
+    /// Member holding each extra copy.
+    copy_dev: Vec<u32>,
+    /// Device-local start offset of each extra copy.
+    copy_local: Vec<u64>,
+    /// Total bytes assigned to each member, *including* replica copies
+    /// (sums to `total_bytes` only when replication is 1).
     device_bytes: Vec<u64>,
     total: u64,
 }
@@ -96,10 +115,33 @@ impl StripeLayout {
         policy: StripePolicy,
         stripe_bytes: Option<usize>,
     ) -> Self {
+        Self::build_replicated(layout, devices, policy, stripe_bytes, 1)
+    }
+
+    /// [`StripeLayout::build`] with hot-stripe replication: each
+    /// region's hot head (its first `⌈blocks/N⌉` stripe blocks — the
+    /// hottest rows once the reorder permutation is baked in) is stored
+    /// on `replication` members, copy `c` on member `(primary + c) % N`.
+    /// Replicas hold byte-identical data, so routing a read to any
+    /// holder returns the same bytes — replication changes *where* a
+    /// byte is read, never the byte. Cold tails stay single-copy.
+    /// `replication` is clamped to `[1, min(devices, MAX_REPLICAS)]`;
+    /// with 1 this is exactly `build`.
+    pub fn build_replicated(
+        layout: &FlashLayout,
+        devices: usize,
+        policy: StripePolicy,
+        stripe_bytes: Option<usize>,
+        replication: usize,
+    ) -> Self {
         let devices = devices.max(1);
+        let replication = replication.clamp(1, devices.min(MAX_REPLICAS));
         let mut starts = Vec::new();
         let mut device = Vec::new();
         let mut local = Vec::new();
+        let mut copy_off = vec![0u32];
+        let mut copy_dev = Vec::new();
+        let mut copy_local = Vec::new();
         let mut device_bytes = vec![0u64; devices];
         for (seq, (_id, base, row_bytes, rows)) in
             layout.regions_in_order().into_iter().enumerate()
@@ -128,13 +170,26 @@ impl StripeLayout {
                 device.push(dev as u32);
                 local.push(device_bytes[dev]);
                 device_bytes[dev] += len;
+                if replication > 1 && b < hot {
+                    for c in 1..replication {
+                        let rdev = (dev + c) % devices;
+                        copy_dev.push(rdev as u32);
+                        copy_local.push(device_bytes[rdev]);
+                        device_bytes[rdev] += len;
+                    }
+                }
+                copy_off.push(copy_dev.len() as u32);
             }
         }
         Self {
             devices,
+            replication,
             starts,
             device,
             local,
+            copy_off,
+            copy_dev,
+            copy_local,
             device_bytes,
             total: layout.total_bytes(),
         }
@@ -142,6 +197,11 @@ impl StripeLayout {
 
     pub fn devices(&self) -> usize {
         self.devices
+    }
+
+    /// Configured replication factor (1 = no replication).
+    pub fn replication(&self) -> usize {
+        self.replication
     }
 
     pub fn num_blocks(&self) -> usize {
@@ -194,8 +254,71 @@ impl StripeLayout {
         }
     }
 
+    /// Split a flat extent at stripe boundaries like
+    /// [`StripeLayout::for_pieces`], but emit *every* replica holding
+    /// each piece: `f(flat offset, options)` where `options` is the
+    /// `(member, device-local extent)` list — primary first, then the
+    /// copies in placement order. Allocation-free (the option list is a
+    /// stack array bounded by [`MAX_REPLICAS`]).
+    pub fn for_pieces_all(&self, extent: Extent, mut f: impl FnMut(u64, &[(usize, Extent)])) {
+        if extent.len == 0 {
+            return;
+        }
+        debug_assert!(extent.end() <= self.total, "extent beyond stripe map");
+        let mut off = extent.offset;
+        let end = extent.end();
+        let mut b = self.block_of(off);
+        let mut opts = [(0usize, Extent::new(0, 0)); MAX_REPLICAS];
+        while off < end {
+            let block_end = if b + 1 < self.starts.len() {
+                self.starts[b + 1]
+            } else {
+                self.total
+            };
+            let take = (block_end.min(end) - off) as usize;
+            let delta = off - self.starts[b];
+            opts[0] = (
+                self.device[b] as usize,
+                Extent::new(self.local[b] + delta, take),
+            );
+            let (c0, c1) = (self.copy_off[b] as usize, self.copy_off[b + 1] as usize);
+            for (i, c) in (c0..c1).enumerate() {
+                opts[1 + i] = (
+                    self.copy_dev[c] as usize,
+                    Extent::new(self.copy_local[c] + delta, take),
+                );
+            }
+            f(off, &opts[..1 + (c1 - c0)]);
+            off += take as u64;
+            b += 1;
+        }
+    }
+
+    /// Whether every byte of `cmds` is held by at least one live member
+    /// (`dead[m]` flags dead ones). The degraded-mode coverage check: a
+    /// request failing this gets a typed [`PoolError::Uncovered`], never
+    /// a panic or a hang.
+    pub fn covered_without(&self, cmds: &[Extent], dead: &[bool]) -> bool {
+        for c in cmds {
+            let mut ok = true;
+            self.for_pieces_all(*c, |_, options| {
+                if !options
+                    .iter()
+                    .any(|&(m, _)| !dead.get(m).copied().unwrap_or(false))
+                {
+                    ok = false;
+                }
+            });
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
     /// Partition a flat flash image into per-member images
-    /// (device-local address space).
+    /// (device-local address space). Replicated blocks are written to
+    /// every holding member, so replicas are byte-identical.
     pub fn shard_image(&self, flat: &[u8]) -> Vec<Vec<u8>> {
         assert_eq!(flat.len() as u64, self.total, "image / layout size mismatch");
         let mut out: Vec<Vec<u8>> = self
@@ -213,8 +336,153 @@ impl StripeLayout {
             let dev = self.device[b] as usize;
             let local = self.local[b] as usize;
             out[dev][local..local + (end - start)].copy_from_slice(&flat[start..end]);
+            for c in self.copy_off[b] as usize..self.copy_off[b + 1] as usize {
+                let rdev = self.copy_dev[c] as usize;
+                let rlocal = self.copy_local[c] as usize;
+                out[rdev][rlocal..rlocal + (end - start)].copy_from_slice(&flat[start..end]);
+            }
         }
         out
+    }
+}
+
+/// Shared, lock-free pool health: per-member liveness, the per-member
+/// routed-byte load signal replica routing balances on, and the
+/// fault-tolerance counters surfaced through `Metrics`, `/metrics` and
+/// the serving summaries. One instance per [`DevicePool`], shared (via
+/// [`DevicePool::health`]) with the async I/O workers.
+#[derive(Debug)]
+pub struct PoolHealth {
+    dead: Vec<AtomicBool>,
+    routed: Vec<AtomicU64>,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    hedges: AtomicU64,
+    hedge_wins: AtomicU64,
+}
+
+impl PoolHealth {
+    pub fn new(members: usize) -> Self {
+        Self {
+            dead: (0..members).map(|_| AtomicBool::new(false)).collect(),
+            routed: (0..members).map(|_| AtomicU64::new(0)).collect(),
+            retries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+        }
+    }
+
+    pub fn members(&self) -> usize {
+        self.dead.len()
+    }
+
+    pub fn is_dead(&self, m: usize) -> bool {
+        self.dead[m].load(Ordering::SeqCst)
+    }
+
+    pub fn mark_dead(&self, m: usize) {
+        self.dead[m].store(true, Ordering::SeqCst);
+    }
+
+    pub fn any_dead(&self) -> bool {
+        self.dead.iter().any(|d| d.load(Ordering::SeqCst))
+    }
+
+    /// Bytes routed to member `m` so far (the load signal).
+    pub fn routed(&self, m: usize) -> u64 {
+        self.routed[m].load(Ordering::Relaxed)
+    }
+
+    pub fn add_routed(&self, m: usize, bytes: u64) {
+        self.routed[m].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PoolHealthSnapshot {
+        PoolHealthSnapshot {
+            dead_members: (0..self.dead.len()).filter(|&m| self.is_dead(m)).collect(),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            hedges: self.hedges.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time [`PoolHealth`] view (what `/healthz`, `/metrics` and
+/// the serve/redline summaries report).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PoolHealthSnapshot {
+    pub dead_members: Vec<usize>,
+    pub retries: u64,
+    pub failovers: u64,
+    pub hedges: u64,
+    pub hedge_wins: u64,
+}
+
+impl PoolHealthSnapshot {
+    pub fn degraded(&self) -> bool {
+        !self.dead_members.is_empty()
+    }
+}
+
+/// Hedged-read tuning. A member whose sub-plan exceeds
+/// `factor × Σ T_m[bytes(cmd)]` (its own profiled estimate), floored at
+/// `floor`, gets its commands re-issued to the other replicas; the
+/// first completion wins. `factor <= 0` disables hedging.
+#[derive(Clone, Copy, Debug)]
+pub struct HedgeConfig {
+    pub factor: f64,
+    pub floor: Duration,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        Self {
+            factor: 4.0,
+            floor: Duration::from_micros(1000),
+        }
+    }
+}
+
+impl HedgeConfig {
+    /// `NC_HEDGE_FACTOR` / `NC_HEDGE_FLOOR_US` over the defaults
+    /// (factor 4.0, floor 1000µs). `NC_HEDGE_FACTOR=0` disables.
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if let Some(f) = std::env::var("NC_HEDGE_FACTOR")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+        {
+            cfg.factor = f;
+        }
+        if let Some(us) = std::env::var("NC_HEDGE_FLOOR_US")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            cfg.floor = Duration::from_micros(us);
+        }
+        cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.factor > 0.0
     }
 }
 
@@ -335,6 +603,10 @@ pub struct DevicePool {
     /// serial path (all-virtual-clock members; keeps the hot path
     /// allocation-free).
     parallel: bool,
+    /// Liveness, routed-load and fault counters, shared with the async
+    /// I/O workers.
+    health: Arc<PoolHealth>,
+    hedge: HedgeConfig,
 }
 
 impl DevicePool {
@@ -361,12 +633,15 @@ impl DevicePool {
         }
         let parallel = !members.iter().all(|m| m.is_virtual_time());
         let tables = members.iter().map(|_| None).collect();
+        let health = Arc::new(PoolHealth::new(members.len()));
         Ok(Self {
             name: name.to_string(),
             members: members.into_iter().map(Arc::from).collect(),
             tables,
             stripe,
             parallel,
+            health,
+            hedge: HedgeConfig::default(),
         })
     }
 
@@ -375,6 +650,110 @@ impl DevicePool {
         assert_eq!(tables.len(), self.members.len());
         self.tables = tables.into_iter().map(Some).collect();
         self
+    }
+
+    /// Override the hedged-read tuning (default [`HedgeConfig::default`]).
+    pub fn with_hedge(mut self, hedge: HedgeConfig) -> Self {
+        self.hedge = hedge;
+        self
+    }
+
+    /// Shared pool-health handle (liveness, load, fault counters).
+    pub fn health(&self) -> Arc<PoolHealth> {
+        self.health.clone()
+    }
+
+    /// The hedged-read tuning in force.
+    pub fn hedge_config(&self) -> HedgeConfig {
+        self.hedge
+    }
+
+    /// Hedge budget of one member sub-plan: `factor × Σ T_m[bytes(cmd)]`
+    /// under the member's own profiled table, floored at the configured
+    /// minimum (members without a table get the floor).
+    pub fn hedge_budget(&self, m: usize, shard: &DeviceSubPlan) -> Duration {
+        let est = self
+            .member_table(m)
+            .map(|t| shard.cmds.iter().map(|c| t.latency_bytes(c.len)).sum::<f64>())
+            .unwrap_or(0.0);
+        Duration::from_secs_f64((est * self.hedge.factor).max(0.0)).max(self.hedge.floor)
+    }
+
+    /// Re-map one *routed* sub-plan onto the other live replicas for a
+    /// hedged re-issue: every piece of `shard` (located via its flat
+    /// offsets) goes to its least-loaded live holder other than `avoid`.
+    /// Returns per-target `(member, device-local cmds, logical dsts)`
+    /// groups, or `None` when some piece is held only by `avoid`
+    /// (nowhere to hedge to) or the sub-plan carries no flat offsets
+    /// (unrouted). Routed-load accounting is *not* updated here — the
+    /// caller charges targets if and when the hedge actually fires.
+    pub fn reroute_shard(
+        &self,
+        shard: &DeviceSubPlan,
+        avoid: usize,
+    ) -> Option<Vec<(usize, Vec<Extent>, Vec<usize>)>> {
+        if shard.flats.len() != shard.cmds.len() {
+            return None;
+        }
+        let n = self.members.len();
+        let mut tcmds: Vec<Vec<Extent>> = vec![Vec::new(); n];
+        let mut tdsts: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut possible = true;
+        for i in 0..shard.cmds.len() {
+            let flat0 = shard.flats[i];
+            let dst0 = shard.dsts[i];
+            self.stripe
+                .for_pieces_all(Extent::new(flat0, shard.cmds[i].len), |pflat, options| {
+                    let mut best: Option<(usize, Extent)> = None;
+                    let mut best_load = u64::MAX;
+                    for &(om, ol) in options {
+                        if om == avoid || self.health.is_dead(om) {
+                            continue;
+                        }
+                        let load = self.health.routed(om);
+                        if best.is_none() || load < best_load {
+                            best = Some((om, ol));
+                            best_load = load;
+                        }
+                    }
+                    match best {
+                        Some((om, ol)) => {
+                            tcmds[om].push(ol);
+                            tdsts[om].push(dst0 + (pflat - flat0) as usize);
+                        }
+                        None => possible = false,
+                    }
+                });
+        }
+        if !possible {
+            return None;
+        }
+        let mut out = Vec::new();
+        for t in 0..n {
+            if tcmds[t].is_empty() {
+                continue;
+            }
+            out.push((t, std::mem::take(&mut tcmds[t]), std::mem::take(&mut tdsts[t])));
+        }
+        Some(out)
+    }
+
+    /// Replace each member with `wrap(index, member)` — the
+    /// fault-injection seam: wrap members in
+    /// [`crate::storage::FaultInjector`]s after construction without
+    /// rebuilding images or stripe maps. Recomputes the fan-out mode
+    /// from the wrapped members.
+    pub fn wrap_members(
+        &mut self,
+        mut wrap: impl FnMut(usize, Arc<dyn FlashDevice>) -> Arc<dyn FlashDevice>,
+    ) {
+        let members = std::mem::take(&mut self.members);
+        self.members = members
+            .into_iter()
+            .enumerate()
+            .map(|(m, d)| wrap(m, d))
+            .collect();
+        self.parallel = !self.members.iter().all(|m| m.is_virtual_time());
     }
 
     /// Homogeneous-or-heterogeneous simulated pool: one
@@ -478,6 +857,100 @@ impl DevicePool {
         worst
     }
 
+    /// Whether plans for this pool must go through the replica-routed
+    /// shard step: either hot stripes are replicated (there is a routing
+    /// choice to make) or a member died (its blocks must be avoided).
+    pub fn needs_routing(&self) -> bool {
+        self.stripe.replication() > 1 || self.health.any_dead()
+    }
+
+    /// Replica-routed shard step bound to this pool's health: each piece
+    /// goes to the *live* holding replica with the fewest routed bytes
+    /// so far (the same per-member byte accounting `PoolStats`'
+    /// utilization skew is derived from), primary on ties. Routed bytes
+    /// are accounted as chosen.
+    pub fn route_plan(&self, plan: &ReadPlan, out: &mut ShardedPlan) {
+        self.route_cmds(plan.cmds(), out);
+    }
+
+    fn route_cmds(&self, cmds: &[Extent], out: &mut ShardedPlan) {
+        out.route_from(cmds, &self.stripe, |options| self.choose_replica(options));
+    }
+
+    /// Pick the least-loaded live holder among `options`; falls back to
+    /// the primary when every holder is dead (the read will then fail
+    /// with a member error — coverage is checked before routing on the
+    /// degraded paths).
+    fn choose_replica(&self, options: &[(usize, Extent)]) -> usize {
+        let mut pick = 0usize;
+        let mut best: Option<u64> = None;
+        for (i, &(m, _)) in options.iter().enumerate() {
+            if self.health.is_dead(m) {
+                continue;
+            }
+            let load = self.health.routed(m);
+            if best.map_or(true, |b| load < b) {
+                best = Some(load);
+                pick = i;
+            }
+        }
+        let (m, e) = options[pick];
+        self.health.add_routed(m, e.len as u64);
+        pick
+    }
+
+    /// One member read with [`READ_ATTEMPTS`] attempts; transient
+    /// failures count as retries, persistent failure surfaces as a
+    /// typed [`PoolError::MemberFailed`] naming the member.
+    fn read_with_retries(
+        member: &dyn FlashDevice,
+        health: &PoolHealth,
+        m: usize,
+        cmds: &[Extent],
+        out: &mut [u8],
+    ) -> anyhow::Result<Duration> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..READ_ATTEMPTS {
+            match member.read_batch(cmds, out) {
+                Ok(d) => return Ok(d),
+                Err(e) => {
+                    if attempt + 1 < READ_ATTEMPTS {
+                        health.note_retry();
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap().context(PoolError::MemberFailed { member: m }))
+    }
+
+    /// Submit a plan directly to one member with the pool's retry and
+    /// liveness accounting — the single-member fast path of
+    /// [`crate::coordinator`] engines (bypassing the shard step must not
+    /// bypass fault tolerance). Persistent failure marks the member
+    /// dead and returns a typed [`PoolError::MemberFailed`].
+    pub fn submit_member_into(
+        &self,
+        m: usize,
+        plan: &ReadPlan,
+        receipt: &mut PlanReceipt,
+    ) -> anyhow::Result<()> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..READ_ATTEMPTS {
+            match self.members[m].submit_into(plan, receipt) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if attempt + 1 < READ_ATTEMPTS {
+                        self.health.note_retry();
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        self.health.mark_dead(m);
+        Err(last.unwrap().context(PoolError::MemberFailed { member: m }))
+    }
+
     /// Submit a pre-sharded logical plan: fan the per-member sub-plans
     /// out across members, reassemble the *logical* receipt (bytes in
     /// logical command order — bit-identical to a single-device
@@ -515,13 +988,81 @@ impl DevicePool {
             staging.resize_with(n, Default::default);
         }
         stats.reset(n);
-        receipt.service = self.fan_out(&sharded.shards, staging, &mut receipt.bytes, stats)?;
-        Ok(())
+        // Hedging needs a routing choice (replicas) and flat offsets to
+        // re-map a straggler's commands; both exist only on routed plans
+        // over replicated stripes, and only wall-clock members can
+        // meaningfully straggle.
+        let hedged = self.parallel
+            && self.hedge.enabled()
+            && self.stripe.replication() > 1
+            && sharded
+                .shards
+                .iter()
+                .all(|s| s.flats.len() == s.cmds.len());
+        let fanned = if hedged {
+            self.fan_out_hedged(&sharded.shards, staging, &mut receipt.bytes, stats)
+        } else {
+            self.fan_out(&sharded.shards, staging, &mut receipt.bytes, stats)
+        };
+        match fanned {
+            Ok(d) => {
+                receipt.service = d;
+                Ok(())
+            }
+            Err(e) => self.failover_submit(plan, e, staging, receipt, stats),
+        }
+    }
+
+    /// Last-resort failover after a member failed all its retries (and,
+    /// on hedged paths, its hedges): mark the member dead, and — when
+    /// every byte of the plan is still held by live replicas — re-shard
+    /// around the corpse and run the fan-out again. Uncoverable plans
+    /// get a typed [`PoolError::Uncovered`]; either way the caller sees
+    /// a clean result, never a panic or a hang. Cold path: allocates.
+    fn failover_submit(
+        &self,
+        plan: &ReadPlan,
+        mut err: anyhow::Error,
+        staging: &mut Vec<PlanReceipt>,
+        receipt: &mut PlanReceipt,
+        stats: &mut PoolStats,
+    ) -> anyhow::Result<()> {
+        loop {
+            let Some(&PoolError::MemberFailed { member }) = err.downcast_ref::<PoolError>()
+            else {
+                return Err(err);
+            };
+            self.health.mark_dead(member);
+            let dead: Vec<bool> = (0..self.members.len())
+                .map(|m| self.health.is_dead(m))
+                .collect();
+            if dead.iter().all(|&d| d) {
+                return Err(err);
+            }
+            if !self.stripe.covered_without(plan.cmds(), &dead) {
+                return Err(err.context(PoolError::Uncovered { member }));
+            }
+            let mut rerouted = ShardedPlan::default();
+            self.route_cmds(plan.cmds(), &mut rerouted);
+            self.health.note_failover();
+            stats.reset(self.members.len());
+            match self.fan_out(&rerouted.shards, staging, &mut receipt.bytes, stats) {
+                Ok(d) => {
+                    receipt.service = d;
+                    return Ok(());
+                }
+                Err(e) => err = e,
+            }
+        }
     }
 
     /// Run every member's sub-plan, scattering the data into the logical
     /// output buffer (`dsts` are disjoint by construction). Returns the
-    /// max member service time.
+    /// max member service time. Each member read gets [`READ_ATTEMPTS`]
+    /// attempts; a persistent member failure surfaces as a clean typed
+    /// error naming the member (the first failing member when several
+    /// fail) — never a panic, and never a partially-written receipt
+    /// reported as success.
     fn fan_out(
         &self,
         shards: &[DeviceSubPlan],
@@ -543,7 +1084,13 @@ impl DevicePool {
                 st.clear();
                 let b = shard.bytes();
                 st.bytes.resize(b, 0);
-                let d = self.members[m].read_batch(&shard.cmds, &mut st.bytes)?;
+                let d = Self::read_with_retries(
+                    self.members[m].as_ref(),
+                    &self.health,
+                    m,
+                    &shard.cmds,
+                    &mut st.bytes,
+                )?;
                 let mut sat = 0usize;
                 for (e, &dst) in shard.cmds.iter().zip(&shard.dsts) {
                     out[dst..dst + e.len].copy_from_slice(&st.bytes[sat..sat + e.len]);
@@ -569,6 +1116,7 @@ impl DevicePool {
                     continue;
                 }
                 let member = &self.members[m];
+                let health = &self.health;
                 let out_ptr = &out_ptr;
                 handles.push((
                     m,
@@ -576,7 +1124,13 @@ impl DevicePool {
                         st.clear();
                         let b = shard.bytes();
                         st.bytes.resize(b, 0);
-                        let d = member.read_batch(&shard.cmds, &mut st.bytes)?;
+                        let d = Self::read_with_retries(
+                            member.as_ref(),
+                            health,
+                            m,
+                            &shard.cmds,
+                            &mut st.bytes,
+                        )?;
                         let mut sat = 0usize;
                         for (e, &dst) in shard.cmds.iter().zip(&shard.dsts) {
                             debug_assert!(dst + e.len <= out_len);
@@ -594,16 +1148,314 @@ impl DevicePool {
                 ));
             }
             for (m, h) in handles {
-                match h.join().expect("pool member thread panicked") {
-                    Ok((b, d)) => {
+                match h.join() {
+                    Ok(Ok((b, d))) => {
                         stats.bytes[m] = b;
                         stats.service[m] = d;
                         max = max.max(d);
                     }
-                    Err(e) => err = Some(e),
+                    Ok(Err(e)) => {
+                        if err.is_none() {
+                            err = Some(e);
+                        }
+                    }
+                    Err(_) => {
+                        if err.is_none() {
+                            err = Some(
+                                anyhow::anyhow!("pool member {m} worker thread panicked")
+                                    .context(PoolError::MemberFailed { member: m }),
+                            );
+                        }
+                    }
                 }
             }
         });
+        if let Some(e) = err {
+            return Err(e);
+        }
+        Ok(max)
+    }
+
+    /// Hedged wall-clock fan-out over a *routed* sharded plan (every
+    /// sub-plan carries flat offsets). Member threads read into their
+    /// staging buffers and hand them back over a channel — the parent
+    /// scatters. A member that misses its hedge deadline
+    /// (`hedge.factor × Σ T_m[bytes(cmd)]`, floored at `hedge.floor`) —
+    /// or errors outright — gets its commands re-mapped onto the other
+    /// live replicas and re-issued; whichever source completes first
+    /// resolves the member (replicas are byte-identical, so both
+    /// completing is harmless). Every spawned read is drained before
+    /// returning, so loser buffers are reclaimed, not leaked.
+    fn fan_out_hedged(
+        &self,
+        shards: &[DeviceSubPlan],
+        staging: &mut [PlanReceipt],
+        out: &mut [u8],
+        stats: &mut PoolStats,
+    ) -> anyhow::Result<Duration> {
+        enum Msg {
+            Orig {
+                m: usize,
+                res: anyhow::Result<Duration>,
+                buf: Vec<u8>,
+            },
+            Hedge {
+                m: usize,
+                target: usize,
+                res: anyhow::Result<Duration>,
+                buf: Vec<u8>,
+                /// `(dst offset in `out`, len)` per command, in order.
+                scatter: Vec<(usize, usize)>,
+            },
+        }
+
+        let n = shards.len();
+        let started = Instant::now();
+        // Per-member hedge deadline from its own profiled estimate.
+        let deadline_for =
+            |m: usize, shard: &DeviceSubPlan| -> Instant { started + self.hedge_budget(m, shard) };
+
+        let mut deadline: Vec<Option<Instant>> = vec![None; n];
+        let mut orig_pending = vec![false; n];
+        let mut resolved = vec![false; n];
+        let mut hedged = vec![false; n];
+        let mut hedge_parts_left = vec![0usize; n];
+        let mut orig_err: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+        let mut hedge_err: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+        let mut hedge_service = vec![Duration::ZERO; n];
+        let mut hedge_credit: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+        let mut err: Option<anyhow::Error> = None;
+        let mut max = Duration::ZERO;
+
+        let (tx, rx) = std::sync::mpsc::channel::<Msg>();
+        std::thread::scope(|scope| {
+            let mut spawned = 0usize;
+            let mut received = 0usize;
+            let mut to_hedge: Vec<usize> = Vec::new();
+            for (m, shard) in shards.iter().enumerate() {
+                if shard.cmds.is_empty() {
+                    continue;
+                }
+                let mut buf = std::mem::take(&mut staging[m].bytes);
+                buf.clear();
+                buf.resize(shard.bytes(), 0);
+                deadline[m] = Some(deadline_for(m, shard));
+                orig_pending[m] = true;
+                let member = &self.members[m];
+                let health = &self.health;
+                let tx = tx.clone();
+                spawned += 1;
+                scope.spawn(move || {
+                    let res = Self::read_with_retries(
+                        member.as_ref(),
+                        health,
+                        m,
+                        &shard.cmds,
+                        &mut buf,
+                    );
+                    tx.send(Msg::Orig { m, res, buf }).ok();
+                });
+            }
+
+            while received < spawned || !to_hedge.is_empty() {
+                // Launch queued hedges: re-map the straggler's commands
+                // (via their flat offsets) onto the least-loaded live
+                // replicas, one read per target member.
+                for m in std::mem::take(&mut to_hedge) {
+                    if hedged[m] || resolved[m] {
+                        continue;
+                    }
+                    let shard = &shards[m];
+                    let mut tcmds: Vec<Vec<Extent>> = vec![Vec::new(); n];
+                    let mut tscatter: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+                    let mut possible = true;
+                    for i in 0..shard.cmds.len() {
+                        let flat0 = shard.flats[i];
+                        let dst0 = shard.dsts[i];
+                        self.stripe.for_pieces_all(
+                            Extent::new(flat0, shard.cmds[i].len),
+                            |pflat, options| {
+                                let mut best: Option<(usize, Extent)> = None;
+                                let mut best_load = u64::MAX;
+                                for &(om, ol) in options {
+                                    if om == m || self.health.is_dead(om) {
+                                        continue;
+                                    }
+                                    let load = self.health.routed(om);
+                                    if best.is_none() || load < best_load {
+                                        best = Some((om, ol));
+                                        best_load = load;
+                                    }
+                                }
+                                match best {
+                                    Some((om, ol)) => {
+                                        tcmds[om].push(ol);
+                                        tscatter[om]
+                                            .push((dst0 + (pflat - flat0) as usize, ol.len));
+                                    }
+                                    None => possible = false,
+                                }
+                            },
+                        );
+                    }
+                    if !possible {
+                        // Nowhere to hedge to (some piece lives only on
+                        // this member) — wait the original out.
+                        deadline[m] = None;
+                        continue;
+                    }
+                    hedged[m] = true;
+                    self.health.note_hedge();
+                    for t in 0..n {
+                        if tcmds[t].is_empty() {
+                            continue;
+                        }
+                        let cmds = std::mem::take(&mut tcmds[t]);
+                        let scatter = std::mem::take(&mut tscatter[t]);
+                        let bytes: usize = cmds.iter().map(|e| e.len).sum();
+                        self.health.add_routed(t, bytes as u64);
+                        let member = &self.members[t];
+                        let health = &self.health;
+                        let tx = tx.clone();
+                        hedge_parts_left[m] += 1;
+                        spawned += 1;
+                        scope.spawn(move || {
+                            let mut buf = vec![0u8; bytes];
+                            let res = Self::read_with_retries(
+                                member.as_ref(),
+                                health,
+                                t,
+                                &cmds,
+                                &mut buf,
+                            );
+                            tx.send(Msg::Hedge { m, target: t, res, buf, scatter }).ok();
+                        });
+                    }
+                }
+                if received >= spawned {
+                    continue;
+                }
+
+                // Wait for the next completion, bounded by the earliest
+                // pending hedge deadline.
+                let now = Instant::now();
+                let mut next: Option<Instant> = None;
+                for m in 0..n {
+                    if orig_pending[m] && !hedged[m] && !resolved[m] {
+                        if let Some(dl) = deadline[m] {
+                            next = Some(next.map_or(dl, |x: Instant| x.min(dl)));
+                        }
+                    }
+                }
+                let msg = match next {
+                    Some(dl) if dl <= now => {
+                        for m in 0..n {
+                            if orig_pending[m]
+                                && !hedged[m]
+                                && !resolved[m]
+                                && deadline[m].is_some_and(|d| d <= now)
+                            {
+                                to_hedge.push(m);
+                            }
+                        }
+                        continue;
+                    }
+                    Some(dl) => match rx.recv_timeout(dl - now) {
+                        Ok(msg) => msg,
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    },
+                    None => match rx.recv() {
+                        Ok(msg) => msg,
+                        Err(_) => break,
+                    },
+                };
+
+                match msg {
+                    Msg::Orig { m, res, buf } => {
+                        received += 1;
+                        orig_pending[m] = false;
+                        match res {
+                            Ok(d) => {
+                                let shard = &shards[m];
+                                let mut sat = 0usize;
+                                for (e, &dst) in shard.cmds.iter().zip(&shard.dsts) {
+                                    out[dst..dst + e.len]
+                                        .copy_from_slice(&buf[sat..sat + e.len]);
+                                    sat += e.len;
+                                }
+                                if !resolved[m] {
+                                    resolved[m] = true;
+                                    stats.bytes[m] += shard.bytes() as u64;
+                                    stats.service[m] = d;
+                                    max = max.max(d);
+                                }
+                            }
+                            Err(e) => {
+                                orig_err[m] = Some(e);
+                                if !resolved[m] && !hedged[m] {
+                                    // Error failover inside the hedge
+                                    // machinery: re-issue immediately.
+                                    to_hedge.push(m);
+                                }
+                            }
+                        }
+                        // Return the staging buffer (win or lose).
+                        staging[m].bytes = buf;
+                    }
+                    Msg::Hedge { m, target, res, buf, scatter } => {
+                        received += 1;
+                        match res {
+                            Ok(d) => {
+                                let mut src = 0usize;
+                                for &(dst, len) in &scatter {
+                                    out[dst..dst + len]
+                                        .copy_from_slice(&buf[src..src + len]);
+                                    src += len;
+                                }
+                                hedge_service[m] = hedge_service[m].max(d);
+                                hedge_credit[m].push((target, src as u64));
+                                hedge_parts_left[m] -= 1;
+                                if hedge_parts_left[m] == 0
+                                    && !resolved[m]
+                                    && hedge_err[m].is_none()
+                                {
+                                    resolved[m] = true;
+                                    self.health.note_hedge_win();
+                                    for &(t, b) in &hedge_credit[m] {
+                                        stats.bytes[t] += b;
+                                    }
+                                    stats.service[m] = hedge_service[m];
+                                    max = max.max(hedge_service[m]);
+                                }
+                            }
+                            Err(e) => {
+                                hedge_parts_left[m] -= 1;
+                                hedge_err[m] = Some(e);
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        drop(tx);
+
+        for m in 0..n {
+            if shards[m].cmds.is_empty() || resolved[m] {
+                continue;
+            }
+            // Both the original and (if launched) the hedge failed.
+            let e = orig_err[m]
+                .take()
+                .or_else(|| hedge_err[m].take())
+                .unwrap_or_else(|| {
+                    anyhow::anyhow!("pool member {m} never completed")
+                        .context(PoolError::MemberFailed { member: m })
+                });
+            if err.is_none() {
+                err = Some(e);
+            }
+        }
         if let Some(e) = err {
             return Err(e);
         }
@@ -630,7 +1482,13 @@ impl FlashDevice for DevicePool {
         let total: usize = extents.iter().map(|e| e.len).sum();
         anyhow::ensure!(out.len() == total, "out buffer {} != {}", out.len(), total);
         if self.members.len() == 1 {
-            return self.members[0].read_batch(extents, out);
+            return Self::read_with_retries(
+                self.members[0].as_ref(),
+                &self.health,
+                0,
+                extents,
+                out,
+            );
         }
         for e in extents {
             anyhow::ensure!(
@@ -641,6 +1499,21 @@ impl FlashDevice for DevicePool {
             );
         }
         let n = self.members.len();
+        let mut staging: Vec<PlanReceipt> = (0..n).map(|_| PlanReceipt::default()).collect();
+        let mut stats = PoolStats::default();
+        stats.reset(n);
+        if self.needs_routing() {
+            // Degraded or replicated pool: route every piece to a live
+            // replica (typed error when a piece has no live holder).
+            let dead: Vec<bool> = (0..n).map(|m| self.health.is_dead(m)).collect();
+            if dead.iter().any(|&d| d) && !self.stripe.covered_without(extents, &dead) {
+                let member = dead.iter().position(|&d| d).unwrap_or(0);
+                return Err(anyhow::Error::new(PoolError::Uncovered { member }));
+            }
+            let mut sharded = ShardedPlan::default();
+            self.route_cmds(extents, &mut sharded);
+            return self.fan_out(&sharded.shards, &mut staging, out, &mut stats);
+        }
         let mut shards: Vec<DeviceSubPlan> = (0..n).map(|_| DeviceSubPlan::default()).collect();
         let mut at = 0usize;
         for e in extents {
@@ -649,9 +1522,6 @@ impl FlashDevice for DevicePool {
             });
             at += e.len;
         }
-        let mut staging: Vec<PlanReceipt> = (0..n).map(|_| PlanReceipt::default()).collect();
-        let mut stats = PoolStats::default();
-        stats.reset(n);
         self.fan_out(&shards, &mut staging, out, &mut stats)
     }
 
@@ -935,5 +1805,208 @@ mod tests {
             })
             .collect();
         assert!(DevicePool::new("tiny-pool", members, stripe).is_err());
+    }
+
+    #[test]
+    fn utilization_skew_never_nan() {
+        // Empty pool (no members yet) and zero-byte / zero-service
+        // submissions must report a defined, neutral skew of 1.0.
+        let empty = PoolStats::default();
+        assert_eq!(empty.utilization_skew(), 1.0);
+        let mut zero = PoolStats::default();
+        zero.reset(4);
+        let skew = zero.utilization_skew();
+        assert!(!skew.is_nan(), "skew must be defined for zero-byte submissions");
+        assert_eq!(skew, 1.0);
+    }
+
+    #[test]
+    fn replicated_stripe_layout_invariants() {
+        let s = store();
+        for devices in [2usize, 3, 4] {
+            for policy in [StripePolicy::RoundRobin, StripePolicy::HotAware] {
+                let r1 = StripeLayout::build(&s.layout, devices, policy, None);
+                let r2 = StripeLayout::build_replicated(&s.layout, devices, policy, None, 2);
+                assert_eq!(r2.replication(), 2);
+                // Primary placement is untouched by replication.
+                assert_eq!(r1.starts, r2.starts);
+                assert_eq!(r1.device, r2.device);
+                // Replicas add bytes beyond the flat total.
+                let extra: u64 = r2.device_bytes().iter().sum::<u64>() - s.layout.total_bytes();
+                assert!(extra > 0, "replication must place extra copies");
+                // Every piece is held by its primary plus (for hot
+                // blocks) a distinct second member, each within bounds.
+                let whole = Extent::new(0, s.layout.total_bytes() as usize);
+                let mut hot_pieces = 0usize;
+                r2.for_pieces_all(whole, |_, options| {
+                    assert!(!options.is_empty() && options.len() <= 2);
+                    let mut seen = std::collections::HashSet::new();
+                    for &(m, local) in options {
+                        assert!(m < devices);
+                        assert!(local.end() <= r2.device_bytes()[m]);
+                        assert!(seen.insert(m), "copies on distinct members");
+                    }
+                    if options.len() == 2 {
+                        hot_pieces += 1;
+                    }
+                });
+                assert!(hot_pieces > 0, "hot heads must be replicated");
+            }
+        }
+    }
+
+    #[test]
+    fn replicated_shard_image_copies_are_identical() {
+        let s = store();
+        let image = s.build_image();
+        let stripe = StripeLayout::build_replicated(
+            &s.layout,
+            4,
+            StripePolicy::HotAware,
+            None,
+            2,
+        );
+        let shards = stripe.shard_image(&image);
+        let whole = Extent::new(0, image.len());
+        stripe.for_pieces_all(whole, |flat, options| {
+            let want = &image[flat as usize..flat as usize + options[0].1.len];
+            for &(m, local) in options {
+                assert_eq!(
+                    &shards[m][local.offset as usize..local.end() as usize],
+                    want,
+                    "replica bytes must be identical"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn replication_one_covered_only_without_dead_members() {
+        let s = store();
+        let stripe = StripeLayout::build(&s.layout, 4, StripePolicy::RoundRobin, None);
+        let whole = [Extent::new(0, s.layout.total_bytes() as usize)];
+        assert!(stripe.covered_without(&whole, &[false, false, false, false]));
+        assert!(!stripe.covered_without(&whole, &[false, true, false, false]));
+        // Replication 2: any single death keeps hot heads covered...
+        let stripe2 =
+            StripeLayout::build_replicated(&s.layout, 4, StripePolicy::RoundRobin, None, 2);
+        let mut hot_extent = None;
+        stripe2.for_pieces_all(whole[0], |flat, options| {
+            if options.len() == 2 && hot_extent.is_none() {
+                hot_extent = Some(Extent::new(flat, options[0].1.len));
+            }
+        });
+        let hot = [hot_extent.expect("replicated stripe has hot pieces")];
+        for dead in 0..4 {
+            let mut flags = [false; 4];
+            flags[dead] = true;
+            assert!(stripe2.covered_without(&hot, &flags), "hot piece survives {dead}");
+        }
+        // ...while a whole-space scan still needs every member (cold
+        // tails are single-copy).
+        assert!(!stripe2.covered_without(&whole, &[true, false, false, false]));
+    }
+
+    #[test]
+    fn routed_sharding_reassembles_identically() {
+        let s = store();
+        let image = s.build_image();
+        let flat = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 5);
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let id = MatrixId::new(0, MatrixKind::Gate);
+        let requests = vec![PlanRequest::new(
+            id,
+            vec![Chunk::new(0, 8), Chunk::new(20, 5), Chunk::new(40, 16)],
+        )];
+        let plan = planner.plan(&s.layout, &requests, None);
+        let want = flat.submit(&plan).unwrap();
+        for devices in [2usize, 4] {
+            let stripe = StripeLayout::build_replicated(
+                &s.layout,
+                devices,
+                StripePolicy::HotAware,
+                None,
+                2,
+            );
+            let pool = DevicePool::simulated(
+                &vec![DeviceProfile::nano(); devices],
+                stripe,
+                &image,
+                7,
+            )
+            .unwrap();
+            assert!(pool.needs_routing());
+            let mut sharded = ShardedPlan::default();
+            pool.route_plan(&plan, &mut sharded);
+            assert_eq!(sharded.total_bytes() as u64, plan.cmd_bytes());
+            let mut receipt = PlanReceipt::default();
+            let mut staging = Vec::new();
+            let mut stats = PoolStats::default();
+            pool.submit_sharded_into(&plan, &sharded, &mut staging, &mut receipt, &mut stats)
+                .unwrap();
+            assert_eq!(receipt.bytes, want.bytes, "devices={devices}");
+            assert_eq!(receipt.cmd_offsets, want.cmd_offsets);
+        }
+    }
+
+    #[test]
+    fn dead_member_fails_over_to_replica() {
+        use crate::storage::{FaultConfig, FaultInjector};
+        let s = store();
+        let image = s.build_image();
+        let stripe =
+            StripeLayout::build_replicated(&s.layout, 2, StripePolicy::RoundRobin, None, 2);
+        // Healthy reference pool with the same stripe.
+        let healthy = DevicePool::simulated(
+            &vec![DeviceProfile::nano(); 2],
+            stripe.clone(),
+            &image,
+            7,
+        )
+        .unwrap();
+        let mut pool = DevicePool::simulated(
+            &vec![DeviceProfile::nano(); 2],
+            stripe,
+            &image,
+            7,
+        )
+        .unwrap();
+        pool.wrap_members(|m, d| {
+            if m == 1 {
+                Arc::new(FaultInjector::new(d, FaultConfig { dead: true, ..Default::default() }))
+            } else {
+                d
+            }
+        });
+        let planner = IoPlanner::new(CoalescePolicy::contiguous());
+        let id = MatrixId::new(0, MatrixKind::Gate);
+        // The whole hot half of the matrix: spans both members' hot
+        // blocks (so the dead member is actually hit) while staying
+        // replica-covered.
+        let rows = ModelSpec::tiny()
+            .matrices()
+            .iter()
+            .find(|m| m.kind == MatrixKind::Gate)
+            .unwrap()
+            .rows;
+        let plan = planner.plan_chunks(&s.layout, id, &[Chunk::new(0, rows / 2)], None);
+        let mut sharded = ShardedPlan::default();
+        planner.shard_into(&plan, pool.stripe(), &mut sharded);
+        let mut receipt = PlanReceipt::default();
+        let mut staging = Vec::new();
+        let mut stats = PoolStats::default();
+        pool.submit_sharded_into(&plan, &sharded, &mut staging, &mut receipt, &mut stats)
+            .unwrap();
+        let mut want = PlanReceipt::default();
+        let mut wstag = Vec::new();
+        let mut wstats = PoolStats::default();
+        healthy
+            .submit_sharded_into(&plan, &sharded, &mut wstag, &mut want, &mut wstats)
+            .unwrap();
+        assert_eq!(receipt.bytes, want.bytes, "failover must be bit-identical");
+        let h = pool.health().snapshot();
+        assert_eq!(h.dead_members, vec![1]);
+        assert!(h.failovers >= 1, "failover counter must tick");
+        assert!(h.retries >= 1, "retries precede failover");
     }
 }

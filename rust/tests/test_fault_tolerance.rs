@@ -1,0 +1,275 @@
+//! Fault tolerance: replicated stripes, retries, hedged reads, and
+//! degraded-mode serving.
+//!
+//! The kill-test contract (DESIGN.md §9): with hot-stripe replication,
+//! a pool that loses a member keeps serving every replica-covered
+//! extent **bit-identical** to the healthy pool — replication changes
+//! where a byte is read, never the byte — while requests touching
+//! extents held only by the corpse fail with a typed
+//! [`PoolError::Uncovered`], never a panic or a hang.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use neuron_chunking::coordinator::{Engine, Policy};
+use neuron_chunking::latency::Chunk;
+use neuron_chunking::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+use neuron_chunking::plan::{CoalescePolicy, IoPlanner, PlanReceipt, ReadPlan, ShardedPlan};
+use neuron_chunking::storage::{
+    DevicePool, DeviceProfile, Extent, FaultConfig, FaultInjector, FlashDevice, HedgeConfig,
+    PoolError, PoolStats, SimulatedSsd, StripeLayout, StripePolicy, READ_ATTEMPTS,
+};
+use neuron_chunking::workload::FrameTrace;
+
+fn store() -> WeightStore {
+    WeightStore::new(ModelSpec::tiny(), false, 42)
+}
+
+fn replicated_pool(s: &WeightStore, image: &[u8], devices: usize, r: usize) -> DevicePool {
+    let stripe =
+        StripeLayout::build_replicated(&s.layout, devices, StripePolicy::RoundRobin, None, r);
+    DevicePool::simulated(&vec![DeviceProfile::nano(); devices], stripe, image, 7).unwrap()
+}
+
+/// Wrap member `m` in a [`FaultInjector`] with the given config.
+fn inject(pool: &mut DevicePool, m: usize, cfg: FaultConfig) {
+    pool.wrap_members(|i, inner| {
+        if i == m {
+            Arc::new(FaultInjector::new(inner, cfg.clone()))
+        } else {
+            inner
+        }
+    });
+}
+
+/// Route + submit one plan through the pool's replica-aware path.
+fn submit_routed(pool: &DevicePool, plan: &ReadPlan) -> anyhow::Result<PlanReceipt> {
+    let mut sharded = ShardedPlan::default();
+    pool.route_plan(plan, &mut sharded);
+    let mut staging = Vec::new();
+    let mut receipt = PlanReceipt::default();
+    let mut stats = PoolStats::default();
+    pool.submit_sharded_into(plan, &sharded, &mut staging, &mut receipt, &mut stats)?;
+    Ok(receipt)
+}
+
+#[test]
+fn dead_member_serves_replica_covered_extents_bit_identical() {
+    let s = store();
+    let image = s.build_image();
+    let planner = IoPlanner::new(CoalescePolicy::contiguous());
+    // The region head lands in the hot (replicated) stripe blocks.
+    let plan = planner.plan_chunks(
+        &s.layout,
+        MatrixId::new(0, MatrixKind::Gate),
+        &[Chunk::new(0, 8), Chunk::new(12, 4)],
+        None,
+    );
+    let dead = [true, false, false, false];
+    let healthy = replicated_pool(&s, &image, 4, 2);
+    assert!(
+        healthy.stripe().covered_without(plan.cmds(), &dead),
+        "test plan must be replica-covered with member 0 dead"
+    );
+    let want = submit_routed(&healthy, &plan).unwrap();
+    // Same pool, but member 0 is a corpse from the first read on.
+    let mut degraded = replicated_pool(&s, &image, 4, 2);
+    inject(&mut degraded, 0, FaultConfig { dead: true, ..FaultConfig::default() });
+    let got = submit_routed(&degraded, &plan).unwrap();
+    assert_eq!(
+        got.bytes, want.bytes,
+        "degraded pool must serve replica-covered extents bit-identical"
+    );
+    // Both equal the flat single-device read of the same plan.
+    let flat = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 5);
+    assert_eq!(want.bytes, flat.submit(&plan).unwrap().bytes);
+    // The death was absorbed through the retry → mark-dead → failover
+    // ladder and is visible in the health snapshot.
+    let h = degraded.health().snapshot();
+    assert_eq!(h.dead_members, vec![0]);
+    assert!(h.retries >= READ_ATTEMPTS as u64 - 1, "retries {}", h.retries);
+    assert!(h.failovers >= 1, "death must be absorbed via failover");
+    assert!(h.degraded());
+    assert!(!healthy.health().snapshot().degraded());
+}
+
+#[test]
+fn uncovered_extents_fail_with_typed_error() {
+    let s = store();
+    let image = s.build_image();
+    let planner = IoPlanner::new(CoalescePolicy::contiguous());
+    let mut degraded = replicated_pool(&s, &image, 4, 2);
+    inject(&mut degraded, 0, FaultConfig { dead: true, ..FaultConfig::default() });
+    // Find a row whose only copy lives on member 0 (a cold single-copy
+    // stripe block) by scanning the layout.
+    let dead = [true, false, false, false];
+    let mut uncovered = None;
+    'scan: for (rid, _base, _row_bytes, rows) in s.layout.regions_in_order() {
+        for r in 0..rows {
+            let plan = planner.plan_chunks(&s.layout, rid, &[Chunk::new(r, 1)], None);
+            if !degraded.stripe().covered_without(plan.cmds(), &dead) {
+                uncovered = Some(plan);
+                break 'scan;
+            }
+        }
+    }
+    let plan = uncovered.expect("tiny layout has cold single-copy blocks on member 0");
+    let err = submit_routed(&degraded, &plan).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<PoolError>(),
+        Some(&PoolError::Uncovered { member: 0 }),
+        "uncovered extents must fail with a typed error, got: {err:#}"
+    );
+    // A second submission fails just as cleanly — degraded mode is a
+    // steady state, not a one-shot.
+    let err2 = submit_routed(&degraded, &plan).unwrap_err();
+    assert!(err2.downcast_ref::<PoolError>().is_some(), "{err2:#}");
+}
+
+#[test]
+fn hedged_submit_recovers_from_straggler_and_counts_hedges() {
+    // A wall-clock member that stalls every read by 25ms gets hedged:
+    // its commands are re-issued to the replica after the hedge floor,
+    // the replica's bytes win, and the result is still bit-exact.
+    let s = store();
+    let image = s.build_image();
+    let stripe = StripeLayout::build_replicated(&s.layout, 2, StripePolicy::RoundRobin, None, 2);
+    let shards = stripe.shard_image(&image);
+    let dir = std::env::temp_dir().join(format!("nc_hedge_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let paths: Vec<PathBuf> = shards
+        .iter()
+        .enumerate()
+        .map(|(m, data)| {
+            let p = dir.join(format!("member{m}.img"));
+            std::fs::write(&p, data).unwrap();
+            p
+        })
+        .collect();
+    let mut pool = DevicePool::from_files(&paths, stripe, 2, false)
+        .unwrap()
+        .with_hedge(HedgeConfig { factor: 4.0, floor: Duration::from_micros(500) });
+    inject(
+        &mut pool,
+        0,
+        FaultConfig {
+            spike_rate: 1.0,
+            spike: Duration::from_millis(25),
+            ..FaultConfig::default()
+        },
+    );
+    let planner = IoPlanner::new(CoalescePolicy::contiguous());
+    let plan = planner.plan_chunks(
+        &s.layout,
+        MatrixId::new(0, MatrixKind::Up),
+        &[Chunk::new(0, 16)],
+        None,
+    );
+    assert!(
+        pool.stripe().covered_without(plan.cmds(), &[true, false]),
+        "hedge test plan must be replica-covered"
+    );
+    let got = submit_routed(&pool, &plan).unwrap();
+    let flat = SimulatedSsd::with_image(DeviceProfile::nano(), image.clone(), 5);
+    assert_eq!(got.bytes, flat.submit(&plan).unwrap().bytes, "hedged read corrupted bytes");
+    let h = pool.health().snapshot();
+    assert!(h.hedges >= 1, "straggling member never got hedged: {h:?}");
+    assert!(h.hedge_wins >= 1, "replica re-issue should beat a 25ms stall: {h:?}");
+    assert!(h.dead_members.is_empty(), "a straggler is slow, not dead");
+    for p in paths {
+        std::fs::remove_file(p).ok();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_with_dead_member_degrades_to_typed_errors() {
+    // Dense serving touches cold single-copy extents, so an engine that
+    // loses a pool member must answer with clean typed errors — never a
+    // panic or a hang — and report the death through its health
+    // snapshot.
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::builder("tiny")
+        .policy(Policy::Dense)
+        .sparsity(0.0)
+        .devices(4)
+        .replication(2)
+        .exec_threads(1)
+        .async_io(false)
+        .artifacts(&artifacts)
+        .build()
+        .unwrap();
+    assert_eq!(engine.replication(), 2);
+    let _handle = engine.inject_faults(0, FaultConfig { dead: true, ..FaultConfig::default() });
+    let spec = engine.spec();
+    let session = engine.new_session();
+    let frame = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 11).frame(0);
+    let err = session.append_frame(&frame).unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<PoolError>(), Some(PoolError::Uncovered { .. })),
+        "dense request over a dead member must surface a typed error, got: {err:#}"
+    );
+    let h = engine.pool_health();
+    assert_eq!(h.dead_members, vec![0]);
+    assert!(h.degraded());
+    // Still no panic on repeat traffic; the engine stays answerable.
+    let err2 = session.append_frame(&frame).unwrap_err();
+    assert!(err2.downcast_ref::<PoolError>().is_some(), "{err2:#}");
+    // Health counters surface through the metrics seam the server
+    // exposes on /metrics and in every response's "engine" object.
+    let m = engine.metrics();
+    assert_eq!(m.bytes("pool.dead"), 1);
+    assert!(m.bytes("io.retries") >= READ_ATTEMPTS as u64 - 1);
+}
+
+#[test]
+fn replicated_healthy_pool_matches_unreplicated_bit_identical() {
+    // Replication must be invisible when nothing fails: same bytes as
+    // an unreplicated pool and as the flat image, across several plans.
+    let s = store();
+    let image = s.build_image();
+    let planner = IoPlanner::new(CoalescePolicy::contiguous());
+    let plain = replicated_pool(&s, &image, 4, 1);
+    let replicated = replicated_pool(&s, &image, 4, 2);
+    for (layer, kind) in [(0, MatrixKind::Gate), (0, MatrixKind::Up), (1, MatrixKind::Down)] {
+        let plan = planner.plan_chunks(
+            &s.layout,
+            MatrixId::new(layer, kind),
+            &[Chunk::new(0, 4), Chunk::new(8, 2)],
+            None,
+        );
+        let mut sharded = ShardedPlan::default();
+        planner.shard_into(&plan, plain.stripe(), &mut sharded);
+        let mut staging = Vec::new();
+        let mut receipt = PlanReceipt::default();
+        let mut stats = PoolStats::default();
+        plain
+            .submit_sharded_into(&plan, &sharded, &mut staging, &mut receipt, &mut stats)
+            .unwrap();
+        let routed = submit_routed(&replicated, &plan).unwrap();
+        assert_eq!(
+            routed.bytes, receipt.bytes,
+            "replication changed served bytes for layer {layer} {kind:?}"
+        );
+    }
+    // Replica copies inflate per-member images, never the logical space.
+    assert!(
+        replicated.stripe().device_bytes().iter().sum::<u64>()
+            > plain.stripe().device_bytes().iter().sum::<u64>(),
+        "replication must store extra copies"
+    );
+    assert_eq!(replicated.stripe().total_bytes(), plain.stripe().total_bytes());
+}
+
+#[test]
+fn extent_scatter_hits_every_member_boundary() {
+    // Replicated routing still covers every byte exactly once: route an
+    // extent spanning many stripe blocks and check full reassembly.
+    let s = store();
+    let image = s.build_image();
+    let pool = replicated_pool(&s, &image, 4, 3);
+    let e = Extent::new(64, 16_384.min(image.len() - 64));
+    let (bytes, _) = pool.read_batch_vec(&[e]).unwrap();
+    assert_eq!(&bytes[..], &image[e.offset as usize..e.end() as usize]);
+}
