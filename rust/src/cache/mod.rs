@@ -1,0 +1,747 @@
+//! Shared cross-session hot-chunk RAM cache ([`ChunkCache`]).
+//!
+//! One instance is owned by the engine core and shared by every session
+//! and scheduler worker. The cache is *chunk-granular*: residency is
+//! tracked per selection row, but admission and eviction always move
+//! whole contiguous runs ([`Chunk`]s), mirroring the paper's chunk-based
+//! I/O unit. Admission is frequency-driven: the decode hot path records
+//! which rows each step selects (lock-free atomic counters, optionally
+//! pre-seeded from the `reorder/` calibration priors), and a maintenance
+//! pass — off the critical path — promotes the most frequently selected
+//! rows until a global byte budget is filled, evicting whole chunks that
+//! fell out of the hot set. Counters decay by half on every maintenance
+//! pass, so the admission policy tracks the *recent* hot set.
+//!
+//! Two serving modes:
+//!
+//! * **default** (`pricing = false`): the cache never changes *what* is
+//!   selected or computed — it serves already-selected rows from RAM.
+//!   Selected-chunk sets and decode outputs are bit-identical with the
+//!   cache on or off; only the flash `ReadPlan` shrinks. Resident rows
+//!   are subtracted from the group's chunk list *before* the I/O planner
+//!   shards/fuses it, so the device pool only ever sees misses.
+//! * **pricing** (`pricing = true`, opt-in): the paper's §5 cache
+//!   semantics — resident rows are priced at (near-)zero by zeroing
+//!   their importance before selection and unioning them into the
+//!   compute set for free. This is equivalent to giving resident chunks
+//!   a near-zero latency estimate in the importance ÷ latency utility
+//!   (the selector spends its flash-latency budget elsewhere), but keeps
+//!   the selector's chunk enumeration untouched. It changes selection,
+//!   so it is off by default.
+//!
+//! Locking: one `RwLock` per (layer, selection-group) shard plus pure
+//! atomics for the frequency tables. The decode hot path takes exactly
+//! one shard read lock per group and writes only into caller-provided,
+//! pre-reserved arena buffers, so steady-state decode stays
+//! allocation-free. Maintenance is guarded by a try-lock flag — at most
+//! one maintainer runs at a time, and it materializes admitted rows
+//! *outside* the shard write lock.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::latency::{chunks_from_mask, Chunk};
+use crate::reorder::drift_score;
+
+/// Selection groups gather at most this many member matrices (Q/K/V).
+pub const MAX_MEMBERS: usize = 3;
+
+/// Row slot marker: row is not resident.
+const NONE: u32 = u32::MAX;
+
+/// Scale for virtual observations injected by [`ChunkCache::seed_prior`].
+const SEED_OBSERVATIONS: f64 = 1024.0;
+
+/// Static shape of one (layer, selection-group) shard.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSpec {
+    /// Selection rows in the group (shared by all member matrices).
+    pub rows: usize,
+    /// f32s per row for each member matrix (0 = member slot unused).
+    pub row_f32s: [usize; MAX_MEMBERS],
+    /// Flash bytes per row summed over members — the bytes a hit saves.
+    pub flash_row_bytes_sum: u64,
+}
+
+impl ShardSpec {
+    fn row_ram_bytes(&self) -> u64 {
+        self.row_f32s.iter().map(|&w| w as u64 * 4).sum()
+    }
+}
+
+/// One resident run of rows with its materialized weights per member.
+struct Entry {
+    chunk: Chunk,
+    /// `data[m]` holds `chunk.len * row_f32s[m]` values, row-major.
+    data: [Vec<f32>; MAX_MEMBERS],
+}
+
+struct ShardState {
+    /// Row → index into `entries` (`NONE` when not resident).
+    slot_of_row: Vec<u32>,
+    entries: Vec<Entry>,
+    /// Resident RAM bytes in this shard.
+    bytes: u64,
+    /// Calibrated activation profile (empty until seeded).
+    baseline: Vec<f64>,
+}
+
+struct CacheShard {
+    spec: ShardSpec,
+    row_ram_bytes: u64,
+    /// Live selection counts, one per row. Lock-free.
+    freq: Vec<AtomicU32>,
+    state: RwLock<ShardState>,
+}
+
+/// Byte-budgeted, chunk-granular RAM cache shared across sessions.
+pub struct ChunkCache {
+    shards: Vec<CacheShard>,
+    groups_per_layer: usize,
+    budget_bytes: u64,
+    pricing: bool,
+    /// Σ rows × row_ram_bytes over shards — budget-share denominator.
+    total_weight: u64,
+    maintaining: AtomicBool,
+    admissions: AtomicU64,
+    evictions: AtomicU64,
+    resident_bytes: AtomicU64,
+    hit_rows: AtomicU64,
+    /// Latest traffic-weighted drift score, stored as f64 bits.
+    drift_bits: AtomicU64,
+}
+
+impl ChunkCache {
+    /// `shards` is laid out layer-major: shard `(layer, group)` lives at
+    /// `layer * groups_per_layer + group`.
+    pub fn new(
+        budget_bytes: u64,
+        pricing: bool,
+        groups_per_layer: usize,
+        specs: Vec<ShardSpec>,
+    ) -> Self {
+        assert!(groups_per_layer > 0);
+        assert_eq!(specs.len() % groups_per_layer, 0);
+        let total_weight = specs
+            .iter()
+            .map(|s| s.rows as u64 * s.row_ram_bytes())
+            .sum();
+        let shards = specs
+            .into_iter()
+            .map(|spec| CacheShard {
+                row_ram_bytes: spec.row_ram_bytes(),
+                freq: (0..spec.rows).map(|_| AtomicU32::new(0)).collect(),
+                state: RwLock::new(ShardState {
+                    slot_of_row: vec![NONE; spec.rows],
+                    entries: Vec::new(),
+                    bytes: 0,
+                    baseline: Vec::new(),
+                }),
+                spec,
+            })
+            .collect();
+        Self {
+            shards,
+            groups_per_layer,
+            budget_bytes,
+            pricing,
+            total_weight,
+            maintaining: AtomicBool::new(false),
+            admissions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            resident_bytes: AtomicU64::new(0),
+            hit_rows: AtomicU64::new(0),
+            drift_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    fn shard(&self, layer: usize, group: usize) -> &CacheShard {
+        &self.shards[layer * self.groups_per_layer + group]
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn pricing(&self) -> bool {
+        self.pricing
+    }
+
+    pub fn groups_per_layer(&self) -> usize {
+        self.groups_per_layer
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn admissions(&self) -> u64 {
+        self.admissions.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn hit_rows(&self) -> u64 {
+        self.hit_rows.load(Ordering::Relaxed)
+    }
+
+    /// Latest drift score (traffic-weighted TV distance between the live
+    /// hot-set profile and the calibrated baseline; see
+    /// [`crate::reorder::drift_score`]).
+    pub fn drift(&self) -> f64 {
+        f64::from_bits(self.drift_bits.load(Ordering::Relaxed))
+    }
+
+    /// Worst-case rows one shard can ever hold under its budget share —
+    /// sessions pre-reserve gather capacity from this so the cached hot
+    /// path stays allocation-free.
+    pub fn max_resident_rows(&self, layer: usize, group: usize) -> usize {
+        let sh = self.shard(layer, group);
+        if self.total_weight == 0 {
+            return 0;
+        }
+        let share = (self.budget_bytes as u128
+            * (sh.spec.rows as u64 * sh.row_ram_bytes) as u128
+            / self.total_weight as u128) as u64;
+        ((share / sh.row_ram_bytes.max(1)) as usize).min(sh.spec.rows)
+    }
+
+    /// Resident rows in one shard (tests/introspection).
+    pub fn resident_rows(&self, layer: usize, group: usize) -> usize {
+        let st = self.shard(layer, group).state.read().unwrap();
+        st.entries.iter().map(|e| e.chunk.len).sum()
+    }
+
+    /// Record one decode step's selected chunks for a group. Lock-free;
+    /// called from the hot path *before* cache subtraction so frequency
+    /// reflects demand, not misses.
+    pub fn record_selection(&self, layer: usize, group: usize, chunks: &[Chunk]) {
+        let sh = self.shard(layer, group);
+        for c in chunks {
+            debug_assert!(c.end() <= sh.freq.len());
+            for a in &sh.freq[c.start..c.end()] {
+                a.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Pricing mode only: zero the importance of resident rows before
+    /// selection and return the freed importance mass. Zero importance is
+    /// the selector-side equivalent of a near-zero latency estimate: the
+    /// importance ÷ latency utility stops paying flash cost for rows the
+    /// cache will serve, and the freed budget buys additional chunks.
+    pub fn zero_resident(&self, layer: usize, group: usize, imp: &mut [f32]) -> f64 {
+        if !self.pricing {
+            return 0.0;
+        }
+        let st = self.shard(layer, group).state.read().unwrap();
+        let mut freed = 0.0f64;
+        for e in &st.entries {
+            for v in &mut imp[e.chunk.start..e.chunk.end()] {
+                freed += *v as f64;
+                *v = 0.0;
+            }
+        }
+        freed
+    }
+
+    /// Subtract resident rows from a chunk list without staging any
+    /// data. The decode path records prefetch predictions *after*
+    /// [`ChunkCache::prepare`] has subtracted residents, so submit-ahead
+    /// reads are already miss-only as of the step that recorded them;
+    /// this helper lets a planner additionally re-subtract against
+    /// *current* residency (e.g. after a maintenance pass admitted new
+    /// rows). Not counted as hits (the rows have not been selected
+    /// yet); [`ChunkCache::prepare`] accounts them when selection
+    /// actually demands them.
+    pub fn subtract_resident(
+        &self,
+        layer: usize,
+        group: usize,
+        chunks: &mut Vec<Chunk>,
+        tmp: &mut Vec<Chunk>,
+    ) {
+        let sh = self.shard(layer, group);
+        let st = sh.state.read().unwrap();
+        if st.entries.is_empty() {
+            return;
+        }
+        tmp.clear();
+        for c in chunks.iter() {
+            Self::split_runs(&st, c, tmp, None);
+        }
+        std::mem::swap(chunks, tmp);
+    }
+
+    /// Hot-path cache application for one group, under a single shard
+    /// read lock. In default mode: subtract resident rows from
+    /// `flash_chunks` (run-splitting, via `tmp`) and stage their weights
+    /// into `staged_rows`/`staged_data` (ascending row order, matching
+    /// the gather cursor). In pricing mode: additionally union resident
+    /// rows into `phys_rows`/`selset` (the §5 free-compute union).
+    ///
+    /// All output buffers are caller-owned arenas; with sufficient
+    /// reserved capacity this performs no heap allocation. Returns the
+    /// flash bytes served from RAM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prepare(
+        &self,
+        layer: usize,
+        group: usize,
+        phys_rows: &mut Vec<usize>,
+        selset: &mut [bool],
+        flash_chunks: &mut Vec<Chunk>,
+        tmp: &mut Vec<Chunk>,
+        staged_rows: &mut Vec<usize>,
+        staged_data: &mut [Vec<f32>; MAX_MEMBERS],
+    ) -> u64 {
+        staged_rows.clear();
+        for v in staged_data.iter_mut() {
+            v.clear();
+        }
+        let sh = self.shard(layer, group);
+        let st = sh.state.read().unwrap();
+        if st.entries.is_empty() {
+            return 0;
+        }
+        tmp.clear();
+        let mut hits = 0u64;
+        if self.pricing {
+            // Union all resident rows into the compute set for free.
+            let before = phys_rows.len();
+            for e in &st.entries {
+                for r in e.chunk.start..e.chunk.end() {
+                    if !selset[r] {
+                        selset[r] = true;
+                        phys_rows.push(r);
+                    }
+                }
+            }
+            if phys_rows.len() != before {
+                phys_rows.sort_unstable();
+            }
+            // Subtract residents from the flash chunks (no staging yet —
+            // staging below walks *all* residents in ascending order).
+            for c in flash_chunks.iter() {
+                Self::split_runs(&st, c, tmp, None);
+            }
+            std::mem::swap(flash_chunks, tmp);
+            for (r, &s) in st.slot_of_row.iter().enumerate() {
+                if s != NONE {
+                    Self::stage_row(&st, &sh.spec, r, s, staged_rows, staged_data);
+                    hits += 1;
+                }
+            }
+        } else {
+            // Subtract and stage in one ascending pass over the chunks.
+            let mut stage = |r: usize, s: u32| {
+                Self::stage_row(&st, &sh.spec, r, s, staged_rows, staged_data);
+                hits += 1;
+            };
+            for c in flash_chunks.iter() {
+                Self::split_runs(&st, c, tmp, Some(&mut stage));
+            }
+            std::mem::swap(flash_chunks, tmp);
+        }
+        self.hit_rows.fetch_add(hits, Ordering::Relaxed);
+        hits * sh.spec.flash_row_bytes_sum
+    }
+
+    /// Split one chunk into its non-resident runs (pushed to `out`),
+    /// optionally visiting each resident row in ascending order.
+    fn split_runs(
+        st: &ShardState,
+        c: &Chunk,
+        out: &mut Vec<Chunk>,
+        mut on_hit: Option<&mut dyn FnMut(usize, u32)>,
+    ) {
+        let mut run_start = c.start;
+        let mut run_len = 0usize;
+        for (i, &s) in st.slot_of_row[c.start..c.end()].iter().enumerate() {
+            let r = c.start + i;
+            if s != NONE {
+                if run_len > 0 {
+                    out.push(Chunk::new(run_start, run_len));
+                    run_len = 0;
+                }
+                if let Some(f) = on_hit.as_deref_mut() {
+                    f(r, s);
+                }
+            } else {
+                if run_len == 0 {
+                    run_start = r;
+                }
+                run_len += 1;
+            }
+        }
+        if run_len > 0 {
+            out.push(Chunk::new(run_start, run_len));
+        }
+    }
+
+    fn stage_row(
+        st: &ShardState,
+        spec: &ShardSpec,
+        row: usize,
+        slot: u32,
+        staged_rows: &mut Vec<usize>,
+        staged_data: &mut [Vec<f32>; MAX_MEMBERS],
+    ) {
+        let e = &st.entries[slot as usize];
+        let off = row - e.chunk.start;
+        for (m, &w) in spec.row_f32s.iter().enumerate() {
+            if w > 0 {
+                staged_data[m].extend_from_slice(&e.data[m][off * w..(off + 1) * w]);
+            }
+        }
+        staged_rows.push(row);
+    }
+
+    /// Install a calibrated activation profile for one shard: sets the
+    /// drift baseline and injects scaled virtual observations so the
+    /// first maintenance pass admits the calibration-hot rows before any
+    /// live traffic arrives.
+    pub fn seed_prior(&self, layer: usize, group: usize, freq: &[f64]) {
+        let sh = self.shard(layer, group);
+        assert_eq!(freq.len(), sh.spec.rows);
+        let mut st = sh.state.write().unwrap();
+        st.baseline.clear();
+        st.baseline.extend_from_slice(freq);
+        let sum: f64 = freq.iter().sum();
+        if sum > 0.0 {
+            for (a, &f) in sh.freq.iter().zip(freq) {
+                a.store((f / sum * SEED_OBSERVATIONS).round() as u32, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drop all resident entries, frequency counts, and baselines — used
+    /// when the physical row space changes (online re-reorder) before
+    /// re-seeding with profiles mapped into the new layout.
+    pub fn clear_all(&self) {
+        for sh in &self.shards {
+            let mut st = sh.state.write().unwrap();
+            self.resident_bytes.fetch_sub(st.bytes, Ordering::Relaxed);
+            st.entries.clear();
+            st.slot_of_row.fill(NONE);
+            st.bytes = 0;
+            st.baseline.clear();
+            for a in &sh.freq {
+                a.store(0, Ordering::Relaxed);
+            }
+        }
+        self.drift_bits.store(0f64.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Snapshot one shard's live selection counts (physical row space).
+    pub fn frequency_snapshot(&self, layer: usize, group: usize, out: &mut Vec<f64>) {
+        let sh = self.shard(layer, group);
+        out.clear();
+        out.extend(sh.freq.iter().map(|a| a.load(Ordering::Relaxed) as f64));
+    }
+
+    /// Maintenance pass (off the critical path): re-derive the desired
+    /// resident set per shard from the decayed frequency counters, evict
+    /// whole chunks that fell out of it, admit the runs that entered it
+    /// (materialized via `fetch` *outside* the shard write lock), and
+    /// recompute the drift score. At most one maintainer runs at a time;
+    /// concurrent calls return the last drift score immediately.
+    ///
+    /// `fetch(layer, group, member, chunk, dst)` must fill `dst` with the
+    /// member's rows for `chunk` in physical row order, bit-identical to
+    /// what a flash read of those rows would decode to.
+    ///
+    /// Each shard's byte share of the global budget is proportional to
+    /// its total weight footprint, so Σ resident bytes ≤ budget always
+    /// holds by construction.
+    pub fn maintain<F>(&self, mut fetch: F) -> f64
+    where
+        F: FnMut(usize, usize, usize, Chunk, &mut [f32]),
+    {
+        if self.maintaining.swap(true, Ordering::Acquire) {
+            return self.drift();
+        }
+        let mut weighted = 0.0f64;
+        let mut weight_sum = 0.0f64;
+        for (idx, sh) in self.shards.iter().enumerate() {
+            let layer = idx / self.groups_per_layer;
+            let group = idx % self.groups_per_layer;
+            let rows = sh.spec.rows;
+            // Snapshot, then decay by half (new traffic keeps counting).
+            let mut snap: Vec<u32> = Vec::with_capacity(rows);
+            for a in &sh.freq {
+                let v = a.load(Ordering::Relaxed);
+                if v > 1 {
+                    a.fetch_sub(v / 2, Ordering::Relaxed);
+                }
+                snap.push(v);
+            }
+            let traffic: u64 = snap.iter().map(|&v| v as u64).sum();
+
+            // Drift: live profile vs calibrated baseline (uniform when
+            // never calibrated — any skew then counts as drift).
+            if traffic > 0 {
+                let live: Vec<f64> = snap.iter().map(|&v| v as f64).collect();
+                let st = sh.state.read().unwrap();
+                let d = if st.baseline.iter().sum::<f64>() > 0.0 {
+                    drift_score(&st.baseline, &live)
+                } else {
+                    drift_score(&vec![1.0; rows], &live)
+                };
+                drop(st);
+                weighted += d * traffic as f64;
+                weight_sum += traffic as f64;
+            }
+
+            // Desired resident set: hottest rows first until this
+            // shard's budget share is spent; whole runs only.
+            let share = if self.total_weight == 0 {
+                0
+            } else {
+                (self.budget_bytes as u128 * (rows as u64 * sh.row_ram_bytes) as u128
+                    / self.total_weight as u128) as u64
+            };
+            let max_rows = (share / sh.row_ram_bytes.max(1)) as usize;
+            let mut order: Vec<usize> = (0..rows).filter(|&r| snap[r] > 0).collect();
+            order.sort_unstable_by(|&a, &b| snap[b].cmp(&snap[a]).then(a.cmp(&b)));
+            order.truncate(max_rows);
+            let mut mask = vec![false; rows];
+            for &r in &order {
+                mask[r] = true;
+            }
+            let desired = chunks_from_mask(&mask);
+
+            // Diff against the current residents under a read lock.
+            let (to_evict, to_admit): (Vec<Chunk>, Vec<Chunk>) = {
+                let st = sh.state.read().unwrap();
+                let cur: Vec<Chunk> = st.entries.iter().map(|e| e.chunk).collect();
+                (
+                    cur.iter().filter(|c| !desired.contains(c)).copied().collect(),
+                    desired.iter().filter(|c| !cur.contains(c)).copied().collect(),
+                )
+            };
+            if to_evict.is_empty() && to_admit.is_empty() {
+                continue;
+            }
+
+            // Materialize admissions outside the lock.
+            let mats: Vec<Entry> = to_admit
+                .iter()
+                .map(|&chunk| {
+                    let mut data: [Vec<f32>; MAX_MEMBERS] = Default::default();
+                    for (m, &w) in sh.spec.row_f32s.iter().enumerate() {
+                        if w > 0 {
+                            data[m].resize(chunk.len * w, 0.0);
+                            fetch(layer, group, m, chunk, &mut data[m]);
+                        }
+                    }
+                    Entry { chunk, data }
+                })
+                .collect();
+
+            // Apply under the write lock; readers see a consistent state.
+            let mut guard = sh.state.write().unwrap();
+            let st = &mut *guard;
+            let old_bytes = st.bytes;
+            st.entries.retain(|e| !to_evict.contains(&e.chunk));
+            st.entries.extend(mats);
+            st.slot_of_row.fill(NONE);
+            let mut bytes = 0u64;
+            for (i, e) in st.entries.iter().enumerate() {
+                for s in &mut st.slot_of_row[e.chunk.start..e.chunk.end()] {
+                    *s = i as u32;
+                }
+                bytes += e.chunk.len as u64 * sh.row_ram_bytes;
+            }
+            st.bytes = bytes;
+            drop(guard);
+            debug_assert!(bytes <= share, "shard over budget: {bytes} > {share}");
+            self.evictions
+                .fetch_add(to_evict.len() as u64, Ordering::Relaxed);
+            self.admissions
+                .fetch_add(to_admit.len() as u64, Ordering::Relaxed);
+            if bytes >= old_bytes {
+                self.resident_bytes
+                    .fetch_add(bytes - old_bytes, Ordering::Relaxed);
+            } else {
+                self.resident_bytes
+                    .fetch_sub(old_bytes - bytes, Ordering::Relaxed);
+            }
+        }
+        let drift = if weight_sum > 0.0 {
+            weighted / weight_sum
+        } else {
+            self.drift()
+        };
+        self.drift_bits.store(drift.to_bits(), Ordering::Relaxed);
+        self.maintaining.store(false, Ordering::Release);
+        drift
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic synthetic weights: value depends on every index so
+    /// staging bit-identity is meaningful.
+    fn fill(layer: usize, group: usize, m: usize, chunk: Chunk, dst: &mut [f32], w: usize) {
+        for (i, v) in dst.iter_mut().enumerate() {
+            let row = chunk.start + i / w;
+            let col = i % w;
+            *v = (layer * 1_000_000 + group * 10_000 + m * 1_000 + row * 10 + col) as f32;
+        }
+    }
+
+    fn cache(budget: u64, pricing: bool) -> ChunkCache {
+        // 2 layers × 2 groups, 16 rows, two members of width 4 and 2.
+        let spec = ShardSpec {
+            rows: 16,
+            row_f32s: [4, 2, 0],
+            flash_row_bytes_sum: (4 + 2) * 4,
+        };
+        ChunkCache::new(budget, pricing, 2, vec![spec; 4])
+    }
+
+    fn maintain(c: &ChunkCache) -> f64 {
+        c.maintain(|l, g, m, ch, dst| {
+            let w = if m == 0 { 4 } else { 2 };
+            fill(l, g, m, ch, dst, w)
+        })
+    }
+
+    #[test]
+    fn admits_hot_rows_and_serves_bit_identical() {
+        let c = cache(1 << 20, false);
+        // Rows 4..8 are hot in (layer 1, group 0).
+        for _ in 0..10 {
+            c.record_selection(1, 0, &[Chunk::new(4, 4)]);
+        }
+        maintain(&c);
+        assert_eq!(c.resident_rows(1, 0), 4);
+        assert!(c.resident_bytes() > 0);
+
+        // Selected rows 2..10: residents 4..8 must be subtracted and
+        // staged; the pool sees only the miss runs.
+        let mut phys: Vec<usize> = (2..10).collect();
+        let mut selset = vec![false; 16];
+        for &r in &phys {
+            selset[r] = true;
+        }
+        let mut flash = vec![Chunk::new(2, 8)];
+        let mut tmp = Vec::new();
+        let mut rows = Vec::new();
+        let mut data: [Vec<f32>; MAX_MEMBERS] = Default::default();
+        let saved = c.prepare(
+            1,
+            0,
+            &mut phys,
+            &mut selset,
+            &mut flash,
+            &mut tmp,
+            &mut rows,
+            &mut data,
+        );
+        assert_eq!(saved, 4 * 6 * 4);
+        assert_eq!(flash, vec![Chunk::new(2, 2), Chunk::new(8, 2)]);
+        assert_eq!(rows, vec![4, 5, 6, 7]);
+        assert_eq!(phys, (2..10).collect::<Vec<_>>(), "default mode never touches the compute set");
+        let mut want = vec![0.0f32; 4 * 4];
+        fill(1, 0, 0, Chunk::new(4, 4), &mut want, 4);
+        assert_eq!(data[0], want);
+        let mut want1 = vec![0.0f32; 4 * 2];
+        fill(1, 0, 1, Chunk::new(4, 4), &mut want1, 2);
+        assert_eq!(data[1], want1);
+    }
+
+    #[test]
+    fn budget_is_never_exceeded_and_evictions_are_whole_chunks() {
+        // Budget for ~8 rows total across 4 identical shards → 2 rows per
+        // shard share (16 rows × 24 B/row per shard).
+        let c = cache(8 * 24, false);
+        for _ in 0..5 {
+            c.record_selection(0, 0, &[Chunk::new(0, 8)]);
+            c.record_selection(1, 1, &[Chunk::new(8, 8)]);
+        }
+        maintain(&c);
+        assert!(c.resident_bytes() <= 8 * 24);
+        assert!(c.resident_rows(0, 0) <= 2);
+
+        // Shift the hot set entirely; decayed old rows lose their slots.
+        for _ in 0..64 {
+            c.record_selection(0, 0, &[Chunk::new(12, 4)]);
+        }
+        let before = c.evictions();
+        maintain(&c);
+        assert!(c.resident_bytes() <= 8 * 24);
+        assert!(c.evictions() > before);
+        // The survivor must be a whole run out of the new hot set.
+        let mut snap = Vec::new();
+        c.frequency_snapshot(0, 0, &mut snap);
+        assert_eq!(c.resident_rows(0, 0), 2);
+    }
+
+    #[test]
+    fn pricing_mode_zeroes_importance_and_unions_compute() {
+        let c = cache(1 << 20, true);
+        for _ in 0..10 {
+            c.record_selection(0, 1, &[Chunk::new(10, 2)]);
+        }
+        maintain(&c);
+        let mut imp: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let freed = c.zero_resident(0, 1, &mut imp);
+        assert_eq!(freed, 10.0 + 11.0);
+        assert_eq!(imp[10], 0.0);
+        assert_eq!(imp[11], 0.0);
+
+        // Selection picked rows 0..2 only; residents join for free.
+        let mut phys = vec![0usize, 1];
+        let mut selset = vec![false; 16];
+        selset[0] = true;
+        selset[1] = true;
+        let mut flash = vec![Chunk::new(0, 2)];
+        let (mut tmp, mut rows) = (Vec::new(), Vec::new());
+        let mut data: [Vec<f32>; MAX_MEMBERS] = Default::default();
+        c.prepare(0, 1, &mut phys, &mut selset, &mut flash, &mut tmp, &mut rows, &mut data);
+        assert_eq!(phys, vec![0, 1, 10, 11]);
+        assert!(selset[10] && selset[11]);
+        assert_eq!(flash, vec![Chunk::new(0, 2)], "misses untouched");
+        assert_eq!(rows, vec![10, 11]);
+    }
+
+    #[test]
+    fn seed_prior_admits_before_traffic_and_drift_detects_shift() {
+        let c = cache(1 << 20, false);
+        let mut prior = vec![0.0f64; 16];
+        for r in 0..4 {
+            prior[r] = 1.0;
+        }
+        c.seed_prior(0, 0, &prior);
+        maintain(&c);
+        assert_eq!(c.resident_rows(0, 0), 4, "prior-hot rows admitted cold");
+        assert!(maintain(&c) < 0.2, "traffic matching the prior ≈ no drift");
+
+        // Live traffic moves to a disjoint hot set → drift rises.
+        for _ in 0..512 {
+            c.record_selection(0, 0, &[Chunk::new(12, 4)]);
+        }
+        let d = maintain(&c);
+        assert!(d > 0.5, "disjoint hot set must score high drift, got {d}");
+
+        c.clear_all();
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.resident_rows(0, 0), 0);
+    }
+
+    #[test]
+    fn concurrent_maintain_is_single_flight() {
+        let c = cache(1 << 20, false);
+        c.maintaining.store(true, Ordering::Relaxed);
+        // A second maintainer must bail out without touching state.
+        let d = maintain(&c);
+        assert_eq!(d, 0.0);
+        assert_eq!(c.admissions(), 0);
+    }
+}

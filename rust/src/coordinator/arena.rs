@@ -52,6 +52,13 @@ pub(crate) struct GatherScratch {
     pub residual: Vec<Chunk>,
     /// The stage's fresh planned read (plan + receipt, pooled).
     pub fresh: PlannedRead,
+    /// Rows the shared chunk cache serves this stage (ascending; the
+    /// gather cursor walks it in lockstep with `phys_rows`).
+    pub cache_rows: Vec<usize>,
+    /// The cached weights for `cache_rows`, per member, row-major.
+    pub cache_data: [Vec<f32>; 3],
+    /// Run-splitting scratch for the cache's chunk subtraction.
+    pub cache_tmp: Vec<Chunk>,
 }
 
 /// The complete per-session scratch arena.
@@ -102,6 +109,11 @@ impl ScratchArena {
         self.gather.xs.reserve(xs_cap);
         for w in &mut self.gather.weights {
             w.reserve(w_cap);
+        }
+        self.gather.cache_rows.reserve(n_max);
+        self.gather.cache_tmp.reserve(max_chunks);
+        for v in &mut self.gather.cache_data {
+            v.reserve(w_cap);
         }
         // One selection group: at most 3 members × one span per chunk; a
         // whole prefetched layer: all 7 matrices.

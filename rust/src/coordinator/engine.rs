@@ -70,19 +70,21 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{Context, Result};
 
+use crate::cache::ChunkCache;
 use crate::coordinator::arena::ScratchArena;
 use crate::coordinator::pipeline::batch::{BatchArena, DecodeRequest};
-use crate::coordinator::pipeline::stages::{col_importance, full_mask, rmsnorm};
-use crate::coordinator::pipeline::{SessionState, StageStats};
+use crate::coordinator::pipeline::stages::{col_importance, full_mask, group_members, rmsnorm};
+use crate::coordinator::pipeline::{group_index, SessionState, StageStats};
 use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy};
 use crate::latency::LatencyTable;
 use crate::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
 use crate::plan::{CoalescePolicy, IoPlanner};
-use crate::reorder::HotColdReorder;
+use crate::reorder::{activation_frequency, HotColdReorder};
 use crate::runtime::{Manifest, ModelMeta, Tensor, XlaRuntime};
 use crate::sparsify::{SelectionMask, Selector};
 use crate::storage::{
@@ -111,6 +113,9 @@ pub struct EngineBuilder {
     async_io: bool,
     io_queue_depth: usize,
     backing_dir: Option<PathBuf>,
+    cache_mb: usize,
+    cache_pricing: bool,
+    drift_threshold: Option<f64>,
 }
 
 impl EngineBuilder {
@@ -138,6 +143,24 @@ impl EngineBuilder {
             .and_then(|v| v.parse::<usize>().ok())
             .filter(|&r| r >= 1)
             .unwrap_or(1);
+        // `NC_CACHE_MB=n` gives every engine a shared hot-chunk RAM cache
+        // of `n` MiB without touching call sites (CI runs the whole suite
+        // with it set; 0 or unset = disabled).
+        let cache_mb = std::env::var("NC_CACHE_MB")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        // `NC_CACHE_PRICING=1` opts into the paper's §5 semantics where
+        // resident rows are repriced (importance zeroed pre-selection) and
+        // unioned into the compute set — changes selection, off by default.
+        let cache_pricing = std::env::var("NC_CACHE_PRICING")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        // `NC_DRIFT_THRESHOLD=t` arms drift-triggered online re-reordering.
+        let drift_threshold = std::env::var("NC_DRIFT_THRESHOLD")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|t| t.is_finite() && *t > 0.0);
         Self {
             model: model.to_string(),
             profile: DeviceProfile::nano(),
@@ -156,7 +179,36 @@ impl EngineBuilder {
             async_io,
             io_queue_depth: 2,
             backing_dir: None,
+            cache_mb,
+            cache_pricing,
+            drift_threshold,
         }
+    }
+
+    /// Byte budget (MiB) for the shared cross-session hot-chunk RAM cache
+    /// (default 0 = disabled, or `NC_CACHE_MB`). The default cache mode
+    /// serves already-selected rows from RAM and never changes selection,
+    /// so outputs and selected-chunk sets are bit-identical at any budget.
+    pub fn cache_mb(mut self, mb: usize) -> Self {
+        self.cache_mb = mb;
+        self
+    }
+
+    /// Opt into cache-aware pricing (the paper's §5 treatment): resident
+    /// rows carry near-zero estimated latency, implemented as zeroing
+    /// their importance before selection and unioning them into the
+    /// compute set. Changes selection; default off (`NC_CACHE_PRICING`).
+    pub fn cache_pricing(mut self, on: bool) -> Self {
+        self.cache_pricing = on;
+        self
+    }
+
+    /// Drift score in [0, 1] past which a cache-maintenance pass triggers
+    /// online re-reordering from live traffic (default `None` = never;
+    /// `NC_DRIFT_THRESHOLD` overrides).
+    pub fn drift_threshold(mut self, threshold: Option<f64>) -> Self {
+        self.drift_threshold = threshold.filter(|t| t.is_finite() && *t > 0.0);
+        self
     }
 
     pub fn policy(mut self, policy: Policy) -> Self {
@@ -411,6 +463,18 @@ impl EngineBuilder {
         }
 
         let selector = self.policy.selector();
+        // Shared cross-session hot-chunk RAM cache: one shard per
+        // (layer, scored group), budget split proportionally to each
+        // shard's flash footprint, populated by maintenance passes from
+        // live selection frequency (seeded by calibration priors).
+        let chunk_cache = (self.cache_mb > 0).then(|| {
+            Arc::new(ChunkCache::new(
+                (self.cache_mb as u64) << 20,
+                self.cache_pricing,
+                MatrixKind::SCORED.len(),
+                cache_shard_specs(&spec, &store),
+            ))
+        });
         let core = EngineCore {
             model: self.model,
             policy: self.policy,
@@ -439,6 +503,9 @@ impl EngineBuilder {
             planner: IoPlanner::new(self.coalesce),
             selector,
             neuron_cache: None,
+            chunk_cache,
+            drift_threshold: self.drift_threshold,
+            cache_ticks: AtomicU64::new(0),
             metrics: Mutex::new(Metrics::new()),
             batch_arenas: Mutex::new(Vec::new()),
             epoch: 0,
@@ -566,6 +633,13 @@ impl Engine {
         m.add_bytes("io.hedges", h.hedges);
         m.add_bytes("io.hedge_wins", h.hedge_wins);
         m.add_bytes("pool.dead", h.dead_members.len() as u64);
+        if let Some(c) = &core.chunk_cache {
+            m.add_bytes("cache.budget_bytes", c.budget_bytes());
+            m.add_bytes("cache.resident_bytes", c.resident_bytes());
+            m.add_bytes("cache.admissions", c.admissions());
+            m.add_bytes("cache.evictions", c.evictions());
+            m.add_bytes("cache.drift_ppm", (c.drift() * 1e6) as u64);
+        }
         m
     }
 
@@ -633,6 +707,75 @@ impl Engine {
     /// Install a hot-neuron cache built from calibration frequencies.
     pub fn set_neuron_cache(&self, cache: HotNeuronCache) {
         self.core.write().unwrap().neuron_cache = Some(cache);
+    }
+
+    /// Shared hot-chunk RAM cache budget in MiB (0 = disabled).
+    pub fn cache_mb(&self) -> usize {
+        let core = self.core.read().unwrap();
+        core.chunk_cache
+            .as_ref()
+            .map_or(0, |c| (c.budget_bytes() >> 20) as usize)
+    }
+
+    /// One maintenance pass over the shared chunk cache: decays the live
+    /// selection-frequency counters, re-picks each shard's resident set
+    /// under its byte share, materializes admissions from the weight
+    /// store (off the decode hot path, under the core *read* lock so
+    /// serving keeps running), and returns the traffic-weighted drift
+    /// score of live frequency vs the calibrated baseline. If a
+    /// [`EngineBuilder::drift_threshold`] is armed and drift reaches it,
+    /// the engine re-reorders online from live traffic (write lock,
+    /// epoch bump — sessions reset exactly as after
+    /// [`Engine::calibrate_and_reorder`]). No-op returning 0.0 without a
+    /// cache.
+    pub fn maintain_cache(&self) -> Result<f64> {
+        let (drift, threshold) = {
+            let core = self.core.read().unwrap();
+            let Some(cache) = &core.chunk_cache else {
+                return Ok(0.0);
+            };
+            // Memoize decoded logical matrices across the pass: admission
+            // fetches cluster on few (layer, member) pairs per pass.
+            let mut mats: HashMap<MatrixId, Vec<f32>> = HashMap::new();
+            let drift = cache.maintain(|layer, group, member_i, chunk, dst| {
+                let kind = MatrixKind::SCORED[group];
+                let member = group_members(kind)[member_i];
+                let id = MatrixId::new(layer, member);
+                let cols = core.spec.shape_of(member).cols;
+                let w = mats
+                    .entry(id)
+                    .or_insert_with(|| core.store.logical_matrix(id));
+                let perm = core.store.permutation(id);
+                for i in 0..chunk.len {
+                    let p = chunk.start + i;
+                    let l = perm.map_or(p, |pm| pm.old_of(p));
+                    dst[i * cols..(i + 1) * cols].copy_from_slice(&w[l * cols..(l + 1) * cols]);
+                }
+            });
+            (drift, core.drift_threshold)
+        };
+        if let Some(t) = threshold {
+            if drift >= t {
+                self.core.write().unwrap().rereorder_from_live()?;
+            }
+        }
+        Ok(drift)
+    }
+
+    /// Cheap periodic hook for scheduler workers: counts calls and runs
+    /// one [`Engine::maintain_cache`] pass every 32nd call. No-op (one
+    /// relaxed atomic read) when the cache is disabled.
+    pub fn cache_tick(&self) {
+        {
+            let core = self.core.read().unwrap();
+            if core.chunk_cache.is_none() {
+                return;
+            }
+            if core.cache_ticks.fetch_add(1, Ordering::Relaxed) % 32 != 31 {
+                return;
+            }
+        }
+        let _ = self.maintain_cache();
     }
 }
 
@@ -775,6 +918,14 @@ pub(crate) struct EngineCore {
     pub(crate) selector: Option<Box<dyn Selector>>,
     /// Optional hot-neuron cache (§5 memory-budget extension).
     pub(crate) neuron_cache: Option<HotNeuronCache>,
+    /// Shared cross-session hot-chunk RAM cache (None = disabled). Arc so
+    /// maintenance can run against it while `self.store` is mutated.
+    pub(crate) chunk_cache: Option<Arc<ChunkCache>>,
+    /// Drift score past which a maintenance pass triggers online
+    /// re-reordering from live traffic (None = never).
+    pub(crate) drift_threshold: Option<f64>,
+    /// Scheduler-driven maintenance pacing counter ([`Engine::cache_tick`]).
+    pub(crate) cache_ticks: AtomicU64,
     pub(crate) metrics: Mutex<Metrics>,
     /// Pooled batch-driver working memory (fusion scratch, fused
     /// plan/receipt, cohort kernel buffers), recycled so steady-state
@@ -810,6 +961,42 @@ impl EngineCore {
                 }
             }
         }
+        // Seed the shared chunk cache from the calibrated activation
+        // profile, mapped into the new physical row order: per-shard
+        // baselines for drift detection plus virtual observations so the
+        // first maintenance pass admits calibration-hot rows before any
+        // live traffic accumulates.
+        if let Some(cache) = self.chunk_cache.clone() {
+            cache.clear_all();
+            let mut phys = Vec::new();
+            for layer in 0..self.spec.layers {
+                for (gi, kind) in MatrixKind::SCORED.into_iter().enumerate() {
+                    let rows = self.spec.shape_of(kind).rows;
+                    let Some(s) = samples.get(&(layer, kind)) else {
+                        continue;
+                    };
+                    let logical = activation_frequency(s, rows);
+                    phys.clear();
+                    phys.resize(rows, 0.0);
+                    match self.store.permutation(MatrixId::new(layer, kind)) {
+                        Some(p) => {
+                            for (r, v) in phys.iter_mut().enumerate() {
+                                *v = logical[p.old_of(r)];
+                            }
+                        }
+                        None => phys.copy_from_slice(&logical),
+                    }
+                    cache.seed_prior(layer, gi, &phys);
+                }
+            }
+        }
+        self.rebuild_pool_and_bump_epoch()
+    }
+
+    /// Shared tail of offline re-calibration and online re-reordering:
+    /// re-bake the flash image into a fresh striped pool, restart async
+    /// I/O workers against it, and bump the epoch so sessions self-reset.
+    fn rebuild_pool_and_bump_epoch(&mut self) -> Result<()> {
         let stripe = StripeLayout::build_replicated(
             &self.store.layout,
             self.member_profiles.len(),
@@ -838,6 +1025,62 @@ impl EngineCore {
             )
         });
         self.epoch += 1;
+        Ok(())
+    }
+
+    /// Online re-reordering from live traffic — the drift → re-reorder
+    /// loop. Rebuilds each scored group's hot/cold permutation from the
+    /// cache's live selection frequencies (mapped back to logical row
+    /// space through the current permutation), re-bakes the flash image +
+    /// stripe layout + pool off the serving path (callers hold the core
+    /// write lock), bumps the epoch (sessions reset exactly as after
+    /// offline re-calibration), and re-seeds the cache in the new
+    /// physical order so residency survives the layout change as priors.
+    pub(crate) fn rereorder_from_live(&mut self) -> Result<()> {
+        let Some(cache) = self.chunk_cache.clone() else {
+            return Ok(());
+        };
+        let mut live = Vec::new();
+        let mut logical = Vec::new();
+        let mut seeds: Vec<(usize, usize, Vec<f64>)> = Vec::new();
+        for layer in 0..self.spec.layers {
+            for (gi, kind) in MatrixKind::SCORED.into_iter().enumerate() {
+                let rows = self.spec.shape_of(kind).rows;
+                cache.frequency_snapshot(layer, gi, &mut live);
+                if live.iter().sum::<f64>() <= 0.0 {
+                    continue;
+                }
+                logical.clear();
+                logical.resize(rows, 0.0);
+                match self.store.permutation(MatrixId::new(layer, kind)) {
+                    Some(p) => {
+                        for (r, &f) in live.iter().enumerate() {
+                            logical[p.old_of(r)] = f;
+                        }
+                    }
+                    None => logical.copy_from_slice(&live),
+                }
+                let perm = HotColdReorder::from_frequency(&logical);
+                let mut phys = vec![0.0f64; rows];
+                for (r, v) in phys.iter_mut().enumerate() {
+                    *v = logical[perm.old_of(r)];
+                }
+                for member in MatrixKind::ALL {
+                    if member.mask_source() == kind {
+                        self.store
+                            .set_permutation(MatrixId::new(layer, member), perm.clone());
+                    }
+                }
+                seeds.push((layer, gi, phys));
+            }
+        }
+        self.rebuild_pool_and_bump_epoch()?;
+        // Residency was keyed to the old physical order — drop it and
+        // re-seed with the live profile in the new order.
+        cache.clear_all();
+        for (layer, gi, phys) in &seeds {
+            cache.seed_prior(*layer, *gi, phys);
+        }
         Ok(())
     }
 
@@ -976,6 +1219,22 @@ impl EngineCore {
                     .unwrap_or(0)
             })
         };
+        // Chunk-cache pricing mode unions resident rows into the compute
+        // set the same way; the default (bit-identical) mode never grows
+        // it. Bound by the shard's byte share, not current residency —
+        // maintenance passes can grow residency after a session opens.
+        let chunk_cached_max = |kind: MatrixKind| -> usize {
+            self.chunk_cache
+                .as_ref()
+                .filter(|c| c.pricing())
+                .map_or(0, |c| {
+                    let gi = group_index(kind);
+                    (0..spec.layers)
+                        .map(|layer| c.max_resident_rows(layer, gi))
+                        .max()
+                        .unwrap_or(0)
+                })
+        };
         let mut group_bytes_max = 0usize;
         let mut layer_bytes = 0usize;
         let mut xs_cap = 0usize;
@@ -985,7 +1244,7 @@ impl EngineCore {
             // Flash payload is budget-capped (cached rows are never
             // re-read); the gathered compute set adds cached rows.
             let kept_io = kept_rows(rows);
-            let kept_compute = (kept_io + cached_max(kind)).min(rows);
+            let kept_compute = (kept_io + cached_max(kind) + chunk_cached_max(kind)).min(rows);
             let buckets = if kind == MatrixKind::Down {
                 &self.meta.h_buckets
             } else {
@@ -1041,6 +1300,32 @@ impl EngineCore {
             .map(|s| s.as_str())
             .with_context(|| format!("no artifact name for {base} t={t} r={bucket}"))
     }
+}
+
+/// One [`crate::cache::ShardSpec`] per (layer, scored group), in
+/// layer-major [`group_index`] order — the shard layout [`ChunkCache`]
+/// expects. RAM cost per row is the gathered f32 footprint of every
+/// group member; the flash byte credit per row is the sum of the
+/// members' on-flash row sizes (what a hit saves the pool).
+fn cache_shard_specs(spec: &ModelSpec, store: &WeightStore) -> Vec<crate::cache::ShardSpec> {
+    let mut specs = Vec::new();
+    for layer in 0..spec.layers {
+        for kind in MatrixKind::SCORED {
+            let rows = spec.shape_of(kind).rows;
+            let mut row_f32s = [0usize; crate::cache::MAX_MEMBERS];
+            let mut flash_row_bytes_sum = 0u64;
+            for (m, member) in group_members(kind).iter().enumerate() {
+                row_f32s[m] = spec.shape_of(*member).cols;
+                flash_row_bytes_sum += store.layout.row_bytes(MatrixId::new(layer, *member)) as u64;
+            }
+            specs.push(crate::cache::ShardSpec {
+                rows,
+                row_f32s,
+                flash_row_bytes_sum,
+            });
+        }
+    }
+    specs
 }
 
 /// Build the engine's storage pool: simulated members by default, or —

@@ -140,12 +140,14 @@ impl HotNeuronCache {
     }
 
     /// Split a selected chunk into the sub-chunks that still need flash
-    /// reads (cached rows removed).
-    pub fn subtract_cached(&self, id: MatrixId, chunk: Chunk) -> Vec<Chunk> {
+    /// reads (cached rows removed), *appending* them to `out` — the
+    /// arena-backed form the serving hot path uses (no per-call
+    /// allocation once `out` has capacity).
+    pub fn subtract_cached_into(&self, id: MatrixId, chunk: Chunk, out: &mut Vec<Chunk>) {
         let Some(mask) = self.member.get(&id) else {
-            return vec![chunk];
+            out.push(chunk);
+            return;
         };
-        let mut out = Vec::new();
         let mut start = None;
         for r in chunk.start..chunk.end() {
             if mask[r] {
@@ -159,6 +161,17 @@ impl HotNeuronCache {
         if let Some(s) = start {
             out.push(Chunk::new(s, chunk.end() - s));
         }
+    }
+
+    /// Allocating form of [`HotNeuronCache::subtract_cached_into`].
+    #[deprecated(
+        note = "allocates per call; use subtract_cached_into (or the shared \
+                crate::cache::ChunkCache subsystem, which supersedes this \
+                offline-built cache)"
+    )]
+    pub fn subtract_cached(&self, id: MatrixId, chunk: Chunk) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        self.subtract_cached_into(id, chunk, &mut out);
         out
     }
 
@@ -246,7 +259,13 @@ mod tests {
         let f = freqs_for(&s);
         let cache = HotNeuronCache::build(&s, &f, 0.25, u64::MAX, false);
         let id = MatrixId::new(0, MatrixKind::Q);
-        let pieces = cache.subtract_cached(id, Chunk::new(0, s.spec.d));
+        let mut pieces = Vec::new();
+        cache.subtract_cached_into(id, Chunk::new(0, s.spec.d), &mut pieces);
+        // The deprecated allocating wrapper must agree with the _into form.
+        #[allow(deprecated)]
+        {
+            assert_eq!(cache.subtract_cached(id, Chunk::new(0, s.spec.d)), pieces);
+        }
         // No piece contains a cached row; union covers all uncached rows.
         let mut covered = vec![false; s.spec.d];
         for p in &pieces {

@@ -525,6 +525,7 @@ fn run_batch(
         let mut io = Duration::ZERO;
         let mut overlapped = Duration::ZERO;
         let mut bytes = 0u64;
+        let mut cache_hit_bytes = 0u64;
         for s in stats_out.iter() {
             host += s.host;
             select += s.select;
@@ -532,6 +533,7 @@ fn run_batch(
             io += s.io;
             overlapped += s.overlapped_io;
             bytes += s.bytes_loaded;
+            cache_hit_bytes += s.cache_hit_bytes;
         }
         let mut metrics = core.metrics.lock().unwrap();
         metrics.add("host", host);
@@ -543,6 +545,9 @@ fn run_batch(
             metrics.add("io.overlapped", overlapped);
         }
         metrics.add_bytes("io", bytes);
+        if cache_hit_bytes > 0 {
+            metrics.add_bytes("io.cache_hit_bytes", cache_hit_bytes);
+        }
         // Fusion accounting: bytes the batch read once instead of once
         // per subscriber (the dedup ratio is shared / (shared + io
         // bytes)), and the achieved batch occupancy (bytes = Σ members,

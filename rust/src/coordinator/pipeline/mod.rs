@@ -71,6 +71,11 @@ pub struct StageStats {
     /// Weight rows served from the prefetch buffer instead of a fresh
     /// flash read.
     pub prefetch_hits: u64,
+    /// Flash bytes the shared chunk cache served from RAM this call —
+    /// demand that never reached the device pool. Disjoint from
+    /// `bytes_loaded` (which counts only bytes actually read), so
+    /// metrics can tell "less I/O" apart from "less work".
+    pub cache_hit_bytes: u64,
     /// Flash service time hidden behind compute by the prefetch pipeline
     /// (the overlap credit already subtracted from `io`).
     pub overlapped_io: Duration,
@@ -115,6 +120,7 @@ impl StageStats {
         self.bytes_loaded += other.bytes_loaded;
         self.prefetched_bytes += other.prefetched_bytes;
         self.prefetch_hits += other.prefetch_hits;
+        self.cache_hit_bytes += other.cache_hit_bytes;
         self.overlapped_io += other.overlapped_io;
         self.max_inflight = self.max_inflight.max(other.max_inflight);
         self.importance_kept += other.importance_kept;
@@ -423,6 +429,9 @@ impl EngineCore {
                 metrics.add_bytes("io.queue_depth", stats.max_inflight);
             }
             metrics.add_bytes("io", stats.bytes_loaded);
+            if stats.cache_hit_bytes > 0 {
+                metrics.add_bytes("io.cache_hit_bytes", stats.cache_hit_bytes);
+            }
             // Per-member I/O accounting (multi-member pools only): bytes
             // and summed service per device, from which utilization skew
             // is derived. Keys are pre-rendered, so this allocates

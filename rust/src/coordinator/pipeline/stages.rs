@@ -89,6 +89,17 @@ impl EngineCore {
         if let Some(cache) = &self.neuron_cache {
             cache.zero_cached(id, imp_phys);
         }
+        // Chunk-cache pricing mode (§5 semantics on the live cache):
+        // resident rows cost nothing, so their importance is zeroed too —
+        // the selector-side equivalent of a near-zero latency estimate in
+        // the importance ÷ latency utility. The freed mass is credited
+        // back to `importance_kept` below (the rows still compute, served
+        // from RAM). Default mode returns 0.0 without touching anything.
+        let mut cache_freed = 0.0f64;
+        if let Some(cache) = &self.chunk_cache {
+            let gi = crate::coordinator::pipeline::group_index(kind);
+            cache_freed = cache.zero_resident(layer, gi, imp_phys);
+        }
         let budget = ((1.0 - self.sparsity) * rows as f64).round() as usize;
         match &self.selector {
             None => out.set_full(rows),
@@ -108,6 +119,7 @@ impl EngineCore {
             stats.importance_kept +=
                 cache.cached_importance(id, importance_logical, self.store.permutation(id));
         }
+        stats.importance_kept += cache_freed;
     }
 
     /// Stage 3 — plan: build the group's compute set (selected ∪ cached
@@ -154,13 +166,47 @@ impl EngineCore {
                     }
                 }
                 g.phys_rows.sort_unstable();
-                // Flash reads exclude cached rows.
+                // Flash reads exclude cached rows (arena-backed run
+                // splitting; no per-chunk allocation).
                 g.flash_chunks.clear();
                 for chunk in &sel.chunks {
-                    g.flash_chunks.extend(cache.subtract_cached(id0, *chunk));
+                    cache.subtract_cached_into(id0, *chunk, &mut g.flash_chunks);
                 }
             }
         }
+
+        // Shared chunk cache: record this step's demand (pre-subtraction,
+        // so admission frequency reflects selection, not misses), then
+        // subtract resident rows from the flash demand and stage their
+        // weights from RAM — the I/O planner below only ever sees misses.
+        // Default mode leaves `phys_rows` (the compute set) untouched;
+        // pricing mode unions residents in (§5). One shard read lock,
+        // arena buffers only.
+        let mut cache_hit = 0u64;
+        if let Some(cache) = &self.chunk_cache {
+            let gi = crate::coordinator::pipeline::group_index(kind);
+            cache.record_selection(layer, gi, &sel.chunks);
+            if cache.pricing() {
+                g.selset.clear();
+                g.selset.resize(in_rows, false);
+                for &r in g.phys_rows.iter() {
+                    g.selset[r] = true;
+                }
+            }
+            cache_hit = cache.prepare(
+                layer,
+                gi,
+                &mut g.phys_rows,
+                &mut g.selset,
+                &mut g.flash_chunks,
+                &mut g.cache_tmp,
+                &mut g.cache_rows,
+                &mut g.cache_data,
+            );
+        } else {
+            g.cache_rows.clear();
+        }
+        stats.cache_hit_bytes += cache_hit;
 
         let buckets = if kind == MatrixKind::Down {
             &self.meta.h_buckets
@@ -256,7 +302,15 @@ impl EngineCore {
                 None
             };
             let mut pre_cursor = prefetched.map(|p| RowCursor::new(p, id));
+            // Monotone cursor over the chunk-cache staged rows (ascending,
+            // like `phys_rows`). It advances even when a fresh/prefetched
+            // read serves the row — a staged row may also sit in the
+            // prefetch buffer, and either source is bit-identical.
+            let mut ci = 0usize;
             for (j, &p) in g.phys_rows.iter().enumerate() {
+                while ci < g.cache_rows.len() && g.cache_rows[ci] < p {
+                    ci += 1;
+                }
                 let dst = &mut w[j * cols..(j + 1) * cols];
                 if let Some(bytes) = fresh_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
                     decode_f32_into(bytes, dst);
@@ -265,6 +319,10 @@ impl EngineCore {
                 if let Some(bytes) = pre_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
                     decode_f32_into(bytes, dst);
                     stats.prefetch_hits += 1;
+                    continue;
+                }
+                if ci < g.cache_rows.len() && g.cache_rows[ci] == p {
+                    dst.copy_from_slice(&g.cache_data[mi][ci * cols..(ci + 1) * cols]);
                     continue;
                 }
                 if let Some(cache) = &self.neuron_cache {

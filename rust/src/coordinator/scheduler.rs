@@ -375,6 +375,11 @@ fn worker_loop(shared: Arc<Shared>, engine: Engine, batch: BatchCfg) {
         } else {
             run_decode_batch(&shared, &engine, &mut jobs);
         }
+        // Online cache adaptation rides the serving loop: every Nth
+        // completed job one worker runs a maintenance pass (admissions
+        // from live selection frequency, drift check, possible
+        // re-reorder). One relaxed atomic when the cache is off.
+        engine.cache_tick();
     }
 }
 

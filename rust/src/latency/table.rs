@@ -125,6 +125,32 @@ impl LatencyTable {
         chunks.iter().map(|c| self.latency_rows(c.len)).sum()
     }
 
+    /// Cache-aware `L_total`: chunks are priced after subtracting rows
+    /// resident in a RAM cache (`resident[r]` = physical row `r` is
+    /// cached), so cached spans carry (near-)zero estimated latency and
+    /// only the miss runs pay the table. This is the pricing view of the
+    /// shared [`crate::cache::ChunkCache`]: zeroing a resident row's
+    /// importance before selection (what `NC_CACHE_PRICING=1` does) is
+    /// equivalent to giving it zero latency in the §3.1 utility — both
+    /// make selection treat residency as free. Rows past `resident.len()`
+    /// are treated as misses.
+    pub fn estimate_chunks_with_resident(&self, chunks: &[Chunk], resident: &[bool]) -> f64 {
+        let mut total = 0.0;
+        for c in chunks {
+            let mut run = 0usize;
+            for r in c.start..c.end() {
+                if resident.get(r).copied().unwrap_or(false) {
+                    total += self.latency_rows(run);
+                    run = 0;
+                } else {
+                    run += 1;
+                }
+            }
+            total += self.latency_rows(run);
+        }
+        total
+    }
+
     pub fn estimate_mask(&self, mask: &[bool]) -> f64 {
         self.estimate_chunks(&crate::latency::chunks_from_mask(mask))
     }
@@ -250,6 +276,33 @@ mod tests {
         let want =
             2.0 * t.latency_rows(2) + t.latency_rows(1);
         assert!((t.estimate_chunks(&chunks) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resident_rows_price_as_free_and_split_runs() {
+        let t = table();
+        let chunks = vec![Chunk::new(0, 4), Chunk::new(8, 2)];
+        // No residency: identical to the plain estimate.
+        let none = vec![false; 16];
+        assert!(
+            (t.estimate_chunks_with_resident(&chunks, &none) - t.estimate_chunks(&chunks)).abs()
+                < 1e-15
+        );
+        // Everything resident: free.
+        let all = vec![true; 16];
+        assert_eq!(t.estimate_chunks_with_resident(&chunks, &all), 0.0);
+        // Resident row 1 splits the 4-run into 1 + 2; chunk at 8 unsplit.
+        let mut some = vec![false; 16];
+        some[1] = true;
+        let want = t.latency_rows(1) + t.latency_rows(2) + t.latency_rows(2);
+        assert!((t.estimate_chunks_with_resident(&chunks, &some) - want).abs() < 1e-15);
+        // Residency never makes a pattern more expensive (fewer/shorter
+        // miss runs under an overhead-bearing table).
+        assert!(t.estimate_chunks_with_resident(&chunks, &some) <= t.estimate_chunks(&chunks));
+        // Rows beyond the residency slice are misses, not panics.
+        let short = vec![true; 2];
+        let priced = t.estimate_chunks_with_resident(&chunks, &short);
+        assert!(priced > 0.0 && priced < t.estimate_chunks(&chunks));
     }
 
     #[test]

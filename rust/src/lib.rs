@@ -22,6 +22,7 @@
 //! index mapping every paper table/figure to a module + bench target.
 
 pub mod benchlib;
+pub mod cache;
 pub mod coordinator;
 pub mod experiments;
 pub mod latency;

@@ -55,6 +55,10 @@ fn main() {
                  \x20                              (default 2)\n\
                  \x20               [--file-backed DIR] serve from real per-member backing\n\
                  \x20                              files under DIR (wall-clock I/O)\n\
+                 \x20               [--cache-mb N] shared cross-session hot-chunk RAM cache\n\
+                 \x20                              budget in MiB (default 0 or $NC_CACHE_MB;\n\
+                 \x20                              0 = off; admission follows live selection\n\
+                 \x20                              frequency; outputs stay bit-identical)\n\
                  \x20               [--streams N]  concurrent decode streams served through\n\
                  \x20                              the scheduler (default 1 = single stream;\n\
                  \x20                              with --listen: stream capacity, default 64)\n\
@@ -159,6 +163,9 @@ fn cmd_serve_inner(args: &[String]) -> Result<i32, ArgError> {
     }
     if let Some(dir) = p.raw("--file-backed")? {
         builder = builder.file_backed(std::path::Path::new(dir));
+    }
+    if let Some(mb) = p.parsed::<usize>("--cache-mb")? {
+        builder = builder.cache_mb(mb);
     }
     let engine = match builder.build() {
         Ok(e) => e,

@@ -678,6 +678,13 @@ impl IoPlanner {
     /// Several requests may borrow the same chunk list (the engine's
     /// selection groups do — every member matrix shares the group's
     /// residual demand).
+    ///
+    /// Demands arrive **miss-only**: RAM-cache subtraction (both the
+    /// legacy [`crate::coordinator::HotNeuronCache`] and the shared
+    /// [`crate::cache::ChunkCache`]) happens upstream, on the chunk lists
+    /// themselves, before planning — so the plan, its sharded sub-plans,
+    /// and everything the storage pool sees contain only rows that must
+    /// actually come off flash.
     pub fn plan_refs_into(
         &self,
         layout: &FlashLayout,

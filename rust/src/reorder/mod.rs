@@ -50,6 +50,27 @@ pub fn activation_frequency(samples: &[Vec<f32>], n: usize) -> Vec<f64> {
     freq
 }
 
+/// Drift between a calibrated activation profile and a live one: total
+/// variation distance between the two distributions after normalizing
+/// each to sum 1 (`0.5 * Σ|a − b|`, so 0 = identical, 1 = disjoint).
+///
+/// Used by the runtime cache layer to decide when the offline hot/cold
+/// layout has gone stale enough to warrant an online re-reorder. Empty
+/// or all-zero inputs score 0 (no evidence of drift).
+pub fn drift_score(baseline: &[f64], live: &[f64]) -> f64 {
+    assert_eq!(baseline.len(), live.len(), "profile length mismatch");
+    let bs: f64 = baseline.iter().sum();
+    let ls: f64 = live.iter().sum();
+    if bs <= 0.0 || ls <= 0.0 {
+        return 0.0;
+    }
+    0.5 * baseline
+        .iter()
+        .zip(live)
+        .map(|(&b, &l)| (b / bs - l / ls).abs())
+        .sum::<f64>()
+}
+
 /// Fraction of hot (always-active, >99%) and cold (<1%) neurons — the
 /// Fig 11 annotations.
 pub fn hot_cold_fractions(freq: &[f64]) -> (f64, f64) {
@@ -85,6 +106,26 @@ mod tests {
     fn empty_samples() {
         let f = activation_frequency(&[], 5);
         assert_eq!(f, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn drift_score_bounds() {
+        // Identical profiles (up to scale) → 0.
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![10.0, 20.0, 30.0];
+        assert!(drift_score(&a, &b).abs() < 1e-12);
+        // Disjoint mass → 1.
+        let c = vec![1.0, 0.0];
+        let d = vec![0.0, 5.0];
+        assert!((drift_score(&c, &d) - 1.0).abs() < 1e-12);
+        // No evidence → 0.
+        assert_eq!(drift_score(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+        assert_eq!(drift_score(&[], &[]), 0.0);
+        // Partial shift lands strictly between.
+        let e = vec![0.5, 0.5];
+        let f = vec![0.75, 0.25];
+        let s = drift_score(&e, &f);
+        assert!(s > 0.0 && s < 1.0);
     }
 
     #[test]

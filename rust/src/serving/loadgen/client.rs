@@ -28,6 +28,15 @@ pub struct Reply {
     pub io_hedge_wins: u64,
     /// Number of pool members currently marked dead.
     pub pool_dead: u64,
+    /// Cumulative bytes the shared hot-chunk RAM cache served in place
+    /// of flash reads (monotonic, like the fault counters).
+    pub cache_hit_bytes: u64,
+    /// Bytes currently resident in the cache (gauge, last-seen wins).
+    pub cache_resident_bytes: u64,
+    /// Cumulative whole-chunk cache evictions.
+    pub cache_evictions: u64,
+    /// Hot-set drift score vs the calibrated layout, parts-per-million.
+    pub cache_drift_ppm: u64,
 }
 
 pub struct Client {
@@ -137,5 +146,9 @@ fn reply_from(v: &Json) -> Reply {
         io_hedges: eng_u64("io_hedges"),
         io_hedge_wins: eng_u64("io_hedge_wins"),
         pool_dead: eng_u64("pool_dead"),
+        cache_hit_bytes: eng_u64("cache_hit_bytes"),
+        cache_resident_bytes: eng_u64("cache_resident_bytes"),
+        cache_evictions: eng_u64("cache_evictions"),
+        cache_drift_ppm: eng_u64("cache_drift_ppm"),
     }
 }

@@ -89,6 +89,14 @@ pub struct HealthCounters {
     pub io_hedge_wins: u64,
     /// Pool members marked dead at the last observed response.
     pub pool_dead: u64,
+    /// Bytes served from the shared hot-chunk RAM cache (cumulative).
+    pub cache_hit_bytes: u64,
+    /// Cache-resident bytes at the last observed response.
+    pub cache_resident_bytes: u64,
+    /// Whole-chunk cache evictions (cumulative).
+    pub cache_evictions: u64,
+    /// Hot-set drift vs the calibrated layout, parts-per-million.
+    pub cache_drift_ppm: u64,
 }
 
 impl HealthCounters {
@@ -98,6 +106,10 @@ impl HealthCounters {
         self.io_hedges = self.io_hedges.max(r.io_hedges);
         self.io_hedge_wins = self.io_hedge_wins.max(r.io_hedge_wins);
         self.pool_dead = self.pool_dead.max(r.pool_dead);
+        self.cache_hit_bytes = self.cache_hit_bytes.max(r.cache_hit_bytes);
+        self.cache_resident_bytes = self.cache_resident_bytes.max(r.cache_resident_bytes);
+        self.cache_evictions = self.cache_evictions.max(r.cache_evictions);
+        self.cache_drift_ppm = self.cache_drift_ppm.max(r.cache_drift_ppm);
     }
 }
 
@@ -395,6 +407,8 @@ impl RunReport {
             ",\n  \"rps\": {rps},\n  \"duration_s\": {:.3},\n  \"connections\": {},\n  \
              \"steps\": {},\n  \"pool_dead\": {},\n  \"io_retries\": {},\n  \
              \"io_failovers\": {},\n  \"io_hedges\": {},\n  \"io_hedge_wins\": {},\n  \
+             \"cache_hit_bytes\": {},\n  \"cache_resident_bytes\": {},\n  \
+             \"cache_evictions\": {},\n  \"cache_drift_ppm\": {},\n  \
              \"entries\": [",
             self.wall.as_secs_f64(),
             self.cfg.connections,
@@ -404,6 +418,10 @@ impl RunReport {
             h.io_failovers,
             h.io_hedges,
             h.io_hedge_wins,
+            h.cache_hit_bytes,
+            h.cache_resident_bytes,
+            h.cache_evictions,
+            h.cache_drift_ppm,
         );
         let mut first = true;
         for (op, s) in [("decode", &self.decode), ("append", &self.append)] {
@@ -466,6 +484,13 @@ impl RunReport {
             "pool: dead={} retries={} failovers={} hedges={} hedge_wins={}",
             h.pool_dead, h.io_retries, h.io_failovers, h.io_hedges, h.io_hedge_wins,
         );
+        if h.cache_hit_bytes > 0 || h.cache_resident_bytes > 0 {
+            let _ = writeln!(
+                out,
+                "cache: hit_bytes={} resident_bytes={} evictions={} drift_ppm={}",
+                h.cache_hit_bytes, h.cache_resident_bytes, h.cache_evictions, h.cache_drift_ppm,
+            );
+        }
         out
     }
 }
@@ -517,6 +542,8 @@ mod tests {
                 io_hedges: 3,
                 io_hedge_wins: 2,
                 pool_dead: 1,
+                cache_hit_bytes: 4096,
+                cache_resident_bytes: 2048,
                 ..HealthCounters::default()
             },
             wall: Duration::from_secs(1),
@@ -528,10 +555,12 @@ mod tests {
         assert_eq!(entries[0].get("op").and_then(Json::as_str), Some("decode"));
         assert_eq!(v.get("io_hedges").and_then(Json::as_f64), Some(3.0));
         assert_eq!(v.get("pool_dead").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.get("cache_hit_bytes").and_then(Json::as_f64), Some(4096.0));
         let table = report.render_table();
         assert!(table.contains("decode"), "{table}");
         assert!(!table.contains("append"), "{table}");
         assert!(table.contains("pool: dead=1"), "{table}");
+        assert!(table.contains("cache: hit_bytes=4096"), "{table}");
     }
 
     #[test]

@@ -497,7 +497,8 @@ fn serve_response(
         ",\"engine\":{{\"io_s\":{:.9},\"io_bytes\":{},\"io_shared_bytes\":{},\
          \"io_overlapped_s\":{:.9},\"batch_batches\":{},\"batch_members\":{},\
          \"io_retries\":{},\"io_failovers\":{},\"io_hedges\":{},\"io_hedge_wins\":{},\
-         \"pool_dead\":{}}}",
+         \"pool_dead\":{},\"cache_hit_bytes\":{},\"cache_resident_bytes\":{},\
+         \"cache_evictions\":{},\"cache_drift_ppm\":{}}}",
         m.total("io").as_secs_f64(),
         m.bytes("io"),
         m.bytes("io.shared_bytes"),
@@ -509,6 +510,10 @@ fn serve_response(
         m.bytes("io.hedges"),
         m.bytes("io.hedge_wins"),
         m.bytes("pool.dead"),
+        m.bytes("io.cache_hit_bytes"),
+        m.bytes("cache.resident_bytes"),
+        m.bytes("cache.evictions"),
+        m.bytes("cache.drift_ppm"),
     );
     if let Some(out) = output {
         b.push_str(",\"output\":");
@@ -565,6 +570,20 @@ fn metrics_text(inner: &Arc<ServerInner>) -> String {
     );
     let _ = writeln!(out, "nc_server_streams_open {}", *inner.next_stream.lock().unwrap());
     let _ = writeln!(out, "nc_server_queued_requests {}", inner.scheduler.queued());
+    // Derived hot-chunk cache hit ratio: bytes served from RAM over all
+    // bytes the decode path demanded (hits + flash reads). The raw
+    // counters (`io.cache_hit_bytes`, `cache.*`) are in the generic
+    // byte-gauge loop above.
+    let hit = m.bytes("io.cache_hit_bytes");
+    if hit > 0 || m.bytes("cache.budget_bytes") > 0 {
+        let demanded = hit + m.bytes("io");
+        let ratio = if demanded > 0 {
+            hit as f64 / demanded as f64
+        } else {
+            0.0
+        };
+        let _ = writeln!(out, "nc_cache_hit_ratio {ratio:.6}");
+    }
     out
 }
 
@@ -596,6 +615,7 @@ fn config_json(inner: &Arc<ServerInner>) -> String {
         inner.scheduler.max_streams(),
         inner.cfg.max_connections,
     );
+    let _ = write!(b, ",\"cache_mb\":{}", engine.cache_mb());
     for (key, raw) in &inner.cfg.extra_config {
         b.push(',');
         json::push_str_escaped(&mut b, key);

@@ -104,6 +104,56 @@ fn decode_allocs(
     ALLOCS.load(Ordering::SeqCst)
 }
 
+/// Like [`decode_allocs`], but with the shared hot-chunk RAM cache
+/// enabled and **warm**: a few unarmed tokens accumulate selection
+/// frequency, a maintenance pass admits the hot rows (maintenance
+/// allocates freely — it is off the serving path), and one more unarmed
+/// token lets the now-hit-serving gather path reach its high-water mark.
+/// Steady-state cached decode — shard read lock, run splitting, staging
+/// into the arena, RAM-served gather — must then be allocation-free.
+fn cached_decode_allocs(
+    policy: Policy,
+    sparsity: f64,
+    prefetch: bool,
+    devices: usize,
+    steps: usize,
+) -> u64 {
+    let engine = Engine::builder("tiny")
+        .policy(policy)
+        .sparsity(sparsity)
+        .prefetch(prefetch)
+        .exec_threads(1)
+        .devices(devices)
+        .cache_mb(64)
+        .artifacts(&artifact_dir())
+        .build()
+        .unwrap();
+    engine.warmup().unwrap();
+    let spec = engine.spec();
+    let session = engine.new_session();
+    let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 2, 7);
+    let mut out = Vec::new();
+    session.append_frame_into(&trace.frame(0), &mut out).unwrap();
+    let token = vec![0.08f32; spec.d];
+    for _ in 0..3 {
+        session.decode_step_into(&token, &mut out).unwrap();
+    }
+    engine.maintain_cache().unwrap();
+    session.decode_step_into(&token, &mut out).unwrap();
+    // The warm cache must actually be serving rows, or this row would
+    // silently regress into the uncached case.
+    let warm_hits = engine.metrics().bytes("io.cache_hit_bytes");
+    assert!(warm_hits > 0, "cache never served a row before arming");
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..steps {
+        session.decode_step_into(&token, &mut out).unwrap();
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    ALLOCS.load(Ordering::SeqCst)
+}
+
 /// Build an engine with two sessions, warm both plus the batch arena,
 /// then count heap allocations across `steps` fused batched decodes.
 /// Steady-state batched decoding must be allocation-free too: the batch
@@ -252,6 +302,29 @@ fn steady_state_decode_is_allocation_free() {
         assert_eq!(
             allocs, 0,
             "[{label}] decode_batch allocated {allocs} times across 8 steady-state batches"
+        );
+    }
+    // Cached decode rows: with the shared hot-chunk RAM cache warm,
+    // steady-state decode (frequency recording, residency subtraction,
+    // staging, RAM-served gather) must stay allocation-free too.
+    let cached: Vec<(&str, Policy, f64, bool, usize)> = vec![
+        ("topk cached +pf", Policy::TopK, 0.5, true, 1),
+        ("topk cached -pf", Policy::TopK, 0.5, false, 1),
+        (
+            "chunking cached pool4",
+            Policy::Chunking {
+                config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+            },
+            0.5,
+            true,
+            4,
+        ),
+    ];
+    for (label, policy, sparsity, prefetch, devices) in cached {
+        let allocs = cached_decode_allocs(policy, sparsity, prefetch, devices, 8);
+        assert_eq!(
+            allocs, 0,
+            "[{label}] cached decode_step allocated {allocs} times across 8 steady-state steps"
         );
     }
 }
