@@ -17,9 +17,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use neuron_chunking::coordinator::{
-    Engine, Policy, Request, RequestKind, Scheduler, SchedulerConfig,
-};
+use neuron_chunking::coordinator::{Engine, Policy, Request, Scheduler, SchedulerConfig};
 use neuron_chunking::report::{fmt_secs, Table};
 use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::stats;
@@ -136,10 +134,9 @@ fn main() -> anyhow::Result<()> {
         for f in 0..frames {
             let rxs: Vec<_> = (0..STREAMS)
                 .map(|stream| {
-                    sched.submit(Request {
-                        stream,
-                        kind: RequestKind::AppendFrame(trace.frame(f)),
-                    })
+                    sched
+                        .submit(Request::prefill(stream, trace.frame(f)))
+                        .map_err(anyhow::Error::from)
                 })
                 .collect::<anyhow::Result<_>>()?;
             collect("append", rxs, &mut per_kind)?;
@@ -147,10 +144,9 @@ fn main() -> anyhow::Result<()> {
             if f % 2 == 1 {
                 let rxs: Vec<_> = (0..STREAMS)
                     .map(|stream| {
-                        sched.submit(Request {
-                            stream,
-                            kind: RequestKind::Decode(vec![0.05; spec.d]),
-                        })
+                        sched
+                            .submit(Request::decode(stream, vec![0.05; spec.d]))
+                            .map_err(anyhow::Error::from)
                     })
                     .collect::<anyhow::Result<_>>()?;
                 collect("decode", rxs, &mut per_kind)?;

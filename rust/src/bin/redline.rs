@@ -18,13 +18,18 @@
 use std::process::ExitCode;
 use std::time::Duration;
 
-use neuron_chunking::serving::args::{parse_mix, ArgError, ArgParser};
+use neuron_chunking::serving::args::{parse_mix, slo_from_args, ArgError, ArgParser};
 use neuron_chunking::serving::loadgen::{self, compare_files, RunConfig};
 
 const USAGE: &str = "usage:
   redline run     --addr HOST:PORT [--rps R] [--duration S] [--streams N]
-                  [--connections C] [--mix P:D] [--steps K] [--burst B] [--out FILE]
-  redline compare BASELINE.json CANDIDATE.json [--pct N]";
+                  [--connections C] [--mix P:D] [--steps K] [--burst B]
+                  [--slo-ms MS] [--out FILE]
+  redline compare BASELINE.json CANDIDATE.json [--pct N]
+
+  --mix P:D    prefill:decode requests per cycle (validated; 0:0 rejected)
+  --slo-ms MS  stamp decode deadlines of MS ms (typed API; 0 = none) and
+               record \"slo\" in the run identity";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -62,6 +67,7 @@ fn cmd_run(args: &[String]) -> Result<ExitCode, ArgError> {
         connections: p.parsed_or("--connections", 4usize)?,
         mix,
         steps: p.parsed_or("--steps", 4usize)?,
+        deadline_ms: slo_from_args(&p)?.map(|d| d.as_millis() as u64),
     };
     let out_path = p.string_or("--out", "BENCH_serving.json")?;
 

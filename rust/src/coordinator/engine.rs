@@ -78,6 +78,7 @@ use anyhow::{Context, Result};
 use crate::cache::ChunkCache;
 use crate::coordinator::arena::ScratchArena;
 use crate::coordinator::pipeline::batch::{BatchArena, DecodeRequest};
+use crate::coordinator::pipeline::prefill::PrefillPass;
 use crate::coordinator::pipeline::stages::{col_importance, full_mask, group_members, rmsnorm};
 use crate::coordinator::pipeline::{group_index, SessionState, StageStats};
 use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy};
@@ -541,7 +542,11 @@ impl Engine {
         drop(core);
         Session {
             core: self.core.clone(),
-            inner: Mutex::new(SessionInner { state, scratch }),
+            inner: Mutex::new(SessionInner {
+                state,
+                scratch,
+                pass: None,
+            }),
         }
     }
 
@@ -785,6 +790,11 @@ impl Engine {
 pub(crate) struct SessionInner {
     pub(crate) state: SessionState,
     pub(crate) scratch: ScratchArena,
+    /// In-progress chunked prefill, if any ([`Session::prefill_begin`]).
+    /// A `Some` found by any *other* call means the driver abandoned the
+    /// pass mid-way; the session state is half-appended and is reset
+    /// before that call proceeds.
+    pub(crate) pass: Option<PrefillPass>,
 }
 
 /// One serving stream: owns its KV caches, prefetch state, and scratch
@@ -819,6 +829,11 @@ impl Session {
             core.meta.d
         );
         let inner = &mut *inner;
+        if inner.pass.take().is_some() {
+            // An abandoned chunked prefill left half-appended KV caches;
+            // start this call from a clean slate.
+            inner.state.reset(core.epoch);
+        }
         core.forward(&mut inner.state, &mut inner.scratch, frame, t, out)
     }
 
@@ -837,6 +852,11 @@ impl Session {
         let mut inner = self.inner.lock().unwrap();
         anyhow::ensure!(token.len() == core.meta.d, "token must be [d]");
         let inner = &mut *inner;
+        if inner.pass.take().is_some() {
+            // An abandoned chunked prefill left half-appended KV caches;
+            // the reset below surfaces as the empty-KV error.
+            inner.state.reset(core.epoch);
+        }
         if inner.state.epoch == core.epoch {
             anyhow::ensure!(
                 !inner.state.kvs.iter().all(|kv| kv.is_empty()),
@@ -850,10 +870,91 @@ impl Session {
         core.forward(&mut inner.state, &mut inner.scratch, token, 1, out)
     }
 
+    /// Begin a chunked prefill of one frame (`[T, d]` row-major): the
+    /// resumable form of [`Session::append_frame`]. No layer runs yet;
+    /// drive the pass with [`Session::prefill_step`] and collect the
+    /// output with [`Session::prefill_finish`]. Between calls every
+    /// engine lock is released, so the caller can serve other sessions
+    /// mid-pass. The chunked pass is bit-identical to a monolithic
+    /// append; callers must not interleave other calls on *this* session
+    /// until the pass finishes (doing so resets the session).
+    pub fn prefill_begin(&self, frame: &[f32]) -> Result<()> {
+        let core = self.core.read().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        let t = core.meta.t;
+        anyhow::ensure!(
+            frame.len() == t * core.meta.d,
+            "frame must be [T={}, d={}]",
+            t,
+            core.meta.d
+        );
+        let inner = &mut *inner;
+        if inner.pass.take().is_some() {
+            inner.state.reset(core.epoch);
+        }
+        inner.pass = Some(core.prefill_begin(&mut inner.state, &mut inner.scratch, frame, t));
+        Ok(())
+    }
+
+    /// Run up to `max_layers` more layers of the active chunked prefill.
+    /// Returns `true` while layers remain. Errors (including an engine
+    /// re-calibration mid-pass) abort the pass and reset the session.
+    pub fn prefill_step(&self, max_layers: usize) -> Result<bool> {
+        let core = self.core.read().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let Some(pass) = inner.pass.as_mut() else {
+            anyhow::bail!("no chunked prefill in progress (call prefill_begin first)");
+        };
+        match core.prefill_step(&mut inner.state, &mut inner.scratch, pass, max_layers) {
+            Ok(more) => Ok(more),
+            Err(e) => {
+                inner.pass = None;
+                inner.state.reset(core.epoch);
+                Err(e)
+            }
+        }
+    }
+
+    /// Finish a completed chunked prefill: fold metrics and write the
+    /// output hidden states into `out`. Errors if layers remain.
+    pub fn prefill_finish(&self, out: &mut Vec<f32>) -> Result<StageStats> {
+        let core = self.core.read().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let Some(pass) = inner.pass.take() else {
+            anyhow::bail!("no chunked prefill in progress (call prefill_begin first)");
+        };
+        if pass.pass.epoch != core.epoch || !pass.done() {
+            let done = pass.layers_done();
+            inner.state.reset(core.epoch);
+            anyhow::bail!("chunked prefill finished early ({done} layers done); session reset");
+        }
+        Ok(core.prefill_finish(&mut inner.state, &mut inner.scratch, pass, out))
+    }
+
+    /// Abort an in-progress chunked prefill (if any), resetting the
+    /// session: half-appended KV caches are unusable.
+    pub fn prefill_abort(&self) {
+        let core = self.core.read().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        if inner.pass.take().is_some() {
+            inner.state.reset(core.epoch);
+        }
+    }
+
+    /// True while a chunked prefill pass is active.
+    pub fn prefill_active(&self) -> bool {
+        self.inner.lock().unwrap().pass.is_some()
+    }
+
     /// Clear KV caches and prefetch state.
     pub fn reset(&self) {
         let core = self.core.read().unwrap();
-        self.inner.lock().unwrap().state.reset(core.epoch);
+        let mut inner = self.inner.lock().unwrap();
+        inner.pass = None;
+        inner.state.reset(core.epoch);
     }
 
     /// Total KV tokens currently cached across layers.

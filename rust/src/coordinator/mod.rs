@@ -33,7 +33,10 @@ pub use neuron_cache::HotNeuronCache;
 pub use pipeline::batch::{DecodeRequest, MAX_DECODE_BATCH};
 pub use pipeline::stages::{col_importance, col_importance_into, rmsnorm, rmsnorm_into};
 pub use pipeline::StageStats;
-pub use scheduler::{Completion, Request, RequestKind, Scheduler, SchedulerConfig};
+pub use scheduler::{
+    AdmissionSnapshot, Class, ClassSnapshot, Completion, Request, RequestOpts, Scheduler,
+    SchedulerConfig, SubmitError,
+};
 
 use crate::sparsify::{Bundling, ChunkSelect, ChunkSelectConfig, Selector, Threshold, TopK};
 

@@ -275,7 +275,7 @@ fn run_batch(
         // Swap each member's prefetched whole-layer read into its arena.
         for m in members.iter_mut() {
             let inner = m.as_mut().expect("member slot filled");
-            let SessionInner { state, scratch } = &mut **inner;
+            let SessionInner { state, scratch, .. } = &mut **inner;
             std::mem::swap(&mut scratch.pre, &mut state.prefetch[layer]);
             state.prefetch[layer].clear();
         }
@@ -285,7 +285,7 @@ fn run_batch(
             // --- per-stream: normalize → score → select → plan ---
             for (i, m) in members.iter_mut().enumerate() {
                 let inner = m.as_mut().expect("member slot filled");
-                let SessionInner { state, scratch: sc } = &mut **inner;
+                let SessionInner { state, scratch: sc, .. } = &mut **inner;
                 let stats = &mut stats_out[i];
                 core.score_group(group, t, &mut sc.fwd, stats);
                 core.select_into(
@@ -401,7 +401,7 @@ fn run_batch(
                     continue;
                 }
                 let inner = members[i].as_mut().expect("member slot filled");
-                let SessionInner { state: _, scratch: sc } = &mut **inner;
+                let SessionInner { state: _, scratch: sc, .. } = &mut **inner;
                 let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
                 core.gather_group_weights(
                     layer,
@@ -421,7 +421,7 @@ fn run_batch(
                 let size = cohort_of[..n].iter().filter(|&&c| c == lead).count();
                 if size == 1 {
                     let inner = members[lead].as_mut().expect("member slot filled");
-                    let SessionInner { state, scratch: sc } = &mut **inner;
+                    let SessionInner { state, scratch: sc, .. } = &mut **inner;
                     core.exec_group_solo(
                         group,
                         t,
@@ -447,7 +447,7 @@ fn run_batch(
             let mut any = false;
             for m in members.iter_mut() {
                 let inner = m.as_mut().expect("member slot filled");
-                let SessionInner { state, scratch: sc } = &mut **inner;
+                let SessionInner { state, scratch: sc, .. } = &mut **inner;
                 any |= core.plan_layer_prefetch(state, &mut sc.plan_scratch, layer + 1);
             }
             if any {
@@ -510,7 +510,7 @@ fn run_batch(
     // Per-member call epilogue + outputs.
     for (i, m) in members.iter_mut().enumerate() {
         let inner = m.as_mut().expect("member slot filled");
-        let SessionInner { state, scratch: sc } = &mut **inner;
+        let SessionInner { state, scratch: sc, .. } = &mut **inner;
         std::mem::swap(&mut state.prev_masks, &mut state.next_masks);
         outs[i].clear();
         outs[i].extend_from_slice(&sc.fwd.xa);
@@ -765,7 +765,7 @@ fn exec_cohort(
             continue;
         }
         let inner = members[i].as_mut().expect("member slot filled");
-        let SessionInner { state, scratch: sc } = &mut **inner;
+        let SessionInner { state, scratch: sc, .. } = &mut **inner;
         match group {
             0 => {
                 sc.fwd.attn.clear();

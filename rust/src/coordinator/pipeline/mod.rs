@@ -38,6 +38,7 @@
 //! depth and pool size.
 
 pub(crate) mod batch;
+pub(crate) mod prefill;
 pub(crate) mod stages;
 
 use std::time::{Duration, Instant};
@@ -147,7 +148,7 @@ pub(crate) type GroupChunks = [Vec<Chunk>; 4];
 /// device frees up at the last submission's completion, and each
 /// charge is the time remaining from the analytic now — queued reads
 /// serialize without double-counting the backlog across stages.
-struct VirtualClock {
+pub(crate) struct VirtualClock {
     /// Analytic completion of the latest virtual submission.
     free_at: Instant,
     /// Virtual stall time already charged to `io` this call.
@@ -255,11 +256,53 @@ impl SessionState {
     }
 }
 
+/// Loop state of one in-progress forward call, split out so a driver can
+/// pause between layer boundaries (the chunked prefill path) and resume
+/// later. Every field is owned — no borrows of the core, session, or
+/// scratch survive a pause — which is what lets the scheduler's worker
+/// drop every lock at a yield point and serve decode batches in between.
+///
+/// Pausing changes **no** floating-point computation: the layer loop body
+/// is byte-for-byte the one [`EngineCore::forward`] runs, so a chunked
+/// pass is bit-identical to a monolithic one. Only the timing fields
+/// (virtual clock, stage stats) observe the pause.
+pub(crate) struct ForwardPass {
+    /// Tokens in this call (frame length for prefill, 1 for decode).
+    pub(crate) t: usize,
+    /// Next layer to run; the pass is done when `layer == layers`.
+    pub(crate) layer: usize,
+    layers: usize,
+    stats: StageStats,
+    prefetch_service: Duration,
+    /// Per-call analytic clock for the virtual-pool queueing model
+    /// (virtual-clock pools only; wall-clock pools measure real time).
+    vclock: VirtualClock,
+    in_flight: u64,
+    next_submit: usize,
+    async_on: bool,
+    depth: usize,
+    /// Engine epoch captured at [`EngineCore::begin_pass`]; a resuming
+    /// driver must abort the pass if the core re-calibrated in between.
+    pub(crate) epoch: u64,
+    /// Times the pass was resumed after a yield (0 for monolithic calls).
+    pub(crate) resumes: u64,
+}
+
+impl ForwardPass {
+    pub(crate) fn done(&self) -> bool {
+        self.layer >= self.layers
+    }
+}
+
 impl EngineCore {
     /// One serving call (frame append or decode step) of a single stream:
     /// the solo driver over the staged pipeline. `&self`: all mutable
     /// state lives in the session (`state` + `scratch`), so concurrent
     /// sessions proceed under the shared read lock.
+    ///
+    /// This is exactly `begin_pass` + every `run_layer` + `finish_pass`
+    /// back to back; the chunked prefill driver ([`prefill`]) runs the
+    /// same three primitives with pauses between layer boundaries.
     pub(crate) fn forward(
         &self,
         state: &mut SessionState,
@@ -268,13 +311,26 @@ impl EngineCore {
         t: usize,
         out: &mut Vec<f32>,
     ) -> Result<StageStats> {
+        let mut pass = self.begin_pass(state, scratch, input, t);
+        while !pass.done() {
+            self.run_layer(state, scratch, &mut pass)?;
+        }
+        Ok(self.finish_pass(state, scratch, pass, out))
+    }
+
+    /// Start a forward pass: reset stale session state, seed the
+    /// activation buffer, and capture the loop state the layer driver
+    /// threads through [`EngineCore::run_layer`].
+    pub(crate) fn begin_pass(
+        &self,
+        state: &mut SessionState,
+        scratch: &mut ScratchArena,
+        input: &[f32],
+        t: usize,
+    ) -> ForwardPass {
         if state.epoch != self.epoch {
             state.reset(self.epoch);
         }
-        let layers = self.spec.layers;
-        let mut stats = StageStats::default();
-        let mut prefetch_service = Duration::ZERO;
-
         let sc = &mut *scratch;
         sc.pool.accum.reset(self.pool.len());
         sc.fwd.xa.clear();
@@ -285,128 +341,165 @@ impl EngineCore {
         // the layers it overlaps with run, and awaited only at the moment
         // its layer consumes the weights.
         let async_on = self.async_io && self.prefetch;
-        let depth = self.io_queue_depth.max(1);
-        let mut in_flight = 0u64;
-        let mut next_submit = 1usize;
-        // Per-call analytic clock for the virtual-pool queueing model
-        // (virtual-clock pools only; wall-clock pools measure real time).
-        let mut vclock = VirtualClock::start();
         if async_on {
             state.drain_stale();
         }
+        ForwardPass {
+            t,
+            layer: 0,
+            layers: self.spec.layers,
+            stats: StageStats::default(),
+            prefetch_service: Duration::ZERO,
+            vclock: VirtualClock::start(),
+            in_flight: 0,
+            next_submit: 1,
+            async_on,
+            depth: self.io_queue_depth.max(1),
+            epoch: self.epoch,
+            resumes: 0,
+        }
+    }
 
-        for layer in 0..layers {
-            let layer_t0 = Instant::now();
-            if async_on {
-                // Await this layer's prefetch (if one is in flight) right
-                // before its weights are consumed; only service time the
-                // intervening compute could not hide is charged.
-                in_flight -= self.consume_pending(
-                    state,
-                    sc,
-                    layer,
-                    &mut stats,
-                    &mut prefetch_service,
-                    &mut vclock,
-                )?;
-                // Then top up the submission window before this layer's
-                // kernels execute. Consuming first keeps the bound exact:
-                // at most `depth` layers are ever in flight per session,
-                // so a submission never blocks on a full member queue
-                // ahead of this layer's compute (the queues carry slack
-                // for several concurrent sessions; past that, a full
-                // queue is deliberate backpressure).
-                while next_submit < layers && next_submit <= layer + depth {
-                    let l = next_submit;
-                    next_submit += 1;
-                    if self.submit_prefetch(state, sc, l, &mut stats, &mut vclock)? {
-                        in_flight += 1;
-                        stats.max_inflight = stats.max_inflight.max(in_flight);
-                    }
+    /// Run the next layer of an in-progress pass (all four selection
+    /// groups through the stage sequence), advancing `pass.layer`.
+    pub(crate) fn run_layer(
+        &self,
+        state: &mut SessionState,
+        scratch: &mut ScratchArena,
+        pass: &mut ForwardPass,
+    ) -> Result<()> {
+        let sc = &mut *scratch;
+        let layer = pass.layer;
+        let layers = pass.layers;
+        let t = pass.t;
+        let layer_t0 = Instant::now();
+        if pass.async_on {
+            // Await this layer's prefetch (if one is in flight) right
+            // before its weights are consumed; only service time the
+            // intervening compute could not hide is charged.
+            pass.in_flight -= self.consume_pending(
+                state,
+                sc,
+                layer,
+                &mut pass.stats,
+                &mut pass.prefetch_service,
+                &mut pass.vclock,
+            )?;
+            // Then top up the submission window before this layer's
+            // kernels execute. Consuming first keeps the bound exact:
+            // at most `depth` layers are ever in flight per session,
+            // so a submission never blocks on a full member queue
+            // ahead of this layer's compute (the queues carry slack
+            // for several concurrent sessions; past that, a full
+            // queue is deliberate backpressure).
+            while pass.next_submit < layers && pass.next_submit <= layer + pass.depth {
+                let l = pass.next_submit;
+                pass.next_submit += 1;
+                if self.submit_prefetch(state, sc, l, &mut pass.stats, &mut pass.vclock)? {
+                    pass.in_flight += 1;
+                    pass.stats.max_inflight = pass.stats.max_inflight.max(pass.in_flight);
                 }
-            }
-            // Whole-layer prefetch buffer for this layer, if the previous
-            // call's masks were submitted while layer-1 executed. Swap the
-            // pooled slot out (its buffers cycle back in on the next
-            // prefetch write) and leave the slot empty.
-            std::mem::swap(&mut sc.pre, &mut state.prefetch[layer]);
-            state.prefetch[layer].clear();
-            let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
-
-            for group in 0..4 {
-                let kind = MatrixKind::SCORED[group];
-                // normalize → score → select.
-                self.score_group(group, t, &mut sc.fwd, &mut stats);
-                self.select_into(
-                    layer,
-                    kind,
-                    &sc.fwd.imp,
-                    &mut stats,
-                    &mut sc.sel_scratch,
-                    &mut sc.imp_phys,
-                    &mut sc.sel,
-                );
-                // Plan the residual demand, gather activation columns.
-                let acts: &[f32] = match group {
-                    0 | 2 => &sc.fwd.hn,
-                    1 => &sc.fwd.attn,
-                    _ => &sc.fwd.act,
-                };
-                let bucket = self.prepare_group_load(
-                    layer,
-                    kind,
-                    acts,
-                    t,
-                    &sc.sel,
-                    pre,
-                    &mut sc.gather,
-                    &mut sc.plan_scratch,
-                    &mut stats,
-                );
-                // Record the demand for next-call prefetch prediction.
-                let dst = &mut state.next_masks[layer][group];
-                dst.clear();
-                dst.extend_from_slice(&sc.gather.flash_chunks);
-                // Submit the group's planned read through the pool.
-                if sc.gather.fresh.plan.is_empty() {
-                    sc.gather.fresh.receipt.clear();
-                } else {
-                    let PlannedRead { plan, receipt } = &mut sc.gather.fresh;
-                    self.submit_pooled(plan, &mut sc.pool, receipt)?;
-                    stats.bytes_loaded += plan.payload_bytes();
-                }
-                stats.io += sc.gather.fresh.receipt.service;
-                // Assemble the weight tile and execute the stage.
-                self.gather_group_weights(layer, kind, bucket, pre, &mut sc.gather, &mut stats);
-                self.exec_group_solo(
-                    group,
-                    t,
-                    bucket,
-                    &mut state.kvs[layer],
-                    &sc.gather,
-                    &mut sc.fwd,
-                    &mut sc.exec,
-                    &mut sc.outs,
-                    &mut stats,
-                )?;
-            }
-
-            // --- double-buffered prefetch of layer l+1 (sync mode) ---
-            // Submit the next layer's predicted whole-layer read now; the
-            // service time it cannot hide behind this layer's compute is
-            // what the caller pays. (The async pipeline replaces this
-            // with submit-ahead at layer start + await-at-consumption.)
-            if !async_on && self.prefetch && layer + 1 < layers {
-                prefetch_service += self.prefetch_layer(
-                    state,
-                    &mut sc.plan_scratch,
-                    &mut sc.pool,
-                    layer + 1,
-                    layer_t0.elapsed(),
-                    &mut stats,
-                )?;
             }
         }
+        // Whole-layer prefetch buffer for this layer, if the previous
+        // call's masks were submitted while layer-1 executed. Swap the
+        // pooled slot out (its buffers cycle back in on the next
+        // prefetch write) and leave the slot empty.
+        std::mem::swap(&mut sc.pre, &mut state.prefetch[layer]);
+        state.prefetch[layer].clear();
+        let pre = if sc.pre.is_empty() { None } else { Some(&sc.pre) };
+        let stats = &mut pass.stats;
+
+        for group in 0..4 {
+            let kind = MatrixKind::SCORED[group];
+            // normalize → score → select.
+            self.score_group(group, t, &mut sc.fwd, stats);
+            self.select_into(
+                layer,
+                kind,
+                &sc.fwd.imp,
+                stats,
+                &mut sc.sel_scratch,
+                &mut sc.imp_phys,
+                &mut sc.sel,
+            );
+            // Plan the residual demand, gather activation columns.
+            let acts: &[f32] = match group {
+                0 | 2 => &sc.fwd.hn,
+                1 => &sc.fwd.attn,
+                _ => &sc.fwd.act,
+            };
+            let bucket = self.prepare_group_load(
+                layer,
+                kind,
+                acts,
+                t,
+                &sc.sel,
+                pre,
+                &mut sc.gather,
+                &mut sc.plan_scratch,
+                stats,
+            );
+            // Record the demand for next-call prefetch prediction.
+            let dst = &mut state.next_masks[layer][group];
+            dst.clear();
+            dst.extend_from_slice(&sc.gather.flash_chunks);
+            // Submit the group's planned read through the pool.
+            if sc.gather.fresh.plan.is_empty() {
+                sc.gather.fresh.receipt.clear();
+            } else {
+                let PlannedRead { plan, receipt } = &mut sc.gather.fresh;
+                self.submit_pooled(plan, &mut sc.pool, receipt)?;
+                stats.bytes_loaded += plan.payload_bytes();
+            }
+            stats.io += sc.gather.fresh.receipt.service;
+            // Assemble the weight tile and execute the stage.
+            self.gather_group_weights(layer, kind, bucket, pre, &mut sc.gather, stats);
+            self.exec_group_solo(
+                group,
+                t,
+                bucket,
+                &mut state.kvs[layer],
+                &sc.gather,
+                &mut sc.fwd,
+                &mut sc.exec,
+                &mut sc.outs,
+                stats,
+            )?;
+        }
+
+        // --- double-buffered prefetch of layer l+1 (sync mode) ---
+        // Submit the next layer's predicted whole-layer read now; the
+        // service time it cannot hide behind this layer's compute is
+        // what the caller pays. (The async pipeline replaces this
+        // with submit-ahead at layer start + await-at-consumption.)
+        if !pass.async_on && self.prefetch && layer + 1 < layers {
+            pass.prefetch_service += self.prefetch_layer(
+                state,
+                &mut sc.plan_scratch,
+                &mut sc.pool,
+                layer + 1,
+                layer_t0.elapsed(),
+                &mut pass.stats,
+            )?;
+        }
+        pass.layer += 1;
+        Ok(())
+    }
+
+    /// Finish a completed pass: swap the demand masks for next-call
+    /// prefetch prediction, fold the call's metrics once, and copy the
+    /// final activations out.
+    pub(crate) fn finish_pass(
+        &self,
+        state: &mut SessionState,
+        scratch: &mut ScratchArena,
+        pass: ForwardPass,
+        out: &mut Vec<f32>,
+    ) -> StageStats {
+        debug_assert!(pass.done());
+        let sc = &mut *scratch;
+        let stats = pass.stats;
         std::mem::swap(&mut state.prev_masks, &mut state.next_masks);
         // One metrics fold per call (not per stage): the shared mutex is
         // touched once, so concurrent sessions don't serialize on it.
@@ -416,13 +509,13 @@ impl EngineCore {
             metrics.add("select", stats.select);
             metrics.add("compute", stats.compute);
             metrics.add("io", stats.io);
-            if prefetch_service > Duration::ZERO {
-                metrics.add("prefetch", prefetch_service);
+            if pass.prefetch_service > Duration::ZERO {
+                metrics.add("prefetch", pass.prefetch_service);
                 // Service time the pipeline hid behind compute; the
                 // overlap ratio is `io.overlapped / (io + io.overlapped)`.
                 metrics.add("io.overlapped", stats.overlapped_io);
             }
-            if async_on {
+            if pass.async_on {
                 // Per-call max of in-flight whole-layer prefetches
                 // (accumulated; divide by the "io" call count for the
                 // average achieved queue depth).
@@ -431,6 +524,10 @@ impl EngineCore {
             metrics.add_bytes("io", stats.bytes_loaded);
             if stats.cache_hit_bytes > 0 {
                 metrics.add_bytes("io.cache_hit_bytes", stats.cache_hit_bytes);
+            }
+            if pass.resumes > 0 {
+                // Yield points actually taken by a chunked prefill pass.
+                metrics.add_bytes("prefill.yields", pass.resumes);
             }
             // Per-member I/O accounting (multi-member pools only): bytes
             // and summed service per device, from which utilization skew
@@ -445,7 +542,7 @@ impl EngineCore {
         }
         out.clear();
         out.extend_from_slice(&sc.fwd.xa);
-        Ok(stats)
+        stats
     }
 
     /// Plan the predicted flash demand of `layer` (all four selection

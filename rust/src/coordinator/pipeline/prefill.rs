@@ -1,0 +1,104 @@
+//! Chunked prefill: run a frame append a few layers at a time so the
+//! scheduler worker can interleave decode batches mid-pass.
+//!
+//! A vision prefill is the long pole of the serving path — `t` tokens
+//! through every layer, bandwidth-bound — while decode steps are short
+//! and latency-bound. The monolithic driver parks a worker for the whole
+//! pass; this driver splits the same pass at layer boundaries
+//! ([`super::ForwardPass`] owns all loop state, so no lock or borrow
+//! survives a pause) and lets the caller do other work between chunks.
+//!
+//! The invariant that makes this safe is the one the whole pipeline is
+//! built on: pausing between layers changes **no** floating-point
+//! computation. [`EngineCore::prefill_step`] runs the byte-for-byte same
+//! layer body as [`EngineCore::forward`], so a chunked prefill's outputs
+//! and KV caches are bit-identical to a monolithic append — only timing
+//! stats observe the pause. The determinism tests pin this.
+//!
+//! Drivers must hold exclusive access to the session across the *whole*
+//! pass (the scheduler's per-stream busy guard provides it); between
+//! chunks every engine lock is released, so decode batches on other
+//! sessions proceed under the shared read lock as usual. A pass left
+//! unfinished (driver error, shed mid-pass) leaves half-appended KV
+//! caches; the owner must reset the session before reuse —
+//! [`crate::coordinator::Session`] does this automatically when it finds
+//! an abandoned pass.
+
+use anyhow::Result;
+
+use super::{ForwardPass, StageStats};
+use crate::coordinator::arena::ScratchArena;
+use crate::coordinator::engine::EngineCore;
+use crate::coordinator::pipeline::SessionState;
+
+/// An in-progress chunked prefill pass: the owned forward-loop state plus
+/// nothing else. Opaque outside the coordinator; held by the session
+/// between chunks.
+pub(crate) struct PrefillPass {
+    pub(crate) pass: ForwardPass,
+}
+
+impl PrefillPass {
+    /// Layers already run (monotonic; equals `spec.layers` when done).
+    pub(crate) fn layers_done(&self) -> usize {
+        self.pass.layer
+    }
+
+    pub(crate) fn done(&self) -> bool {
+        self.pass.done()
+    }
+}
+
+impl EngineCore {
+    /// Begin a chunked prefill of a `t`-token frame. No layer runs yet.
+    pub(crate) fn prefill_begin(
+        &self,
+        state: &mut SessionState,
+        scratch: &mut ScratchArena,
+        frame: &[f32],
+        t: usize,
+    ) -> PrefillPass {
+        PrefillPass {
+            pass: self.begin_pass(state, scratch, frame, t),
+        }
+    }
+
+    /// Run up to `max_layers` more layers (at least one; `max_layers` of
+    /// 0 is treated as 1). Returns `true` while layers remain — the
+    /// caller may drop every lock and yield before the next step.
+    pub(crate) fn prefill_step(
+        &self,
+        state: &mut SessionState,
+        scratch: &mut ScratchArena,
+        pp: &mut PrefillPass,
+        max_layers: usize,
+    ) -> Result<bool> {
+        anyhow::ensure!(
+            pp.pass.epoch == self.epoch,
+            "engine re-calibrated mid-prefill (epoch {} -> {}); pass aborted",
+            pp.pass.epoch,
+            self.epoch
+        );
+        if pp.pass.layer > 0 {
+            pp.pass.resumes += 1;
+        }
+        for _ in 0..max_layers.max(1) {
+            if pp.pass.done() {
+                break;
+            }
+            self.run_layer(state, scratch, &mut pp.pass)?;
+        }
+        Ok(!pp.pass.done())
+    }
+
+    /// Finish a completed pass: metrics fold + final activations.
+    pub(crate) fn prefill_finish(
+        &self,
+        state: &mut SessionState,
+        scratch: &mut ScratchArena,
+        pp: PrefillPass,
+        out: &mut Vec<f32>,
+    ) -> StageStats {
+        self.finish_pass(state, scratch, pp.pass, out)
+    }
+}

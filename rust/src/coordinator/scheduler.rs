@@ -1,62 +1,201 @@
-//! Request scheduler: multi-stream frame-append/decode traffic over one
-//! engine, served by a configurable worker pool.
+//! Request scheduler: multi-stream prefill/decode traffic over one
+//! engine, served by a configurable worker pool with SLO-aware
+//! admission control.
 //!
-//! Decode steps are latency-critical (a user is waiting on tokens) and
-//! preempt queued frame appends — the standard serving-priority split.
-//! The engine core is `Sync`, so all workers share one [`Engine`] handle;
-//! each stream index lazily gets its own [`Session`], and callers talk
-//! through channels. With `workers > 1`, independent streams decode
-//! genuinely in parallel over the same flash device and weight store,
-//! while a per-stream in-flight guard keeps each stream's requests in
-//! submission order (within each priority class) no matter which worker
-//! picks them up.
+//! ## Disaggregated prefill/decode queues
+//!
+//! Vision prefills (frame appends) are long and bandwidth-bound; decode
+//! steps are short and latency-bound (a user is waiting on tokens). The
+//! scheduler keeps them in **separate queues by scheduling class** —
+//! `interactive` (decode by default) and `bulk` (prefill by default) —
+//! and serves the interactive queue first, earliest-deadline-first
+//! within it. A request may override its class
+//! ([`RequestOpts::class`]), so a latency-critical prefill can ride the
+//! interactive queue and a background decode can yield to others.
+//!
+//! The engine core is `Sync`, so all workers share one [`Engine`]
+//! handle; each stream index lazily gets its own [`Session`], and
+//! callers talk through channels. A per-stream in-flight guard keeps
+//! each stream's requests in submission order no matter which worker
+//! picks them up (the EDF pop never lifts a job over an earlier queued
+//! job of the same stream).
+//!
+//! ## Chunked prefill
+//!
+//! With a non-zero [`SchedulerConfig::prefill_chunk`], a worker serving
+//! a prefill runs it through the resumable pass driver
+//! ([`Session::prefill_begin`] / [`Session::prefill_step`]) a few
+//! layers at a time, and **interleaves ready decode work at every
+//! yield point** — one decode batch (or solo decode) per yield, so
+//! both classes make bounded progress. Chunked prefill outputs are
+//! bit-identical to the monolithic path (pausing between layers
+//! changes no computation; the determinism suite pins it), so the knob
+//! trades nothing but scheduling latency shape. `prefill_chunk = 0`
+//! restores the monolithic single-queue behaviour — the measurable
+//! baseline for the `mixed_slo` bench sweep.
+//!
+//! ## Admission control
+//!
+//! With a configured [`SchedulerConfig::slo`], `submit` sheds new work
+//! of a class (typed [`SubmitError::Overloaded`], HTTP 429 upstream)
+//! once that class's queue delay — the age of its oldest queued
+//! request — exceeds the SLO, with a `retry_after` hint sized to the
+//! excess. Per-stream prefill admission is additionally bounded by
+//! [`SchedulerConfig::prefill_budget`] outstanding tokens
+//! ([`SubmitError::BudgetExhausted`]); the hard queue cap stays a 503
+//! ([`SubmitError::QueueFull`]). Per-class served/shed counts and
+//! cumulative queue delay are exported via [`Scheduler::admission`]
+//! for `/metrics`.
 //!
 //! ## Cross-stream decode batching
 //!
-//! With a non-zero [`SchedulerConfig::batch_window`], a worker that picks
-//! up a decode request keeps collecting further *ready* decode requests —
-//! oldest first, at most one per stream (the in-flight guard enforces
-//! this for free), up to [`SchedulerConfig::max_batch`] — waiting up to
-//! the window for more to arrive, then serves the whole group as **one
-//! fused batch** ([`Engine::decode_batch_into`]): per-stream selection,
-//! shared chunks read from flash once, shared weight tiles executed
-//! across all member activations. Every member still gets its own
-//! [`Completion`], and outputs are bit-identical to solo decoding, so
-//! batching only trades a bounded queueing delay (≤ the window) for
-//! I/O dedup and kernel-dispatch amortization. Appends are never
-//! batched and still yield to decodes; a batch whose validation fails
-//! falls back to solo decodes so one bad stream cannot poison the
-//! others.
+//! With a non-zero [`SchedulerConfig::batch_window`], a worker that
+//! picks up a decode request keeps collecting further *ready* decode
+//! requests — earliest deadline first, at most one per stream (the
+//! in-flight guard enforces this for free), up to
+//! [`SchedulerConfig::max_batch`] — waiting up to the window for more
+//! to arrive, then serves the whole group as **one fused batch**
+//! ([`Engine::decode_batch_into`]): per-stream selection, shared chunks
+//! read from flash once, shared weight tiles executed across all member
+//! activations. Every member still gets its own [`Completion`], and
+//! outputs are bit-identical to solo decoding. Prefills are never
+//! batched; a batch whose validation fails falls back to solo decodes
+//! so one bad stream cannot poison the others.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{DecodeRequest, Engine, Session, StageStats, MAX_DECODE_BATCH};
 
-/// What a request asks the engine to do.
-#[derive(Clone, Debug)]
-pub enum RequestKind {
-    /// Append a frame of token embeddings ([T, d] row-major).
-    AppendFrame(Vec<f32>),
-    /// Decode one token from its embedding ([d]).
-    Decode(Vec<f32>),
+/// Scheduling class of a request: which queue it joins and which SLO
+/// accounting bucket it lands in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Class {
+    /// Latency-bound: served first, earliest deadline first. The
+    /// default for decode steps.
+    Interactive,
+    /// Bandwidth-bound: fills worker capacity the interactive queue
+    /// leaves idle. The default for prefills.
+    Bulk,
 }
 
-impl RequestKind {
-    pub fn name(&self) -> &'static str {
+impl Class {
+    pub fn as_str(&self) -> &'static str {
         match self {
-            RequestKind::AppendFrame(_) => "append",
-            RequestKind::Decode(_) => "decode",
+            Class::Interactive => "interactive",
+            Class::Bulk => "bulk",
         }
     }
 }
 
+impl std::str::FromStr for Class {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "interactive" => Ok(Class::Interactive),
+            "bulk" => Ok(Class::Bulk),
+            other => Err(format!(
+                "unknown class {other:?} (expected \"interactive\" or \"bulk\")"
+            )),
+        }
+    }
+}
+
+/// Per-request scheduling options, carried end to end from the HTTP
+/// body to the queues.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RequestOpts {
+    /// Scheduling-class override; `None` uses the per-operation default
+    /// (decode → interactive, prefill → bulk).
+    pub class: Option<Class>,
+    /// Queue-delay deadline relative to submission; orders the
+    /// interactive queue (earliest first). `None` uses the configured
+    /// SLO (or a fixed default when no SLO is set), so undeadlined
+    /// requests keep FIFO order among themselves.
+    pub deadline: Option<Duration>,
+}
+
+/// What a request asks the engine to do: the typed request API carried
+/// through scheduler, server, and load harness.
 #[derive(Clone, Debug)]
-pub struct Request {
-    pub stream: usize,
-    pub kind: RequestKind,
+pub enum Request {
+    /// Append a frame of token embeddings ([T, d] row-major).
+    Prefill {
+        stream: usize,
+        frame: Vec<f32>,
+        opts: RequestOpts,
+    },
+    /// Decode one token from its embedding ([d]).
+    Decode {
+        stream: usize,
+        token: Vec<f32>,
+        opts: RequestOpts,
+    },
+}
+
+impl Request {
+    /// A prefill with default options (bulk class, SLO-default deadline).
+    pub fn prefill(stream: usize, frame: Vec<f32>) -> Self {
+        Request::Prefill {
+            stream,
+            frame,
+            opts: RequestOpts::default(),
+        }
+    }
+
+    /// A decode with default options (interactive class, SLO-default
+    /// deadline).
+    pub fn decode(stream: usize, token: Vec<f32>) -> Self {
+        Request::Decode {
+            stream,
+            token,
+            opts: RequestOpts::default(),
+        }
+    }
+
+    /// Replace the scheduling options (builder style).
+    pub fn with_opts(mut self, new: RequestOpts) -> Self {
+        match &mut self {
+            Request::Prefill { opts, .. } | Request::Decode { opts, .. } => *opts = new,
+        }
+        self
+    }
+
+    pub fn stream(&self) -> usize {
+        match self {
+            Request::Prefill { stream, .. } | Request::Decode { stream, .. } => *stream,
+        }
+    }
+
+    pub fn opts(&self) -> &RequestOpts {
+        match self {
+            Request::Prefill { opts, .. } | Request::Decode { opts, .. } => opts,
+        }
+    }
+
+    /// Effective scheduling class: the explicit override, else the
+    /// per-operation default.
+    pub fn class(&self) -> Class {
+        self.opts().class.unwrap_or(match self {
+            Request::Prefill { .. } => Class::Bulk,
+            Request::Decode { .. } => Class::Interactive,
+        })
+    }
+
+    pub fn is_decode(&self) -> bool {
+        matches!(self, Request::Decode { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Request::Prefill { .. } => "prefill",
+            Request::Decode { .. } => "decode",
+        }
+    }
 }
 
 /// Completed request: output hidden states + accounting.
@@ -73,10 +212,103 @@ pub struct Completion {
     pub exec_wall: Duration,
 }
 
+/// Why `submit` refused a request. `Overloaded` and `BudgetExhausted`
+/// are *sheds* — transient, retry after `retry_after` (HTTP 429
+/// upstream); `QueueFull` and `Stopping` map to 503, `UnknownStream`
+/// to a client error.
+#[derive(Clone, Debug)]
+pub enum SubmitError {
+    /// The class's queue delay exceeds the configured SLO.
+    Overloaded {
+        class: Class,
+        queue_delay: Duration,
+        retry_after: Duration,
+    },
+    /// The stream already has `prefill_budget` prefill tokens queued.
+    BudgetExhausted {
+        stream: usize,
+        queued_tokens: usize,
+        budget: usize,
+        retry_after: Duration,
+    },
+    /// Hard queue-capacity backpressure.
+    QueueFull { queued: usize, retry_after: Duration },
+    /// Stream index at or beyond `max_streams`.
+    UnknownStream { stream: usize, max_streams: usize },
+    /// The scheduler is shutting down.
+    Stopping,
+}
+
+impl SubmitError {
+    /// Suggested client back-off, where one applies.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            SubmitError::Overloaded { retry_after, .. }
+            | SubmitError::BudgetExhausted { retry_after, .. }
+            | SubmitError::QueueFull { retry_after, .. } => Some(*retry_after),
+            SubmitError::UnknownStream { .. } | SubmitError::Stopping => None,
+        }
+    }
+
+    /// True for SLO/budget sheds (HTTP 429); false for capacity or
+    /// lifecycle refusals (503) and caller errors.
+    pub fn is_shed(&self) -> bool {
+        matches!(
+            self,
+            SubmitError::Overloaded { .. } | SubmitError::BudgetExhausted { .. }
+        )
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded {
+                class,
+                queue_delay,
+                retry_after,
+            } => write!(
+                f,
+                "{} queue delay {:?} past SLO; retry in {:?}",
+                class.as_str(),
+                queue_delay,
+                retry_after
+            ),
+            SubmitError::BudgetExhausted {
+                stream,
+                queued_tokens,
+                budget,
+                retry_after,
+            } => write!(
+                f,
+                "stream {stream} has {queued_tokens} of {budget} prefill tokens queued; retry in {retry_after:?}"
+            ),
+            SubmitError::QueueFull {
+                queued,
+                retry_after,
+            } => write!(f, "queue full ({queued} requests); retry in {retry_after:?}"),
+            SubmitError::UnknownStream {
+                stream,
+                max_streams,
+            } => write!(f, "stream {stream} beyond max_streams {max_streams}"),
+            SubmitError::Stopping => write!(f, "scheduler is stopping"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Deadline assumed for requests that don't carry one when no SLO is
+/// configured either (keeps the interactive queue totally ordered).
+const DEFAULT_DEADLINE: Duration = Duration::from_millis(100);
+
+/// Floor for `retry_after` hints.
+const MIN_RETRY_AFTER: Duration = Duration::from_millis(1);
+
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
-    /// Maximum queued requests before `submit` returns an error
-    /// (backpressure).
+    /// Maximum queued requests before `submit` returns
+    /// [`SubmitError::QueueFull`] (hard backpressure).
     pub max_queue: usize,
     /// Maximum distinct stream indices (sessions are created lazily up to
     /// this bound; requests beyond it are rejected at submit).
@@ -93,64 +325,273 @@ pub struct SchedulerConfig {
     /// Most decode requests fused into one batch (clamped to
     /// [`MAX_DECODE_BATCH`]; values ≤ 1 disable batching).
     pub max_batch: usize,
+    /// Queue-delay SLO: once a class's oldest queued request is older
+    /// than this, further submits of that class shed with
+    /// [`SubmitError::Overloaded`]. `None` (the default) disables
+    /// shedding — only the hard queue cap pushes back.
+    pub slo: Option<Duration>,
+    /// Maximum outstanding (queued or executing) prefill *tokens* per
+    /// stream; beyond it prefill submits shed with
+    /// [`SubmitError::BudgetExhausted`]. 0 (the default) = unlimited.
+    pub prefill_budget: usize,
+    /// Chunked prefill: yield to the interactive queue every this many
+    /// layers. 0 = monolithic prefill (the single-queue baseline).
+    pub prefill_chunk: usize,
 }
 
-impl Default for SchedulerConfig {
-    fn default() -> Self {
-        // NC_SCHED_WORKERS / NC_BATCH_WINDOW_US let CI (and operators)
-        // exercise the concurrent and batched paths without touching
-        // call sites.
-        let workers = std::env::var("NC_SCHED_WORKERS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or(1);
-        let batch_window = std::env::var("NC_BATCH_WINDOW_US")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .map(Duration::from_micros)
+impl SchedulerConfig {
+    /// The environment-derived configuration. `NC_SCHED_WORKERS`,
+    /// `NC_BATCH_WINDOW_US`, `NC_SLO_MS`, `NC_PREFILL_BUDGET` and
+    /// `NC_PREFILL_CHUNK` let CI (and operators) exercise the
+    /// concurrent, batched, and disaggregated paths without touching
+    /// call sites. This is the single place those variables are parsed;
+    /// `Default` delegates here.
+    pub fn from_env() -> Self {
+        fn env_usize(name: &str) -> Option<usize> {
+            std::env::var(name).ok().and_then(|v| v.parse().ok())
+        }
+        let workers = env_usize("NC_SCHED_WORKERS").filter(|&n| n >= 1).unwrap_or(1);
+        let batch_window = env_usize("NC_BATCH_WINDOW_US")
+            .map(|us| Duration::from_micros(us as u64))
             .unwrap_or(Duration::ZERO);
+        let slo = env_usize("NC_SLO_MS")
+            .filter(|&ms| ms > 0)
+            .map(|ms| Duration::from_millis(ms as u64));
+        let prefill_budget = env_usize("NC_PREFILL_BUDGET").unwrap_or(0);
+        let prefill_chunk = env_usize("NC_PREFILL_CHUNK").unwrap_or(1);
         Self {
             max_queue: 256,
             max_streams: 64,
             workers,
             batch_window,
             max_batch: 4,
+            slo,
+            prefill_budget,
+            prefill_chunk,
         }
+    }
+
+    pub fn with_max_queue(mut self, max_queue: usize) -> Self {
+        self.max_queue = max_queue;
+        self
+    }
+
+    pub fn with_max_streams(mut self, max_streams: usize) -> Self {
+        self.max_streams = max_streams;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn with_batch_window(mut self, window: Duration) -> Self {
+        self.batch_window = window;
+        self
+    }
+
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    pub fn with_slo(mut self, slo: Option<Duration>) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    pub fn with_prefill_budget(mut self, tokens: usize) -> Self {
+        self.prefill_budget = tokens;
+        self
+    }
+
+    pub fn with_prefill_chunk(mut self, layers: usize) -> Self {
+        self.prefill_chunk = layers;
+        self
+    }
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self::from_env()
     }
 }
 
 struct Job {
     request: Request,
+    class: Class,
+    /// Absolute deadline ordering the interactive queue (EDF).
+    deadline_at: Instant,
+    /// Prefill tokens this job holds against its stream's budget
+    /// (0 when untracked: decodes, or no budget configured).
+    tokens: usize,
     enqueued: Instant,
     done: Sender<Completion>,
 }
 
+impl Job {
+    fn stream(&self) -> usize {
+        self.request.stream()
+    }
+}
+
 #[derive(Default)]
 struct Queues {
-    decode: VecDeque<Job>,
-    append: VecDeque<Job>,
+    /// Latency-bound class, earliest-deadline-first.
+    interactive: VecDeque<Job>,
+    /// Bandwidth-bound class, FIFO.
+    bulk: VecDeque<Job>,
     /// Streams with a request currently executing on some worker. A
     /// stream's queued requests wait for its in-flight one, so
     /// per-stream submission order is preserved even with many workers
     /// (the session mutex alone would serialize but not order).
     busy: HashSet<usize>,
+    /// Outstanding prefill tokens per stream (tracked only when a
+    /// budget is configured; entries are removed at zero).
+    prefill_tokens: HashMap<usize, usize>,
     stopping: bool,
 }
 
 impl Queues {
     fn len(&self) -> usize {
-        self.decode.len() + self.append.len()
+        self.interactive.len() + self.bulk.len()
+    }
+
+    fn queue(&self, class: Class) -> &VecDeque<Job> {
+        match class {
+            Class::Interactive => &self.interactive,
+            Class::Bulk => &self.bulk,
+        }
+    }
+
+    /// The class's current queue delay: age of its oldest queued
+    /// request (both queues are pushed at the back and removed from
+    /// anywhere, so the front is always the oldest).
+    fn queue_delay(&self, class: Class, now: Instant) -> Duration {
+        self.queue(class)
+            .front()
+            .map(|j| now.saturating_duration_since(j.enqueued))
+            .unwrap_or(Duration::ZERO)
+    }
+
+    fn release_tokens(&mut self, stream: usize, tokens: usize) {
+        if tokens == 0 {
+            return;
+        }
+        if let Some(held) = self.prefill_tokens.get_mut(&stream) {
+            *held = held.saturating_sub(tokens);
+            if *held == 0 {
+                self.prefill_tokens.remove(&stream);
+            }
+        }
     }
 }
 
 /// Pop the oldest job whose stream is not currently in flight, keeping
-/// the relative order of everything left behind.
+/// the relative order of everything left behind (bulk/FIFO pop).
 fn pop_ready(queue: &mut VecDeque<Job>, busy: &HashSet<usize>) -> Option<Job> {
-    let idx = queue
-        .iter()
-        .position(|j| !busy.contains(&j.request.stream))?;
+    let idx = queue.iter().position(|j| !busy.contains(&j.stream()))?;
     queue.remove(idx)
+}
+
+/// EDF pop for the interactive queue: among ready jobs that are the
+/// *first queued job of their stream* (lifting a later one would
+/// reorder a stream's KV-order-sensitive requests), pick the earliest
+/// deadline, oldest first on ties. `decode_only` restricts to decode
+/// operations (batch collection and mid-prefill interleaving).
+fn pop_ready_edf(
+    queue: &mut VecDeque<Job>,
+    busy: &HashSet<usize>,
+    decode_only: bool,
+) -> Option<Job> {
+    let mut best: Option<(usize, Instant)> = None;
+    for (i, job) in queue.iter().enumerate() {
+        let stream = job.stream();
+        if busy.contains(&stream) {
+            continue;
+        }
+        // Head-of-stream check within this queue: an earlier queued job
+        // of the same stream must run first.
+        if queue.iter().take(i).any(|p| p.stream() == stream) {
+            continue;
+        }
+        if decode_only && !job.request.is_decode() {
+            continue;
+        }
+        match best {
+            Some((_, d)) if job.deadline_at >= d => {}
+            _ => best = Some((i, job.deadline_at)),
+        }
+    }
+    queue.remove(best?.0)
+}
+
+/// Per-class admission/served accounting (relaxed atomics: the counters
+/// feed `/metrics`, not control flow).
+#[derive(Default)]
+struct ClassCounters {
+    served: AtomicU64,
+    shed: AtomicU64,
+    queue_delay_us: AtomicU64,
+}
+
+#[derive(Default)]
+struct Admission {
+    interactive: ClassCounters,
+    bulk: ClassCounters,
+}
+
+impl Admission {
+    fn class(&self, class: Class) -> &ClassCounters {
+        match class {
+            Class::Interactive => &self.interactive,
+            Class::Bulk => &self.bulk,
+        }
+    }
+
+    fn record_served(&self, class: Class, queue_wait: Duration) {
+        let c = self.class(class);
+        c.served.fetch_add(1, Ordering::Relaxed);
+        c.queue_delay_us
+            .fetch_add(queue_wait.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    fn record_shed(&self, class: Class) {
+        self.class(class).shed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time view of one class's admission accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassSnapshot {
+    /// Requests currently queued (not yet executing).
+    pub queued: usize,
+    /// Requests whose execution has started (cumulative).
+    pub served: u64,
+    /// Requests shed at admission (cumulative; SLO + budget sheds).
+    pub shed: u64,
+    /// Summed queue delay of served requests, µs (divide by `served`
+    /// for the mean).
+    pub queue_delay_us: u64,
+}
+
+/// Per-class admission snapshot ([`Scheduler::admission`]), the source
+/// for the server's per-class `/metrics`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionSnapshot {
+    pub interactive: ClassSnapshot,
+    pub bulk: ClassSnapshot,
+}
+
+impl AdmissionSnapshot {
+    /// (class-name, snapshot) pairs, for metric emission loops.
+    pub fn classes(&self) -> [(&'static str, ClassSnapshot); 2] {
+        [
+            (Class::Interactive.as_str(), self.interactive),
+            (Class::Bulk.as_str(), self.bulk),
+        ]
+    }
 }
 
 struct Shared {
@@ -158,17 +599,20 @@ struct Shared {
     cv: Condvar,
     /// Lazily-created per-stream sessions, shared by all workers.
     sessions: Mutex<Vec<Option<Arc<Session>>>>,
+    admission: Admission,
 }
 
-/// Decode-batching knobs handed to each worker.
+/// Scheduling knobs handed to each worker.
 #[derive(Clone, Copy)]
-struct BatchCfg {
+struct WorkerCfg {
     window: Duration,
     max_batch: usize,
+    /// Layers per chunked-prefill step; 0 = monolithic.
+    prefill_chunk: usize,
 }
 
-impl BatchCfg {
-    fn enabled(&self) -> bool {
+impl WorkerCfg {
+    fn batching(&self) -> bool {
         self.window > Duration::ZERO && self.max_batch > 1
     }
 }
@@ -177,6 +621,9 @@ impl BatchCfg {
 pub struct Scheduler {
     shared: Arc<Shared>,
     cfg: SchedulerConfig,
+    /// Tokens one prefill admits against the per-stream budget
+    /// (the model's tokens-per-frame).
+    frame_tokens: usize,
     /// Drained exactly once: [`Scheduler::shutdown`] is idempotent (the
     /// network server's signal path and `Drop` may both call it).
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -195,23 +642,27 @@ impl Scheduler {
             queues: Mutex::new(Queues::default()),
             cv: Condvar::new(),
             sessions: Mutex::new(Vec::new()),
+            admission: Admission::default(),
         });
         let engine = make_engine();
-        let batch = BatchCfg {
+        let frame_tokens = engine.meta().t;
+        let wcfg = WorkerCfg {
             window: cfg.batch_window,
             max_batch: cfg.max_batch.min(MAX_DECODE_BATCH),
+            prefill_chunk: cfg.prefill_chunk,
         };
         let worker_count = cfg.workers.max(1);
         let workers = (0..worker_count)
             .map(|_| {
                 let shared = shared.clone();
                 let engine = engine.clone();
-                std::thread::spawn(move || worker_loop(shared, engine, batch))
+                std::thread::spawn(move || worker_loop(shared, engine, wcfg))
             })
             .collect();
         Self {
             shared,
             cfg,
+            frame_tokens,
             workers: Mutex::new(workers),
             worker_count,
             engine,
@@ -224,33 +675,82 @@ impl Scheduler {
         self.engine.clone()
     }
 
-    /// Enqueue a request; returns the completion receiver, or an error if
-    /// the queue is full (backpressure), the stream index is out of
-    /// bounds, or the scheduler is stopping.
-    pub fn submit(&self, request: Request) -> anyhow::Result<Receiver<Completion>> {
-        anyhow::ensure!(
-            request.stream < self.cfg.max_streams,
-            "stream {} beyond max_streams {}",
-            request.stream,
-            self.cfg.max_streams
-        );
+    /// Enqueue a request; returns the completion receiver, or a typed
+    /// [`SubmitError`]: SLO/budget sheds (retryable, 429 upstream),
+    /// hard queue backpressure (503), bad stream index, or shutdown.
+    pub fn submit(&self, request: Request) -> Result<Receiver<Completion>, SubmitError> {
+        let stream = request.stream();
+        if stream >= self.cfg.max_streams {
+            return Err(SubmitError::UnknownStream {
+                stream,
+                max_streams: self.cfg.max_streams,
+            });
+        }
+        let class = request.class();
+        // Tokens held against the per-stream prefill budget (tracked
+        // only when a budget is configured).
+        let tokens = match (&request, self.cfg.prefill_budget) {
+            (Request::Prefill { .. }, budget) if budget > 0 => self.frame_tokens.max(1),
+            _ => 0,
+        };
+        let now = Instant::now();
+        let default_deadline = self.cfg.slo.unwrap_or(DEFAULT_DEADLINE);
+        let deadline_at = now + request.opts().deadline.unwrap_or(default_deadline);
         let (tx, rx) = std::sync::mpsc::channel();
         {
             let mut q = self.shared.queues.lock().unwrap();
-            anyhow::ensure!(!q.stopping, "scheduler is stopping");
-            anyhow::ensure!(
-                q.len() < self.cfg.max_queue,
-                "queue full ({} requests)",
-                self.cfg.max_queue
-            );
+            if q.stopping {
+                return Err(SubmitError::Stopping);
+            }
+            if q.len() >= self.cfg.max_queue {
+                return Err(SubmitError::QueueFull {
+                    queued: q.len(),
+                    retry_after: default_deadline.max(MIN_RETRY_AFTER),
+                });
+            }
+            // SLO admission: shed the class whose oldest queued request
+            // has already waited past the SLO — adding to that queue
+            // can only miss.
+            if let Some(slo) = self.cfg.slo {
+                let queue_delay = q.queue_delay(class, now);
+                if queue_delay > slo {
+                    self.shared.admission.record_shed(class);
+                    let excess = queue_delay - slo;
+                    return Err(SubmitError::Overloaded {
+                        class,
+                        queue_delay,
+                        retry_after: excess.max(slo / 4).max(MIN_RETRY_AFTER),
+                    });
+                }
+            }
+            if tokens > 0 {
+                let held = q.prefill_tokens.get(&stream).copied().unwrap_or(0);
+                if held + tokens > self.cfg.prefill_budget {
+                    self.shared.admission.record_shed(class);
+                    return Err(SubmitError::BudgetExhausted {
+                        stream,
+                        queued_tokens: held,
+                        budget: self.cfg.prefill_budget,
+                        retry_after: self
+                            .cfg
+                            .slo
+                            .unwrap_or(DEFAULT_DEADLINE)
+                            .max(MIN_RETRY_AFTER),
+                    });
+                }
+                *q.prefill_tokens.entry(stream).or_insert(0) += tokens;
+            }
             let job = Job {
                 request,
-                enqueued: Instant::now(),
+                class,
+                deadline_at,
+                tokens,
+                enqueued: now,
                 done: tx,
             };
-            match &job.request.kind {
-                RequestKind::Decode(_) => q.decode.push_back(job),
-                RequestKind::AppendFrame(_) => q.append.push_back(job),
+            match class {
+                Class::Interactive => q.interactive.push_back(job),
+                Class::Bulk => q.bulk.push_back(job),
             }
         }
         self.shared.cv.notify_one();
@@ -270,6 +770,32 @@ impl Scheduler {
     /// rejected at submit).
     pub fn max_streams(&self) -> usize {
         self.cfg.max_streams
+    }
+
+    /// The full configuration this scheduler runs (for config surfacing
+    /// — `/v1/config` reports the SLO and disaggregation knobs from
+    /// here so the served values cannot drift from the scheduler's).
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Per-class admission snapshot: queue depths plus cumulative
+    /// served/shed counts and queue delay.
+    pub fn admission(&self) -> AdmissionSnapshot {
+        let (iq, bq) = {
+            let q = self.shared.queues.lock().unwrap();
+            (q.interactive.len(), q.bulk.len())
+        };
+        let read = |c: &ClassCounters, queued: usize| ClassSnapshot {
+            queued,
+            served: c.served.load(Ordering::Relaxed),
+            shed: c.shed.load(Ordering::Relaxed),
+            queue_delay_us: c.queue_delay_us.load(Ordering::Relaxed),
+        };
+        AdmissionSnapshot {
+            interactive: read(&self.shared.admission.interactive, iq),
+            bulk: read(&self.shared.admission.bulk, bq),
+        }
     }
 
     /// Drain queued work and stop the workers. Idempotent: a second call
@@ -308,23 +834,24 @@ fn stream_session(shared: &Arc<Shared>, engine: &Engine, stream: usize) -> Arc<S
         .clone()
 }
 
-fn worker_loop(shared: Arc<Shared>, engine: Engine, batch: BatchCfg) {
+fn worker_loop(shared: Arc<Shared>, engine: Engine, wcfg: WorkerCfg) {
     let mut jobs: Vec<Job> = Vec::new();
     loop {
         jobs.clear();
         {
             let mut guard = shared.queues.lock().unwrap();
             loop {
-                // Priority: decode before append; streams with an
-                // in-flight request are skipped so per-stream order holds.
+                // Priority: the interactive queue (earliest deadline
+                // first) before bulk; streams with an in-flight request
+                // are skipped so per-stream order holds.
                 let q = &mut *guard;
-                if let Some(j) = pop_ready(&mut q.decode, &q.busy) {
-                    q.busy.insert(j.request.stream);
+                if let Some(j) = pop_ready_edf(&mut q.interactive, &q.busy, false) {
+                    q.busy.insert(j.stream());
                     jobs.push(j);
                     break;
                 }
-                if let Some(j) = pop_ready(&mut q.append, &q.busy) {
-                    q.busy.insert(j.request.stream);
+                if let Some(j) = pop_ready(&mut q.bulk, &q.busy) {
+                    q.busy.insert(j.stream());
                     jobs.push(j);
                     break;
                 }
@@ -334,28 +861,27 @@ fn worker_loop(shared: Arc<Shared>, engine: Engine, batch: BatchCfg) {
                 guard = shared.cv.wait(guard).unwrap();
             }
             // Cross-stream decode batching: keep collecting ready
-            // decodes (oldest first — the busy guard already enforces at
-            // most one per stream) up to `max_batch`, waiting out the
-            // bounded window for more to arrive. Appends never batch.
-            let decode_lead = jobs
-                .first()
-                .is_some_and(|j| matches!(j.request.kind, RequestKind::Decode(_)));
-            if batch.enabled() && decode_lead {
-                let deadline = Instant::now() + batch.window;
+            // decodes (earliest deadline first — the busy guard already
+            // enforces at most one per stream) up to `max_batch`,
+            // waiting out the bounded window for more to arrive.
+            // Prefills never batch.
+            let decode_lead = jobs.first().is_some_and(|j| j.request.is_decode());
+            if wcfg.batching() && decode_lead {
+                let deadline = Instant::now() + wcfg.window;
                 loop {
                     {
                         let q = &mut *guard;
-                        while jobs.len() < batch.max_batch {
-                            match pop_ready(&mut q.decode, &q.busy) {
+                        while jobs.len() < wcfg.max_batch {
+                            match pop_ready_edf(&mut q.interactive, &q.busy, true) {
                                 Some(j) => {
-                                    q.busy.insert(j.request.stream);
+                                    q.busy.insert(j.stream());
                                     jobs.push(j);
                                 }
                                 None => break,
                             }
                         }
                     }
-                    if jobs.len() >= batch.max_batch || guard.stopping {
+                    if jobs.len() >= wcfg.max_batch || guard.stopping {
                         break;
                     }
                     let now = Instant::now();
@@ -371,7 +897,11 @@ fn worker_loop(shared: Arc<Shared>, engine: Engine, batch: BatchCfg) {
         }
         if jobs.len() == 1 {
             let job = jobs.pop().expect("one job claimed");
-            run_single(&shared, &engine, job);
+            if !job.request.is_decode() && wcfg.prefill_chunk > 0 {
+                run_prefill_chunked(&shared, &engine, wcfg, job);
+            } else {
+                run_single(&shared, &engine, job);
+            }
         } else {
             run_decode_batch(&shared, &engine, &mut jobs);
         }
@@ -383,35 +913,121 @@ fn worker_loop(shared: Arc<Shared>, engine: Engine, batch: BatchCfg) {
     }
 }
 
+/// Release a finished job's stream (and any budget tokens it held) and
+/// wake waiters (notify_all: the waiter isn't necessarily the one the
+/// submit-side notify_one woke).
+fn release_stream(shared: &Arc<Shared>, stream: usize, tokens: usize) {
+    {
+        let mut q = shared.queues.lock().unwrap();
+        q.busy.remove(&stream);
+        q.release_tokens(stream, tokens);
+    }
+    shared.cv.notify_all();
+}
+
 /// Serve one request on its stream's session and deliver the completion.
 fn run_single(shared: &Arc<Shared>, engine: &Engine, job: Job) {
     let queue_wait = job.enqueued.elapsed();
-    let session = stream_session(shared, engine, job.request.stream);
+    shared.admission.record_served(job.class, queue_wait);
+    let session = stream_session(shared, engine, job.stream());
     let t0 = Instant::now();
-    let (output, stats) = match &job.request.kind {
-        RequestKind::AppendFrame(f) => match session.append_frame(f) {
+    let (output, stats) = match &job.request {
+        Request::Prefill { frame, .. } => match session.append_frame(frame) {
             Ok((y, s)) => (Ok(y), s),
             Err(e) => (Err(e.to_string()), StageStats::default()),
         },
-        RequestKind::Decode(tok) => match session.decode_step(tok) {
+        Request::Decode { token, .. } => match session.decode_step(token) {
             Ok((y, s)) => (Ok(y), s),
             Err(e) => (Err(e.to_string()), StageStats::default()),
         },
     };
-    let stream = job.request.stream;
+    let stream = job.stream();
     let _ = job.done.send(Completion {
         stream,
-        kind: job.request.kind.name(),
+        kind: job.request.name(),
         output,
         stats,
         queue_wait,
         exec_wall: t0.elapsed(),
     });
-    // Release the stream; any worker may now serve its next queued
-    // request (notify_all: the waiter isn't necessarily the one the
-    // submit-side notify_one woke).
-    shared.queues.lock().unwrap().busy.remove(&stream);
-    shared.cv.notify_all();
+    release_stream(shared, stream, job.tokens);
+}
+
+/// Serve one prefill through the resumable chunked driver, interleaving
+/// ready decode work at every yield point: after each `chunk`-layer
+/// step the worker serves at most one decode batch (or solo decode)
+/// from the interactive queue, so both classes make bounded progress —
+/// a decode arriving mid-prefill waits for the current *chunk*, not the
+/// whole pass. Outputs are bit-identical to the monolithic path.
+fn run_prefill_chunked(shared: &Arc<Shared>, engine: &Engine, wcfg: WorkerCfg, job: Job) {
+    let queue_wait = job.enqueued.elapsed();
+    shared.admission.record_served(job.class, queue_wait);
+    let stream = job.stream();
+    let session = stream_session(shared, engine, stream);
+    let Request::Prefill { frame, .. } = &job.request else {
+        // Decode jobs never reach this driver (the worker loop routes
+        // them to run_single / run_decode_batch).
+        unreachable!("chunked driver serves prefills only");
+    };
+    let t0 = Instant::now();
+    let mut out = Vec::new();
+    let result = (|| -> Result<StageStats, anyhow::Error> {
+        session.prefill_begin(frame)?;
+        while session.prefill_step(wcfg.prefill_chunk)? {
+            // Yield point: every engine lock is released here.
+            serve_interleaved_decodes(shared, engine, wcfg);
+        }
+        session.prefill_finish(&mut out)
+    })();
+    let (output, stats) = match result {
+        Ok(stats) => (Ok(std::mem::take(&mut out)), stats),
+        Err(e) => {
+            // A failed step already reset the session; make abort
+            // unconditional so no half-appended KV ever survives.
+            session.prefill_abort();
+            (Err(e.to_string()), StageStats::default())
+        }
+    };
+    let _ = job.done.send(Completion {
+        stream,
+        kind: job.request.name(),
+        output,
+        stats,
+        queue_wait,
+        exec_wall: t0.elapsed(),
+    });
+    release_stream(shared, stream, job.tokens);
+}
+
+/// Serve at most one round of ready decode work (a fused batch when
+/// batching is on and several are ready, else one solo decode) without
+/// waiting: called between prefill chunks, where blocking on the batch
+/// window would defeat the interleave. The prefill's own stream is in
+/// the busy set, so its queued requests are never lifted mid-pass.
+fn serve_interleaved_decodes(shared: &Arc<Shared>, engine: &Engine, wcfg: WorkerCfg) {
+    let mut jobs: Vec<Job> = Vec::new();
+    {
+        let mut q = shared.queues.lock().unwrap();
+        let cap = if wcfg.batching() { wcfg.max_batch } else { 1 };
+        while jobs.len() < cap {
+            match pop_ready_edf(&mut q.interactive, &q.busy, true) {
+                Some(j) => {
+                    q.busy.insert(j.stream());
+                    jobs.push(j);
+                }
+                None => break,
+            }
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+    if jobs.len() == 1 {
+        let job = jobs.pop().expect("one job claimed");
+        run_single(shared, engine, job);
+    } else {
+        run_decode_batch(shared, engine, &mut jobs);
+    }
 }
 
 /// Serve a group of decode jobs (distinct streams) as one fused batch;
@@ -428,12 +1044,15 @@ fn run_single(shared: &Arc<Shared>, engine: &Engine, job: Job) {
 /// extent only a dead member holds) gets its own error completion while
 /// the innocent members still complete.
 fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) {
-    let streams: Vec<usize> = jobs.iter().map(|j| j.request.stream).collect();
+    let streams: Vec<usize> = jobs.iter().map(|j| j.stream()).collect();
     let sessions: Vec<Arc<Session>> = jobs
         .iter()
-        .map(|j| stream_session(shared, engine, j.request.stream))
+        .map(|j| stream_session(shared, engine, j.stream()))
         .collect();
     let waits: Vec<Duration> = jobs.iter().map(|j| j.enqueued.elapsed()).collect();
+    for (job, wait) in jobs.iter().zip(&waits) {
+        shared.admission.record_served(job.class, *wait);
+    }
 
     // Screen out members that cannot decode yet; serve them solo for
     // their own per-stream error (or result, if a frame landed
@@ -445,11 +1064,11 @@ fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) 
             ready.push(i);
             continue;
         }
-        let RequestKind::Decode(tok) = &job.request.kind else {
+        let Request::Decode { token, .. } = &job.request else {
             unreachable!("batches hold decode requests only");
         };
         let t0 = Instant::now();
-        let (output, st) = match sessions[i].decode_step(tok) {
+        let (output, st) = match sessions[i].decode_step(token) {
             Ok((y, s)) => (Ok(y), s),
             Err(e) => (Err(e.to_string()), StageStats::default()),
         };
@@ -465,12 +1084,12 @@ fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) 
         let reqs: Vec<DecodeRequest> = ready
             .iter()
             .map(|&i| {
-                let RequestKind::Decode(tok) = &jobs[i].request.kind else {
+                let Request::Decode { token, .. } = &jobs[i].request else {
                     unreachable!("batches hold decode requests only");
                 };
                 DecodeRequest {
                     session: &sessions[i],
-                    token: tok,
+                    token,
                 }
             })
             .collect();
@@ -486,11 +1105,11 @@ fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) 
         let (output, st, wall) = match &batch_result {
             Ok(()) => (Ok(std::mem::take(&mut outs[bi])), stats[bi], exec_wall),
             Err(_) => {
-                let RequestKind::Decode(tok) = &jobs[i].request.kind else {
+                let Request::Decode { token, .. } = &jobs[i].request else {
                     unreachable!("batches hold decode requests only");
                 };
                 let solo_t0 = Instant::now();
-                match sessions[i].decode_step(tok) {
+                match sessions[i].decode_step(token) {
                     Ok((y, s)) => (Ok(y), s, exec_wall + solo_t0.elapsed()),
                     Err(e) => (
                         Err(e.to_string()),
@@ -502,7 +1121,7 @@ fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) 
         };
         let job = &jobs[i];
         let _ = job.done.send(Completion {
-            stream: job.request.stream,
+            stream: job.stream(),
             kind: "decode",
             output,
             stats: st,
@@ -514,7 +1133,7 @@ fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) 
     for (i, output, st, wall) in solo_done {
         let job = &jobs[i];
         let _ = job.done.send(Completion {
-            stream: job.request.stream,
+            stream: job.stream(),
             kind: "decode",
             output,
             stats: st,
@@ -524,7 +1143,8 @@ fn run_decode_batch(shared: &Arc<Shared>, engine: &Engine, jobs: &mut Vec<Job>) 
     }
     jobs.clear();
 
-    // Release every member stream at once.
+    // Release every member stream at once (decode jobs hold no budget
+    // tokens).
     {
         let mut q = shared.queues.lock().unwrap();
         for s in &streams {
@@ -546,10 +1166,7 @@ mod tests {
     /// Single-worker config regardless of NC_SCHED_WORKERS: these tests
     /// assert strict serial-execution properties.
     fn serial_cfg() -> SchedulerConfig {
-        SchedulerConfig {
-            workers: 1,
-            ..SchedulerConfig::default()
-        }
+        SchedulerConfig::default().with_workers(1)
     }
 
     fn spawn_tiny_cfg(cfg: SchedulerConfig) -> Scheduler {
@@ -572,24 +1189,14 @@ mod tests {
     }
 
     #[test]
-    fn processes_append_and_decode() {
+    fn processes_prefill_and_decode() {
         let s = spawn_tiny();
-        let rx = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::AppendFrame(tiny_frame()),
-            })
-            .unwrap();
+        let rx = s.submit(Request::prefill(0, tiny_frame())).unwrap();
         let c = rx.recv().unwrap();
-        assert_eq!(c.kind, "append");
+        assert_eq!(c.kind, "prefill");
         let y = c.output.unwrap();
         assert_eq!(y.len(), 8 * 64);
-        let rx = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::Decode(vec![0.1; 64]),
-            })
-            .unwrap();
+        let rx = s.submit(Request::decode(0, vec![0.1; 64])).unwrap();
         let c = rx.recv().unwrap();
         assert!(c.output.is_ok());
         assert!(c.stats.io > Duration::ZERO);
@@ -597,44 +1204,28 @@ mod tests {
     }
 
     #[test]
-    fn decode_preempts_queued_appends() {
+    fn decode_preempts_queued_prefills() {
         let s = spawn_tiny_cfg(serial_cfg());
         // Prime stream 0 so decode is legal (decode preempts *everything*,
-        // including a not-yet-started priming append, so wait for it).
-        let first = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::AppendFrame(tiny_frame()),
-            })
-            .unwrap();
+        // including a not-yet-started priming prefill, so wait for it).
+        let first = s.submit(Request::prefill(0, tiny_frame())).unwrap();
         first.recv().unwrap().output.unwrap();
-        // Queue: several appends on stream 1, then a decode on stream 0.
-        // The worker may already be chewing on the first queued append,
+        // Queue: several prefills on stream 1, then a decode on stream 0.
+        // The worker may already be chewing on the first queued prefill,
         // but the decode must jump ahead of the later ones.
-        let append_rxs: Vec<_> = (0..3)
-            .map(|_| {
-                s.submit(Request {
-                    stream: 1,
-                    kind: RequestKind::AppendFrame(tiny_frame()),
-                })
-                .unwrap()
-            })
+        let prefill_rxs: Vec<_> = (0..3)
+            .map(|_| s.submit(Request::prefill(1, tiny_frame())).unwrap())
             .collect();
-        let decode_rx = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::Decode(vec![0.05; 64]),
-            })
-            .unwrap();
+        let decode_rx = s.submit(Request::decode(0, vec![0.05; 64])).unwrap();
         let d = decode_rx.recv().unwrap();
         d.output.clone().unwrap();
-        // The decode must have waited less than the last queued append.
-        let last_append = append_rxs.last().unwrap().recv().unwrap();
+        // The decode must have waited less than the last queued prefill.
+        let last_prefill = prefill_rxs.last().unwrap().recv().unwrap();
         assert!(
-            d.queue_wait <= last_append.queue_wait,
-            "decode waited {:?}, append {:?}",
+            d.queue_wait <= last_prefill.queue_wait,
+            "decode waited {:?}, prefill {:?}",
             d.queue_wait,
-            last_append.queue_wait
+            last_prefill.queue_wait
         );
         s.shutdown();
     }
@@ -642,11 +1233,7 @@ mod tests {
     #[test]
     fn backpressure() {
         let s = Scheduler::spawn(
-            SchedulerConfig {
-                max_queue: 2,
-                workers: 1,
-                ..SchedulerConfig::default()
-            },
+            SchedulerConfig::default().with_max_queue(2).with_workers(1),
             || {
                 Engine::builder("tiny")
                     .artifacts(&artifact_dir())
@@ -658,12 +1245,11 @@ mod tests {
         let mut rxs = Vec::new();
         let mut rejected = false;
         for _ in 0..8 {
-            match s.submit(Request {
-                stream: 0,
-                kind: RequestKind::AppendFrame(tiny_frame()),
-            }) {
+            match s.submit(Request::prefill(0, tiny_frame())) {
                 Ok(rx) => rxs.push(rx),
-                Err(_) => {
+                Err(e) => {
+                    assert!(matches!(e, SubmitError::QueueFull { .. }), "got {e}");
+                    assert!(e.retry_after().is_some());
                     rejected = true;
                     break;
                 }
@@ -679,13 +1265,8 @@ mod tests {
     #[test]
     fn errors_surface_in_completion() {
         let s = spawn_tiny();
-        // Decode without prior append is an engine error, not a crash.
-        let rx = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::Decode(vec![0.0; 64]),
-            })
-            .unwrap();
+        // Decode without prior prefill is an engine error, not a crash.
+        let rx = s.submit(Request::decode(0, vec![0.0; 64])).unwrap();
         let c = rx.recv().unwrap();
         assert!(c.output.is_err());
         s.shutdown();
@@ -693,45 +1274,31 @@ mod tests {
 
     #[test]
     fn out_of_bounds_stream_rejected() {
-        let s = Scheduler::spawn(
-            SchedulerConfig {
-                max_streams: 2,
-                ..SchedulerConfig::default()
-            },
-            || {
-                Engine::builder("tiny")
-                    .artifacts(&artifact_dir())
-                    .build()
-                    .unwrap()
-            },
-        );
-        assert!(s
-            .submit(Request {
+        let s = Scheduler::spawn(SchedulerConfig::default().with_max_streams(2), || {
+            Engine::builder("tiny")
+                .artifacts(&artifact_dir())
+                .build()
+                .unwrap()
+        });
+        match s.submit(Request::prefill(2, tiny_frame())) {
+            Err(SubmitError::UnknownStream {
                 stream: 2,
-                kind: RequestKind::AppendFrame(tiny_frame()),
-            })
-            .is_err());
+                max_streams: 2,
+            }) => {}
+            other => panic!("expected UnknownStream, got {other:?}"),
+        }
         s.shutdown();
     }
 
     #[test]
     fn same_stream_requests_stay_ordered_across_workers() {
-        // Pipelined appends on ONE stream with a 4-worker pool: the
+        // Pipelined prefills on ONE stream with a 4-worker pool: the
         // per-stream in-flight guard must keep them in submission order
         // (KV state makes every output order-sensitive).
-        let s = spawn_tiny_cfg(SchedulerConfig {
-            workers: 4,
-            ..SchedulerConfig::default()
-        });
+        let s = spawn_tiny_cfg(SchedulerConfig::default().with_workers(4));
         let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
         let rxs: Vec<_> = (0..4)
-            .map(|f| {
-                s.submit(Request {
-                    stream: 0,
-                    kind: RequestKind::AppendFrame(trace.frame(f)),
-                })
-                .unwrap()
-            })
+            .map(|f| s.submit(Request::prefill(0, trace.frame(f))).unwrap())
             .collect();
         let outs: Vec<Vec<f32>> = rxs
             .into_iter()
@@ -759,13 +1326,7 @@ mod tests {
         // disconnects) — never hang.
         let s = spawn_tiny_cfg(serial_cfg());
         let rxs: Vec<_> = (0..6)
-            .map(|i| {
-                s.submit(Request {
-                    stream: i % 3,
-                    kind: RequestKind::AppendFrame(tiny_frame()),
-                })
-                .unwrap()
-            })
+            .map(|i| s.submit(Request::prefill(i % 3, tiny_frame())).unwrap())
             .collect();
         // Shut down immediately: the single worker is at most one job
         // in; the rest are still queued.
@@ -796,23 +1357,14 @@ mod tests {
         // implicit Drop after both) must neither panic nor deadlock,
         // and submits after shutdown must be clean errors.
         let s = spawn_tiny_cfg(serial_cfg());
-        let rx = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::AppendFrame(tiny_frame()),
-            })
-            .unwrap();
+        let rx = s.submit(Request::prefill(0, tiny_frame())).unwrap();
         rx.recv().unwrap().output.unwrap();
         s.shutdown();
         s.shutdown();
-        assert!(
-            s.submit(Request {
-                stream: 0,
-                kind: RequestKind::AppendFrame(tiny_frame()),
-            })
-            .is_err(),
-            "submit after shutdown must be rejected"
-        );
+        match s.submit(Request::prefill(0, tiny_frame())) {
+            Err(SubmitError::Stopping) => {}
+            other => panic!("submit after shutdown must be Stopping, got {other:?}"),
+        }
         drop(s); // third stop via Drop — still clean
     }
 
@@ -822,22 +1374,16 @@ mod tests {
         // primed streams coalesce into fused batches, and every stream's
         // output must be bit-identical to a solo single-session
         // reference.
-        let s = spawn_tiny_cfg(SchedulerConfig {
-            workers: 1,
-            batch_window: Duration::from_millis(500),
-            max_batch: 4,
-            ..SchedulerConfig::default()
-        });
+        let s = spawn_tiny_cfg(
+            SchedulerConfig::default()
+                .with_workers(1)
+                .with_batch_window(Duration::from_millis(500))
+                .with_max_batch(4),
+        );
         let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
         // Prime each stream with its own frame.
         let rxs: Vec<_> = (0..4)
-            .map(|stream| {
-                s.submit(Request {
-                    stream,
-                    kind: RequestKind::AppendFrame(trace.frame(stream)),
-                })
-                .unwrap()
-            })
+            .map(|stream| s.submit(Request::prefill(stream, trace.frame(stream))).unwrap())
             .collect();
         for rx in rxs {
             rx.recv().unwrap().output.unwrap();
@@ -847,13 +1393,7 @@ mod tests {
         let mut rounds: Vec<Vec<Vec<f32>>> = Vec::new();
         for _ in 0..2 {
             let rxs: Vec<_> = (0..4)
-                .map(|stream| {
-                    s.submit(Request {
-                        stream,
-                        kind: RequestKind::Decode(token.clone()),
-                    })
-                    .unwrap()
-                })
+                .map(|stream| s.submit(Request::decode(stream, token.clone())).unwrap())
                 .collect();
             rounds.push(
                 rxs.into_iter()
@@ -895,31 +1435,16 @@ mod tests {
         // Stream 1 decodes without a primed KV: the batch falls back to
         // solo decodes, stream 1 gets its error, stream 0 still
         // completes.
-        let s = spawn_tiny_cfg(SchedulerConfig {
-            workers: 1,
-            batch_window: Duration::from_millis(300),
-            max_batch: 4,
-            ..SchedulerConfig::default()
-        });
-        let prime = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::AppendFrame(tiny_frame()),
-            })
-            .unwrap();
+        let s = spawn_tiny_cfg(
+            SchedulerConfig::default()
+                .with_workers(1)
+                .with_batch_window(Duration::from_millis(300))
+                .with_max_batch(4),
+        );
+        let prime = s.submit(Request::prefill(0, tiny_frame())).unwrap();
         prime.recv().unwrap().output.unwrap();
-        let good = s
-            .submit(Request {
-                stream: 0,
-                kind: RequestKind::Decode(vec![0.02; 64]),
-            })
-            .unwrap();
-        let bad = s
-            .submit(Request {
-                stream: 1,
-                kind: RequestKind::Decode(vec![0.02; 64]),
-            })
-            .unwrap();
+        let good = s.submit(Request::decode(0, vec![0.02; 64])).unwrap();
+        let bad = s.submit(Request::decode(1, vec![0.02; 64])).unwrap();
         assert!(good.recv().unwrap().output.is_ok());
         assert!(bad.recv().unwrap().output.is_err());
         s.shutdown();
@@ -950,35 +1475,24 @@ mod tests {
         let engine = build();
         let fault = engine.inject_faults(0, FaultConfig::default());
         let s = Scheduler::spawn(
-            SchedulerConfig {
-                workers: 1,
-                batch_window: Duration::from_millis(300),
-                max_batch: 4,
-                ..SchedulerConfig::default()
-            },
+            SchedulerConfig::default()
+                .with_workers(1)
+                .with_batch_window(Duration::from_millis(300))
+                .with_max_batch(4),
             move || engine,
         );
         let trace = crate::workload::FrameTrace::new(64, 8, 4, 3);
         for stream in 0..3usize {
-            s.submit(Request {
-                stream,
-                kind: RequestKind::AppendFrame(trace.frame(stream)),
-            })
-            .unwrap()
-            .recv()
-            .unwrap()
-            .output
-            .unwrap();
+            s.submit(Request::prefill(stream, trace.frame(stream)))
+                .unwrap()
+                .recv()
+                .unwrap()
+                .output
+                .unwrap();
         }
         let token = vec![0.02f32; 64];
         let rxs: Vec<_> = (0..3)
-            .map(|stream| {
-                s.submit(Request {
-                    stream,
-                    kind: RequestKind::Decode(token.clone()),
-                })
-                .unwrap()
-            })
+            .map(|stream| s.submit(Request::decode(stream, token.clone())).unwrap())
             .collect();
         // Armed inside the batch window (the worker is still collecting
         // arrivals), so the whole budget lands on the fused execution.
@@ -1008,23 +1522,13 @@ mod tests {
         // 4 workers, 4 streams: per-stream outputs must match a serial
         // single-session reference exactly (stream isolation under
         // concurrency), and every request must complete.
-        let cfg = SchedulerConfig {
-            workers: 4,
-            ..SchedulerConfig::default()
-        };
-        let s = spawn_tiny_cfg(cfg);
+        let s = spawn_tiny_cfg(SchedulerConfig::default().with_workers(4));
         assert_eq!(s.workers(), 4);
         let frames: Vec<Vec<f32>> = (0..4)
             .map(|i| crate::workload::FrameTrace::new(64, 8, 8, 3).frame(i))
             .collect();
         let rxs: Vec<_> = (0..4)
-            .map(|stream| {
-                s.submit(Request {
-                    stream,
-                    kind: RequestKind::AppendFrame(frames[stream].clone()),
-                })
-                .unwrap()
-            })
+            .map(|stream| s.submit(Request::prefill(stream, frames[stream].clone())).unwrap())
             .collect();
         let outs: Vec<Vec<f32>> = rxs
             .into_iter()
@@ -1032,13 +1536,7 @@ mod tests {
             .collect();
         // Decodes on every stream, concurrently.
         let drxs: Vec<_> = (0..4)
-            .map(|stream| {
-                s.submit(Request {
-                    stream,
-                    kind: RequestKind::Decode(vec![0.02; 64]),
-                })
-                .unwrap()
-            })
+            .map(|stream| s.submit(Request::decode(stream, vec![0.02; 64])).unwrap())
             .collect();
         for rx in drxs {
             rx.recv().unwrap().output.unwrap();
@@ -1057,5 +1555,236 @@ mod tests {
             let (want, _) = session.append_frame(&frames[stream]).unwrap();
             assert_eq!(out, &want, "stream {stream} diverged under concurrency");
         }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_monolithic() {
+        // The tentpole invariant: the resumable chunked driver (any
+        // chunk size) produces outputs and downstream decode state
+        // bit-identical to the monolithic path.
+        let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
+        let token = vec![0.03f32; 64];
+        let run = |chunk: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let s = spawn_tiny_cfg(serial_cfg().with_prefill_chunk(chunk));
+            let a = s
+                .submit(Request::prefill(0, trace.frame(0)))
+                .unwrap()
+                .recv()
+                .unwrap()
+                .output
+                .unwrap();
+            let b = s
+                .submit(Request::prefill(0, trace.frame(1)))
+                .unwrap()
+                .recv()
+                .unwrap()
+                .output
+                .unwrap();
+            let d = s
+                .submit(Request::decode(0, token.clone()))
+                .unwrap()
+                .recv()
+                .unwrap()
+                .output
+                .unwrap();
+            s.shutdown();
+            (a, b, d)
+        };
+        let mono = run(0);
+        for chunk in [1usize, 2, 3] {
+            let chunked = run(chunk);
+            assert_eq!(mono.0, chunked.0, "chunk {chunk}: first prefill diverged");
+            assert_eq!(mono.1, chunked.1, "chunk {chunk}: second prefill diverged");
+            assert_eq!(mono.2, chunked.2, "chunk {chunk}: decode after chunked prefill diverged");
+        }
+    }
+
+    #[test]
+    fn decode_interleaves_into_chunked_prefill() {
+        // One worker, chunk 1: a decode submitted while a long prefill
+        // runs must complete *before* the prefill does (served at a
+        // yield point), with output bit-identical to solo.
+        let s = spawn_tiny_cfg(serial_cfg().with_prefill_chunk(1));
+        let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
+        // Prime stream 0, then occupy the worker with prefills on
+        // stream 1 while decoding stream 0.
+        s.submit(Request::prefill(0, trace.frame(0)))
+            .unwrap()
+            .recv()
+            .unwrap()
+            .output
+            .unwrap();
+        let prefill_rxs: Vec<_> = (0..4)
+            .map(|_| s.submit(Request::prefill(1, trace.frame(1))).unwrap())
+            .collect();
+        let token = vec![0.05f32; 64];
+        let d = s
+            .submit(Request::decode(0, token.clone()))
+            .unwrap()
+            .recv()
+            .unwrap();
+        let y = d.output.unwrap();
+        for rx in prefill_rxs {
+            rx.recv().unwrap().output.unwrap();
+        }
+        // The interleave path actually ran (yield points were taken).
+        let yields = s.engine().metrics().bytes("prefill.yields");
+        assert!(yields > 0, "expected chunked-prefill yields, got {yields}");
+        s.shutdown();
+        let reference = Engine::builder("tiny")
+            .policy(Policy::TopK)
+            .sparsity(0.3)
+            .artifacts(&artifact_dir())
+            .build()
+            .unwrap();
+        let session = reference.new_session();
+        session.append_frame(&trace.frame(0)).unwrap();
+        let (want, _) = session.decode_step(&token).unwrap();
+        assert_eq!(y, want, "interleaved decode diverged from solo reference");
+    }
+
+    #[test]
+    fn slo_sheds_and_recovers() {
+        // Tight SLO + slow queue: once the bulk queue's oldest request
+        // is older than the SLO, further prefill submits shed with a
+        // typed, retryable error — and admission recovers after drain.
+        let s = spawn_tiny_cfg(
+            serial_cfg()
+                .with_slo(Some(Duration::from_millis(1)))
+                .with_batch_window(Duration::ZERO),
+        );
+        let mut rxs = Vec::new();
+        let mut shed = None;
+        for i in 0..64 {
+            match s.submit(Request::prefill(2 + (i % 8), tiny_frame())) {
+                Ok(rx) => rxs.push(rx),
+                Err(e) => {
+                    shed = Some(e);
+                    break;
+                }
+            }
+            // Give the queue time to age past the 1ms SLO.
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let shed = shed.expect("prefill flood must eventually shed");
+        assert!(shed.is_shed(), "expected a 429-class shed, got {shed}");
+        assert!(shed.retry_after().is_some());
+        assert!(s.admission().bulk.shed >= 1);
+        // Drain, then admission must recover.
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        let rx = s
+            .submit(Request::prefill(1, tiny_frame()))
+            .expect("admission recovers after drain");
+        rx.recv().unwrap().output.unwrap();
+        s.shutdown();
+    }
+
+    #[test]
+    fn prefill_budget_sheds_per_stream() {
+        // Budget of one frame's tokens: a second queued prefill on the
+        // same stream sheds, while another stream still admits.
+        let s = spawn_tiny_cfg(serial_cfg().with_prefill_budget(8));
+        // Occupy the worker so queued jobs stay queued.
+        let block = s.submit(Request::prefill(0, tiny_frame())).unwrap();
+        let queued = s.submit(Request::prefill(1, tiny_frame())).unwrap();
+        let second = s.submit(Request::prefill(1, tiny_frame()));
+        match second {
+            Err(SubmitError::BudgetExhausted {
+                stream: 1,
+                queued_tokens: 8,
+                budget: 8,
+                ..
+            }) => {}
+            other => panic!("expected BudgetExhausted for stream 1, got {other:?}"),
+        }
+        // A different stream is not affected by stream 1's budget.
+        let other = s.submit(Request::prefill(2, tiny_frame())).unwrap();
+        for rx in [block, queued, other] {
+            rx.recv().unwrap().output.unwrap();
+        }
+        // Budget released after completion: stream 1 admits again.
+        let rx = s.submit(Request::prefill(1, tiny_frame())).unwrap();
+        rx.recv().unwrap().output.unwrap();
+        assert!(s.admission().bulk.shed >= 1);
+        s.shutdown();
+    }
+
+    #[test]
+    fn deadline_orders_interactive_queue() {
+        // Two decodes queued behind a busy worker: the one with the
+        // tighter deadline runs first even though it was submitted
+        // second (EDF), so it waits less.
+        let s = spawn_tiny_cfg(serial_cfg().with_prefill_chunk(0));
+        let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
+        for stream in 0..2 {
+            s.submit(Request::prefill(stream, trace.frame(stream)))
+                .unwrap()
+                .recv()
+                .unwrap()
+                .output
+                .unwrap();
+        }
+        // Occupy the single worker with a monolithic prefill.
+        let block = s.submit(Request::prefill(2, trace.frame(2))).unwrap();
+        let relaxed = s
+            .submit(
+                Request::decode(0, vec![0.02; 64]).with_opts(RequestOpts {
+                    deadline: Some(Duration::from_millis(400)),
+                    ..RequestOpts::default()
+                }),
+            )
+            .unwrap();
+        let urgent = s
+            .submit(
+                Request::decode(1, vec![0.02; 64]).with_opts(RequestOpts {
+                    deadline: Some(Duration::from_millis(1)),
+                    ..RequestOpts::default()
+                }),
+            )
+            .unwrap();
+        let relaxed = relaxed.recv().unwrap();
+        let urgent = urgent.recv().unwrap();
+        block.recv().unwrap().output.unwrap();
+        relaxed.output.unwrap();
+        urgent.output.unwrap();
+        assert!(
+            urgent.queue_wait < relaxed.queue_wait,
+            "urgent decode waited {:?}, relaxed {:?}",
+            urgent.queue_wait,
+            relaxed.queue_wait
+        );
+        s.shutdown();
+    }
+
+    #[test]
+    fn class_override_promotes_prefill() {
+        // A prefill marked interactive jumps the bulk queue: behind a
+        // busy worker, it runs before bulk prefills submitted earlier.
+        let s = spawn_tiny_cfg(serial_cfg());
+        let trace = crate::workload::FrameTrace::new(64, 8, 8, 3);
+        let block = s.submit(Request::prefill(0, trace.frame(0))).unwrap();
+        let bulk = s.submit(Request::prefill(1, trace.frame(1))).unwrap();
+        let promoted = s
+            .submit(
+                Request::prefill(2, trace.frame(2)).with_opts(RequestOpts {
+                    class: Some(Class::Interactive),
+                    ..RequestOpts::default()
+                }),
+            )
+            .unwrap();
+        let bulk = bulk.recv().unwrap();
+        let promoted = promoted.recv().unwrap();
+        block.recv().unwrap().output.unwrap();
+        bulk.output.unwrap();
+        promoted.output.unwrap();
+        assert!(
+            promoted.queue_wait < bulk.queue_wait,
+            "promoted prefill waited {:?}, bulk {:?}",
+            promoted.queue_wait,
+            bulk.queue_wait
+        );
+        s.shutdown();
     }
 }

@@ -72,6 +72,17 @@ fn main() {
                  \x20                              port 0 picks a free port\n\
                  \x20               [--addr-file PATH] write the bound address to PATH\n\
                  \x20               [--workers N]  scheduler worker threads (network mode)\n\
+                 \x20               [--slo-ms MS]  queue-delay SLO: shed requests (HTTP 429\n\
+                 \x20                              + retry_after_ms) once their class's\n\
+                 \x20                              queue delay exceeds MS ms (0 = off;\n\
+                 \x20                              default $NC_SLO_MS or off)\n\
+                 \x20               [--prefill-budget T] per-stream cap on queued prefill\n\
+                 \x20                              tokens; excess prefills shed with 429\n\
+                 \x20                              (0 = unlimited)\n\
+                 \x20               [--prefill-chunk L] layers per chunked-prefill step;\n\
+                 \x20                              decode batches interleave at chunk\n\
+                 \x20                              boundaries (default 1; 0 = monolithic,\n\
+                 \x20                              outputs bit-identical either way)\n\
                  \x20               [--max-connections N] connection bound (default 64)\n\
                  \x20               [--max-body-kb N] request-body cap (default 8192)\n\
                  \x20               [--duration S] network mode: stop serving after S\n\
@@ -316,22 +327,19 @@ fn serve_network(
     device: &str,
     sparsity: f64,
 ) -> Result<i32, ArgError> {
-    use neuron_chunking::coordinator::{Scheduler, SchedulerConfig};
+    use neuron_chunking::coordinator::Scheduler;
+    use neuron_chunking::serving::args::scheduler_config;
     use neuron_chunking::serving::{Server, ServerConfig};
     use std::sync::atomic::Ordering;
 
     let listen: String = p.require("--listen")?;
     let addr_file = p.raw("--addr-file")?.map(str::to_string);
     let duration_s: Option<f64> = p.parsed("--duration")?;
-    let window_us: u64 = p.parsed_or("--batch-window", 0u64)?;
-    let defaults = SchedulerConfig::default();
-    let sched_cfg = SchedulerConfig {
-        // In network mode `--streams` is the stream *capacity*.
-        max_streams: p.parsed_or("--streams", defaults.max_streams)?.max(1),
-        workers: p.parsed_or("--workers", defaults.workers)?.max(1),
-        batch_window: std::time::Duration::from_micros(window_us),
-        ..defaults
-    };
+    // Shared scheduler flag set (also documented by `redline`):
+    // --workers / --batch-window / --streams (capacity) / --slo-ms /
+    // --prefill-budget / --prefill-chunk, on top of NC_* env defaults.
+    let sched_cfg = scheduler_config(p)?;
+    let window_us = sched_cfg.batch_window.as_micros() as u64;
     let server_cfg = ServerConfig {
         listen,
         max_connections: p.parsed_or("--max-connections", 64usize)?.max(1),
@@ -398,7 +406,7 @@ fn serve_network(
 /// into shared-read batches. Reports throughput, achieved batch
 /// occupancy, and the fused-I/O dedup ratio.
 fn serve_batched(engine: Engine, streams: usize, window_us: u64, decode_steps: usize) -> i32 {
-    use neuron_chunking::coordinator::{Request, RequestKind, Scheduler, SchedulerConfig};
+    use neuron_chunking::coordinator::{Request, Scheduler, SchedulerConfig};
     let spec = engine.spec();
     println!(
         "batched serving: {streams} streams, window {window_us}us, {} decode rounds",
@@ -416,12 +424,7 @@ fn serve_batched(engine: Engine, streams: usize, window_us: u64, decode_steps: u
     // Prime every stream with its own frame.
     let rxs: Vec<_> = (0..streams)
         .map(|st| {
-            sched
-                .submit(Request {
-                    stream: st,
-                    kind: RequestKind::AppendFrame(trace.frame(st)),
-                })
-                .unwrap()
+            sched.submit(Request::prefill(st, trace.frame(st))).unwrap()
         })
         .collect();
     for rx in rxs {
@@ -436,12 +439,7 @@ fn serve_batched(engine: Engine, streams: usize, window_us: u64, decode_steps: u
     for _ in 0..rounds {
         let rxs: Vec<_> = (0..streams)
             .map(|st| {
-                sched
-                    .submit(Request {
-                        stream: st,
-                        kind: RequestKind::Decode(token.clone()),
-                    })
-                    .unwrap()
+                sched.submit(Request::decode(st, token.clone())).unwrap()
             })
             .collect();
         for rx in rxs {

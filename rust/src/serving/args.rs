@@ -7,6 +7,9 @@
 //! message and exit code 2, never a panic and never a silent default.
 
 use std::str::FromStr;
+use std::time::Duration;
+
+use crate::coordinator::SchedulerConfig;
 
 /// A flag-parsing failure: which flag, and why.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -85,9 +88,17 @@ impl<'a> ArgParser<'a> {
     }
 }
 
+/// Largest per-cycle count either side of a `--mix` ratio accepts. The
+/// loadgen cycles through `p + d` request slots; capping both sides
+/// keeps that sum (and every derived `seq % cycle`) far from overflow
+/// while allowing any ratio a human would type.
+pub const MAX_MIX: usize = 1_000_000;
+
 /// Parse a `P:D` stream-mix ratio (prefills per cycle, decodes per
 /// cycle), e.g. `1:8` = one vision prefill per eight decode requests.
-/// `0:1` disables ongoing prefills entirely.
+/// `0:1` disables ongoing prefills entirely. Malformed ratios —
+/// non-numeric or negative counts, `0:0`, counts past [`MAX_MIX`] — are
+/// usage errors, never a degenerate run.
 pub fn parse_mix(s: &str) -> Result<(usize, usize), ArgError> {
     let err = |reason: &str| ArgError {
         flag: "--mix".to_string(),
@@ -96,10 +107,60 @@ pub fn parse_mix(s: &str) -> Result<(usize, usize), ArgError> {
     let (p, d) = s.split_once(':').ok_or_else(|| err("missing ':'"))?;
     let p: usize = p.parse().map_err(|_| err("bad prefill count"))?;
     let d: usize = d.parse().map_err(|_| err("bad decode count"))?;
-    if p + d == 0 {
+    if p == 0 && d == 0 {
         return Err(err("mix cannot be 0:0"));
     }
+    if p > MAX_MIX || d > MAX_MIX {
+        return Err(err("mix counts must be at most 1000000"));
+    }
     Ok((p, d))
+}
+
+/// `--slo-ms` as both binaries read it: absent or `0` disables the SLO
+/// (`None`); anything else is the queue-delay target.
+pub fn slo_from_args(p: &ArgParser) -> Result<Option<Duration>, ArgError> {
+    Ok(p.parsed::<u64>("--slo-ms")?
+        .filter(|&ms| ms > 0)
+        .map(Duration::from_millis))
+}
+
+/// The scheduler flags shared by `repro serve` and `redline`'s docs:
+/// one parsing path on top of [`SchedulerConfig::from_env`], so the
+/// binaries (and the `NC_*` environment) can't drift. Flags override
+/// the environment; absent flags keep the env-derived values.
+pub fn scheduler_config(p: &ArgParser) -> Result<SchedulerConfig, ArgError> {
+    let mut cfg = SchedulerConfig::default(); // = from_env()
+    if let Some(n) = p.parsed::<usize>("--workers")? {
+        if n == 0 {
+            return Err(ArgError {
+                flag: "--workers".to_string(),
+                reason: "must be at least 1".to_string(),
+            });
+        }
+        cfg = cfg.with_workers(n);
+    }
+    if let Some(us) = p.parsed::<u64>("--batch-window")? {
+        cfg = cfg.with_batch_window(Duration::from_micros(us));
+    }
+    if let Some(n) = p.parsed::<usize>("--streams")? {
+        if n == 0 {
+            return Err(ArgError {
+                flag: "--streams".to_string(),
+                reason: "must be at least 1".to_string(),
+            });
+        }
+        cfg = cfg.with_max_streams(n);
+    }
+    if p.raw("--slo-ms")?.is_some() {
+        cfg = cfg.with_slo(slo_from_args(p)?);
+    }
+    if let Some(tokens) = p.parsed::<usize>("--prefill-budget")? {
+        cfg = cfg.with_prefill_budget(tokens);
+    }
+    if let Some(layers) = p.parsed::<usize>("--prefill-chunk")? {
+        cfg = cfg.with_prefill_chunk(layers);
+    }
+    Ok(cfg)
 }
 
 #[cfg(test)]
@@ -168,8 +229,68 @@ mod tests {
     fn mix_parses_and_rejects() {
         assert_eq!(parse_mix("1:8").unwrap(), (1, 8));
         assert_eq!(parse_mix("0:1").unwrap(), (0, 1));
-        for bad in ["", "1", "x:2", "1:y", "0:0", "1:2:3"] {
+        assert_eq!(parse_mix("1000000:1").unwrap(), (1_000_000, 1));
+        for bad in ["", "1", "x:2", "1:y", "0:0", "1:2:3", "-1:8", "1:-8", "1.5:8"] {
             assert!(parse_mix(bad).is_err(), "{bad:?} should not parse");
         }
+    }
+
+    #[test]
+    fn mix_rejects_overflow_ratios() {
+        // Counts past the cap used to survive into `p + d` arithmetic
+        // downstream; now they are usage errors up front.
+        let max = usize::MAX.to_string();
+        for bad in [
+            format!("{max}:{max}"),
+            format!("{max}:1"),
+            format!("1:{max}"),
+            "1000001:1".to_string(),
+        ] {
+            let e = parse_mix(&bad).unwrap_err();
+            assert_eq!(e.flag, "--mix");
+            assert!(e.reason.contains("at most"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn scheduler_flags_override_env_defaults() {
+        let args = argv(&[
+            "--workers", "3",
+            "--batch-window", "150",
+            "--streams", "9",
+            "--slo-ms", "40",
+            "--prefill-budget", "64",
+            "--prefill-chunk", "2",
+        ]);
+        let cfg = scheduler_config(&ArgParser::new(&args)).unwrap();
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.batch_window, Duration::from_micros(150));
+        assert_eq!(cfg.max_streams, 9);
+        assert_eq!(cfg.slo, Some(Duration::from_millis(40)));
+        assert_eq!(cfg.prefill_budget, 64);
+        assert_eq!(cfg.prefill_chunk, 2);
+    }
+
+    #[test]
+    fn scheduler_flags_validate() {
+        for (toks, flag) in [
+            (vec!["--workers", "0"], "--workers"),
+            (vec!["--streams", "0"], "--streams"),
+            (vec!["--batch-window", "x"], "--batch-window"),
+            (vec!["--slo-ms", "-5"], "--slo-ms"),
+        ] {
+            let args = argv(&toks);
+            let e = scheduler_config(&ArgParser::new(&args)).unwrap_err();
+            assert_eq!(e.flag, flag, "{toks:?}");
+        }
+    }
+
+    #[test]
+    fn explicit_zero_slo_disables_shedding() {
+        let args = argv(&["--slo-ms", "0"]);
+        let p = ArgParser::new(&args);
+        assert_eq!(slo_from_args(&p).unwrap(), None);
+        let cfg = scheduler_config(&p).unwrap();
+        assert_eq!(cfg.slo, None);
     }
 }

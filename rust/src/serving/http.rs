@@ -233,6 +233,7 @@ pub fn reason_phrase(status: u16) -> &'static str {
         411 => "Length Required",
         413 => "Payload Too Large",
         422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
@@ -337,6 +338,13 @@ mod tests {
         assert!(!r.keep_alive());
         let r = req("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
         assert!(!r.keep_alive(), "1.0 defaults to close");
+    }
+
+    #[test]
+    fn shed_status_has_a_reason_phrase() {
+        // 429 carries admission sheds (retryable); it must not fall into
+        // the generic "Response" bucket on the wire.
+        assert_eq!(reason_phrase(429), "Too Many Requests");
     }
 
     #[test]

@@ -111,15 +111,36 @@ impl Client {
         Ok(reply_from(&v))
     }
 
-    /// `POST /v1/streams/{id}/decode` for `steps` tokens.
-    pub fn decode(&mut self, stream: usize, token: &[f32], steps: usize) -> Result<Reply, String> {
+    /// `POST /v1/streams/{id}/decode` for `steps` tokens. A deadline
+    /// (milliseconds) rides the typed request API: it orders the
+    /// server's interactive queue, earliest first.
+    pub fn decode(
+        &mut self,
+        stream: usize,
+        token: &[f32],
+        steps: usize,
+        deadline_ms: Option<u64>,
+    ) -> Result<Reply, String> {
         let mut body = String::with_capacity(token.len() * 8 + 32);
         body.push_str("{\"token\":");
         json::push_f32_array(&mut body, token);
-        body.push_str(&format!(",\"steps\":{steps}}}"));
+        body.push_str(&format!(",\"steps\":{steps}"));
+        if let Some(ms) = deadline_ms {
+            body.push_str(&format!(",\"deadline_ms\":{ms}"));
+        }
+        body.push('}');
         let v = self.request("POST", &format!("/v1/streams/{stream}/decode"), &body)?;
         Ok(reply_from(&v))
     }
+}
+
+/// Whether a [`Client::request`] error is an admission shed (HTTP 429:
+/// the server is protecting its SLO). Sheds are expected under
+/// overload — callers count them separately from transport/server
+/// errors and keep the connection (the server answered; nothing is
+/// wedged).
+pub fn is_shed(err: &str) -> bool {
+    err.contains("HTTP 429")
 }
 
 fn reply_from(v: &Json) -> Reply {

@@ -15,7 +15,7 @@ use crate::serving::json::Json;
 
 /// Identity fields forming the match key — keep in sync with
 /// `ID_FIELDS` in `scripts/bench_gate.rs`.
-pub const ID_FIELDS: [&str; 11] = [
+pub const ID_FIELDS: [&str; 12] = [
     "mode",
     "policy",
     "prefetch",
@@ -27,6 +27,7 @@ pub const ID_FIELDS: [&str; 11] = [
     "queue_depth",
     "rps",
     "mix",
+    "slo",
 ];
 
 /// Metrics compared, with direction: `true` = higher is better.
@@ -308,6 +309,6 @@ mod tests {
              \"mix\":\"1:8\",\"op\":\"decode\",\"tokens_per_s\":1}",
         )
         .unwrap();
-        assert_eq!(entry_key(&e), "served|topk|||4||decode|||20|1:8");
+        assert_eq!(entry_key(&e), "served|topk|||4||decode|||20|1:8|");
     }
 }

@@ -34,6 +34,10 @@ pub struct RunConfig {
     pub mix: (usize, usize),
     /// Decode steps per decode request.
     pub steps: usize,
+    /// Per-decode queue-delay deadline (ms) stamped into requests via
+    /// the typed API; also the run's `"slo"` identity. `None` sends no
+    /// deadline (server defaults apply).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -47,6 +51,7 @@ impl Default for RunConfig {
             connections: 4,
             mix: (1, 8),
             steps: 4,
+            deadline_ms: None,
         }
     }
 }
@@ -56,6 +61,10 @@ impl Default for RunConfig {
 pub struct OpStats {
     pub requests: u64,
     pub errors: u64,
+    /// Requests the server shed at admission (HTTP 429 — SLO or budget
+    /// backpressure). Expected under deliberate overload, so counted
+    /// apart from `errors` and excluded from the latency histogram.
+    pub shed: u64,
     /// Tokens produced (decode steps, or frame tokens for prefill).
     pub tokens: u64,
     /// Client-observed latency from intended-send time.
@@ -196,9 +205,13 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
         return Err("--streams/--connections/--steps must be ≥ 1".to_string());
     }
     let (mix_p, mix_d) = cfg.mix;
-    if mix_p + mix_d == 0 {
-        return Err("--mix cannot be 0:0".to_string());
-    }
+    // `parse_mix` enforces this for the CLI; re-checked here (overflow-
+    // safe) because `RunConfig` is also a library API.
+    let cycle = match mix_p.checked_add(mix_d) {
+        Some(c) if c > 0 => c,
+        Some(_) => return Err("--mix cannot be 0:0".to_string()),
+        None => return Err("--mix counts overflow".to_string()),
+    };
 
     // Probe identity + model shape, open and prime the streams.
     let mut probe = Client::connect(&cfg.addr)?;
@@ -235,12 +248,15 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
             let frame = frame.clone();
             let token = token.clone();
             let steps = cfg.steps;
+            let deadline_ms = cfg.deadline_ms;
             std::thread::spawn(move || {
                 let mut client = Client::connect(&addr).ok();
                 while let Some(item) = queue.pop() {
                     let res = match (client.as_mut(), item.op) {
                         (None, _) => Err("no connection".to_string()),
-                        (Some(c), Op::Decode) => c.decode(item.stream, &token, steps),
+                        (Some(c), Op::Decode) => {
+                            c.decode(item.stream, &token, steps, deadline_ms)
+                        }
                         (Some(c), Op::Prefill) => c.append(item.stream, &frame),
                     };
                     let latency = Instant::now().saturating_duration_since(item.intended);
@@ -266,6 +282,12 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
                                 Op::Prefill => tpf as u64,
                             };
                         }
+                        // Admission sheds (429) are backpressure doing
+                        // its job: counted apart from errors, and the
+                        // connection stays (the server answered).
+                        Err(e) if super::client::is_shed(&e) => {
+                            op_stats.shed += 1;
+                        }
                         Err(_) => {
                             op_stats.errors += 1;
                             drop(guard);
@@ -282,7 +304,6 @@ pub fn run(cfg: &RunConfig) -> Result<RunReport, String> {
     // The pacer: turn RPS into intended-send times and enqueue.
     let start = Instant::now();
     let deadline = start + cfg.duration;
-    let cycle = mix_p + mix_d;
     let mut bucket = TokenBucket::new(cfg.rps, cfg.burst, start);
     let mut seq = 0usize;
     loop {
@@ -345,6 +366,9 @@ fn ident_pairs(cfg: &RunConfig, server_cfg: &Json) -> Vec<(String, String)> {
     json::push_f64(&mut rps, cfg.rps);
     pairs.push(("rps".into(), rps));
     pairs.push(("mix".into(), format!("\"{}:{}\"", cfg.mix.0, cfg.mix.1)));
+    // SLO identity: runs with different deadlines are different
+    // experiments; 0 = no deadline stamped.
+    pairs.push(("slo".into(), cfg.deadline_ms.unwrap_or(0).to_string()));
     pairs
 }
 
@@ -359,11 +383,13 @@ fn entry_json(ident: &[(String, String)], op: &str, s: &OpStats, wall: Duration)
     json::push_f64(&mut tps, s.tokens_per_s(wall));
     let _ = write!(
         b,
-        "\"op\":\"{op}\",\"requests\":{},\"errors\":{},\"tokens\":{},\"tokens_per_s\":{tps},\
+        "\"op\":\"{op}\",\"requests\":{},\"errors\":{},\"shed\":{},\"tokens\":{},\
+         \"tokens_per_s\":{tps},\
          \"p50_us\":{},\"p90_us\":{},\"p99_us\":{},\"p999_us\":{},\"max_us\":{},\
          \"mean_us\":{:.1},\"server_us\":{},\"server_queue_us\":{}}}",
         s.requests,
         s.errors,
+        s.shed,
         s.tokens,
         s.hist.percentile(0.50),
         s.hist.percentile(0.90),
@@ -457,8 +483,8 @@ impl RunReport {
         );
         let _ = writeln!(
             out,
-            "{:<8} {:>7} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
-            "op", "reqs", "errs", "tok/s", "p50", "p90", "p99", "p999", "max"
+            "{:<8} {:>7} {:>6} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            "op", "reqs", "errs", "shed", "tok/s", "p50", "p90", "p99", "p999", "max"
         );
         for (op, s) in [("decode", &self.decode), ("append", &self.append)] {
             if s.requests == 0 {
@@ -466,10 +492,11 @@ impl RunReport {
             }
             let _ = writeln!(
                 out,
-                "{:<8} {:>7} {:>6} {:>9.1} {:>9} {:>9} {:>9} {:>9} {:>9}",
+                "{:<8} {:>7} {:>6} {:>6} {:>9.1} {:>9} {:>9} {:>9} {:>9} {:>9}",
                 op,
                 s.requests,
                 s.errors,
+                s.shed,
                 s.tokens_per_s(self.wall),
                 fmt_us(s.hist.percentile(0.50)),
                 fmt_us(s.hist.percentile(0.90)),
@@ -529,6 +556,7 @@ mod tests {
         assert_eq!(v.get("tokens_per_s").and_then(Json::as_f64), Some(200.0));
         assert!(v.get("p99_us").and_then(Json::as_f64).unwrap() > 0.0);
         assert!(v.get("p999_us").is_some());
+        assert_eq!(v.get("shed").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

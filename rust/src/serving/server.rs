@@ -12,6 +12,16 @@
 //! | `POST /v1/streams/{id}/append`  | vision prefill: `{"frame":[f32;T*d]}`     |
 //! | `POST /v1/streams/{id}/decode`  | `{"token":[f32;d],"steps":N,"echo":bool}` |
 //!
+//! Every stream-operation body additionally accepts the scheduling
+//! fields of the typed request API: `"class"` (`"interactive"` /
+//! `"bulk"`, overriding the per-op default) and `"deadline_ms"` (orders
+//! the interactive queue, earliest first). Bodies are decoded once into
+//! a typed [`ApiRequest`] and dispatched through one table
+//! ([`STREAM_OPS`]); validation failures are `400`s that name the
+//! offending field in a `"field"` key. Admission sheds (queue delay
+//! past the SLO, per-stream prefill budget) are `429`s carrying a
+//! `retry_after_ms` hint; hard capacity and shutdown stay `503`.
+//!
 //! Append/decode responses carry per-request latency (execution wall +
 //! queue wait, per decode step), the request's [`StageStats`] breakdown,
 //! and a snapshot of the engine's global `io.*` / `batch.*` counters, so
@@ -39,7 +49,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Completion, Request, RequestKind, Scheduler, StageStats};
+use crate::coordinator::{
+    Class, Completion, Request, RequestOpts, Scheduler, StageStats, SubmitError,
+};
 use crate::model::ModelSpec;
 use crate::serving::http::{self, HttpError, HttpRequest};
 use crate::serving::json::{self, Json};
@@ -313,10 +325,159 @@ fn route(inner: &Arc<ServerInner>, req: &HttpRequest) -> Response {
     }
 }
 
-fn stream_route(inner: &Arc<ServerInner>, req: &HttpRequest, stream: usize, op: &str) -> Response {
-    if !matches!(op, "append" | "decode") {
-        return Response::error(404, "unknown route");
+/// A stream operation, decoded and validated: the typed request API
+/// between the wire and the scheduler. [`ApiRequest::parse`] is the
+/// single decode step for every `/v1/streams/{id}/{op}` body — there is
+/// no per-op parsing path to drift.
+enum ApiRequest {
+    /// Wire op `append` (name kept for compatibility): a vision prefill.
+    Prefill {
+        frame: Vec<f32>,
+        echo: bool,
+        opts: RequestOpts,
+    },
+    Decode {
+        token: Vec<f32>,
+        steps: usize,
+        echo: bool,
+        opts: RequestOpts,
+    },
+}
+
+/// A request-body validation failure naming the field at fault; the 400
+/// body carries it as a `"field"` key so clients can react
+/// programmatically.
+struct FieldError {
+    field: &'static str,
+    detail: String,
+}
+
+impl FieldError {
+    fn new(field: &'static str, detail: impl Into<String>) -> Self {
+        FieldError {
+            field,
+            detail: detail.into(),
+        }
     }
+
+    fn response(&self) -> Response {
+        let mut b = String::from("{\"error\":");
+        json::push_str_escaped(&mut b, &format!("field {:?}: {}", self.field, self.detail));
+        b.push_str(",\"field\":");
+        json::push_str_escaped(&mut b, self.field);
+        b.push('}');
+        Response::json(400, b)
+    }
+}
+
+/// Scheduling fields shared by every stream operation.
+fn parse_opts(body: &Json) -> Result<RequestOpts, FieldError> {
+    let class = match body.get("class") {
+        None => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| FieldError::new("class", "must be a string"))?;
+            Some(
+                s.parse::<Class>()
+                    .map_err(|e| FieldError::new("class", e))?,
+            )
+        }
+    };
+    let deadline = match body.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v
+                .as_usize()
+                .filter(|&ms| ms >= 1)
+                .ok_or_else(|| {
+                    FieldError::new("deadline_ms", "must be a positive integer (milliseconds)")
+                })?;
+            Some(Duration::from_millis(ms as u64))
+        }
+    };
+    Ok(RequestOpts { class, deadline })
+}
+
+impl ApiRequest {
+    fn parse(op: &str, body: &Json, spec: &ModelSpec) -> Result<ApiRequest, FieldError> {
+        // Shared fields first, so e.g. a bad "class" is reported even
+        // alongside a bad payload.
+        let echo = match body.get("echo") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| FieldError::new("echo", "must be a boolean"))?,
+        };
+        let opts = parse_opts(body)?;
+        match op {
+            "append" => {
+                let want = spec.tokens_per_frame * spec.d;
+                let frame = body
+                    .get("frame")
+                    .and_then(Json::as_f32s)
+                    .ok_or_else(|| {
+                        FieldError::new(
+                            "frame",
+                            format!("required: [f32; tokens_per_frame * d] = [f32; {want}]"),
+                        )
+                    })?;
+                if frame.len() != want {
+                    return Err(FieldError::new(
+                        "frame",
+                        format!("has {} values, model wants {want}", frame.len()),
+                    ));
+                }
+                Ok(ApiRequest::Prefill { frame, echo, opts })
+            }
+            "decode" => {
+                let steps = match body.get("steps") {
+                    None => 1,
+                    Some(v) => v
+                        .as_usize()
+                        .filter(|n| (1..=MAX_STEPS_PER_REQUEST).contains(n))
+                        .ok_or_else(|| {
+                            FieldError::new(
+                                "steps",
+                                format!("must be an integer in 1..={MAX_STEPS_PER_REQUEST}"),
+                            )
+                        })?,
+                };
+                let token = body
+                    .get("token")
+                    .and_then(Json::as_f32s)
+                    .ok_or_else(|| {
+                        FieldError::new("token", format!("required: [f32; d] = [f32; {}]", spec.d))
+                    })?;
+                if token.len() != spec.d {
+                    return Err(FieldError::new(
+                        "token",
+                        format!("has {} values, model wants {}", token.len(), spec.d),
+                    ));
+                }
+                Ok(ApiRequest::Decode {
+                    token,
+                    steps,
+                    echo,
+                    opts,
+                })
+            }
+            other => Err(FieldError::new("op", format!("unknown operation {other:?}"))),
+        }
+    }
+}
+
+type OpHandler = fn(&Arc<ServerInner>, usize, ApiRequest) -> Response;
+
+/// The single dispatch table for stream operations: wire op name →
+/// handler. `append` keeps its wire name; internally it is the prefill
+/// path of the typed API.
+const STREAM_OPS: &[(&str, OpHandler)] = &[("append", op_prefill), ("decode", op_decode)];
+
+fn stream_route(inner: &Arc<ServerInner>, req: &HttpRequest, stream: usize, op: &str) -> Response {
+    let Some(&(_, handler)) = STREAM_OPS.iter().find(|(name, _)| *name == op) else {
+        return Response::error(404, "unknown route");
+    };
     if req.method != "POST" {
         return Response::error(405, "method not allowed");
     }
@@ -328,10 +489,9 @@ fn stream_route(inner: &Arc<ServerInner>, req: &HttpRequest, stream: usize, op: 
         Ok(Err(e)) => return Response::error(400, &format!("bad JSON body: {e}")),
         Err(_) => return Response::error(400, "body is not valid UTF-8"),
     };
-    if op == "append" {
-        handle_append(inner, stream, &body)
-    } else {
-        handle_decode(inner, stream, &body)
+    match ApiRequest::parse(op, &body, &inner.spec) {
+        Ok(api) => handler(inner, stream, api),
+        Err(e) => e.response(),
     }
 }
 
@@ -354,35 +514,42 @@ fn open_stream(inner: &Arc<ServerInner>) -> Response {
     )
 }
 
+/// Typed admission errors → HTTP: SLO/budget sheds are `429` with a
+/// `retry_after_ms` hint (transient — the client backs off and
+/// retries); capacity and shutdown are `503`, a bad stream index `404`.
+fn submit_error_response(e: &SubmitError) -> Response {
+    use std::fmt::Write as _;
+    let status = if e.is_shed() {
+        429
+    } else if matches!(e, SubmitError::UnknownStream { .. }) {
+        404
+    } else {
+        503
+    };
+    let mut b = String::from("{\"error\":");
+    json::push_str_escaped(&mut b, &format!("rejected: {e}"));
+    if let Some(ra) = e.retry_after() {
+        let _ = write!(b, ",\"retry_after_ms\":{}", ra.as_millis().max(1));
+    }
+    b.push('}');
+    Response::json(status, b)
+}
+
 /// Submit one request and wait for its completion.
 fn serve_one(inner: &Arc<ServerInner>, request: Request) -> Result<Completion, Response> {
     let rx = inner
         .scheduler
         .submit(request)
-        .map_err(|e| Response::error(503, &format!("rejected: {e}")))?;
+        .map_err(|e| submit_error_response(&e))?;
     rx.recv()
         .map_err(|_| Response::error(500, "scheduler dropped the request (shutting down)"))
 }
 
-fn handle_append(inner: &Arc<ServerInner>, stream: usize, body: &Json) -> Response {
-    let Some(frame) = body.get("frame").and_then(Json::as_f32s) else {
-        return Response::error(400, "body needs \"frame\": [f32; tokens_per_frame * d]");
+fn op_prefill(inner: &Arc<ServerInner>, stream: usize, api: ApiRequest) -> Response {
+    let ApiRequest::Prefill { frame, echo, opts } = api else {
+        unreachable!("dispatch table routes append bodies here");
     };
-    let want = inner.spec.tokens_per_frame * inner.spec.d;
-    if frame.len() != want {
-        return Response::error(
-            400,
-            &format!("frame has {} values, model wants {want}", frame.len()),
-        );
-    }
-    let echo = body.get("echo").and_then(Json::as_bool).unwrap_or(false);
-    let completion = match serve_one(
-        inner,
-        Request {
-            stream,
-            kind: RequestKind::AppendFrame(frame),
-        },
-    ) {
+    let completion = match serve_one(inner, Request::Prefill { stream, frame, opts }) {
         Ok(c) => c,
         Err(resp) => return resp,
     };
@@ -395,39 +562,26 @@ fn handle_append(inner: &Arc<ServerInner>, stream: usize, body: &Json) -> Respon
     }
 }
 
-fn handle_decode(inner: &Arc<ServerInner>, stream: usize, body: &Json) -> Response {
-    let Some(token) = body.get("token").and_then(Json::as_f32s) else {
-        return Response::error(400, "body needs \"token\": [f32; d]");
+fn op_decode(inner: &Arc<ServerInner>, stream: usize, api: ApiRequest) -> Response {
+    let ApiRequest::Decode {
+        token,
+        steps,
+        echo,
+        opts,
+    } = api
+    else {
+        unreachable!("dispatch table routes decode bodies here");
     };
-    if token.len() != inner.spec.d {
-        return Response::error(
-            400,
-            &format!("token has {} values, model wants {}", token.len(), inner.spec.d),
-        );
-    }
-    let steps = match body.get("steps") {
-        None => 1,
-        Some(v) => match v.as_usize() {
-            Some(n) if (1..=MAX_STEPS_PER_REQUEST).contains(&n) => n,
-            _ => {
-                return Response::error(
-                    400,
-                    &format!("steps must be an integer in 1..={MAX_STEPS_PER_REQUEST}"),
-                )
-            }
-        },
-    };
-    let echo = body.get("echo").and_then(Json::as_bool).unwrap_or(false);
-
     let mut agg = StageStats::default();
     let mut completions: Vec<Completion> = Vec::with_capacity(steps);
     let mut last_output: Vec<f32> = Vec::new();
     for step in 0..steps {
         let completion = match serve_one(
             inner,
-            Request {
+            Request::Decode {
                 stream,
-                kind: RequestKind::Decode(token.clone()),
+                token: token.clone(),
+                opts,
             },
         ) {
             Ok(c) => c,
@@ -570,6 +724,20 @@ fn metrics_text(inner: &Arc<ServerInner>) -> String {
     );
     let _ = writeln!(out, "nc_server_streams_open {}", *inner.next_stream.lock().unwrap());
     let _ = writeln!(out, "nc_server_queued_requests {}", inner.scheduler.queued());
+    // Per-class admission accounting: current queue depth, served/shed
+    // totals, and the cumulative queue delay (µs) of served requests
+    // (divide by `nc_requests_total` for the mean delay).
+    let adm = inner.scheduler.admission();
+    for (class, c) in adm.classes() {
+        let _ = writeln!(out, "nc_queue_depth{{class=\"{class}\"}} {}", c.queued);
+        let _ = writeln!(out, "nc_requests_total{{class=\"{class}\"}} {}", c.served);
+        let _ = writeln!(out, "nc_shed_total{{class=\"{class}\"}} {}", c.shed);
+        let _ = writeln!(
+            out,
+            "nc_queue_delay_us_total{{class=\"{class}\"}} {}",
+            c.queue_delay_us
+        );
+    }
     // Derived hot-chunk cache hit ratio: bytes served from RAM over all
     // bytes the decode path demanded (hits + flash reads). The raw
     // counters (`io.cache_hit_bytes`, `cache.*`) are in the generic
@@ -616,6 +784,20 @@ fn config_json(inner: &Arc<ServerInner>) -> String {
         inner.cfg.max_connections,
     );
     let _ = write!(b, ",\"cache_mb\":{}", engine.cache_mb());
+    // Admission-control / disaggregation knobs, from the scheduler's own
+    // config so the served values cannot drift from the ones in force.
+    let sched = inner.scheduler.config();
+    match sched.slo {
+        Some(slo) => {
+            let _ = write!(b, ",\"slo_ms\":{}", slo.as_millis());
+        }
+        None => b.push_str(",\"slo_ms\":null"),
+    }
+    let _ = write!(
+        b,
+        ",\"prefill_budget\":{},\"prefill_chunk\":{}",
+        sched.prefill_budget, sched.prefill_chunk
+    );
     for (key, raw) in &inner.cfg.extra_config {
         b.push(',');
         json::push_str_escaped(&mut b, key);
@@ -649,5 +831,107 @@ mod tests {
     #[test]
     fn error_bodies_escape() {
         assert_eq!(error_json("a\"b"), "{\"error\":\"a\\\"b\"}");
+    }
+
+    fn parse(op: &str, body: &str) -> Result<ApiRequest, FieldError> {
+        ApiRequest::parse(op, &Json::parse(body).unwrap(), &ModelSpec::tiny())
+    }
+
+    #[test]
+    fn api_request_400s_name_the_offending_field() {
+        // tiny: d = 64, tokens_per_frame = 8 → frame wants 512 values.
+        let token = format!("[{}]", vec!["0.1"; 64].join(","));
+        let cases: Vec<(&str, String, &str)> = vec![
+            ("append", "{}".into(), "frame"),
+            ("append", "{\"frame\":[1.0]}".into(), "frame"),
+            ("append", "{\"frame\":\"x\"}".into(), "frame"),
+            ("append", "{\"class\":5}".into(), "class"),
+            ("append", "{\"class\":\"speedy\"}".into(), "class"),
+            ("append", "{\"deadline_ms\":0}".into(), "deadline_ms"),
+            ("append", "{\"deadline_ms\":-3}".into(), "deadline_ms"),
+            ("append", "{\"echo\":\"yes\"}".into(), "echo"),
+            ("decode", "{}".into(), "token"),
+            ("decode", "{\"token\":[0.1,0.2]}".into(), "token"),
+            ("decode", format!("{{\"token\":{token},\"steps\":0}}"), "steps"),
+            ("decode", format!("{{\"token\":{token},\"steps\":4096}}"), "steps"),
+            ("decode", format!("{{\"token\":{token},\"steps\":1.5}}"), "steps"),
+        ];
+        for (op, body, field) in cases {
+            let err = parse(op, &body).err().unwrap_or_else(|| {
+                panic!("{op} {body} should fail on field {field:?}")
+            });
+            assert_eq!(err.field, field, "{op} {body}: {}", err.detail);
+            let resp = err.response();
+            assert_eq!(resp.status, 400);
+            assert!(
+                resp.body.contains(&format!("\"field\":\"{field}\"")),
+                "{}",
+                resp.body
+            );
+        }
+    }
+
+    #[test]
+    fn api_request_parses_scheduling_fields() {
+        let token = format!("[{}]", vec!["0.1"; 64].join(","));
+        let body = format!(
+            "{{\"token\":{token},\"steps\":3,\"class\":\"bulk\",\"deadline_ms\":20,\"echo\":true}}"
+        );
+        match parse("decode", &body).unwrap() {
+            ApiRequest::Decode {
+                token,
+                steps,
+                echo,
+                opts,
+            } => {
+                assert_eq!(token.len(), 64);
+                assert_eq!(steps, 3);
+                assert!(echo);
+                assert_eq!(opts.class, Some(Class::Bulk));
+                assert_eq!(opts.deadline, Some(Duration::from_millis(20)));
+            }
+            _ => panic!("decode body parsed to the wrong variant"),
+        }
+        // Defaults: no class/deadline overrides, one step, no echo.
+        let body = format!("{{\"token\":{token}}}");
+        match parse("decode", &body).unwrap() {
+            ApiRequest::Decode { steps, echo, opts, .. } => {
+                assert_eq!(steps, 1);
+                assert!(!echo);
+                assert_eq!(opts, RequestOpts::default());
+            }
+            _ => panic!("decode body parsed to the wrong variant"),
+        }
+    }
+
+    #[test]
+    fn dispatch_table_covers_wire_ops() {
+        let names: Vec<&str> = STREAM_OPS.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["append", "decode"]);
+    }
+
+    #[test]
+    fn shed_errors_map_to_429_with_retry_hint() {
+        let shed = SubmitError::Overloaded {
+            class: Class::Bulk,
+            queue_delay: Duration::from_millis(12),
+            retry_after: Duration::from_millis(7),
+        };
+        let resp = submit_error_response(&shed);
+        assert_eq!(resp.status, 429);
+        assert!(resp.body.contains("\"retry_after_ms\":7"), "{}", resp.body);
+        let budget = SubmitError::BudgetExhausted {
+            stream: 1,
+            queued_tokens: 16,
+            budget: 16,
+            retry_after: Duration::from_millis(5),
+        };
+        assert_eq!(submit_error_response(&budget).status, 429);
+        assert_eq!(submit_error_response(&SubmitError::Stopping).status, 503);
+        let missing = SubmitError::UnknownStream {
+            stream: 9,
+            max_streams: 4,
+        };
+        assert_eq!(submit_error_response(&missing).status, 404);
     }
 }

@@ -297,6 +297,7 @@ fn redline_run_and_compare_end_to_end() {
         connections: 2,
         mix: (1, 4),
         steps: 2,
+        deadline_ms: None,
     };
     let report = loadgen::run(&cfg).expect("redline run");
     assert!(report.decode.requests > 0, "no decodes issued");
@@ -400,5 +401,220 @@ fn served_batched_decodes_stay_bit_identical() {
             assert_bits_eq(out, &expected[s][step], &format!("client {s} step {step}"));
         }
     }
+    server.shutdown();
+}
+
+/// Keep-alive raw-status client: like [`Client`] but returning the
+/// status line + body instead of folding non-2xx into an error string,
+/// so tests can inspect shed responses (`429` + `retry_after_ms`).
+struct RawClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RawClient {
+    fn connect(addr: &str) -> Self {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let writer = stream.try_clone().expect("clone socket");
+        Self {
+            writer,
+            reader: BufReader::new(stream),
+        }
+    }
+
+    fn post(&mut self, path: &str, body: &str) -> (u16, String) {
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            body.len()
+        );
+        self.writer.write_all(head.as_bytes()).expect("send head");
+        self.writer.write_all(body.as_bytes()).expect("send body");
+        let (status, bytes, _keep) = http::read_response(&mut self.reader).expect("response");
+        (status, String::from_utf8_lossy(&bytes).into_owned())
+    }
+}
+
+fn frame_body(frame: &[f32]) -> String {
+    let mut body = String::from("{\"frame\":");
+    json::push_f32_array(&mut body, frame);
+    body.push('}');
+    body
+}
+
+fn metric_value(text: &str, name: &str) -> Option<f64> {
+    text.lines()
+        .find(|l| l.starts_with(name))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+/// SLO admission over the wire: once queue delay blows past the SLO,
+/// prefills get `429` with a machine-readable `retry_after_ms`, the
+/// shed shows up in `/metrics`, and after the flood drains the same
+/// traffic is admitted again (shedding is load control, not a latch).
+#[test]
+fn overloaded_prefills_get_429_then_recover_after_drain() {
+    let sched = Scheduler::spawn(
+        SchedulerConfig::default()
+            .with_workers(1)
+            .with_slo(Some(Duration::from_millis(1))),
+        tiny_engine,
+    );
+    sched.engine().warmup().expect("warmup");
+    let server = Server::start(
+        ServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_connections: 32,
+            read_timeout: Duration::from_millis(500),
+            ..ServerConfig::default()
+        },
+        sched,
+    )
+    .expect("start");
+    let addr = addr_of(&server);
+
+    let mut control = Client::connect(&addr).expect("connect");
+    let cfg = control.get("/v1/config").expect("config");
+    let d = cfg.get("d").and_then(Json::as_usize).unwrap();
+    let tpf = cfg.get("tokens_per_frame").and_then(Json::as_usize).unwrap();
+    let frame = FrameTrace::new(d, tpf, 1, 11).frame(0);
+    let token = vec![0.05f32; d];
+
+    // A long interactive decode keeps the worker's priority lane hot so
+    // bulk prefills age in their queue instead of draining instantly.
+    let hog_stream = control.open_stream().expect("hog stream");
+    control.append(hog_stream, &frame).expect("prime hog");
+    let hog = {
+        let addr = addr.clone();
+        let token = token.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).expect("hog connect");
+            c.decode(hog_stream, &token, 512, Some(1000)).expect("hog decode");
+        })
+    };
+
+    // Six connections flooding prefills through the single worker.
+    let shed_bodies: Vec<(u16, String)> = {
+        let mut floods = Vec::new();
+        for _ in 0..6 {
+            let addr = addr.clone();
+            let body = frame_body(&frame);
+            floods.push(std::thread::spawn(move || {
+                let mut c = RawClient::connect(&addr);
+                let mut open = Client::connect(&addr).expect("open conn");
+                let stream = open.open_stream().expect("flood stream");
+                let mut sheds = Vec::new();
+                for _ in 0..80 {
+                    let (status, reply) =
+                        c.post(&format!("/v1/streams/{stream}/append"), &body);
+                    if status == 429 {
+                        sheds.push((status, reply));
+                    }
+                }
+                sheds
+            }));
+        }
+        floods
+            .into_iter()
+            .flat_map(|h| h.join().expect("flood thread"))
+            .collect()
+    };
+    hog.join().expect("hog thread");
+
+    assert!(
+        !shed_bodies.is_empty(),
+        "a 1ms SLO under a 6-way flood must shed at least one prefill"
+    );
+    for (_, body) in &shed_bodies {
+        assert!(body.contains("retry_after_ms"), "shed body lacks hint: {body}");
+    }
+
+    // The sheds are visible per class on /metrics.
+    let (status, body) = raw_request(&addr, b"GET /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let shed = metric_value(&text, "nc_shed_total{class=\"bulk\"}").expect("shed metric");
+    assert!(shed >= 1.0, "metrics did not count the sheds:\n{text}");
+
+    // Recovery: queue drained → the same request is admitted again.
+    std::thread::sleep(Duration::from_millis(200));
+    control.append(hog_stream, &frame).expect("admitted after drain");
+    server.shutdown();
+}
+
+/// Decode latency stays bounded while prefills saturate the worker:
+/// the interactive queue plus chunked prefill means a decode never
+/// waits out a whole flood of queued prefills.
+#[test]
+fn decode_stays_responsive_under_prefill_flood() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let sched = Scheduler::spawn(
+        SchedulerConfig::default()
+            .with_workers(1)
+            .with_slo(None)
+            .with_prefill_chunk(1),
+        tiny_engine,
+    );
+    sched.engine().warmup().expect("warmup");
+    let server = Server::start(
+        ServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_connections: 32,
+            read_timeout: Duration::from_millis(500),
+            ..ServerConfig::default()
+        },
+        sched,
+    )
+    .expect("start");
+    let addr = addr_of(&server);
+
+    let mut control = Client::connect(&addr).expect("connect");
+    let cfg = control.get("/v1/config").expect("config");
+    let d = cfg.get("d").and_then(Json::as_usize).unwrap();
+    let tpf = cfg.get("tokens_per_frame").and_then(Json::as_usize).unwrap();
+    let frame = FrameTrace::new(d, tpf, 1, 11).frame(0);
+    let token = vec![0.05f32; d];
+
+    let decode_stream = control.open_stream().expect("decode stream");
+    control.append(decode_stream, &frame).expect("prime");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut floods = Vec::new();
+    for _ in 0..6 {
+        let addr = addr.clone();
+        let frame = frame.clone();
+        let stop = Arc::clone(&stop);
+        floods.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).expect("flood connect");
+            let stream = c.open_stream().expect("flood stream");
+            while !stop.load(Ordering::Relaxed) {
+                let _ = c.append(stream, &frame); // errors fine: load, not data
+            }
+        }));
+    }
+
+    // Interactive decodes in the thick of the flood: every one must
+    // come back promptly (no starvation), and correctly.
+    let mut worst = Duration::ZERO;
+    for _ in 0..20 {
+        let start = std::time::Instant::now();
+        control
+            .decode(decode_stream, &token, 1, Some(5))
+            .expect("decode under flood");
+        worst = worst.max(start.elapsed());
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in floods {
+        h.join().expect("flood thread");
+    }
+    assert!(
+        worst < Duration::from_secs(1),
+        "decode starved behind the prefill flood: worst {worst:?}"
+    );
     server.shutdown();
 }

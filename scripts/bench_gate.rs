@@ -22,7 +22,7 @@
 //!
 //! Entries are matched on their identifying fields (mode, policy,
 //! prefetch, threads, streams, devices, op, async_io, queue_depth, rps,
-//! mix — the last two identify served redline runs); entries present on
+//! mix, slo — the last three identify served redline runs); entries present on
 //! only one side are reported but never fail the gate (the bench matrix
 //! is allowed to grow).
 //!
@@ -83,7 +83,7 @@ fn parse_entries(json: &str) -> Vec<Entry> {
     // Keep in sync with `ID_FIELDS` in
     // `rust/src/serving/loadgen/compare.rs` (redline's compare applies
     // the same matching so local verdicts mirror the CI gate).
-    const ID_FIELDS: [&str; 11] = [
+    const ID_FIELDS: [&str; 12] = [
         "mode",
         "policy",
         "prefetch",
@@ -95,6 +95,7 @@ fn parse_entries(json: &str) -> Vec<Entry> {
         "queue_depth",
         "rps",
         "mix",
+        "slo",
     ];
     let mut entries = Vec::new();
     let bytes = json.as_bytes();
