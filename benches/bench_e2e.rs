@@ -32,6 +32,9 @@ use neuron_chunking::workload::FrameTrace;
 /// One emitted measurement row.
 struct Entry {
     mode: &'static str,
+    /// On-flash storage dtype serving the row ("f32" everywhere except
+    /// the dtype_sweep arms) — part of the gate's identity key.
+    dtype: &'static str,
     policy: &'static str,
     prefetch: bool,
     threads: usize,
@@ -50,11 +53,12 @@ struct Entry {
 impl Entry {
     fn to_json(&self) -> String {
         format!(
-            "{{\"mode\":\"{}\",\"policy\":\"{}\",\"prefetch\":{},\"threads\":{},\
+            "{{\"mode\":\"{}\",\"dtype\":\"{}\",\"policy\":\"{}\",\"prefetch\":{},\"threads\":{},\
              \"streams\":{},\"devices\":{},\"async_io\":{},\"queue_depth\":{},\
              \"op\":\"{}\",\"tokens_per_s\":{:.3},\
              \"p50_us\":{:.3},\"p99_us\":{:.3},\"samples\":{}}}",
             self.mode,
+            self.dtype,
             self.policy,
             self.prefetch,
             self.threads,
@@ -166,6 +170,7 @@ fn main() {
             let (p50, p99) = percentiles_us(&samples);
             entries.push(Entry {
                 mode: "single",
+                dtype: "f32",
                 policy: *label,
                 prefetch,
                 threads: 1,
@@ -185,6 +190,7 @@ fn main() {
             let (p50, p99) = percentiles_us(&samples);
             entries.push(Entry {
                 mode: "single",
+                dtype: "f32",
                 policy: *label,
                 prefetch,
                 threads: 1,
@@ -222,6 +228,7 @@ fn main() {
             });
             entries.push(Entry {
                 mode: "exec_threads",
+                dtype: "f32",
                 policy: *label,
                 prefetch: true,
                 threads,
@@ -274,6 +281,7 @@ fn main() {
             );
             entries.push(Entry {
                 mode: "scaling",
+                dtype: "f32",
                 policy: *label,
                 prefetch: true,
                 threads,
@@ -317,6 +325,7 @@ fn main() {
             );
             device_entries.push(Entry {
                 mode: "device_scaling",
+                dtype: "f32",
                 policy: *label,
                 prefetch: true,
                 threads: 1,
@@ -381,6 +390,7 @@ fn main() {
             );
             async_entries.push(Entry {
                 mode: "async_overlap",
+                dtype: "f32",
                 policy: *label,
                 prefetch: true,
                 threads: 1,
@@ -451,6 +461,7 @@ fn main() {
             batch_entries.push((
                 Entry {
                     mode: "batch_scaling",
+                    dtype: "f32",
                     policy: *label,
                     prefetch: true,
                     threads: 1,
@@ -578,6 +589,7 @@ fn main() {
             fault_entries.push((
                 Entry {
                     mode: "fault_tail",
+                    dtype: "f32",
                     policy: "raw",
                     prefetch: false,
                     threads: 2,
@@ -667,6 +679,7 @@ fn main() {
         cache_entries.push((
             Entry {
                 mode: "cache_warmup",
+                dtype: "f32",
                 policy: "topk",
                 prefetch: true,
                 threads: 1,
@@ -683,6 +696,144 @@ fn main() {
             ratio,
             hit,
         ));
+    }
+
+    // --- dtype_sweep: quantized chunk storage f32/fp16/int8 ---
+    // The quantization tentpole, measured where it pays: the same
+    // workload served from a real file-backed pool at each storage
+    // dtype, dense and chunk-selected. Narrower encodings move fewer
+    // flash bytes per token at the same row budget (int8 rows are
+    // ~1/4 of f32), which on the wall-clock pool shows up as decode
+    // throughput. Each arm also decodes a step-aligned golden prefix
+    // so the max output |delta| vs the f32 arm — exactly the storage
+    // format's rounding through the forward pass — is recorded and
+    // bounded in-bench.
+    let mut dtype_entries: Vec<(Entry, f64, f64)> = Vec::new();
+    {
+        use neuron_chunking::model::DType;
+        let backing_root =
+            std::env::temp_dir().join(format!("nc_bench_dtype_{}", std::process::id()));
+        let golden_steps = 8usize;
+        for (label, policy, sparsity) in &policies {
+            if *label == "topk" {
+                continue; // dense + chunking bracket the selection spectrum
+            }
+            let mut f32_tps = 0.0f64;
+            let mut f32_bpt = 0.0f64;
+            let mut f32_golden: Vec<Vec<f32>> = Vec::new();
+            for dtype in [DType::F32, DType::F16, DType::Int8] {
+                let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+                let engine = Engine::builder("tiny")
+                    .policy(policy.clone())
+                    .sparsity(*sparsity)
+                    .prefetch(true)
+                    .exec_threads(1)
+                    .async_io(false)
+                    .dtype(dtype)
+                    .file_backed(&backing_root)
+                    .artifacts(&dir)
+                    .build()
+                    .unwrap();
+                engine.warmup().unwrap();
+                let spec = engine.spec();
+                let session = engine.new_session();
+                let trace = FrameTrace::new(spec.d, spec.tokens_per_frame, 4, 5);
+                let token = vec![0.1f32; spec.d];
+                let mut out = Vec::new();
+                session.append_frame_into(&trace.frame(0), &mut out).unwrap();
+                // Step-aligned golden prefix: every arm decodes the same
+                // sequence from the same appended frame, so arms differ
+                // only in on-flash encoding.
+                let mut golden: Vec<Vec<f32>> = Vec::new();
+                for _ in 0..golden_steps {
+                    session.decode_step_into(&token, &mut out).unwrap();
+                    golden.push(out.clone());
+                }
+                let m0 = engine.metrics();
+                let samples = sample_steps(decode_samples, || {
+                    black_box(session.decode_step_into(&token, &mut out).unwrap());
+                });
+                let (p50, p99) = percentiles_us(&samples);
+                let m = engine.metrics();
+                let bytes_per_token =
+                    (m.bytes("io") - m0.bytes("io")) as f64 / samples.len() as f64;
+                let tps = 1.0 / stats::mean(&samples);
+                let delta = if dtype == DType::F32 {
+                    f32_tps = tps;
+                    f32_bpt = bytes_per_token;
+                    f32_golden = golden;
+                    0.0
+                } else {
+                    let mut d = 0.0f64;
+                    for (a, b) in golden.iter().zip(&f32_golden) {
+                        for (&x, &y) in a.iter().zip(b) {
+                            assert!(x.is_finite(), "dtype_sweep [{label}] non-finite output");
+                            d = d.max((x - y).abs() as f64);
+                        }
+                    }
+                    let peak = f32_golden
+                        .iter()
+                        .flat_map(|v| v.iter())
+                        .fold(0.0f32, |mx, &v| mx.max(v.abs()));
+                    let scale = peak as f64;
+                    let rel_bound = if dtype == DType::F16 { 0.02 } else { 0.25 };
+                    assert!(
+                        d <= rel_bound * scale,
+                        "dtype_sweep [{label}] {}: max |delta| {d} vs f32 exceeds {} \
+                         (= {rel_bound} x max |f32| {scale})",
+                        dtype.name(),
+                        rel_bound * scale
+                    );
+                    // Narrower storage must strictly cut flash traffic at
+                    // the same row budget (the tentpole's bytes claim).
+                    assert!(
+                        bytes_per_token < f32_bpt,
+                        "dtype_sweep [{label}] {}: {bytes_per_token:.1} B/token did not \
+                         shrink vs f32's {f32_bpt:.1}",
+                        dtype.name()
+                    );
+                    d
+                };
+                println!(
+                    "{:<56} {:>12.0} tok/s  ({:.0} B/token, max-delta {:.2e})",
+                    format!("dtype_sweep decode tiny [{label}] dtype={}", dtype.name()),
+                    tps,
+                    bytes_per_token,
+                    delta
+                );
+                dtype_entries.push((
+                    Entry {
+                        mode: "dtype_sweep",
+                        dtype: dtype.name(),
+                        policy: *label,
+                        prefetch: true,
+                        threads: 1,
+                        streams: 1,
+                        devices: 1,
+                        async_io: false,
+                        queue_depth: 0,
+                        op: "decode",
+                        tokens_per_s: tps,
+                        p50_us: p50,
+                        p99_us: p99,
+                        samples: samples.len(),
+                    },
+                    bytes_per_token,
+                    delta,
+                ));
+                if dtype == DType::Int8 && *label == "dense" {
+                    // The wall-clock claim: the dense file-backed arm is
+                    // I/O-bound, so ~4x fewer flash bytes must show up as
+                    // higher decode throughput.
+                    assert!(
+                        tps > f32_tps,
+                        "dtype_sweep [dense] int8 did not beat f32 on the file-backed \
+                         pool ({tps:.0} vs {f32_tps:.0} tok/s)"
+                    );
+                }
+            }
+        }
+        std::fs::remove_dir_all(&backing_root).ok();
     }
 
     // --- mixed_slo sweep: prefill/decode disaggregation trade-off ---
@@ -795,6 +946,7 @@ fn main() {
             );
             mixed_entries.push(Entry {
                 mode: if chunk == 0 { "mixed_single" } else { "mixed_split" },
+                dtype: "f32",
                 policy: "topk",
                 prefetch: true,
                 threads: 1,
@@ -810,6 +962,7 @@ fn main() {
             });
             mixed_entries.push(Entry {
                 mode: if chunk == 0 { "mixed_single" } else { "mixed_split" },
+                dtype: "f32",
                 policy: "topk",
                 prefetch: true,
                 threads: 1,
@@ -903,6 +1056,22 @@ fn main() {
             )
         })
         .collect();
+    // Dtype rows carry the flash bytes moved per decoded token and the
+    // max output |delta| vs the step-aligned f32 arm, so the gate can
+    // hold the byte savings and the accuracy envelope alongside
+    // throughput.
+    let dtype_rows: Vec<String> = dtype_entries
+        .iter()
+        .map(|(e, bpt, delta)| {
+            let base = e.to_json();
+            format!(
+                "  {},\"bytes_per_token\":{:.1},\"max_delta\":{:.6e}}}",
+                &base[..base.len() - 1],
+                bpt,
+                delta
+            )
+        })
+        .collect();
     // Mixed-workload rows: decode tail + prefill throughput per arm
     // (single-queue monolithic vs chunked/disaggregated).
     let mixed_rows: Vec<String> = mixed_entries
@@ -913,25 +1082,27 @@ fn main() {
         "{{\n\"bench\":\"e2e\",\n\"model\":\"tiny\",\n\"entries\":[\n{}\n],\n\
          \"device_scaling\":[\n{}\n],\n\"async_overlap\":[\n{}\n],\n\
          \"batch_scaling\":[\n{}\n],\n\"fault_tail\":[\n{}\n],\n\
-         \"cache_warmup\":[\n{}\n],\n\"mixed_slo\":[\n{}\n]\n}}\n",
+         \"cache_warmup\":[\n{}\n],\n\"dtype_sweep\":[\n{}\n],\n\"mixed_slo\":[\n{}\n]\n}}\n",
         rows.join(",\n"),
         dev_rows.join(",\n"),
         async_rows.join(",\n"),
         batch_rows.join(",\n"),
         fault_rows.join(",\n"),
         cache_rows.join(",\n"),
+        dtype_rows.join(",\n"),
         mixed_rows.join(",\n")
     );
     std::fs::write(&path, &json).expect("write bench json");
     println!(
         "\nwrote {path} ({} entries + {} device-scaling + {} async-overlap + {} batch-scaling \
-         + {} fault-tail + {} cache-warmup + {} mixed-slo entries)",
+         + {} fault-tail + {} cache-warmup + {} dtype-sweep + {} mixed-slo entries)",
         entries.len(),
         device_entries.len(),
         async_entries.len(),
         batch_entries.len(),
         fault_entries.len(),
         cache_entries.len(),
+        dtype_entries.len(),
         mixed_entries.len()
     );
 }

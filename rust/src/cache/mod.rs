@@ -41,6 +41,7 @@ use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::RwLock;
 
 use crate::latency::{chunks_from_mask, Chunk};
+use crate::model::{decode_row_into, DType};
 use crate::reorder::drift_score;
 
 /// Selection groups gather at most this many member matrices (Q/K/V).
@@ -59,21 +60,27 @@ pub struct ShardSpec {
     pub rows: usize,
     /// f32s per row for each member matrix (0 = member slot unused).
     pub row_f32s: [usize; MAX_MEMBERS],
+    /// *Encoded* bytes per row for each member matrix — the width a
+    /// resident row occupies in RAM. Equals `row_f32s[m] * 4` for f32
+    /// images; quantized images store their on-flash encoding, so the
+    /// same byte budget holds 2–4× more rows.
+    pub row_enc_bytes: [usize; MAX_MEMBERS],
     /// Flash bytes per row summed over members — the bytes a hit saves.
     pub flash_row_bytes_sum: u64,
 }
 
 impl ShardSpec {
     fn row_ram_bytes(&self) -> u64 {
-        self.row_f32s.iter().map(|&w| w as u64 * 4).sum()
+        self.row_enc_bytes.iter().map(|&w| w as u64).sum()
     }
 }
 
-/// One resident run of rows with its materialized weights per member.
+/// One resident run of rows with its materialized weights per member,
+/// stored in the image's encoded form (dequantized at staging time).
 struct Entry {
     chunk: Chunk,
-    /// `data[m]` holds `chunk.len * row_f32s[m]` values, row-major.
-    data: [Vec<f32>; MAX_MEMBERS],
+    /// `data[m]` holds `chunk.len * row_enc_bytes[m]` bytes, row-major.
+    data: [Vec<u8>; MAX_MEMBERS],
 }
 
 struct ShardState {
@@ -100,6 +107,8 @@ pub struct ChunkCache {
     groups_per_layer: usize,
     budget_bytes: u64,
     pricing: bool,
+    /// Encoding of the resident bytes (the weight image's dtype).
+    dtype: DType,
     /// Σ rows × row_ram_bytes over shards — budget-share denominator.
     total_weight: u64,
     maintaining: AtomicBool,
@@ -113,12 +122,15 @@ pub struct ChunkCache {
 
 impl ChunkCache {
     /// `shards` is laid out layer-major: shard `(layer, group)` lives at
-    /// `layer * groups_per_layer + group`.
+    /// `layer * groups_per_layer + group`. `dtype` is the weight image's
+    /// storage dtype — resident rows keep that encoding in RAM and are
+    /// dequantized into the caller's f32 arenas at staging time.
     pub fn new(
         budget_bytes: u64,
         pricing: bool,
         groups_per_layer: usize,
         specs: Vec<ShardSpec>,
+        dtype: DType,
     ) -> Self {
         assert!(groups_per_layer > 0);
         assert_eq!(specs.len() % groups_per_layer, 0);
@@ -145,6 +157,7 @@ impl ChunkCache {
             groups_per_layer,
             budget_bytes,
             pricing,
+            dtype,
             total_weight,
             maintaining: AtomicBool::new(false),
             admissions: AtomicU64::new(0),
@@ -330,14 +343,14 @@ impl ChunkCache {
             std::mem::swap(flash_chunks, tmp);
             for (r, &s) in st.slot_of_row.iter().enumerate() {
                 if s != NONE {
-                    Self::stage_row(&st, &sh.spec, r, s, staged_rows, staged_data);
+                    Self::stage_row(&st, &sh.spec, self.dtype, r, s, staged_rows, staged_data);
                     hits += 1;
                 }
             }
         } else {
             // Subtract and stage in one ascending pass over the chunks.
             let mut stage = |r: usize, s: u32| {
-                Self::stage_row(&st, &sh.spec, r, s, staged_rows, staged_data);
+                Self::stage_row(&st, &sh.spec, self.dtype, r, s, staged_rows, staged_data);
                 hits += 1;
             };
             for c in flash_chunks.iter() {
@@ -381,9 +394,13 @@ impl ChunkCache {
         }
     }
 
+    /// Dequantize one resident row into the staging arenas. `resize` on
+    /// the pre-reserved arenas never reallocates at steady state, so the
+    /// cached hot path stays allocation-free for every dtype.
     fn stage_row(
         st: &ShardState,
         spec: &ShardSpec,
+        dtype: DType,
         row: usize,
         slot: u32,
         staged_rows: &mut Vec<usize>,
@@ -393,7 +410,11 @@ impl ChunkCache {
         let off = row - e.chunk.start;
         for (m, &w) in spec.row_f32s.iter().enumerate() {
             if w > 0 {
-                staged_data[m].extend_from_slice(&e.data[m][off * w..(off + 1) * w]);
+                let enc = spec.row_enc_bytes[m];
+                let bytes = &e.data[m][off * enc..(off + 1) * enc];
+                let start = staged_data[m].len();
+                staged_data[m].resize(start + w, 0.0);
+                decode_row_into(dtype, bytes, &mut staged_data[m][start..]);
             }
         }
         staged_rows.push(row);
@@ -450,15 +471,18 @@ impl ChunkCache {
     /// concurrent calls return the last drift score immediately.
     ///
     /// `fetch(layer, group, member, chunk, dst)` must fill `dst` with the
-    /// member's rows for `chunk` in physical row order, bit-identical to
-    /// what a flash read of those rows would decode to.
+    /// member's *encoded* rows for `chunk` in physical row order
+    /// (`chunk.len * row_enc_bytes[member]` bytes), byte-identical to
+    /// what a flash read of those rows would return — staging then
+    /// decodes exactly like the gather path, so cached rows stay
+    /// bit-identical to flash-served ones at every dtype.
     ///
     /// Each shard's byte share of the global budget is proportional to
     /// its total weight footprint, so Σ resident bytes ≤ budget always
     /// holds by construction.
     pub fn maintain<F>(&self, mut fetch: F) -> f64
     where
-        F: FnMut(usize, usize, usize, Chunk, &mut [f32]),
+        F: FnMut(usize, usize, usize, Chunk, &mut [u8]),
     {
         if self.maintaining.swap(true, Ordering::Acquire) {
             return self.drift();
@@ -530,10 +554,10 @@ impl ChunkCache {
             let mats: Vec<Entry> = to_admit
                 .iter()
                 .map(|&chunk| {
-                    let mut data: [Vec<f32>; MAX_MEMBERS] = Default::default();
-                    for (m, &w) in sh.spec.row_f32s.iter().enumerate() {
-                        if w > 0 {
-                            data[m].resize(chunk.len * w, 0.0);
+                    let mut data: [Vec<u8>; MAX_MEMBERS] = Default::default();
+                    for (m, &enc) in sh.spec.row_enc_bytes.iter().enumerate() {
+                        if enc > 0 {
+                            data[m].resize(chunk.len * enc, 0);
                             fetch(layer, group, m, chunk, &mut data[m]);
                         }
                     }
@@ -584,6 +608,7 @@ impl ChunkCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::encode_row;
 
     /// Deterministic synthetic weights: value depends on every index so
     /// staging bit-identity is meaningful.
@@ -595,20 +620,40 @@ mod tests {
         }
     }
 
+    /// The same synthetic weights in their encoded (on-flash) form.
+    fn fill_enc(
+        dtype: DType,
+        layer: usize,
+        group: usize,
+        m: usize,
+        chunk: Chunk,
+        dst: &mut [u8],
+        w: usize,
+    ) {
+        let mut rows = vec![0f32; chunk.len * w];
+        fill(layer, group, m, chunk, &mut rows, w);
+        let enc = dtype.encoded_row_bytes(w);
+        for (r, b) in rows.chunks_exact(w).zip(dst.chunks_exact_mut(enc)) {
+            encode_row(dtype, r, b);
+        }
+    }
+
     fn cache(budget: u64, pricing: bool) -> ChunkCache {
         // 2 layers × 2 groups, 16 rows, two members of width 4 and 2.
         let spec = ShardSpec {
             rows: 16,
             row_f32s: [4, 2, 0],
+            row_enc_bytes: [16, 8, 0],
             flash_row_bytes_sum: (4 + 2) * 4,
         };
-        ChunkCache::new(budget, pricing, 2, vec![spec; 4])
+        ChunkCache::new(budget, pricing, 2, vec![spec; 4], DType::F32)
     }
 
     fn maintain(c: &ChunkCache) -> f64 {
+        let dtype = c.dtype;
         c.maintain(|l, g, m, ch, dst| {
             let w = if m == 0 { 4 } else { 2 };
-            fill(l, g, m, ch, dst, w)
+            fill_enc(dtype, l, g, m, ch, dst, w)
         })
     }
 
@@ -743,5 +788,54 @@ mod tests {
         let d = maintain(&c);
         assert_eq!(d, 0.0);
         assert_eq!(c.admissions(), 0);
+    }
+
+    #[test]
+    fn quantized_entries_stretch_budget_and_decode() {
+        // Same group shape as `cache()` but int8-encoded: a resident row
+        // costs (4+4) + (4+2) = 14 bytes instead of 24, so the same byte
+        // budget holds more rows.
+        let spec = ShardSpec {
+            rows: 16,
+            row_f32s: [4, 2, 0],
+            row_enc_bytes: [8, 6, 0],
+            flash_row_bytes_sum: (4 + 4 + 4 + 2) as u64,
+        };
+        let c = ChunkCache::new(8 * 24, false, 2, vec![spec; 4], DType::Int8);
+        // The f32 cache() with this budget capped each shard at 2 rows;
+        // int8 encoding fits 24*8/4 / 14 = 3 rows per shard share.
+        assert!(c.max_resident_rows(0, 0) > 2);
+        for _ in 0..10 {
+            c.record_selection(0, 0, &[Chunk::new(4, 3)]);
+        }
+        c.maintain(|l, g, m, ch, dst| {
+            let w = if m == 0 { 4 } else { 2 };
+            fill_enc(DType::Int8, l, g, m, ch, dst, w)
+        });
+        assert_eq!(c.resident_rows(0, 0), 3);
+
+        // Staged rows dequantize to the synthetic weights within the
+        // per-row int8 bound (scale/2).
+        let mut phys: Vec<usize> = (4..7).collect();
+        let mut selset = vec![false; 16];
+        for &r in &phys {
+            selset[r] = true;
+        }
+        let mut flash = vec![Chunk::new(4, 3)];
+        let (mut tmp, mut rows) = (Vec::new(), Vec::new());
+        let mut data: [Vec<f32>; MAX_MEMBERS] = Default::default();
+        c.prepare(0, 0, &mut phys, &mut selset, &mut flash, &mut tmp, &mut rows, &mut data);
+        assert!(flash.is_empty(), "all rows resident");
+        assert_eq!(rows, vec![4, 5, 6]);
+        let mut want = vec![0f32; 3 * 4];
+        fill(0, 0, 0, Chunk::new(4, 3), &mut want, 4);
+        for (row, got) in data[0].chunks_exact(4).enumerate() {
+            let src = &want[row * 4..(row + 1) * 4];
+            let max = src.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let bound = max / 127.0 * 0.5 + 1e-6;
+            for (&a, &b) in src.iter().zip(got) {
+                assert!((a - b).abs() <= bound, "{a} vs {b}");
+            }
+        }
     }
 }

@@ -83,7 +83,7 @@ use crate::coordinator::pipeline::stages::{col_importance, full_mask, group_memb
 use crate::coordinator::pipeline::{group_index, SessionState, StageStats};
 use crate::coordinator::{HotNeuronCache, KvCache, Metrics, Policy};
 use crate::latency::LatencyTable;
-use crate::model::{MatrixId, MatrixKind, ModelSpec, WeightStore};
+use crate::model::{encode_row, DType, MatrixId, MatrixKind, ModelSpec, WeightStore};
 use crate::plan::{CoalescePolicy, IoPlanner};
 use crate::reorder::{activation_frequency, HotColdReorder};
 use crate::runtime::{Manifest, ModelMeta, Tensor, XlaRuntime};
@@ -117,6 +117,7 @@ pub struct EngineBuilder {
     cache_mb: usize,
     cache_pricing: bool,
     drift_threshold: Option<f64>,
+    dtype: DType,
 }
 
 impl EngineBuilder {
@@ -162,6 +163,13 @@ impl EngineBuilder {
             .ok()
             .and_then(|v| v.parse::<f64>().ok())
             .filter(|t| t.is_finite() && *t > 0.0);
+        // `NC_DTYPE=f32|fp16|int8` picks the on-flash storage dtype
+        // suite-wide without touching call sites (CI runs the whole test
+        // suite at int8; unset or unparsable = f32, the historical image).
+        let dtype = std::env::var("NC_DTYPE")
+            .ok()
+            .and_then(|v| v.parse::<DType>().ok())
+            .unwrap_or_default();
         Self {
             model: model.to_string(),
             profile: DeviceProfile::nano(),
@@ -183,7 +191,20 @@ impl EngineBuilder {
             cache_mb,
             cache_pricing,
             drift_threshold,
+            dtype,
         }
+    }
+
+    /// On-flash storage dtype of the weight image (default f32, or
+    /// `NC_DTYPE`). Quantized images store per-row scales inline, every
+    /// gather dequantizes back into the f32 arenas, and the selection /
+    /// planner latency tables are repriced at the encoded row width — so
+    /// int8 makes every chunk ~4× cheaper in flash bytes. The f32 path is
+    /// bit-identical to builds without the knob; fp16/int8 outputs differ
+    /// by bounded quantization error (see DESIGN.md §12).
+    pub fn dtype(mut self, dtype: DType) -> Self {
+        self.dtype = dtype;
+        self
     }
 
     /// Byte budget (MiB) for the shared cross-session hot-chunk RAM cache
@@ -354,7 +375,7 @@ impl EngineBuilder {
             spec.d == meta.d && spec.h == meta.h && spec.layers == meta.layers,
             "rust spec / python manifest dimension mismatch"
         );
-        let store = WeightStore::new(spec.clone(), false, self.seed);
+        let store = WeightStore::with_dtype(spec.clone(), false, self.seed, self.dtype);
         let member_profiles: Vec<DeviceProfile> = match &self.member_profiles {
             Some(v) if !v.is_empty() => v.clone(),
             _ => vec![self.profile.clone(); self.devices.max(1)],
@@ -429,10 +450,13 @@ impl EngineBuilder {
 
         // Pre-key the table for every scored row size and pre-render every
         // artifact name; both lookups are on the per-stage hot path and
-        // must not allocate there.
+        // must not allocate there. Keys come from the *layout* (encoded)
+        // row width, not the spec's logical f32 width — this is the
+        // repricing step: a quantized image makes every chunk cheaper in
+        // the utility denominator exactly as its flash bytes shrink.
         let mut keyed_tables: HashMap<usize, LatencyTable> = HashMap::new();
         for kind in MatrixKind::SCORED {
-            let row_bytes = spec.row_bytes(kind);
+            let row_bytes = store.layout.row_bytes(MatrixId::new(0, kind));
             keyed_tables
                 .entry(row_bytes)
                 .or_insert_with(|| table.with_row_bytes(row_bytes));
@@ -474,8 +498,16 @@ impl EngineBuilder {
                 self.cache_pricing,
                 MatrixKind::SCORED.len(),
                 cache_shard_specs(&spec, &store),
+                store.dtype(),
             ))
         });
+        // Pre-rendered per-dtype I/O counter name: the metrics folds bump
+        // it on the hot path and must not format strings there.
+        let io_dtype_bytes = match store.dtype() {
+            DType::F32 => "io.bytes_f32",
+            DType::F16 => "io.bytes_fp16",
+            DType::Int8 => "io.bytes_int8",
+        };
         let core = EngineCore {
             model: self.model,
             policy: self.policy,
@@ -498,6 +530,7 @@ impl EngineBuilder {
             stripe_bytes: self.stripe_bytes,
             replication: self.replication,
             dev_io_names,
+            io_dtype_bytes,
             table,
             keyed_tables,
             artifact_names,
@@ -602,6 +635,11 @@ impl Engine {
             Arc::new(fi)
         });
         handle.expect("pool member index out of range")
+    }
+
+    /// On-flash storage dtype of the weight image.
+    pub fn dtype(&self) -> DType {
+        self.core.read().unwrap().store.dtype()
     }
 
     /// Whether the asynchronous I/O pipeline is enabled.
@@ -742,19 +780,27 @@ impl Engine {
             // Memoize decoded logical matrices across the pass: admission
             // fetches cluster on few (layer, member) pairs per pass.
             let mut mats: HashMap<MatrixId, Vec<f32>> = HashMap::new();
+            let dtype = core.store.dtype();
             let drift = cache.maintain(|layer, group, member_i, chunk, dst| {
                 let kind = MatrixKind::SCORED[group];
                 let member = group_members(kind)[member_i];
                 let id = MatrixId::new(layer, member);
                 let cols = core.spec.shape_of(member).cols;
+                let enc = dtype.encoded_row_bytes(cols);
                 let w = mats
                     .entry(id)
                     .or_insert_with(|| core.store.logical_matrix(id));
                 let perm = core.store.permutation(id);
+                // Encode rows exactly as `build_image` does so cached
+                // entries stay byte-identical to flash-served rows.
                 for i in 0..chunk.len {
                     let p = chunk.start + i;
                     let l = perm.map_or(p, |pm| pm.old_of(p));
-                    dst[i * cols..(i + 1) * cols].copy_from_slice(&w[l * cols..(l + 1) * cols]);
+                    encode_row(
+                        dtype,
+                        &w[l * cols..(l + 1) * cols],
+                        &mut dst[i * enc..(i + 1) * enc],
+                    );
                 }
             });
             (drift, core.drift_threshold)
@@ -1009,6 +1055,8 @@ pub(crate) struct EngineCore {
     pub(crate) replication: usize,
     /// Pre-rendered per-member metrics keys ("io.dev0", …).
     pub(crate) dev_io_names: Vec<String>,
+    /// Pre-rendered per-dtype bytes-loaded counter ("io.bytes_int8", …).
+    pub(crate) io_dtype_bytes: &'static str,
     /// Byte-keyed pool-effective latency table (selection utility).
     pub(crate) table: LatencyTable,
     /// The table pre-keyed per scored row size (hot path must not clone).
@@ -1405,23 +1453,29 @@ impl EngineCore {
 
 /// One [`crate::cache::ShardSpec`] per (layer, scored group), in
 /// layer-major [`group_index`] order — the shard layout [`ChunkCache`]
-/// expects. RAM cost per row is the gathered f32 footprint of every
-/// group member; the flash byte credit per row is the sum of the
-/// members' on-flash row sizes (what a hit saves the pool).
+/// expects. RAM cost per row is the *encoded* footprint of every group
+/// member (quantized images stretch the budget 2–4×); the flash byte
+/// credit per row is the sum of the members' on-flash row sizes (what a
+/// hit saves the pool).
 fn cache_shard_specs(spec: &ModelSpec, store: &WeightStore) -> Vec<crate::cache::ShardSpec> {
+    let dtype = store.dtype();
     let mut specs = Vec::new();
     for layer in 0..spec.layers {
         for kind in MatrixKind::SCORED {
             let rows = spec.shape_of(kind).rows;
             let mut row_f32s = [0usize; crate::cache::MAX_MEMBERS];
+            let mut row_enc_bytes = [0usize; crate::cache::MAX_MEMBERS];
             let mut flash_row_bytes_sum = 0u64;
             for (m, member) in group_members(kind).iter().enumerate() {
-                row_f32s[m] = spec.shape_of(*member).cols;
+                let cols = spec.shape_of(*member).cols;
+                row_f32s[m] = cols;
+                row_enc_bytes[m] = dtype.encoded_row_bytes(cols);
                 flash_row_bytes_sum += store.layout.row_bytes(MatrixId::new(layer, *member)) as u64;
             }
             specs.push(crate::cache::ShardSpec {
                 rows,
                 row_f32s,
+                row_enc_bytes,
                 flash_row_bytes_sum,
             });
         }
@@ -1517,7 +1571,11 @@ mod tests {
         assert_eq!(y1, y2);
         assert!(st1.io > Duration::ZERO);
         assert!(st1.compute > Duration::ZERO);
-        assert_eq!(st1.bytes_loaded, spec.total_bytes());
+        // Dense loads every row exactly once, at the *encoded* width —
+        // equal to `spec.total_bytes()` at f32, narrower when the
+        // harness pins a quantized dtype via NC_DTYPE.
+        let layout = crate::model::FlashLayout::build_with_dtype(&spec, false, e1.dtype());
+        assert_eq!(st1.bytes_loaded, layout.total_bytes());
         assert!((st1.retained_fraction() - 1.0).abs() < 1e-9);
     }
 

@@ -163,18 +163,6 @@ impl HotNeuronCache {
         }
     }
 
-    /// Allocating form of [`HotNeuronCache::subtract_cached_into`].
-    #[deprecated(
-        note = "allocates per call; use subtract_cached_into (or the shared \
-                crate::cache::ChunkCache subsystem, which supersedes this \
-                offline-built cache)"
-    )]
-    pub fn subtract_cached(&self, id: MatrixId, chunk: Chunk) -> Vec<Chunk> {
-        let mut out = Vec::new();
-        self.subtract_cached_into(id, chunk, &mut out);
-        out
-    }
-
     pub fn row_data(&self, id: MatrixId, row: usize) -> Option<&[f32]> {
         self.data.get(&(id, row)).map(|v| v.as_slice())
     }
@@ -261,11 +249,6 @@ mod tests {
         let id = MatrixId::new(0, MatrixKind::Q);
         let mut pieces = Vec::new();
         cache.subtract_cached_into(id, Chunk::new(0, s.spec.d), &mut pieces);
-        // The deprecated allocating wrapper must agree with the _into form.
-        #[allow(deprecated)]
-        {
-            assert_eq!(cache.subtract_cached(id, Chunk::new(0, s.spec.d)), pieces);
-        }
         // No piece contains a cached row; union covers all uncached rows.
         let mut covered = vec![false; s.spec.d];
         for p in &pieces {

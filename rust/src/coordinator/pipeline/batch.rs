@@ -545,6 +545,7 @@ fn run_batch(
             metrics.add("io.overlapped", overlapped);
         }
         metrics.add_bytes("io", bytes);
+        metrics.add_bytes(core.io_dtype_bytes, bytes);
         if cache_hit_bytes > 0 {
             metrics.add_bytes("io.cache_hit_bytes", cache_hit_bytes);
         }

@@ -522,6 +522,9 @@ impl EngineCore {
                 metrics.add_bytes("io.queue_depth", stats.max_inflight);
             }
             metrics.add_bytes("io", stats.bytes_loaded);
+            // Same bytes, keyed by the storage dtype that encoded them —
+            // `/metrics` exposes per-dtype flash traffic with no lookup.
+            metrics.add_bytes(self.io_dtype_bytes, stats.bytes_loaded);
             if stats.cache_hit_bytes > 0 {
                 metrics.add_bytes("io.cache_hit_bytes", stats.cache_hit_bytes);
             }

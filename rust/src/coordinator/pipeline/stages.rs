@@ -13,7 +13,7 @@ use crate::coordinator::engine::EngineCore;
 use crate::coordinator::pipeline::StageStats;
 use crate::coordinator::{KvCache, StageTimer};
 use crate::latency::Chunk;
-use crate::model::{decode_f32_into, MatrixId, MatrixKind};
+use crate::model::{decode_row_into, MatrixId, MatrixKind};
 use crate::plan::{PlanScratch, PlannedRead, RowCursor};
 use crate::runtime::{ExecScratch, ModelMeta, StageOutputs, TensorView};
 use crate::sparsify::{SelectScratch, SelectionMask};
@@ -104,7 +104,10 @@ impl EngineCore {
         match &self.selector {
             None => out.set_full(rows),
             Some(s) => {
-                let row_bytes = self.spec.row_bytes(kind);
+                // Price chunks at the *encoded* on-flash row width: a
+                // quantized image shrinks the latency denominator of the
+                // utility exactly as it shrinks the bytes a read costs.
+                let row_bytes = self.store.layout.row_bytes(id);
                 let table = self
                     .keyed_tables
                     .get(&row_bytes)
@@ -289,6 +292,7 @@ impl EngineCore {
     ) {
         let members = group_members(kind);
         let have_fresh = !g.fresh.plan.is_empty();
+        let dtype = self.store.dtype();
         let timer = StageTimer::start();
         for (mi, member) in members.iter().enumerate() {
             let id = MatrixId::new(layer, *member);
@@ -313,11 +317,11 @@ impl EngineCore {
                 }
                 let dst = &mut w[j * cols..(j + 1) * cols];
                 if let Some(bytes) = fresh_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
-                    decode_f32_into(bytes, dst);
+                    decode_row_into(dtype, bytes, dst);
                     continue;
                 }
                 if let Some(bytes) = pre_cursor.as_mut().and_then(|cur| cur.advance_to(p)) {
-                    decode_f32_into(bytes, dst);
+                    decode_row_into(dtype, bytes, dst);
                     stats.prefetch_hits += 1;
                     continue;
                 }

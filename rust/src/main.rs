@@ -59,6 +59,10 @@ fn main() {
                  \x20                              budget in MiB (default 0 or $NC_CACHE_MB;\n\
                  \x20                              0 = off; admission follows live selection\n\
                  \x20                              frequency; outputs stay bit-identical)\n\
+                 \x20               [--dtype D]    on-flash weight storage dtype: f32 | fp16 |\n\
+                 \x20                              int8 (default f32 or $NC_DTYPE; quantized\n\
+                 \x20                              images shrink reads + reprice selection;\n\
+                 \x20                              outputs carry the format's rounding error)\n\
                  \x20               [--streams N]  concurrent decode streams served through\n\
                  \x20                              the scheduler (default 1 = single stream;\n\
                  \x20                              with --listen: stream capacity, default 64)\n\
@@ -177,6 +181,17 @@ fn cmd_serve_inner(args: &[String]) -> Result<i32, ArgError> {
     }
     if let Some(mb) = p.parsed::<usize>("--cache-mb")? {
         builder = builder.cache_mb(mb);
+    }
+    if let Some(s) = p.raw("--dtype")? {
+        match s.parse() {
+            Ok(dt) => builder = builder.dtype(dt),
+            Err(reason) => {
+                return Err(ArgError {
+                    flag: "--dtype".into(),
+                    reason,
+                })
+            }
+        }
     }
     let engine = match builder.build() {
         Ok(e) => e,

@@ -5,7 +5,7 @@
 mod spec;
 mod weights;
 
-pub use spec::{MatrixKind, MatrixShape, ModelSpec, SelectionGroup};
-pub use weights::{FlashLayout, MatrixId, WeightStore};
+pub use spec::{DType, MatrixKind, MatrixShape, ModelSpec, SelectionGroup};
+pub use weights::{encode_row, FlashLayout, MatrixId, WeightStore};
 
-pub(crate) use weights::decode_f32_into;
+pub(crate) use weights::decode_row_into;

@@ -8,6 +8,57 @@
 //!   compiled to HLO artifacts by the Python layer; f32, dims mirrored
 //!   from `python/compile/model.py`.
 
+/// On-flash storage dtype of the weight image. Selection, planning, and
+/// the latency table all price chunks at the *encoded* row width; the
+/// gather stage decodes every row back to f32 before compute, so outputs
+/// differ only by the quantization error of the storage format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum DType {
+    /// 4 bytes/element, bit-identical to the historical layout.
+    #[default]
+    F32,
+    /// IEEE-754 binary16, 2 bytes/element (round-to-nearest-even).
+    F16,
+    /// Symmetric per-row int8: a leading f32 scale (max-abs / 127)
+    /// followed by `cols` signed bytes — `4 + cols` bytes per row.
+    Int8,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "fp16",
+            DType::Int8 => "int8",
+        }
+    }
+
+    /// Encoded bytes of one `cols`-wide row on flash (the read unit the
+    /// planner, the selection table, and the cache budget all price).
+    pub fn encoded_row_bytes(&self, cols: usize) -> usize {
+        match self {
+            DType::F32 => cols * 4,
+            DType::F16 => cols * 2,
+            DType::Int8 => 4 + cols,
+        }
+    }
+}
+
+impl std::str::FromStr for DType {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" | "fp32" => Ok(DType::F32),
+            "f16" | "fp16" => Ok(DType::F16),
+            "int8" | "i8" => Ok(DType::Int8),
+            other => Err(format!(
+                "unknown dtype {other:?} (expected f32, fp16, or int8)"
+            )),
+        }
+    }
+}
+
 /// The seven per-layer projection matrices of a (grouped-query) decoder
 /// block. Sparsification selects *input rows*; K/V share the Q selection
 /// and Up shares Gate's, since they consume the same activations (paper
@@ -260,6 +311,17 @@ impl ModelSpec {
         self.shape_of(kind).cols * self.dtype_bytes
     }
 
+    /// The storage dtype this spec's `dtype_bytes` historically implied:
+    /// fp16 paper models, f32 runnable models. Layouts built with it are
+    /// byte-identical to the pre-dtype-knob layouts.
+    pub fn default_dtype(&self) -> DType {
+        if self.dtype_bytes == 2 {
+            DType::F16
+        } else {
+            DType::F32
+        }
+    }
+
     /// Total backbone weight bytes.
     pub fn total_bytes(&self) -> u64 {
         let per_layer: usize = self
@@ -352,5 +414,20 @@ mod tests {
         for k in MatrixKind::ALL {
             assert!(MatrixKind::SCORED.contains(&k.mask_source()));
         }
+    }
+
+    #[test]
+    fn dtype_parse_and_row_widths() {
+        assert_eq!("f32".parse::<DType>().unwrap(), DType::F32);
+        assert_eq!("fp16".parse::<DType>().unwrap(), DType::F16);
+        assert_eq!("f16".parse::<DType>().unwrap(), DType::F16);
+        assert_eq!("int8".parse::<DType>().unwrap(), DType::Int8);
+        assert!("bf16".parse::<DType>().is_err());
+        assert_eq!(DType::F32.encoded_row_bytes(192), 768);
+        assert_eq!(DType::F16.encoded_row_bytes(192), 384);
+        assert_eq!(DType::Int8.encoded_row_bytes(192), 196);
+        // Spec-derived defaults reproduce the historical layouts.
+        assert_eq!(ModelSpec::tiny().default_dtype(), DType::F32);
+        assert_eq!(ModelSpec::llava_7b().default_dtype(), DType::F16);
     }
 }

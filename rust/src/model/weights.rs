@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use std::time::Duration;
 
 use crate::latency::Chunk;
-use crate::model::{MatrixKind, ModelSpec};
+use crate::model::{DType, MatrixKind, ModelSpec};
 use crate::plan::{CoalescePolicy, IoPlanner, PlannedRead, RowCursor};
 use crate::reorder::Permutation;
 use crate::rng::Rng;
@@ -41,17 +41,25 @@ struct Region {
 pub struct FlashLayout {
     regions: HashMap<MatrixId, Region>,
     total_bytes: u64,
+    dtype: DType,
     /// Rows aligned up to 4 KiB (for O_DIRECT real-device experiments).
     pub align_rows: bool,
 }
 
 impl FlashLayout {
+    /// Layout in the spec's historical dtype (fp16 paper models, f32
+    /// runnable) — byte-identical to the pre-dtype-knob layouts.
     pub fn build(spec: &ModelSpec, align_rows: bool) -> Self {
+        Self::build_with_dtype(spec, align_rows, spec.default_dtype())
+    }
+
+    /// Layout with every row stored in `dtype`'s encoded width.
+    pub fn build_with_dtype(spec: &ModelSpec, align_rows: bool, dtype: DType) -> Self {
         let mut regions = HashMap::new();
         let mut at = 0u64;
         for layer in 0..spec.layers {
             for m in spec.matrices() {
-                let mut row_bytes = m.cols * spec.dtype_bytes;
+                let mut row_bytes = dtype.encoded_row_bytes(m.cols);
                 if align_rows {
                     row_bytes = row_bytes.div_ceil(4096) * 4096;
                 }
@@ -69,12 +77,18 @@ impl FlashLayout {
         Self {
             regions,
             total_bytes: at,
+            dtype,
             align_rows,
         }
     }
 
     pub fn total_bytes(&self) -> u64 {
         self.total_bytes
+    }
+
+    /// Storage dtype every region's rows are encoded in.
+    pub fn dtype(&self) -> DType {
+        self.dtype
     }
 
     pub fn row_bytes(&self, id: MatrixId) -> usize {
@@ -135,13 +149,25 @@ pub struct WeightStore {
 
 impl WeightStore {
     pub fn new(spec: ModelSpec, align_rows: bool, seed: u64) -> Self {
-        let layout = FlashLayout::build(&spec, align_rows);
+        let dtype = spec.default_dtype();
+        Self::with_dtype(spec, align_rows, seed, dtype)
+    }
+
+    /// Store whose flash image is encoded in `dtype` (per-row scales
+    /// inline for int8; see [`encode_row`]).
+    pub fn with_dtype(spec: ModelSpec, align_rows: bool, seed: u64, dtype: DType) -> Self {
+        let layout = FlashLayout::build_with_dtype(&spec, align_rows, dtype);
         Self {
             spec,
             layout,
             perms: HashMap::new(),
             seed,
         }
+    }
+
+    /// Storage dtype of the flash image this store builds and reads.
+    pub fn dtype(&self) -> DType {
+        self.layout.dtype()
     }
 
     /// Install an offline reorder permutation for a matrix. Must be set
@@ -171,16 +197,18 @@ impl WeightStore {
     }
 
     /// Build the full flash image (runnable models): permuted rows written
-    /// at their physical offsets, f32 little-endian.
+    /// at their physical offsets, encoded per the store's dtype (f32
+    /// little-endian by default — byte-identical to the historical image).
     pub fn build_image(&self) -> Vec<u8> {
         assert!(self.spec.runnable, "paper models are I/O-only");
+        let dtype = self.dtype();
         let mut image = vec![0u8; self.layout.total_bytes() as usize];
         for layer in 0..self.spec.layers {
             for m in self.spec.matrices() {
                 let id = MatrixId::new(layer, m.kind);
                 let w = self.logical_matrix(id);
                 let cols = m.cols;
-                let row_bytes = self.layout.row_bytes(id);
+                let enc = dtype.encoded_row_bytes(cols);
                 for phys_row in 0..m.rows {
                     let logical = match self.perms.get(&id) {
                         Some(p) => p.old_of(phys_row),
@@ -188,11 +216,7 @@ impl WeightStore {
                     };
                     let src = &w[logical * cols..(logical + 1) * cols];
                     let dst_off = self.layout.row_offset(id, phys_row) as usize;
-                    let dst = &mut image[dst_off..dst_off + cols * 4];
-                    for (j, &v) in src.iter().enumerate() {
-                        dst[j * 4..j * 4 + 4].copy_from_slice(&v.to_le_bytes());
-                    }
-                    let _ = row_bytes;
+                    encode_row(dtype, src, &mut image[dst_off..dst_off + enc]);
                 }
             }
         }
@@ -232,7 +256,9 @@ impl WeightStore {
                         id.layer
                     )
                 })?;
-                decode_f32_row(row, cols, &mut out);
+                let start = out.len();
+                out.resize(start + cols, 0.0);
+                decode_row_into(self.dtype(), row, &mut out[start..]);
             }
         }
         Ok((out, t))
@@ -253,17 +279,119 @@ impl WeightStore {
 /// Decode little-endian f32 values from `bytes` into `dst` (one value per
 /// `dst` slot; `bytes` may be longer, e.g. page-padded rows).
 pub(crate) fn decode_f32_into(bytes: &[u8], dst: &mut [f32]) {
-    for (j, o) in dst.iter_mut().enumerate() {
-        *o = f32::from_le_bytes(bytes[j * 4..j * 4 + 4].try_into().unwrap());
+    for (b, o) in bytes.chunks_exact(4).zip(dst.iter_mut()) {
+        *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
     }
 }
 
-/// Decode `cols` little-endian f32 values from the head of `row`,
-/// appending to `out`.
-pub(crate) fn decode_f32_row(row: &[u8], cols: usize, out: &mut Vec<f32>) {
-    let start = out.len();
-    out.resize(start + cols, 0.0);
-    decode_f32_into(row, &mut out[start..]);
+/// Encode one logical f32 row into its on-flash representation. `dst`
+/// must be exactly `dtype.encoded_row_bytes(src.len())` long. Int8 rows
+/// carry their scale inline: `[f32 LE max_abs/127][cols × i8]`.
+pub fn encode_row(dtype: DType, src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), dtype.encoded_row_bytes(src.len()));
+    match dtype {
+        DType::F32 => {
+            for (&v, b) in src.iter().zip(dst.chunks_exact_mut(4)) {
+                b.copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        DType::F16 => {
+            for (&v, b) in src.iter().zip(dst.chunks_exact_mut(2)) {
+                b.copy_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+            }
+        }
+        DType::Int8 => {
+            let max = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if max > 0.0 { max / 127.0 } else { 1.0 };
+            dst[..4].copy_from_slice(&scale.to_le_bytes());
+            let inv = 1.0 / scale;
+            for (&v, b) in src.iter().zip(dst[4..].iter_mut()) {
+                *b = ((v * inv).round().clamp(-127.0, 127.0) as i8) as u8;
+            }
+        }
+    }
+}
+
+/// Decode one on-flash row back to f32 — the single dequantize-on-gather
+/// entry point (fresh reads, async tickets, and cache staging all land
+/// here). `bytes` may be longer than the encoded row (page-padded rows);
+/// `dst.len()` values are produced.
+pub(crate) fn decode_row_into(dtype: DType, bytes: &[u8], dst: &mut [f32]) {
+    match dtype {
+        DType::F32 => decode_f32_into(bytes, dst),
+        DType::F16 => {
+            for (b, o) in bytes.chunks_exact(2).zip(dst.iter_mut()) {
+                *o = f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]]));
+            }
+        }
+        DType::Int8 => {
+            let scale = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+            for (&b, o) in bytes[4..].iter().zip(dst.iter_mut()) {
+                *o = (b as i8) as f32 * scale;
+            }
+        }
+    }
+}
+
+/// f32 → IEEE-754 binary16 bits, round-to-nearest-even (no `half` crate;
+/// the conversion is pinned by round-trip tests below).
+pub(crate) fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN (any NaN keeps a nonzero mantissa).
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let exp = exp32 - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflows past subnormals → ±0
+        }
+        // Subnormal: shift the implicit-1 mantissa into place.
+        let man = man | 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let man16 = (man >> shift) as u16;
+        let rest = man & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let round_up = rest > half || (rest == half && man16 & 1 == 1);
+        return sign | (man16 + round_up as u16);
+    }
+    let man16 = (man >> 13) as u16;
+    let rest = man & 0x1fff;
+    let round_up = rest > 0x1000 || (rest == 0x1000 && man16 & 1 == 1);
+    // A mantissa carry rolls into the exponent (and into inf) correctly.
+    (sign | ((exp as u16) << 10) | man16) + round_up as u16
+}
+
+/// IEEE-754 binary16 bits → f32 (exact; every f16 is representable).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: renormalize into an f32 normal.
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
 }
 
 #[cfg(test)]
@@ -375,6 +503,126 @@ mod tests {
         let c = s.logical_matrix(MatrixId::new(0, MatrixKind::K));
         assert_ne!(a, b);
         assert_ne!(a[..16], c[..16]);
+    }
+
+    #[test]
+    fn quantized_layouts_shrink_rows() {
+        let spec = ModelSpec::tiny();
+        let f32l = FlashLayout::build_with_dtype(&spec, false, DType::F32);
+        let f16l = FlashLayout::build_with_dtype(&spec, false, DType::F16);
+        let i8l = FlashLayout::build_with_dtype(&spec, false, DType::Int8);
+        for layer in 0..spec.layers {
+            for m in spec.matrices() {
+                let id = MatrixId::new(layer, m.kind);
+                assert_eq!(f32l.row_bytes(id), m.cols * 4);
+                assert_eq!(f16l.row_bytes(id), m.cols * 2);
+                assert_eq!(i8l.row_bytes(id), 4 + m.cols);
+            }
+        }
+        assert!(i8l.total_bytes() < f16l.total_bytes());
+        assert!(f16l.total_bytes() < f32l.total_bytes());
+        // The default layout is the spec-derived one, byte-identical.
+        assert_eq!(
+            FlashLayout::build(&spec, false).total_bytes(),
+            f32l.total_bytes()
+        );
+    }
+
+    #[test]
+    fn f16_round_trip_and_edge_cases() {
+        // Every finite f16 survives f16 → f32 → f16 exactly.
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN handled below
+            }
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "bits {h:#06x}");
+        }
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00); // overflow → inf
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000); // underflow → 0
+        let nan = f32_to_f16_bits(f32::NAN);
+        assert_eq!(nan & 0x7c00, 0x7c00);
+        assert_ne!(nan & 0x03ff, 0);
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+        // Round-to-nearest-even at the halfway point: 1 + 2^-11 is
+        // exactly between 1.0 and the next f16; even mantissa (1.0) wins.
+        assert_eq!(f32_to_f16_bits(1.0 + 2f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+    }
+
+    #[test]
+    fn encode_decode_round_trip_error_bounds() {
+        let store = WeightStore::new(ModelSpec::tiny(), false, 9);
+        let id = MatrixId::new(0, MatrixKind::Gate);
+        let w = store.logical_matrix(id);
+        let cols = store.spec.shape_of(MatrixKind::Gate).cols;
+        let row = &w[..cols];
+        let mut dec = vec![0f32; cols];
+
+        // f32: bit-exact.
+        let mut buf = vec![0u8; DType::F32.encoded_row_bytes(cols)];
+        encode_row(DType::F32, row, &mut buf);
+        decode_row_into(DType::F32, &buf, &mut dec);
+        assert_eq!(row, &dec[..]);
+
+        // fp16: relative error ≤ 2^-11 for normal-range weights.
+        let mut buf = vec![0u8; DType::F16.encoded_row_bytes(cols)];
+        encode_row(DType::F16, row, &mut buf);
+        decode_row_into(DType::F16, &buf, &mut dec);
+        for (&a, &b) in row.iter().zip(&dec) {
+            // Half-ulp relative for normals, absolute 2^-25 once the
+            // value lands in f16's subnormal range.
+            let bound = (a.abs() * 2f32.powi(-11)).max(2f32.powi(-25));
+            assert!((a - b).abs() <= bound, "{a} vs {b}");
+        }
+
+        // int8: absolute error ≤ scale/2 per element, scale stored inline.
+        let mut buf = vec![0u8; DType::Int8.encoded_row_bytes(cols)];
+        encode_row(DType::Int8, row, &mut buf);
+        let scale = f32::from_le_bytes(buf[..4].try_into().unwrap());
+        let max = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        assert!((scale - max / 127.0).abs() < 1e-12);
+        decode_row_into(DType::Int8, &buf, &mut dec);
+        for (&a, &b) in row.iter().zip(&dec) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-12, "{a} vs {b}");
+        }
+
+        // An all-zero row encodes without dividing by zero.
+        let zeros = vec![0f32; cols];
+        encode_row(DType::Int8, &zeros, &mut buf);
+        decode_row_into(DType::Int8, &buf, &mut dec);
+        assert!(dec.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantized_image_round_trip_through_device() {
+        for dtype in [DType::F16, DType::Int8] {
+            let store = WeightStore::with_dtype(ModelSpec::tiny(), false, 42, dtype);
+            let image = store.build_image();
+            assert_eq!(image.len() as u64, store.layout.total_bytes());
+            let dev = SimulatedSsd::with_image(DeviceProfile::nano(), image, 1);
+            let id = MatrixId::new(1, MatrixKind::Gate);
+            let logical = store.logical_matrix(id);
+            let cols = store.spec.shape_of(MatrixKind::Gate).cols;
+            let (rows, _) = store.read_rows(&dev, id, &[Chunk::new(5, 3)]).unwrap();
+            assert_eq!(rows.len(), 3 * cols);
+            // Decoded rows match the logical weights to the dtype's bound.
+            for (i, r) in (5..8).enumerate() {
+                let src = &logical[r * cols..(r + 1) * cols];
+                let max = src.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                let bound = match dtype {
+                    DType::Int8 => max / 127.0 * 0.5 + 1e-12,
+                    _ => max * 2f32.powi(-11) + 1e-12,
+                };
+                for (&a, &b) in src.iter().zip(&rows[i * cols..(i + 1) * cols]) {
+                    assert!((a - b).abs() <= bound, "{dtype:?}: {a} vs {b}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -558,11 +558,7 @@ unsafe fn matmul_tile(
             if av == 0.0 {
                 continue; // zero-padded budget rows contribute nothing
             }
-            let av = av as f64;
-            let arow = &mut acc[ti * tw..(ti + 1) * tw];
-            for (o, &bv) in arow.iter_mut().zip(brow) {
-                *o += av * bv as f64;
-            }
+            axpy_row(&mut acc[ti * tw..(ti + 1) * tw], brow, av as f64);
         }
     }
     for ti in 0..t {
@@ -572,8 +568,72 @@ unsafe fn matmul_tile(
     }
 }
 
+/// `acc[j] += s * b[j]` across one row — the innermost axpy of both the
+/// blocked matmul and the attention value accumulation. Every output
+/// element is independent and computed by exactly one mul + one add, so
+/// the lane-blocked form below performs the identical operation in the
+/// identical order per element: results are **bit-identical** with or
+/// without the `simd` feature (the fallback contract DESIGN.md §12
+/// documents). Reductions *across* elements (e.g. the q·k dot) are never
+/// vectorized — reassociating a sum would change its rounding.
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn axpy_row(acc: &mut [f64], b: &[f32], s: f64) {
+    const LANES: usize = 8;
+    debug_assert_eq!(acc.len(), b.len());
+    let blocks = acc.len() / LANES * LANES;
+    let (ah, at) = acc.split_at_mut(blocks);
+    let (bh, bt) = b.split_at(blocks);
+    for (ac, bc) in ah.chunks_exact_mut(LANES).zip(bh.chunks_exact(LANES)) {
+        // Fixed-width lane block with no cross-lane dependency: LLVM
+        // lowers this to packed f64 mul/add (f32x8 widened) on AVX/NEON.
+        for l in 0..LANES {
+            ac[l] += s * bc[l] as f64;
+        }
+    }
+    for (a, &v) in at.iter_mut().zip(bt) {
+        *a += s * v as f64;
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+fn axpy_row(acc: &mut [f64], b: &[f32], s: f64) {
+    for (a, &v) in acc.iter_mut().zip(b) {
+        *a += s * v as f64;
+    }
+}
+
 fn silu(x: f64) -> f64 {
     x / (1.0 + (-x).exp())
+}
+
+/// Elementwise `gate[i] = silu(gate[i]) * up[i]` over one slice; the
+/// lane-blocked variant keeps per-element math identical (see
+/// [`axpy_row`] for the bit-identity argument).
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn swiglu_slice(gate: &mut [f32], up: &[f32]) {
+    const LANES: usize = 8;
+    let blocks = gate.len() / LANES * LANES;
+    let (gh, gt) = gate.split_at_mut(blocks);
+    let (uh, ut) = up.split_at(blocks);
+    for (gc, uc) in gh.chunks_exact_mut(LANES).zip(uh.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            gc[l] = (silu(gc[l] as f64) * uc[l] as f64) as f32;
+        }
+    }
+    for (g, &u) in gt.iter_mut().zip(ut) {
+        *g = (silu(*g as f64) * u as f64) as f32;
+    }
+}
+
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+fn swiglu_slice(gate: &mut [f32], up: &[f32]) {
+    for (g, &u) in gate.iter_mut().zip(up) {
+        *g = (silu(*g as f64) * u as f64) as f32;
+    }
 }
 
 /// `gate[i] = silu(gate[i]) * up[i]` in f64, elementwise — optionally
@@ -583,19 +643,13 @@ fn swiglu_into(gate: &mut [f32], up: &[f32], threads: usize) {
     assert_eq!(gate.len(), up.len(), "swiglu operand shapes");
     let n = gate.len();
     if threads <= 1 || n < 4096 {
-        for (g, &u) in gate.iter_mut().zip(up) {
-            *g = (silu(*g as f64) * u as f64) as f32;
-        }
+        swiglu_slice(gate, up);
         return;
     }
     let chunk = n.div_ceil(threads);
     std::thread::scope(|s| {
         for (gs, us) in gate.chunks_mut(chunk).zip(up.chunks(chunk)) {
-            s.spawn(move || {
-                for (g, &u) in gs.iter_mut().zip(us) {
-                    *g = (silu(*g as f64) * u as f64) as f32;
-                }
-            });
+            s.spawn(move || swiglu_slice(gs, us));
         }
     });
 }
@@ -697,10 +751,7 @@ unsafe fn attn_head(
         accs.fill(0.0);
         for (j, &p) in scores.iter().enumerate() {
             let vrow = &vals[j * d + off..j * d + off + hd];
-            let p = p / denom;
-            for (a, &v) in accs.iter_mut().zip(vrow) {
-                *a += p * v as f64;
-            }
+            axpy_row(accs, vrow, p / denom);
         }
         for (e, &v) in accs.iter().enumerate() {
             *out.add(ti * d + off + e) = v as f32;
@@ -850,6 +901,30 @@ mod tests {
     fn rt() -> XlaRuntime {
         // Any directory without a manifest.tsv falls back to synthesis.
         XlaRuntime::open(&PathBuf::from("artifacts")).unwrap()
+    }
+
+    #[test]
+    fn axpy_and_swiglu_match_scalar_reference() {
+        // Bit-identity of the (possibly lane-blocked) kernels against the
+        // plain scalar loop — the `simd` feature must be invisible in
+        // outputs. Odd length exercises the remainder tail.
+        let n = 53;
+        let b: Vec<f32> = (0..n).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.173).collect();
+        let mut acc = vec![0.25f64; n];
+        let mut reference = acc.clone();
+        axpy_row(&mut acc, &b, -1.375);
+        for (r, &v) in reference.iter_mut().zip(&b) {
+            *r += -1.375 * v as f64;
+        }
+        assert_eq!(acc, reference);
+
+        let mut gate: Vec<f32> = b.iter().map(|&v| v * 0.5).collect();
+        let mut gate_ref = gate.clone();
+        swiglu_slice(&mut gate, &b);
+        for (g, &u) in gate_ref.iter_mut().zip(&b) {
+            *g = (silu(*g as f64) * u as f64) as f32;
+        }
+        assert_eq!(gate, gate_ref);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::serving::json::Json;
 
 /// Identity fields forming the match key — keep in sync with
 /// `ID_FIELDS` in `scripts/bench_gate.rs`.
-pub const ID_FIELDS: [&str; 12] = [
+pub const ID_FIELDS: [&str; 13] = [
     "mode",
     "policy",
     "prefetch",
@@ -28,6 +28,7 @@ pub const ID_FIELDS: [&str; 12] = [
     "rps",
     "mix",
     "slo",
+    "dtype",
 ];
 
 /// Metrics compared, with direction: `true` = higher is better.
@@ -309,6 +310,8 @@ mod tests {
              \"mix\":\"1:8\",\"op\":\"decode\",\"tokens_per_s\":1}",
         )
         .unwrap();
-        assert_eq!(entry_key(&e), "served|topk|||4||decode|||20|1:8|");
+        // No `dtype` field → empty trailing component, so serving
+        // entries produced before the dtype knob still match.
+        assert_eq!(entry_key(&e), "served|topk|||4||decode|||20|1:8||");
     }
 }

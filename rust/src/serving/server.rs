@@ -717,6 +717,13 @@ fn metrics_text(inner: &Arc<ServerInner>) -> String {
     for (stage, bytes) in m.bytes_iter() {
         let _ = writeln!(out, "nc_stage_bytes{{stage=\"{stage}\"}} {bytes}");
     }
+    // Active storage dtype as an info-style gauge; the matching traffic
+    // counter (`io.bytes_<dtype>`) is in the generic byte loop above.
+    let _ = writeln!(
+        out,
+        "nc_storage_dtype{{dtype=\"{}\"}} 1",
+        inner.scheduler.engine().dtype().name()
+    );
     let _ = writeln!(
         out,
         "nc_server_active_connections {}",
@@ -766,6 +773,8 @@ fn config_json(inner: &Arc<ServerInner>) -> String {
     json::push_str_escaped(&mut b, &inner.spec.name);
     b.push_str(",\"policy\":");
     json::push_str_escaped(&mut b, engine.policy().name());
+    b.push_str(",\"dtype\":");
+    json::push_str_escaped(&mut b, engine.dtype().name());
     let _ = write!(
         b,
         ",\"d\":{},\"tokens_per_frame\":{},\"layers\":{},\"prefetch\":{},\"threads\":{},\

@@ -1881,6 +1881,30 @@ mod tests {
     }
 
     #[test]
+    fn quantized_images_shard_losslessly() {
+        // Striping is dtype-agnostic byte plumbing: an fp16/int8 encoded
+        // image (scales inline in each row) shards and reassembles with
+        // every flat byte at its mapped member-local address.
+        for dtype in [crate::model::DType::F16, crate::model::DType::Int8] {
+            let s = WeightStore::with_dtype(ModelSpec::tiny(), false, 42, dtype);
+            let image = s.build_image();
+            let stripe = StripeLayout::build(&s.layout, 3, StripePolicy::RoundRobin, None);
+            let shards = stripe.shard_image(&image);
+            let whole = Extent::new(0, image.len());
+            stripe.for_pieces_all(whole, |flat, options| {
+                let want = &image[flat as usize..flat as usize + options[0].1.len];
+                for &(m, local) in options {
+                    assert_eq!(
+                        &shards[m][local.offset as usize..local.end() as usize],
+                        want,
+                        "{dtype:?} shard bytes diverged from the flat image"
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
     fn replication_one_covered_only_without_dead_members() {
         let s = store();
         let stripe = StripeLayout::build(&s.layout, 4, StripePolicy::RoundRobin, None);

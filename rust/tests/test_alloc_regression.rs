@@ -16,6 +16,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use neuron_chunking::coordinator::{DecodeRequest, Engine, Policy, StageStats};
+use neuron_chunking::model::DType;
 use neuron_chunking::sparsify::ChunkSelectConfig;
 use neuron_chunking::workload::FrameTrace;
 
@@ -66,12 +67,14 @@ fn artifact_dir() -> PathBuf {
 /// pooling must stay allocation-free too); `async_io` runs the async
 /// pipeline (virtual-clock members submit inline with analytic overlap
 /// credit, which must also stay allocation-free).
+#[allow(clippy::too_many_arguments)]
 fn decode_allocs(
     policy: Policy,
     sparsity: f64,
     prefetch: bool,
     devices: usize,
     async_io: bool,
+    dtype: DType,
     steps: usize,
 ) -> u64 {
     let engine = Engine::builder("tiny")
@@ -82,6 +85,7 @@ fn decode_allocs(
         .devices(devices)
         .async_io(async_io)
         .io_queue_depth(2)
+        .dtype(dtype)
         .artifacts(&artifact_dir())
         .build()
         .unwrap();
@@ -116,6 +120,7 @@ fn cached_decode_allocs(
     sparsity: f64,
     prefetch: bool,
     devices: usize,
+    dtype: DType,
     steps: usize,
 ) -> u64 {
     let engine = Engine::builder("tiny")
@@ -125,6 +130,7 @@ fn cached_decode_allocs(
         .exec_threads(1)
         .devices(devices)
         .cache_mb(64)
+        .dtype(dtype)
         .artifacts(&artifact_dir())
         .build()
         .unwrap();
@@ -276,11 +282,33 @@ fn steady_state_decode_is_allocation_free() {
         ),
     ];
     for (label, policy, sparsity, prefetch, devices, async_io) in configs {
-        let allocs = decode_allocs(policy, sparsity, prefetch, devices, async_io, 8);
+        let allocs = decode_allocs(policy, sparsity, prefetch, devices, async_io, DType::F32, 8);
         assert_eq!(
             allocs, 0,
             "[{label}] decode_step allocated {allocs} times across 8 steady-state steps"
         );
+    }
+    // Quantized-storage rows: dequantize-on-gather decodes encoded rows
+    // into the existing f32 arenas, so int8/fp16 serving must be exactly
+    // as allocation-free as f32.
+    for dtype in [DType::F16, DType::Int8] {
+        for (label, policy, sparsity) in [
+            ("dense", Policy::Dense, 0.0),
+            ("topk", Policy::TopK, 0.5),
+            (
+                "chunking",
+                Policy::Chunking {
+                    config: ChunkSelectConfig::new(2.0, 2.0, 348.0),
+                },
+                0.5,
+            ),
+        ] {
+            let allocs = decode_allocs(policy, sparsity, true, 1, false, dtype, 8);
+            assert_eq!(
+                allocs, 0,
+                "[{label} {dtype:?}] decode_step allocated {allocs} times across 8 steps"
+            );
+        }
     }
     // Batched decode rows: the fused cross-stream path (plan fusion,
     // shared submission + scatter, cohort kernels) must also be
@@ -321,10 +349,19 @@ fn steady_state_decode_is_allocation_free() {
         ),
     ];
     for (label, policy, sparsity, prefetch, devices) in cached {
-        let allocs = cached_decode_allocs(policy, sparsity, prefetch, devices, 8);
+        let allocs = cached_decode_allocs(policy, sparsity, prefetch, devices, DType::F32, 8);
         assert_eq!(
             allocs, 0,
             "[{label}] cached decode_step allocated {allocs} times across 8 steady-state steps"
+        );
+    }
+    // Cached + quantized: staging decodes the cache's encoded bytes into
+    // the arena per hit — still zero steady-state allocations.
+    for dtype in [DType::F16, DType::Int8] {
+        let allocs = cached_decode_allocs(Policy::TopK, 0.5, true, 1, dtype, 8);
+        assert_eq!(
+            allocs, 0,
+            "[topk cached {dtype:?}] cached decode_step allocated {allocs} times across 8 steps"
         );
     }
 }

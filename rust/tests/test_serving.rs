@@ -199,6 +199,14 @@ fn health_metrics_and_config_respond() {
     assert!(cfg.get("d").and_then(Json::as_usize).is_some());
     // extra_config pairs pass through verbatim.
     assert_eq!(cfg.get("test").and_then(Json::as_bool), Some(true));
+    // The active storage dtype is reported ("f32" unless the harness
+    // pins NC_DTYPE) and must agree with the /metrics info gauge below.
+    let dtype = cfg
+        .get("dtype")
+        .and_then(Json::as_str)
+        .expect("config reports dtype")
+        .to_string();
+    assert!(["f32", "fp16", "int8"].contains(&dtype.as_str()), "{dtype}");
 
     // Drive one request so the metrics fold is non-trivial.
     let stream = client.open_stream().expect("open");
@@ -210,6 +218,17 @@ fn health_metrics_and_config_respond() {
     let text = String::from_utf8(body).unwrap();
     assert!(text.contains("nc_stage_seconds{stage=\"io\"}"), "{text}");
     assert!(text.contains("nc_server_streams_open 1"), "{text}");
+    assert!(
+        text.contains(&format!("nc_storage_dtype{{dtype=\"{dtype}\"}} 1")),
+        "{text}"
+    );
+    // The per-dtype traffic counter flows through the generic byte loop.
+    let key = match dtype.as_str() {
+        "fp16" => "nc_stage_bytes{stage=\"io.bytes_fp16\"}",
+        "int8" => "nc_stage_bytes{stage=\"io.bytes_int8\"}",
+        _ => "nc_stage_bytes{stage=\"io.bytes_f32\"}",
+    };
+    assert!(text.contains(key), "{text}");
     server.shutdown();
 }
 

@@ -83,7 +83,7 @@ fn parse_entries(json: &str) -> Vec<Entry> {
     // Keep in sync with `ID_FIELDS` in
     // `rust/src/serving/loadgen/compare.rs` (redline's compare applies
     // the same matching so local verdicts mirror the CI gate).
-    const ID_FIELDS: [&str; 12] = [
+    const ID_FIELDS: [&str; 13] = [
         "mode",
         "policy",
         "prefetch",
@@ -96,6 +96,7 @@ fn parse_entries(json: &str) -> Vec<Entry> {
         "rps",
         "mix",
         "slo",
+        "dtype",
     ];
     let mut entries = Vec::new();
     let bytes = json.as_bytes();
